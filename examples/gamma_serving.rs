@@ -1,0 +1,94 @@
+//! Serving-mode demo: the coordinator's TCP front-end under concurrent
+//! client load.
+//!
+//! Starts the JSON-lines server, then drives it with several client
+//! threads submitting Γ̈ GeMM evaluation requests (the external
+//! NAS/DSE-tool integration path), and reports request latency
+//! percentiles and aggregate throughput.
+//!
+//! Run with: `cargo run --release --example gamma_serving`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use acadl::coordinator::server::serve;
+use acadl::coordinator::{JobResult, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let workers = 4;
+    std::thread::spawn(move || {
+        let _ = serve(listener, workers);
+    });
+    println!("coordinator serving on {addr} ({workers} sim slots)\n");
+
+    let clients = 4;
+    let requests_per_client = 6;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || -> Vec<(u64, f64)> {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut writer = stream.try_clone().expect("clone");
+            let mut reader = BufReader::new(stream);
+            let mut latencies = Vec::new();
+            for i in 0..requests_per_client {
+                let id = (c * requests_per_client + i) as u64;
+                let spec = JobSpec {
+                    id,
+                    target: TargetSpec::Gamma {
+                        units: 1 + (i % 4),
+                    },
+                    workload: Workload::Gemm {
+                        m: 16,
+                        k: 16,
+                        n: 16,
+                        tile: None,
+                        order: None,
+                    },
+                    mode: SimModeSpec::Timed,
+                    max_cycles: 1_000_000_000,
+                };
+                let t = Instant::now();
+                writer
+                    .write_all((spec.to_json().to_string() + "\n").as_bytes())
+                    .expect("send");
+                let mut line = String::new();
+                reader.read_line(&mut line).expect("recv");
+                let result =
+                    JobResult::from_json(&Json::parse(line.trim()).expect("json")).expect("result");
+                assert_eq!(result.id, id);
+                assert_eq!(result.error, None, "{result:?}");
+                assert_eq!(result.numerics_ok, Some(true));
+                latencies.push((result.cycles, t.elapsed().as_secs_f64() * 1000.0));
+            }
+            latencies
+        }));
+    }
+
+    let mut all: Vec<(u64, f64)> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client"));
+    }
+    let wall = t0.elapsed();
+
+    let mut lat: Vec<f64> = all.iter().map(|(_, l)| *l).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
+    let total = all.len();
+    println!("served {total} requests from {clients} concurrent clients in {wall:.2?}");
+    println!("  throughput   {:.1} req/s", total as f64 / wall.as_secs_f64());
+    println!("  latency p50  {:.1} ms", pct(0.50));
+    println!("  latency p90  {:.1} ms", pct(0.90));
+    println!("  latency max  {:.1} ms", lat.last().unwrap());
+    println!(
+        "  simulated cycles range: {}..{}",
+        all.iter().map(|(c, _)| c).min().unwrap(),
+        all.iter().map(|(c, _)| c).max().unwrap()
+    );
+    println!("\nall numerics checks passed ✓");
+    Ok(())
+}

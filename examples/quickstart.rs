@@ -1,0 +1,87 @@
+//! Quickstart: the paper's core flow in one page.
+//!
+//! 1. Build the One MAC Accelerator from §4.1 (the `@generate` +
+//!    `create_ag()` of Listing 1).
+//! 2. Lower a tiled GeMM onto it through the UMA registry (§5).
+//! 3. Validate the mapping with the functional ISS, then run the timing
+//!    simulation (§6) and read off the performance characteristics.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use acadl::arch::oma::OmaConfig;
+use acadl::mapping::gemm::{gemm_ref, GemmLayout, GemmParams, LoopOrder};
+use acadl::mapping::uma::{lower, Machine, Operator};
+use acadl::sim::engine::Engine;
+use acadl::sim::functional::FunctionalSim;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Model the accelerator (Fig. 2/3's block diagram → AG).
+    let machine = Machine::Oma(OmaConfig::default().build()?);
+    println!("OMA architecture graph: {}\n", machine.ag().summary());
+
+    // 2. Map a tiled GeMM (Fig. 8): C (8×8) = A (8×8) · B (8×8), 4×4
+    //    tiles, k-innermost order (register accumulation, Listing 5 style).
+    let p = GemmParams::new(8, 8, 8)
+        .with_tile(4)
+        .with_order(LoopOrder::Ijk);
+    let lowered = lower(&machine, &Operator::Gemm(p))?;
+    println!(
+        "lowered gemm_8x8x8 (tile=4, ijk): {} ACADL instructions",
+        lowered.program.len()
+    );
+    println!("first instructions:");
+    for line in lowered
+        .program
+        .disassemble(machine.ag())
+        .lines()
+        .take(6)
+    {
+        println!("  {line}");
+    }
+
+    // Deterministic operands.
+    let a: Vec<f32> = (0..64).map(|i| ((i % 7) as f32) - 3.0).collect();
+    let b: Vec<f32> = (0..64).map(|i| ((i % 5) as f32) - 2.0).collect();
+
+    // 3a. Functional simulation validates the mapping (§5).
+    let mut sim = FunctionalSim::new(machine.ag());
+    lowered.layout.load_inputs(&p, &mut sim.mem, &a, &b);
+    let fstats = sim.run(&lowered.program, 10_000_000)?;
+    let got = lowered.layout.read_c(&p, &sim.mem);
+    let want = gemm_ref(&p, &a, &b);
+    assert_eq!(got, want, "functional mapping must match the oracle");
+    println!(
+        "\nfunctional simulation: {} instructions, result correct ✓",
+        fstats.instructions
+    );
+
+    // 3b. Timing simulation infers performance characteristics (§6).
+    let mut engine = Engine::new(machine.ag(), &lowered.program)?;
+    lowered.layout.load_inputs(&p, &mut engine.mem, &a, &b);
+    let stats = engine.run(100_000_000)?;
+    assert_eq!(
+        lowered.layout.read_c(&p, &engine.mem),
+        want,
+        "timed simulation commits identical architectural state"
+    );
+    println!("timing simulation:");
+    println!("  cycles            {}", stats.cycles);
+    println!("  instructions      {}", stats.retired);
+    println!("  IPC               {:.3}", stats.ipc());
+    println!("  fetch stalls      {}", stats.fetch_stalls);
+    println!("  cycles/MAC        {:.1}", stats.cycles as f64 / p.macs() as f64);
+    for s in &stats.storages {
+        if let (Some(h), Some(m)) = (s.cache_hits, s.cache_misses) {
+            println!(
+                "  {:<12} {h} hits / {m} misses ({:.1}% hit rate)",
+                s.name,
+                100.0 * h as f64 / (h + m).max(1) as f64
+            );
+        }
+    }
+
+    // The same layout/result helpers let you sweep tile sizes and loop
+    // orders — see `cargo bench --bench tiling` (experiment E2).
+    let _ = GemmLayout::at(machine.data_base(), &p);
+    Ok(())
+}

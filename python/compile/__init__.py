@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — ``make artifacts`` runs ``python -m compile.aot``
+once, and the Rust binary consumes the resulting ``artifacts/*.hlo.txt``.
+"""

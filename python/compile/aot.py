@@ -1,0 +1,95 @@
+"""AOT lowering: JAX/Pallas golden models → HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Lowered with ``return_tuple=True``
+so the Rust side unwraps with ``to_tuple1()``.
+
+Alongside each ``<name>.hlo.txt`` we write a ``manifest.json`` describing
+argument/result shapes so the Rust runtime can allocate literals without
+parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_registry():
+    """name → (fn, [arg ShapeDtypeStructs]).  One HLO artifact per entry."""
+    t = model.GAMMA_TILE
+    return {
+        "gemm_8x8": (model.gemm_8x8, [_spec((t, t)), _spec((t, t))]),
+        "gemm_relu_8x8": (model.gemm_relu_8x8, [_spec((t, t)), _spec((t, t))]),
+        "gemm_tiled_128": (
+            model.gemm_tiled_128,
+            [_spec((128, 128)), _spec((128, 128))],
+        ),
+        "mlp_forward": (model.mlp_forward, model.mlp_shapes()),
+    }
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in artifact_registry().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.eval_shape(fn, *specs)
+        ]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "results": out_shapes,
+        }
+        print(f"  {name}: {len(text)} chars, args={len(specs)}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    # Back-compat single-file flag (Makefile stamp target).
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    print(f"AOT-lowering golden models -> {out_dir}")
+    lower_all(out_dir or ".")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the ACADL golden models.
+
+These kernels are the TPU-oriented realization of the paper's fused-tensor
+operations (the Γ̈ accelerator's ``gemm`` instruction, §4.3): a tiled general
+matrix multiplication with an optional fused ReLU activation.
+
+Everything here is build-time only: kernels are lowered once by
+``python/compile/aot.py`` into HLO text under ``artifacts/`` and executed by
+the Rust runtime via PJRT.  Pallas runs with ``interpret=True`` because the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from .gemm import pallas_gemm, pallas_gemm_relu, default_tiling
+from . import ref
+
+__all__ = ["pallas_gemm", "pallas_gemm_relu", "default_tiling", "ref"]

@@ -1,0 +1,119 @@
+"""Tiled GeMM (+ fused ReLU) as a Pallas kernel — the L1 compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Γ̈
+accelerator executes ``gemm`` as a fused-tensor instruction over 8×8 int16
+tiles held in 128-bit vector registers, fed by load/store units from a
+scratchpad.  On TPU the same insight — keep operand tiles resident in fast
+memory and stream the K dimension through the matrix unit — maps to:
+
+* ``BlockSpec``-tiled HBM→VMEM movement (the load/store units),
+* an MXU-shaped matmul on the resident blocks (the ``matMulFu``),
+* an output block revisited across the K grid dimension (the scratchpad
+  partial-result reuse).
+
+The kernel is lowered with ``interpret=True`` only because the CPU PJRT
+plugin cannot run Mosaic custom-calls; the *structure* (grid, block shapes,
+accumulation schedule) is the TPU design point and is what DESIGN.md's VMEM /
+MXU estimates are computed from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def default_tiling(m, k, n):
+    """Pick (TM, TK, TN) block shapes for an (m,k) x (k,n) GeMM.
+
+    Blocks must divide the problem (callers pad otherwise).  The choice
+    mirrors the Γ̈ design point scaled to TPU: prefer MXU-aligned 128 tiles,
+    fall back to the largest divisor when the dimension is smaller.
+    """
+
+    def pick(dim):
+        for t in (128, 64, 32, 16, 8):
+            if dim % t == 0:
+                return t
+        return dim
+
+    return pick(m), pick(k), pick(n)
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, *, n_k, relu):
+    """Kernel body: one (TM,TN) output block, revisited across the K grid.
+
+    Grid is (M/TM, N/TN, K/TK) with K innermost.  The output block's index
+    map ignores the K coordinate, so Pallas keeps the block resident in VMEM
+    across consecutive K steps — it doubles as the float32 accumulator, the
+    Γ̈ scratchpad's role for partial results.
+    """
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    if relu:
+
+        @pl.when(ik == n_k - 1)
+        def _activate():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def _pallas_gemm(x, y, *, tiling=None, relu=False, interpret=True):
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    tm, tk, tn = tiling or default_tiling(m, k, n)
+    if m % tm or k % tk or n % tn:
+        raise ValueError(
+            f"tiling ({tm},{tk},{tn}) must divide problem ({m},{k},{n})"
+        )
+    n_k = k // tk
+    grid = (m // tm, n // tn, n_k)
+    kernel = functools.partial(_gemm_kernel, n_k=n_k, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, ik: (i, ik)),
+            pl.BlockSpec((tk, tn), lambda i, j, ik: (ik, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, ik: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y).astype(x.dtype)
+
+
+def pallas_gemm(x, y, tiling=None, interpret=True):
+    """C = X @ Y via the tiled Pallas kernel (float32 accumulation)."""
+    return _pallas_gemm(x, y, tiling=tiling, relu=False, interpret=interpret)
+
+
+def pallas_gemm_relu(x, y, tiling=None, interpret=True):
+    """C = relu(X @ Y) — the Γ̈ ``gemm …, 1: ReLU`` instruction (Listing 4)."""
+    return _pallas_gemm(x, y, tiling=tiling, relu=True, interpret=interpret)
+
+
+def vmem_footprint_bytes(tiling, dtype_bits=32):
+    """Estimated VMEM bytes for one grid step: X block + Y block + out/acc.
+
+    Used by DESIGN.md / EXPERIMENTS.md to reason about real-TPU behavior
+    (interpret=True timing is not a TPU proxy).
+    """
+    tm, tk, tn = tiling
+    elem = dtype_bits // 8
+    return (tm * tk + tk * tn) * elem + tm * tn * 4
+
+
+def mxu_utilization_estimate(tiling):
+    """Fraction of the 128x128x128 MXU pass filled by one block product."""
+    tm, tk, tn = tiling
+    return min(tm, 128) * min(tn, 128) * min(tk, 128) / (128 * 128 * 128)

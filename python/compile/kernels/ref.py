@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference semantics of the Γ̈ fused-tensor instructions
+(§4.3 of the paper): ``gemm`` with an optional activation applied to the
+output tile.  The Pallas kernels in ``gemm.py`` must match these exactly
+(up to dtype accumulation rules) — enforced by ``python/tests/``.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm(x, y):
+    """C = X @ Y with float32 accumulation (MXU semantics)."""
+    return jnp.matmul(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def gemm_relu(x, y):
+    """C = relu(X @ Y) — the Γ̈ ``gemm …, 1: ReLU`` instruction (Listing 4)."""
+    acc = jnp.matmul(x, y, preferred_element_type=jnp.float32)
+    return jnp.maximum(acc, 0.0).astype(x.dtype)
+
+
+def gemm_bias_relu(x, y, b):
+    """C = relu(X @ Y + b) — fused linear layer used by the MLP golden model."""
+    acc = jnp.matmul(x, y, preferred_element_type=jnp.float32)
+    acc = acc + b.astype(jnp.float32)
+    return jnp.maximum(acc, 0.0).astype(x.dtype)
+
+
+def mlp_forward(x, params):
+    """Reference MLP forward pass; ``params`` is [(W, b), ...].
+
+    All hidden layers use ReLU; the final layer is linear (logits), matching
+    ``model.mlp_forward`` and the Rust-side E9 end-to-end experiment.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        acc = jnp.matmul(h, w, preferred_element_type=jnp.float32) + b.astype(
+            jnp.float32
+        )
+        if i + 1 < len(params):
+            acc = jnp.maximum(acc, 0.0)
+        h = acc.astype(x.dtype)
+    return h

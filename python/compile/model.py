@@ -1,0 +1,75 @@
+"""Layer-2 JAX golden models, built on the L1 Pallas kernels.
+
+These are the DNN workloads the paper maps onto accelerators (§5): GeMM,
+GeMM+ReLU (the Γ̈ fused-tensor instruction of Listing 4), and a small MLP
+whose layers are exactly the operators the Rust mapping pipeline lowers onto
+OMA / systolic / Γ̈ models.  Each model is AOT-lowered by ``aot.py`` into an
+HLO-text artifact; the Rust runtime executes them via PJRT and compares the
+numbers against the functional simulation of the mapped programs (E9).
+
+Shapes are deliberately fixed here (AOT requires static shapes); the Rust
+side reads the shape manifest emitted next to the artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gemm import pallas_gemm, pallas_gemm_relu
+
+# The E9 end-to-end MLP: 784-256-128-10, matching the paper-scale "small DNN
+# inference" workload (MNIST-shaped synthetic input).  Hidden layers ReLU,
+# final layer linear.
+MLP_LAYERS = [(784, 256), (256, 128), (128, 10)]
+MLP_BATCH = 8
+
+# The Γ̈ Listing-4 design point: 8×8 matrices (the paper uses int16 elements
+# in 128-bit vector registers; we model numerics in f32 — the simulator's
+# functional payloads are f32 too, so comparisons are exact).
+GAMMA_TILE = 8
+
+
+def gemm_8x8(x, y):
+    """Listing 4's gemm instruction without activation: C = X @ Y (8×8)."""
+    return (pallas_gemm(x, y, tiling=(8, 8, 8)),)
+
+
+def gemm_relu_8x8(x, y):
+    """Listing 4's gemm with ReLU enabled: C = relu(X @ Y) (8×8)."""
+    return (pallas_gemm_relu(x, y, tiling=(8, 8, 8)),)
+
+
+def gemm_tiled_128(x, y):
+    """A 128×128×128 GeMM with the MXU-aligned default tiling — the
+    systolic-array experiment's workload (E3)."""
+    return (pallas_gemm(x, y, tiling=(128, 128, 128)),)
+
+
+def mlp_forward(x, w0, b0, w1, b1, w2, b2):
+    """MLP forward pass with Pallas-kernel GeMMs + fused ReLU.
+
+    Layer i computes relu(h @ Wi + bi) (final layer linear).  Bias add is
+    plain jnp (the accelerators model it as vector add instructions); the
+    matmul hot-spot goes through the Pallas kernel.
+    """
+    h = pallas_gemm(x, w0, tiling=(MLP_BATCH, 112, 128))
+    h = jnp.maximum(h + b0, 0.0)
+    h = pallas_gemm(h, w1, tiling=(MLP_BATCH, 128, 128))
+    h = jnp.maximum(h + b1, 0.0)
+    h = pallas_gemm(h, w2, tiling=(MLP_BATCH, 128, 10))
+    return (h + b2,)
+
+
+def mlp_shapes():
+    """ShapeDtypeStructs for mlp_forward's arguments, in order."""
+    import jax
+
+    (d0, d1), (_, d2), (_, d3) = MLP_LAYERS
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((MLP_BATCH, d0), f32),
+        jax.ShapeDtypeStruct((d0, d1), f32),
+        jax.ShapeDtypeStruct((d1,), f32),
+        jax.ShapeDtypeStruct((d1, d2), f32),
+        jax.ShapeDtypeStruct((d2,), f32),
+        jax.ShapeDtypeStruct((d2, d3), f32),
+        jax.ShapeDtypeStruct((d3,), f32),
+    ]

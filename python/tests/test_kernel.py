@@ -1,0 +1,141 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/tilings; every case asserts allclose against
+``kernels.ref``.  These tests run at build time (``make test``); the same
+numerics are re-checked from Rust in E9 via the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import (
+    default_tiling,
+    mxu_utilization_estimate,
+    pallas_gemm,
+    pallas_gemm_relu,
+    vmem_footprint_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 8, 24), (32, 64, 16)])
+def test_gemm_matches_ref(m, k, n):
+    x, y = _rand((m, k), jnp.float32, 0), _rand((k, n), jnp.float32, 1)
+    np.testing.assert_allclose(
+        pallas_gemm(x, y), ref.gemm(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 32, 8)])
+def test_gemm_relu_matches_ref(m, k, n):
+    x, y = _rand((m, k), jnp.float32, 2), _rand((k, n), jnp.float32, 3)
+    out = pallas_gemm_relu(x, y)
+    np.testing.assert_allclose(out, ref.gemm_relu(x, y), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(out) >= 0).all(), "ReLU output must be non-negative"
+
+
+def test_gemm_relu_actually_clamps():
+    # Force negatives: X @ (-I) = -X.
+    x = _rand((8, 8), jnp.float32, 4)
+    y = -jnp.eye(8, dtype=jnp.float32)
+    out = np.asarray(pallas_gemm_relu(x, y))
+    expect = np.maximum(-np.asarray(x), 0.0)
+    np.testing.assert_allclose(out, expect, rtol=1e-6, atol=1e-6)
+
+
+def test_explicit_tiling_equivalence():
+    """Different legal tilings must not change the result."""
+    x, y = _rand((32, 32), jnp.float32, 5), _rand((32, 32), jnp.float32, 6)
+    base = np.asarray(pallas_gemm(x, y, tiling=(32, 32, 32)))
+    for tiling in [(8, 8, 8), (16, 32, 16), (32, 8, 32), (8, 32, 8)]:
+        np.testing.assert_allclose(
+            np.asarray(pallas_gemm(x, y, tiling=tiling)),
+            base,
+            rtol=1e-5,
+            atol=1e-5,
+            err_msg=f"tiling={tiling}",
+        )
+
+
+def test_bad_tiling_rejected():
+    x, y = _rand((8, 8), jnp.float32, 7), _rand((8, 8), jnp.float32, 8)
+    with pytest.raises(ValueError, match="divide"):
+        pallas_gemm(x, y, tiling=(3, 8, 8))
+
+
+def test_shape_mismatch_rejected():
+    x, y = _rand((8, 8), jnp.float32, 9), _rand((16, 8), jnp.float32, 10)
+    with pytest.raises(ValueError, match="mismatch"):
+        pallas_gemm(x, y)
+
+
+# ------------------------------------------------------------ hypothesis sweep
+
+_dims = st.sampled_from([8, 16, 24, 32, 40, 64])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**16), relu=st.booleans())
+def test_gemm_hypothesis_shapes(m, k, n, seed, relu):
+    x, y = _rand((m, k), jnp.float32, seed), _rand((k, n), jnp.float32, seed + 1)
+    fn = pallas_gemm_relu if relu else pallas_gemm
+    oracle = ref.gemm_relu if relu else ref.gemm
+    np.testing.assert_allclose(fn(x, y), oracle(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 16, 32]),
+    n=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_hypothesis_dtypes(m, k, n, dtype, seed):
+    dt = jnp.dtype(dtype)
+    x, y = _rand((m, k), dt, seed), _rand((k, n), dt, seed + 1)
+    out = pallas_gemm(x, y)
+    expect = ref.gemm(x, y)
+    assert out.dtype == expect.dtype
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expect, np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+# ----------------------------------------------------------------- utilities
+
+
+def test_default_tiling_divides():
+    for m, k, n in [(8, 8, 8), (128, 256, 64), (784, 784, 784), (40, 24, 8)]:
+        tm, tk, tn = default_tiling(m, k, n)
+        assert m % tm == 0 and k % tk == 0 and n % tn == 0
+
+
+def test_vmem_footprint_monotone_and_sane():
+    small = vmem_footprint_bytes((8, 8, 8))
+    big = vmem_footprint_bytes((128, 128, 128))
+    assert small < big
+    # The MXU-aligned block set must fit comfortably in 16 MiB VMEM.
+    assert big < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization_estimate((128, 128, 128)) == 1.0
+    assert 0 < mxu_utilization_estimate((8, 8, 8)) < 0.01

@@ -1,0 +1,67 @@
+"""L2 model tests: MLP forward vs oracle, AOT registry shape checks."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mlp_args(seed=0):
+    rng = np.random.default_rng(seed)
+    args = []
+    for spec in model.mlp_shapes():
+        args.append(jnp.asarray(rng.standard_normal(spec.shape) * 0.1, jnp.float32))
+    return args
+
+
+def test_mlp_forward_matches_ref():
+    args = _mlp_args()
+    x, w0, b0, w1, b1, w2, b2 = args
+    (got,) = model.mlp_forward(*args)
+    want = ref.mlp_forward(x, [(w0, b0), (w1, b1), (w2, b2)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_output_shape():
+    (got,) = model.mlp_forward(*_mlp_args(1))
+    assert got.shape == (model.MLP_BATCH, model.MLP_LAYERS[-1][1])
+
+
+def test_gemm_8x8_entry():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    (got,) = model.gemm_8x8(x, y)
+    np.testing.assert_allclose(got, ref.gemm(x, y), rtol=1e-5, atol=1e-5)
+    (got_r,) = model.gemm_relu_8x8(x, y)
+    np.testing.assert_allclose(got_r, ref.gemm_relu(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_registry_is_lowerable():
+    """Every artifact entry must trace + eval_shape without error."""
+    from compile.aot import artifact_registry
+
+    for name, (fn, specs) in artifact_registry().items():
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) >= 1, name
+        for o in outs:
+            assert all(d > 0 for d in o.shape), (name, o.shape)
+
+
+@pytest.mark.slow
+def test_aot_lowering_roundtrip(tmp_path):
+    """Full lowering of the smallest artifact produces parseable HLO text."""
+    from compile.aot import to_hlo_text
+
+    lowered = jax.jit(model.gemm_8x8).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[8,8]" in text

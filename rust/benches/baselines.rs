@@ -1,0 +1,47 @@
+//! E7 — ACADL simulation vs the §2 analytical baselines: a ScaleSim-style
+//! output-stationary formula and the roofline floor, on identical systolic
+//! configurations.  The shape to reproduce: the simulation tracks the
+//! analytical trend but exposes effects the formulas cannot (issue
+//! bandwidth, memory ports).
+//!
+//! Run: `cargo bench --bench baselines`
+
+use acadl::analytical::{scalesim_cycles, scalesim_utilization, Roofline};
+use acadl::arch::systolic::SystolicConfig;
+use acadl::mapping::gemm::GemmParams;
+use acadl::mapping::systolic_gemm::systolic_gemm;
+use acadl::metrics::Table;
+use acadl::sim::engine::Engine;
+
+fn main() {
+    let mut table = Table::new(
+        "E7: ACADL sim vs ScaleSim-style formula vs roofline",
+        &["config", "workload", "sim", "scalesim", "ratio", "roofline", "ss util"],
+    );
+    for (edge, dim) in [(4usize, 16usize), (4, 32), (8, 32), (8, 64)] {
+        let p = GemmParams::new(dim, dim, dim);
+        let machine = SystolicConfig::new(edge, edge).build().expect("build");
+        let prog = systolic_gemm(&machine, &p);
+        let mut engine = Engine::new(&machine.ag, &prog).expect("engine");
+        let sim = engine.run(2_000_000_000).expect("run").cycles;
+        let ss = scalesim_cycles(&p, edge, edge);
+        let rl = Roofline {
+            macs_per_cycle: (edge * edge) as u64,
+            // loads stream through rows+cols load units, 1 word each.
+            words_per_cycle: (2 * edge) as u64,
+        }
+        .gemm_cycles(&p);
+        table.row(vec![
+            format!("{edge}x{edge}"),
+            format!("{dim}³"),
+            sim.to_string(),
+            ss.to_string(),
+            format!("{:.2}x", sim as f64 / ss as f64),
+            rl.to_string(),
+            format!("{:.1}%", scalesim_utilization(&p, edge, edge) * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(sim ≥ roofline always; sim/scalesim ratio is the cost of the effects");
+    println!(" the closed form ignores: fetch bandwidth, ports, dependency timing)");
+}

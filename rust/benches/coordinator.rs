@@ -1,0 +1,78 @@
+//! E10 (perf) — coordinator throughput: jobs/second of the worker pool as
+//! worker count scales, on a mixed design-space batch.  L3 must not be the
+//! bottleneck of the NAS/co-design loop the paper targets (§7).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use acadl::coordinator::{run_jobs, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::metrics::Table;
+
+fn batch() -> Vec<JobSpec> {
+    let mut specs = Vec::new();
+    let mut id = 0;
+    for edge in [2usize, 4] {
+        for dim in [8usize, 16] {
+            for mode in [SimModeSpec::Timed, SimModeSpec::Estimate] {
+                specs.push(JobSpec {
+                    id,
+                    target: TargetSpec::Systolic {
+                        rows: edge,
+                        cols: edge,
+                    },
+                    workload: Workload::Gemm {
+                        m: dim,
+                        k: dim,
+                        n: dim,
+                        tile: None,
+                        order: None,
+                    },
+                    mode,
+                    max_cycles: 1_000_000_000,
+                });
+                id += 1;
+            }
+        }
+    }
+    for units in [1usize, 2] {
+        specs.push(JobSpec {
+            id,
+            target: TargetSpec::Gamma { units },
+            workload: Workload::Gemm {
+                m: 16,
+                k: 16,
+                n: 16,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 1_000_000_000,
+        });
+        id += 1;
+    }
+    specs
+}
+
+fn main() {
+    let specs = batch();
+    let n = specs.len();
+    let mut table = Table::new(
+        &format!("E10 perf: pool throughput, {n}-job design-space batch"),
+        &["workers", "wall", "jobs/s", "speedup"],
+    );
+    let mut base = None;
+    for workers in [1usize, 2, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let results = run_jobs(specs.clone(), workers);
+        let wall = t0.elapsed();
+        assert_eq!(results.len(), n);
+        assert!(results.iter().all(|r| r.error.is_none()));
+        let b = *base.get_or_insert(wall);
+        table.row(vec![
+            workers.to_string(),
+            format!("{wall:.2?}"),
+            format!("{:.1}", n as f64 / wall.as_secs_f64()),
+            format!("{:.2}x", b.as_secs_f64() / wall.as_secs_f64()),
+        ]);
+    }
+    print!("{}", table.render());
+}

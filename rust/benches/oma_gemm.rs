@@ -1,0 +1,51 @@
+//! E1 — OMA GeMM (Figs 2–3, Listing 5): cycle counts and CPI for the
+//! Listing-5 register-loop implementation vs the unrolled UMA mapping,
+//! across matrix sizes; plus simulator wall-time throughput.
+//!
+//! Run: `cargo bench --bench oma_gemm`
+
+use acadl::arch::oma::OmaConfig;
+use acadl::mapping::gemm::{oma_gemm_listing5, oma_tiled_gemm, GemmParams};
+use acadl::metrics::Table;
+use acadl::sim::engine::Engine;
+use acadl::util::bench::Bench;
+
+fn main() {
+    let machine = OmaConfig::default().build().expect("build OMA");
+    let mut table = Table::new(
+        "E1: OMA GeMM — Listing-5 loop vs unrolled mapping",
+        &["size", "variant", "instrs", "cycles", "CPI", "cyc/MAC"],
+    );
+    let mut bench = Bench::new("oma_gemm");
+
+    for dim in [4usize, 8, 12, 16] {
+        let p = GemmParams::new(dim, dim, dim);
+        for (variant, prog) in [
+            ("listing5", oma_gemm_listing5(&machine, &p).expect("asm")),
+            ("unrolled", oma_tiled_gemm(&machine, &p).expect("codegen")),
+        ] {
+            let mut engine = Engine::new(&machine.ag, &prog).expect("engine");
+            let stats = engine.run(1_000_000_000).expect("run");
+            table.row(vec![
+                format!("{dim}³"),
+                variant.into(),
+                stats.retired.to_string(),
+                stats.cycles.to_string(),
+                format!("{:.2}", stats.cycles as f64 / stats.retired as f64),
+                format!("{:.1}", stats.cycles as f64 / p.macs() as f64),
+            ]);
+            if dim == 12 {
+                // Simulator throughput on this workload (perf target §Perf).
+                bench.time(
+                    &format!("sim_{variant}_{dim}"),
+                    Some(stats.cycles),
+                    || {
+                        let mut e = Engine::new(&machine.ag, &prog).expect("engine");
+                        e.run(1_000_000_000).expect("run").cycles
+                    },
+                );
+            }
+        }
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,82 @@
+//! E5 — engine micro-benchmarks: simulated-cycles-per-second throughput of
+//! the timing engine across the model zoo, plus the §Perf hot-path
+//! numbers (the optimization target of EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench sim_micro`
+
+use acadl::arch::gamma::GammaConfig;
+use acadl::arch::oma::OmaConfig;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::mapping::gamma_gemm::{gamma_gemm, GammaGemmOpts};
+use acadl::mapping::gemm::{oma_gemm_listing5, GemmParams};
+use acadl::mapping::systolic_gemm::systolic_gemm;
+use acadl::sim::engine::Engine;
+use acadl::sim::functional::FunctionalSim;
+use acadl::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("sim_micro");
+
+    // OMA: branchy scalar loop code (the fetch/issue/branch path).
+    {
+        let m = OmaConfig::default().build().expect("oma");
+        let p = GemmParams::new(8, 8, 8);
+        let prog = oma_gemm_listing5(&m, &p).expect("asm");
+        let cycles = {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        };
+        bench.time("oma_listing5_timed (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        });
+        let instrs = {
+            let mut f = FunctionalSim::new(&m.ag);
+            f.run(&prog, 100_000_000).expect("func").instructions
+        };
+        bench.time("oma_listing5_functional (instr/s)", Some(instrs), || {
+            let mut f = FunctionalSim::new(&m.ag);
+            f.run(&prog, 100_000_000).expect("func").instructions
+        });
+    }
+
+    // Systolic 8×8: wide out-of-order issue (the scoreboard path).
+    {
+        let m = SystolicConfig::new(8, 8).build().expect("systolic");
+        let p = GemmParams::new(16, 16, 16);
+        let prog = systolic_gemm(&m, &p);
+        let cycles = {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        };
+        bench.time("systolic8x8_timed (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        });
+    }
+
+    // Γ̈: fused-tensor ops + DRAM path.
+    {
+        let m = GammaConfig::new(2).build().expect("gamma");
+        let p = GemmParams::new(16, 16, 16);
+        let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+        let cycles = {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        };
+        bench.time("gamma2u_timed (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(1_000_000_000).expect("run").cycles
+        });
+    }
+
+    // Engine construction cost (matters for the coordinator's job rate).
+    {
+        let m = SystolicConfig::new(8, 8).build().expect("systolic");
+        let p = GemmParams::new(8, 8, 8);
+        let prog = systolic_gemm(&m, &p);
+        bench.time("engine_new_systolic8x8", None, || {
+            Engine::new(&m.ag, &prog).expect("engine")
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! `Data`: values stored in memories, registers, and instruction immediates.
+//!
+//! The paper (§3): *"Data represents any data stored in memories, registers,
+//! and immediate values of instructions. `size` is the data size in bits.
+//! `payload` is the data itself, which is used for the functional
+//! simulation."*
+//!
+//! The union ISA of the three modeled accelerators needs three payload
+//! shapes: scalar integers (OMA address/loop registers), scalar floats
+//! (OMA MAC data path), and short float vectors (Γ̈'s 128-bit vector
+//! registers holding 8×16-bit rows — we model numerics in f32, see
+//! DESIGN.md substitution table).
+
+use std::fmt;
+
+/// A typed payload value for functional simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Scalar integer (addresses, loop counters, the `pc`).
+    Int(i64),
+    /// Scalar float (the OMA MAC data path).
+    F32(f32),
+    /// Short vector (one Γ̈ vector register = one matrix row).
+    Vec(Box<[f32]>),
+}
+
+impl Value {
+    pub fn zero_int() -> Self {
+        Value::Int(0)
+    }
+
+    pub fn zero_f32() -> Self {
+        Value::F32(0.0)
+    }
+
+    pub fn zero_vec(len: usize) -> Self {
+        Value::Vec(vec![0.0; len].into_boxed_slice())
+    }
+
+    /// Integer view; floats truncate (used for address arithmetic on
+    /// registers the program also uses as data — matches a real datapath
+    /// reinterpreting bits is *not* modeled; conversion is by value).
+    pub fn as_int(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            Value::F32(v) => *v as i64,
+            Value::Vec(_) => 0,
+        }
+    }
+
+    pub fn as_f32(&self) -> f32 {
+        match self {
+            Value::Int(v) => *v as f32,
+            Value::F32(v) => *v,
+            Value::Vec(v) => v.first().copied().unwrap_or(0.0),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Value::Vec(v) => v,
+            _ => &[],
+        }
+    }
+
+    /// Bit width of a canonical encoding of this value (diagnostics only).
+    pub fn nominal_bits(&self) -> u32 {
+        match self {
+            Value::Int(_) => 64,
+            Value::F32(_) => 32,
+            Value::Vec(v) => (v.len() * 32) as u32,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::F32(v) => write!(f, "{v}"),
+            Value::Vec(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// `Data` object: size in bits plus the payload (Fig. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Data {
+    /// Data size in bits.
+    pub size: u32,
+    /// Payload used by the functional simulation.
+    pub payload: Value,
+}
+
+impl Data {
+    pub fn new(size: u32, payload: Value) -> Self {
+        Data { size, payload }
+    }
+
+    /// A `size`-bit integer datum (the paper's `Data(32, 0)` style).
+    pub fn int(size: u32, v: i64) -> Self {
+        Data::new(size, Value::Int(v))
+    }
+
+    pub fn f32(v: f32) -> Self {
+        Data::new(32, Value::F32(v))
+    }
+
+    /// A vector datum of `len` f32 lanes (Γ̈ vector registers: the paper's
+    /// 128-bit / 8×int16 design point keeps `size = 128`).
+    pub fn vec(size: u32, len: usize) -> Self {
+        Data::new(size, Value::zero_vec(len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::Int(7).as_f32(), 7.0);
+        assert_eq!(Value::F32(3.9).as_int(), 3);
+        assert_eq!(Value::zero_vec(4).as_slice(), &[0.0; 4]);
+        assert_eq!(Value::Int(1).as_slice(), &[] as &[f32]);
+    }
+
+    #[test]
+    fn constructors() {
+        let d = Data::int(32, 5);
+        assert_eq!(d.size, 32);
+        assert_eq!(d.payload.as_int(), 5);
+        let v = Data::vec(128, 8);
+        assert_eq!(v.payload.as_slice().len(), 8);
+        assert_eq!(v.size, 128);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Value::Int(3).to_string(), "3");
+        assert_eq!(Value::Vec(vec![1.0, 2.0].into()).to_string(), "[1, 2]");
+    }
+}

@@ -1,0 +1,215 @@
+//! Typed edges between ACADL objects and the class-diagram validity rules.
+//!
+//! The Python front-end's `ACADLEdge(src, dst, TYPE)` (Listing 1) maps to
+//! [`Edge`]; the implicit validity check performed by `@generate` maps to
+//! [`check_edge`], which enforces exactly the association/composition arrows
+//! of Fig. 1:
+//!
+//! * `FORWARD`    — PipelineStage → PipelineStage (`:forward()`/`:receive()`)
+//! * `CONTAINS`   — ExecuteStage → FunctionalUnit (composition)
+//! * `READ_DATA`  — RegisterFile → FunctionalUnit (`:read()`),
+//!                  DataStorage → MemoryAccessUnit (memory reads, incl. the
+//!                  instruction memory → InstructionMemoryAccessUnit fetch
+//!                  path), DataStorage → DataStorage (backing store → cache)
+//! * `WRITE_DATA` — FunctionalUnit → RegisterFile (`:write()`),
+//!                  MemoryAccessUnit → DataStorage,
+//!                  DataStorage → DataStorage (cache → backing store)
+
+use std::fmt;
+
+use thiserror::Error;
+
+use crate::acadl_core::graph::ObjId;
+use crate::acadl_core::object::ObjectKind;
+
+/// The four ACADL edge types used by the paper's listings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeKind {
+    /// Instruction forwarding between pipeline stages.
+    Forward,
+    /// Composition: an execute stage contains a functional unit.
+    Contains,
+    /// Data flows from `src` when `dst` reads.
+    ReadData,
+    /// `src` writes data into `dst`.
+    WriteData,
+}
+
+impl fmt::Display for EdgeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            EdgeKind::Forward => "FORWARD",
+            EdgeKind::Contains => "CONTAINS",
+            EdgeKind::ReadData => "READ_DATA",
+            EdgeKind::WriteData => "WRITE_DATA",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A directed, typed edge of the architecture graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: ObjId,
+    pub dst: ObjId,
+    pub kind: EdgeKind,
+}
+
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+#[error("invalid {kind} edge: {src_class}(`{src_name}`) -> {dst_class}(`{dst_name}`)")]
+pub struct EdgeError {
+    pub kind: EdgeKind,
+    pub src_class: &'static str,
+    pub src_name: String,
+    pub dst_class: &'static str,
+    pub dst_name: String,
+}
+
+/// Is `src --kind--> dst` permitted by the Fig. 1 class diagram?
+pub fn edge_allowed(kind: EdgeKind, src: &ObjectKind, dst: &ObjectKind) -> bool {
+    match kind {
+        EdgeKind::Forward => src.is_pipeline_stage() && dst.is_pipeline_stage(),
+        EdgeKind::Contains => src.is_execute_stage() && dst.is_functional_unit(),
+        EdgeKind::ReadData => {
+            // RegisterFile -> FunctionalUnit-like: operand reads.
+            (src.is_register_file() && dst.is_functional_unit())
+                // DataStorage -> MemoryAccessUnit-like: loads / ifetch.
+                || (src.is_data_storage() && dst.is_memory_access_unit())
+                // DataStorage -> DataStorage: backing memory feeds a cache.
+                || (src.is_data_storage() && dst.is_data_storage())
+        }
+        EdgeKind::WriteData => {
+            // FunctionalUnit-like -> RegisterFile: result writeback
+            // (includes InstructionMemoryAccessUnit -> pc RegisterFile).
+            (src.is_functional_unit() && dst.is_register_file())
+                // MemoryAccessUnit-like -> DataStorage: stores.
+                || (src.is_memory_access_unit() && dst.is_data_storage())
+                // DataStorage -> DataStorage: cache evicts to backing store.
+                || (src.is_data_storage() && dst.is_data_storage())
+        }
+    }
+}
+
+/// Validate one edge, with class/name context for error messages.
+pub fn check_edge(
+    kind: EdgeKind,
+    src: (&str, &ObjectKind),
+    dst: (&str, &ObjectKind),
+) -> Result<(), EdgeError> {
+    if edge_allowed(kind, src.1, dst.1) {
+        Ok(())
+    } else {
+        Err(EdgeError {
+            kind,
+            src_class: src.1.class_name(),
+            src_name: src.0.to_string(),
+            dst_class: dst.1.class_name(),
+            dst_name: dst.0.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::latency::Latency;
+    use crate::acadl_core::object::build;
+
+    fn kinds() -> Vec<ObjectKind> {
+        vec![
+            build::pipeline_stage("ps", 1).kind,
+            build::execute_stage("ex", 1).kind,
+            build::fetch_stage("ifs", 1, 4).kind,
+            build::functional_unit("fu", &["add"], Latency::Const(1)).kind,
+            build::memory_access_unit("mau", &["load"], 1).kind,
+            build::instruction_memory_access_unit("imau", 1).kind,
+            build::register_file("rf", 32, vec![]).kind,
+            crate::arch::parts::sram("s", 0, 1024, 1, 1).kind,
+            crate::arch::parts::dram_default("d", 0x1000, 0x10000).kind,
+            crate::arch::parts::cache_default("c").kind,
+        ]
+    }
+
+    /// Exhaustively compare `edge_allowed` against an independent statement
+    /// of the Fig. 1 rules (E11 conformance; the proptest version lives in
+    /// `rust/tests/`).
+    #[test]
+    fn exhaustive_rule_table() {
+        for src in kinds() {
+            for dst in kinds() {
+                let fwd = src.is_pipeline_stage() && dst.is_pipeline_stage();
+                assert_eq!(edge_allowed(EdgeKind::Forward, &src, &dst), fwd);
+
+                let contains = src.is_execute_stage() && dst.is_functional_unit();
+                assert_eq!(edge_allowed(EdgeKind::Contains, &src, &dst), contains);
+
+                let rd = (src.is_register_file() && dst.is_functional_unit())
+                    || (src.is_data_storage() && dst.is_memory_access_unit())
+                    || (src.is_data_storage() && dst.is_data_storage());
+                assert_eq!(edge_allowed(EdgeKind::ReadData, &src, &dst), rd);
+
+                let wr = (src.is_functional_unit() && dst.is_register_file())
+                    || (src.is_memory_access_unit() && dst.is_data_storage())
+                    || (src.is_data_storage() && dst.is_data_storage());
+                assert_eq!(edge_allowed(EdgeKind::WriteData, &src, &dst), wr);
+            }
+        }
+    }
+
+    #[test]
+    fn listing1_edges_all_legal() {
+        // Every edge from Listing 1 (OMA) must pass.
+        let imem = crate::arch::parts::sram("imem0", 0, 4096, 1, 4).kind;
+        let imau = build::instruction_memory_access_unit("imau0", 1).kind;
+        let pcrf = build::register_file("pcrf0", 32, vec![]).kind;
+        let ifs = build::fetch_stage("ifs0", 1, 4).kind;
+        let ds = build::pipeline_stage("ds0", 1).kind;
+        let ex = build::execute_stage("ex0", 1).kind;
+        let fu = build::functional_unit("fu0", &["mov"], Latency::Const(1)).kind;
+        let rf = build::register_file("rf0", 32, vec![]).kind;
+        let mau = build::memory_access_unit("mau0", &["load", "store"], 1).kind;
+        let dmem = crate::arch::parts::sram("dmem0", 0x1000, 0x11000, 2, 1).kind;
+        let dcache = crate::arch::parts::cache_default("dcache0").kind;
+
+        use EdgeKind::*;
+        let table: Vec<(&ObjectKind, &ObjectKind, EdgeKind)> = vec![
+            (&imem, &imau, ReadData),
+            (&pcrf, &imau, ReadData),
+            (&imau, &pcrf, WriteData),
+            (&ifs, &imau, Contains),
+            (&ifs, &ds, Forward),
+            (&ds, &ex, Forward),
+            (&ex, &fu, Contains),
+            (&fu, &rf, WriteData),
+            (&rf, &fu, ReadData),
+            (&ex, &mau, Contains),
+            (&mau, &rf, WriteData),
+            (&rf, &mau, ReadData),
+            (&mau, &dcache, WriteData),
+            (&dcache, &mau, ReadData),
+            (&dcache, &dmem, WriteData),
+            (&dmem, &dcache, ReadData),
+        ];
+        for (src, dst, kind) in table {
+            assert!(edge_allowed(kind, src, dst), "{kind} {src:?} -> {dst:?}");
+        }
+    }
+
+    #[test]
+    fn obvious_illegal_edges_rejected() {
+        let rf = build::register_file("rf", 32, vec![]).kind;
+        let ex = build::execute_stage("ex", 1).kind;
+        let fu = build::functional_unit("fu", &[], Latency::Const(1)).kind;
+        // RegisterFile cannot forward, contain, or receive READ_DATA from a FU.
+        assert!(!edge_allowed(EdgeKind::Forward, &rf, &ex));
+        assert!(!edge_allowed(EdgeKind::Contains, &rf, &fu));
+        assert!(!edge_allowed(EdgeKind::ReadData, &fu, &rf));
+        // FunctionalUnit cannot contain anything.
+        assert!(!edge_allowed(EdgeKind::Contains, &fu, &fu));
+        // PipelineStage (non-execute) cannot contain.
+        let ps = build::pipeline_stage("ps", 1).kind;
+        assert!(!edge_allowed(EdgeKind::Contains, &ps, &fu));
+        let err = check_edge(EdgeKind::Contains, ("ps", &ps), ("fu", &fu)).unwrap_err();
+        assert!(err.to_string().contains("CONTAINS"));
+    }
+}

@@ -1,0 +1,464 @@
+//! The architecture graph (AG): the UML object diagram describing one
+//! computer architecture (§4), with edge-validity enforcement and the
+//! pre-resolved adjacency queries the simulator's hot loop relies on.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::{check_edge, Edge, EdgeError, EdgeKind};
+use crate::acadl_core::object::{Object, ObjectKind};
+
+/// Dense object handle into [`Ag::objects`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjId(pub u32);
+
+impl ObjId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Dense register handle: registers of all RegisterFiles, interned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegId(pub u32);
+
+impl RegId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum AgError {
+    #[error("duplicate object name `{0}`")]
+    DuplicateName(String),
+    #[error("duplicate register name `{0}` (registers are global identifiers)")]
+    DuplicateRegister(String),
+    #[error("unknown object `{0}`")]
+    UnknownObject(String),
+    #[error(transparent)]
+    Edge(#[from] EdgeError),
+    #[error("graph validation: {0}")]
+    Invalid(String),
+}
+
+/// The architecture graph: objects + typed edges + the global register
+/// namespace (the paper's registers are unique names; we intern them to
+/// dense [`RegId`]s so simulator state is flat arrays, not hash maps).
+#[derive(Debug, Clone, Default)]
+pub struct Ag {
+    pub objects: Vec<Object>,
+    pub edges: Vec<Edge>,
+    by_name: HashMap<String, ObjId>,
+    /// reg name -> id
+    reg_by_name: HashMap<String, RegId>,
+    /// reg id -> (owning RF, index within RF, name, initial value)
+    regs: Vec<RegInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegInfo {
+    pub rf: ObjId,
+    pub index_in_rf: u32,
+    pub name: String,
+    pub init: Data,
+}
+
+impl Ag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an object; register-file registers join the global namespace.
+    pub fn add(&mut self, obj: Object) -> Result<ObjId, AgError> {
+        if self.by_name.contains_key(&obj.name) {
+            return Err(AgError::DuplicateName(obj.name));
+        }
+        let id = ObjId(self.objects.len() as u32);
+        if let ObjectKind::RegisterFile(rf) = &obj.kind {
+            for (i, (reg_name, init)) in rf.registers.iter().enumerate() {
+                if self.reg_by_name.contains_key(reg_name) {
+                    return Err(AgError::DuplicateRegister(reg_name.clone()));
+                }
+                let rid = RegId(self.regs.len() as u32);
+                self.reg_by_name.insert(reg_name.clone(), rid);
+                self.regs.push(RegInfo {
+                    rf: id,
+                    index_in_rf: i as u32,
+                    name: reg_name.clone(),
+                    init: init.clone(),
+                });
+            }
+        }
+        self.by_name.insert(obj.name.clone(), id);
+        self.objects.push(obj);
+        Ok(id)
+    }
+
+    /// Add a validated edge (the `@generate` check of Listing 1).
+    pub fn connect(&mut self, src: ObjId, dst: ObjId, kind: EdgeKind) -> Result<(), AgError> {
+        let s = &self.objects[src.idx()];
+        let d = &self.objects[dst.idx()];
+        check_edge(kind, (&s.name, &s.kind), (&d.name, &d.kind))?;
+        self.edges.push(Edge { src, dst, kind });
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ lookups
+
+    pub fn id(&self, name: &str) -> Option<ObjId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn obj(&self, id: ObjId) -> &Object {
+        &self.objects[id.idx()]
+    }
+
+    pub fn kind(&self, id: ObjId) -> &ObjectKind {
+        &self.objects[id.idx()].kind
+    }
+
+    pub fn name(&self, id: ObjId) -> &str {
+        &self.objects[id.idx()].name
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    // ------------------------------------------------------- registers
+
+    pub fn reg_id(&self, name: &str) -> Option<RegId> {
+        self.reg_by_name.get(name).copied()
+    }
+
+    pub fn reg(&self, id: RegId) -> &RegInfo {
+        &self.regs[id.idx()]
+    }
+
+    pub fn reg_count(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn regs(&self) -> &[RegInfo] {
+        &self.regs
+    }
+
+    // ------------------------------------------------------ adjacency
+
+    pub fn edges_from(&self, id: ObjId, kind: EdgeKind) -> impl Iterator<Item = ObjId> + '_ {
+        self.edges
+            .iter()
+            .filter(move |e| e.src == id && e.kind == kind)
+            .map(|e| e.dst)
+    }
+
+    pub fn edges_to(&self, id: ObjId, kind: EdgeKind) -> impl Iterator<Item = ObjId> + '_ {
+        self.edges
+            .iter()
+            .filter(move |e| e.dst == id && e.kind == kind)
+            .map(|e| e.src)
+    }
+
+    /// FunctionalUnits contained by an execute stage.
+    pub fn contained_fus(&self, es: ObjId) -> Vec<ObjId> {
+        self.edges_from(es, EdgeKind::Contains).collect()
+    }
+
+    /// Pipeline stages this stage can forward to.
+    pub fn forward_targets(&self, ps: ObjId) -> Vec<ObjId> {
+        self.edges_from(ps, EdgeKind::Forward).collect()
+    }
+
+    /// RegisterFiles a functional unit may read (READ_DATA rf -> fu).
+    pub fn readable_rfs(&self, fu: ObjId) -> Vec<ObjId> {
+        self.edges_to(fu, EdgeKind::ReadData)
+            .filter(|&o| self.kind(o).is_register_file())
+            .collect()
+    }
+
+    /// RegisterFiles a functional unit may write (WRITE_DATA fu -> rf).
+    pub fn writable_rfs(&self, fu: ObjId) -> Vec<ObjId> {
+        self.edges_from(fu, EdgeKind::WriteData)
+            .filter(|&o| self.kind(o).is_register_file())
+            .collect()
+    }
+
+    /// DataStorages reachable from a memory access unit (either direction:
+    /// READ_DATA storage -> mau, or WRITE_DATA mau -> storage).
+    pub fn storages_of_mau(&self, mau: ObjId) -> Vec<ObjId> {
+        let mut v: Vec<ObjId> = self
+            .edges_to(mau, EdgeKind::ReadData)
+            .filter(|&o| self.kind(o).is_data_storage())
+            .chain(
+                self.edges_from(mau, EdgeKind::WriteData)
+                    .filter(|&o| self.kind(o).is_data_storage()),
+            )
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// The backing store of a cache (WRITE_DATA cache -> storage, or
+    /// READ_DATA storage -> cache).
+    pub fn backing_of(&self, cache: ObjId) -> Option<ObjId> {
+        self.edges_from(cache, EdgeKind::WriteData)
+            .chain(self.edges_to(cache, EdgeKind::ReadData))
+            .find(|&o| self.kind(o).is_data_storage() && o != cache)
+    }
+
+    /// All InstructionFetchStage objects (a model may have several
+    /// independent fetch front-ends).
+    pub fn fetch_stages(&self) -> Vec<ObjId> {
+        (0..self.objects.len() as u32)
+            .map(ObjId)
+            .filter(|&o| {
+                matches!(self.kind(o), ObjectKind::InstructionFetchStage(_))
+            })
+            .collect()
+    }
+
+    /// The instruction memory of a fetch stage: the storage its contained
+    /// InstructionMemoryAccessUnit reads.
+    pub fn instruction_memory(&self, ifs: ObjId) -> Option<ObjId> {
+        let imau = self
+            .contained_fus(ifs)
+            .into_iter()
+            .find(|&f| {
+                matches!(self.kind(f), ObjectKind::InstructionMemoryAccessUnit(_))
+            })?;
+        self.edges_to(imau, EdgeKind::ReadData)
+            .find(|&o| self.kind(o).is_data_storage())
+    }
+
+    /// Does `addr` fall in a MemoryInterface's served range?  Caches accept
+    /// any address their backing chain accepts.
+    pub fn storage_accepts(&self, storage: ObjId, addr: u64) -> bool {
+        match self.kind(storage) {
+            k if k.is_memory_interface() => {
+                let (lo, hi) = k.address_range().unwrap();
+                (lo..hi).contains(&addr)
+            }
+            ObjectKind::Cache(_) => self
+                .backing_of(storage)
+                .is_some_and(|b| self.storage_accepts(b, addr)),
+            _ => false,
+        }
+    }
+
+    // ------------------------------------------------------ validation
+
+    /// Whole-graph validation beyond per-edge checks (the rest of the
+    /// `@generate` contract): structural invariants every simulatable AG
+    /// must satisfy.
+    pub fn validate(&self) -> Result<(), AgError> {
+        for ifs in self.fetch_stages() {
+            let imaus: Vec<_> = self
+                .contained_fus(ifs)
+                .into_iter()
+                .filter(|&f| {
+                    matches!(self.kind(f), ObjectKind::InstructionMemoryAccessUnit(_))
+                })
+                .collect();
+            if imaus.len() != 1 {
+                return Err(AgError::Invalid(format!(
+                    "fetch stage `{}` must contain exactly one InstructionMemoryAccessUnit (found {})",
+                    self.name(ifs),
+                    imaus.len()
+                )));
+            }
+            if self.instruction_memory(ifs).is_none() {
+                return Err(AgError::Invalid(format!(
+                    "fetch stage `{}` has no instruction memory (READ_DATA storage -> imau missing)",
+                    self.name(ifs)
+                )));
+            }
+        }
+        // Every non-IMAU functional unit must be contained by exactly one
+        // execute stage, otherwise it can never receive instructions.
+        for id in (0..self.objects.len() as u32).map(ObjId) {
+            let k = self.kind(id);
+            if k.is_functional_unit() {
+                let parents = self
+                    .edges_to(id, EdgeKind::Contains)
+                    .count();
+                if parents != 1 {
+                    return Err(AgError::Invalid(format!(
+                        "functional unit `{}` contained by {} execute stages (need exactly 1)",
+                        self.name(id),
+                        parents
+                    )));
+                }
+            }
+        }
+        // Caches must have a backing store.
+        for id in (0..self.objects.len() as u32).map(ObjId) {
+            if self.kind(id).is_cache() && self.backing_of(id).is_none() {
+                return Err(AgError::Invalid(format!(
+                    "cache `{}` has no backing store",
+                    self.name(id)
+                )));
+            }
+        }
+        // Port-count budget: storages may not have more MAUs attached than
+        // `read_write_ports`.
+        for id in (0..self.objects.len() as u32).map(ObjId) {
+            if let Some(p) = self.kind(id).storage_params() {
+                let maus = self
+                    .edges_to(id, EdgeKind::WriteData)
+                    .chain(self.edges_from(id, EdgeKind::ReadData))
+                    .filter(|&o| self.kind(o).is_memory_access_unit())
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .len();
+                if maus > p.read_write_ports {
+                    return Err(AgError::Invalid(format!(
+                        "storage `{}` has {} MAUs attached but only {} ports",
+                        self.name(id),
+                        maus,
+                        p.read_write_ports
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Graph statistics line for the CLI's `validate` subcommand.
+    pub fn summary(&self) -> String {
+        let mut counts: HashMap<&'static str, usize> = HashMap::new();
+        for o in &self.objects {
+            *counts.entry(o.kind.class_name()).or_default() += 1;
+        }
+        let mut pairs: Vec<_> = counts.into_iter().collect();
+        pairs.sort();
+        let classes = pairs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "{} objects, {} edges, {} registers | {}",
+            self.objects.len(),
+            self.edges.len(),
+            self.regs.len(),
+            classes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::latency::Latency;
+    use crate::acadl_core::object::build;
+
+    fn tiny_ag() -> (Ag, ObjId, ObjId, ObjId) {
+        let mut ag = Ag::new();
+        let ex = ag.add(build::execute_stage("ex0", 1)).unwrap();
+        let fu = ag
+            .add(build::functional_unit("fu0", &["add"], Latency::Const(1)))
+            .unwrap();
+        let rf = ag
+            .add(build::register_file(
+                "rf0",
+                32,
+                vec![
+                    ("r0".into(), Data::int(32, 0)),
+                    ("r1".into(), Data::int(32, 7)),
+                ],
+            ))
+            .unwrap();
+        ag.connect(ex, fu, EdgeKind::Contains).unwrap();
+        ag.connect(rf, fu, EdgeKind::ReadData).unwrap();
+        ag.connect(fu, rf, EdgeKind::WriteData).unwrap();
+        (ag, ex, fu, rf)
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut ag = Ag::new();
+        ag.add(build::execute_stage("x", 1)).unwrap();
+        assert!(matches!(
+            ag.add(build::execute_stage("x", 1)),
+            Err(AgError::DuplicateName(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_registers_rejected() {
+        let mut ag = Ag::new();
+        ag.add(build::register_file(
+            "a",
+            32,
+            vec![("r0".into(), Data::int(32, 0))],
+        ))
+        .unwrap();
+        assert!(matches!(
+            ag.add(build::register_file(
+                "b",
+                32,
+                vec![("r0".into(), Data::int(32, 0))],
+            )),
+            Err(AgError::DuplicateRegister(_))
+        ));
+    }
+
+    #[test]
+    fn register_interning() {
+        let (ag, _, _, rf) = tiny_ag();
+        let r1 = ag.reg_id("r1").unwrap();
+        assert_eq!(ag.reg(r1).rf, rf);
+        assert_eq!(ag.reg(r1).index_in_rf, 1);
+        assert_eq!(ag.reg(r1).init.payload.as_int(), 7);
+        assert_eq!(ag.reg_count(), 2);
+        assert!(ag.reg_id("r9").is_none());
+    }
+
+    #[test]
+    fn adjacency_queries() {
+        let (ag, ex, fu, rf) = tiny_ag();
+        assert_eq!(ag.contained_fus(ex), vec![fu]);
+        assert_eq!(ag.readable_rfs(fu), vec![rf]);
+        assert_eq!(ag.writable_rfs(fu), vec![rf]);
+        assert!(ag.forward_targets(ex).is_empty());
+    }
+
+    #[test]
+    fn invalid_edge_rejected_by_connect() {
+        let (mut ag, ex, _fu, rf) = tiny_ag();
+        let err = ag.connect(rf, ex, EdgeKind::Forward).unwrap_err();
+        assert!(err.to_string().contains("FORWARD"));
+    }
+
+    #[test]
+    fn validate_catches_orphan_fu() {
+        let mut ag = Ag::new();
+        ag.add(build::functional_unit("fu0", &["add"], Latency::Const(1)))
+            .unwrap();
+        assert!(ag.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_cache_without_backing() {
+        let mut ag = Ag::new();
+        ag.add(crate::arch::parts::cache_default("c0")).unwrap();
+        assert!(ag.validate().is_err());
+    }
+
+    #[test]
+    fn summary_counts_classes() {
+        let (ag, ..) = tiny_ag();
+        let s = ag.summary();
+        assert!(s.contains("ExecuteStage=1"), "{s}");
+        assert!(s.contains("2 registers"), "{s}");
+    }
+}

@@ -1,0 +1,438 @@
+//! Latency values: constant cycle counts or expressions evaluated during
+//! performance estimation.
+//!
+//! The paper (§3): *"latency describes a time delta in clock cycles. It can
+//! be specified as an integer value or a string containing a function that
+//! is evaluated during the performance estimation."*  We implement the
+//! string form as a small arithmetic expression language over named
+//! variables (e.g. `"4 + size / 16"`), parsed once at model-build time and
+//! evaluated cheaply (no allocation) inside the simulation loop.
+//!
+//! Grammar (integer arithmetic, C precedence):
+//! ```text
+//! expr   := term (('+'|'-') term)*
+//! term   := factor (('*'|'/'|'%') factor)*
+//! factor := NUMBER | IDENT | IDENT '(' expr (',' expr)* ')' | '(' expr ')' | '-' factor
+//! ```
+//! Built-in functions: `min`, `max`, `ceil_div`, `log2` (ceil), `pow2`.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use thiserror::Error;
+
+/// A latency in clock cycles: constant, or an expression over context
+/// variables supplied by the evaluating hardware object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Latency {
+    /// Fixed number of clock cycles.
+    Const(u64),
+    /// Compiled expression, evaluated against a [`LatencyCtx`].
+    Expr(Expr),
+}
+
+impl Latency {
+    /// Parse either an integer literal or an expression string.
+    pub fn parse(s: &str) -> Result<Self, LatencyError> {
+        let t = s.trim();
+        if let Ok(v) = t.parse::<u64>() {
+            return Ok(Latency::Const(v));
+        }
+        Ok(Latency::Expr(Expr::parse(t)?))
+    }
+
+    /// Evaluate with an empty context; errors if variables are referenced.
+    pub fn eval_const(&self) -> Result<u64, LatencyError> {
+        self.eval(&LatencyCtx::default())
+    }
+
+    /// Evaluate against `ctx`. Division by zero and unknown variables error.
+    pub fn eval(&self, ctx: &LatencyCtx) -> Result<u64, LatencyError> {
+        match self {
+            Latency::Const(v) => Ok(*v),
+            Latency::Expr(e) => {
+                let v = e.eval(ctx)?;
+                u64::try_from(v).map_err(|_| LatencyError::Negative(v))
+            }
+        }
+    }
+}
+
+impl From<u64> for Latency {
+    fn from(v: u64) -> Self {
+        Latency::Const(v)
+    }
+}
+
+impl fmt::Display for Latency {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Latency::Const(v) => write!(f, "{v}"),
+            Latency::Expr(e) => write!(f, "{}", e.src),
+        }
+    }
+}
+
+/// Variable bindings for expression evaluation (e.g. `size`, `rows`).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyCtx {
+    vars: HashMap<String, i64>,
+}
+
+impl LatencyCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, name: &str, value: i64) -> Self {
+        self.vars.insert(name.to_string(), value);
+        self
+    }
+
+    pub fn set(&mut self, name: &str, value: i64) {
+        self.vars.insert(name.to_string(), value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<i64> {
+        self.vars.get(name).copied()
+    }
+}
+
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum LatencyError {
+    #[error("latency parse error at byte {0}: {1}")]
+    Parse(usize, String),
+    #[error("unknown variable `{0}` in latency expression")]
+    UnknownVar(String),
+    #[error("unknown function `{0}` in latency expression")]
+    UnknownFn(String),
+    #[error("wrong arity for `{0}`: expected {1}, got {2}")]
+    Arity(String, usize, usize),
+    #[error("division by zero in latency expression")]
+    DivZero,
+    #[error("latency evaluated to negative value {0}")]
+    Negative(i64),
+}
+
+/// A compiled latency expression (postfix program, allocation-free eval via
+/// a caller-scratch stack would be possible; a small Vec is fine off the
+/// inner loop — FU latencies are evaluated once per dispatched instruction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Expr {
+    src: String,
+    code: Vec<Op>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Op {
+    Push(i64),
+    Var(String),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Neg,
+    Min,
+    Max,
+    CeilDiv,
+    Log2,
+    Pow2,
+}
+
+impl Expr {
+    pub fn parse(src: &str) -> Result<Self, LatencyError> {
+        let mut p = Parser {
+            bytes: src.as_bytes(),
+            pos: 0,
+            code: Vec::new(),
+        };
+        p.expr()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(LatencyError::Parse(p.pos, "trailing input".into()));
+        }
+        Ok(Expr {
+            src: src.to_string(),
+            code: p.code,
+        })
+    }
+
+    pub fn eval(&self, ctx: &LatencyCtx) -> Result<i64, LatencyError> {
+        let mut stack: Vec<i64> = Vec::with_capacity(8);
+        for op in &self.code {
+            match op {
+                Op::Push(v) => stack.push(*v),
+                Op::Var(name) => stack.push(
+                    ctx.get(name)
+                        .ok_or_else(|| LatencyError::UnknownVar(name.clone()))?,
+                ),
+                Op::Neg => {
+                    let a = stack.pop().unwrap();
+                    stack.push(-a);
+                }
+                Op::Log2 => {
+                    // ceil(log2(a)), with a clamped to >= 1.
+                    let a = stack.pop().unwrap().max(1) as u64;
+                    let v = if a <= 1 { 0 } else { 64 - (a - 1).leading_zeros() as i64 };
+                    stack.push(v);
+                }
+                Op::Pow2 => {
+                    let a = stack.pop().unwrap().clamp(0, 62);
+                    stack.push(1i64 << a);
+                }
+                binop => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    let v = match binop {
+                        Op::Add => a.wrapping_add(b),
+                        Op::Sub => a.wrapping_sub(b),
+                        Op::Mul => a.wrapping_mul(b),
+                        Op::Div => {
+                            if b == 0 {
+                                return Err(LatencyError::DivZero);
+                            }
+                            a / b
+                        }
+                        Op::Rem => {
+                            if b == 0 {
+                                return Err(LatencyError::DivZero);
+                            }
+                            a % b
+                        }
+                        Op::Min => a.min(b),
+                        Op::Max => a.max(b),
+                        Op::CeilDiv => {
+                            if b == 0 {
+                                return Err(LatencyError::DivZero);
+                            }
+                            (a + b - 1) / b
+                        }
+                        _ => unreachable!(),
+                    };
+                    stack.push(v);
+                }
+            }
+        }
+        debug_assert_eq!(stack.len(), 1);
+        Ok(stack.pop().unwrap())
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    code: Vec<Op>,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expr(&mut self) -> Result<(), LatencyError> {
+        self.term()?;
+        while let Some(c) = self.peek() {
+            match c {
+                b'+' => {
+                    self.pos += 1;
+                    self.term()?;
+                    self.code.push(Op::Add);
+                }
+                b'-' => {
+                    self.pos += 1;
+                    self.term()?;
+                    self.code.push(Op::Sub);
+                }
+                _ => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn term(&mut self) -> Result<(), LatencyError> {
+        self.factor()?;
+        while let Some(c) = self.peek() {
+            match c {
+                b'*' => {
+                    self.pos += 1;
+                    self.factor()?;
+                    self.code.push(Op::Mul);
+                }
+                b'/' => {
+                    self.pos += 1;
+                    self.factor()?;
+                    self.code.push(Op::Div);
+                }
+                b'%' => {
+                    self.pos += 1;
+                    self.factor()?;
+                    self.code.push(Op::Rem);
+                }
+                _ => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn factor(&mut self) -> Result<(), LatencyError> {
+        match self.peek() {
+            Some(b'-') => {
+                self.pos += 1;
+                self.factor()?;
+                self.code.push(Op::Neg);
+                Ok(())
+            }
+            Some(b'(') => {
+                self.pos += 1;
+                self.expr()?;
+                self.expect(b')')
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.pos;
+                while self
+                    .bytes
+                    .get(self.pos)
+                    .is_some_and(|b| b.is_ascii_digit())
+                {
+                    self.pos += 1;
+                }
+                let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                let v: i64 = text
+                    .parse()
+                    .map_err(|_| LatencyError::Parse(start, "bad number".into()))?;
+                self.code.push(Op::Push(v));
+                Ok(())
+            }
+            Some(c) if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = self.pos;
+                while self
+                    .bytes
+                    .get(self.pos)
+                    .is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
+                {
+                    self.pos += 1;
+                }
+                let name =
+                    std::str::from_utf8(&self.bytes[start..self.pos]).unwrap().to_string();
+                if self.peek() == Some(b'(') {
+                    self.pos += 1;
+                    let mut argc = 0usize;
+                    if self.peek() != Some(b')') {
+                        loop {
+                            self.expr()?;
+                            argc += 1;
+                            match self.peek() {
+                                Some(b',') => {
+                                    self.pos += 1;
+                                }
+                                _ => break,
+                            }
+                        }
+                    }
+                    self.expect(b')')?;
+                    let (op, arity) = match name.as_str() {
+                        "min" => (Op::Min, 2),
+                        "max" => (Op::Max, 2),
+                        "ceil_div" => (Op::CeilDiv, 2),
+                        "log2" => (Op::Log2, 1),
+                        "pow2" => (Op::Pow2, 1),
+                        _ => return Err(LatencyError::UnknownFn(name)),
+                    };
+                    if argc != arity {
+                        return Err(LatencyError::Arity(name, arity, argc));
+                    }
+                    self.code.push(op);
+                } else {
+                    self.code.push(Op::Var(name));
+                }
+                Ok(())
+            }
+            _ => Err(LatencyError::Parse(self.pos, "expected factor".into())),
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), LatencyError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(LatencyError::Parse(self.pos, format!("expected `{}`", c as char)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(src: &str, ctx: &LatencyCtx) -> i64 {
+        Expr::parse(src).unwrap().eval(ctx).unwrap()
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(Latency::parse("7").unwrap(), Latency::Const(7));
+        assert_eq!(Latency::parse(" 42 ").unwrap().eval_const().unwrap(), 42);
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        let ctx = LatencyCtx::default();
+        assert_eq!(eval("1 + 2 * 3", &ctx), 7);
+        assert_eq!(eval("(1 + 2) * 3", &ctx), 9);
+        assert_eq!(eval("10 / 3", &ctx), 3);
+        assert_eq!(eval("10 % 3", &ctx), 1);
+        assert_eq!(eval("-4 + 10", &ctx), 6);
+    }
+
+    #[test]
+    fn variables() {
+        let ctx = LatencyCtx::new().with("size", 64).with("width", 16);
+        assert_eq!(eval("4 + size / width", &ctx), 8);
+        assert_eq!(
+            Expr::parse("missing + 1").unwrap().eval(&ctx),
+            Err(LatencyError::UnknownVar("missing".into()))
+        );
+    }
+
+    #[test]
+    fn functions() {
+        let ctx = LatencyCtx::new().with("n", 100);
+        assert_eq!(eval("min(3, 5)", &ctx), 3);
+        assert_eq!(eval("max(3, 5)", &ctx), 5);
+        assert_eq!(eval("ceil_div(n, 32)", &ctx), 4);
+        assert_eq!(eval("pow2(4)", &ctx), 16);
+        assert_eq!(eval("log2(8)", &ctx), 3);
+        assert_eq!(eval("log2(9)", &ctx), 4);
+        assert_eq!(eval("log2(1)", &ctx), 0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Expr::parse("1 +").is_err());
+        assert!(Expr::parse("foo(1)").is_err());
+        assert!(Expr::parse("min(1)").is_err());
+        assert_eq!(
+            Expr::parse("1/0").unwrap().eval(&LatencyCtx::default()),
+            Err(LatencyError::DivZero)
+        );
+        // Negative result rejected at the Latency level.
+        let l = Latency::parse("2 - 5").unwrap();
+        assert!(matches!(l.eval_const(), Err(LatencyError::Negative(-3))));
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let l = Latency::parse("4 + size / 16").unwrap();
+        assert_eq!(l.to_string(), "4 + size / 16");
+        assert_eq!(Latency::Const(3).to_string(), "3");
+    }
+}

@@ -1,0 +1,21 @@
+//! The ACADL language core: objects, typed edges, architecture graphs,
+//! templates with dangling edges, and latency expressions.
+//!
+//! This is the Rust equivalent of the paper's C++ core + Python front-end
+//! (§3–§4): twelve classes, two interfaces, and one virtual base class
+//! (Fig. 1) are modeled as [`object::ObjectKind`] variants; the class
+//! hierarchy (e.g. `ExecuteStage : PipelineStage`) is exposed through `is_*`
+//! predicate methods used by the edge-validity rules in [`edge`].
+
+pub mod data;
+pub mod edge;
+pub mod graph;
+pub mod latency;
+pub mod object;
+pub mod template;
+
+pub use data::{Data, Value};
+pub use edge::{Edge, EdgeKind};
+pub use graph::{Ag, AgError, ObjId};
+pub use latency::Latency;
+pub use object::{Object, ObjectKind};

@@ -1,0 +1,430 @@
+//! The ACADL class set (Fig. 1): twelve classes, two interfaces, one virtual
+//! base class, modeled as [`ObjectKind`] variants plus `is_*` hierarchy
+//! predicates.
+//!
+//! | Paper class                  | Here                              |
+//! |------------------------------|-----------------------------------|
+//! | `ACADLObject` (virtual base) | [`Object`] (`name` + kind)        |
+//! | `PipelineStage`              | [`PipelineStage`]                 |
+//! | `ExecuteStage`               | [`ExecuteStage`]                  |
+//! | `InstructionFetchStage`      | [`InstructionFetchStage`]         |
+//! | `FunctionalUnit`             | [`FunctionalUnit`]                |
+//! | `MemoryAccessUnit`           | [`MemoryAccessUnit`]              |
+//! | `InstructionMemoryAccessUnit`| [`InstructionMemoryAccessUnit`]   |
+//! | `RegisterFile`               | [`RegisterFile`]                  |
+//! | `DataStorage` (virtual)      | [`DataStorageParams`] (composed)  |
+//! | `MemoryInterface` (iface)    | [`Sram`] / [`Dram`] share it      |
+//! | `SRAM`, `DRAM`               | [`Sram`], [`Dram`]                |
+//! | `CacheInterface` (iface)     | [`SetAssociativeCache`]           |
+//! | `SetAssociativeCache`        | [`SetAssociativeCache`]           |
+//!
+//! `Data` and `Instruction` live in [`super::data`] and [`crate::isa`].
+
+use std::collections::BTreeSet;
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::latency::Latency;
+use crate::mem::cache::ReplacementPolicy;
+
+/// Forwarding stage: holds an instruction for `latency` cycles, then
+/// forwards it to a connected, ready `PipelineStage` (§3).
+#[derive(Debug, Clone)]
+pub struct PipelineStage {
+    pub latency: Latency,
+}
+
+/// A `PipelineStage` that additionally contains `FunctionalUnit`s; when a
+/// contained FU supports a received instruction, the stage hands it over
+/// and its own latency is *not* accumulated (§3).
+#[derive(Debug, Clone)]
+pub struct ExecuteStage {
+    pub latency: Latency,
+}
+
+/// Fetches instructions through its contained `InstructionMemoryAccessUnit`
+/// into an issue buffer and forwards them — possibly several per cycle,
+/// out-of-order — to ready pipeline stages (§3, Fig. 9).
+#[derive(Debug, Clone)]
+pub struct InstructionFetchStage {
+    pub latency: Latency,
+    /// Maximum instructions resident in the issue buffer; also the
+    /// upper bound on instructions issued in one clock cycle.
+    pub issue_buffer_size: usize,
+}
+
+/// Executes instructions whose `operation` is in `to_process`, taking
+/// `latency` cycles once all data dependencies are resolved (§3).
+#[derive(Debug, Clone)]
+pub struct FunctionalUnit {
+    /// Supported instruction mnemonics.
+    pub to_process: BTreeSet<String>,
+    pub latency: Latency,
+}
+
+/// A `FunctionalUnit` that accesses `RegisterFile`s *and* `DataStorage`s
+/// (loads/stores) (§3).
+#[derive(Debug, Clone)]
+pub struct MemoryAccessUnit {
+    pub to_process: BTreeSet<String>,
+    pub latency: Latency,
+}
+
+/// A `MemoryAccessUnit` specialized for fetching instructions from the
+/// instruction memory (`fetch(address, length)`) (§3).
+#[derive(Debug, Clone)]
+pub struct InstructionMemoryAccessUnit {
+    pub latency: Latency,
+}
+
+/// Named registers with a fixed per-register width (§3).
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    /// Size of each register in bits.
+    pub data_width: u32,
+    /// Ordered (name, initial value) pairs; order defines dense indices.
+    pub registers: Vec<(String, Data)>,
+}
+
+/// Attributes shared by every `DataStorage` (§3, virtual base).
+#[derive(Debug, Clone)]
+pub struct DataStorageParams {
+    /// Bit-length of one data word.
+    pub data_width: u32,
+    /// Read/write requests that can be in flight simultaneously
+    /// (one request slot each, Fig. 12–13).
+    pub max_concurrent_requests: usize,
+    /// How many `MemoryAccessUnit`s may connect.
+    pub read_write_ports: usize,
+    /// Data words transferred per transaction (>1 = wide port).
+    pub port_width: usize,
+}
+
+impl Default for DataStorageParams {
+    fn default() -> Self {
+        DataStorageParams {
+            data_width: 32,
+            max_concurrent_requests: 1,
+            read_write_ports: 1,
+            port_width: 1,
+        }
+    }
+}
+
+/// On-chip scratchpad memory with flat read/write latencies
+/// (`MemoryInterface` implementation).
+#[derive(Debug, Clone)]
+pub struct Sram {
+    pub ds: DataStorageParams,
+    pub read_latency: Latency,
+    pub write_latency: Latency,
+    /// Inclusive start, exclusive end byte addresses served.
+    pub address_range: (u64, u64),
+}
+
+/// Off-chip DRAM with banked row-buffer timing (t_RCD / t_RP / t_RAS),
+/// the paper's stateful-latency `DRAM` class. The timing state machine
+/// itself lives in [`crate::mem::dram`].
+#[derive(Debug, Clone)]
+pub struct Dram {
+    pub ds: DataStorageParams,
+    pub address_range: (u64, u64),
+    /// Number of banks; bank index = (addr / row_bytes) % banks.
+    pub banks: usize,
+    /// Row size in bytes (row-buffer granularity).
+    pub row_bytes: u64,
+    /// Activate-to-read/write delay (cycles).
+    pub t_rcd: u64,
+    /// Precharge delay (cycles).
+    pub t_rp: u64,
+    /// Minimum row-active time (cycles).
+    pub t_ras: u64,
+    /// Column access latency on a row hit (cycles).
+    pub t_cas: u64,
+}
+
+/// Set-associative cache (`CacheInterface` + `SetAssociativeCache`).
+/// The hit/miss state machine lives in [`crate::mem::cache`].
+#[derive(Debug, Clone)]
+pub struct SetAssociativeCache {
+    pub ds: DataStorageParams,
+    pub write_allocate: bool,
+    pub write_back: bool,
+    pub miss_latency: Latency,
+    pub hit_latency: Latency,
+    /// Cache line size in bytes.
+    pub cache_line_size: u64,
+    pub replacement_policy: ReplacementPolicy,
+    pub sets: usize,
+    pub ways: usize,
+}
+
+/// One modeled hardware element: the virtual `ACADLObject` base (unique
+/// `name`) plus its concrete class.
+#[derive(Debug, Clone)]
+pub struct Object {
+    pub name: String,
+    pub kind: ObjectKind,
+}
+
+/// The concrete ACADL class of an [`Object`].
+#[derive(Debug, Clone)]
+pub enum ObjectKind {
+    PipelineStage(PipelineStage),
+    ExecuteStage(ExecuteStage),
+    InstructionFetchStage(InstructionFetchStage),
+    FunctionalUnit(FunctionalUnit),
+    MemoryAccessUnit(MemoryAccessUnit),
+    InstructionMemoryAccessUnit(InstructionMemoryAccessUnit),
+    RegisterFile(RegisterFile),
+    Sram(Sram),
+    Dram(Dram),
+    Cache(SetAssociativeCache),
+}
+
+impl ObjectKind {
+    /// Class name as in the paper's Fig. 1 (diagnostics, error messages).
+    pub fn class_name(&self) -> &'static str {
+        match self {
+            ObjectKind::PipelineStage(_) => "PipelineStage",
+            ObjectKind::ExecuteStage(_) => "ExecuteStage",
+            ObjectKind::InstructionFetchStage(_) => "InstructionFetchStage",
+            ObjectKind::FunctionalUnit(_) => "FunctionalUnit",
+            ObjectKind::MemoryAccessUnit(_) => "MemoryAccessUnit",
+            ObjectKind::InstructionMemoryAccessUnit(_) => "InstructionMemoryAccessUnit",
+            ObjectKind::RegisterFile(_) => "RegisterFile",
+            ObjectKind::Sram(_) => "SRAM",
+            ObjectKind::Dram(_) => "DRAM",
+            ObjectKind::Cache(_) => "SetAssociativeCache",
+        }
+    }
+
+    // ----- class-hierarchy predicates (Fig. 1 inheritance) -----
+
+    /// `PipelineStage` or any subclass (`ExecuteStage`,
+    /// `InstructionFetchStage`).
+    pub fn is_pipeline_stage(&self) -> bool {
+        matches!(
+            self,
+            ObjectKind::PipelineStage(_)
+                | ObjectKind::ExecuteStage(_)
+                | ObjectKind::InstructionFetchStage(_)
+        )
+    }
+
+    /// `ExecuteStage` or its subclass `InstructionFetchStage`.
+    pub fn is_execute_stage(&self) -> bool {
+        matches!(
+            self,
+            ObjectKind::ExecuteStage(_) | ObjectKind::InstructionFetchStage(_)
+        )
+    }
+
+    /// `FunctionalUnit` or any subclass (`MemoryAccessUnit`,
+    /// `InstructionMemoryAccessUnit`).
+    pub fn is_functional_unit(&self) -> bool {
+        matches!(
+            self,
+            ObjectKind::FunctionalUnit(_)
+                | ObjectKind::MemoryAccessUnit(_)
+                | ObjectKind::InstructionMemoryAccessUnit(_)
+        )
+    }
+
+    /// `MemoryAccessUnit` or its subclass.
+    pub fn is_memory_access_unit(&self) -> bool {
+        matches!(
+            self,
+            ObjectKind::MemoryAccessUnit(_) | ObjectKind::InstructionMemoryAccessUnit(_)
+        )
+    }
+
+    /// Anything inheriting the virtual `DataStorage` base.
+    pub fn is_data_storage(&self) -> bool {
+        matches!(
+            self,
+            ObjectKind::Sram(_) | ObjectKind::Dram(_) | ObjectKind::Cache(_)
+        )
+    }
+
+    /// Implements the `MemoryInterface` (address-range-bearing storages).
+    pub fn is_memory_interface(&self) -> bool {
+        matches!(self, ObjectKind::Sram(_) | ObjectKind::Dram(_))
+    }
+
+    pub fn is_cache(&self) -> bool {
+        matches!(self, ObjectKind::Cache(_))
+    }
+
+    pub fn is_register_file(&self) -> bool {
+        matches!(self, ObjectKind::RegisterFile(_))
+    }
+
+    /// Supported mnemonics, for FunctionalUnit-like classes.
+    pub fn to_process(&self) -> Option<&BTreeSet<String>> {
+        match self {
+            ObjectKind::FunctionalUnit(f) => Some(&f.to_process),
+            ObjectKind::MemoryAccessUnit(m) => Some(&m.to_process),
+            _ => None,
+        }
+    }
+
+    /// The `latency` attribute shared by most classes (§6: every object
+    /// with `latency` gets a `t`/`ready` pair at simulation init).
+    pub fn latency(&self) -> Option<&Latency> {
+        match self {
+            ObjectKind::PipelineStage(p) => Some(&p.latency),
+            ObjectKind::ExecuteStage(e) => Some(&e.latency),
+            ObjectKind::InstructionFetchStage(i) => Some(&i.latency),
+            ObjectKind::FunctionalUnit(f) => Some(&f.latency),
+            ObjectKind::MemoryAccessUnit(m) => Some(&m.latency),
+            ObjectKind::InstructionMemoryAccessUnit(i) => Some(&i.latency),
+            ObjectKind::RegisterFile(_) => None,
+            ObjectKind::Sram(_) | ObjectKind::Dram(_) | ObjectKind::Cache(_) => None,
+        }
+    }
+
+    /// Data-storage parameters, for DataStorage subclasses.
+    pub fn storage_params(&self) -> Option<&DataStorageParams> {
+        match self {
+            ObjectKind::Sram(s) => Some(&s.ds),
+            ObjectKind::Dram(d) => Some(&d.ds),
+            ObjectKind::Cache(c) => Some(&c.ds),
+            _ => None,
+        }
+    }
+
+    /// Byte-address range served, for `MemoryInterface` implementors.
+    pub fn address_range(&self) -> Option<(u64, u64)> {
+        match self {
+            ObjectKind::Sram(s) => Some(s.address_range),
+            ObjectKind::Dram(d) => Some(d.address_range),
+            _ => None,
+        }
+    }
+}
+
+impl Object {
+    pub fn new(name: impl Into<String>, kind: ObjectKind) -> Self {
+        Object {
+            name: name.into(),
+            kind,
+        }
+    }
+}
+
+/// Builder helpers mirroring the Python front-end constructors (Listing 1).
+pub mod build {
+    use super::*;
+
+    pub fn pipeline_stage(name: &str, latency: u64) -> Object {
+        Object::new(
+            name,
+            ObjectKind::PipelineStage(PipelineStage {
+                latency: Latency::Const(latency),
+            }),
+        )
+    }
+
+    pub fn execute_stage(name: &str, latency: u64) -> Object {
+        Object::new(
+            name,
+            ObjectKind::ExecuteStage(ExecuteStage {
+                latency: Latency::Const(latency),
+            }),
+        )
+    }
+
+    pub fn fetch_stage(name: &str, latency: u64, issue_buffer_size: usize) -> Object {
+        Object::new(
+            name,
+            ObjectKind::InstructionFetchStage(InstructionFetchStage {
+                latency: Latency::Const(latency),
+                issue_buffer_size,
+            }),
+        )
+    }
+
+    pub fn functional_unit(name: &str, ops: &[&str], latency: Latency) -> Object {
+        Object::new(
+            name,
+            ObjectKind::FunctionalUnit(FunctionalUnit {
+                to_process: ops.iter().map(|s| s.to_string()).collect(),
+                latency,
+            }),
+        )
+    }
+
+    pub fn memory_access_unit(name: &str, ops: &[&str], latency: u64) -> Object {
+        Object::new(
+            name,
+            ObjectKind::MemoryAccessUnit(MemoryAccessUnit {
+                to_process: ops.iter().map(|s| s.to_string()).collect(),
+                latency: Latency::Const(latency),
+            }),
+        )
+    }
+
+    pub fn instruction_memory_access_unit(name: &str, latency: u64) -> Object {
+        Object::new(
+            name,
+            ObjectKind::InstructionMemoryAccessUnit(InstructionMemoryAccessUnit {
+                latency: Latency::Const(latency),
+            }),
+        )
+    }
+
+    pub fn register_file(name: &str, data_width: u32, regs: Vec<(String, Data)>) -> Object {
+        Object::new(
+            name,
+            ObjectKind::RegisterFile(RegisterFile {
+                data_width,
+                registers: regs,
+            }),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_predicates() {
+        let ifs = build::fetch_stage("ifs0", 1, 4);
+        assert!(ifs.kind.is_pipeline_stage());
+        assert!(ifs.kind.is_execute_stage());
+        assert!(!ifs.kind.is_functional_unit());
+
+        let imau = build::instruction_memory_access_unit("imau0", 1);
+        assert!(imau.kind.is_functional_unit());
+        assert!(imau.kind.is_memory_access_unit());
+        assert!(!imau.kind.is_pipeline_stage());
+
+        let fu = build::functional_unit("fu0", &["add"], Latency::Const(1));
+        assert!(fu.kind.is_functional_unit());
+        assert!(!fu.kind.is_memory_access_unit());
+    }
+
+    #[test]
+    fn to_process_and_latency() {
+        let fu = build::functional_unit("fu0", &["mac", "add"], Latency::Const(2));
+        let ops = fu.kind.to_process().unwrap();
+        assert!(ops.contains("mac") && ops.contains("add"));
+        assert_eq!(fu.kind.latency().unwrap().eval_const().unwrap(), 2);
+        let rf = build::register_file("rf0", 32, vec![]);
+        assert!(rf.kind.latency().is_none());
+        assert!(rf.kind.to_process().is_none());
+    }
+
+    #[test]
+    fn class_names_match_paper() {
+        assert_eq!(
+            build::fetch_stage("x", 1, 1).kind.class_name(),
+            "InstructionFetchStage"
+        );
+        assert_eq!(
+            build::instruction_memory_access_unit("x", 1).kind.class_name(),
+            "InstructionMemoryAccessUnit"
+        );
+    }
+}

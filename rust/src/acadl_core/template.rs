@@ -1,0 +1,187 @@
+//! Templates and dangling edges (§4.2, Listings 2–3).
+//!
+//! Templates are plain Rust structs that instantiate their objects and
+//! internal edges into an [`Ag`] and expose [`DanglingEdge`]s — half-edges
+//! with only a source or only a target — as their interface.  Dangling
+//! edges are later connected to each other (or directly to an object) with
+//! [`connect_dangling`] / [`connect_dangling_to`], which re-runs the class-
+//! diagram validity check.  An unconnected dangling edge simply never
+//! materializes (the paper: "When a dangling edge is not connected later
+//! on, no edge will be instantiated").
+
+use thiserror::Error;
+
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+
+/// A half-edge exposed by a template: exactly one endpoint is set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DanglingEdge {
+    pub kind: EdgeKind,
+    pub source: Option<ObjId>,
+    pub target: Option<ObjId>,
+}
+
+impl DanglingEdge {
+    /// A dangling edge with a known source, awaiting its target.
+    pub fn from_source(kind: EdgeKind, source: ObjId) -> Self {
+        DanglingEdge {
+            kind,
+            source: Some(source),
+            target: None,
+        }
+    }
+
+    /// A dangling edge with a known target, awaiting its source.
+    pub fn to_target(kind: EdgeKind, target: ObjId) -> Self {
+        DanglingEdge {
+            kind,
+            source: None,
+            target: Some(target),
+        }
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum TemplateError {
+    #[error("dangling edges have mismatched types: {0} vs {1}")]
+    KindMismatch(EdgeKind, EdgeKind),
+    #[error("cannot connect: need one source-dangling and one target-dangling edge")]
+    EndpointConflict,
+    #[error(transparent)]
+    Ag(#[from] AgError),
+}
+
+/// Connect two dangling edges into a real, validated edge — the Python
+/// front-end's `connect_dangling_edge(a, b)`.  One must carry the source,
+/// the other the target; their edge types must agree.
+pub fn connect_dangling(
+    ag: &mut Ag,
+    a: DanglingEdge,
+    b: DanglingEdge,
+) -> Result<(), TemplateError> {
+    if a.kind != b.kind {
+        return Err(TemplateError::KindMismatch(a.kind, b.kind));
+    }
+    let (src, dst) = match (a.source, a.target, b.source, b.target) {
+        (Some(s), None, None, Some(t)) => (s, t),
+        (None, Some(t), Some(s), None) => (s, t),
+        _ => return Err(TemplateError::EndpointConflict),
+    };
+    ag.connect(src, dst, a.kind)?;
+    Ok(())
+}
+
+/// Connect a dangling edge directly to an object (the overload the paper
+/// describes for e.g. wiring a template port straight to the DRAM object).
+pub fn connect_dangling_to(
+    ag: &mut Ag,
+    e: DanglingEdge,
+    obj: ObjId,
+) -> Result<(), TemplateError> {
+    let (src, dst) = match (e.source, e.target) {
+        (Some(s), None) => (s, obj),
+        (None, Some(t)) => (obj, t),
+        _ => return Err(TemplateError::EndpointConflict),
+    };
+    ag.connect(src, dst, e.kind)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::data::Data;
+    use crate::acadl_core::latency::Latency;
+    use crate::acadl_core::object::build;
+
+    /// The PE template of Listing 2, reduced to its connective essentials.
+    struct Pe {
+        fu_outgoing_write: DanglingEdge,
+        rf_ingoing_write: DanglingEdge,
+    }
+
+    impl Pe {
+        fn new(ag: &mut Ag, row: usize, col: usize) -> Self {
+            let ex = ag
+                .add(build::execute_stage(&format!("ex[{row}][{col}]"), 1))
+                .unwrap();
+            let fu = ag
+                .add(build::functional_unit(
+                    &format!("fu[{row}][{col}]"),
+                    &["mac"],
+                    Latency::Const(1),
+                ))
+                .unwrap();
+            let rf = ag
+                .add(build::register_file(
+                    &format!("rf[{row}][{col}]"),
+                    32,
+                    vec![(format!("r{row}_{col}_a"), Data::f32(0.0))],
+                ))
+                .unwrap();
+            ag.connect(ex, fu, EdgeKind::Contains).unwrap();
+            ag.connect(rf, fu, EdgeKind::ReadData).unwrap();
+            ag.connect(fu, rf, EdgeKind::WriteData).unwrap();
+            Pe {
+                fu_outgoing_write: DanglingEdge::from_source(EdgeKind::WriteData, fu),
+                rf_ingoing_write: DanglingEdge::to_target(EdgeKind::WriteData, rf),
+            }
+        }
+    }
+
+    #[test]
+    fn connect_two_templates() {
+        let mut ag = Ag::new();
+        let a = Pe::new(&mut ag, 0, 0);
+        let b = Pe::new(&mut ag, 1, 0);
+        let edges_before = ag.edges.len();
+        connect_dangling(&mut ag, a.fu_outgoing_write, b.rf_ingoing_write).unwrap();
+        assert_eq!(ag.edges.len(), edges_before + 1);
+        // Order-independent: (target, source) works too.
+        connect_dangling(&mut ag, b.rf_ingoing_write, a.fu_outgoing_write).unwrap();
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        let mut ag = Ag::new();
+        let a = Pe::new(&mut ag, 0, 0);
+        let wrong = DanglingEdge::to_target(
+            EdgeKind::ReadData,
+            a.rf_ingoing_write.target.unwrap(),
+        );
+        assert!(matches!(
+            connect_dangling(&mut ag, a.fu_outgoing_write, wrong),
+            Err(TemplateError::KindMismatch(..))
+        ));
+    }
+
+    #[test]
+    fn endpoint_conflict_rejected() {
+        let mut ag = Ag::new();
+        let a = Pe::new(&mut ag, 0, 0);
+        let b = Pe::new(&mut ag, 1, 0);
+        // Two source-dangling edges cannot be joined.
+        assert!(matches!(
+            connect_dangling(&mut ag, a.fu_outgoing_write, b.fu_outgoing_write),
+            Err(TemplateError::EndpointConflict)
+        ));
+    }
+
+    #[test]
+    fn connect_to_object_directly() {
+        let mut ag = Ag::new();
+        let a = Pe::new(&mut ag, 0, 0);
+        let rf2 = ag
+            .add(build::register_file(
+                "rf_ext",
+                32,
+                vec![("ext0".into(), Data::f32(0.0))],
+            ))
+            .unwrap();
+        connect_dangling_to(&mut ag, a.fu_outgoing_write, rf2).unwrap();
+        // Invalid direct connection still rejected by edge rules.
+        let ex2 = ag.add(build::execute_stage("ex_ext", 1)).unwrap();
+        assert!(connect_dangling_to(&mut ag, a.fu_outgoing_write, ex2).is_err());
+    }
+}

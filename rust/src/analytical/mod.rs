@@ -1,0 +1,101 @@
+//! Analytical baselines (§2's related work): the closed-form estimators
+//! ACADL's simulation is compared against in experiment E7.
+//!
+//! * [`scalesim_cycles`] — a ScaleSim-style [9] output-stationary systolic
+//!   formula over the same ten-ish parameters (array dims, operand dims,
+//!   bandwidth).
+//! * [`Roofline`] — compute-vs-memory bound cycles, the sanity floor every
+//!   simulated number must sit above.
+
+use crate::mapping::gemm::GemmParams;
+
+/// ScaleSim-like output-stationary estimate for `C (m×n) = A(m×k)·B(k×n)`
+/// on an `rows×cols` array.
+///
+/// Each output tile takes `2·T + k − 1` cycles to fill+drain its wavefront
+/// (T = max(rows, cols) skew) plus the K-deep accumulation; tiles are
+/// serialized, loads overlapped (the ScaleSim "compute-bound" regime).
+pub fn scalesim_cycles(p: &GemmParams, rows: usize, cols: usize) -> u64 {
+    let tiles = (p.m.div_ceil(rows) * p.n.div_ceil(cols)) as u64;
+    let skew = (rows + cols - 1) as u64;
+    tiles * (p.k as u64 + skew)
+}
+
+/// Utilization the ScaleSim model predicts (mac slots used / provided).
+pub fn scalesim_utilization(p: &GemmParams, rows: usize, cols: usize) -> f64 {
+    let provided = scalesim_cycles(p, rows, cols) * (rows * cols) as u64;
+    if provided == 0 {
+        0.0
+    } else {
+        p.macs() as f64 / provided as f64
+    }
+}
+
+/// Roofline bound: cycles ≥ max(compute, memory-traffic) cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// MAC units available per cycle.
+    pub macs_per_cycle: u64,
+    /// Memory words transferable per cycle.
+    pub words_per_cycle: u64,
+}
+
+impl Roofline {
+    /// Minimum cycles for a GeMM with perfect reuse (each operand word
+    /// moved once).
+    pub fn gemm_cycles(&self, p: &GemmParams) -> u64 {
+        let compute = p.macs().div_ceil(self.macs_per_cycle.max(1));
+        let words = (p.m * p.k + p.k * p.n + p.m * p.n) as u64;
+        let memory = words.div_ceil(self.words_per_cycle.max(1));
+        compute.max(memory)
+    }
+
+    /// Which side binds?
+    pub fn gemm_bound(&self, p: &GemmParams) -> &'static str {
+        let compute = p.macs().div_ceil(self.macs_per_cycle.max(1));
+        if compute >= self.gemm_cycles(p) {
+            "compute"
+        } else {
+            "memory"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalesim_scales_with_array() {
+        let p = GemmParams::new(16, 16, 16);
+        let small = scalesim_cycles(&p, 4, 4);
+        let big = scalesim_cycles(&p, 16, 16);
+        assert!(big < small, "bigger array, fewer cycles: {big} vs {small}");
+    }
+
+    #[test]
+    fn scalesim_utilization_bounds() {
+        let p = GemmParams::new(64, 64, 64);
+        let u = scalesim_utilization(&p, 8, 8);
+        assert!(u > 0.0 && u <= 1.0, "u={u}");
+        // Perfect fit with long K → utilization approaches 1.
+        let p_long = GemmParams::new(8, 1024, 8);
+        assert!(scalesim_utilization(&p_long, 8, 8) > 0.9);
+    }
+
+    #[test]
+    fn roofline_switches_bound() {
+        let compute_bound = Roofline {
+            macs_per_cycle: 1,
+            words_per_cycle: 1000,
+        };
+        let memory_bound = Roofline {
+            macs_per_cycle: 1000,
+            words_per_cycle: 1,
+        };
+        let p = GemmParams::new(16, 16, 16);
+        assert_eq!(compute_bound.gemm_bound(&p), "compute");
+        assert_eq!(memory_bound.gemm_bound(&p), "memory");
+        assert_eq!(compute_bound.gemm_cycles(&p), p.macs());
+    }
+}

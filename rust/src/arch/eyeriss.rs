@@ -1,0 +1,221 @@
+//! An Eyeriss-v1-derived accelerator model (§6: the AIDG timing semantics
+//! were validated on "an Eyeriss v1 derived accelerator" [26]).
+//!
+//! Three-level storage hierarchy with a spatial PE array:
+//!
+//! * DRAM — off-chip, banked timing;
+//! * GLB — the global buffer SRAM;
+//! * PE array — `rows×cols` PEs, each with a register file holding
+//!   `ifmap`/`weight`/`psum` values and a MAC FU (row-stationary at our
+//!   scalar abstraction: weights stay resident per PE while ifmap values
+//!   stream).
+//!
+//! DMA units stage DRAM↔GLB transfers through staging registers (our MAU
+//! semantics move memory↔register, so a copy is a `load` + `store` pair —
+//! exactly how the paper's MemoryAccessUnit is defined); PE load units
+//! multicast GLB rows into PE register files; store units drain psums.
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::build;
+use crate::arch::parts;
+
+#[derive(Debug, Clone)]
+pub struct EyerissConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub mac_latency: u64,
+    /// Global buffer size in bytes.
+    pub glb_bytes: u64,
+    pub glb_latency: u64,
+    pub dma_units: usize,
+    pub issue_buffer: usize,
+    pub imem_range: (u64, u64),
+    pub glb_base: u64,
+    pub dram_range: (u64, u64),
+}
+
+impl Default for EyerissConfig {
+    fn default() -> Self {
+        EyerissConfig {
+            rows: 3,
+            cols: 4,
+            mac_latency: 1,
+            glb_bytes: 0x20000,
+            glb_latency: 2,
+            dma_units: 2,
+            issue_buffer: 64,
+            imem_range: (0, 0x100000),
+            glb_base: 0x20_0000,
+            dram_range: (0x1000_0000, 0x2000_0000),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EyerissMachine {
+    pub ag: Ag,
+    pub cfg: EyerissConfig,
+    pub glb: ObjId,
+    pub dram: ObjId,
+}
+
+impl EyerissConfig {
+    pub fn build(&self) -> Result<EyerissMachine, AgError> {
+        let mut ag = Ag::new();
+        let fe = parts::fetch_frontend(
+            &mut ag,
+            "",
+            self.imem_range.0,
+            self.imem_range.1,
+            self.issue_buffer,
+            4,
+        )?;
+        let dram = ag.add(parts::dram_ports(
+            "dram0",
+            self.dram_range.0,
+            self.dram_range.1,
+            self.dma_units,
+        ))?;
+        let units_on_glb = self.dma_units + self.rows + self.cols;
+        let glb = ag.add(parts::sram_ports(
+            "glb0",
+            self.glb_base,
+            self.glb_base + self.glb_bytes,
+            self.glb_latency,
+            4,
+            units_on_glb,
+            4,
+        ))?;
+
+        // DMA units: staging register + MAU reaching both DRAM and GLB.
+        for u in 0..self.dma_units {
+            let ex = ag.add(build::execute_stage(&format!("dma_ex[{u}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("dma[{u}]"),
+                &["load", "store"],
+                1,
+            ))?;
+            let rf = ag.add(build::register_file(
+                &format!("dma_rf[{u}]"),
+                32,
+                (0..4)
+                    .map(|r| (format!("dma{u}_s{r}"), Data::f32(0.0)))
+                    .collect(),
+            ))?;
+            ag.connect(ex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+            ag.connect(mau, rf, EdgeKind::WriteData)?;
+            ag.connect(rf, mau, EdgeKind::ReadData)?;
+            ag.connect(dram, mau, EdgeKind::ReadData)?;
+            ag.connect(mau, dram, EdgeKind::WriteData)?;
+            ag.connect(glb, mau, EdgeKind::ReadData)?;
+            ag.connect(mau, glb, EdgeKind::WriteData)?;
+        }
+
+        // PE array.
+        let mut pe_rfs = Vec::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let ex = ag.add(build::execute_stage(&format!("pe_ex[{r}][{c}]"), 1))?;
+                let fu = ag.add(build::functional_unit(
+                    &format!("pe_fu[{r}][{c}]"),
+                    &["mac", "mov", "movi"],
+                    Latency::Const(self.mac_latency),
+                ))?;
+                let rf = ag.add(build::register_file(
+                    &format!("pe_rf[{r}][{c}]"),
+                    32,
+                    vec![
+                        (format!("e{r}_{c}_w"), Data::f32(0.0)),
+                        (format!("e{r}_{c}_x"), Data::f32(0.0)),
+                        (format!("e{r}_{c}_p"), Data::f32(0.0)),
+                    ],
+                ))?;
+                ag.connect(ex, fu, EdgeKind::Contains)?;
+                ag.connect(rf, fu, EdgeKind::ReadData)?;
+                ag.connect(fu, rf, EdgeKind::WriteData)?;
+                ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+                pe_rfs.push(rf);
+            }
+        }
+
+        // GLB↔PE load/store units (one per row feeds ifmaps/weights; one
+        // per column drains psums).
+        for r in 0..self.rows {
+            let ex = ag.add(build::execute_stage(&format!("glbl_ex[{r}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("glbl[{r}]"),
+                &["load"],
+                1,
+            ))?;
+            ag.connect(ex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+            ag.connect(glb, mau, EdgeKind::ReadData)?;
+            for rf in &pe_rfs {
+                ag.connect(mau, *rf, EdgeKind::WriteData)?;
+            }
+        }
+        for c in 0..self.cols {
+            let ex = ag.add(build::execute_stage(&format!("glbs_ex[{c}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("glbs[{c}]"),
+                &["store"],
+                1,
+            ))?;
+            ag.connect(ex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+            ag.connect(mau, glb, EdgeKind::WriteData)?;
+            for rf in &pe_rfs {
+                ag.connect(*rf, mau, EdgeKind::ReadData)?;
+            }
+        }
+
+        ag.validate()?;
+        Ok(EyerissMachine {
+            ag,
+            cfg: self.clone(),
+            glb,
+            dram,
+        })
+    }
+}
+
+impl EyerissMachine {
+    pub fn glb_base(&self) -> u64 {
+        self.cfg.glb_base
+    }
+
+    pub fn dram_base(&self) -> u64 {
+        self.cfg.dram_range.0
+    }
+
+    pub fn pe_reg(&self, r: usize, c: usize, which: &str) -> String {
+        format!("e{r}_{c}_{which}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let m = EyerissConfig::default().build().unwrap();
+        let s = m.ag.summary();
+        assert!(s.contains("DRAM=1"), "{s}");
+        // 3 regs per PE × 12 PEs + 2 DMA × 4 staging + pc = 45.
+        assert_eq!(m.ag.reg_count(), 45);
+    }
+
+    #[test]
+    fn dma_reaches_both_levels() {
+        let m = EyerissConfig::default().build().unwrap();
+        let dma = m.ag.id("dma[0]").unwrap();
+        let storages = m.ag.storages_of_mau(dma);
+        assert!(storages.contains(&m.glb));
+        assert!(storages.contains(&m.dram));
+    }
+}

@@ -1,0 +1,287 @@
+//! Γ̈ [gœna] — the General Operationally Extendable Neural Network
+//! Accelerator, §4.3, Figs 6–7, Listing 4.
+//!
+//! Fused-tensor-operations level: `units` template instances, each a
+//! load/store unit + compute unit + scratchpad complex (the dashed boxes of
+//! Fig. 6), sharing one DRAM data memory and one fetch front-end whose
+//! large issue buffer lets instructions for different units issue in
+//! parallel and execute out-of-order (§4.3's closing claim — measured by
+//! experiment E4).
+//!
+//! Per unit `i`:
+//! * `lsu[i]` — ExecuteStage + MemoryAccessUnit (`load`, `store`): moves
+//!   rows between DRAM/scratchpads and the compute unit's vector registers.
+//! * `cu[i]` — ExecuteStage containing `matMulFu[i]` (`gemm`) and
+//!   `matAddFu[i]` (`vadd vmul vrelu vmaxp`) over the vector register file
+//!   `vrf[i]` (registers `v[i].0 … v[i].{vregs-1}`, 128-bit, 8 f32 lanes —
+//!   the paper's 8×int16 design point in our f32 payload model).
+//! * `spad[i]` — SRAM scratchpad; adjacent units can reach their
+//!   neighbors' scratchpads (partial-result sharing).
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::build;
+use crate::arch::parts;
+use crate::isa::GAMMA_TILE;
+
+/// Parameters of the Γ̈ model.
+#[derive(Debug, Clone)]
+pub struct GammaConfig {
+    /// Number of load-store/compute/scratchpad template instances.
+    pub units: usize,
+    /// Vector registers per compute unit.
+    pub vregs: usize,
+    /// gemm latency in cycles (one 8×8×8 fused tensor op).
+    pub gemm_latency: u64,
+    /// Element-wise tensor op latency.
+    pub vec_latency: u64,
+    /// Scratchpad bytes per unit.
+    pub spad_bytes: u64,
+    pub spad_latency: u64,
+    /// Issue buffer of the fetch stage.
+    pub issue_buffer: usize,
+    pub fetch_width: usize,
+    pub imem_range: (u64, u64),
+    /// DRAM data-memory range.
+    pub dram_range: (u64, u64),
+    /// Base address of the first scratchpad (they are laid out
+    /// contiguously: spad i at `spad_base + i * spad_bytes`).
+    pub spad_base: u64,
+}
+
+impl Default for GammaConfig {
+    fn default() -> Self {
+        GammaConfig {
+            units: 2,
+            vregs: 32,
+            gemm_latency: 8,
+            vec_latency: 1,
+            spad_bytes: 0x4000,
+            spad_latency: 1,
+            issue_buffer: 32,
+            fetch_width: 4,
+            imem_range: (0x0, 0x100000),
+            dram_range: (0x1000_0000, 0x2000_0000),
+            spad_base: 0x10_0000,
+        }
+    }
+}
+
+impl GammaConfig {
+    pub fn new(units: usize) -> Self {
+        GammaConfig {
+            units,
+            ..Default::default()
+        }
+    }
+}
+
+/// Handles of one Γ̈ template instance.
+#[derive(Debug, Clone)]
+pub struct GammaUnit {
+    pub lsu: ObjId,
+    pub cu: ObjId,
+    pub mat_mul_fu: ObjId,
+    pub mat_add_fu: ObjId,
+    pub vrf: ObjId,
+    pub spad: ObjId,
+    /// Scratchpad byte range.
+    pub spad_range: (u64, u64),
+}
+
+/// The built Γ̈ machine.
+#[derive(Debug, Clone)]
+pub struct GammaMachine {
+    pub ag: Ag,
+    pub cfg: GammaConfig,
+    pub units: Vec<GammaUnit>,
+    pub dram: ObjId,
+}
+
+impl GammaConfig {
+    pub fn build(&self) -> Result<GammaMachine, AgError> {
+        assert!(self.units >= 1);
+        assert!(self.vregs >= 3 * GAMMA_TILE, "need at least A+B+C row groups");
+        let mut ag = Ag::new();
+        let fe = parts::fetch_frontend(
+            &mut ag,
+            "",
+            self.imem_range.0,
+            self.imem_range.1,
+            self.issue_buffer,
+            self.fetch_width,
+        )?;
+
+        // One controller port per LSU (plus headroom) so scaling the unit
+        // count never violates the port budget — contention is still
+        // modeled by the request slots.
+        let dram = ag.add(parts::dram_ports(
+            "dram0",
+            self.dram_range.0,
+            self.dram_range.1,
+            self.units,
+        ))?;
+
+        let mut units = Vec::with_capacity(self.units);
+        for i in 0..self.units {
+            let spad_lo = self.spad_base + i as u64 * self.spad_bytes;
+            let spad_hi = spad_lo + self.spad_bytes;
+            let spad = ag.add(parts::sram_ports(
+                &format!("spad[{i}]"),
+                spad_lo,
+                spad_hi,
+                self.spad_latency,
+                GAMMA_TILE, // one row per transaction
+                4,
+                2,
+            ))?;
+
+            // Compute unit: one execute stage per FU so gemm and vector ops
+            // from *different* dependency chains can overlap across units,
+            // while within a stage the paper's wait-on-FU semantics hold.
+            let cu = ag.add(build::execute_stage(&format!("cu[{i}]"), 1))?;
+            let mat_mul = ag.add(build::functional_unit(
+                &format!("matMulFu[{i}]"),
+                &["gemm"],
+                Latency::Const(self.gemm_latency),
+            ))?;
+            let mat_add = ag.add(build::functional_unit(
+                &format!("matAddFu[{i}]"),
+                &["vadd", "vmul", "vrelu", "vmaxp"],
+                Latency::Const(self.vec_latency),
+            ))?;
+            ag.connect(cu, mat_mul, EdgeKind::Contains)?;
+            ag.connect(cu, mat_add, EdgeKind::Contains)?;
+
+            let vrf = ag.add(build::register_file(
+                &format!("vrf[{i}]"),
+                128,
+                (0..self.vregs)
+                    .map(|r| (format!("v[{i}].{r}"), Data::vec(128, GAMMA_TILE)))
+                    .collect(),
+            ))?;
+            ag.connect(vrf, mat_mul, EdgeKind::ReadData)?;
+            ag.connect(mat_mul, vrf, EdgeKind::WriteData)?;
+            ag.connect(vrf, mat_add, EdgeKind::ReadData)?;
+            ag.connect(mat_add, vrf, EdgeKind::WriteData)?;
+
+            // Load/store unit.
+            let lsu_ex = ag.add(build::execute_stage(&format!("lsu_ex[{i}]"), 1))?;
+            let lsu = ag.add(build::memory_access_unit(
+                &format!("lsu[{i}]"),
+                &["load", "store"],
+                1,
+            ))?;
+            ag.connect(lsu_ex, lsu, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, lsu_ex, EdgeKind::Forward)?;
+            ag.connect(fe.ifs, cu, EdgeKind::Forward)?;
+            // LSU moves data between storages and the vector registers.
+            ag.connect(lsu, vrf, EdgeKind::WriteData)?;
+            ag.connect(vrf, lsu, EdgeKind::ReadData)?;
+            ag.connect(lsu, spad, EdgeKind::WriteData)?;
+            ag.connect(spad, lsu, EdgeKind::ReadData)?;
+            ag.connect(lsu, dram, EdgeKind::WriteData)?;
+            ag.connect(dram, lsu, EdgeKind::ReadData)?;
+
+            units.push(GammaUnit {
+                lsu,
+                cu,
+                mat_mul_fu: mat_mul,
+                mat_add_fu: mat_add,
+                vrf,
+                spad,
+                spad_range: (spad_lo, spad_hi),
+            });
+        }
+
+        // Adjacent scratchpad sharing: lsu[i] reaches spad[i±1].
+        for i in 0..self.units {
+            if i > 0 {
+                let (lsu, spad) = (units[i].lsu, units[i - 1].spad);
+                ag.connect(lsu, spad, EdgeKind::WriteData)?;
+                ag.connect(spad, lsu, EdgeKind::ReadData)?;
+            }
+            if i + 1 < self.units {
+                let (lsu, spad) = (units[i].lsu, units[i + 1].spad);
+                ag.connect(lsu, spad, EdgeKind::WriteData)?;
+                ag.connect(spad, lsu, EdgeKind::ReadData)?;
+            }
+        }
+
+        ag.validate()?;
+        Ok(GammaMachine {
+            ag,
+            cfg: self.clone(),
+            units,
+            dram,
+        })
+    }
+}
+
+impl GammaMachine {
+    /// Vector register name `v[unit].{idx}`.
+    pub fn vreg(&self, unit: usize, idx: usize) -> String {
+        format!("v[{unit}].{idx}")
+    }
+
+    pub fn dram_base(&self) -> u64 {
+        self.cfg.dram_range.0
+    }
+
+    /// Row-group base addresses inside unit `i`'s scratchpad for Listing 4
+    /// style programs: (A, B, C) each `GAMMA_TILE` rows of `GAMMA_TILE`
+    /// f32s.
+    pub fn spad_tile_bases(&self, unit: usize) -> (u64, u64, u64) {
+        let lo = self.units[unit].spad_range.0;
+        let tile_bytes = (GAMMA_TILE * GAMMA_TILE * 4) as u64;
+        (lo, lo + tile_bytes, lo + 2 * tile_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let m = GammaConfig::default().build().unwrap();
+        let s = m.ag.summary();
+        assert!(s.contains("DRAM=1"), "{s}");
+        assert!(s.contains("SRAM=3"), "2 spads + imem: {s}"); // imem is SRAM
+        assert_eq!(m.units.len(), 2);
+        // 2 units × 32 vregs + pc.
+        assert_eq!(m.ag.reg_count(), 65);
+    }
+
+    #[test]
+    fn unit_fus_have_correct_caps() {
+        let m = GammaConfig::new(1).build().unwrap();
+        let mm = m.ag.kind(m.units[0].mat_mul_fu).to_process().unwrap();
+        assert!(mm.contains("gemm") && !mm.contains("vadd"));
+        let ma = m.ag.kind(m.units[0].mat_add_fu).to_process().unwrap();
+        assert!(ma.contains("vrelu") && !ma.contains("gemm"));
+    }
+
+    #[test]
+    fn adjacent_scratchpads_shared() {
+        let m = GammaConfig::new(3).build().unwrap();
+        let s0 = m.ag.storages_of_mau(m.units[1].lsu);
+        assert!(s0.contains(&m.units[0].spad));
+        assert!(s0.contains(&m.units[2].spad));
+        assert!(s0.contains(&m.dram));
+        // Unit 0 does not reach spad[2].
+        let s1 = m.ag.storages_of_mau(m.units[0].lsu);
+        assert!(!s1.contains(&m.units[2].spad));
+    }
+
+    #[test]
+    fn spad_tile_layout() {
+        let m = GammaConfig::default().build().unwrap();
+        let (a, b, c) = m.spad_tile_bases(0);
+        assert_eq!(b - a, 256);
+        assert_eq!(c - b, 256);
+        assert!(m.ag.storage_accepts(m.units[0].spad, c));
+    }
+}

@@ -1,0 +1,30 @@
+//! The model zoo: AI hardware accelerators expressed as ACADL architecture
+//! graphs, mirroring the paper's Python front-end listings.
+//!
+//! * [`oma`] — the One MAC Accelerator (§4.1, Figs 2–3, Listing 1):
+//!   scalar-operations level, single FU + MAU behind one execute stage.
+//! * [`systolic`] — the parameterizable rows×cols systolic array
+//!   (§4.2, Figs 4–5, Listings 2–3): scalar level, PE templates with
+//!   dangling edges, load/store units on the array edges.
+//! * [`gamma`] — Γ̈, the General Operationally Extendable Neural Network
+//!   Accelerator (§4.3, Figs 6–7, Listing 4): fused-tensor level,
+//!   load/store + compute + scratchpad template pairs, out-of-order
+//!   parallel issue.
+//! * [`eyeriss`] — an Eyeriss-v1-derived row-stationary model (§6, [26]).
+//! * [`plasticine`] — a Plasticine-derived pattern compute/memory chain
+//!   (§6, [27]).
+//! * [`parts`] — shared constructors for storages and fetch front-ends.
+//!
+//! Every builder returns a machine struct bundling the [`Ag`] with the
+//! memory layout the mapping layer (code generators) needs.
+
+pub mod eyeriss;
+pub mod gamma;
+pub mod oma;
+pub mod parts;
+pub mod plasticine;
+pub mod systolic;
+
+pub use gamma::GammaConfig;
+pub use oma::OmaConfig;
+pub use systolic::SystolicConfig;

@@ -1,0 +1,276 @@
+//! The One MAC Accelerator (OMA) — §4.1, Figs 2–3, Listing 1.
+//!
+//! Scalar-operations-level model: one fetch front-end, a decode pipeline
+//! stage, and a single execute stage containing one ALU-style
+//! `FunctionalUnit` (`mov addi … mac`) and one `MemoryAccessUnit`
+//! (`load store`) behind a data cache backed by the data memory.  The OMA
+//! processes one operation at a time in its execute stage — exactly the
+//! structural hazard the paper uses to introduce the timing semantics.
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::build;
+use crate::arch::parts::{self, FetchFrontend};
+use crate::mem::cache::ReplacementPolicy;
+
+/// Data-memory backing for the OMA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataMem {
+    /// On-chip SRAM with a flat latency.
+    Sram { latency: u64 },
+    /// Banked DRAM with default DDR4-ish timing.
+    Dram,
+}
+
+/// Cache configuration (None = no cache; MAU talks to memory directly).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheCfg {
+    pub sets: usize,
+    pub ways: usize,
+    pub line: u64,
+    pub policy: ReplacementPolicy,
+    pub hit_latency: u64,
+    pub miss_latency: u64,
+}
+
+impl Default for CacheCfg {
+    fn default() -> Self {
+        CacheCfg {
+            sets: 64,
+            ways: 4,
+            line: 64,
+            policy: ReplacementPolicy::Lru,
+            hit_latency: 1,
+            miss_latency: 8,
+        }
+    }
+}
+
+/// Parameters of the OMA model (Listing 1's constructor arguments).
+#[derive(Debug, Clone)]
+pub struct OmaConfig {
+    /// General-purpose registers `r0..r{gprs-1}` (+ the zero reg `z0`).
+    pub gprs: usize,
+    /// MAC instruction latency in cycles.
+    pub mac_latency: u64,
+    /// ALU (non-MAC) latency.
+    pub alu_latency: u64,
+    /// Issue buffer depth of the fetch stage.
+    pub issue_buffer: usize,
+    /// Instructions fetched per transaction (imem port width).
+    pub fetch_width: usize,
+    pub cache: Option<CacheCfg>,
+    pub dmem: DataMem,
+    /// Instruction memory byte range.
+    pub imem_range: (u64, u64),
+    /// Data memory byte range.
+    pub dmem_range: (u64, u64),
+}
+
+impl Default for OmaConfig {
+    fn default() -> Self {
+        OmaConfig {
+            gprs: 16,
+            mac_latency: 1,
+            alu_latency: 1,
+            issue_buffer: 4,
+            fetch_width: 4,
+            cache: Some(CacheCfg::default()),
+            dmem: DataMem::Sram { latency: 2 },
+            imem_range: (0x0, 0x10000),
+            dmem_range: (0x10000, 0x90000),
+        }
+    }
+}
+
+/// The built OMA: its AG plus the handles and layout codegen needs.
+#[derive(Debug, Clone)]
+pub struct OmaMachine {
+    pub ag: Ag,
+    pub fe: OmaHandles,
+    pub cfg: OmaConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct OmaHandles {
+    pub ifs: ObjId,
+    pub ds: ObjId,
+    pub ex: ObjId,
+    pub fu: ObjId,
+    pub mau: ObjId,
+    pub rf: ObjId,
+    pub dcache: Option<ObjId>,
+    pub dmem: ObjId,
+}
+
+impl OmaConfig {
+    /// Instantiate the AG of Listing 1.
+    pub fn build(&self) -> Result<OmaMachine, AgError> {
+        let mut ag = Ag::new();
+        let FetchFrontend { ifs, .. } = parts::fetch_frontend(
+            &mut ag,
+            "",
+            self.imem_range.0,
+            self.imem_range.1,
+            self.issue_buffer,
+            self.fetch_width,
+        )?;
+
+        // Decode stage and execute stage (Fig. 3: ds0, ex0).
+        let ds = ag.add(build::pipeline_stage("ds0", 1))?;
+        let ex = ag.add(build::execute_stage("ex0", 1))?;
+
+        // ALU-style functional unit. MAC latency may differ from the rest,
+        // expressed with a latency function over the mnemonic class.
+        let fu = ag.add(build::functional_unit(
+            "fu0",
+            &[
+                "nop", "halt", "mov", "movi", "add", "addi", "sub", "subi", "mul", "muli",
+                "mac", "beqi", "bnei", "jumpi",
+            ],
+            if self.mac_latency == self.alu_latency {
+                Latency::Const(self.alu_latency)
+            } else {
+                // `is_mac` is bound by the engine when evaluating.
+                Latency::parse(&format!(
+                    "{} + is_mac * {}",
+                    self.alu_latency,
+                    self.mac_latency.saturating_sub(self.alu_latency)
+                ))
+                .expect("static expression")
+            },
+        ))?;
+        let mau = ag.add(build::memory_access_unit("mau0", &["load", "store"], 1))?;
+
+        // Register file: r0..r{n-1} + z0 (hardwired zero, Listing 5).
+        let mut regs: Vec<(String, Data)> = (0..self.gprs)
+            .map(|i| (format!("r{i}"), Data::int(32, 0)))
+            .collect();
+        regs.push(("z0".into(), Data::int(32, 0)));
+        let rf = ag.add(build::register_file("rf0", 32, regs))?;
+
+        // Data memory + optional cache.
+        let dmem = match self.dmem {
+            DataMem::Sram { latency } => ag.add(parts::sram(
+                "dmem0",
+                self.dmem_range.0,
+                self.dmem_range.1,
+                latency,
+                1,
+            ))?,
+            DataMem::Dram => {
+                ag.add(parts::dram_default("dmem0", self.dmem_range.0, self.dmem_range.1))?
+            }
+        };
+        let dcache = match &self.cache {
+            Some(c) => Some(ag.add(parts::cache(
+                "dcache0",
+                c.sets,
+                c.ways,
+                c.line,
+                c.policy,
+                c.hit_latency,
+                c.miss_latency,
+            ))?),
+            None => None,
+        };
+
+        // Edges (Listing 1, lines 35–51).
+        ag.connect(ifs, ds, EdgeKind::Forward)?;
+        ag.connect(ds, ex, EdgeKind::Forward)?;
+        ag.connect(ex, fu, EdgeKind::Contains)?;
+        ag.connect(fu, rf, EdgeKind::WriteData)?;
+        ag.connect(rf, fu, EdgeKind::ReadData)?;
+        ag.connect(ex, mau, EdgeKind::Contains)?;
+        ag.connect(mau, rf, EdgeKind::WriteData)?;
+        ag.connect(rf, mau, EdgeKind::ReadData)?;
+        // Branches write the pc (held in the fetch front-end's pcrf0).
+        let pcrf = ag.id("pcrf0").expect("front-end created pcrf0");
+        ag.connect(fu, pcrf, EdgeKind::WriteData)?;
+        ag.connect(pcrf, fu, EdgeKind::ReadData)?;
+        match dcache {
+            Some(c) => {
+                ag.connect(mau, c, EdgeKind::WriteData)?;
+                ag.connect(c, mau, EdgeKind::ReadData)?;
+                ag.connect(c, dmem, EdgeKind::WriteData)?;
+                ag.connect(dmem, c, EdgeKind::ReadData)?;
+            }
+            None => {
+                ag.connect(mau, dmem, EdgeKind::WriteData)?;
+                ag.connect(dmem, mau, EdgeKind::ReadData)?;
+            }
+        }
+
+        ag.validate()?;
+        Ok(OmaMachine {
+            ag,
+            fe: OmaHandles {
+                ifs,
+                ds,
+                ex,
+                fu,
+                mau,
+                rf,
+                dcache,
+                dmem,
+            },
+            cfg: self.clone(),
+        })
+    }
+}
+
+impl OmaMachine {
+    /// Base address of the data region used by the GeMM mapping: A matrix
+    /// at `dmem_base`, B after it, C after B (see `mapping::gemm`).
+    pub fn dmem_base(&self) -> u64 {
+        self.cfg.dmem_range.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let m = OmaConfig::default().build().unwrap();
+        let s = m.ag.summary();
+        assert!(s.contains("InstructionFetchStage=1"), "{s}");
+        assert!(s.contains("SetAssociativeCache=1"), "{s}");
+        // 17 registers in rf0 (r0..r15 + z0) + pc.
+        assert_eq!(m.ag.reg_count(), 18);
+    }
+
+    #[test]
+    fn no_cache_variant() {
+        let m = OmaConfig {
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        assert!(m.fe.dcache.is_none());
+        assert_eq!(m.ag.storages_of_mau(m.fe.mau), vec![m.fe.dmem]);
+    }
+
+    #[test]
+    fn dram_variant() {
+        let m = OmaConfig {
+            dmem: DataMem::Dram,
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        assert!(m.ag.summary().contains("DRAM=1"));
+    }
+
+    #[test]
+    fn mau_reaches_dmem_through_cache() {
+        let m = OmaConfig::default().build().unwrap();
+        let c = m.fe.dcache.unwrap();
+        assert_eq!(m.ag.backing_of(c), Some(m.fe.dmem));
+        assert!(m.ag.storage_accepts(c, m.dmem_base() + 0x100));
+    }
+}

@@ -1,0 +1,200 @@
+//! Shared building blocks for the model zoo: storage constructors and the
+//! fetch front-end template every paper model reuses (imem + pc register
+//! file + InstructionMemoryAccessUnit + InstructionFetchStage, §4.1).
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::{
+    build, DataStorageParams, Dram, Object, ObjectKind, SetAssociativeCache, Sram,
+};
+use crate::mem::cache::ReplacementPolicy;
+
+/// SRAM object: `[base, end)` byte range, given read/write latency and
+/// port width (words per transaction).
+pub fn sram(name: &str, base: u64, end: u64, latency: u64, port_width: usize) -> Object {
+    sram_ports(name, base, end, latency, port_width, 4, 2)
+}
+
+/// SRAM with explicit port count and concurrent-request slots (banked
+/// scratchpads feeding many MAUs, e.g. the systolic array's data memory).
+pub fn sram_ports(
+    name: &str,
+    base: u64,
+    end: u64,
+    latency: u64,
+    port_width: usize,
+    ports: usize,
+    slots: usize,
+) -> Object {
+    Object::new(
+        name,
+        ObjectKind::Sram(Sram {
+            ds: DataStorageParams {
+                data_width: 32,
+                max_concurrent_requests: slots,
+                read_write_ports: ports,
+                port_width,
+            },
+            read_latency: Latency::Const(latency),
+            write_latency: Latency::Const(latency),
+            address_range: (base, end),
+        }),
+    )
+}
+
+/// DRAM object with DDR4-ish default timing (in controller cycles).
+pub fn dram_default(name: &str, base: u64, end: u64) -> Object {
+    dram_ports(name, base, end, 4)
+}
+
+/// DRAM with an explicit memory-controller port count (models with many
+/// load/store units sharing one channel).
+pub fn dram_ports(name: &str, base: u64, end: u64, ports: usize) -> Object {
+    Object::new(
+        name,
+        ObjectKind::Dram(Dram {
+            ds: DataStorageParams {
+                data_width: 32,
+                max_concurrent_requests: ports.max(4),
+                read_write_ports: ports.max(4),
+                port_width: 8,
+            },
+            address_range: (base, end),
+            banks: 8,
+            row_bytes: 1024,
+            t_rcd: 14,
+            t_rp: 14,
+            t_ras: 33,
+            t_cas: 10,
+        }),
+    )
+}
+
+/// Small default L1-style cache: 64 sets × 4 ways × 64 B lines, LRU,
+/// write-allocate + write-back, 1-cycle hit, 8-cycle miss overhead.
+pub fn cache_default(name: &str) -> Object {
+    cache(name, 64, 4, 64, ReplacementPolicy::Lru, 1, 8)
+}
+
+pub fn cache(
+    name: &str,
+    sets: usize,
+    ways: usize,
+    line: u64,
+    policy: ReplacementPolicy,
+    hit_latency: u64,
+    miss_latency: u64,
+) -> Object {
+    Object::new(
+        name,
+        ObjectKind::Cache(SetAssociativeCache {
+            ds: DataStorageParams {
+                data_width: 32,
+                max_concurrent_requests: 2,
+                read_write_ports: 4,
+                port_width: 1,
+            },
+            write_allocate: true,
+            write_back: true,
+            miss_latency: Latency::Const(miss_latency),
+            hit_latency: Latency::Const(hit_latency),
+            cache_line_size: line,
+            replacement_policy: policy,
+            sets,
+            ways,
+        }),
+    )
+}
+
+/// A complete fetch front-end (Fig. 3's upper half): instruction memory,
+/// pc register file, IMAU, and the fetch stage containing it.
+///
+/// Returns `(ifs, imem)`. The caller wires `FORWARD` edges from `ifs` to
+/// its decode/execute stages.
+pub struct FetchFrontend {
+    pub ifs: ObjId,
+    pub imau: ObjId,
+    pub imem: ObjId,
+    pub pcrf: ObjId,
+}
+
+/// `prefix` namespaces object and register names (`{prefix}ifs0` etc.) so a
+/// model can host several independent front-ends.
+pub fn fetch_frontend(
+    ag: &mut Ag,
+    prefix: &str,
+    imem_base: u64,
+    imem_end: u64,
+    issue_buffer_size: usize,
+    fetch_port_width: usize,
+) -> Result<FetchFrontend, AgError> {
+    let imem = ag.add(sram(
+        &format!("{prefix}imem0"),
+        imem_base,
+        imem_end,
+        1,
+        fetch_port_width,
+    ))?;
+    let pcrf = ag.add(build::register_file(
+        &format!("{prefix}pcrf0"),
+        32,
+        vec![(format!("{prefix}pc"), Data::int(32, imem_base as i64))],
+    ))?;
+    let imau = ag.add(build::instruction_memory_access_unit(
+        &format!("{prefix}imau0"),
+        1,
+    ))?;
+    let ifs = ag.add(build::fetch_stage(
+        &format!("{prefix}ifs0"),
+        1,
+        issue_buffer_size,
+    ))?;
+    ag.connect(imem, imau, EdgeKind::ReadData)?;
+    ag.connect(pcrf, imau, EdgeKind::ReadData)?;
+    ag.connect(imau, pcrf, EdgeKind::WriteData)?;
+    ag.connect(ifs, imau, EdgeKind::Contains)?;
+    Ok(FetchFrontend {
+        ifs,
+        imau,
+        imem,
+        pcrf,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontend_wires_validate() {
+        let mut ag = Ag::new();
+        let fe = fetch_frontend(&mut ag, "", 0, 0x1000, 4, 4).unwrap();
+        assert_eq!(ag.instruction_memory(fe.ifs), Some(fe.imem));
+        ag.validate().unwrap();
+    }
+
+    #[test]
+    fn prefixed_frontends_coexist() {
+        let mut ag = Ag::new();
+        fetch_frontend(&mut ag, "a_", 0, 0x1000, 4, 4).unwrap();
+        fetch_frontend(&mut ag, "b_", 0x1000, 0x2000, 8, 2).unwrap();
+        assert_eq!(ag.fetch_stages().len(), 2);
+        ag.validate().unwrap();
+    }
+
+    #[test]
+    fn storage_constructors_classify() {
+        let mut ag = Ag::new();
+        let s = ag.add(sram("s", 0, 64, 1, 1)).unwrap();
+        let d = ag.add(dram_default("d", 0x1000, 0x2000)).unwrap();
+        let c = ag.add(cache_default("c")).unwrap();
+        assert!(ag.kind(s).is_memory_interface());
+        assert!(ag.kind(d).is_memory_interface());
+        assert!(ag.kind(c).is_cache());
+        assert!(ag.storage_accepts(s, 10));
+        assert!(!ag.storage_accepts(s, 64));
+        assert!(ag.storage_accepts(d, 0x1800));
+    }
+}

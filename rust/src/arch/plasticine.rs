@@ -1,0 +1,184 @@
+//! A Plasticine-derived pattern-compute model (§6: the AIDG semantics were
+//! validated on "a Plasticine derived architecture" [27]).
+//!
+//! Plasticine organizes reconfigurable *pattern compute units* (PCUs —
+//! SIMD pipelines) and *pattern memory units* (PMUs — scratchpads with
+//! address generation) on an interconnect.  At ACADL's tensor abstraction
+//! level we model a chain of `stages` PCU/PMU pairs:
+//!
+//! * PMU `i` — scratchpad SRAM + MAU with vector staging registers
+//!   (`load`/`store` of whole 8-lane rows);
+//! * PCU `i` — ExecuteStage + vector FU (`vadd vmul vrelu vmaxp`) over a
+//!   vector register file.
+//!
+//! Dataflow programs stream rows: PMU loads feed PCU vector ops whose
+//! results the next PMU stores — the "parallel patterns" map/zip pipeline.
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::build;
+use crate::arch::parts;
+use crate::isa::GAMMA_TILE;
+
+#[derive(Debug, Clone)]
+pub struct PlasticineConfig {
+    /// Number of PCU/PMU pairs in the chain.
+    pub stages: usize,
+    /// Vector registers per PCU.
+    pub vregs: usize,
+    pub vec_latency: u64,
+    pub pmu_bytes: u64,
+    pub pmu_latency: u64,
+    pub issue_buffer: usize,
+    pub imem_range: (u64, u64),
+    pub pmu_base: u64,
+    pub dram_range: (u64, u64),
+}
+
+impl Default for PlasticineConfig {
+    fn default() -> Self {
+        PlasticineConfig {
+            stages: 4,
+            vregs: 16,
+            vec_latency: 1,
+            pmu_bytes: 0x4000,
+            pmu_latency: 1,
+            issue_buffer: 48,
+            imem_range: (0, 0x100000),
+            pmu_base: 0x40_0000,
+            dram_range: (0x1000_0000, 0x2000_0000),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PlasticineMachine {
+    pub ag: Ag,
+    pub cfg: PlasticineConfig,
+    pub pmus: Vec<ObjId>,
+    pub dram: ObjId,
+}
+
+impl PlasticineConfig {
+    pub fn build(&self) -> Result<PlasticineMachine, AgError> {
+        let mut ag = Ag::new();
+        let fe = parts::fetch_frontend(
+            &mut ag,
+            "",
+            self.imem_range.0,
+            self.imem_range.1,
+            self.issue_buffer,
+            4,
+        )?;
+        let dram = ag.add(parts::dram_ports(
+            "dram0",
+            self.dram_range.0,
+            self.dram_range.1,
+            self.stages,
+        ))?;
+
+        let mut pmus = Vec::with_capacity(self.stages);
+        let mut prev_pmu: Option<ObjId> = None;
+        for i in 0..self.stages {
+            let lo = self.pmu_base + i as u64 * self.pmu_bytes;
+            let pmu = ag.add(parts::sram_ports(
+                &format!("pmu[{i}]"),
+                lo,
+                lo + self.pmu_bytes,
+                self.pmu_latency,
+                GAMMA_TILE,
+                4,
+                2,
+            ))?;
+
+            // PCU: vector FU + vector rf.
+            let ex = ag.add(build::execute_stage(&format!("pcu_ex[{i}]"), 1))?;
+            let fu = ag.add(build::functional_unit(
+                &format!("pcu_fu[{i}]"),
+                &["vadd", "vmul", "vrelu", "vmaxp", "mov"],
+                Latency::Const(self.vec_latency),
+            ))?;
+            let vrf = ag.add(build::register_file(
+                &format!("pcu_rf[{i}]"),
+                128,
+                (0..self.vregs)
+                    .map(|r| (format!("p[{i}].{r}"), Data::vec(128, GAMMA_TILE)))
+                    .collect(),
+            ))?;
+            ag.connect(ex, fu, EdgeKind::Contains)?;
+            ag.connect(vrf, fu, EdgeKind::ReadData)?;
+            ag.connect(fu, vrf, EdgeKind::WriteData)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+
+            // PMU access unit: feeds this PCU's registers from its own
+            // scratchpad, the previous stage's scratchpad, and DRAM.
+            let mex = ag.add(build::execute_stage(&format!("pmu_ex[{i}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("pmu_mau[{i}]"),
+                &["load", "store"],
+                1,
+            ))?;
+            ag.connect(mex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, mex, EdgeKind::Forward)?;
+            ag.connect(mau, vrf, EdgeKind::WriteData)?;
+            ag.connect(vrf, mau, EdgeKind::ReadData)?;
+            ag.connect(pmu, mau, EdgeKind::ReadData)?;
+            ag.connect(mau, pmu, EdgeKind::WriteData)?;
+            ag.connect(dram, mau, EdgeKind::ReadData)?;
+            ag.connect(mau, dram, EdgeKind::WriteData)?;
+            if let Some(prev) = prev_pmu {
+                ag.connect(prev, mau, EdgeKind::ReadData)?;
+                ag.connect(mau, prev, EdgeKind::WriteData)?;
+            }
+            prev_pmu = Some(pmu);
+            pmus.push(pmu);
+        }
+
+        ag.validate()?;
+        Ok(PlasticineMachine {
+            ag,
+            cfg: self.clone(),
+            pmus,
+            dram,
+        })
+    }
+}
+
+impl PlasticineMachine {
+    pub fn vreg(&self, stage: usize, idx: usize) -> String {
+        format!("p[{stage}].{idx}")
+    }
+
+    pub fn pmu_range(&self, stage: usize) -> (u64, u64) {
+        let lo = self.cfg.pmu_base + stage as u64 * self.cfg.pmu_bytes;
+        (lo, lo + self.cfg.pmu_bytes)
+    }
+
+    pub fn dram_base(&self) -> u64 {
+        self.cfg.dram_range.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let m = PlasticineConfig::default().build().unwrap();
+        assert_eq!(m.pmus.len(), 4);
+        assert_eq!(m.ag.reg_count(), 4 * 16 + 1);
+    }
+
+    #[test]
+    fn chain_reaches_previous_pmu() {
+        let m = PlasticineConfig::default().build().unwrap();
+        let mau1 = m.ag.id("pmu_mau[1]").unwrap();
+        let storages = m.ag.storages_of_mau(mau1);
+        assert!(storages.contains(&m.pmus[0]), "reads previous stage");
+        assert!(storages.contains(&m.pmus[1]));
+        assert!(!storages.contains(&m.pmus[2]), "no skip-ahead");
+    }
+}

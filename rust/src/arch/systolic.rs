@@ -1,0 +1,293 @@
+//! The parameterizable systolic array — §4.2, Figs 4–5, Listings 2–3.
+//!
+//! A rows×cols grid of processing elements modeled with the PE template of
+//! Listing 2 (ExecuteStage + FunctionalUnit + RegisterFile, plus dangling
+//! edges), connected exactly as Listing 3: each PE's FU writes its `a`
+//! operand to the right neighbor's register file and its `b` operand to
+//! the neighbor below (output-stationary dataflow).  Load units feed the
+//! first row (B columns) and first column (A rows); store units drain the
+//! accumulators.
+//!
+//! Registers per PE (r, c): `pe{r}_{c}_a`, `pe{r}_{c}_b`, `pe{r}_{c}_acc`.
+//! The PE FU processes `macf` (mac + forward, [`Opcode::MacFwd`]) and
+//! `movi` (accumulator reset).
+//!
+//! *Deviation from Fig. 4, documented:* store units are connected to every
+//! PE's register file rather than only the last row/column, so the
+//! output-stationary accumulators can be drained without a shift-out
+//! instruction sequence; the store-unit *count* still scales with the
+//! array edge as in the figure.
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::{Ag, AgError, ObjId};
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::build;
+use crate::acadl_core::template::{connect_dangling, DanglingEdge};
+use crate::arch::parts;
+
+/// Parameters of the systolic array model (Listing 3's
+/// `generate_architecture(rows, columns)`).
+#[derive(Debug, Clone)]
+pub struct SystolicConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// MAC-and-forward latency per PE step.
+    pub pe_latency: u64,
+    /// Number of load units on each array edge (defaults to edge length).
+    pub load_units: Option<usize>,
+    pub store_units: Option<usize>,
+    /// Issue buffer of the fetch unit (needs to cover the instruction
+    /// window of a wavefront; defaults to 4·rows·cols).
+    pub issue_buffer: Option<usize>,
+    pub fetch_width: usize,
+    pub imem_range: (u64, u64),
+    pub dmem_range: (u64, u64),
+    /// Data memory latency (SRAM).
+    pub dmem_latency: u64,
+}
+
+impl Default for SystolicConfig {
+    fn default() -> Self {
+        SystolicConfig {
+            rows: 4,
+            cols: 4,
+            pe_latency: 1,
+            load_units: None,
+            store_units: None,
+            issue_buffer: None,
+            fetch_width: 8,
+            imem_range: (0x0, 0x100000),
+            dmem_range: (0x100000, 0x900000),
+            dmem_latency: 2,
+        }
+    }
+}
+
+impl SystolicConfig {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        SystolicConfig {
+            rows,
+            cols,
+            ..Default::default()
+        }
+    }
+}
+
+/// The PE template (Listing 2): objects + internal edges + dangling edges.
+struct PeTemplate {
+    rf: ObjId,
+    /// `fu_outgoing_write` of Listing 2.
+    fu_outgoing_write: DanglingEdge,
+    /// `rf_ingoing_write` of Listing 2.
+    rf_ingoing_write: DanglingEdge,
+}
+
+impl PeTemplate {
+    fn new(ag: &mut Ag, row: usize, col: usize, latency: u64) -> Result<Self, AgError> {
+        let ex = ag.add(build::execute_stage(&format!("ex[{row}][{col}]"), 1))?;
+        let fu = ag.add(build::functional_unit(
+            &format!("fu[{row}][{col}]"),
+            &["macf", "movi", "mov"],
+            Latency::Const(latency),
+        ))?;
+        let rf = ag.add(build::register_file(
+            &format!("rf[{row}][{col}]"),
+            32,
+            vec![
+                (format!("pe{row}_{col}_a"), Data::f32(0.0)),
+                (format!("pe{row}_{col}_b"), Data::f32(0.0)),
+                (format!("pe{row}_{col}_acc"), Data::f32(0.0)),
+            ],
+        ))?;
+        ag.connect(ex, fu, EdgeKind::Contains)?;
+        ag.connect(rf, fu, EdgeKind::ReadData)?;
+        ag.connect(fu, rf, EdgeKind::WriteData)?;
+        Ok(PeTemplate {
+            rf,
+            fu_outgoing_write: DanglingEdge::from_source(EdgeKind::WriteData, fu),
+            rf_ingoing_write: DanglingEdge::to_target(EdgeKind::WriteData, rf),
+        })
+    }
+}
+
+/// The built systolic array.
+#[derive(Debug, Clone)]
+pub struct SystolicMachine {
+    pub ag: Ag,
+    pub cfg: SystolicConfig,
+    pub dmem: ObjId,
+}
+
+impl SystolicConfig {
+    pub fn build(&self) -> Result<SystolicMachine, AgError> {
+        assert!(self.rows >= 1 && self.cols >= 1);
+        let mut ag = Ag::new();
+        let issue = self
+            .issue_buffer
+            .unwrap_or((4 * self.rows * self.cols).max(16));
+        let fe = parts::fetch_frontend(
+            &mut ag,
+            "",
+            self.imem_range.0,
+            self.imem_range.1,
+            issue,
+            self.fetch_width,
+        )?;
+
+        // PEs (Listing 3's nested instantiation loop).
+        let mut pes: Vec<Vec<PeTemplate>> = Vec::with_capacity(self.rows);
+        for r in 0..self.rows {
+            let mut row = Vec::with_capacity(self.cols);
+            for c in 0..self.cols {
+                let pe = PeTemplate::new(&mut ag, r, c, self.pe_latency)?;
+                // Fetch unit issues PE instructions directly.
+                let ex = ag.id(&format!("ex[{r}][{c}]")).unwrap();
+                ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+                row.push(pe);
+            }
+            pes.push(row);
+        }
+        // Neighbor connections via dangling edges (Listing 3):
+        // vertical (b flows down) and horizontal (a flows right).
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if r > 0 {
+                    connect_dangling(
+                        &mut ag,
+                        pes[r - 1][c].fu_outgoing_write,
+                        pes[r][c].rf_ingoing_write,
+                    )
+                    .map_err(|e| match e {
+                        crate::acadl_core::template::TemplateError::Ag(a) => a,
+                        other => AgError::Invalid(other.to_string()),
+                    })?;
+                }
+                if c > 0 {
+                    connect_dangling(
+                        &mut ag,
+                        pes[r][c - 1].fu_outgoing_write,
+                        pes[r][c].rf_ingoing_write,
+                    )
+                    .map_err(|e| match e {
+                        crate::acadl_core::template::TemplateError::Ag(a) => a,
+                        other => AgError::Invalid(other.to_string()),
+                    })?;
+                }
+            }
+        }
+
+        // Data memory: enough ports and request slots for every load and
+        // store unit to stream concurrently (the array-edge bandwidth of
+        // Fig. 4).
+        let n_load = self.load_units.unwrap_or(self.rows + self.cols).max(1);
+        let n_store = self
+            .store_units
+            .unwrap_or((self.rows + self.cols) / 2)
+            .max(1);
+        let dmem = ag.add(parts::sram_ports(
+            "dmem0",
+            self.dmem_range.0,
+            self.dmem_range.1,
+            self.dmem_latency,
+            4,
+            n_load + n_store,
+            n_load + n_store,
+        ))?;
+
+        // Load units: first row + first column (B from the top, A from the
+        // left).  Each unit = ExecuteStage + MAU (its own stage so loads
+        // proceed in parallel).
+        for u in 0..n_load {
+            let ex = ag.add(build::execute_stage(&format!("lu_ex[{u}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("lu[{u}]"),
+                &["load"],
+                1,
+            ))?;
+            ag.connect(ex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+            ag.connect(dmem, mau, EdgeKind::ReadData)?;
+            // Load units write edge-PE registers (first row and column) —
+            // and, for generality of mappings, any PE rf (multicast NoC).
+            for row in &pes {
+                for pe in row {
+                    ag.connect(mau, pe.rf, EdgeKind::WriteData)?;
+                }
+            }
+        }
+
+        // Store units: drain accumulators to memory.
+        for u in 0..n_store {
+            let ex = ag.add(build::execute_stage(&format!("su_ex[{u}]"), 1))?;
+            let mau = ag.add(build::memory_access_unit(
+                &format!("su[{u}]"),
+                &["store"],
+                1,
+            ))?;
+            ag.connect(ex, mau, EdgeKind::Contains)?;
+            ag.connect(fe.ifs, ex, EdgeKind::Forward)?;
+            ag.connect(mau, dmem, EdgeKind::WriteData)?;
+            for row in &pes {
+                for pe in row {
+                    ag.connect(pe.rf, mau, EdgeKind::ReadData)?;
+                }
+            }
+        }
+
+        ag.validate()?;
+        Ok(SystolicMachine {
+            ag,
+            cfg: self.clone(),
+            dmem,
+        })
+    }
+}
+
+impl SystolicMachine {
+    pub fn dmem_base(&self) -> u64 {
+        self.cfg.dmem_range.0
+    }
+
+    /// PE register names for codegen.
+    pub fn pe_reg(&self, r: usize, c: usize, which: &str) -> String {
+        format!("pe{r}_{c}_{which}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_square_and_rect() {
+        for (r, c) in [(1, 1), (2, 3), (4, 4)] {
+            let m = SystolicConfig::new(r, c).build().unwrap();
+            let s = m.ag.summary();
+            assert!(
+                s.contains(&format!("RegisterFile={}", r * c + 1)),
+                "{r}x{c}: {s}"
+            );
+            // 3 regs per PE + pc.
+            assert_eq!(m.ag.reg_count(), 3 * r * c + 1);
+        }
+    }
+
+    #[test]
+    fn neighbor_edges_exist() {
+        let m = SystolicConfig::new(2, 2).build().unwrap();
+        let fu00 = m.ag.id("fu[0][0]").unwrap();
+        let rf01 = m.ag.id("rf[0][1]").unwrap();
+        let rf10 = m.ag.id("rf[1][0]").unwrap();
+        let writable = m.ag.writable_rfs(fu00);
+        assert!(writable.contains(&rf01), "a forwards right");
+        assert!(writable.contains(&rf10), "b forwards down");
+    }
+
+    #[test]
+    fn scales_to_16x16() {
+        let m = SystolicConfig::new(16, 16).build().unwrap();
+        assert_eq!(m.ag.reg_count(), 3 * 256 + 1);
+        m.ag.validate().unwrap();
+    }
+}

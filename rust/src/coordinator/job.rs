@@ -1,0 +1,643 @@
+//! Job descriptors and execution: one job = one (target, workload, mode)
+//! evaluation producing a result row.
+
+use crate::aidg;
+use crate::arch::gamma::GammaConfig;
+use crate::arch::oma::OmaConfig;
+use crate::arch::systolic::SystolicConfig;
+use crate::dnn::graph::DnnGraph;
+use crate::dnn::lowering::{self, SimMode};
+use crate::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
+use crate::mapping::uma::{self, Machine, Operator, TargetConfig};
+use crate::sim::engine::Engine;
+use crate::sim::functional::FunctionalSim;
+use crate::util::json::{Json, JsonError};
+
+/// Serializable target description (the job wire format).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TargetSpec {
+    Oma {
+        cache: bool,
+        mac_latency: Option<u64>,
+    },
+    Systolic {
+        rows: usize,
+        cols: usize,
+    },
+    Gamma {
+        units: usize,
+    },
+}
+
+impl TargetSpec {
+    pub fn to_config(&self) -> TargetConfig {
+        match self {
+            TargetSpec::Oma { cache, mac_latency } => {
+                let mut cfg = OmaConfig::default();
+                if !cache {
+                    cfg.cache = None;
+                }
+                if let Some(l) = mac_latency {
+                    cfg.mac_latency = *l;
+                }
+                TargetConfig::Oma(cfg)
+            }
+            TargetSpec::Systolic { rows, cols } => {
+                TargetConfig::Systolic(SystolicConfig::new(*rows, *cols))
+            }
+            TargetSpec::Gamma { units } => TargetConfig::Gamma(GammaConfig::new(*units)),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            TargetSpec::Oma { cache, .. } => {
+                format!("oma{}", if *cache { "+cache" } else { "" })
+            }
+            TargetSpec::Systolic { rows, cols } => format!("systolic_{rows}x{cols}"),
+            TargetSpec::Gamma { units } => format!("gamma_{units}u"),
+        }
+    }
+
+    /// Silicon-area proxy for Pareto plots (MAC-equivalent units).
+    pub fn area_proxy(&self) -> f64 {
+        match self {
+            TargetSpec::Oma { cache, .. } => 1.0 + if *cache { 0.5 } else { 0.0 },
+            TargetSpec::Systolic { rows, cols } => (rows * cols) as f64,
+            TargetSpec::Gamma { units } => (units * 64) as f64, // 8×8 MXU each
+        }
+    }
+}
+
+/// The workload half of a job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    Gemm {
+        m: usize,
+        k: usize,
+        n: usize,
+        tile: Option<usize>,
+        order: Option<LoopOrder>,
+    },
+    /// The built-in MLPs (small = tests; big = the E9 784-256-128-10).
+    Mlp {
+        small: bool,
+        batch: usize,
+    },
+}
+
+impl Workload {
+    pub fn describe(&self) -> String {
+        match self {
+            Workload::Gemm { m, k, n, tile, order } => {
+                let mut s = format!("gemm_{m}x{k}x{n}");
+                if let Some(t) = tile {
+                    s.push_str(&format!("_t{t}"));
+                }
+                if let Some(o) = order {
+                    s.push_str(&format!("_{}", o.name()));
+                }
+                s
+            }
+            Workload::Mlp { small, batch } => {
+                format!("mlp_{}_b{batch}", if *small { "small" } else { "784" })
+            }
+        }
+    }
+}
+
+/// Simulation mode for the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimModeSpec {
+    Functional,
+    Timed,
+    /// AIDG fast estimate.
+    Estimate,
+}
+
+impl SimModeSpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimModeSpec::Functional => "functional",
+            SimModeSpec::Timed => "timed",
+            SimModeSpec::Estimate => "estimate",
+        }
+    }
+}
+
+/// One evaluation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    pub target: TargetSpec,
+    pub workload: Workload,
+    pub mode: SimModeSpec,
+    pub max_cycles: u64,
+}
+
+pub fn default_max_cycles() -> u64 {
+    200_000_000
+}
+
+/// One result row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    pub id: u64,
+    pub target: String,
+    pub workload: String,
+    pub mode: SimModeSpec,
+    pub cycles: u64,
+    pub instructions: u64,
+    pub ipc: f64,
+    pub utilization: f64,
+    /// Functional-vs-reference check (None = not applicable for mode).
+    pub numerics_ok: Option<bool>,
+    pub wall_micros: u64,
+    pub error: Option<String>,
+    pub area_proxy: f64,
+}
+
+impl JobResult {
+    fn err(spec: &JobSpec, msg: String, wall_micros: u64) -> Self {
+        JobResult {
+            id: spec.id,
+            target: spec.target.describe(),
+            workload: spec.workload.describe(),
+            mode: spec.mode,
+            cycles: 0,
+            instructions: 0,
+            ipc: 0.0,
+            utilization: 0.0,
+            numerics_ok: None,
+            wall_micros,
+            error: Some(msg),
+            area_proxy: spec.target.area_proxy(),
+        }
+    }
+}
+
+fn gemm_inputs(p: &GemmParams) -> (Vec<f32>, Vec<f32>) {
+    let mut s = 0xC0FF_EE00_u64 ^ ((p.m as u64) << 32 | (p.k as u64) << 16 | p.n as u64);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        ((s % 13) as f32 - 6.0) / 3.0
+    };
+    (
+        (0..p.m * p.k).map(|_| next()).collect(),
+        (0..p.k * p.n).map(|_| next()).collect(),
+    )
+}
+
+/// Execute one job on an already-built machine (the pool builds machines
+/// once per target batch).
+pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
+    let start = std::time::Instant::now();
+    let done = |mut r: JobResult| {
+        r.wall_micros = start.elapsed().as_micros() as u64;
+        r
+    };
+    let base = JobResult {
+        id: spec.id,
+        target: spec.target.describe(),
+        workload: spec.workload.describe(),
+        mode: spec.mode,
+        cycles: 0,
+        instructions: 0,
+        ipc: 0.0,
+        utilization: 0.0,
+        numerics_ok: None,
+        wall_micros: 0,
+        error: None,
+        area_proxy: spec.target.area_proxy(),
+    };
+
+    match &spec.workload {
+        Workload::Gemm { m, k, n, tile, order } => {
+            let mut p = GemmParams::new(*m, *k, *n);
+            if let Some(t) = tile {
+                p = p.with_tile(*t);
+            }
+            if let Some(o) = order {
+                p = p.with_order(*o);
+            }
+            // Γ̈ requires multiples of 8; pad transparently.
+            if matches!(machine, Machine::Gamma(_)) {
+                p.m = p.m.div_ceil(8) * 8;
+                p.k = p.k.div_ceil(8) * 8;
+                p.n = p.n.div_ceil(8) * 8;
+            }
+            let lowered = match uma::lower(machine, &Operator::Gemm(p)) {
+                Ok(l) => l,
+                Err(e) => {
+                    return JobResult::err(spec, e.to_string(), start.elapsed().as_micros() as u64)
+                }
+            };
+            let (a, b) = gemm_inputs(&p);
+            match spec.mode {
+                SimModeSpec::Functional => {
+                    let mut sim = FunctionalSim::new(machine.ag());
+                    lowered.layout.load_inputs(&p, &mut sim.mem, &a, &b);
+                    match sim.run(&lowered.program, spec.max_cycles) {
+                        Ok(st) => {
+                            let got = lowered.layout.read_c(&p, &sim.mem);
+                            let want = gemm_ref(&p, &a, &b);
+                            let ok = got
+                                .iter()
+                                .zip(&want)
+                                .all(|(g, w)| (g - w).abs() < 1e-2);
+                            done(JobResult {
+                                instructions: st.instructions,
+                                numerics_ok: Some(ok),
+                                ..base
+                            })
+                        }
+                        Err(e) => done(JobResult::err(spec, e.to_string(), 0)),
+                    }
+                }
+                SimModeSpec::Timed => {
+                    let mut e = match Engine::new(machine.ag(), &lowered.program) {
+                        Ok(e) => e,
+                        Err(err) => return done(JobResult::err(spec, err.to_string(), 0)),
+                    };
+                    lowered.layout.load_inputs(&p, &mut e.mem, &a, &b);
+                    match e.run(spec.max_cycles) {
+                        Ok(st) => {
+                            let got = lowered.layout.read_c(&p, &e.mem);
+                            let want = gemm_ref(&p, &a, &b);
+                            let ok = got
+                                .iter()
+                                .zip(&want)
+                                .all(|(g, w)| (g - w).abs() < 1e-2);
+                            done(JobResult {
+                                cycles: st.cycles,
+                                instructions: st.retired,
+                                ipc: st.ipc(),
+                                utilization: st.mean_fu_utilization(),
+                                numerics_ok: Some(ok),
+                                ..base
+                            })
+                        }
+                        Err(err) => done(JobResult::err(spec, err.to_string(), 0)),
+                    }
+                }
+                SimModeSpec::Estimate => {
+                    match aidg::estimate_fixed_point(machine.ag(), &lowered.program, spec.max_cycles)
+                    {
+                        Ok(est) => done(JobResult {
+                            cycles: est.cycles,
+                            instructions: est.instructions,
+                            ipc: if est.cycles > 0 {
+                                est.instructions as f64 / est.cycles as f64
+                            } else {
+                                0.0
+                            },
+                            ..base
+                        }),
+                        Err(err) => done(JobResult::err(spec, err.to_string(), 0)),
+                    }
+                }
+            }
+        }
+        Workload::Mlp { small, batch } => {
+            let graph = if *small {
+                DnnGraph::mlp_small()
+            } else {
+                DnnGraph::mlp_784_256_128_10()
+            };
+            let mode = match spec.mode {
+                SimModeSpec::Functional => SimMode::Functional,
+                _ => SimMode::Timed,
+            };
+            let lg = match lowering::lower_graph(machine, &graph, *batch) {
+                Ok(l) => l,
+                Err(e) => return done(JobResult::err(spec, e.to_string(), 0)),
+            };
+            let x = graph.input_batch(*batch);
+            match lowering::run_schedule(machine, &lg, &x, mode, spec.max_cycles) {
+                Ok(rep) => {
+                    let want = graph.forward_ref(&x, *batch);
+                    let ok = rep
+                        .output
+                        .iter()
+                        .zip(&want)
+                        .all(|(g, w)| (g - w).abs() < 1e-2);
+                    done(JobResult {
+                        cycles: rep.total_cycles,
+                        instructions: rep.total_instructions,
+                        ipc: if rep.total_cycles > 0 {
+                            rep.total_instructions as f64 / rep.total_cycles as f64
+                        } else {
+                            0.0
+                        },
+                        numerics_ok: Some(ok),
+                        ..base
+                    })
+                }
+                Err(e) => done(JobResult::err(spec, e.to_string(), 0)),
+            }
+        }
+    }
+}
+
+/// Build the machine and execute (standalone path; the pool prefers
+/// [`execute_on`] with a shared machine).
+pub fn execute(spec: &JobSpec) -> JobResult {
+    let start = std::time::Instant::now();
+    match spec.target.to_config().build() {
+        Ok(machine) => execute_on(&machine, spec),
+        Err(e) => JobResult::err(spec, e.to_string(), start.elapsed().as_micros() as u64),
+    }
+}
+
+// ------------------------------------------------------- JSON wire format
+
+impl TargetSpec {
+    pub fn to_json(&self) -> Json {
+        match self {
+            TargetSpec::Oma { cache, mac_latency } => Json::obj(vec![
+                ("kind", Json::str("oma")),
+                ("cache", Json::Bool(*cache)),
+                (
+                    "mac_latency",
+                    mac_latency.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+                ),
+            ]),
+            TargetSpec::Systolic { rows, cols } => Json::obj(vec![
+                ("kind", Json::str("systolic")),
+                ("rows", Json::num(*rows as f64)),
+                ("cols", Json::num(*cols as f64)),
+            ]),
+            TargetSpec::Gamma { units } => Json::obj(vec![
+                ("kind", Json::str("gamma")),
+                ("units", Json::num(*units as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        match v.field("kind")?.as_str()? {
+            "oma" => Ok(TargetSpec::Oma {
+                cache: v.opt_bool("cache", true),
+                mac_latency: v
+                    .get("mac_latency")
+                    .and_then(|x| x.as_u64().ok()),
+            }),
+            "systolic" => Ok(TargetSpec::Systolic {
+                rows: v.field("rows")?.as_usize()?,
+                cols: v.field("cols")?.as_usize()?,
+            }),
+            "gamma" => Ok(TargetSpec::Gamma {
+                units: v.field("units")?.as_usize()?,
+            }),
+            other => Err(JsonError::Type("oma|systolic|gamma", Box::leak(other.to_string().into_boxed_str()))),
+        }
+    }
+}
+
+impl Workload {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Workload::Gemm { m, k, n, tile, order } => Json::obj(vec![
+                ("kind", Json::str("gemm")),
+                ("m", Json::num(*m as f64)),
+                ("k", Json::num(*k as f64)),
+                ("n", Json::num(*n as f64)),
+                (
+                    "tile",
+                    tile.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "order",
+                    order.map(|o| Json::str(o.name())).unwrap_or(Json::Null),
+                ),
+            ]),
+            Workload::Mlp { small, batch } => Json::obj(vec![
+                ("kind", Json::str("mlp")),
+                ("small", Json::Bool(*small)),
+                ("batch", Json::num(*batch as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        match v.field("kind")?.as_str()? {
+            "gemm" => Ok(Workload::Gemm {
+                m: v.field("m")?.as_usize()?,
+                k: v.field("k")?.as_usize()?,
+                n: v.field("n")?.as_usize()?,
+                tile: v.get("tile").and_then(|x| x.as_usize().ok()),
+                order: v
+                    .get("order")
+                    .and_then(|x| x.as_str().ok())
+                    .and_then(|name| LoopOrder::ALL.into_iter().find(|o| o.name() == name)),
+            }),
+            "mlp" => Ok(Workload::Mlp {
+                small: v.opt_bool("small", true),
+                batch: v.field("batch")?.as_usize()?,
+            }),
+            _ => Err(JsonError::Type("gemm|mlp", "other")),
+        }
+    }
+}
+
+impl SimModeSpec {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "functional" => Some(SimModeSpec::Functional),
+            "timed" => Some(SimModeSpec::Timed),
+            "estimate" => Some(SimModeSpec::Estimate),
+            _ => None,
+        }
+    }
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("target", self.target.to_json()),
+            ("workload", self.workload.to_json()),
+            ("mode", Json::str(self.mode.name())),
+            ("max_cycles", Json::num(self.max_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(JobSpec {
+            id: v.field("id")?.as_u64()?,
+            target: TargetSpec::from_json(v.field("target")?)?,
+            workload: Workload::from_json(v.field("workload")?)?,
+            mode: SimModeSpec::from_name(v.field("mode")?.as_str()?)
+                .ok_or(JsonError::Type("functional|timed|estimate", "other"))?,
+            max_cycles: v.opt_u64("max_cycles", default_max_cycles()),
+        })
+    }
+
+    pub fn parse(line: &str) -> Result<Self, JsonError> {
+        Self::from_json(&Json::parse(line)?)
+    }
+}
+
+impl JobResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("target", Json::str(self.target.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            ("mode", Json::str(self.mode.name())),
+            ("cycles", Json::num(self.cycles as f64)),
+            ("instructions", Json::num(self.instructions as f64)),
+            ("ipc", Json::num(self.ipc)),
+            ("utilization", Json::num(self.utilization)),
+            (
+                "numerics_ok",
+                self.numerics_ok.map(Json::Bool).unwrap_or(Json::Null),
+            ),
+            ("wall_micros", Json::num(self.wall_micros as f64)),
+            (
+                "error",
+                self.error
+                    .clone()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+            ("area_proxy", Json::num(self.area_proxy)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(JobResult {
+            id: v.field("id")?.as_u64()?,
+            target: v.field("target")?.as_str()?.to_string(),
+            workload: v.field("workload")?.as_str()?.to_string(),
+            mode: SimModeSpec::from_name(v.field("mode")?.as_str()?)
+                .ok_or(JsonError::Type("mode", "other"))?,
+            cycles: v.field("cycles")?.as_u64()?,
+            instructions: v.field("instructions")?.as_u64()?,
+            ipc: v.field("ipc")?.as_f64()?,
+            utilization: v.field("utilization")?.as_f64()?,
+            numerics_ok: v.get("numerics_ok").and_then(|x| x.as_bool().ok()),
+            wall_micros: v.opt_u64("wall_micros", 0),
+            error: v
+                .get("error")
+                .and_then(|x| x.as_str().ok())
+                .map(|s| s.to_string()),
+            area_proxy: v
+                .get("area_proxy")
+                .and_then(|x| x.as_f64().ok())
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_job_roundtrips_json() {
+        let spec = JobSpec {
+            id: 7,
+            target: TargetSpec::Systolic { rows: 4, cols: 4 },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: Some(4),
+                order: Some(LoopOrder::Kij),
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 1_000_000,
+        };
+        let line = spec.to_json().to_string();
+        let back = JobSpec::parse(&line).unwrap();
+        assert_eq!(back, spec);
+
+        // Results round-trip too.
+        let r = execute(&JobSpec {
+            max_cycles: 10_000_000,
+            target: TargetSpec::Gamma { units: 1 },
+            ..spec
+        });
+        let back = JobResult::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.cycles, r.cycles);
+        assert_eq!(back.numerics_ok, r.numerics_ok);
+    }
+
+    #[test]
+    fn timed_gemm_job_executes_with_valid_numerics() {
+        let spec = JobSpec {
+            id: 1,
+            target: TargetSpec::Gamma { units: 1 },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 10_000_000,
+        };
+        let r = execute(&spec);
+        assert_eq!(r.error, None);
+        assert!(r.cycles > 0);
+        assert_eq!(r.numerics_ok, Some(true));
+    }
+
+    #[test]
+    fn estimate_mode_is_faster_than_timed() {
+        let mk = |mode| JobSpec {
+            id: 0,
+            target: TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode,
+            max_cycles: 50_000_000,
+        };
+        let timed = execute(&mk(SimModeSpec::Timed));
+        let est = execute(&mk(SimModeSpec::Estimate));
+        assert_eq!(timed.error, None);
+        assert_eq!(est.error, None);
+        assert!(est.cycles > 0);
+        assert!(
+            est.wall_micros < timed.wall_micros,
+            "estimate {}µs vs timed {}µs",
+            est.wall_micros,
+            timed.wall_micros
+        );
+    }
+
+    #[test]
+    fn bad_target_reports_error() {
+        let spec = JobSpec {
+            id: 9,
+            target: TargetSpec::Oma {
+                cache: false,
+                mac_latency: None,
+            },
+            workload: Workload::Gemm {
+                m: 4,
+                k: 4,
+                n: 4,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 10, // guaranteed cycle-limit error
+        };
+        let r = execute(&spec);
+        assert!(r.error.is_some());
+    }
+}

@@ -1,0 +1,21 @@
+//! The coordinator: an async job system for simulation campaigns.
+//!
+//! The paper's closing pitch (§7) is using the timing simulation "in the
+//! optimization loop of hardware-aware NAS and DNN/HW Co-Design" — which
+//! means *many* (architecture × workload × mapping) evaluations.  This
+//! layer is the production harness for that loop:
+//!
+//! * [`job`] — serializable job descriptors (target config, workload,
+//!   simulation mode) and result rows.
+//! * [`pool`] — a tokio worker pool executing jobs on blocking threads,
+//!   **batched by target** so each architecture graph is built once and
+//!   shared across the jobs that sweep workloads on it.
+//! * [`server`] — a line-delimited-JSON TCP front-end: external tools
+//!   (NAS searchers, DSE scripts) submit jobs and stream results.
+
+pub mod job;
+pub mod pool;
+pub mod server;
+
+pub use job::{JobResult, JobSpec, SimModeSpec, TargetSpec, Workload};
+pub use pool::{run_jobs, run_jobs_blocking};

@@ -1,0 +1,141 @@
+//! The worker pool: a hand-rolled thread pool (the offline build has no
+//! async runtime — DESIGN.md §Substitutions) executing job batches,
+//! **grouped by target** so each architecture graph builds once and is
+//! shared (`Arc`) across that target's jobs — the coordinator's batching
+//! policy.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::mapping::uma::Machine;
+
+use super::job::{execute_on, JobResult, JobSpec};
+
+/// Group specs by serialized target (machines are reused within a group).
+fn group_by_target(specs: &[JobSpec]) -> Vec<Vec<JobSpec>> {
+    let mut groups: HashMap<String, Vec<JobSpec>> = HashMap::new();
+    for s in specs {
+        groups
+            .entry(s.target.to_json().to_string())
+            .or_default()
+            .push(s.clone());
+    }
+    groups.into_values().collect()
+}
+
+/// Run all jobs with at most `workers` concurrent evaluations; results are
+/// returned sorted by job id.  Work is distributed over a shared channel
+/// so long jobs don't starve short ones (work stealing by contention).
+pub fn run_jobs(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Build each target's machine once.
+    type Work = (Option<Arc<Machine>>, JobSpec);
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    for group in group_by_target(&specs) {
+        let machine = group[0].target.to_config().build().ok().map(Arc::new);
+        for spec in group {
+            work_tx.send((machine.clone(), spec)).expect("queue");
+        }
+    }
+    drop(work_tx);
+
+    let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+    let (res_tx, res_rx) = mpsc::channel::<JobResult>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            let work_rx = Arc::clone(&work_rx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || loop {
+                let item = { work_rx.lock().expect("rx lock").recv() };
+                match item {
+                    Ok((machine, spec)) => {
+                        let result = match &machine {
+                            Some(m) => execute_on(m, &spec),
+                            None => super::job::execute(&spec), // re-report build error
+                        };
+                        if res_tx.send(result).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return, // queue drained
+                }
+            });
+        }
+        drop(res_tx);
+        let mut results: Vec<JobResult> = res_rx.iter().collect();
+        results.sort_by_key(|r| r.id);
+        results
+    })
+}
+
+/// Alias kept for API symmetry with the async-runtime version this
+/// replaces (benches and the CLI call this name).
+pub fn run_jobs_blocking(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
+    run_jobs(specs, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{SimModeSpec, TargetSpec, Workload};
+
+    fn gemm_spec(id: u64, rows: usize) -> JobSpec {
+        JobSpec {
+            id,
+            target: TargetSpec::Systolic { rows, cols: rows },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 10_000_000,
+        }
+    }
+
+    #[test]
+    fn pool_runs_batch_and_orders_results() {
+        let specs: Vec<JobSpec> = (0..6)
+            .map(|i| gemm_spec(i, 2 + (i as usize % 2) * 2))
+            .collect();
+        let results = run_jobs(specs, 4);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.error, None, "{r:?}");
+            assert!(r.cycles > 0);
+        }
+        // Same target → identical deterministic cycles (machine reuse must
+        // not leak state between jobs).
+        assert_eq!(results[0].cycles, results[2].cycles);
+        assert_eq!(results[1].cycles, results[3].cycles);
+    }
+
+    #[test]
+    fn pool_survives_failing_jobs() {
+        let mut specs = vec![gemm_spec(0, 2)];
+        specs.push(JobSpec {
+            max_cycles: 5,
+            ..gemm_spec(1, 2)
+        });
+        let results = run_jobs(specs, 2);
+        assert_eq!(results[0].error, None);
+        assert!(results[1].error.is_some());
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let specs: Vec<JobSpec> = (0..4).map(|i| gemm_spec(i, 2)).collect();
+        let serial = run_jobs(specs.clone(), 1);
+        let parallel = run_jobs(specs, 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.cycles, b.cycles, "determinism across worker counts");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Line-delimited-JSON TCP server: external optimization loops (NAS, DSE
+//! scripts) submit [`JobSpec`] lines and receive [`JobResult`] lines.
+//!
+//! Protocol: one JSON `JobSpec` per line in, one JSON `JobResult` per line
+//! out (same order per connection).  Malformed lines produce an error
+//! object instead of killing the connection.  Thread-per-connection with a
+//! global simulation-slot semaphore (the offline build has no async
+//! runtime — DESIGN.md §Substitutions).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::json::Json;
+
+use super::job::{execute, JobSpec};
+
+/// Counting semaphore bounding concurrent simulations across connections.
+pub struct Slots {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Slots {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Slots {
+            count: Mutex::new(n.max(1)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn acquire(&self) {
+        let mut c = self.count.lock().expect("slots");
+        while *c == 0 {
+            c = self.cv.wait(c).expect("slots wait");
+        }
+        *c -= 1;
+    }
+
+    fn release(&self) {
+        *self.count.lock().expect("slots") += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Serve until the listener errors (runs forever under normal operation).
+pub fn serve(listener: TcpListener, workers: usize) -> std::io::Result<()> {
+    let slots = Slots::new(workers);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let slots = Arc::clone(&slots);
+        std::thread::spawn(move || {
+            let _ = handle(stream, slots);
+        });
+    }
+    Ok(())
+}
+
+fn handle(stream: TcpStream, slots: Arc<Slots>) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match JobSpec::parse(&line) {
+            Ok(spec) => {
+                slots.acquire();
+                let result = execute(&spec);
+                slots.release();
+                result.to_json().to_string()
+            }
+            Err(e) => Json::obj(vec![(
+                "error",
+                Json::str(format!("bad request: {e}")),
+            )])
+            .to_string(),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{JobResult, SimModeSpec, TargetSpec, Workload};
+
+    fn start_server(workers: usize) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = serve(listener, workers);
+        });
+        addr
+    }
+
+    #[test]
+    fn serves_a_job_over_tcp() {
+        let addr = start_server(2);
+        let spec = JobSpec {
+            id: 42,
+            target: TargetSpec::Gamma { units: 1 },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            max_cycles: 10_000_000,
+        };
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let line = spec.to_json().to_string() + "\n";
+        stream.write_all(line.as_bytes()).unwrap();
+
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let result =
+            JobResult::from_json(&Json::parse(reply.trim()).unwrap()).expect("result json");
+        assert_eq!(result.id, 42);
+        assert_eq!(result.error, None);
+        assert!(result.cycles > 0);
+        assert_eq!(result.numerics_ok, Some(true));
+    }
+
+    #[test]
+    fn bad_request_gets_error_line() {
+        let addr = start_server(1);
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(b"this is not json\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("bad request"), "{reply}");
+    }
+
+    #[test]
+    fn multiple_jobs_one_connection_preserve_order() {
+        let addr = start_server(2);
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        for id in 0..3u64 {
+            let spec = JobSpec {
+                id,
+                target: TargetSpec::Systolic { rows: 2, cols: 2 },
+                workload: Workload::Gemm {
+                    m: 4,
+                    k: 4,
+                    n: 4,
+                    tile: None,
+                    order: None,
+                },
+                mode: SimModeSpec::Estimate,
+                max_cycles: 10_000_000,
+            };
+            let line = spec.to_json().to_string() + "\n";
+            stream.write_all(line.as_bytes()).unwrap();
+        }
+        let mut reader = BufReader::new(stream);
+        for id in 0..3u64 {
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            let result = JobResult::from_json(&Json::parse(reply.trim()).unwrap()).unwrap();
+            assert_eq!(result.id, id);
+        }
+    }
+}

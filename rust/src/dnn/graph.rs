@@ -1,0 +1,189 @@
+//! A minimal sequential DNN graph IR: the shapes the mapping layer needs,
+//! with deterministic parameter initialization for experiments (the PyTorch
+//! / TVM ingestion role of §5, per DESIGN.md's substitution table).
+
+use crate::mapping::conv::Conv2d;
+
+/// One layer of a sequential model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Fully connected: `out = act(x · W + b)`, W is in×out.
+    Dense {
+        in_features: usize,
+        out_features: usize,
+        relu: bool,
+    },
+    /// 2-D convolution followed by optional ReLU (lowered via im2col).
+    Conv2d { conv: Conv2d, relu: bool },
+    /// 2×2 max-pool halving H and W (lowered on the host between
+    /// accelerator calls, like TVM's layout-transform glue).
+    MaxPool2x2,
+    Flatten,
+}
+
+/// A sequential DNN: input shape + layers + deterministic parameters.
+#[derive(Debug, Clone)]
+pub struct DnnGraph {
+    /// Flattened input feature count (batch comes from the workload).
+    pub input_features: usize,
+    pub layers: Vec<Layer>,
+    pub name: String,
+}
+
+impl DnnGraph {
+    /// The E9 end-to-end model: 784-256-128-10 MLP (hidden ReLU).
+    pub fn mlp_784_256_128_10() -> Self {
+        DnnGraph {
+            input_features: 784,
+            layers: vec![
+                Layer::Dense {
+                    in_features: 784,
+                    out_features: 256,
+                    relu: true,
+                },
+                Layer::Dense {
+                    in_features: 256,
+                    out_features: 128,
+                    relu: true,
+                },
+                Layer::Dense {
+                    in_features: 128,
+                    out_features: 10,
+                    relu: false,
+                },
+            ],
+            name: "mlp_784_256_128_10".into(),
+        }
+    }
+
+    /// A small MLP for fast tests.
+    pub fn mlp_small() -> Self {
+        DnnGraph {
+            input_features: 16,
+            layers: vec![
+                Layer::Dense {
+                    in_features: 16,
+                    out_features: 24,
+                    relu: true,
+                },
+                Layer::Dense {
+                    in_features: 24,
+                    out_features: 8,
+                    relu: false,
+                },
+            ],
+            name: "mlp_small".into(),
+        }
+    }
+
+    /// Deterministic pseudo-random parameters for layer `idx`:
+    /// (weights row-major in×out, bias len out).  Same scheme as the
+    /// Python golden models' seeded init (xorshift over layer index).
+    pub fn dense_params(&self, idx: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let Layer::Dense {
+            in_features,
+            out_features,
+            ..
+        } = self.layers.get(idx)?
+        else {
+            return None;
+        };
+        let mut s = (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (((s >> 16) % 2001) as f32 - 1000.0) / 10_000.0 // ±0.1
+        };
+        let w: Vec<f32> = (0..in_features * out_features).map(|_| next()).collect();
+        let b: Vec<f32> = (0..*out_features).map(|_| next()).collect();
+        Some((w, b))
+    }
+
+    /// Deterministic input batch (batch × input_features).
+    pub fn input_batch(&self, batch: usize) -> Vec<f32> {
+        let mut s = 0xDEAD_BEEF_u64;
+        (0..batch * self.input_features)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (((s >> 8) % 201) as f32 - 100.0) / 100.0
+            })
+            .collect()
+    }
+
+    /// Host-side reference forward pass (row-major, batch × features).
+    pub fn forward_ref(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut h = x.to_vec();
+        let mut feat = self.input_features;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            match layer {
+                Layer::Dense {
+                    in_features,
+                    out_features,
+                    relu,
+                } => {
+                    assert_eq!(feat, *in_features);
+                    let (w, b) = self.dense_params(idx).unwrap();
+                    let mut out = vec![0.0f32; batch * out_features];
+                    for bi in 0..batch {
+                        for o in 0..*out_features {
+                            let mut acc = b[o];
+                            for i in 0..*in_features {
+                                acc += h[bi * in_features + i] * w[i * out_features + o];
+                            }
+                            out[bi * out_features + o] = if *relu { acc.max(0.0) } else { acc };
+                        }
+                    }
+                    h = out;
+                    feat = *out_features;
+                }
+                _ => unimplemented!("reference path covers dense stacks"),
+            }
+        }
+        h
+    }
+
+    pub fn parameter_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense {
+                    in_features,
+                    out_features,
+                    ..
+                } => in_features * out_features + out_features,
+                Layer::Conv2d { conv, .. } => {
+                    conv.out_c * conv.in_c * conv.k_h * conv.k_w
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_shapes_and_params() {
+        let g = DnnGraph::mlp_784_256_128_10();
+        assert_eq!(g.parameter_count(), 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+        let (w, b) = g.dense_params(0).unwrap();
+        assert_eq!(w.len(), 784 * 256);
+        assert_eq!(b.len(), 256);
+        // Deterministic.
+        assert_eq!(g.dense_params(0).unwrap().0[..8], w[..8]);
+    }
+
+    #[test]
+    fn forward_ref_runs() {
+        let g = DnnGraph::mlp_small();
+        let x = g.input_batch(4);
+        let y = g.forward_ref(&x, 4);
+        assert_eq!(y.len(), 4 * 8);
+        assert!(y.iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! DNN graph IR and its lowering to accelerator operator schedules (§5's
+//! end-to-end path: DNN → operators → ACADL instructions → simulation).
+
+pub mod graph;
+pub mod lowering;
+
+pub use graph::{DnnGraph, Layer};
+pub use lowering::{lower_graph, run_schedule, LoweredGraph, ScheduleReport};

@@ -1,0 +1,440 @@
+//! Two-pass assembler for the paper's listing syntax (Listings 4–5).
+//!
+//! ```text
+//! ; tiled GeMM inner loop (Listing 5 style)
+//! loop:
+//!   load  [r9] => r6
+//!   load  [r10] => r7
+//!   mac   r6, r7, r8 => r8
+//!   addi  r3, #-1 => r3
+//!   beqi  r3, z0, @done => pc
+//!   jumpi @loop => pc
+//! done:
+//!   store r8 => [r11]
+//!   halt
+//! ```
+//!
+//! Operand forms:
+//! * `rX`, `pc`, `r[0].16` … — register names resolved against the AG's
+//!   global register namespace,
+//! * `[0x3000]` — direct memory address,
+//! * `[r9]`, `[r9+8]` — register-indirect address,
+//! * `#-28`, `#0x10`, bare integers — immediates,
+//! * `@label` — converted to a byte offset relative to the *current*
+//!   instruction (the paper's `#-28 => pc` convention, Listing 5).
+//!
+//! `gemm A, B, act => C` expands A/B/C into groups of [`GAMMA_TILE`]
+//! consecutive registers (Listing 4: `gemm r[0].0, r[0].9, 1 => r[0].16`
+//! consumes rows r[0].0–7 and r[0].9–16... r[0].9+7, producing r[0].16–23).
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::acadl_core::graph::{Ag, RegId};
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::opcode::Opcode;
+use crate::isa::program::Program;
+use crate::isa::{GAMMA_TILE, INSTR_BYTES};
+
+#[derive(Debug, Error)]
+pub enum AsmError {
+    #[error("line {0}: unknown mnemonic `{1}`")]
+    UnknownMnemonic(usize, String),
+    #[error("line {0}: unknown register `{1}`")]
+    UnknownRegister(usize, String),
+    #[error("line {0}: unknown label `{1}`")]
+    UnknownLabel(usize, String),
+    #[error("line {0}: duplicate label `{1}`")]
+    DuplicateLabel(usize, String),
+    #[error("line {0}: malformed operand `{1}`")]
+    BadOperand(usize, String),
+    #[error("line {0}: {1}")]
+    Other(usize, String),
+}
+
+#[derive(Debug, Clone)]
+enum Operand {
+    Reg(RegId),
+    Addr(AddrRef),
+    Imm(i64),
+    Label(String),
+}
+
+/// Assemble `src` against the AG's register namespace, placing the program
+/// at byte address `base`.
+pub fn assemble(ag: &Ag, src: &str, base: u64) -> Result<Program, AsmError> {
+    // Pass 1: strip comments/labels, record label addresses.
+    let mut labels: HashMap<String, u64> = HashMap::new();
+    let mut lines: Vec<(usize, String)> = Vec::new();
+    let mut pc = base;
+    for (lineno, raw) in src.lines().enumerate() {
+        let mut line = raw;
+        if let Some(p) = line.find(';') {
+            line = &line[..p];
+        }
+        if let Some(p) = line.find("//") {
+            line = &line[..p];
+        }
+        let mut line = line.trim().to_string();
+        // Leading `label:` prefixes (possibly several).
+        while let Some(colon) = line.find(':') {
+            let (head, rest) = line.split_at(colon);
+            let head = head.trim();
+            if head.is_empty()
+                || !head
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_')
+            {
+                break;
+            }
+            if labels.insert(head.to_string(), pc).is_some() {
+                return Err(AsmError::DuplicateLabel(lineno + 1, head.to_string()));
+            }
+            line = rest[1..].trim().to_string();
+        }
+        if line.is_empty() {
+            continue;
+        }
+        pc += INSTR_BYTES;
+        lines.push((lineno + 1, line));
+    }
+
+    // Pass 2: encode.
+    let mut instrs = Vec::with_capacity(lines.len());
+    for (i, (lineno, line)) in lines.iter().enumerate() {
+        let self_addr = base + i as u64 * INSTR_BYTES;
+        instrs.push(encode_line(ag, *lineno, line, self_addr, &labels)?);
+    }
+    Ok(Program::new(instrs, base))
+}
+
+fn encode_line(
+    ag: &Ag,
+    lineno: usize,
+    line: &str,
+    self_addr: u64,
+    labels: &HashMap<String, u64>,
+) -> Result<Instruction, AsmError> {
+    let (lhs, rhs) = match line.split_once("=>") {
+        Some((l, r)) => (l.trim(), Some(r.trim())),
+        None => (line, None),
+    };
+    let mut parts = lhs.splitn(2, char::is_whitespace);
+    let mnemonic = parts.next().unwrap_or("");
+    let op: Opcode = mnemonic
+        .parse()
+        .map_err(|_| AsmError::UnknownMnemonic(lineno, mnemonic.to_string()))?;
+    let operands = parts
+        .next()
+        .map(|s| parse_operand_list(ag, lineno, s, labels))
+        .transpose()?
+        .unwrap_or_default();
+    let dests = rhs
+        .map(|s| parse_operand_list(ag, lineno, s, labels))
+        .transpose()?
+        .unwrap_or_default();
+
+    let mut ins = Instruction::new(op);
+    for o in operands {
+        match o {
+            Operand::Reg(r) => ins.reads.push(r),
+            Operand::Addr(a) => ins.read_addrs.push(a),
+            Operand::Imm(v) => ins.imms.push(v),
+            Operand::Label(name) => {
+                let target = *labels
+                    .get(&name)
+                    .ok_or_else(|| AsmError::UnknownLabel(lineno, name.clone()))?;
+                ins.imms.push(target as i64 - self_addr as i64);
+            }
+        }
+    }
+    for d in dests {
+        match d {
+            Operand::Reg(r) => ins.writes.push(r),
+            Operand::Addr(a) => ins.write_addrs.push(a),
+            Operand::Imm(_) | Operand::Label(_) => {
+                return Err(AsmError::BadOperand(
+                    lineno,
+                    "immediate/label cannot be a destination".into(),
+                ))
+            }
+        }
+    }
+
+    if op == Opcode::Gemm {
+        expand_gemm(ag, lineno, &mut ins)?;
+    }
+    // mac a, b, acc => acc — when written `mac a, b => acc`, the
+    // accumulator is read implicitly; normalize so the scoreboard sees it.
+    if op == Opcode::Mac && ins.reads.len() == 2 {
+        if let Some(&acc) = ins.writes.first() {
+            ins.reads.push(acc);
+        }
+    }
+    Ok(ins)
+}
+
+fn parse_operand_list(
+    ag: &Ag,
+    lineno: usize,
+    s: &str,
+    _labels: &HashMap<String, u64>,
+) -> Result<Vec<Operand>, AsmError> {
+    let mut out = Vec::new();
+    // Commas inside `[...]` don't occur in this syntax, so a flat split is
+    // safe.
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(parse_operand(ag, lineno, tok)?);
+    }
+    Ok(out)
+}
+
+fn parse_operand(ag: &Ag, lineno: usize, tok: &str) -> Result<Operand, AsmError> {
+    if let Some(rest) = tok.strip_prefix('@') {
+        return Ok(Operand::Label(rest.to_string()));
+    }
+    if let Some(rest) = tok.strip_prefix('#') {
+        return parse_int(rest)
+            .map(Operand::Imm)
+            .ok_or_else(|| AsmError::BadOperand(lineno, tok.to_string()));
+    }
+    if tok.starts_with('[') {
+        let inner = tok
+            .strip_prefix('[')
+            .and_then(|t| t.strip_suffix(']'))
+            .ok_or_else(|| AsmError::BadOperand(lineno, tok.to_string()))?
+            .trim();
+        if let Some(v) = parse_int(inner) {
+            return Ok(Operand::Addr(AddrRef::Direct(v as u64)));
+        }
+        // `reg`, `reg+off`, `reg-off`
+        let (reg_part, off) = match inner.rfind(['+', '-']) {
+            Some(p) if p > 0 => {
+                let (r, o) = inner.split_at(p);
+                let off = parse_int(o)
+                    .ok_or_else(|| AsmError::BadOperand(lineno, tok.to_string()))?;
+                (r.trim(), off)
+            }
+            _ => (inner, 0),
+        };
+        let base = ag
+            .reg_id(reg_part)
+            .ok_or_else(|| AsmError::UnknownRegister(lineno, reg_part.to_string()))?;
+        return Ok(Operand::Addr(AddrRef::Indirect { base, offset: off }));
+    }
+    if tok
+        .chars()
+        .next()
+        .is_some_and(|c| c.is_ascii_digit() || c == '-')
+    {
+        return parse_int(tok)
+            .map(Operand::Imm)
+            .ok_or_else(|| AsmError::BadOperand(lineno, tok.to_string()));
+    }
+    ag.reg_id(tok)
+        .map(Operand::Reg)
+        .ok_or_else(|| AsmError::UnknownRegister(lineno, tok.to_string()))
+}
+
+fn parse_int(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16).ok()?
+    } else {
+        body.parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+/// Expand a `gemm A, B => C` into full register groups: reads A..A+7,
+/// B..B+7; writes C..C+7 (Listing 4 semantics).  Register group members
+/// are consecutive *names* formed by incrementing the trailing integer.
+fn expand_gemm(ag: &Ag, lineno: usize, ins: &mut Instruction) -> Result<(), AsmError> {
+    if ins.reads.len() != 2 || ins.writes.len() != 1 {
+        return Err(AsmError::Other(
+            lineno,
+            format!(
+                "gemm needs 2 source register groups and 1 destination (got {} / {})",
+                ins.reads.len(),
+                ins.writes.len()
+            ),
+        ));
+    }
+    let a0 = ins.reads[0];
+    let b0 = ins.reads[1];
+    let c0 = ins.writes[0];
+    let mut reads = Vec::with_capacity(2 * GAMMA_TILE);
+    reads.extend(reg_group(ag, lineno, a0)?);
+    reads.extend(reg_group(ag, lineno, b0)?);
+    ins.reads = reads;
+    ins.writes = reg_group(ag, lineno, c0)?;
+    Ok(())
+}
+
+/// The `n`-register group starting at `base`: names with incremented
+/// trailing integers (`r[0].9` → `r[0].9 r[0].10 … r[0].16`).
+fn reg_group(ag: &Ag, lineno: usize, base: RegId) -> Result<Vec<RegId>, AsmError> {
+    let name = &ag.reg(base).name;
+    let split = name
+        .rfind(|c: char| !c.is_ascii_digit())
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    let (prefix, digits) = name.split_at(split);
+    let start: u64 = digits
+        .parse()
+        .map_err(|_| AsmError::Other(lineno, format!("register `{name}` has no numeric suffix for group expansion")))?;
+    (0..GAMMA_TILE as u64)
+        .map(|i| {
+            let n = format!("{prefix}{}", start + i);
+            ag.reg_id(&n)
+                .ok_or_else(|| AsmError::UnknownRegister(lineno, n))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::data::Data;
+    use crate::acadl_core::object::build;
+
+    fn test_ag() -> Ag {
+        let mut ag = Ag::new();
+        let mut regs: Vec<(String, Data)> = (0..16)
+            .map(|i| (format!("r{i}"), Data::int(32, 0)))
+            .collect();
+        regs.push(("pc".into(), Data::int(32, 0)));
+        regs.push(("z0".into(), Data::int(32, 0)));
+        for i in 0..32 {
+            regs.push((format!("v[0].{i}"), Data::vec(128, 8)));
+        }
+        ag.add(build::register_file("rf0", 32, regs)).unwrap();
+        ag
+    }
+
+    #[test]
+    fn listing5_style_lines() {
+        let ag = test_ag();
+        let p = assemble(
+            &ag,
+            "mov z0 => r8\n\
+             load [r9] => r6\n\
+             load [r10] => r7\n\
+             mac r6, r7 => r8\n\
+             addi r3, #-1 => r3\n\
+             store r8 => [r11]\n\
+             halt",
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.len(), 7);
+        assert_eq!(p.instrs[1].op, Opcode::Load);
+        assert_eq!(p.instrs[1].read_addrs.len(), 1);
+        // mac reads a, b and the accumulator.
+        assert_eq!(p.instrs[3].reads.len(), 3);
+        assert_eq!(p.instrs[3].writes.len(), 1);
+        assert_eq!(p.instrs[4].imms, vec![-1]);
+        assert!(matches!(
+            p.instrs[5].write_addrs[0],
+            AddrRef::Indirect { .. }
+        ));
+    }
+
+    #[test]
+    fn labels_resolve_to_byte_offsets() {
+        let ag = test_ag();
+        let p = assemble(
+            &ag,
+            "loop: addi r3, #-1 => r3\n\
+             beqi r3, z0, @done => pc\n\
+             jumpi @loop => pc\n\
+             done: halt",
+            0x100,
+        )
+        .unwrap();
+        // beqi at 0x104, done at 0x10c → offset +8.
+        assert_eq!(p.instrs[1].imms, vec![8]);
+        // jumpi at 0x108, loop at 0x100 → offset -8.
+        assert_eq!(p.instrs[2].imms, vec![-8]);
+    }
+
+    #[test]
+    fn listing4_gemm_expands_groups() {
+        let ag = test_ag();
+        let p = assemble(
+            &ag,
+            "load [0x3000] => v[0].0\n\
+             gemm v[0].0, v[0].8, 1 => v[0].16\n\
+             store v[0].16 => [0x5000]",
+            0,
+        )
+        .unwrap();
+        let g = &p.instrs[1];
+        assert_eq!(g.reads.len(), 16, "8 A rows + 8 B rows");
+        assert_eq!(g.writes.len(), 8, "8 C rows");
+        assert_eq!(g.imms, vec![1], "ReLU flag");
+        assert_eq!(ag.reg(g.reads[8]).name, "v[0].8");
+        assert_eq!(ag.reg(g.writes[7]).name, "v[0].23");
+    }
+
+    #[test]
+    fn direct_and_offset_addressing() {
+        let ag = test_ag();
+        let p = assemble(&ag, "load [0x3030] => r1\nload [r9+8] => r2\nload [r9-4] => r3", 0)
+            .unwrap();
+        assert_eq!(p.instrs[0].read_addrs[0], AddrRef::Direct(0x3030));
+        match p.instrs[1].read_addrs[0] {
+            AddrRef::Indirect { offset, .. } => assert_eq!(offset, 8),
+            _ => panic!(),
+        }
+        match p.instrs[2].read_addrs[0] {
+            AddrRef::Indirect { offset, .. } => assert_eq!(offset, -4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let ag = test_ag();
+        assert!(matches!(
+            assemble(&ag, "nop\nbogus r1 => r2", 0),
+            Err(AsmError::UnknownMnemonic(2, _))
+        ));
+        assert!(matches!(
+            assemble(&ag, "mov rX => r1", 0),
+            Err(AsmError::UnknownRegister(1, _))
+        ));
+        assert!(matches!(
+            assemble(&ag, "jumpi @nowhere => pc", 0),
+            Err(AsmError::UnknownLabel(1, _))
+        ));
+        assert!(matches!(
+            assemble(&ag, "x: nop\nx: nop", 0),
+            Err(AsmError::DuplicateLabel(2, _))
+        ));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let ag = test_ag();
+        let p = assemble(
+            &ag,
+            "; full line comment\n\
+             \n\
+             nop ; trailing\n\
+             halt // c++ style",
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.len(), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! The ACADL `Instruction` class (§3): accessed registers, memory
+//! addresses, immediates, and the operation — everything the timing
+//! simulator's dependency scoreboard and the functional ISS need.
+
+use std::fmt;
+
+use crate::acadl_core::graph::RegId;
+use crate::isa::opcode::Opcode;
+
+/// A memory address operand: known statically, or computed from a register
+/// at dispatch time (`load [r9]`, Listing 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrRef {
+    Direct(u64),
+    Indirect { base: RegId, offset: i64 },
+}
+
+impl AddrRef {
+    /// Registers this address reference reads (for the scoreboard).
+    pub fn base_reg(&self) -> Option<RegId> {
+        match self {
+            AddrRef::Direct(_) => None,
+            AddrRef::Indirect { base, .. } => Some(*base),
+        }
+    }
+}
+
+/// One ACADL instruction.  `reads`/`writes` are the paper's
+/// `read_registers`/`write_registers`; `read_addrs`/`write_addrs` the
+/// `read_addresses`/`write_addresses`; `imms` the `immediates`.  The
+/// paper's `function`/`execute()` lives in
+/// [`crate::sim::functional`] keyed by `op`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instruction {
+    pub op: Opcode,
+    pub reads: Vec<RegId>,
+    pub writes: Vec<RegId>,
+    pub read_addrs: Vec<AddrRef>,
+    pub write_addrs: Vec<AddrRef>,
+    pub imms: Vec<i64>,
+}
+
+impl Instruction {
+    pub fn new(op: Opcode) -> Self {
+        Instruction {
+            op,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            read_addrs: Vec::new(),
+            write_addrs: Vec::new(),
+            imms: Vec::new(),
+        }
+    }
+
+    pub fn with_reads(mut self, reads: Vec<RegId>) -> Self {
+        self.reads = reads;
+        self
+    }
+
+    pub fn with_writes(mut self, writes: Vec<RegId>) -> Self {
+        self.writes = writes;
+        self
+    }
+
+    pub fn with_read_addrs(mut self, a: Vec<AddrRef>) -> Self {
+        self.read_addrs = a;
+        self
+    }
+
+    pub fn with_write_addrs(mut self, a: Vec<AddrRef>) -> Self {
+        self.write_addrs = a;
+        self
+    }
+
+    pub fn with_imms(mut self, imms: Vec<i64>) -> Self {
+        self.imms = imms;
+        self
+    }
+
+    /// All registers whose values this instruction consumes, including
+    /// address base registers (scoreboard RAW edges).
+    pub fn all_read_regs(&self) -> impl Iterator<Item = RegId> + '_ {
+        self.reads.iter().copied().chain(
+            self.read_addrs
+                .iter()
+                .chain(self.write_addrs.iter())
+                .filter_map(|a| a.base_reg()),
+        )
+    }
+
+    /// Is this a memory operation (must be handled by a MAU)?
+    pub fn is_memory(&self) -> bool {
+        self.op.is_memory()
+    }
+
+    /// Does this instruction write `pc` (control hazard)?
+    pub fn is_control(&self) -> bool {
+        self.op.is_control()
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.op)?;
+        let mut first = true;
+        for r in &self.reads {
+            write!(f, "{} %{}", if first { "" } else { "," }, r.0)?;
+            first = false;
+        }
+        for a in &self.read_addrs {
+            match a {
+                AddrRef::Direct(x) => write!(f, "{} [{x:#x}]", if first { "" } else { "," })?,
+                AddrRef::Indirect { base, offset } => write!(
+                    f,
+                    "{} [%{}{:+}]",
+                    if first { "" } else { "," },
+                    base.0,
+                    offset
+                )?,
+            }
+            first = false;
+        }
+        for i in &self.imms {
+            write!(f, "{} #{i}", if first { "" } else { "," })?;
+            first = false;
+        }
+        if !self.writes.is_empty() || !self.write_addrs.is_empty() {
+            write!(f, " =>")?;
+            for w in &self.writes {
+                write!(f, " %{}", w.0)?;
+            }
+            for a in &self.write_addrs {
+                match a {
+                    AddrRef::Direct(x) => write!(f, " [{x:#x}]")?,
+                    AddrRef::Indirect { base, offset } => {
+                        write!(f, " [%{}{:+}]", base.0, offset)?
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_regs_include_address_bases() {
+        let i = Instruction::new(Opcode::Store)
+            .with_reads(vec![RegId(1)])
+            .with_write_addrs(vec![AddrRef::Indirect {
+                base: RegId(11),
+                offset: 0,
+            }]);
+        let regs: Vec<_> = i.all_read_regs().collect();
+        assert_eq!(regs, vec![RegId(1), RegId(11)]);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let i = Instruction::new(Opcode::Mac)
+            .with_reads(vec![RegId(6), RegId(7), RegId(8)])
+            .with_writes(vec![RegId(8)]);
+        assert_eq!(i.to_string(), "mac %6, %7, %8 => %8");
+        let l = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x3000)])
+            .with_writes(vec![RegId(0)]);
+        assert_eq!(l.to_string(), "load [0x3000] => %0");
+    }
+
+    #[test]
+    fn classification_delegates_to_opcode() {
+        assert!(Instruction::new(Opcode::Load).is_memory());
+        assert!(Instruction::new(Opcode::Jumpi).is_control());
+        assert!(!Instruction::new(Opcode::VAdd).is_memory());
+    }
+}

@@ -1,0 +1,32 @@
+//! The instruction set: the union ISA of the paper's three accelerators and
+//! a two-pass assembler for the listing syntax of §4.3/§5.
+//!
+//! ACADL instructions are not limited to fine-grained operations — §3: *"An
+//! instruction can also carry out complex operations like matrix-matrix
+//! multiplication"*.  The [`opcode::Opcode`] enum therefore spans three
+//! abstraction levels:
+//!
+//! * **scalar** (OMA, systolic PEs): `mov addi mac load store beqi jumpi …`
+//! * **tensor** (vector registers):  `vadd vmul vrelu vmaxp`
+//! * **fused tensor** (Γ̈):           `gemm` (8×8 matmul + optional ReLU)
+//!
+//! Which unit executes a mnemonic is *not* the ISA's business — routing is
+//! decided by each `FunctionalUnit`'s `to_process` set and register
+//! accessibility, exactly as in the paper.
+
+pub mod assembler;
+pub mod instruction;
+pub mod opcode;
+pub mod program;
+
+pub use assembler::{assemble, AsmError};
+pub use instruction::{AddrRef, Instruction};
+pub use opcode::Opcode;
+pub use program::Program;
+
+/// The Γ̈ fused-tensor tile dimension (§4.3: 8×8 matrices in vector regs).
+pub const GAMMA_TILE: usize = 8;
+
+/// Nominal instruction encoding width in bytes (pc arithmetic, Listing 5's
+/// `#-28`-style byte offsets, and instruction-memory layout).
+pub const INSTR_BYTES: u64 = 4;

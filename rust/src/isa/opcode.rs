@@ -1,0 +1,179 @@
+//! Opcodes of the union ISA, with their mnemonics and structural metadata.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Every operation used by the OMA (§4.1/§5), the systolic array (§4.2),
+/// and Γ̈ (§4.3) models.  Kept ≤ 64 variants so FU capability sets compile
+/// to a single `u64` mask in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    // --- scalar control/data (OMA, Listing 5) ---
+    Nop,
+    Halt,
+    /// reg -> reg copy.
+    Mov,
+    /// immediate -> reg.
+    Movi,
+    Add,
+    Addi,
+    Sub,
+    Subi,
+    Mul,
+    Muli,
+    /// Multiply-accumulate: acc += a * b (the OMA's built-in MAC).
+    Mac,
+    /// Memory read into a register (scalar or vector by dest width).
+    Load,
+    /// Register into memory.
+    Store,
+    /// Branch if equal: if a == b then pc := self + offset.
+    Beqi,
+    /// Branch if not equal.
+    Bnei,
+    /// Unconditional relative jump: pc := self + offset.
+    Jumpi,
+    // --- tensor (vector registers) ---
+    /// Lane-wise vector add.
+    VAdd,
+    /// Lane-wise vector multiply.
+    VMul,
+    /// Lane-wise ReLU.
+    VRelu,
+    /// Lane-wise max (2×1 max-pool building block).
+    VMaxp,
+    /// Systolic PE step: acc += a_in * b_in, then forward a_in right and
+    /// b_in down (writes into neighbor register files).
+    MacFwd,
+    // --- fused tensor (Γ̈, Listing 4) ---
+    /// 8×8 GeMM over register groups, optional activation (imm 1 = ReLU).
+    Gemm,
+}
+
+impl Opcode {
+    pub const COUNT: usize = 22;
+
+    /// Assembly mnemonic (the string stored in FU `to_process` sets).
+    pub const fn mnemonic(self) -> &'static str {
+        match self {
+            Opcode::Nop => "nop",
+            Opcode::Halt => "halt",
+            Opcode::Mov => "mov",
+            Opcode::Movi => "movi",
+            Opcode::Add => "add",
+            Opcode::Addi => "addi",
+            Opcode::Sub => "sub",
+            Opcode::Subi => "subi",
+            Opcode::Mul => "mul",
+            Opcode::Muli => "muli",
+            Opcode::Mac => "mac",
+            Opcode::Load => "load",
+            Opcode::Store => "store",
+            Opcode::Beqi => "beqi",
+            Opcode::Bnei => "bnei",
+            Opcode::Jumpi => "jumpi",
+            Opcode::VAdd => "vadd",
+            Opcode::VMul => "vmul",
+            Opcode::VRelu => "vrelu",
+            Opcode::VMaxp => "vmaxp",
+            Opcode::MacFwd => "macf",
+            Opcode::Gemm => "gemm",
+        }
+    }
+
+    /// Dense index for capability bitmasks.
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Does this opcode read or write memory (i.e. must a
+    /// `MemoryAccessUnit` process it)?
+    pub const fn is_memory(self) -> bool {
+        matches!(self, Opcode::Load | Opcode::Store)
+    }
+
+    /// Does this opcode write the program counter (fetch must stall while
+    /// one is in flight — §6 control-hazard handling)?
+    pub const fn is_control(self) -> bool {
+        matches!(self, Opcode::Beqi | Opcode::Bnei | Opcode::Jumpi | Opcode::Halt)
+    }
+
+    pub fn all() -> impl Iterator<Item = Opcode> {
+        const ALL: [Opcode; Opcode::COUNT] = [
+            Opcode::Nop,
+            Opcode::Halt,
+            Opcode::Mov,
+            Opcode::Movi,
+            Opcode::Add,
+            Opcode::Addi,
+            Opcode::Sub,
+            Opcode::Subi,
+            Opcode::Mul,
+            Opcode::Muli,
+            Opcode::Mac,
+            Opcode::Load,
+            Opcode::Store,
+            Opcode::Beqi,
+            Opcode::Bnei,
+            Opcode::Jumpi,
+            Opcode::VAdd,
+            Opcode::VMul,
+            Opcode::VRelu,
+            Opcode::VMaxp,
+            Opcode::MacFwd,
+            Opcode::Gemm,
+        ];
+        ALL.into_iter()
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+impl FromStr for Opcode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Opcode::all()
+            .find(|o| o.mnemonic() == s)
+            .ok_or_else(|| format!("unknown mnemonic `{s}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for op in Opcode::all() {
+            assert_eq!(op.mnemonic().parse::<Opcode>().unwrap(), op);
+        }
+    }
+
+    #[test]
+    fn indices_fit_u64_mask() {
+        for op in Opcode::all() {
+            assert!(op.index() < 64);
+        }
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Opcode::Load.is_memory());
+        assert!(!Opcode::Mac.is_memory());
+        assert!(Opcode::Beqi.is_control());
+        assert!(Opcode::Halt.is_control());
+        assert!(!Opcode::Gemm.is_control());
+    }
+
+    #[test]
+    fn count_matches_all() {
+        assert_eq!(Opcode::all().count(), Opcode::COUNT);
+    }
+}

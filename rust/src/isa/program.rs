@@ -1,0 +1,153 @@
+//! A `Program`: an instruction list placed in instruction memory, plus the
+//! disassembler used by the CLI's `map --dump` and the experiment logs.
+
+use std::collections::BTreeMap;
+
+use crate::acadl_core::graph::Ag;
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::INSTR_BYTES;
+
+/// An assembled instruction stream. Instruction `i` lives at byte address
+/// `base + i * INSTR_BYTES` of the instruction memory.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub instrs: Vec<Instruction>,
+    /// Base byte address in the instruction memory.
+    pub base: u64,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instruction>, base: u64) -> Self {
+        Program { instrs, base }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Byte address of instruction `idx`.
+    #[inline]
+    pub fn addr_of(&self, idx: usize) -> u64 {
+        self.base + idx as u64 * INSTR_BYTES
+    }
+
+    /// Instruction index at byte address `addr`, if in range and aligned.
+    #[inline]
+    pub fn index_of(&self, addr: u64) -> Option<usize> {
+        if addr < self.base {
+            return None;
+        }
+        let off = addr - self.base;
+        if off % INSTR_BYTES != 0 {
+            return None;
+        }
+        let idx = (off / INSTR_BYTES) as usize;
+        (idx < self.instrs.len()).then_some(idx)
+    }
+
+    /// End byte address (exclusive).
+    pub fn end_addr(&self) -> u64 {
+        self.addr_of(self.instrs.len())
+    }
+
+    /// Opcode histogram (experiment logs, sanity checks).
+    pub fn op_histogram(&self) -> BTreeMap<&'static str, usize> {
+        let mut h = BTreeMap::new();
+        for i in &self.instrs {
+            *h.entry(i.op.mnemonic()).or_default() += 1;
+        }
+        h
+    }
+
+    /// Count of dynamic memory operands (direct only; indirect resolved at
+    /// run time).
+    pub fn static_mem_refs(&self) -> usize {
+        self.instrs
+            .iter()
+            .map(|i| i.read_addrs.len() + i.write_addrs.len())
+            .sum()
+    }
+
+    /// Human-readable disassembly with resolved register names.
+    pub fn disassemble(&self, ag: &Ag) -> String {
+        let mut out = String::new();
+        for (idx, ins) in self.instrs.iter().enumerate() {
+            out.push_str(&format!("{:#06x}  ", self.addr_of(idx)));
+            out.push_str(&Self::format_instr(ins, ag));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn format_instr(ins: &Instruction, ag: &Ag) -> String {
+        let reg = |r: &crate::acadl_core::graph::RegId| ag.reg(*r).name.clone();
+        let addr = |a: &AddrRef| match a {
+            AddrRef::Direct(x) => format!("[{x:#x}]"),
+            AddrRef::Indirect { base, offset } if *offset == 0 => {
+                format!("[{}]", reg(base))
+            }
+            AddrRef::Indirect { base, offset } => format!("[{}{:+}]", reg(base), offset),
+        };
+        let mut parts: Vec<String> = Vec::new();
+        parts.extend(ins.reads.iter().map(|r| reg(r)));
+        parts.extend(ins.read_addrs.iter().map(addr));
+        parts.extend(ins.imms.iter().map(|i| format!("#{i}")));
+        let mut dests: Vec<String> = Vec::new();
+        dests.extend(ins.writes.iter().map(|r| reg(r)));
+        dests.extend(ins.write_addrs.iter().map(addr));
+        let lhs = if parts.is_empty() {
+            ins.op.mnemonic().to_string()
+        } else {
+            format!("{} {}", ins.op.mnemonic(), parts.join(", "))
+        };
+        if dests.is_empty() {
+            lhs
+        } else {
+            format!("{} => {}", lhs, dests.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::opcode::Opcode;
+
+    #[test]
+    fn addressing() {
+        let p = Program::new(
+            vec![
+                Instruction::new(Opcode::Nop),
+                Instruction::new(Opcode::Nop),
+                Instruction::new(Opcode::Halt),
+            ],
+            0x100,
+        );
+        assert_eq!(p.addr_of(0), 0x100);
+        assert_eq!(p.addr_of(2), 0x108);
+        assert_eq!(p.index_of(0x104), Some(1));
+        assert_eq!(p.index_of(0x106), None, "misaligned");
+        assert_eq!(p.index_of(0x10c), None, "past end");
+        assert_eq!(p.index_of(0xff), None, "before base");
+        assert_eq!(p.end_addr(), 0x10c);
+    }
+
+    #[test]
+    fn histogram() {
+        let p = Program::new(
+            vec![
+                Instruction::new(Opcode::Mac),
+                Instruction::new(Opcode::Mac),
+                Instruction::new(Opcode::Halt),
+            ],
+            0,
+        );
+        let h = p.op_histogram();
+        assert_eq!(h["mac"], 2);
+        assert_eq!(h["halt"], 1);
+    }
+}

@@ -1,0 +1,85 @@
+//! # acadl — Abstract Computer Architecture Description Language, in Rust
+//!
+//! A production-grade implementation of the ACADL methodology from
+//! *"Using the Abstract Computer Architecture Description Language to Model
+//! AI Hardware Accelerators"* (Müller, Borst, Lübeck, Jung, Bringmann, 2024).
+//!
+//! ACADL formalizes computer-architecture block diagrams: a small set of
+//! object classes (pipeline stages, functional units, register files, memory
+//! hierarchies) connected by typed edges form an **architecture graph** (AG),
+//! and an instruction-centric timing semantic turns any AG plus an
+//! instruction stream into cycle-accurate performance numbers.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! * [`acadl_core`] — the language: objects, typed edges, validity rules,
+//!   templates with dangling edges, latency expressions.
+//! * [`mem`] — memory substrates: SRAM, banked DRAM timing (t_RCD/t_RP/t_RAS),
+//!   set-associative cache simulation (LRU/FIFO/PLRU/Random).
+//! * [`isa`] — the union instruction set of the paper's three accelerators,
+//!   plus a two-pass assembler for the paper's listing syntax.
+//! * [`sim`] — the timing-simulation semantics of §6 (Figs 9–13): fetch /
+//!   pipeline / execute / functional-unit state machines, the global
+//!   last-user dependency scoreboard, and storage request slots; plus a
+//!   pure functional ISS for mapping validation.
+//! * [`arch`] — the model zoo: OMA (§4.1), the parameterizable systolic
+//!   array (§4.2), Γ̈ (§4.3), and Eyeriss- / Plasticine-derived models (§6).
+//! * [`mapping`] — DNN operator mapping (§5): tiled-GeMM code generation per
+//!   accelerator, loop orders, im2col convolution, and the UMA-style
+//!   operator registry.
+//! * [`dnn`] — a DNN graph IR and its lowering to operator schedules.
+//! * [`aidg`] — the Architectural Instruction Dependency Graph fast
+//!   performance estimator (fixed-point loop analysis).
+//! * [`analytical`] — ScaleSim-like and roofline baselines (§2 comparisons).
+//! * [`runtime`] — PJRT golden-model execution of the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) via the `xla` crate.
+//! * [`coordinator`] — async job queue + worker pool for simulation
+//!   campaigns, design-space sweeps, and the TCP serving front-end.
+//! * [`metrics`] — report tables for the EXPERIMENTS.md experiments.
+//!
+//! ## Quickstart
+//!
+//! (Compile-checked only: rustdoc test binaries don't inherit the
+//! xla-extension rpath this image needs at load time.)
+//!
+//! ```no_run
+//! use acadl::arch::oma::OmaConfig;
+//! use acadl::mapping::gemm::{oma_tiled_gemm, GemmParams, LoopOrder};
+//! use acadl::sim::engine::Engine;
+//!
+//! let machine = OmaConfig::default().build().unwrap();
+//! let params = GemmParams::new(8, 8, 8).with_tile(4).with_order(LoopOrder::Ijk);
+//! let program = oma_tiled_gemm(&machine, &params).unwrap();
+//! let mut engine = Engine::new(&machine.ag, &program).unwrap();
+//! let stats = engine.run(1_000_000).unwrap();
+//! println!("GeMM took {} cycles", stats.cycles);
+//! # assert!(stats.cycles > 0);
+//! ```
+
+pub mod acadl_core;
+pub mod aidg;
+pub mod util;
+pub mod analytical;
+pub mod arch;
+pub mod coordinator;
+pub mod dnn;
+pub mod isa;
+pub mod mapping;
+pub mod mem;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+
+/// Convenience re-exports for the common "build → map → simulate" flow.
+pub mod prelude {
+    pub use crate::acadl_core::{
+        edge::EdgeKind,
+        graph::{Ag, ObjId},
+        latency::Latency,
+    };
+    pub use crate::arch::{gamma::GammaConfig, oma::OmaConfig, systolic::SystolicConfig};
+    pub use crate::isa::program::Program;
+    pub use crate::mapping::gemm::{GemmParams, LoopOrder};
+    pub use crate::sim::engine::{Engine, SimStats};
+    pub use crate::sim::functional::FunctionalSim;
+}

@@ -1,0 +1,256 @@
+//! `acadl-cli` — the command-line front-end: validate models, map
+//! operators, run simulations and sweeps, serve jobs over TCP, and execute
+//! golden-model artifacts.
+//!
+//! Argument parsing is hand-rolled (`--key value` flags after a
+//! subcommand) — the offline build has no clap (DESIGN.md §Substitutions).
+
+use std::collections::HashMap;
+
+use acadl::coordinator::{self, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::mapping::gemm::GemmParams;
+use acadl::mapping::uma::{self, Operator};
+use acadl::metrics::Table;
+use acadl::runtime::Golden;
+
+const USAGE: &str = "\
+acadl-cli — ACADL: model AI hardware accelerators, map DNN operators, simulate
+
+USAGE: acadl-cli <COMMAND> [--flag value]...
+
+COMMANDS:
+  validate --target <oma|systolic|gamma> [--rows N --cols N --units N]
+      Build an architecture model and print its AG summary.
+  map --target <oma|systolic|gamma> [--m N --k N --n N --tile N --head N]
+      Lower a GeMM and print the disassembly head.
+  simulate --target <oma|systolic|gamma> [--m/--k/--n N] [--tile N]
+           [--mode functional|timed|estimate] [--rows/--cols/--units N]
+      Simulate a GeMM, print the result row as JSON.
+  sweep [--dim N] [--workers N]
+      Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
+  serve [--addr HOST:PORT] [--workers N]
+      Serve JobSpec JSON lines over TCP.
+  golden <name> [--dir artifacts]
+      Run a golden-model artifact with synthetic inputs.
+";
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn opt_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key}: bad number `{v}`")),
+            None => Ok(None),
+        }
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn target_spec(args: &Args) -> Result<TargetSpec, String> {
+    match args.str("target", "oma").as_str() {
+        "oma" => Ok(TargetSpec::Oma {
+            cache: true,
+            mac_latency: None,
+        }),
+        "systolic" => Ok(TargetSpec::Systolic {
+            rows: args.usize("rows", 4)?,
+            cols: args.usize("cols", 4)?,
+        }),
+        "gamma" => Ok(TargetSpec::Gamma {
+            units: args.usize("units", 2)?,
+        }),
+        other => Err(format!("unknown target `{other}`")),
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "validate" => {
+            let spec = target_spec(&args)?;
+            let machine = spec.to_config().build().map_err(|e| e.to_string())?;
+            println!("{}: {}", spec.describe(), machine.ag().summary());
+        }
+        "map" => {
+            let spec = target_spec(&args)?;
+            let machine = spec.to_config().build().map_err(|e| e.to_string())?;
+            let mut p = GemmParams::new(
+                args.usize("m", 8)?,
+                args.usize("k", 8)?,
+                args.usize("n", 8)?,
+            );
+            if let Some(t) = args.opt_usize("tile")? {
+                p = p.with_tile(t);
+            }
+            let head = args.usize("head", 40)?;
+            let lowered =
+                uma::lower(&machine, &Operator::Gemm(p)).map_err(|e| e.to_string())?;
+            println!(
+                "{} gemm_{}x{}x{}: {} instructions",
+                spec.describe(),
+                p.m,
+                p.k,
+                p.n,
+                lowered.program.len()
+            );
+            for line in lowered
+                .program
+                .disassemble(machine.ag())
+                .lines()
+                .take(head)
+            {
+                println!("{line}");
+            }
+            if lowered.program.len() > head {
+                println!("… ({} more)", lowered.program.len() - head);
+            }
+        }
+        "simulate" => {
+            let mode = match args.str("mode", "timed").as_str() {
+                "functional" => SimModeSpec::Functional,
+                "timed" => SimModeSpec::Timed,
+                "estimate" => SimModeSpec::Estimate,
+                other => return Err(format!("unknown mode `{other}`")),
+            };
+            let spec = JobSpec {
+                id: 0,
+                target: target_spec(&args)?,
+                workload: Workload::Gemm {
+                    m: args.usize("m", 8)?,
+                    k: args.usize("k", 8)?,
+                    n: args.usize("n", 8)?,
+                    tile: args.opt_usize("tile")?,
+                    order: None,
+                },
+                mode,
+                max_cycles: 500_000_000,
+            };
+            let r = coordinator::job::execute(&spec);
+            println!("{}", r.to_json());
+        }
+        "sweep" => {
+            let dim = args.usize("dim", 64)?;
+            let workers = args.usize("workers", 4)?;
+            let specs: Vec<JobSpec> = [2usize, 4, 8, 16]
+                .into_iter()
+                .enumerate()
+                .map(|(id, edge)| JobSpec {
+                    id: id as u64,
+                    target: TargetSpec::Systolic {
+                        rows: edge,
+                        cols: edge,
+                    },
+                    workload: Workload::Gemm {
+                        m: dim,
+                        k: dim,
+                        n: dim,
+                        tile: None,
+                        order: None,
+                    },
+                    mode: SimModeSpec::Timed,
+                    max_cycles: 500_000_000,
+                })
+                .collect();
+            let results = coordinator::run_jobs(specs, workers);
+            let mut table = Table::new(
+                &format!("systolic sweep, gemm {dim}³"),
+                &["target", "cycles", "ipc", "util", "wall µs"],
+            );
+            for r in results {
+                table.row(vec![
+                    r.target,
+                    r.cycles.to_string(),
+                    format!("{:.2}", r.ipc),
+                    format!("{:.1}%", r.utilization * 100.0),
+                    r.wall_micros.to_string(),
+                ]);
+            }
+            print!("{}", table.render());
+        }
+        "serve" => {
+            let addr = args.str("addr", "127.0.0.1:7474");
+            let workers = args.usize("workers", 4)?;
+            let listener =
+                std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
+            println!("acadl-cli serving on {addr} ({workers} workers)");
+            coordinator::server::serve(listener, workers).map_err(|e| e.to_string())?;
+        }
+        "golden" => {
+            let name = args
+                .positional
+                .first()
+                .ok_or("golden needs an artifact name")?;
+            let dir = args.str("dir", "artifacts");
+            let mut g = Golden::load(&dir).map_err(|e| e.to_string())?;
+            let sig = g
+                .signature(name)
+                .ok_or_else(|| format!("unknown artifact `{name}` (have: {:?})", g.names()))?
+                .clone();
+            let inputs: Vec<Vec<f32>> = sig
+                .args
+                .iter()
+                .map(|a| {
+                    (0..a.elements())
+                        .map(|i| (i % 7) as f32 * 0.25 - 0.75)
+                        .collect()
+                })
+                .collect();
+            let outs = g.run(name, &inputs).map_err(|e| e.to_string())?;
+            for (i, o) in outs.iter().enumerate() {
+                let head: Vec<f32> = o.iter().take(8).copied().collect();
+                println!("result[{i}] ({} elems): {head:?}…", o.len());
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => return Err(format!("unknown command `{other}`\n\n{USAGE}")),
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

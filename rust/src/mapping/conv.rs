@@ -1,0 +1,196 @@
+//! Convolution lowering: im2col + GeMM (§5's "to accelerate, e.g. a
+//! convolution operation, one needs to define the necessary input data
+//! transformations and computation schedules" — im2col is that transform,
+//! and it is what TVM emits for GeMM-only accelerators like the OMA/Γ̈).
+
+use crate::mapping::gemm::GemmParams;
+
+/// A 2-D convolution: NCHW input (N=1), OIHW weights, unit dilation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2d {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k_h) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k_w) / self.stride + 1
+    }
+
+    /// The GeMM this convolution lowers to:
+    /// `(out_h·out_w) × (in_c·k_h·k_w)` patches times
+    /// `(in_c·k_h·k_w) × out_c` reshaped weights.
+    pub fn as_gemm(&self) -> GemmParams {
+        GemmParams::new(
+            self.out_h() * self.out_w(),
+            self.in_c * self.k_h * self.k_w,
+            self.out_c,
+        )
+    }
+
+    /// im2col: CHW input → patch matrix (row-major, rows = output pixels).
+    pub fn im2col(&self, input: &[f32]) -> Vec<f32> {
+        assert_eq!(input.len(), self.in_c * self.in_h * self.in_w);
+        let (oh, ow) = (self.out_h(), self.out_w());
+        let kk = self.in_c * self.k_h * self.k_w;
+        let mut out = vec![0.0f32; oh * ow * kk];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = oy * ow + ox;
+                let mut col = 0usize;
+                for c in 0..self.in_c {
+                    for ky in 0..self.k_h {
+                        for kx in 0..self.k_w {
+                            let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                            let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                            if iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < self.in_h
+                                && (ix as usize) < self.in_w
+                            {
+                                out[row * kk + col] = input
+                                    [c * self.in_h * self.in_w + iy as usize * self.in_w + ix as usize];
+                            }
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// OIHW weights → (in_c·k_h·k_w) × out_c GeMM operand.
+    pub fn reshape_weights(&self, w: &[f32]) -> Vec<f32> {
+        let kk = self.in_c * self.k_h * self.k_w;
+        assert_eq!(w.len(), self.out_c * kk);
+        let mut out = vec![0.0f32; kk * self.out_c];
+        for o in 0..self.out_c {
+            for i in 0..kk {
+                out[i * self.out_c + o] = w[o * kk + i];
+            }
+        }
+        out
+    }
+
+    /// Direct reference convolution (validation oracle).
+    pub fn conv_ref(&self, input: &[f32], w: &[f32]) -> Vec<f32> {
+        let (oh, ow) = (self.out_h(), self.out_w());
+        let mut out = vec![0.0f32; self.out_c * oh * ow];
+        for o in 0..self.out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..self.in_c {
+                        for ky in 0..self.k_h {
+                            for kx in 0..self.k_w {
+                                let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                                let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                                if iy >= 0
+                                    && ix >= 0
+                                    && (iy as usize) < self.in_h
+                                    && (ix as usize) < self.in_w
+                                {
+                                    acc += input[c * self.in_h * self.in_w
+                                        + iy as usize * self.in_w
+                                        + ix as usize]
+                                        * w[o * self.in_c * self.k_h * self.k_w
+                                            + c * self.k_h * self.k_w
+                                            + ky * self.k_w
+                                            + kx];
+                                }
+                            }
+                        }
+                    }
+                    out[o * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::gemm::gemm_ref;
+
+    fn conv() -> Conv2d {
+        Conv2d {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            out_c: 3,
+            k_h: 3,
+            k_w: 3,
+            stride: 1,
+            pad: 1,
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let c = conv();
+        assert_eq!((c.out_h(), c.out_w()), (5, 5));
+        let g = c.as_gemm();
+        assert_eq!((g.m, g.k, g.n), (25, 18, 3));
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        let c = conv();
+        let input: Vec<f32> = (0..c.in_c * c.in_h * c.in_w)
+            .map(|x| ((x % 11) as f32) - 5.0)
+            .collect();
+        let w: Vec<f32> = (0..c.out_c * c.in_c * c.k_h * c.k_w)
+            .map(|x| ((x % 7) as f32) - 3.0)
+            .collect();
+        let patches = c.im2col(&input);
+        let wg = c.reshape_weights(&w);
+        let g = c.as_gemm();
+        let gemm_out = gemm_ref(&g, &patches, &wg); // (oh·ow) × out_c
+        let direct = c.conv_ref(&input, &w); // out_c × oh × ow
+        let (oh, ow) = (c.out_h(), c.out_w());
+        for o in 0..c.out_c {
+            for p in 0..oh * ow {
+                let a = gemm_out[p * c.out_c + o];
+                let b = direct[o * oh * ow + p];
+                assert!((a - b).abs() < 1e-3, "o={o} p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn stride_and_pad_variants() {
+        for (stride, pad) in [(1, 0), (2, 1), (2, 0)] {
+            let c = Conv2d {
+                stride,
+                pad,
+                ..conv()
+            };
+            let input: Vec<f32> = (0..c.in_c * c.in_h * c.in_w).map(|x| x as f32).collect();
+            let w = vec![1.0f32; c.out_c * c.in_c * c.k_h * c.k_w];
+            let patches = c.im2col(&input);
+            let wg = c.reshape_weights(&w);
+            let g = c.as_gemm();
+            let got = gemm_ref(&g, &patches, &wg);
+            let want = c.conv_ref(&input, &w);
+            let (oh, ow) = (c.out_h(), c.out_w());
+            for o in 0..c.out_c {
+                for p in 0..oh * ow {
+                    assert!((got[p * c.out_c + o] - want[o * oh * ow + p]).abs() < 1e-2);
+                }
+            }
+        }
+    }
+}

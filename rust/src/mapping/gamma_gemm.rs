@@ -1,0 +1,379 @@
+//! Fused-tensor GeMM mapping onto Γ̈ (§4.3, Listing 4).
+//!
+//! `C (m×n) = act(A (m×k) · B (k×n) + bias)` with 8×8 tiles.  Per output
+//! tile, on the assigned unit `u` (round-robin across units — the paper's
+//! "instructions intended for different hardware components are issued in
+//! parallel and executed out-of-order"):
+//!
+//! ```text
+//! v[u].0–7   A tile rows      v[u].16–23 C accumulator rows
+//! v[u].8–15  B tile rows      v[u].24–31 gemm product / bias staging
+//! ```
+//!
+//! Each k-step loads the A and B tiles row-by-row (Listing 4's `load
+//! [0x3000] => r[0].0` pattern), issues one fused `gemm`, and accumulates
+//! with `vadd`.  The final k-step applies bias (`vadd`) and ReLU (`vrelu`)
+//! before storing the 8 result rows.
+
+use crate::acadl_core::graph::RegId;
+use crate::arch::gamma::GammaMachine;
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::opcode::Opcode;
+use crate::isa::program::Program;
+use crate::isa::GAMMA_TILE;
+use crate::mapping::gemm::{GemmLayout, GemmParams};
+
+/// Extra mapping options for the Γ̈ generator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GammaGemmOpts {
+    /// Apply ReLU to the output (the `1:` flag of Listing 4).
+    pub relu: bool,
+    /// Add a bias row (length n, stored at `bias_base`) to every C row.
+    pub bias_base: Option<u64>,
+    /// Stage each A row-strip into the unit's scratchpad once (Listing 4's
+    /// spad-resident dataflow): the strip is DMA'd DRAM→spad via the LSU's
+    /// staging registers and then reused by every output tile of that row
+    /// block — cutting DRAM A-traffic by a factor of n/8.
+    pub use_spad: bool,
+}
+
+/// Generate the Γ̈ program. Dimensions must be multiples of 8 (callers pad
+/// — see `dnn::lowering`).
+pub fn gamma_gemm(machine: &GammaMachine, p: &GemmParams, opts: GammaGemmOpts) -> Program {
+    let t = GAMMA_TILE;
+    assert!(
+        p.m % t == 0 && p.k % t == 0 && p.n % t == 0,
+        "Γ̈ mapping needs multiples of {t} (got {}x{}x{})",
+        p.m,
+        p.k,
+        p.n
+    );
+    let layout = GemmLayout::at(machine.dram_base(), p);
+    let ag = &machine.ag;
+    let units = machine.cfg.units;
+    let vreg = |u: usize, i: usize| -> RegId {
+        ag.reg_id(&machine.vreg(u, i)).expect("vector registers exist")
+    };
+
+    let mut out: Vec<Instruction> = Vec::new();
+    for ti in 0..p.m / t {
+        // Row blocks round-robin over units so each unit owns a whole
+        // strip — the reuse unit of the scratchpad staging.
+        let u = ti % units;
+        let spad_a = machine.units[u].spad_range.0;
+        if opts.use_spad {
+            // DMA the A strip (8 rows × K) DRAM → spad once, cycling the
+            // product/staging registers so transfers overlap.
+            assert!(
+                (t * p.k * 4) as u64 <= machine.cfg.spad_bytes,
+                "A strip ({} B) must fit the scratchpad",
+                t * p.k * 4
+            );
+            for r in 0..t {
+                for kk in 0..p.k / t {
+                    let s = vreg(u, 3 * t + (r + kk) % t);
+                    out.push(
+                        Instruction::new(Opcode::Load)
+                            .with_read_addrs(vec![AddrRef::Direct(
+                                layout.a(p, ti * t + r, kk * t),
+                            )])
+                            .with_writes(vec![s]),
+                    );
+                    out.push(
+                        Instruction::new(Opcode::Store)
+                            .with_reads(vec![s])
+                            .with_write_addrs(vec![AddrRef::Direct(
+                                spad_a + ((r * p.k + kk * t) * 4) as u64,
+                            )]),
+                    );
+                }
+            }
+        }
+        for tj in 0..p.n / t {
+            let a0 = 0; // A rows
+            let b0 = t; // B rows
+            let c0 = 2 * t; // accumulator rows
+            let s0 = 3 * t; // staging rows (gemm product / bias)
+
+            for kk in 0..p.k / t {
+                // Load A tile rows (from the staged strip when enabled).
+                for r in 0..t {
+                    let src = if opts.use_spad {
+                        spad_a + ((r * p.k + kk * t) * 4) as u64
+                    } else {
+                        layout.a(p, ti * t + r, kk * t)
+                    };
+                    out.push(
+                        Instruction::new(Opcode::Load)
+                            .with_read_addrs(vec![AddrRef::Direct(src)])
+                            .with_writes(vec![vreg(u, a0 + r)]),
+                    );
+                }
+                // Load B tile rows.
+                for r in 0..t {
+                    out.push(
+                        Instruction::new(Opcode::Load)
+                            .with_read_addrs(vec![AddrRef::Direct(
+                                layout.b(p, kk * t + r, tj * t),
+                            )])
+                            .with_writes(vec![vreg(u, b0 + r)]),
+                    );
+                }
+                if kk == 0 {
+                    // First product lands directly in the accumulator.
+                    out.push(gemm_instr(u, a0, b0, c0, 0, &vreg));
+                } else {
+                    // Product to staging, then accumulate.
+                    out.push(gemm_instr(u, a0, b0, s0, 0, &vreg));
+                    for r in 0..t {
+                        out.push(
+                            Instruction::new(Opcode::VAdd)
+                                .with_reads(vec![vreg(u, c0 + r), vreg(u, s0 + r)])
+                                .with_writes(vec![vreg(u, c0 + r)]),
+                        );
+                    }
+                }
+            }
+            // Bias.
+            if let Some(bias) = opts.bias_base {
+                out.push(
+                    Instruction::new(Opcode::Load)
+                        .with_read_addrs(vec![AddrRef::Direct(bias + (tj * t * 4) as u64)])
+                        .with_writes(vec![vreg(u, s0)]),
+                );
+                for r in 0..t {
+                    out.push(
+                        Instruction::new(Opcode::VAdd)
+                            .with_reads(vec![vreg(u, c0 + r), vreg(u, s0)])
+                            .with_writes(vec![vreg(u, c0 + r)]),
+                    );
+                }
+            }
+            // Activation.
+            if opts.relu {
+                for r in 0..t {
+                    out.push(
+                        Instruction::new(Opcode::VRelu)
+                            .with_reads(vec![vreg(u, c0 + r)])
+                            .with_writes(vec![vreg(u, c0 + r)]),
+                    );
+                }
+            }
+            // Store C tile rows.
+            for r in 0..t {
+                out.push(
+                    Instruction::new(Opcode::Store)
+                        .with_reads(vec![vreg(u, c0 + r)])
+                        .with_write_addrs(vec![AddrRef::Direct(
+                            layout.c(p, ti * t + r, tj * t),
+                        )]),
+                );
+            }
+        }
+    }
+    out.push(Instruction::new(Opcode::Halt));
+    Program::new(out, machine.cfg.imem_range.0)
+}
+
+fn gemm_instr(
+    u: usize,
+    a0: usize,
+    b0: usize,
+    dst0: usize,
+    act: i64,
+    vreg: &dyn Fn(usize, usize) -> RegId,
+) -> Instruction {
+    let t = GAMMA_TILE;
+    Instruction::new(Opcode::Gemm)
+        .with_reads(
+            (0..t)
+                .map(|r| vreg(u, a0 + r))
+                .chain((0..t).map(|r| vreg(u, b0 + r)))
+                .collect(),
+        )
+        .with_writes((0..t).map(|r| vreg(u, dst0 + r)).collect())
+        .with_imms(vec![act])
+}
+
+/// The literal Listing-4 program: an 8×8 gemm with ReLU whose inputs live
+/// in unit 0's scratchpad and whose output returns there — assembled from
+/// (address-adjusted) Listing 4 text.
+pub fn gamma_listing4_program(machine: &GammaMachine) -> Program {
+    let (a, b, c) = machine.spad_tile_bases(0);
+    let t = GAMMA_TILE as u64;
+    let mut src = String::new();
+    // load [A row r] => v[0].r     (Listing 4 lines 1–3)
+    for r in 0..t {
+        src.push_str(&format!("load [{:#x}] => v[0].{r}\n", a + r * t * 4));
+    }
+    // load [B row r] => v[0].{8+r} (Listing 4 lines 4–6)
+    for r in 0..t {
+        src.push_str(&format!("load [{:#x}] => v[0].{}\n", b + r * t * 4, t + r));
+    }
+    // gemm with ReLU (line 7: `gemm r[0].0, r[0].8, 1 => r[0].16`).
+    src.push_str("gemm v[0].0, v[0].8, 1 => v[0].16\n");
+    // store result rows (lines 8–11).
+    for r in 0..t {
+        src.push_str(&format!(
+            "store v[0].{} => [{:#x}]\n",
+            2 * t + r,
+            c + r * t * 4
+        ));
+    }
+    src.push_str("halt\n");
+    crate::isa::assembler::assemble(&machine.ag, &src, machine.cfg.imem_range.0)
+        .expect("listing 4 text assembles")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::gamma::GammaConfig;
+    use crate::mapping::gemm::gemm_ref;
+    use crate::sim::engine::Engine;
+    use crate::sim::functional::FunctionalSim;
+
+    fn inputs(p: &GemmParams) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..p.m * p.k).map(|x| ((x % 9) as f32) - 4.0).collect();
+        let b: Vec<f32> = (0..p.k * p.n).map(|x| ((x % 7) as f32) - 3.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn single_tile_correct() {
+        let m = GammaConfig::new(1).build().unwrap();
+        let p = GemmParams::new(8, 8, 8);
+        let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+        let layout = GemmLayout::at(m.dram_base(), &p);
+        let (a, b) = inputs(&p);
+        let mut sim = FunctionalSim::new(&m.ag);
+        layout.load_inputs(&p, &mut sim.mem, &a, &b);
+        sim.run(&prog, 1_000_000).unwrap();
+        assert_eq!(layout.read_c(&p, &sim.mem), gemm_ref(&p, &a, &b));
+    }
+
+    #[test]
+    fn multi_tile_with_accumulation() {
+        let m = GammaConfig::new(2).build().unwrap();
+        let p = GemmParams::new(16, 24, 16);
+        let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+        let layout = GemmLayout::at(m.dram_base(), &p);
+        let (a, b) = inputs(&p);
+        let mut sim = FunctionalSim::new(&m.ag);
+        layout.load_inputs(&p, &mut sim.mem, &a, &b);
+        sim.run(&prog, 10_000_000).unwrap();
+        let got = layout.read_c(&p, &sim.mem);
+        let want = gemm_ref(&p, &a, &b);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let m = GammaConfig::new(1).build().unwrap();
+        let p = GemmParams::new(8, 8, 8);
+        let bias_base = m.dram_base() + 0x10_0000;
+        let prog = gamma_gemm(
+            &m,
+            &p,
+            GammaGemmOpts {
+                relu: true,
+                bias_base: Some(bias_base),
+                ..Default::default()
+            },
+        );
+        let layout = GemmLayout::at(m.dram_base(), &p);
+        let (a, b) = inputs(&p);
+        let bias: Vec<f32> = (0..p.n).map(|j| j as f32 * 0.5 - 2.0).collect();
+        let mut sim = FunctionalSim::new(&m.ag);
+        layout.load_inputs(&p, &mut sim.mem, &a, &b);
+        sim.mem.load_f32(bias_base, &bias);
+        sim.run(&prog, 1_000_000).unwrap();
+        let got = layout.read_c(&p, &sim.mem);
+        let plain = gemm_ref(&p, &a, &b);
+        for i in 0..p.m {
+            for j in 0..p.n {
+                let want = (plain[i * p.n + j] + bias[j]).max(0.0);
+                let g = got[i * p.n + j];
+                assert!((g - want).abs() < 1e-3, "{g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn spad_staging_correct_and_cuts_dram_traffic() {
+        let m = GammaConfig::new(2).build().unwrap();
+        let p = GemmParams::new(16, 16, 32); // 2 row strips × 4 tiles
+        let (a, b) = inputs(&p);
+        let layout = GemmLayout::at(m.dram_base(), &p);
+        let run = |use_spad: bool| {
+            let prog = gamma_gemm(
+                &m,
+                &p,
+                GammaGemmOpts {
+                    use_spad,
+                    ..Default::default()
+                },
+            );
+            let mut e = Engine::new(&m.ag, &prog).unwrap();
+            layout.load_inputs(&p, &mut e.mem, &a, &b);
+            let stats = e.run(10_000_000).unwrap();
+            let dram_reqs = stats
+                .storages
+                .iter()
+                .find(|s| s.name == "dram0")
+                .unwrap()
+                .requests;
+            (layout.read_c(&p, &e.mem), dram_reqs, stats.cycles)
+        };
+        let (c_plain, dram_plain, _) = run(false);
+        let (c_spad, dram_spad, _) = run(true);
+        let want = gemm_ref(&p, &a, &b);
+        for (g, w) in c_spad.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2, "{g} vs {w}");
+        }
+        assert_eq!(c_plain, c_spad, "staging must not change results");
+        assert!(
+            dram_spad < dram_plain,
+            "A reuse must cut DRAM traffic: {dram_spad} vs {dram_plain}"
+        );
+    }
+
+    #[test]
+    fn two_units_run_faster_than_one() {
+        let p = GemmParams::new(16, 8, 16); // 4 independent tiles
+        let cycles = |units: usize| {
+            let m = GammaConfig::new(units).build().unwrap();
+            let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+            let layout = GemmLayout::at(m.dram_base(), &p);
+            let (a, b) = inputs(&p);
+            let mut e = Engine::new(&m.ag, &prog).unwrap();
+            layout.load_inputs(&p, &mut e.mem, &a, &b);
+            e.run(10_000_000).unwrap().cycles
+        };
+        let (c1, c2) = (cycles(1), cycles(2));
+        assert!(c2 < c1, "parallel units must help: 1u={c1} 2u={c2}");
+    }
+
+    #[test]
+    fn listing4_program_runs_and_relus() {
+        let m = GammaConfig::default().build().unwrap();
+        let prog = gamma_listing4_program(&m);
+        let (a_base, b_base, c_base) = m.spad_tile_bases(0);
+        let t = GAMMA_TILE;
+        // A = -identity, B = identity → raw product −I; ReLU clamps to 0.
+        let mut a = vec![0.0f32; t * t];
+        let mut b = vec![0.0f32; t * t];
+        for i in 0..t {
+            a[i * t + i] = -1.0;
+            b[i * t + i] = 1.0;
+        }
+        let mut sim = FunctionalSim::new(&m.ag);
+        sim.mem.load_f32(a_base, &a);
+        sim.mem.load_f32(b_base, &b);
+        sim.run(&prog, 100_000).unwrap();
+        let c = sim.mem.dump_f32(c_base, t * t);
+        assert!(c.iter().all(|&x| x == 0.0), "ReLU(-I) == 0");
+    }
+}

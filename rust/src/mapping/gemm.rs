@@ -1,0 +1,391 @@
+//! Tiled GeMM on the OMA (§5, Listing 5, Fig. 8).
+//!
+//! Two code generators:
+//!
+//! * [`oma_tiled_gemm`] — the UMA interface function: parameterizable tile
+//!   size and loop order.  Outer (tile) and inner loops are unrolled by the
+//!   generator into direct-addressed instructions, which keeps the memory
+//!   access *order* (the thing tiling and loop order change, §5: "various
+//!   execution orders ... significant impact on the execution time") fully
+//!   visible to the cache model.  When `k` is innermost the accumulator
+//!   lives in a register (Listing 5's `r8`); otherwise partial sums
+//!   read-modify-write C in memory — exactly the locality trade-off the
+//!   paper's Fig. 8 discussion motivates.
+//! * [`oma_gemm_listing5`] — the literal register-loop implementation of
+//!   Listing 5 (pointer-walking inner loop, countdown branches), assembled
+//!   from the paper's asm syntax.
+//!
+//! Memory layout: row-major `A (m×k)` at `a_base`, `B (k×n)` at `b_base`,
+//! `C (m×n)` at `c_base`, f32 elements.
+
+use crate::acadl_core::graph::{Ag, RegId};
+use crate::arch::oma::OmaMachine;
+use crate::isa::assembler::{assemble, AsmError};
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::opcode::Opcode;
+use crate::isa::program::Program;
+use crate::sim::exec::MemImage;
+
+/// The six classic GeMM loop orders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopOrder {
+    Ijk,
+    Ikj,
+    Jik,
+    Jki,
+    Kij,
+    Kji,
+}
+
+impl LoopOrder {
+    pub const ALL: [LoopOrder; 6] = [
+        LoopOrder::Ijk,
+        LoopOrder::Ikj,
+        LoopOrder::Jik,
+        LoopOrder::Jki,
+        LoopOrder::Kij,
+        LoopOrder::Kji,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LoopOrder::Ijk => "ijk",
+            LoopOrder::Ikj => "ikj",
+            LoopOrder::Jik => "jik",
+            LoopOrder::Jki => "jki",
+            LoopOrder::Kij => "kij",
+            LoopOrder::Kji => "kji",
+        }
+    }
+
+    /// Is `k` the innermost loop (register accumulation possible)?
+    pub fn k_innermost(self) -> bool {
+        matches!(self, LoopOrder::Ijk | LoopOrder::Jik)
+    }
+}
+
+/// GeMM problem + mapping parameters: `C (m×n) = A (m×k) · B (k×n)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmParams {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Tile edge (None = untiled / single full tile).
+    pub tile: Option<usize>,
+    pub order: LoopOrder,
+}
+
+impl GemmParams {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        GemmParams {
+            m,
+            k,
+            n,
+            tile: None,
+            order: LoopOrder::Ijk,
+        }
+    }
+
+    pub fn with_tile(mut self, t: usize) -> Self {
+        self.tile = Some(t);
+        self
+    }
+
+    pub fn with_order(mut self, o: LoopOrder) -> Self {
+        self.order = o;
+        self
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+}
+
+/// Row-major operand placement in the data memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmLayout {
+    pub a_base: u64,
+    pub b_base: u64,
+    pub c_base: u64,
+}
+
+impl GemmLayout {
+    pub fn at(base: u64, p: &GemmParams) -> Self {
+        let a_bytes = (p.m * p.k * 4) as u64;
+        let b_bytes = (p.k * p.n * 4) as u64;
+        GemmLayout {
+            a_base: base,
+            b_base: base + a_bytes,
+            c_base: base + a_bytes + b_bytes,
+        }
+    }
+
+    pub fn a(&self, p: &GemmParams, i: usize, kk: usize) -> u64 {
+        self.a_base + ((i * p.k + kk) * 4) as u64
+    }
+
+    pub fn b(&self, p: &GemmParams, kk: usize, j: usize) -> u64 {
+        self.b_base + ((kk * p.n + j) * 4) as u64
+    }
+
+    pub fn c(&self, p: &GemmParams, i: usize, j: usize) -> u64 {
+        self.c_base + ((i * p.n + j) * 4) as u64
+    }
+
+    /// Write A and B into a functional memory image.
+    pub fn load_inputs(&self, p: &GemmParams, mem: &mut MemImage, a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), p.m * p.k);
+        assert_eq!(b.len(), p.k * p.n);
+        mem.load_f32(self.a_base, a);
+        mem.load_f32(self.b_base, b);
+    }
+
+    /// Read C back.
+    pub fn read_c(&self, p: &GemmParams, mem: &MemImage) -> Vec<f32> {
+        mem.dump_f32(self.c_base, p.m * p.n)
+    }
+}
+
+/// Reference result (row-major f32).
+pub fn gemm_ref(p: &GemmParams, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0f32; p.m * p.n];
+    for i in 0..p.m {
+        for kk in 0..p.k {
+            let av = a[i * p.k + kk];
+            for j in 0..p.n {
+                c[i * p.n + j] += av * b[kk * p.n + j];
+            }
+        }
+    }
+    c
+}
+
+fn oma_regs(ag: &Ag) -> Option<(RegId, RegId, RegId)> {
+    Some((ag.reg_id("r6")?, ag.reg_id("r7")?, ag.reg_id("r8")?))
+}
+
+/// The UMA interface function for the OMA: generate the tiled-GeMM
+/// instruction list (§5's `oma_tiled_gemm(...)`).
+pub fn oma_tiled_gemm(machine: &OmaMachine, p: &GemmParams) -> Result<Program, AsmError> {
+    let layout = GemmLayout::at(machine.dmem_base(), p);
+    let ag = &machine.ag;
+    let (r6, r7, r8) = oma_regs(ag).expect("OMA register file has r6/r7/r8");
+    let t = p.tile.unwrap_or(p.m.max(p.k).max(p.n));
+    let tiles = |dim: usize| dim.div_ceil(t);
+
+    let mut out: Vec<Instruction> = Vec::new();
+    let load = |addr: u64, dst: RegId| {
+        Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(addr)])
+            .with_writes(vec![dst])
+    };
+    let store = |src: RegId, addr: u64| {
+        Instruction::new(Opcode::Store)
+            .with_reads(vec![src])
+            .with_write_addrs(vec![AddrRef::Direct(addr)])
+    };
+    let mac = || {
+        Instruction::new(Opcode::Mac)
+            .with_reads(vec![r6, r7, r8])
+            .with_writes(vec![r8])
+    };
+
+    // Iterate tile triples then in-tile triples, both in `order`.
+    let order_iter = |o: LoopOrder, ni: usize, nj: usize, nk: usize| -> Vec<(usize, usize, usize)> {
+        let mut v = Vec::with_capacity(ni * nj * nk);
+        let (d0, d1, d2) = match o {
+            LoopOrder::Ijk => (ni, nj, nk),
+            LoopOrder::Ikj => (ni, nk, nj),
+            LoopOrder::Jik => (nj, ni, nk),
+            LoopOrder::Jki => (nj, nk, ni),
+            LoopOrder::Kij => (nk, ni, nj),
+            LoopOrder::Kji => (nk, nj, ni),
+        };
+        for x0 in 0..d0 {
+            for x1 in 0..d1 {
+                for x2 in 0..d2 {
+                    let (i, j, kk) = match o {
+                        LoopOrder::Ijk => (x0, x1, x2),
+                        LoopOrder::Ikj => (x0, x2, x1),
+                        LoopOrder::Jik => (x1, x0, x2),
+                        LoopOrder::Jki => (x2, x0, x1),
+                        LoopOrder::Kij => (x1, x2, x0),
+                        LoopOrder::Kji => (x2, x1, x0),
+                    };
+                    v.push((i, j, kk));
+                }
+            }
+        }
+        v
+    };
+
+    if p.order.k_innermost() && tiles(p.k) == 1 {
+        // Register accumulation: for each (i, j) in order, run the whole k
+        // reduction in r8 then store once (Listing 5's structure).
+        for (ti, tj, _) in order_iter(p.order, tiles(p.m), tiles(p.n), 1) {
+            for (ii, jj, _) in order_iter(p.order, t.min(p.m - ti * t), t.min(p.n - tj * t), 1)
+            {
+                let (i, j) = (ti * t + ii, tj * t + jj);
+                out.push(
+                    Instruction::new(Opcode::Movi)
+                        .with_imms(vec![0])
+                        .with_writes(vec![r8]),
+                );
+                for kk in 0..p.k {
+                    out.push(load(layout.a(p, i, kk), r6));
+                    out.push(load(layout.b(p, kk, j), r7));
+                    out.push(mac());
+                }
+                out.push(store(r8, layout.c(p, i, j)));
+            }
+        }
+    } else {
+        // General order: C is read-modify-written per MAC step.
+        for (ti, tj, tk) in order_iter(p.order, tiles(p.m), tiles(p.n), tiles(p.k)) {
+            let (mi, mj, mk) = (
+                t.min(p.m - ti * t),
+                t.min(p.n - tj * t),
+                t.min(p.k - tk * t),
+            );
+            for (ii, jj, kk) in order_iter(p.order, mi, mj, mk) {
+                let (i, j, k2) = (ti * t + ii, tj * t + jj, tk * t + kk);
+                out.push(load(layout.c(p, i, j), r8));
+                out.push(load(layout.a(p, i, k2), r6));
+                out.push(load(layout.b(p, k2, j), r7));
+                out.push(mac());
+                out.push(store(r8, layout.c(p, i, j)));
+            }
+        }
+    }
+    out.push(Instruction::new(Opcode::Halt));
+    Ok(Program::new(out, machine.cfg.imem_range.0))
+}
+
+/// The literal Listing-5-style register-loop GeMM: pointer-walking inner
+/// loop, countdown branches, `z0` comparisons — assembled from asm text.
+pub fn oma_gemm_listing5(machine: &OmaMachine, p: &GemmParams) -> Result<Program, AsmError> {
+    let layout = GemmLayout::at(machine.dmem_base(), p);
+    let (m, k, n) = (p.m, p.k, p.n);
+    let (a, b, c) = (layout.a_base, layout.b_base, layout.c_base);
+    let src = format!(
+        "; C[{m}x{n}] = A[{m}x{k}] . B[{k}x{n}] — Listing 5 structure\n\
+         movi #{a} => r12      ; A row base\n\
+         movi #{b} => r13      ; B column base\n\
+         movi #{c} => r11      ; C pointer\n\
+         movi #{m} => r0       ; i countdown\n\
+         iloop: movi #{n} => r1 ; j countdown\n\
+         jloop: movi #{k} => r2 ; k countdown\n\
+         mov z0 => r8          ; acc = 0\n\
+         mov r12 => r9         ; a element ptr\n\
+         mov r13 => r10        ; b element ptr\n\
+         kloop: load [r9] => r6\n\
+         load [r10] => r7\n\
+         mac r6, r7 => r8\n\
+         addi r9, #4 => r9\n\
+         addi r10, #{bstride} => r10\n\
+         addi r2, #-1 => r2\n\
+         bnei r2, z0, @kloop => pc\n\
+         store r8 => [r11]\n\
+         addi r11, #4 => r11\n\
+         addi r13, #4 => r13   ; next B column\n\
+         addi r1, #-1 => r1\n\
+         bnei r1, z0, @jloop => pc\n\
+         addi r12, #{astride} => r12 ; next A row\n\
+         movi #{b} => r13      ; reset B column base\n\
+         addi r0, #-1 => r0\n\
+         bnei r0, z0, @iloop => pc\n\
+         halt\n",
+        bstride = n * 4,
+        astride = k * 4,
+    );
+    assemble(&machine.ag, &src, machine.cfg.imem_range.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::oma::OmaConfig;
+    use crate::sim::functional::FunctionalSim;
+
+    fn inputs(p: &GemmParams, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        // Small deterministic pseudo-random values.
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s % 17) as f32 - 8.0) / 4.0
+        };
+        let a: Vec<f32> = (0..p.m * p.k).map(|_| next()).collect();
+        let b: Vec<f32> = (0..p.k * p.n).map(|_| next()).collect();
+        (a, b)
+    }
+
+    fn check_functional(p: GemmParams, program_of: impl Fn(&OmaMachine) -> Program) {
+        let m = OmaConfig::default().build().unwrap();
+        let prog = program_of(&m);
+        let layout = GemmLayout::at(m.dmem_base(), &p);
+        let (a, b) = inputs(&p, 7);
+        let mut sim = FunctionalSim::new(&m.ag);
+        layout.load_inputs(&p, &mut sim.mem, &a, &b);
+        sim.run(&prog, 50_000_000).unwrap();
+        let got = layout.read_c(&p, &sim.mem);
+        let want = gemm_ref(&p, &a, &b);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "got {g}, want {w} ({p:?})");
+        }
+    }
+
+    #[test]
+    fn unrolled_all_orders_correct() {
+        for order in LoopOrder::ALL {
+            let p = GemmParams::new(4, 5, 3).with_order(order);
+            check_functional(p, |m| oma_tiled_gemm(m, &p).unwrap());
+        }
+    }
+
+    #[test]
+    fn tiling_preserves_result() {
+        for tile in [1, 2, 4, 8] {
+            let p = GemmParams::new(8, 8, 8)
+                .with_tile(tile)
+                .with_order(LoopOrder::Kij);
+            check_functional(p, |m| oma_tiled_gemm(m, &p).unwrap());
+        }
+    }
+
+    #[test]
+    fn non_divisible_tiles_correct() {
+        let p = GemmParams::new(7, 5, 6)
+            .with_tile(4)
+            .with_order(LoopOrder::Ijk);
+        check_functional(p, |m| oma_tiled_gemm(m, &p).unwrap());
+    }
+
+    #[test]
+    fn listing5_loop_version_correct() {
+        let p = GemmParams::new(4, 4, 4);
+        check_functional(p, |m| oma_gemm_listing5(m, &p).unwrap());
+    }
+
+    #[test]
+    fn k_innermost_uses_register_accumulator() {
+        let m = OmaConfig::default().build().unwrap();
+        let p_reg = GemmParams::new(4, 4, 4).with_order(LoopOrder::Ijk);
+        let p_mem = GemmParams::new(4, 4, 4).with_order(LoopOrder::Kij);
+        let n_reg = oma_tiled_gemm(&m, &p_reg).unwrap().len();
+        let n_mem = oma_tiled_gemm(&m, &p_mem).unwrap().len();
+        assert!(
+            n_reg < n_mem,
+            "register accumulation saves instructions: {n_reg} vs {n_mem}"
+        );
+    }
+
+    #[test]
+    fn ref_gemm_identity() {
+        let p = GemmParams::new(3, 3, 3);
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let id = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(gemm_ref(&p, &a, &id), a);
+    }
+}

@@ -1,0 +1,25 @@
+//! DNN operator mapping (§5): code generators that lower operators onto
+//! the model zoo's accelerators, and the UMA-style registry exposing them.
+//!
+//! The paper proposes TVM + UMA: *"the interface function for GeMM
+//! `oma_tiled_gemm(...)` may generate ACADL instructions ... according to
+//! the arguments passed, and then runs a functional and optional timing
+//! simulation"*.  Our equivalents:
+//!
+//! * [`gemm`] — `oma_tiled_gemm`: parameterizable tiled GeMM on the OMA
+//!   (tile size, six loop orders, Fig. 8's divide-and-conquer), plus the
+//!   literal Listing-5 register-loop program.
+//! * [`systolic_gemm`] — output-stationary wavefront mapping onto the
+//!   rows×cols systolic array (macf chains carry the dataflow).
+//! * [`gamma_gemm`] — fused-tensor mapping onto Γ̈ (Listing 4 codegen):
+//!   8×8 `gemm` tiles with accumulation, optional fused ReLU and bias,
+//!   optional scratchpad staging, multi-unit round-robin.
+//! * [`conv`] — im2col lowering of 2-D convolution to GeMM.
+//! * [`uma`] — the operator registry: (operator, target) → program +
+//!   memory layout, the seam the DNN graph lowering plugs into.
+
+pub mod conv;
+pub mod gamma_gemm;
+pub mod gemm;
+pub mod systolic_gemm;
+pub mod uma;

@@ -1,0 +1,213 @@
+//! The UMA-style operator registry (§5): a uniform seam between DNN
+//! operators and accelerator targets, mirroring TVM's Universal Modular
+//! Accelerator interface — *"accelerator architectures can be easily
+//! integrated ... by registering an interface function which implements a
+//! DNN operator such as GeMM"*.
+//!
+//! [`lower`] dispatches an [`Operator`] to the target machine's registered
+//! generator and returns the ACADL program plus the memory layout the
+//! caller uses to place inputs and read results.
+
+use thiserror::Error;
+
+use crate::acadl_core::graph::Ag;
+use crate::arch::gamma::{GammaConfig, GammaMachine};
+use crate::arch::oma::{OmaConfig, OmaMachine};
+use crate::arch::systolic::{SystolicConfig, SystolicMachine};
+use crate::isa::program::Program;
+use crate::mapping::gamma_gemm::{gamma_gemm, GammaGemmOpts};
+use crate::mapping::gemm::{oma_tiled_gemm, GemmLayout, GemmParams};
+use crate::mapping::systolic_gemm::systolic_gemm;
+
+/// A built accelerator, uniformly accessible.
+#[derive(Debug, Clone)]
+pub enum Machine {
+    Oma(OmaMachine),
+    Systolic(SystolicMachine),
+    Gamma(GammaMachine),
+}
+
+impl Machine {
+    pub fn ag(&self) -> &Ag {
+        match self {
+            Machine::Oma(m) => &m.ag,
+            Machine::Systolic(m) => &m.ag,
+            Machine::Gamma(m) => &m.ag,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Machine::Oma(_) => "oma",
+            Machine::Systolic(_) => "systolic",
+            Machine::Gamma(_) => "gamma",
+        }
+    }
+
+    /// Base address of the data region operators are laid out in.
+    pub fn data_base(&self) -> u64 {
+        match self {
+            Machine::Oma(m) => m.dmem_base(),
+            Machine::Systolic(m) => m.dmem_base(),
+            Machine::Gamma(m) => m.dram_base(),
+        }
+    }
+}
+
+/// Target configuration (serializable — the coordinator's job descriptor).
+#[derive(Debug, Clone)]
+pub enum TargetConfig {
+    Oma(OmaConfig),
+    Systolic(SystolicConfig),
+    Gamma(GammaConfig),
+}
+
+impl TargetConfig {
+    pub fn build(&self) -> Result<Machine, crate::acadl_core::graph::AgError> {
+        Ok(match self {
+            TargetConfig::Oma(c) => Machine::Oma(c.build()?),
+            TargetConfig::Systolic(c) => Machine::Systolic(c.build()?),
+            TargetConfig::Gamma(c) => Machine::Gamma(c.build()?),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TargetConfig::Oma(_) => "oma",
+            TargetConfig::Systolic(_) => "systolic",
+            TargetConfig::Gamma(_) => "gamma",
+        }
+    }
+}
+
+/// A DNN operator instance to lower.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operator {
+    /// Plain GeMM.
+    Gemm(GemmParams),
+    /// GeMM + bias + optional ReLU (a dense/linear layer).
+    Dense {
+        gemm: GemmParams,
+        bias_base: u64,
+        relu: bool,
+    },
+}
+
+impl Operator {
+    pub fn gemm_params(&self) -> &GemmParams {
+        match self {
+            Operator::Gemm(p) => p,
+            Operator::Dense { gemm, .. } => gemm,
+        }
+    }
+}
+
+/// A lowered operator: the program plus its operand layout.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    pub program: Program,
+    pub layout: GemmLayout,
+}
+
+#[derive(Debug, Error)]
+pub enum UmaError {
+    #[error("target `{0}` does not implement operator {1:?} (fused bias/activation is fused-tensor level)")]
+    Unsupported(&'static str, Operator),
+    #[error(transparent)]
+    Asm(#[from] crate::isa::assembler::AsmError),
+}
+
+/// The registry dispatch: lower `op` onto `machine`.
+pub fn lower(machine: &Machine, op: &Operator) -> Result<Lowered, UmaError> {
+    let p = op.gemm_params();
+    let layout = GemmLayout::at(machine.data_base(), p);
+    let program = match (machine, op) {
+        (Machine::Oma(m), Operator::Gemm(p)) => oma_tiled_gemm(m, p)?,
+        (Machine::Systolic(m), Operator::Gemm(p)) => systolic_gemm(m, p),
+        (Machine::Gamma(m), Operator::Gemm(p)) => {
+            gamma_gemm(m, p, GammaGemmOpts::default())
+        }
+        (
+            Machine::Gamma(m),
+            Operator::Dense {
+                gemm,
+                bias_base,
+                relu,
+            },
+        ) => gamma_gemm(
+            m,
+            gemm,
+            GammaGemmOpts {
+                relu: *relu,
+                bias_base: Some(*bias_base),
+                ..Default::default()
+            },
+        ),
+        (m, op @ Operator::Dense { .. }) => {
+            return Err(UmaError::Unsupported(m.name(), *op))
+        }
+    };
+    Ok(Lowered { program, layout })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::functional::FunctionalSim;
+
+    #[test]
+    fn all_targets_lower_gemm() {
+        let p = GemmParams::new(8, 8, 8);
+        let targets = [
+            TargetConfig::Oma(OmaConfig::default()),
+            TargetConfig::Systolic(SystolicConfig::new(4, 4)),
+            TargetConfig::Gamma(GammaConfig::new(1)),
+        ];
+        for t in targets {
+            let m = t.build().unwrap();
+            let lowered = lower(&m, &Operator::Gemm(p)).unwrap();
+            assert!(!lowered.program.is_empty(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn dense_only_on_gamma() {
+        let p = GemmParams::new(8, 8, 8);
+        let dense = Operator::Dense {
+            gemm: p,
+            bias_base: 0x2000_0000,
+            relu: true,
+        };
+        let oma = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        assert!(matches!(
+            lower(&oma, &dense),
+            Err(UmaError::Unsupported("oma", _))
+        ));
+        let gamma = TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
+        assert!(lower(&gamma, &dense).is_ok());
+    }
+
+    #[test]
+    fn lowered_programs_agree_across_targets() {
+        // Same operator, three targets, identical results: the registry's
+        // core correctness property.
+        let p = GemmParams::new(8, 8, 8);
+        let a: Vec<f32> = (0..64).map(|x| (x % 5) as f32 - 2.0).collect();
+        let b: Vec<f32> = (0..64).map(|x| (x % 3) as f32 - 1.0).collect();
+        let mut results = Vec::new();
+        for t in [
+            TargetConfig::Oma(OmaConfig::default()),
+            TargetConfig::Systolic(SystolicConfig::new(4, 4)),
+            TargetConfig::Gamma(GammaConfig::new(2)),
+        ] {
+            let m = t.build().unwrap();
+            let lw = lower(&m, &Operator::Gemm(p)).unwrap();
+            let mut sim = FunctionalSim::new(m.ag());
+            lw.layout.load_inputs(&p, &mut sim.mem, &a, &b);
+            sim.run(&lw.program, 50_000_000).unwrap();
+            results.push(lw.layout.read_c(&p, &sim.mem));
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0], results[2]);
+    }
+}

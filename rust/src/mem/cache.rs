@@ -1,0 +1,365 @@
+//! Set-associative cache simulation (the paper's `SetAssociativeCache` +
+//! `CacheInterface`, Fig. 13's hit/miss decision).
+//!
+//! Behavior per access:
+//! * **read hit / write hit** — update replacement metadata; write hits mark
+//!   the line dirty under write-back.
+//! * **read miss** — allocate (fill) the line, possibly evicting; the
+//!   evicted line reports whether a dirty write-back to the backing store is
+//!   required.
+//! * **write miss** — allocate only under `write_allocate`; otherwise the
+//!   write goes straight through to the backing store.
+
+/// Replacement policy for a cache set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplacementPolicy {
+    /// Evict the least-recently-used way.
+    Lru,
+    /// Evict in fill order.
+    Fifo,
+    /// Tree-based pseudo-LRU (power-of-two ways; falls back to LRU else).
+    Plru,
+    /// Deterministic xorshift-seeded random way.
+    Random,
+}
+
+/// Outcome of one cache access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    pub hit: bool,
+    /// A dirty victim line's base address that must be written back.
+    pub writeback: Option<u64>,
+    /// Whether the access touches the backing store (miss fill or
+    /// write-through/no-allocate write).
+    pub backing_access: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU timestamp or FIFO fill order.
+    stamp: u64,
+}
+
+/// The cache state machine. Addresses are byte addresses; lines are
+/// `line_size` bytes; set index = (addr / line_size) % sets.
+#[derive(Debug, Clone)]
+pub struct CacheState {
+    sets: usize,
+    ways: usize,
+    line_size: u64,
+    policy: ReplacementPolicy,
+    write_allocate: bool,
+    write_back: bool,
+    lines: Vec<Line>,
+    /// PLRU tree bits per set (ways-1 bits packed into a u64).
+    plru: Vec<u64>,
+    clock: u64,
+    rng: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheState {
+    pub fn new(
+        sets: usize,
+        ways: usize,
+        line_size: u64,
+        policy: ReplacementPolicy,
+        write_allocate: bool,
+        write_back: bool,
+    ) -> Self {
+        assert!(sets > 0 && ways > 0 && line_size > 0);
+        assert!(line_size.is_power_of_two(), "line size must be a power of two");
+        CacheState {
+            sets,
+            ways,
+            line_size,
+            policy,
+            write_allocate,
+            write_back,
+            lines: vec![Line::default(); sets * ways],
+            plru: vec![0; sets],
+            clock: 0,
+            rng: 0x9E37_79B9_7F4A_7C15,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr / self.line_size) % self.sets as u64) as usize
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr / self.line_size / self.sets as u64
+    }
+
+    #[inline]
+    fn line_base(&self, set: usize, tag: u64) -> u64 {
+        (tag * self.sets as u64 + set as u64) * self.line_size
+    }
+
+    fn xorshift(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    fn touch_plru(&mut self, set: usize, way: usize) {
+        // Walk the tree from root to the leaf `way`, pointing bits away.
+        if !self.ways.is_power_of_two() {
+            return;
+        }
+        let mut node = 0usize; // tree node index within the set's bits
+        let mut lo = 0usize;
+        let mut hi = self.ways;
+        let mut bits = self.plru[set];
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            let right = way >= mid;
+            // Point the bit at the *other* half (the colder one).
+            if right {
+                bits &= !(1 << node);
+                lo = mid;
+            } else {
+                bits |= 1 << node;
+                hi = mid;
+            }
+            node = 2 * node + if right { 2 } else { 1 };
+        }
+        self.plru[set] = bits;
+    }
+
+    fn plru_victim(&self, set: usize) -> usize {
+        let mut node = 0usize;
+        let mut lo = 0usize;
+        let mut hi = self.ways;
+        let bits = self.plru[set];
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            let right = bits & (1 << node) != 0;
+            if right {
+                lo = mid;
+                node = 2 * node + 2;
+            } else {
+                hi = mid;
+                node = 2 * node + 1;
+            }
+        }
+        lo
+    }
+
+    fn victim_way(&mut self, set: usize) -> usize {
+        let base = set * self.ways;
+        // Prefer an invalid way.
+        if let Some(w) = (0..self.ways).find(|w| !self.lines[base + w].valid) {
+            return w;
+        }
+        match self.policy {
+            ReplacementPolicy::Lru | ReplacementPolicy::Fifo => (0..self.ways)
+                .min_by_key(|w| self.lines[base + w].stamp)
+                .unwrap(),
+            ReplacementPolicy::Plru if self.ways.is_power_of_two() => self.plru_victim(set),
+            ReplacementPolicy::Plru => (0..self.ways)
+                .min_by_key(|w| self.lines[base + w].stamp)
+                .unwrap(),
+            ReplacementPolicy::Random => (self.xorshift() % self.ways as u64) as usize,
+        }
+    }
+
+    /// Simulate one access; returns hit/miss and any required write-back.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> Access {
+        self.clock += 1;
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.ways;
+
+        // Lookup.
+        if let Some(w) = (0..self.ways)
+            .find(|w| self.lines[base + w].valid && self.lines[base + w].tag == tag)
+        {
+            self.hits += 1;
+            if self.policy == ReplacementPolicy::Lru {
+                self.lines[base + w].stamp = self.clock;
+            }
+            self.touch_plru(set, w);
+            let mut backing_access = false;
+            if is_write {
+                if self.write_back {
+                    self.lines[base + w].dirty = true;
+                } else {
+                    backing_access = true; // write-through
+                }
+            }
+            return Access {
+                hit: true,
+                writeback: None,
+                backing_access,
+            };
+        }
+
+        // Miss.
+        self.misses += 1;
+        if is_write && !self.write_allocate {
+            // Write-around: no fill, direct backing write.
+            return Access {
+                hit: false,
+                writeback: None,
+                backing_access: true,
+            };
+        }
+        let w = self.victim_way(set);
+        let line = &self.lines[base + w];
+        let writeback = if line.valid && line.dirty {
+            Some(self.line_base(set, line.tag))
+        } else {
+            None
+        };
+        if writeback.is_some() {
+            self.writebacks += 1;
+        }
+        let dirty = is_write && self.write_back;
+        self.lines[base + w] = Line {
+            tag,
+            valid: true,
+            dirty,
+            stamp: self.clock,
+        };
+        self.touch_plru(set, w);
+        let backing_access = true; // fill (and write-through stores also write)
+        Access {
+            hit: false,
+            writeback,
+            backing_access,
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lru(sets: usize, ways: usize, line: u64) -> CacheState {
+        CacheState::new(sets, ways, line, ReplacementPolicy::Lru, true, true)
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = lru(4, 2, 16);
+        assert!(!c.access(0x100, false).hit);
+        assert!(c.access(0x100, false).hit);
+        assert!(c.access(0x10F, false).hit, "same line");
+        assert!(!c.access(0x110, false).hit, "next line");
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 set, 2 ways, 16B lines: addresses 0x000, 0x010*sets.. map to
+        // the same set when sets=1.
+        let mut c = lru(1, 2, 16);
+        c.access(0x00, false); // miss, fill way A
+        c.access(0x10, false); // miss, fill way B
+        c.access(0x00, false); // hit, A is now MRU
+        let a = c.access(0x20, false); // evicts B (LRU)
+        assert!(!a.hit);
+        assert!(c.access(0x00, false).hit, "A must survive");
+        assert!(!c.access(0x10, false).hit, "B was evicted");
+    }
+
+    #[test]
+    fn fifo_ignores_recency() {
+        let mut c = CacheState::new(1, 2, 16, ReplacementPolicy::Fifo, true, true);
+        c.access(0x00, false);
+        c.access(0x10, false);
+        c.access(0x00, false); // hit, but FIFO does not refresh stamp
+        c.access(0x20, false); // evicts 0x00 (oldest fill)
+        assert!(!c.access(0x00, false).hit, "FIFO evicted the oldest fill");
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction() {
+        let mut c = lru(1, 1, 16);
+        c.access(0x00, true); // write miss, allocate + dirty
+        let a = c.access(0x10, false); // evicts dirty line
+        assert_eq!(a.writeback, Some(0x00));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn write_through_no_allocate() {
+        let mut c = CacheState::new(1, 1, 16, ReplacementPolicy::Lru, false, false);
+        let a = c.access(0x00, true); // write miss, no allocate
+        assert!(!a.hit);
+        assert!(a.backing_access);
+        assert!(!c.access(0x00, false).hit, "no line was filled");
+        // Read fill, then write hit must still go through.
+        c.access(0x40, false);
+        let wh = c.access(0x40, true);
+        assert!(wh.hit && wh.backing_access, "write-through on hit");
+    }
+
+    #[test]
+    fn plru_behaves_sanely() {
+        let mut c = CacheState::new(1, 4, 16, ReplacementPolicy::Plru, true, true);
+        for i in 0..4u64 {
+            assert!(!c.access(i * 16, false).hit);
+        }
+        // Touch 0..2, victim should be among the untouched.
+        c.access(0, false);
+        c.access(16, false);
+        c.access(32, false);
+        c.access(4 * 16, false); // forces an eviction
+        assert!(c.access(0, false).hit || c.access(16, false).hit);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let run = || {
+            let mut c = CacheState::new(2, 2, 32, ReplacementPolicy::Random, true, true);
+            for i in 0..64u64 {
+                c.access(i * 32 % 512, i % 3 == 0);
+            }
+            (c.hits, c.misses)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut c = lru(8, 2, 16);
+        for _ in 0..3 {
+            for a in (0..256u64).step_by(16) {
+                c.access(a, false);
+            }
+        }
+        // 16 lines fit in 8 sets * 2 ways: everything hits after warm-up.
+        assert!(c.hit_rate() > 0.6, "rate={}", c.hit_rate());
+    }
+}

@@ -1,0 +1,23 @@
+//! Memory substrates: the stateful timing models behind the ACADL
+//! `DataStorage` classes (§3, Figs 12–13).
+//!
+//! The paper delegates DRAM timing to DRAMsim3 and cache behavior to
+//! pycachesim; per DESIGN.md's substitution table we implement the same
+//! interfaces natively:
+//!
+//! * [`cache`] — set-associative cache with LRU/FIFO/PLRU/Random
+//!   replacement, write-allocate and write-back policies (pycachesim's
+//!   role: a hit/miss oracle per access).
+//! * [`dram`] — banked row-buffer timing with t_RCD/t_RP/t_RAS/t_CAS
+//!   (DRAMsim3's role: a per-request latency oracle).
+//! * [`sram`] — flat-latency scratchpad helper.
+//!
+//! These are *pure* state machines (no simulator coupling); the request-slot
+//! and FIFO-queue semantics of Figs 12–13 live in [`crate::sim::storage`].
+
+pub mod cache;
+pub mod dram;
+pub mod sram;
+
+pub use cache::{CacheState, ReplacementPolicy};
+pub use dram::DramState;

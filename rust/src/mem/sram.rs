@@ -1,0 +1,79 @@
+//! SRAM timing helper: flat read/write latencies, optionally expressed as
+//! latency functions over the access context (`size`, `port_width`).
+//!
+//! The interesting SRAM behavior — request slots, FIFO queuing, port
+//! contention — is shared by every `DataStorage` and lives in
+//! [`crate::sim::storage`]; this module only evaluates the per-access
+//! latency attributes.
+
+use crate::acadl_core::latency::{Latency, LatencyCtx};
+use crate::acadl_core::object::Sram;
+
+/// Evaluate an SRAM access latency. `words` is the number of data words in
+/// the transaction (≤ `port_width`).
+pub fn access_latency(cfg: &Sram, is_write: bool, words: usize) -> u64 {
+    let lat = if is_write {
+        &cfg.write_latency
+    } else {
+        &cfg.read_latency
+    };
+    match lat {
+        Latency::Const(v) => *v,
+        Latency::Expr(_) => {
+            let ctx = LatencyCtx::new()
+                .with("words", words as i64)
+                .with("port_width", cfg.ds.port_width as i64)
+                .with("data_width", cfg.ds.data_width as i64);
+            lat.eval(&ctx).unwrap_or(1)
+        }
+    }
+}
+
+/// Capacity in data words implied by the served address range.
+pub fn capacity_words(cfg: &Sram) -> u64 {
+    let bytes = cfg.address_range.1.saturating_sub(cfg.address_range.0);
+    bytes / (cfg.ds.data_width as u64 / 8).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::object::DataStorageParams;
+
+    fn sram(read: Latency, write: Latency) -> Sram {
+        Sram {
+            ds: DataStorageParams {
+                data_width: 32,
+                max_concurrent_requests: 2,
+                read_write_ports: 1,
+                port_width: 4,
+            },
+            read_latency: read,
+            write_latency: write,
+            address_range: (0, 4096),
+        }
+    }
+
+    #[test]
+    fn const_latencies() {
+        let s = sram(Latency::Const(2), Latency::Const(3));
+        assert_eq!(access_latency(&s, false, 1), 2);
+        assert_eq!(access_latency(&s, true, 1), 3);
+    }
+
+    #[test]
+    fn expr_latencies_see_context() {
+        let s = sram(
+            Latency::parse("1 + ceil_div(words, port_width)").unwrap(),
+            Latency::Const(1),
+        );
+        assert_eq!(access_latency(&s, false, 1), 2);
+        assert_eq!(access_latency(&s, false, 8), 3);
+    }
+
+    #[test]
+    fn capacity() {
+        let s = sram(Latency::Const(1), Latency::Const(1));
+        assert_eq!(capacity_words(&s), 1024); // 4096 B / 4 B words
+    }
+}

@@ -1,0 +1,281 @@
+//! PJRT golden-model runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client via the
+//! `xla` crate.  This is the L2/L1 numerics oracle the simulated
+//! accelerators are validated against (experiment E9) — Python never runs
+//! here.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not a
+//! serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.  Artifacts
+//! are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1()`-style tuple decomposition.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use thiserror::Error;
+
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("artifacts directory `{0}` has no manifest.json — run `make artifacts`")]
+    NoManifest(PathBuf),
+    #[error("artifact `{0}` not in manifest")]
+    UnknownArtifact(String),
+    #[error("artifact `{name}` expects {expect} args, got {got}")]
+    ArityMismatch {
+        name: String,
+        expect: usize,
+        got: usize,
+    },
+    #[error("argument {index} of `{name}`: expected {expect} elements, got {got}")]
+    ShapeMismatch {
+        name: String,
+        index: usize,
+        expect: usize,
+        got: usize,
+    },
+    #[error("manifest parse error: {0}")]
+    Manifest(#[from] JsonError),
+    #[error("io error reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// One tensor signature from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(TensorSig {
+            shape: v
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_, _>>()?,
+            dtype: v.field("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One artifact entry of `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub args: Vec<TensorSig>,
+    pub results: Vec<TensorSig>,
+}
+
+impl ArtifactSig {
+    fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let sigs = |key: &str| -> Result<Vec<TensorSig>, JsonError> {
+            v.field(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect()
+        };
+        Ok(ArtifactSig {
+            file: v.field("file")?.as_str()?.to_string(),
+            args: sigs("args")?,
+            results: sigs("results")?,
+        })
+    }
+}
+
+/// The golden-model runtime: PJRT CPU client + lazily compiled
+/// executables, one per artifact.
+pub struct Golden {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: HashMap<String, ArtifactSig>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Golden {
+    /// Load the manifest and create the PJRT CPU client.  Executables
+    /// compile on first use and are cached for the process lifetime (one
+    /// compile per model variant — the AOT contract).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        if !mpath.exists() {
+            return Err(RuntimeError::NoManifest(dir));
+        }
+        let text =
+            std::fs::read_to_string(&mpath).map_err(|e| RuntimeError::Io(mpath.clone(), e))?;
+        let parsed = Json::parse(&text)?;
+        let mut manifest = HashMap::new();
+        for (name, entry) in parsed.as_obj()? {
+            manifest.insert(name.clone(), ArtifactSig::from_json(entry)?);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Golden {
+            dir,
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts directory: `$ACADL_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self, RuntimeError> {
+        let dir = std::env::var("ACADL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.manifest.get(name)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let sig = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact paths are utf-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with f32 inputs (row-major flats, one per
+    /// manifest arg).  Returns the result tensors as row-major flats.
+    pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        self.compile(name)?;
+        let sig = self.manifest.get(name).unwrap().clone();
+        if inputs.len() != sig.args.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: name.to_string(),
+                expect: sig.args.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, arg)) in inputs.iter().zip(&sig.args).enumerate() {
+            if data.len() != arg.elements() {
+                return Err(RuntimeError::ShapeMismatch {
+                    name: name.to_string(),
+                    index: i,
+                    expect: arg.elements(),
+                    got: data.len(),
+                });
+            }
+            let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `make artifacts` to have run; they are skipped
+    //! (not failed) when the artifacts are absent so `cargo test` works in
+    //! a fresh checkout.
+    use super::*;
+
+    fn golden() -> Option<Golden> {
+        match Golden::load_default() {
+            Ok(g) => Some(g),
+            Err(RuntimeError::NoManifest(_)) => None,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+
+    #[test]
+    fn manifest_lists_artifacts() {
+        let Some(g) = golden() else { return };
+        let names = g.names();
+        for expect in ["gemm_8x8", "gemm_relu_8x8", "gemm_tiled_128", "mlp_forward"] {
+            assert!(names.contains(&expect), "{names:?}");
+        }
+        let sig = g.signature("gemm_8x8").unwrap();
+        assert_eq!(sig.args.len(), 2);
+        assert_eq!(sig.args[0].shape, vec![8, 8]);
+    }
+
+    #[test]
+    fn gemm_8x8_identity() {
+        let Some(mut g) = golden() else { return };
+        let mut a = vec![0.0f32; 64];
+        let mut id = vec![0.0f32; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                a[i * 8 + j] = (i * 8 + j) as f32;
+            }
+            id[i * 8 + i] = 1.0;
+        }
+        let out = g.run("gemm_8x8", &[a.clone(), id]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], a);
+    }
+
+    #[test]
+    fn gemm_relu_clamps() {
+        let Some(mut g) = golden() else { return };
+        let a = vec![-1.0f32; 64];
+        let mut id = vec![0.0f32; 64];
+        for i in 0..8 {
+            id[i * 8 + i] = 1.0;
+        }
+        let out = g.run("gemm_relu_8x8", &[a, id]).unwrap();
+        assert!(out[0].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn arity_and_shape_errors() {
+        let Some(mut g) = golden() else { return };
+        assert!(matches!(
+            g.run("gemm_8x8", &[vec![0.0; 64]]),
+            Err(RuntimeError::ArityMismatch { .. })
+        ));
+        assert!(matches!(
+            g.run("gemm_8x8", &[vec![0.0; 64], vec![0.0; 7]]),
+            Err(RuntimeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            g.run("nope", &[]),
+            Err(RuntimeError::UnknownArtifact(_))
+        ));
+    }
+}

@@ -1,0 +1,489 @@
+//! Shared instruction semantics: the paper's `Instruction.function` /
+//! `execute()` (§3), implemented once and used by both the functional ISS
+//! and the timed engine (which captures operands at dispatch and commits
+//! effects at completion).
+//!
+//! Memory is a word-addressed f32 image (4-byte words) — the payload type
+//! of every modeled workload; integer register traffic never touches
+//! memory in the paper's mappings except through loads/stores of data
+//! values, which we model in f32 like the Γ̈ datapath.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::acadl_core::data::Value;
+use crate::acadl_core::graph::RegId;
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::opcode::Opcode;
+use crate::isa::GAMMA_TILE;
+
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum ExecError {
+    #[error("instruction {0} expects {1}")]
+    Malformed(String, &'static str),
+    #[error("register %{0:?} holds no vector but a vector op needs one")]
+    NotVector(RegId),
+}
+
+/// Register state: dense values indexed by `RegId`.
+pub type RegState = Vec<Value>;
+
+/// Word-addressed functional memory image (f32 payloads).
+#[derive(Debug, Clone, Default)]
+pub struct MemImage {
+    words: HashMap<u64, f32>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl MemImage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn read(&mut self, addr: u64) -> f32 {
+        self.reads += 1;
+        self.words.get(&(addr & !3)).copied().unwrap_or(0.0)
+    }
+
+    #[inline]
+    pub fn peek(&self, addr: u64) -> f32 {
+        self.words.get(&(addr & !3)).copied().unwrap_or(0.0)
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u64, v: f32) {
+        self.writes += 1;
+        self.words.insert(addr & !3, v);
+    }
+
+    /// Bulk-load a row-major f32 slice at `base` (workload setup).
+    pub fn load_f32(&mut self, base: u64, data: &[f32]) {
+        for (i, v) in data.iter().enumerate() {
+            self.words.insert(base + 4 * i as u64, *v);
+        }
+    }
+
+    /// Read back `len` f32 words from `base` (result extraction).
+    pub fn dump_f32(&self, base: u64, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| self.peek(base + 4 * i as u64))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+/// The computed effects of one instruction: applied later by the caller
+/// (at completion in the timed engine; immediately in the ISS).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Effects {
+    pub reg_writes: Vec<(RegId, Value)>,
+    pub mem_writes: Vec<(u64, f32)>,
+    /// Absolute branch target, if the instruction redirects fetch.
+    pub branch: Option<u64>,
+    pub halt: bool,
+    /// Resolved byte addresses read (addr, bytes) — for the timing model.
+    pub mem_reads: Vec<(u64, u32)>,
+    /// Resolved byte addresses written (addr, bytes).
+    pub mem_stores: Vec<(u64, u32)>,
+}
+
+/// Resolve an address operand against current register values.
+#[inline]
+pub fn resolve_addr(a: &AddrRef, regs: &RegState) -> u64 {
+    match a {
+        AddrRef::Direct(x) => *x,
+        AddrRef::Indirect { base, offset } => {
+            (regs[base.idx()].as_int() + offset) as u64
+        }
+    }
+}
+
+#[inline]
+fn lanes_of(v: &Value) -> Option<usize> {
+    match v {
+        Value::Vec(x) => Some(x.len()),
+        _ => None,
+    }
+}
+
+fn binop_scalar(op: Opcode, a: &Value, b: &Value) -> Value {
+    match (a, b) {
+        (Value::Int(x), Value::Int(y)) => Value::Int(match op {
+            Opcode::Add | Opcode::Addi => x.wrapping_add(*y),
+            Opcode::Sub | Opcode::Subi => x.wrapping_sub(*y),
+            Opcode::Mul | Opcode::Muli => x.wrapping_mul(*y),
+            _ => unreachable!(),
+        }),
+        _ => {
+            let (x, y) = (a.as_f32(), b.as_f32());
+            Value::F32(match op {
+                Opcode::Add | Opcode::Addi => x + y,
+                Opcode::Sub | Opcode::Subi => x - y,
+                Opcode::Mul | Opcode::Muli => x * y,
+                _ => unreachable!(),
+            })
+        }
+    }
+}
+
+fn lanewise(op: Opcode, a: &Value, b: &Value) -> Result<Value, ExecError> {
+    let (av, bv) = (a.as_slice(), b.as_slice());
+    let n = av.len().max(bv.len());
+    let get = |s: &[f32], i: usize| s.get(i).copied().unwrap_or(0.0);
+    let out: Vec<f32> = (0..n)
+        .map(|i| {
+            let (x, y) = (get(av, i), get(bv, i));
+            match op {
+                Opcode::VAdd => x + y,
+                Opcode::VMul => x * y,
+                Opcode::VMaxp => x.max(y),
+                _ => unreachable!(),
+            }
+        })
+        .collect();
+    Ok(Value::Vec(out.into_boxed_slice()))
+}
+
+/// Execute one instruction against `(regs, mem)` state.  `self_addr` is the
+/// instruction's byte address (relative branch bases).  Pure apart from the
+/// memory read counters.
+pub fn execute(
+    ins: &Instruction,
+    self_addr: u64,
+    regs: &RegState,
+    mem: &mut MemImage,
+) -> Result<Effects, ExecError> {
+    let mut fx = Effects::default();
+    let rd = |i: usize| -> &Value { &regs[ins.reads[i].idx()] };
+    match ins.op {
+        Opcode::Nop => {}
+        Opcode::Halt => fx.halt = true,
+        Opcode::Mov => {
+            fx.reg_writes.push((ins.writes[0], rd(0).clone()));
+        }
+        Opcode::Movi => {
+            fx.reg_writes.push((ins.writes[0], Value::Int(ins.imms[0])));
+        }
+        Opcode::Add | Opcode::Sub | Opcode::Mul => {
+            fx.reg_writes
+                .push((ins.writes[0], binop_scalar(ins.op, rd(0), rd(1))));
+        }
+        Opcode::Addi | Opcode::Subi | Opcode::Muli => {
+            fx.reg_writes.push((
+                ins.writes[0],
+                binop_scalar(ins.op, rd(0), &Value::Int(ins.imms[0])),
+            ));
+        }
+        Opcode::Mac => {
+            // acc' = acc + a*b; reads = [a, b, acc].
+            if ins.reads.len() < 3 {
+                return Err(ExecError::Malformed(ins.to_string(), "3 source registers"));
+            }
+            let (a, b, acc) = (rd(0), rd(1), rd(2));
+            let v = match (a, b, acc) {
+                (Value::Int(x), Value::Int(y), Value::Int(z)) => {
+                    Value::Int(z.wrapping_add(x.wrapping_mul(*y)))
+                }
+                _ => Value::F32(acc.as_f32() + a.as_f32() * b.as_f32()),
+            };
+            fx.reg_writes.push((ins.writes[0], v));
+        }
+        Opcode::MacFwd => {
+            // reads = [a, b, acc]; writes = [acc, fwd_a?, fwd_b?];
+            // imms[0] bit0 = forward a, bit1 = forward b.
+            if ins.reads.len() < 3 || ins.writes.is_empty() {
+                return Err(ExecError::Malformed(ins.to_string(), "3 reads / 1+ writes"));
+            }
+            let (a, b, acc) = (rd(0).clone(), rd(1).clone(), rd(2));
+            fx.reg_writes
+                .push((ins.writes[0], Value::F32(acc.as_f32() + a.as_f32() * b.as_f32())));
+            let flags = ins.imms.first().copied().unwrap_or(0);
+            let mut w = 1;
+            if flags & 1 != 0 {
+                fx.reg_writes.push((ins.writes[w], a));
+                w += 1;
+            }
+            if flags & 2 != 0 {
+                fx.reg_writes.push((ins.writes[w], b));
+            }
+        }
+        Opcode::Load => {
+            let addr = resolve_addr(&ins.read_addrs[0], regs);
+            let dest = ins.writes[0];
+            match lanes_of(&regs[dest.idx()]) {
+                Some(n) => {
+                    let v: Vec<f32> = (0..n).map(|i| mem.read(addr + 4 * i as u64)).collect();
+                    fx.mem_reads.push((addr, 4 * n as u32));
+                    fx.reg_writes.push((dest, Value::Vec(v.into_boxed_slice())));
+                }
+                None => {
+                    let v = mem.read(addr);
+                    fx.mem_reads.push((addr, 4));
+                    // Preserve integer-ness for address registers: data
+                    // loads land in f32.
+                    fx.reg_writes.push((dest, Value::F32(v)));
+                }
+            }
+        }
+        Opcode::Store => {
+            let addr = resolve_addr(&ins.write_addrs[0], regs);
+            let src = rd(0);
+            match src {
+                Value::Vec(v) => {
+                    for (i, x) in v.iter().enumerate() {
+                        fx.mem_writes.push((addr + 4 * i as u64, *x));
+                    }
+                    fx.mem_stores.push((addr, 4 * v.len() as u32));
+                }
+                s => {
+                    fx.mem_writes.push((addr, s.as_f32()));
+                    fx.mem_stores.push((addr, 4));
+                }
+            }
+        }
+        Opcode::Beqi | Opcode::Bnei => {
+            let taken = match ins.op {
+                Opcode::Beqi => rd(0).as_int() == rd(1).as_int(),
+                _ => rd(0).as_int() != rd(1).as_int(),
+            };
+            if taken {
+                fx.branch = Some((self_addr as i64 + ins.imms[0]) as u64);
+            }
+        }
+        Opcode::Jumpi => {
+            fx.branch = Some((self_addr as i64 + ins.imms[0]) as u64);
+        }
+        Opcode::VAdd | Opcode::VMul | Opcode::VMaxp => {
+            fx.reg_writes
+                .push((ins.writes[0], lanewise(ins.op, rd(0), rd(1))?));
+        }
+        Opcode::VRelu => {
+            let v: Vec<f32> = rd(0).as_slice().iter().map(|x| x.max(0.0)).collect();
+            fx.reg_writes
+                .push((ins.writes[0], Value::Vec(v.into_boxed_slice())));
+        }
+        Opcode::Gemm => {
+            // reads = 8 A rows ++ 8 B rows; writes = 8 C rows;
+            // imms[0] = 1 enables ReLU (Listing 4).
+            let t = GAMMA_TILE;
+            if ins.reads.len() != 2 * t || ins.writes.len() != t {
+                return Err(ExecError::Malformed(
+                    ins.to_string(),
+                    "16 source rows and 8 destination rows",
+                ));
+            }
+            let relu = ins.imms.first().copied().unwrap_or(0) == 1;
+            let row = |r: usize| -> &[f32] { regs[ins.reads[r].idx()].as_slice() };
+            for i in 0..t {
+                let mut out = vec![0.0f32; t];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for k in 0..t {
+                        let a = row(i).get(k).copied().unwrap_or(0.0);
+                        let b = row(t + k).get(j).copied().unwrap_or(0.0);
+                        acc += a * b;
+                    }
+                    *o = if relu { acc.max(0.0) } else { acc };
+                }
+                fx.reg_writes
+                    .push((ins.writes[i], Value::Vec(out.into_boxed_slice())));
+            }
+        }
+    }
+    Ok(fx)
+}
+
+/// Apply computed effects to register state + memory.
+pub fn apply(fx: &Effects, regs: &mut RegState, mem: &mut MemImage) {
+    for (r, v) in &fx.reg_writes {
+        regs[r.idx()] = v.clone();
+    }
+    for (a, v) in &fx.mem_writes {
+        mem.write(*a, *v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regs(n: usize) -> RegState {
+        vec![Value::Int(0); n]
+    }
+
+    #[test]
+    fn scalar_alu() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(4);
+        rs[0] = Value::Int(5);
+        rs[1] = Value::Int(3);
+        let add = Instruction::new(Opcode::Add)
+            .with_reads(vec![RegId(0), RegId(1)])
+            .with_writes(vec![RegId(2)]);
+        let fx = execute(&add, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[2], Value::Int(8));
+
+        let subi = Instruction::new(Opcode::Subi)
+            .with_reads(vec![RegId(2)])
+            .with_imms(vec![10])
+            .with_writes(vec![RegId(3)]);
+        let fx = execute(&subi, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[3], Value::Int(-2));
+    }
+
+    #[test]
+    fn mac_int_and_float() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(4);
+        rs[0] = Value::F32(2.0);
+        rs[1] = Value::F32(3.0);
+        rs[2] = Value::F32(10.0);
+        let mac = Instruction::new(Opcode::Mac)
+            .with_reads(vec![RegId(0), RegId(1), RegId(2)])
+            .with_writes(vec![RegId(2)]);
+        let fx = execute(&mac, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[2], Value::F32(16.0));
+    }
+
+    #[test]
+    fn load_store_scalar_roundtrip() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(4);
+        rs[1] = Value::F32(7.5);
+        rs[3] = Value::Int(0x100);
+        let st = Instruction::new(Opcode::Store)
+            .with_reads(vec![RegId(1)])
+            .with_write_addrs(vec![AddrRef::Indirect {
+                base: RegId(3),
+                offset: 8,
+            }]);
+        let fx = execute(&st, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(mem.peek(0x108), 7.5);
+        assert_eq!(fx.mem_stores, vec![(0x108, 4)]);
+
+        let ld = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x108)])
+            .with_writes(vec![RegId(0)]);
+        let fx = execute(&ld, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[0], Value::F32(7.5));
+    }
+
+    #[test]
+    fn vector_load_uses_dest_lanes() {
+        let mut mem = MemImage::new();
+        mem.load_f32(0x200, &[1.0, 2.0, 3.0, 4.0]);
+        let mut rs = regs(2);
+        rs[0] = Value::zero_vec(4);
+        let ld = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x200)])
+            .with_writes(vec![RegId(0)]);
+        let fx = execute(&ld, 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.mem_reads, vec![(0x200, 16)]);
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[0].as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn branches() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(2);
+        rs[0] = Value::Int(0);
+        rs[1] = Value::Int(0);
+        let beq = Instruction::new(Opcode::Beqi)
+            .with_reads(vec![RegId(0), RegId(1)])
+            .with_imms(vec![-28]);
+        let fx = execute(&beq, 100, &rs, &mut mem).unwrap();
+        assert_eq!(fx.branch, Some(72));
+        rs[0] = Value::Int(1);
+        let fx = execute(&beq, 100, &rs, &mut mem).unwrap();
+        assert_eq!(fx.branch, None, "not taken");
+        let j = Instruction::new(Opcode::Jumpi).with_imms(vec![8]);
+        assert_eq!(execute(&j, 100, &rs, &mut mem).unwrap().branch, Some(108));
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let t = GAMMA_TILE;
+        let mut mem = MemImage::new();
+        let mut rs: RegState = (0..3 * t).map(|_| Value::zero_vec(t)).collect();
+        // A = row-index matrix, B = identity → C = A.
+        for i in 0..t {
+            let a: Vec<f32> = (0..t).map(|k| (i * t + k) as f32).collect();
+            rs[i] = Value::Vec(a.into_boxed_slice());
+            let mut b = vec![0.0f32; t];
+            b[i] = 1.0;
+            rs[t + i] = Value::Vec(b.into_boxed_slice());
+        }
+        let g = Instruction::new(Opcode::Gemm)
+            .with_reads((0..2 * t as u32).map(RegId).collect())
+            .with_writes((2 * t as u32..3 * t as u32).map(RegId).collect())
+            .with_imms(vec![0]);
+        let fx = execute(&g, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        for i in 0..t {
+            let want: Vec<f32> = (0..t).map(|k| (i * t + k) as f32).collect();
+            assert_eq!(rs[2 * t + i].as_slice(), &want[..]);
+        }
+    }
+
+    #[test]
+    fn gemm_relu_flag() {
+        let t = GAMMA_TILE;
+        let mut mem = MemImage::new();
+        let mut rs: RegState = (0..3 * t).map(|_| Value::zero_vec(t)).collect();
+        for i in 0..t {
+            rs[i] = Value::Vec(vec![-1.0; t].into_boxed_slice());
+            let mut b = vec![0.0f32; t];
+            b[i] = 1.0;
+            rs[t + i] = Value::Vec(b.into_boxed_slice());
+        }
+        let mut g = Instruction::new(Opcode::Gemm)
+            .with_reads((0..2 * t as u32).map(RegId).collect())
+            .with_writes((2 * t as u32..3 * t as u32).map(RegId).collect())
+            .with_imms(vec![1]);
+        let fx = execute(&g, 0, &rs, &mut mem).unwrap();
+        assert!(fx
+            .reg_writes
+            .iter()
+            .all(|(_, v)| v.as_slice().iter().all(|&x| x == 0.0)));
+        g.imms = vec![0];
+        let fx = execute(&g, 0, &rs, &mut mem).unwrap();
+        assert!(fx
+            .reg_writes
+            .iter()
+            .any(|(_, v)| v.as_slice().iter().any(|&x| x < 0.0)));
+    }
+
+    #[test]
+    fn macfwd_forwards_operands() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(6);
+        rs[0] = Value::F32(2.0); // a
+        rs[1] = Value::F32(4.0); // b
+        rs[2] = Value::F32(1.0); // acc
+        let m = Instruction::new(Opcode::MacFwd)
+            .with_reads(vec![RegId(0), RegId(1), RegId(2)])
+            .with_writes(vec![RegId(2), RegId(4), RegId(5)])
+            .with_imms(vec![3]);
+        let fx = execute(&m, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs[2], Value::F32(9.0));
+        assert_eq!(rs[4], Value::F32(2.0), "a forwarded");
+        assert_eq!(rs[5], Value::F32(4.0), "b forwarded");
+    }
+}

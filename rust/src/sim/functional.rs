@@ -1,0 +1,207 @@
+//! Functional instruction-set simulation: program-order execution of a
+//! [`Program`] against the AG's architectural state, with no timing.
+//!
+//! This is the paper's "functional simulation" (§3: `Data.payload` "is used
+//! for the functional simulation"; §5: the UMA interface function "runs a
+//! functional and optional timing simulation to validate the DNN operator
+//! mapping").  The timed engine reuses the same [`exec`] semantics, so a
+//! mapped operator that validates here produces bit-identical architectural
+//! state under timing simulation.
+
+use thiserror::Error;
+
+use crate::acadl_core::data::Value;
+use crate::acadl_core::graph::{Ag, RegId};
+use crate::isa::program::Program;
+use crate::isa::INSTR_BYTES;
+use crate::sim::exec::{self, ExecError, MemImage, RegState};
+
+#[derive(Debug, Error)]
+pub enum FuncError {
+    #[error("pc {0:#x} is outside the program")]
+    PcOutOfRange(u64),
+    #[error("step limit {0} exceeded (missing halt or infinite loop?)")]
+    StepLimit(u64),
+    #[error(transparent)]
+    Exec(#[from] ExecError),
+    #[error("unknown register `{0}`")]
+    UnknownReg(String),
+}
+
+/// Result summary of a functional run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuncStats {
+    pub instructions: u64,
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+}
+
+/// Program-order ISS over the AG's register namespace.
+#[derive(Debug, Clone)]
+pub struct FunctionalSim {
+    pub regs: RegState,
+    pub mem: MemImage,
+    zero_regs: Vec<RegId>,
+}
+
+impl FunctionalSim {
+    /// Initialize architectural state from the AG's register init values.
+    pub fn new(ag: &Ag) -> Self {
+        let regs: RegState = ag.regs().iter().map(|r| r.init.payload.clone()).collect();
+        // Hardwired-zero registers by convention: any register named `z0`
+        // or `*z0` stays zero (Listing 5 relies on this).
+        let zero_regs = ag
+            .regs()
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.name == "z0" || r.name.ends_with("_z0"))
+            .map(|(i, _)| RegId(i as u32))
+            .collect();
+        FunctionalSim {
+            regs,
+            mem: MemImage::new(),
+            zero_regs,
+        }
+    }
+
+    /// Set a register by AG name (workload setup).
+    pub fn set_reg(&mut self, ag: &Ag, name: &str, v: Value) -> Result<(), FuncError> {
+        let id = ag
+            .reg_id(name)
+            .ok_or_else(|| FuncError::UnknownReg(name.to_string()))?;
+        self.regs[id.idx()] = v;
+        Ok(())
+    }
+
+    pub fn get_reg(&self, ag: &Ag, name: &str) -> Result<&Value, FuncError> {
+        let id = ag
+            .reg_id(name)
+            .ok_or_else(|| FuncError::UnknownReg(name.to_string()))?;
+        Ok(&self.regs[id.idx()])
+    }
+
+    /// Run `program` to `halt` (or fall off the end), program order.
+    pub fn run(&mut self, program: &Program, max_steps: u64) -> Result<FuncStats, FuncError> {
+        let mut pc = program.base;
+        let mut steps = 0u64;
+        let (r0, w0) = (self.mem.reads, self.mem.writes);
+        loop {
+            let Some(idx) = program.index_of(pc) else {
+                if pc == program.end_addr() {
+                    break; // fell off the end — treat like halt
+                }
+                return Err(FuncError::PcOutOfRange(pc));
+            };
+            let ins = &program.instrs[idx];
+            let fx = exec::execute(ins, pc, &self.regs, &mut self.mem)?;
+            exec::apply(&fx, &mut self.regs, &mut self.mem);
+            for z in &self.zero_regs {
+                self.regs[z.idx()] = Value::Int(0);
+            }
+            steps += 1;
+            if fx.halt {
+                break;
+            }
+            pc = fx.branch.unwrap_or(pc + INSTR_BYTES);
+            if steps >= max_steps {
+                return Err(FuncError::StepLimit(max_steps));
+            }
+        }
+        Ok(FuncStats {
+            instructions: steps,
+            mem_reads: self.mem.reads - r0,
+            mem_writes: self.mem.writes - w0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::oma::OmaConfig;
+    use crate::isa::assembler::assemble;
+
+    #[test]
+    fn straight_line_program() {
+        let m = OmaConfig::default().build().unwrap();
+        let p = assemble(
+            &m.ag,
+            "movi #5 => r0\n\
+             movi #7 => r1\n\
+             add r0, r1 => r2\n\
+             halt",
+            m.cfg.imem_range.0,
+        )
+        .unwrap();
+        let mut sim = FunctionalSim::new(&m.ag);
+        let stats = sim.run(&p, 1000).unwrap();
+        assert_eq!(stats.instructions, 4);
+        assert_eq!(sim.get_reg(&m.ag, "r2").unwrap().as_int(), 12);
+    }
+
+    #[test]
+    fn loop_with_branch() {
+        let m = OmaConfig::default().build().unwrap();
+        // Sum 1..=5 into r1 using a countdown loop.
+        let p = assemble(
+            &m.ag,
+            "movi #5 => r0\n\
+             movi #0 => r1\n\
+             loop: add r1, r0 => r1\n\
+             addi r0, #-1 => r0\n\
+             bnei r0, z0, @loop => pc\n\
+             halt",
+            0,
+        )
+        .unwrap();
+        let mut sim = FunctionalSim::new(&m.ag);
+        sim.run(&p, 1000).unwrap();
+        assert_eq!(sim.get_reg(&m.ag, "r1").unwrap().as_int(), 15);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_zero_reg() {
+        let m = OmaConfig::default().build().unwrap();
+        let base = m.dmem_base();
+        let p = assemble(
+            &m.ag,
+            &format!(
+                "movi #{base} => r10\n\
+                 load [r10] => r4\n\
+                 load [r10+4] => r5\n\
+                 mac r4, r5 => r6\n\
+                 store r6 => [r10+8]\n\
+                 mov z0 => r7\n\
+                 halt"
+            ),
+            0,
+        )
+        .unwrap();
+        let mut sim = FunctionalSim::new(&m.ag);
+        sim.mem.load_f32(base, &[3.0, 4.0]);
+        sim.set_reg(&m.ag, "r6", Value::F32(1.0)).unwrap();
+        sim.run(&p, 100).unwrap();
+        assert_eq!(sim.mem.peek(base + 8), 13.0); // 1 + 3*4
+        assert_eq!(sim.get_reg(&m.ag, "r7").unwrap().as_int(), 0);
+    }
+
+    #[test]
+    fn step_limit_guards_infinite_loops() {
+        let m = OmaConfig::default().build().unwrap();
+        let p = assemble(&m.ag, "loop: jumpi @loop => pc", 0).unwrap();
+        let mut sim = FunctionalSim::new(&m.ag);
+        assert!(matches!(
+            sim.run(&p, 50),
+            Err(FuncError::StepLimit(50))
+        ));
+    }
+
+    #[test]
+    fn fall_off_end_is_clean_stop() {
+        let m = OmaConfig::default().build().unwrap();
+        let p = assemble(&m.ag, "movi #1 => r0\nmovi #2 => r1", 0).unwrap();
+        let mut sim = FunctionalSim::new(&m.ag);
+        let stats = sim.run(&p, 100).unwrap();
+        assert_eq!(stats.instructions, 2);
+    }
+}

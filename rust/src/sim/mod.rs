@@ -1,0 +1,23 @@
+//! The ACADL timing-simulation semantics (§6, Figs 9–13) plus the
+//! functional instruction-set simulation the paper's C++ core provides.
+//!
+//! * [`exec`] — the `Instruction.execute()` semantics shared by both
+//!   simulators: pure state-transition functions per opcode.
+//! * [`functional`] — program-order ISS: validates operator mappings and
+//!   produces the golden architectural state (E9 cross-checks it against
+//!   the PJRT-executed artifacts).
+//! * [`scoreboard`] — the global last-user map (§6): RAW/WAW/WAR tracking
+//!   over registers and memory addresses.
+//! * [`storage`] — request slots + FIFO queuing for `DataStorage` objects
+//!   (Figs 12–13), recursing caches into their backing stores.
+//! * [`engine`] — the cycle-accurate engine: fetch (Fig 9), pipeline /
+//!   execute stages (Fig 10), functional units (Fig 11).
+
+pub mod engine;
+pub mod exec;
+pub mod functional;
+pub mod scoreboard;
+pub mod storage;
+
+pub use engine::{Engine, SimStats};
+pub use functional::FunctionalSim;

@@ -1,0 +1,297 @@
+//! The global last-user dependency map (§6): *"This is facilitated by a
+//! global hash map which contains the last user for each register and
+//! memory address and ensures correct simulation of data dependencies."*
+//!
+//! Dependencies are snapshotted in **program order at issue time** (fetch
+//! order), producing for each dynamic instruction the set of earlier
+//! instruction sequence numbers that must retire first:
+//!
+//! * **RAW** — readers depend on the last writer of each read register /
+//!   address.
+//! * **WAW** — writers depend on the last writer.
+//! * **WAR** — writers additionally depend on every still-open reader
+//!   since the last write (so a later writer cannot clobber a value an
+//!   earlier, not-yet-dispatched reader still needs).
+//!
+//! Registers are tracked exactly (dense arrays over `RegId`).  Memory is
+//! tracked per word for statically-known addresses; an instruction with a
+//! register-indirect address falls back to a conservative whole-memory
+//! ordering (sound for the OMA, whose single execute stage serializes
+//! memory operations anyway; the parallel models — systolic, Γ̈ — emit
+//! direct addresses from codegen).
+
+use std::collections::HashMap;
+
+use crate::isa::instruction::{AddrRef, Instruction};
+
+/// Dynamic instruction sequence number (issue order).
+pub type Seq = u64;
+
+#[derive(Debug, Clone, Default)]
+struct UserSet {
+    last_writer: Option<Seq>,
+    /// Readers issued since the last write.
+    open_readers: Vec<Seq>,
+}
+
+impl UserSet {
+    fn read_dep(&self, deps: &mut Vec<Seq>) {
+        if let Some(w) = self.last_writer {
+            deps.push(w);
+        }
+    }
+
+    fn write_dep(&self, deps: &mut Vec<Seq>) {
+        if let Some(w) = self.last_writer {
+            deps.push(w);
+        }
+        deps.extend_from_slice(&self.open_readers);
+    }
+
+    fn note_read(&mut self, seq: Seq) {
+        self.open_readers.push(seq);
+    }
+
+    fn note_write(&mut self, seq: Seq) {
+        self.last_writer = Some(seq);
+        self.open_readers.clear();
+    }
+}
+
+/// The scoreboard: register and memory last-user state plus the retired
+/// set. Registers use dense storage; memory addresses a hash map, exactly
+/// as the paper describes.
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    regs: Vec<UserSet>,
+    mem: HashMap<u64, UserSet>,
+    /// Conservative whole-memory ordering for indirect addresses.
+    mem_any: UserSet,
+    /// retired[seq] — dense bitmap grown on issue.
+    retired: Vec<bool>,
+    next_seq: Seq,
+}
+
+impl Scoreboard {
+    pub fn new(reg_count: usize) -> Self {
+        Scoreboard {
+            regs: vec![UserSet::default(); reg_count],
+            mem: HashMap::new(),
+            mem_any: UserSet::default(),
+            retired: Vec::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Issue one instruction (program order!). Returns its sequence number
+    /// and dependency list (seqs that must retire before it may start).
+    pub fn issue(&mut self, ins: &Instruction) -> (Seq, Vec<Seq>) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.retired.push(false);
+        debug_assert_eq!(self.retired.len() as Seq, self.next_seq);
+
+        let mut deps = Vec::new();
+
+        // Register RAW (includes address base registers).
+        for r in ins.all_read_regs() {
+            self.regs[r.idx()].read_dep(&mut deps);
+        }
+        // Register WAW + WAR.
+        for w in &ins.writes {
+            self.regs[w.idx()].write_dep(&mut deps);
+        }
+
+        // Memory dependencies.  Direct addresses are tracked per word
+        // (codegen emits word-aligned per-element addresses; vector rows
+        // are tracked by their base — sound because producers write whole
+        // rows through the same base).  Indirect addresses use the
+        // conservative `mem_any` ordering, and the two worlds cross-check
+        // each other so a direct access never races an aliasing indirect
+        // one.  Programs are typically all-direct (systolic, Γ̈) or
+        // all-indirect (OMA), so the cross terms stay cheap.
+        let word = |a: u64| a & !3;
+        for a in &ins.read_addrs {
+            match a {
+                AddrRef::Direct(addr) => {
+                    self.mem.entry(word(*addr)).or_default().read_dep(&mut deps);
+                    self.mem_any.read_dep(&mut deps); // vs indirect writers
+                }
+                AddrRef::Indirect { .. } => {
+                    self.mem_any.read_dep(&mut deps);
+                    for u in self.mem.values() {
+                        u.read_dep(&mut deps); // vs direct writers
+                    }
+                }
+            }
+        }
+        for a in &ins.write_addrs {
+            match a {
+                AddrRef::Direct(addr) => {
+                    self.mem.entry(word(*addr)).or_default().write_dep(&mut deps);
+                    self.mem_any.write_dep(&mut deps);
+                }
+                AddrRef::Indirect { .. } => {
+                    self.mem_any.write_dep(&mut deps);
+                    // May alias any tracked word.
+                    for u in self.mem.values() {
+                        u.write_dep(&mut deps);
+                    }
+                }
+            }
+        }
+
+        // Record this instruction as the new last user.
+        for r in ins.all_read_regs() {
+            self.regs[r.idx()].note_read(seq);
+        }
+        for w in &ins.writes {
+            self.regs[w.idx()].note_write(seq);
+        }
+        for a in &ins.read_addrs {
+            match a {
+                AddrRef::Direct(addr) => self.mem.entry(word(*addr)).or_default().note_read(seq),
+                AddrRef::Indirect { .. } => self.mem_any.note_read(seq),
+            }
+        }
+        for a in &ins.write_addrs {
+            match a {
+                AddrRef::Direct(addr) => {
+                    self.mem.entry(word(*addr)).or_default().note_write(seq)
+                }
+                AddrRef::Indirect { .. } => {
+                    self.mem_any.note_write(seq);
+                }
+            }
+        }
+
+        deps.sort_unstable();
+        deps.dedup();
+        deps.retain(|&d| !self.retired[d as usize]);
+        (seq, deps)
+    }
+
+    /// Mark a dynamic instruction finished.
+    #[inline]
+    pub fn retire(&mut self, seq: Seq) {
+        self.retired[seq as usize] = true;
+    }
+
+    #[inline]
+    pub fn is_retired(&self, seq: Seq) -> bool {
+        self.retired[seq as usize]
+    }
+
+    /// Are all of `deps` retired? Callers prune retired entries to keep
+    /// this O(outstanding).
+    #[inline]
+    pub fn all_retired(&self, deps: &[Seq]) -> bool {
+        deps.iter().all(|&d| self.retired[d as usize])
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::graph::RegId;
+    use crate::isa::opcode::Opcode;
+
+    fn w(op: Opcode, reads: Vec<u32>, writes: Vec<u32>) -> Instruction {
+        Instruction::new(op)
+            .with_reads(reads.into_iter().map(RegId).collect())
+            .with_writes(writes.into_iter().map(RegId).collect())
+    }
+
+    #[test]
+    fn raw_dependency() {
+        let mut sb = Scoreboard::new(8);
+        let (s0, d0) = sb.issue(&w(Opcode::Movi, vec![], vec![0]));
+        assert!(d0.is_empty());
+        let (_s1, d1) = sb.issue(&w(Opcode::Mov, vec![0], vec![1]));
+        assert_eq!(d1, vec![s0]);
+    }
+
+    #[test]
+    fn waw_and_war() {
+        let mut sb = Scoreboard::new(8);
+        let (s0, _) = sb.issue(&w(Opcode::Movi, vec![], vec![0])); // write r0
+        let (s1, _) = sb.issue(&w(Opcode::Mov, vec![0], vec![1])); // read r0
+        let (_, d2) = sb.issue(&w(Opcode::Movi, vec![], vec![0])); // write r0 again
+        assert!(d2.contains(&s0), "WAW on r0");
+        assert!(d2.contains(&s1), "WAR on r0 (open reader)");
+    }
+
+    #[test]
+    fn retired_deps_are_pruned() {
+        let mut sb = Scoreboard::new(8);
+        let (s0, _) = sb.issue(&w(Opcode::Movi, vec![], vec![0]));
+        sb.retire(s0);
+        let (_, d1) = sb.issue(&w(Opcode::Mov, vec![0], vec![1]));
+        assert!(d1.is_empty(), "already-retired writer is not a dependency");
+    }
+
+    #[test]
+    fn independent_instructions_have_no_deps() {
+        let mut sb = Scoreboard::new(8);
+        sb.issue(&w(Opcode::Movi, vec![], vec![0]));
+        let (_, d) = sb.issue(&w(Opcode::Movi, vec![], vec![1]));
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn direct_memory_raw() {
+        let mut sb = Scoreboard::new(8);
+        let st = Instruction::new(Opcode::Store)
+            .with_reads(vec![RegId(0)])
+            .with_write_addrs(vec![AddrRef::Direct(0x100)]);
+        let (s0, _) = sb.issue(&st);
+        let ld = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x100)])
+            .with_writes(vec![RegId(1)]);
+        let (_, d) = sb.issue(&ld);
+        assert!(d.contains(&s0), "load sees earlier store to same word");
+        // A load from a different word is independent.
+        let ld2 = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x200)])
+            .with_writes(vec![RegId(2)]);
+        let (_, d2) = sb.issue(&ld2);
+        assert!(!d2.contains(&s0));
+    }
+
+    #[test]
+    fn indirect_memory_is_conservative() {
+        let mut sb = Scoreboard::new(8);
+        let st = Instruction::new(Opcode::Store)
+            .with_reads(vec![RegId(0)])
+            .with_write_addrs(vec![AddrRef::Direct(0x100)]);
+        let (s0, _) = sb.issue(&st);
+        // Indirect store may alias 0x100: depends on s0.
+        let st2 = Instruction::new(Opcode::Store)
+            .with_reads(vec![RegId(1)])
+            .with_write_addrs(vec![AddrRef::Indirect {
+                base: RegId(2),
+                offset: 0,
+            }]);
+        let (s1, d1) = sb.issue(&st2);
+        assert!(d1.contains(&s0), "indirect store may alias direct word");
+        // A later *direct* load must also see the indirect store.
+        let ld_direct = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Direct(0x100)])
+            .with_writes(vec![RegId(5)]);
+        let (_, dd) = sb.issue(&ld_direct);
+        assert!(dd.contains(&s1), "direct load sees indirect writer");
+        // Indirect -> indirect ordering.
+        let ld = Instruction::new(Opcode::Load)
+            .with_read_addrs(vec![AddrRef::Indirect {
+                base: RegId(3),
+                offset: 0,
+            }])
+            .with_writes(vec![RegId(4)]);
+        let (_, d2) = sb.issue(&ld);
+        assert!(d2.contains(&s1));
+    }
+}

@@ -1,0 +1,120 @@
+//! Micro-benchmark harness (criterion's role for the `harness = false`
+//! bench targets): warmup, repeated timed runs, median/mean/min report.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    /// Optional throughput denominator (items per run).
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    /// items / second at the median, when a denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items
+            .map(|n| n as f64 / self.median.as_secs_f64().max(1e-12))
+    }
+
+    pub fn line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>8.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} k/s", t / 1e3),
+            Some(t) => format!("  {t:>8.2} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}{}",
+            self.name, self.median, self.mean, self.min, tp
+        )
+    }
+}
+
+/// A named group of benchmarks (one per experiment table).
+pub struct Bench {
+    group: String,
+    warmup: usize,
+    runs: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // `ACADL_BENCH_RUNS` trims runs for smoke-testing the harness.
+        let runs = std::env::var("ACADL_BENCH_RUNS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(7);
+        Bench {
+            group: group.to_string(),
+            warmup: 1,
+            runs,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_runs(mut self, runs: usize) -> Self {
+        self.runs = runs.max(1);
+        self
+    }
+
+    /// Time `f` (its return value is black-boxed) and record the result.
+    pub fn time<T>(&mut self, name: &str, items: Option<u64>, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = (0..self.runs)
+            .map(|_| {
+                let t0 = Instant::now();
+                black_box(f());
+                t0.elapsed()
+            })
+            .collect();
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let min = samples[0];
+        let r = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            runs: self.runs,
+            median,
+            mean,
+            min,
+            items,
+        };
+        println!("{}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box stabilized in 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_ordered_stats() {
+        let mut b = Bench::new("unit").with_runs(5);
+        let r = b.time("noop", Some(1000), || 42).clone();
+        assert!(r.min <= r.median);
+        assert_eq!(r.runs, 5);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.line().contains("unit/noop"));
+    }
+}

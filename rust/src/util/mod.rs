@@ -1,0 +1,13 @@
+//! In-tree substrates replacing ecosystem crates that the offline build
+//! cannot resolve (DESIGN.md §Substitutions):
+//!
+//! * [`json`]  — serde_json's role: a small JSON value model + parser +
+//!   writer for the artifact manifest and the coordinator wire format.
+//! * [`bench`] — criterion's role: a warmup/median micro-bench harness
+//!   behind `cargo bench` (`harness = false` targets).
+//! * [`prop`]  — proptest's role: seeded generators + a `forall` driver
+//!   with failure-case reporting for property tests.
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,122 @@
+//! Property-test support (proptest's role): a seeded xorshift generator
+//! and a `forall` driver that reports the failing case and its seed.
+
+/// Deterministic xorshift64* PRNG for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            state: seed ^ 0x9E37_79B9_7F4A_7C15 | 1,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.next_u64() >> 11) as f32 / (1u64 << 53) as f32;
+        lo + (hi - lo) * u
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the seed and debug
+/// form of the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xACAD_1u64;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut g = Gen::new(seed);
+        let case = generate(&mut g);
+        if let Err(msg) = prop(&case) {
+            panic!("property `{name}` failed (seed {seed:#x}, case {i}): {msg}\ncase: {case:#?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let v = g.int(-3, 9);
+            assert!((-3..=9).contains(&v));
+            let f = g.f32(0.5, 2.0);
+            assert!((0.5..=2.0).contains(&f));
+            let u = g.usize(1, 4);
+            assert!((1..=4).contains(&u));
+        }
+    }
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall(
+            "abs is non-negative",
+            64,
+            |g| g.int(-100, 100),
+            |&x| {
+                if x.abs() >= 0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn forall_reports_failures() {
+        forall("always fails", 4, |g| g.int(0, 1), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,282 @@
+//! E5 — timing-semantics conformance: cycle-exact checks of the §6 state
+//! machines (Figs 9–13) on hand-built micro-architectures, plus
+//! end-to-end workloads on the Eyeriss- and Plasticine-derived models.
+
+use acadl::acadl_core::data::Value;
+use acadl::arch::eyeriss::EyerissConfig;
+use acadl::arch::oma::{CacheCfg, DataMem, OmaConfig};
+use acadl::arch::plasticine::PlasticineConfig;
+use acadl::isa::assembler::assemble;
+use acadl::sim::engine::Engine;
+use acadl::sim::functional::FunctionalSim;
+
+/// Fig. 11: an FU takes exactly `latency` cycles after dependencies
+/// resolve.  Measured as the steady-state inter-retirement slope of a
+/// dependent MAC chain (boundary effects cancel): raising the MAC latency
+/// by ΔL raises the per-MAC cost by exactly ΔL.
+#[test]
+fn fu_latency_is_exact() {
+    let run = |mac_latency: u64, n: usize| {
+        let m = OmaConfig {
+            mac_latency,
+            cache: None,
+            dmem: DataMem::Sram { latency: 1 },
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        let mut src = String::from("movi #1 => r6\nmovi #1 => r7\n");
+        for _ in 0..n {
+            src.push_str("mac r6, r7 => r8\n"); // dependent chain on r8
+        }
+        src.push_str("halt");
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        let mut e = Engine::new(&m.ag, &p).unwrap();
+        e.run(100_000).unwrap().cycles
+    };
+    // Per-MAC steady-state cost at latency L.
+    let slope = |l: u64| (run(l, 12) - run(l, 4)) / 8;
+    let (s1, s3, s5) = (slope(1), slope(3), slope(5));
+    assert_eq!(s3 - s1, 2, "ΔL=2 ⇒ +2 cycles/MAC (got {s1} vs {s3})");
+    assert_eq!(s5 - s3, 2, "ΔL=2 ⇒ +2 cycles/MAC (got {s3} vs {s5})");
+}
+
+/// Fig. 10 structural hazard: the execute stage is busy while its FU
+/// processes, so independent ALU ops cannot overlap on the OMA.
+#[test]
+fn structural_hazard_blocks_stage() {
+    let m = OmaConfig {
+        mac_latency: 10,
+        cache: None,
+        dmem: DataMem::Sram { latency: 1 },
+        ..OmaConfig::default()
+    }
+    .build()
+    .unwrap();
+    // Two *independent* MACs: without the structural hazard they would
+    // overlap; per Fig. 10 they serialize → ≥ 20 cycles of MAC time.
+    let src = "movi #1 => r0\n\
+               movi #1 => r1\n\
+               movi #1 => r2\n\
+               movi #1 => r3\n\
+               mac r0, r1 => r4\n\
+               mac r2, r3 => r5\n\
+               halt";
+    let p = assemble(&m.ag, src, 0).unwrap();
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    let stats = e.run(100_000).unwrap();
+    assert!(
+        stats.cycles >= 20,
+        "independent MACs must serialize on one FU: {} cycles",
+        stats.cycles
+    );
+    assert!(stats.structural_stall_cycles > 0 || stats.cycles >= 20);
+}
+
+/// Fig. 9's fetch guard: a smaller issue buffer stalls fetch more.
+#[test]
+fn issue_buffer_backpressure() {
+    let cycles = |issue_buffer: usize| {
+        let m = OmaConfig {
+            issue_buffer,
+            fetch_width: 2,
+            cache: None,
+            dmem: DataMem::Sram { latency: 1 },
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        let mut src = String::new();
+        for i in 0..24 {
+            src.push_str(&format!("movi #{i} => r{}\n", i % 8));
+        }
+        src.push_str("halt");
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        let mut e = Engine::new(&m.ag, &p).unwrap();
+        let s = e.run(100_000).unwrap();
+        (s.cycles, s.fetch_stalls)
+    };
+    let (c_small, stalls_small) = cycles(2);
+    let (c_big, _) = cycles(16);
+    assert!(c_small >= c_big, "small buffer can't be faster");
+    assert!(stalls_small > 0, "2-deep buffer must stall fetch");
+}
+
+/// Fig. 12: DRAM row behavior visible end-to-end — streaming one row is
+/// faster than striding across rows of one bank.
+#[test]
+fn dram_row_locality_end_to_end() {
+    let m = OmaConfig {
+        cache: None,
+        dmem: DataMem::Dram,
+        ..OmaConfig::default()
+    }
+    .build()
+    .unwrap();
+    let base = m.dmem_base();
+    let run = |stride: u64| {
+        let mut src = String::new();
+        for i in 0..16u64 {
+            src.push_str(&format!("load [{:#x}] => r1\n", base + i * stride));
+        }
+        src.push_str("halt");
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        let mut e = Engine::new(&m.ag, &p).unwrap();
+        e.run(1_000_000).unwrap().cycles
+    };
+    let sequential = run(4); // same row: row hits
+    let strided = run(8 * 1024); // row i*8 of bank 0 every time: conflicts
+    assert!(
+        strided > sequential,
+        "row conflicts must cost cycles: seq={sequential} strided={strided}"
+    );
+}
+
+/// Fig. 13 + write-back: evicting dirty lines costs backing-store writes.
+#[test]
+fn cache_writeback_traffic_end_to_end() {
+    let m = OmaConfig {
+        cache: Some(CacheCfg {
+            sets: 2,
+            ways: 1,
+            line: 16,
+            ..CacheCfg::default()
+        }),
+        dmem: DataMem::Sram { latency: 10 },
+        ..OmaConfig::default()
+    }
+    .build()
+    .unwrap();
+    let base = m.dmem_base();
+    // Write 8 conflicting lines (2-set direct-mapped): every store after
+    // the first 2 evicts a dirty line.
+    let mut src = String::from("movi #7 => r1\n");
+    for i in 0..8u64 {
+        src.push_str(&format!("store r1 => [{:#x}]\n", base + i * 32));
+    }
+    src.push_str("halt");
+    let p = assemble(&m.ag, &src, 0).unwrap();
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    let stats = e.run(1_000_000).unwrap();
+    let dmem = stats
+        .storages
+        .iter()
+        .find(|s| s.name == "dmem0")
+        .unwrap();
+    assert!(
+        dmem.requests >= 6,
+        "dirty evictions must reach the backing store: {} requests",
+        dmem.requests
+    );
+}
+
+/// Control hazards: fetch does not run ahead of unresolved branches, and
+/// the taken path's architectural state matches the functional ISS on a
+/// branchy program.
+#[test]
+fn branchy_program_timed_equals_functional() {
+    let m = OmaConfig::default().build().unwrap();
+    let base = m.dmem_base();
+    let src = format!(
+        "movi #{base} => r10\n\
+         movi #10 => r0\n\
+         movi #0 => r1\n\
+         loop: addi r1, #3 => r1\n\
+         subi r1, #1 => r1\n\
+         addi r0, #-1 => r0\n\
+         bnei r0, z0, @loop => pc\n\
+         store r1 => [r10]\n\
+         halt"
+    );
+    let p = assemble(&m.ag, &src, 0).unwrap();
+    let mut f = FunctionalSim::new(&m.ag);
+    f.run(&p, 100_000).unwrap();
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    e.run(1_000_000).unwrap();
+    assert_eq!(e.mem.peek(base), f.mem.peek(base));
+    assert_eq!(e.mem.peek(base), 20.0); // 10 × (3-1)
+}
+
+/// The Eyeriss-derived model end-to-end: DMA stages DRAM→GLB, a PE
+/// computes a weighted sum from the GLB, a store unit drains the psum.
+#[test]
+fn eyeriss_dataflow_end_to_end() {
+    let m = EyerissConfig::default().build().unwrap();
+    let dram = m.dram_base();
+    let glb = m.glb_base();
+    // DRAM holds [w, x]; DMA copies both to GLB; PE(0,0) macs them.
+    let src = format!(
+        "load [{dram:#x}] => dma0_s0\n\
+         store dma0_s0 => [{glb:#x}]\n\
+         load [{:#x}] => dma0_s1\n\
+         store dma0_s1 => [{:#x}]\n\
+         load [{glb:#x}] => e0_0_w\n\
+         load [{:#x}] => e0_0_x\n\
+         mac e0_0_w, e0_0_x => e0_0_p\n\
+         store e0_0_p => [{:#x}]\n\
+         halt",
+        dram + 4,
+        glb + 4,
+        glb + 4,
+        glb + 64,
+    );
+    let p = assemble(&m.ag, &src, 0).unwrap();
+    let mut f = FunctionalSim::new(&m.ag);
+    f.mem.load_f32(dram, &[3.0, 4.0]);
+    f.run(&p, 100_000).unwrap();
+    assert_eq!(f.mem.peek(glb + 64), 12.0);
+
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    e.mem.load_f32(dram, &[3.0, 4.0]);
+    let stats = e.run(1_000_000).unwrap();
+    assert_eq!(e.mem.peek(glb + 64), 12.0);
+    // The DRAM accesses must dominate the GLB ones in latency.
+    assert!(stats.cycles > 30, "DRAM latency visible: {}", stats.cycles);
+}
+
+/// The Plasticine-derived model end-to-end: a map/zip vector pipeline
+/// relu(a·b + a) streamed through PMU scratchpads and a PCU.
+#[test]
+fn plasticine_pattern_pipeline() {
+    let m = PlasticineConfig::default().build().unwrap();
+    let (pmu0, _) = m.pmu_range(0);
+    let (pmu1, _) = m.pmu_range(1);
+    let src = format!(
+        "load [{pmu0:#x}] => p[0].0\n\
+         load [{:#x}] => p[0].1\n\
+         vmul p[0].0, p[0].1 => p[0].2\n\
+         vadd p[0].2, p[0].0 => p[0].2\n\
+         vrelu p[0].2 => p[0].3\n\
+         store p[0].3 => [{pmu1:#x}]\n\
+         halt",
+        pmu0 + 32,
+    );
+    let p = assemble(&m.ag, &src, 0).unwrap();
+    let a: Vec<f32> = vec![1.0, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0];
+    let b: Vec<f32> = vec![2.0; 8];
+    let mut f = FunctionalSim::new(&m.ag);
+    f.mem.load_f32(pmu0, &a);
+    f.mem.load_f32(pmu0 + 32, &b);
+    f.run(&p, 100_000).unwrap();
+    let got = f.mem.dump_f32(pmu1, 8);
+    let want: Vec<f32> = a.iter().map(|x| (x * 2.0 + x).max(0.0)).collect();
+    assert_eq!(got, want);
+
+    // Timed run commits identical state.
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    e.mem.load_f32(pmu0, &a);
+    e.mem.load_f32(pmu0 + 32, &b);
+    e.run(1_000_000).unwrap();
+    assert_eq!(e.mem.dump_f32(pmu1, 8), want);
+}
+
+/// Zero-register semantics survive the timed path (Listing 5 relies on
+/// `z0` staying zero even when written).
+#[test]
+fn zero_register_is_hardwired() {
+    let m = OmaConfig::default().build().unwrap();
+    let p = assemble(&m.ag, "movi #42 => z0\nmov z0 => r1\nhalt", 0).unwrap();
+    let mut e = Engine::new(&m.ag, &p).unwrap();
+    e.run(10_000).unwrap();
+    assert_eq!(e.get_reg("r1"), Some(&Value::Int(0)));
+}

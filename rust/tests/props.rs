@@ -1,0 +1,384 @@
+//! Property-based tests (E11 + cross-cutting invariants), driven by the
+//! in-tree `util::prop` harness:
+//!
+//! * edge-validity conformance against an independent rule statement,
+//! * assembler → disassembler → assembler fixpoint,
+//! * GeMM mapping correctness over random shapes on all three targets,
+//! * timed-engine ≡ functional-ISS architectural state on random scalar
+//!   programs,
+//! * coordinator JSON wire-format round-trips,
+//! * cache simulator sanity (hits never exceed accesses; LRU beats
+//!   pessimal on a scan).
+
+use acadl::acadl_core::edge::{edge_allowed, EdgeKind};
+use acadl::acadl_core::latency::Latency;
+use acadl::acadl_core::object::build;
+use acadl::arch::gamma::GammaConfig;
+use acadl::arch::oma::OmaConfig;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::coordinator::{JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::isa::assembler::assemble;
+use acadl::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
+use acadl::mapping::uma::{lower, Machine, Operator, TargetConfig};
+use acadl::mem::cache::{CacheState, ReplacementPolicy};
+use acadl::sim::engine::Engine;
+use acadl::sim::functional::FunctionalSim;
+use acadl::util::json::Json;
+use acadl::util::prop::{forall, Gen};
+
+/// E11: `edge_allowed` equals an independently-stated Fig. 1 rule table
+/// for every ordered pair of randomly-parameterized objects.
+#[test]
+fn prop_edge_validity_conformance() {
+    let make = |g: &mut Gen| {
+        let which = g.usize(0, 9);
+        match which {
+            0 => build::pipeline_stage("ps", g.int(1, 4) as u64).kind,
+            1 => build::execute_stage("ex", g.int(1, 4) as u64).kind,
+            2 => build::fetch_stage("ifs", 1, g.usize(1, 16)).kind,
+            3 => build::functional_unit("fu", &["add"], Latency::Const(g.int(1, 8) as u64)).kind,
+            4 => build::memory_access_unit("mau", &["load"], 1).kind,
+            5 => build::instruction_memory_access_unit("imau", 1).kind,
+            6 => build::register_file("rf", 32, vec![]).kind,
+            7 => acadl::arch::parts::sram("s", 0, 1 << g.usize(6, 16), 1, 1).kind,
+            8 => acadl::arch::parts::dram_default("d", 0, 1 << g.usize(10, 20)).kind,
+            _ => acadl::arch::parts::cache_default("c").kind,
+        }
+    };
+    forall(
+        "edge validity == Fig.1 rules",
+        400,
+        |g| (make(g), make(g)),
+        |(src, dst)| {
+            let cases = [
+                (
+                    EdgeKind::Forward,
+                    src.is_pipeline_stage() && dst.is_pipeline_stage(),
+                ),
+                (
+                    EdgeKind::Contains,
+                    src.is_execute_stage() && dst.is_functional_unit(),
+                ),
+                (
+                    EdgeKind::ReadData,
+                    (src.is_register_file() && dst.is_functional_unit())
+                        || (src.is_data_storage() && dst.is_memory_access_unit())
+                        || (src.is_data_storage() && dst.is_data_storage()),
+                ),
+                (
+                    EdgeKind::WriteData,
+                    (src.is_functional_unit() && dst.is_register_file())
+                        || (src.is_memory_access_unit() && dst.is_data_storage())
+                        || (src.is_data_storage() && dst.is_data_storage()),
+                ),
+            ];
+            for (kind, want) in cases {
+                if edge_allowed(kind, src, dst) != want {
+                    return Err(format!("{kind} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Assembler fixpoint: disassembling an assembled random program and
+/// re-assembling yields the identical instruction encoding.
+#[test]
+fn prop_assembler_roundtrip() {
+    let m = OmaConfig::default().build().unwrap();
+    forall(
+        "asm -> disasm -> asm fixpoint",
+        60,
+        |g| {
+            let mut src = String::new();
+            let n = g.usize(1, 20);
+            for _ in 0..n {
+                match g.usize(0, 5) {
+                    0 => src.push_str(&format!("movi #{} => r{}\n", g.int(-99, 99), g.usize(0, 7))),
+                    1 => src.push_str(&format!(
+                        "add r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(0, 7)
+                    )),
+                    2 => src.push_str(&format!(
+                        "mac r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(8, 12)
+                    )),
+                    3 => src.push_str(&format!(
+                        "load [{:#x}] => r{}\n",
+                        0x10000 + g.usize(0, 255) * 4,
+                        g.usize(0, 7)
+                    )),
+                    4 => src.push_str(&format!(
+                        "store r{} => [r{}+{}]\n",
+                        g.usize(0, 7),
+                        g.usize(8, 12),
+                        g.usize(0, 64) * 4
+                    )),
+                    _ => src.push_str("nop\n"),
+                }
+            }
+            src.push_str("halt\n");
+            src
+        },
+        |src| {
+            let p1 = assemble(&m.ag, src, 0).map_err(|e| e.to_string())?;
+            let dis = p1.disassemble(&m.ag);
+            // Strip the address column the disassembler prefixes.
+            let body: String = dis
+                .lines()
+                .map(|l| l.splitn(2, "  ").nth(1).unwrap_or(l))
+                .collect::<Vec<_>>()
+                .join("\n");
+            let p2 = assemble(&m.ag, &body, 0).map_err(|e| e.to_string())?;
+            if p1.instrs != p2.instrs {
+                return Err("re-assembly differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random GeMM shapes map correctly on every target (functional ISS vs
+/// host oracle).
+#[test]
+fn prop_gemm_mapping_correct_all_targets() {
+    let oma = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+    let sys = TargetConfig::Systolic(SystolicConfig::new(3, 4)).build().unwrap();
+    let gam = TargetConfig::Gamma(GammaConfig::new(2)).build().unwrap();
+    forall(
+        "gemm mapping correct on all targets",
+        12,
+        |g| {
+            let m = g.usize(1, 10);
+            let k = g.usize(1, 10);
+            let n = g.usize(1, 10);
+            let order = *g.choose(&LoopOrder::ALL);
+            let tile = if g.bool() { Some(g.usize(1, 4)) } else { None };
+            let a = g.vec_f32(m * k, -2.0, 2.0);
+            let b = g.vec_f32(k * n, -2.0, 2.0);
+            (m, k, n, order, tile, a, b)
+        },
+        |(m, k, n, order, tile, a, b)| {
+            let mut p = GemmParams::new(*m, *k, *n).with_order(*order);
+            if let Some(t) = tile {
+                p = p.with_tile(*t);
+            }
+            let want = gemm_ref(&p, a, b);
+            for machine in [&oma, &sys, &gam] {
+                // Γ̈ needs multiples of 8: pad operands with zeros.
+                let (p2, a2, b2) = if matches!(machine, Machine::Gamma(_)) {
+                    let pm = p.m.div_ceil(8) * 8;
+                    let pk = p.k.div_ceil(8) * 8;
+                    let pn = p.n.div_ceil(8) * 8;
+                    let mut ap = vec![0.0; pm * pk];
+                    for i in 0..p.m {
+                        ap[i * pk..i * pk + p.k].copy_from_slice(&a[i * p.k..(i + 1) * p.k]);
+                    }
+                    let mut bp = vec![0.0; pk * pn];
+                    for i in 0..p.k {
+                        bp[i * pn..i * pn + p.n].copy_from_slice(&b[i * p.n..(i + 1) * p.n]);
+                    }
+                    (GemmParams::new(pm, pk, pn), ap, bp)
+                } else {
+                    (p, a.clone(), b.clone())
+                };
+                let lw = lower(machine, &Operator::Gemm(p2)).map_err(|e| e.to_string())?;
+                let mut sim = FunctionalSim::new(machine.ag());
+                lw.layout.load_inputs(&p2, &mut sim.mem, &a2, &b2);
+                sim.run(&lw.program, 100_000_000).map_err(|e| e.to_string())?;
+                let got = lw.layout.read_c(&p2, &sim.mem);
+                for i in 0..p.m {
+                    for j in 0..p.n {
+                        let gv = got[i * p2.n + j];
+                        let wv = want[i * p.n + j];
+                        if (gv - wv).abs() > 1e-2 {
+                            return Err(format!(
+                                "{}: C[{i}][{j}] = {gv} want {wv}",
+                                machine.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Timed engine and functional ISS commit identical architectural state on
+/// random straight-line scalar programs.
+#[test]
+fn prop_timed_equals_functional() {
+    let m = OmaConfig::default().build().unwrap();
+    let base = m.dmem_base();
+    forall(
+        "timed == functional state",
+        25,
+        |g| {
+            let mut src = String::new();
+            for i in 0..g.usize(4, 24) {
+                match g.usize(0, 4) {
+                    0 => src.push_str(&format!("movi #{} => r{}\n", g.int(-50, 50), g.usize(0, 5))),
+                    1 => src.push_str(&format!(
+                        "add r{}, r{} => r{}\n",
+                        g.usize(0, 5),
+                        g.usize(0, 5),
+                        g.usize(0, 5)
+                    )),
+                    2 => src.push_str(&format!(
+                        "mul r{}, r{} => r{}\n",
+                        g.usize(0, 5),
+                        g.usize(0, 5),
+                        g.usize(0, 5)
+                    )),
+                    3 => src.push_str(&format!(
+                        "store r{} => [{:#x}]\n",
+                        g.usize(0, 5),
+                        base + (i as u64) * 4
+                    )),
+                    _ => src.push_str(&format!(
+                        "load [{:#x}] => r{}\n",
+                        base + g.usize(0, 23) as u64 * 4,
+                        g.usize(0, 5)
+                    )),
+                }
+            }
+            src.push_str("halt\n");
+            src
+        },
+        |src| {
+            let p = assemble(&m.ag, src, 0).map_err(|e| e.to_string())?;
+            let mut f = FunctionalSim::new(&m.ag);
+            f.run(&p, 1_000_000).map_err(|e| e.to_string())?;
+            let mut e = Engine::new(&m.ag, &p).map_err(|e| e.to_string())?;
+            e.run(10_000_000).map_err(|e| e.to_string())?;
+            for r in 0..6 {
+                let name = format!("r{r}");
+                let fv = f.get_reg(&m.ag, &name).map_err(|e| e.to_string())?;
+                let ev = e.get_reg(&name).ok_or("missing reg")?;
+                if fv != ev {
+                    return Err(format!("{name}: functional {fv:?} vs timed {ev:?}"));
+                }
+            }
+            for w in 0..24u64 {
+                let (fv, ev) = (f.mem.peek(base + w * 4), e.mem.peek(base + w * 4));
+                if fv != ev {
+                    return Err(format!("mem[{w}]: {fv} vs {ev}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Coordinator wire format: random JobSpecs survive JSON round-trips.
+#[test]
+fn prop_jobspec_json_roundtrip() {
+    forall(
+        "jobspec json roundtrip",
+        100,
+        |g| JobSpec {
+            id: g.next_u64() % 10_000,
+            target: match g.usize(0, 2) {
+                0 => TargetSpec::Oma {
+                    cache: g.bool(),
+                    mac_latency: if g.bool() { Some(g.int(1, 9) as u64) } else { None },
+                },
+                1 => TargetSpec::Systolic {
+                    rows: g.usize(1, 32),
+                    cols: g.usize(1, 32),
+                },
+                _ => TargetSpec::Gamma {
+                    units: g.usize(1, 8),
+                },
+            },
+            workload: if g.bool() {
+                Workload::Gemm {
+                    m: g.usize(1, 64),
+                    k: g.usize(1, 64),
+                    n: g.usize(1, 64),
+                    tile: if g.bool() { Some(g.usize(1, 16)) } else { None },
+                    order: if g.bool() {
+                        Some(*g.choose(&LoopOrder::ALL))
+                    } else {
+                        None
+                    },
+                }
+            } else {
+                Workload::Mlp {
+                    small: g.bool(),
+                    batch: g.usize(1, 16),
+                }
+            },
+            mode: *g.choose(&[
+                SimModeSpec::Functional,
+                SimModeSpec::Timed,
+                SimModeSpec::Estimate,
+            ]),
+            max_cycles: g.next_u64() % 1_000_000 + 1,
+        },
+        |spec| {
+            let line = spec.to_json().to_string();
+            let back = JobSpec::parse(&line).map_err(|e| e.to_string())?;
+            if &back != spec {
+                return Err(format!("roundtrip differs: {line}"));
+            }
+            // And the JSON itself re-parses.
+            Json::parse(&line).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+/// Cache invariants under random access streams: hits+misses == accesses,
+/// hit rate in [0,1], and a repeated working set smaller than the cache
+/// eventually stops missing (for LRU).
+#[test]
+fn prop_cache_invariants() {
+    forall(
+        "cache invariants",
+        60,
+        |g| {
+            let sets = 1 << g.usize(0, 4);
+            let ways = g.usize(1, 4);
+            let policy = *g.choose(&[
+                ReplacementPolicy::Lru,
+                ReplacementPolicy::Fifo,
+                ReplacementPolicy::Plru,
+                ReplacementPolicy::Random,
+            ]);
+            let accesses: Vec<(u64, bool)> = (0..g.usize(10, 200))
+                .map(|_| (g.usize(0, 2047) as u64, g.bool()))
+                .collect();
+            (sets, ways, policy, accesses)
+        },
+        |(sets, ways, policy, accesses)| {
+            let mut c = CacheState::new(*sets, *ways, 16, *policy, true, true);
+            for (a, w) in accesses {
+                c.access(*a, *w);
+            }
+            if c.hits + c.misses != accesses.len() as u64 {
+                return Err("hits+misses != accesses".into());
+            }
+            let r = c.hit_rate();
+            if !(0.0..=1.0).contains(&r) {
+                return Err(format!("hit rate {r}"));
+            }
+            Ok(())
+        },
+    );
+    // LRU steady state: a fitting working set stops missing.
+    let mut c = CacheState::new(4, 2, 16, ReplacementPolicy::Lru, true, true);
+    let ws: Vec<u64> = (0..8).map(|i| i * 16).collect(); // exactly 8 lines
+    for _ in 0..4 {
+        for &a in &ws {
+            c.access(a, false);
+        }
+    }
+    assert_eq!(c.misses, 8, "only compulsory misses for a fitting set");
+}

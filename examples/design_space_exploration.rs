@@ -9,6 +9,7 @@
 
 use acadl::coordinator::{run_jobs, JobSpec, SimModeSpec, TargetSpec, Workload};
 use acadl::metrics::Table;
+use acadl::sim::BackendKind;
 
 fn main() {
     let dim = 32;
@@ -43,6 +44,10 @@ fn main() {
             target,
             workload: workload.clone(),
             mode: SimModeSpec::Timed,
+            // DSE sweeps are throughput-bound: the event-driven backend
+            // reports identical cycles and skips the memory-stall idle
+            // cycles that dominate the big Γ̈ candidates.
+            backend: BackendKind::EventDriven,
             max_cycles: 2_000_000_000,
         })
         .collect();

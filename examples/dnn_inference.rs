@@ -19,6 +19,7 @@ use acadl::dnn::lowering::{lower_graph, run_schedule, SimMode};
 use acadl::mapping::uma::Machine;
 use acadl::metrics::Table;
 use acadl::runtime::{Golden, RuntimeError};
+use acadl::sim::BackendKind;
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
@@ -27,7 +28,7 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0, f32::max)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let graph = DnnGraph::mlp_784_256_128_10();
     let batch = 8;
     println!(
@@ -46,7 +47,13 @@ fn main() -> anyhow::Result<()> {
 
     // Cycle-accurate schedule run.
     let t0 = std::time::Instant::now();
-    let report = run_schedule(&machine, &lowered, &x, SimMode::Timed, 2_000_000_000)?;
+    let report = run_schedule(
+        &machine,
+        &lowered,
+        &x,
+        SimMode::Timed(BackendKind::EventDriven),
+        2_000_000_000,
+    )?;
     let wall = t0.elapsed();
 
     let mut table = Table::new(
@@ -109,6 +116,10 @@ fn main() -> anyhow::Result<()> {
                 "vs PJRT golden:      skipped ({} missing — run `make artifacts`)",
                 d.display()
             );
+            println!("\nE9 PASS (host validation only)");
+        }
+        Err(RuntimeError::Disabled) => {
+            println!("vs PJRT golden:      skipped (built without the `pjrt` feature)");
             println!("\nE9 PASS (host validation only)");
         }
         Err(e) => return Err(e.into()),

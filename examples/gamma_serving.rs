@@ -14,9 +14,10 @@ use std::time::Instant;
 
 use acadl::coordinator::server::serve;
 use acadl::coordinator::{JobResult, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::sim::BackendKind;
 use acadl::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let workers = 4;
@@ -50,6 +51,13 @@ fn main() -> anyhow::Result<()> {
                         order: None,
                     },
                     mode: SimModeSpec::Timed,
+                    // Alternate backends across requests: the serving path
+                    // must report identical cycles either way.
+                    backend: if i % 2 == 0 {
+                        BackendKind::EventDriven
+                    } else {
+                        BackendKind::CycleStepped
+                    },
                     max_cycles: 1_000_000_000,
                 };
                 let t = Instant::now();

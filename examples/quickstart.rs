@@ -13,8 +13,9 @@ use acadl::mapping::gemm::{gemm_ref, GemmLayout, GemmParams, LoopOrder};
 use acadl::mapping::uma::{lower, Machine, Operator};
 use acadl::sim::engine::Engine;
 use acadl::sim::functional::FunctionalSim;
+use acadl::sim::BackendKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Model the accelerator (Fig. 2/3's block diagram → AG).
     let machine = Machine::Oma(OmaConfig::default().build()?);
     println!("OMA architecture graph: {}\n", machine.ag().summary());
@@ -79,6 +80,15 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    // 3c. The event-driven backend skips idle cycles (memory stalls, long
+    //     MAC latencies) yet reports the identical cycle count — pick it
+    //     for memory-bound sweeps, keep the default for dense pipelines.
+    let mut event = Engine::with_backend(machine.ag(), &lowered.program, BackendKind::EventDriven)?;
+    lowered.layout.load_inputs(&p, &mut event.mem, &a, &b);
+    let estats = event.run(100_000_000)?;
+    assert_eq!(estats.cycles, stats.cycles, "backends agree cycle-for-cycle");
+    println!("\nevent-driven backend: {} cycles (identical) ✓", estats.cycles);
 
     // The same layout/result helpers let you sweep tile sizes and loop
     // orders — see `cargo bench --bench tiling` (experiment E2).

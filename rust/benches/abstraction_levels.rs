@@ -51,8 +51,14 @@ fn main() {
     for (name, level, machine) in &targets {
         let lowered = lower_graph(machine, &graph, batch).expect("lower");
         let t0 = Instant::now();
-        let rep = run_schedule(machine, &lowered, &x, SimMode::Timed, 2_000_000_000)
-            .expect("schedule");
+        let rep = run_schedule(
+            machine,
+            &lowered,
+            &x,
+            SimMode::Timed(Default::default()),
+            2_000_000_000,
+        )
+        .expect("schedule");
         let wall = t0.elapsed();
         let diff = rep
             .output

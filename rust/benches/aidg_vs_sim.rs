@@ -15,11 +15,21 @@ use acadl::mapping::gemm::{oma_gemm_listing5, oma_tiled_gemm, GemmParams};
 use acadl::mapping::systolic_gemm::systolic_gemm;
 use acadl::metrics::Table;
 use acadl::sim::engine::Engine;
+use acadl::sim::BackendKind;
 
 fn main() {
     let mut table = Table::new(
-        "E6: AIDG estimate vs cycle-accurate simulation",
-        &["workload", "sim cycles", "AIDG cycles", "error", "sim wall", "AIDG wall", "speedup"],
+        "E6: AIDG estimate vs cycle-accurate simulation (both sim backends)",
+        &[
+            "workload",
+            "sim cycles",
+            "AIDG cycles",
+            "error",
+            "sim wall",
+            "event wall",
+            "AIDG wall",
+            "speedup",
+        ],
     );
 
     let cases: Vec<(String, acadl::acadl_core::graph::Ag, acadl::isa::program::Program)> = {
@@ -64,6 +74,12 @@ fn main() {
         let exact = engine.run(2_000_000_000).expect("run").cycles;
         let sim_wall = t0.elapsed();
 
+        let te = Instant::now();
+        let mut event = Engine::with_backend(ag, prog, BackendKind::EventDriven).expect("engine");
+        let event_cycles = event.run(2_000_000_000).expect("run").cycles;
+        let event_wall = te.elapsed();
+        assert_eq!(event_cycles, exact, "{name}: backends must agree");
+
         let t1 = Instant::now();
         let est = aidg::estimate_fixed_point(ag, prog, 2_000_000_000)
             .expect("estimate")
@@ -77,6 +93,7 @@ fn main() {
             est.to_string(),
             format!("{:+.1}%", err * 100.0),
             format!("{sim_wall:.2?}"),
+            format!("{event_wall:.2?}"),
             format!("{aidg_wall:.2?}"),
             format!(
                 "{:.0}x",

@@ -27,6 +27,7 @@ fn batch() -> Vec<JobSpec> {
                         order: None,
                     },
                     mode,
+                    backend: Default::default(),
                     max_cycles: 1_000_000_000,
                 });
                 id += 1;
@@ -45,6 +46,7 @@ fn batch() -> Vec<JobSpec> {
                 order: None,
             },
             mode: SimModeSpec::Timed,
+            backend: Default::default(),
             max_cycles: 1_000_000_000,
         });
         id += 1;

@@ -12,6 +12,7 @@ use acadl::mapping::gemm::{oma_gemm_listing5, GemmParams};
 use acadl::mapping::systolic_gemm::systolic_gemm;
 use acadl::sim::engine::Engine;
 use acadl::sim::functional::FunctionalSim;
+use acadl::sim::BackendKind;
 use acadl::util::bench::Bench;
 
 fn main() {
@@ -29,6 +30,13 @@ fn main() {
         bench.time("oma_listing5_timed (cycles/s)", Some(cycles), || {
             let mut e = Engine::new(&m.ag, &prog).expect("engine");
             e.run(1_000_000_000).expect("run").cycles
+        });
+        bench.time("oma_listing5_timed/event (cycles/s)", Some(cycles), || {
+            let mut e = Engine::with_backend(&m.ag, &prog, BackendKind::EventDriven)
+                .expect("engine");
+            let got = e.run(1_000_000_000).expect("run").cycles;
+            assert_eq!(got, cycles, "backends must agree");
+            got
         });
         let instrs = {
             let mut f = FunctionalSim::new(&m.ag);
@@ -53,6 +61,13 @@ fn main() {
             let mut e = Engine::new(&m.ag, &prog).expect("engine");
             e.run(1_000_000_000).expect("run").cycles
         });
+        bench.time("systolic8x8_timed/event (cycles/s)", Some(cycles), || {
+            let mut e = Engine::with_backend(&m.ag, &prog, BackendKind::EventDriven)
+                .expect("engine");
+            let got = e.run(1_000_000_000).expect("run").cycles;
+            assert_eq!(got, cycles, "backends must agree");
+            got
+        });
     }
 
     // Γ̈: fused-tensor ops + DRAM path.
@@ -67,6 +82,15 @@ fn main() {
         bench.time("gamma2u_timed (cycles/s)", Some(cycles), || {
             let mut e = Engine::new(&m.ag, &prog).expect("engine");
             e.run(1_000_000_000).expect("run").cycles
+        });
+        // Γ̈ is the DRAM-bound case: the event backend's idle-cycle skip
+        // shows up here (cycle counts must not move).
+        bench.time("gamma2u_timed/event (cycles/s)", Some(cycles), || {
+            let mut e = Engine::with_backend(&m.ag, &prog, BackendKind::EventDriven)
+                .expect("engine");
+            let got = e.run(1_000_000_000).expect("run").cycles;
+            assert_eq!(got, cycles, "backends must agree");
+            got
         });
     }
 

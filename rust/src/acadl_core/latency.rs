@@ -46,6 +46,20 @@ impl Latency {
         self.eval(&LatencyCtx::default())
     }
 
+    /// The statically resolved latency horizon, if there is one: the exact
+    /// number of cycles after which a unit evaluating this latency changes
+    /// state.  `Const` latencies have a fixed horizon; expression
+    /// latencies resolve per dispatch (context-dependent) and return
+    /// `None`.  The simulation kernel uses this to pre-resolve functional
+    /// unit completion times and the event-driven backend to schedule
+    /// them without polling.
+    pub fn const_horizon(&self) -> Option<u64> {
+        match self {
+            Latency::Const(v) => Some(*v),
+            Latency::Expr(_) => None,
+        }
+    }
+
     /// Evaluate against `ctx`. Division by zero and unknown variables error.
     pub fn eval(&self, ctx: &LatencyCtx) -> Result<u64, LatencyError> {
         match self {
@@ -381,6 +395,13 @@ mod tests {
     fn constants() {
         assert_eq!(Latency::parse("7").unwrap(), Latency::Const(7));
         assert_eq!(Latency::parse(" 42 ").unwrap().eval_const().unwrap(), 42);
+    }
+
+    #[test]
+    fn const_horizon_resolves_only_constants() {
+        assert_eq!(Latency::Const(9).const_horizon(), Some(9));
+        let l = Latency::parse("4 + size / 16").unwrap();
+        assert_eq!(l.const_horizon(), None);
     }
 
     #[test]

@@ -511,6 +511,16 @@ mod tests {
         let mut eng = Engine::new(&m.ag, &prog).unwrap();
         let exact = eng.run(10_000_000).unwrap().cycles;
 
+        // The estimator's reference point is backend-independent: the
+        // event-driven engine reports the same exact cycle count.
+        let mut ev = Engine::with_backend(
+            &m.ag,
+            &prog,
+            crate::sim::backend::BackendKind::EventDriven,
+        )
+        .unwrap();
+        assert_eq!(ev.run(10_000_000).unwrap().cycles, exact);
+
         let est = estimate(&m.ag, &prog, 10_000_000).unwrap().cycles;
         let err = (est as f64 - exact as f64).abs() / exact as f64;
         assert!(

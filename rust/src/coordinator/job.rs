@@ -9,6 +9,7 @@ use crate::dnn::graph::DnnGraph;
 use crate::dnn::lowering::{self, SimMode};
 use crate::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
 use crate::mapping::uma::{self, Machine, Operator, TargetConfig};
+use crate::sim::backend::BackendKind;
 use crate::sim::engine::Engine;
 use crate::sim::functional::FunctionalSim;
 use crate::util::json::{Json, JsonError};
@@ -132,6 +133,10 @@ pub struct JobSpec {
     pub target: TargetSpec,
     pub workload: Workload,
     pub mode: SimModeSpec,
+    /// Timing-simulation backend (ignored by functional/estimate modes).
+    /// Both backends report identical cycles; event-driven is faster on
+    /// memory-bound jobs.
+    pub backend: BackendKind,
     pub max_cycles: u64,
 }
 
@@ -257,7 +262,7 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                     }
                 }
                 SimModeSpec::Timed => {
-                    let mut e = match Engine::new(machine.ag(), &lowered.program) {
+                    let mut e = match Engine::with_backend(machine.ag(), &lowered.program, spec.backend) {
                         Ok(e) => e,
                         Err(err) => return done(JobResult::err(spec, err.to_string(), 0)),
                     };
@@ -308,7 +313,7 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
             };
             let mode = match spec.mode {
                 SimModeSpec::Functional => SimMode::Functional,
-                _ => SimMode::Timed,
+                _ => SimMode::Timed(spec.backend),
             };
             let lg = match lowering::lower_graph(machine, &graph, *batch) {
                 Ok(l) => l,
@@ -460,6 +465,7 @@ impl JobSpec {
             ("target", self.target.to_json()),
             ("workload", self.workload.to_json()),
             ("mode", Json::str(self.mode.name())),
+            ("backend", Json::str(self.backend.name())),
             ("max_cycles", Json::num(self.max_cycles as f64)),
         ])
     }
@@ -471,6 +477,13 @@ impl JobSpec {
             workload: Workload::from_json(v.field("workload")?)?,
             mode: SimModeSpec::from_name(v.field("mode")?.as_str()?)
                 .ok_or(JsonError::Type("functional|timed|estimate", "other"))?,
+            // Absent/unknown backend defaults to cycle-stepped: old job
+            // lines keep working.
+            backend: v
+                .get("backend")
+                .and_then(|x| x.as_str().ok())
+                .and_then(BackendKind::from_name)
+                .unwrap_or_default(),
             max_cycles: v.opt_u64("max_cycles", default_max_cycles()),
         })
     }
@@ -549,11 +562,25 @@ mod tests {
                 order: Some(LoopOrder::Kij),
             },
             mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
             max_cycles: 1_000_000,
         };
         let line = spec.to_json().to_string();
         let back = JobSpec::parse(&line).unwrap();
         assert_eq!(back, spec);
+
+        // A job line without a backend field defaults to cycle-stepped.
+        let legacy = JobSpec::parse(
+            &JobSpec {
+                backend: BackendKind::CycleStepped,
+                ..spec.clone()
+            }
+            .to_json()
+            .to_string()
+            .replace("\"backend\":\"cycle\",", ""),
+        )
+        .unwrap();
+        assert_eq!(legacy.backend, BackendKind::CycleStepped);
 
         // Results round-trip too.
         let r = execute(&JobSpec {
@@ -580,12 +607,24 @@ mod tests {
                 order: None,
             },
             mode: SimModeSpec::Timed,
+            backend: BackendKind::CycleStepped,
             max_cycles: 10_000_000,
         };
         let r = execute(&spec);
         assert_eq!(r.error, None);
         assert!(r.cycles > 0);
         assert_eq!(r.numerics_ok, Some(true));
+
+        // The event-driven backend reports the identical cycle count and
+        // numerics on the same job.
+        let ev = execute(&JobSpec {
+            backend: BackendKind::EventDriven,
+            ..spec
+        });
+        assert_eq!(ev.error, None);
+        assert_eq!(ev.cycles, r.cycles, "backends agree on cycles");
+        assert_eq!(ev.instructions, r.instructions);
+        assert_eq!(ev.numerics_ok, Some(true));
     }
 
     #[test]
@@ -604,6 +643,7 @@ mod tests {
                 order: None,
             },
             mode,
+            backend: BackendKind::default(),
             max_cycles: 50_000_000,
         };
         let timed = execute(&mk(SimModeSpec::Timed));
@@ -635,6 +675,7 @@ mod tests {
                 order: None,
             },
             mode: SimModeSpec::Timed,
+            backend: BackendKind::default(),
             max_cycles: 10, // guaranteed cycle-limit error
         };
         let r = execute(&spec);

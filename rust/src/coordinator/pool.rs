@@ -6,11 +6,22 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::mapping::uma::Machine;
 
 use super::job::{execute_on, JobResult, JobSpec};
+
+/// Lock with poison recovery: a worker that panicked mid-job poisons the
+/// mutex, but the queue state it guards (an mpsc receiver) is still
+/// coherent — the remaining workers keep draining instead of cascading
+/// panics through every `.lock().expect(..)`.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Group specs by serialized target (machines are reused within a group).
 fn group_by_target(specs: &[JobSpec]) -> Vec<Vec<JobSpec>> {
@@ -35,22 +46,27 @@ pub fn run_jobs(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
     // Build each target's machine once.
     type Work = (Option<Arc<Machine>>, JobSpec);
     let (work_tx, work_rx) = mpsc::channel::<Work>();
-    for group in group_by_target(&specs) {
+    'groups: for group in group_by_target(&specs) {
         let machine = group[0].target.to_config().build().ok().map(Arc::new);
         for spec in group {
-            work_tx.send((machine.clone(), spec)).expect("queue");
+            if work_tx.send((machine.clone(), spec)).is_err() {
+                // Receiver gone (cannot normally happen: we hold it below);
+                // stop enqueuing entirely rather than panicking the caller
+                // or building machines for further doomed groups.
+                break 'groups;
+            }
         }
     }
     drop(work_tx);
 
-    let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+    let work_rx = Arc::new(Mutex::new(work_rx));
     let (res_tx, res_rx) = mpsc::channel::<JobResult>();
     std::thread::scope(|scope| {
         for _ in 0..workers.max(1) {
             let work_rx = Arc::clone(&work_rx);
             let res_tx = res_tx.clone();
             scope.spawn(move || loop {
-                let item = { work_rx.lock().expect("rx lock").recv() };
+                let item = { lock_unpoisoned(&work_rx).recv() };
                 match item {
                     Ok((machine, spec)) => {
                         let result = match &machine {
@@ -95,6 +111,7 @@ mod tests {
                 order: None,
             },
             mode: SimModeSpec::Timed,
+            backend: Default::default(),
             max_cycles: 10_000_000,
         }
     }

@@ -16,6 +16,11 @@ use crate::util::json::Json;
 use super::job::{execute, JobSpec};
 
 /// Counting semaphore bounding concurrent simulations across connections.
+///
+/// Lock poisoning (a handler thread panicking while holding the count)
+/// must not take the whole server down: the counter itself is a plain
+/// integer that is never left mid-update, so both paths recover the guard
+/// from a poisoned mutex instead of panicking every later connection.
 pub struct Slots {
     count: Mutex<usize>,
     cv: Condvar,
@@ -30,30 +35,59 @@ impl Slots {
     }
 
     fn acquire(&self) {
-        let mut c = self.count.lock().expect("slots");
+        let mut c = match self.count.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         while *c == 0 {
-            c = self.cv.wait(c).expect("slots wait");
+            c = match self.cv.wait(c) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
         *c -= 1;
     }
 
     fn release(&self) {
-        *self.count.lock().expect("slots") += 1;
+        let mut c = match self.count.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *c += 1;
+        drop(c);
         self.cv.notify_one();
     }
 }
 
-/// Serve until the listener errors (runs forever under normal operation).
+/// Serve until the listener is closed.  Per-connection accept errors
+/// (ECONNABORTED and friends) are transient on a loaded listener and must
+/// not kill the serving loop; only the fatal "listener gone" path returns.
 pub fn serve(listener: TcpListener, workers: usize) -> std::io::Result<()> {
     let slots = Slots::new(workers);
     for stream in listener.incoming() {
-        let stream = stream?;
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionAborted => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
         let slots = Arc::clone(&slots);
         std::thread::spawn(move || {
             let _ = handle(stream, slots);
         });
     }
     Ok(())
+}
+
+/// Releases its slot on drop, so a panicking job cannot leak a
+/// simulation slot and slowly starve the server.
+struct SlotGuard<'a>(&'a Slots);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.0.release();
+    }
 }
 
 fn handle(stream: TcpStream, slots: Arc<Slots>) -> std::io::Result<()> {
@@ -67,8 +101,8 @@ fn handle(stream: TcpStream, slots: Arc<Slots>) -> std::io::Result<()> {
         let reply = match JobSpec::parse(&line) {
             Ok(spec) => {
                 slots.acquire();
+                let _guard = SlotGuard(&slots);
                 let result = execute(&spec);
-                slots.release();
                 result.to_json().to_string()
             }
             Err(e) => Json::obj(vec![(
@@ -112,6 +146,7 @@ mod tests {
                 order: None,
             },
             mode: SimModeSpec::Timed,
+            backend: Default::default(),
             max_cycles: 10_000_000,
         };
         let mut stream = TcpStream::connect(addr).expect("connect");
@@ -156,6 +191,7 @@ mod tests {
                     order: None,
                 },
                 mode: SimModeSpec::Estimate,
+                backend: Default::default(),
                 max_cycles: 10_000_000,
             };
             let line = spec.to_json().to_string() + "\n";

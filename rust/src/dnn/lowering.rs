@@ -8,6 +8,7 @@ use thiserror::Error;
 use crate::isa::GAMMA_TILE;
 use crate::mapping::gemm::{GemmLayout, GemmParams};
 use crate::mapping::uma::{self, Machine, Operator, UmaError};
+use crate::sim::backend::BackendKind;
 use crate::sim::engine::{Engine, SimError};
 use crate::sim::functional::{FuncError, FunctionalSim};
 
@@ -18,8 +19,9 @@ use super::graph::{DnnGraph, Layer};
 pub enum SimMode {
     /// Program-order ISS (fast; mapping validation).
     Functional,
-    /// Cycle-accurate engine (produces cycles).
-    Timed,
+    /// Cycle-accurate engine (produces cycles) on the selected backend;
+    /// both backends report identical cycles.
+    Timed(BackendKind),
 }
 
 #[derive(Debug, Error)]
@@ -186,8 +188,8 @@ pub fn run_schedule(
                 let st = sim.run(&ll.lowered.program, max_cycles)?;
                 (0, st.instructions, ll.lowered.layout.read_c(&p, &sim.mem))
             }
-            SimMode::Timed => {
-                let mut e = Engine::new(machine.ag(), &ll.lowered.program)?;
+            SimMode::Timed(backend) => {
+                let mut e = Engine::with_backend(machine.ag(), &ll.lowered.program, backend)?;
                 ll.lowered
                     .layout
                     .load_inputs(&p, &mut e.mem, &padded_a, &ll.weights);
@@ -270,11 +272,32 @@ mod tests {
         let machine = TargetConfig::Gamma(GammaConfig::new(2)).build().unwrap();
         let lg = lower_graph(&machine, &g, 8).unwrap();
         let x = g.input_batch(8);
-        let rep = run_schedule(&machine, &lg, &x, SimMode::Timed, 100_000_000).unwrap();
+        let rep = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::CycleStepped),
+            100_000_000,
+        )
+        .unwrap();
         assert!(rep.total_cycles > 0);
         assert_eq!(rep.per_layer.len(), 2);
         let want = g.forward_ref(&x, 8);
         assert!(max_abs_diff(&rep.output, &want) < 1e-3);
+
+        // The event-driven backend schedules the same layers to the same
+        // per-layer and total cycle counts.
+        let ev = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::EventDriven),
+            100_000_000,
+        )
+        .unwrap();
+        assert_eq!(ev.total_cycles, rep.total_cycles);
+        assert_eq!(ev.total_instructions, rep.total_instructions);
+        assert_eq!(ev.output, rep.output);
     }
 
     #[test]

@@ -18,10 +18,14 @@
 //!   set-associative cache simulation (LRU/FIFO/PLRU/Random).
 //! * [`isa`] — the union instruction set of the paper's three accelerators,
 //!   plus a two-pass assembler for the paper's listing syntax.
-//! * [`sim`] — the timing-simulation semantics of §6 (Figs 9–13): fetch /
-//!   pipeline / execute / functional-unit state machines, the global
-//!   last-user dependency scoreboard, and storage request slots; plus a
-//!   pure functional ISS for mapping validation.
+//! * [`sim`] — the timing-simulation semantics of §6 (Figs 9–13), split
+//!   into a pluggable kernel: `sim::kernel` holds the fetch / pipeline /
+//!   execute / functional-unit state machines ([`sim::SimCore`]), the
+//!   global last-user dependency scoreboard, and storage request slots;
+//!   `sim::backend` schedules them through the [`sim::SimBackend`] trait —
+//!   cycle-stepped (reference) or event-driven (idle-cycle-skipping, same
+//!   reported cycles); `sim::engine` is the front-end; plus a pure
+//!   functional ISS for mapping validation.
 //! * [`arch`] — the model zoo: OMA (§4.1), the parameterizable systolic
 //!   array (§4.2), Γ̈ (§4.3), and Eyeriss- / Plasticine-derived models (§6).
 //! * [`mapping`] — DNN operator mapping (§5): tiled-GeMM code generation per
@@ -32,7 +36,8 @@
 //!   performance estimator (fixed-point loop analysis).
 //! * [`analytical`] — ScaleSim-like and roofline baselines (§2 comparisons).
 //! * [`runtime`] — PJRT golden-model execution of the AOT artifacts
-//!   (`artifacts/*.hlo.txt`) via the `xla` crate.
+//!   (`artifacts/*.hlo.txt`) via the `xla` crate; gated behind the
+//!   `pjrt` cargo feature (stubbed otherwise, golden tests skip).
 //! * [`coordinator`] — async job queue + worker pool for simulation
 //!   campaigns, design-space sweeps, and the TCP serving front-end.
 //! * [`metrics`] — report tables for the EXPERIMENTS.md experiments.
@@ -80,6 +85,7 @@ pub mod prelude {
     pub use crate::arch::{gamma::GammaConfig, oma::OmaConfig, systolic::SystolicConfig};
     pub use crate::isa::program::Program;
     pub use crate::mapping::gemm::{GemmParams, LoopOrder};
+    pub use crate::sim::backend::{BackendKind, SimBackend};
     pub use crate::sim::engine::{Engine, SimStats};
     pub use crate::sim::functional::FunctionalSim;
 }

@@ -12,6 +12,7 @@ use acadl::mapping::gemm::GemmParams;
 use acadl::mapping::uma::{self, Operator};
 use acadl::metrics::Table;
 use acadl::runtime::Golden;
+use acadl::sim::BackendKind;
 
 const USAGE: &str = "\
 acadl-cli — ACADL: model AI hardware accelerators, map DNN operators, simulate
@@ -24,9 +25,12 @@ COMMANDS:
   map --target <oma|systolic|gamma> [--m N --k N --n N --tile N --head N]
       Lower a GeMM and print the disassembly head.
   simulate --target <oma|systolic|gamma> [--m/--k/--n N] [--tile N]
-           [--mode functional|timed|estimate] [--rows/--cols/--units N]
-      Simulate a GeMM, print the result row as JSON.
-  sweep [--dim N] [--workers N]
+           [--mode functional|timed|estimate] [--backend cycle|event]
+           [--rows/--cols/--units N]
+      Simulate a GeMM, print the result row as JSON.  The timing backends
+      report identical cycles; `event` skips idle cycles (faster on
+      memory-bound workloads).
+  sweep [--dim N] [--workers N] [--backend cycle|event]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   serve [--addr HOST:PORT] [--workers N]
       Serve JobSpec JSON lines over TCP.
@@ -80,6 +84,12 @@ impl Args {
             .cloned()
             .unwrap_or_else(|| default.to_string())
     }
+}
+
+fn backend_kind(args: &Args) -> Result<BackendKind, String> {
+    let name = args.str("backend", "cycle");
+    BackendKind::from_name(&name)
+        .ok_or_else(|| format!("unknown backend `{name}` (use cycle|event)"))
 }
 
 fn target_spec(args: &Args) -> Result<TargetSpec, String> {
@@ -164,6 +174,7 @@ fn run() -> Result<(), String> {
                     order: None,
                 },
                 mode,
+                backend: backend_kind(&args)?,
                 max_cycles: 500_000_000,
             };
             let r = coordinator::job::execute(&spec);
@@ -172,6 +183,7 @@ fn run() -> Result<(), String> {
         "sweep" => {
             let dim = args.usize("dim", 64)?;
             let workers = args.usize("workers", 4)?;
+            let backend = backend_kind(&args)?;
             let specs: Vec<JobSpec> = [2usize, 4, 8, 16]
                 .into_iter()
                 .enumerate()
@@ -189,6 +201,7 @@ fn run() -> Result<(), String> {
                         order: None,
                     },
                     mode: SimModeSpec::Timed,
+                    backend,
                     max_cycles: 500_000_000,
                 })
                 .collect();

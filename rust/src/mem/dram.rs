@@ -107,6 +107,21 @@ impl DramState {
         }
     }
 
+    /// Earliest cycle at which the bank serving `addr` can change state
+    /// without a t_RAS stall: a conflicting access issued before this
+    /// cycle pays the remaining row-active time on top of precharge.
+    /// This is the bank's next-event horizon for external schedulers and
+    /// estimators ([`Self::peek`] gives the latency itself; this gives
+    /// the boundary past which that latency stops shrinking).
+    pub fn bank_ready(&self, addr: u64) -> u64 {
+        let (bank_idx, _) = self.locate(addr);
+        let bank = &self.banks[bank_idx];
+        match bank.open_row {
+            Some(_) => bank.activated_at + self.t_ras,
+            None => 0,
+        }
+    }
+
     pub fn row_hit_rate(&self) -> f64 {
         let total = self.row_hits + self.row_conflicts + self.activations
             - self.row_conflicts; // activations double-count conflicts
@@ -182,6 +197,19 @@ mod tests {
         assert_eq!(d.activations, 4);
         // Revisiting row 0 is still a hit.
         assert_eq!(d.access(0x1000, 300), 10);
+    }
+
+    #[test]
+    fn bank_ready_reflects_ras_window() {
+        let mut d = dram(1);
+        assert_eq!(d.bank_ready(0x1000), 0, "closed bank is ready");
+        d.access(0x1000, 0); // activated at 0
+        assert_eq!(d.bank_ready(0x1000), 33, "ready once t_RAS elapses");
+        // A conflict before the horizon pays exactly the remaining t_RAS.
+        let lat = d.peek(0x1000 + 1024, 5);
+        assert_eq!(lat, (33 - 5) + 14 + 14 + 10);
+        // At/after the horizon the latency bottoms out.
+        assert_eq!(d.peek(0x1000 + 1024, 33), 14 + 14 + 10);
     }
 
     #[test]

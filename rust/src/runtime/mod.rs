@@ -9,13 +9,22 @@
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.  Artifacts
 //! are lowered with `return_tuple=True`, so results unwrap with
 //! `to_tuple1()`-style tuple decomposition.
+//!
+//! The PJRT path needs the heavyweight native `xla` crate, so it is gated
+//! behind the **`pjrt`** cargo feature.  Without the feature, [`Golden`]
+//! is a stub whose loaders return [`RuntimeError::Disabled`]; all golden
+//! tests skip rather than fail, and the rest of the crate builds with no
+//! native dependencies.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use thiserror::Error;
 
-use crate::util::json::{Json, JsonError};
+#[cfg(feature = "pjrt")]
+use crate::util::json::Json;
+use crate::util::json::JsonError;
 
 #[derive(Debug, Error)]
 pub enum RuntimeError {
@@ -42,8 +51,11 @@ pub enum RuntimeError {
     Io(PathBuf, std::io::Error),
     #[error("xla error: {0}")]
     Xla(String),
+    #[error("built without the `pjrt` feature — golden-model execution is disabled")]
+    Disabled,
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())
@@ -62,6 +74,7 @@ impl TensorSig {
         self.shape.iter().product::<usize>().max(1)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_json(v: &Json) -> Result<Self, JsonError> {
         Ok(TensorSig {
             shape: v
@@ -84,6 +97,7 @@ pub struct ArtifactSig {
 }
 
 impl ArtifactSig {
+    #[cfg(feature = "pjrt")]
     fn from_json(v: &Json) -> Result<Self, JsonError> {
         let sigs = |key: &str| -> Result<Vec<TensorSig>, JsonError> {
             v.field(key)?
@@ -102,6 +116,7 @@ impl ArtifactSig {
 
 /// The golden-model runtime: PJRT CPU client + lazily compiled
 /// executables, one per artifact.
+#[cfg(feature = "pjrt")]
 pub struct Golden {
     dir: PathBuf,
     client: xla::PjRtClient,
@@ -109,6 +124,40 @@ pub struct Golden {
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Stub golden-model runtime (`pjrt` feature disabled): loaders return
+/// [`RuntimeError::Disabled`], so no value of this type can ever exist —
+/// the remaining methods are statically unreachable.
+#[cfg(not(feature = "pjrt"))]
+pub struct Golden(std::convert::Infallible);
+
+#[cfg(not(feature = "pjrt"))]
+impl Golden {
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        Err(RuntimeError::Disabled)
+    }
+
+    pub fn load_default() -> Result<Self, RuntimeError> {
+        Err(RuntimeError::Disabled)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        match self.0 {}
+    }
+
+    pub fn signature(&self, _name: &str) -> Option<&ArtifactSig> {
+        match self.0 {}
+    }
+
+    pub fn run(
+        &mut self,
+        _name: &str,
+        _inputs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        match self.0 {}
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Golden {
     /// Load the manifest and create the PJRT CPU client.  Executables
     /// compile on first use and are cached for the process lifetime (one
@@ -207,7 +256,21 @@ impl Golden {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn disabled_build_reports_disabled() {
+        assert!(matches!(Golden::load_default(), Err(RuntimeError::Disabled)));
+        assert!(matches!(
+            Golden::load("artifacts"),
+            Err(RuntimeError::Disabled)
+        ));
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     //! These tests need `make artifacts` to have run; they are skipped
     //! (not failed) when the artifacts are absent so `cargo test` works in

@@ -1,0 +1,182 @@
+//! Pluggable simulation backends: schedulers that drive a
+//! [`SimCore`](crate::sim::kernel::SimCore) to completion.
+//!
+//! Both backends execute the *same* per-object state machines
+//! ([`SimCore::step`]) and therefore produce identical cycle counts,
+//! retirement counts, and final architectural state — asserted by the
+//! backend-equivalence tests.  They differ only in how the clock advances:
+//!
+//! * [`CycleStepped`] — the classical loop: one `step()` per simulated
+//!   cycle, plus a no-progress window that reports deadlocks.  Fastest
+//!   when almost every cycle does work (dense scalar pipelines).
+//! * [`EventDriven`] — a binary-heap event queue of scheduled timer
+//!   expiries (FU completions, stage buffering expiries, fetch
+//!   transactions).  After any *quiescent* step (no state change beyond
+//!   timer decrements), the clock jumps straight to the next scheduled
+//!   event via [`SimCore::advance_bulk`] instead of replaying idle
+//!   retries.  Wins big on memory-bound workloads where objects stall for
+//!   tens of cycles on DRAM t_RCD/t_RP/t_RAS or long MAC-array latencies.
+//!
+//! Backend selection threads through the stack as a [`BackendKind`]: the
+//! coordinator's `JobSpec`, the DNN schedule runner's `SimMode`, the CLI's
+//! `--backend` flag, and `Engine::with_backend`.
+
+use std::cmp::Reverse;
+
+use super::kernel::{SimCore, SimError, SimStats, DEADLOCK_WINDOW};
+
+/// A scheduler for the shared simulation kernel.
+pub trait SimBackend {
+    /// Short stable name (CLI flags, job JSON, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Run `core` until the machine drains (halt + empty pipeline) or
+    /// `max_cycles` is reached.
+    fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError>;
+}
+
+/// One `step()` per simulated cycle (the paper's reference semantics).
+pub struct CycleStepped;
+
+impl SimBackend for CycleStepped {
+    fn name(&self) -> &'static str {
+        "cycle"
+    }
+
+    fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError> {
+        let mut last_progress = (core.t, core.stats.retired, core.stats.fetched);
+        while !core.idle() {
+            if core.t >= max_cycles {
+                return Err(SimError::CycleLimit(max_cycles, core.stats.retired));
+            }
+            core.step()?;
+            if (core.stats.retired, core.stats.fetched) != (last_progress.1, last_progress.2) {
+                last_progress = (core.t, core.stats.retired, core.stats.fetched);
+            } else if core.t - last_progress.0 > DEADLOCK_WINDOW {
+                return Err(SimError::Deadlock {
+                    cycle: core.t,
+                    retired: core.stats.retired,
+                    window: DEADLOCK_WINDOW,
+                });
+            }
+        }
+        Ok(core.finish_stats())
+    }
+}
+
+/// Event-queue scheduler: advances `T` directly to the next scheduled
+/// completion after quiescent steps.
+pub struct EventDriven;
+
+impl SimBackend for EventDriven {
+    fn name(&self) -> &'static str {
+        "event"
+    }
+
+    fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError> {
+        core.collect_events = true;
+        while !core.idle() {
+            if core.t >= max_cycles {
+                return Err(SimError::CycleLimit(max_cycles, core.stats.retired));
+            }
+            core.activity = false;
+            core.step()?;
+            if core.activity {
+                // State changed: cascades may continue next cycle.
+                continue;
+            }
+            // Quiescent: every pending timer has an entry in the event
+            // queue, so nothing can change before its minimum.  Drop
+            // events that executed steps already passed (including
+            // squashed fetch transactions — spurious wake-ups are no-op
+            // steps, never missed work).
+            let now = core.t;
+            while matches!(core.events.peek(), Some(&Reverse(e)) if e < now) {
+                core.events.pop();
+            }
+            match core.events.peek() {
+                Some(&Reverse(e)) if e > now => {
+                    // Clamp to the cycle limit so a CycleLimit error
+                    // reports the same retirement count as cycle-stepped.
+                    let dt = e.min(max_cycles).saturating_sub(now);
+                    if dt > 0 {
+                        core.advance_bulk(dt);
+                    }
+                }
+                Some(_) => {} // an event is due this very cycle: step again
+                None => {
+                    // Not idle, quiescent, and no scheduled event: the
+                    // remaining instructions wait on dependencies that can
+                    // never resolve.
+                    return Err(SimError::Deadlock {
+                        cycle: core.t,
+                        retired: core.stats.retired,
+                        window: 0,
+                    });
+                }
+            }
+        }
+        Ok(core.finish_stats())
+    }
+}
+
+/// Value-level backend selector (job specs, CLI flags, JSON wire format).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// One engine step per cycle (reference semantics).
+    #[default]
+    CycleStepped,
+    /// Idle-cycle-skipping event queue (identical results, faster on
+    /// memory-bound workloads).
+    EventDriven,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 2] = [BackendKind::CycleStepped, BackendKind::EventDriven];
+
+    pub fn name(self) -> &'static str {
+        self.instance().name()
+    }
+
+    /// Parse a CLI/JSON spelling (`cycle`, `cycle-stepped`, `event`,
+    /// `event-driven`).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "cycle" | "cycle-stepped" | "cycle_stepped" => Some(BackendKind::CycleStepped),
+            "event" | "event-driven" | "event_driven" => Some(BackendKind::EventDriven),
+            _ => None,
+        }
+    }
+
+    /// The backend implementation for this selector.
+    pub fn instance(self) -> &'static dyn SimBackend {
+        match self {
+            BackendKind::CycleStepped => &CycleStepped,
+            BackendKind::EventDriven => &EventDriven,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(
+            BackendKind::from_name("event-driven"),
+            Some(BackendKind::EventDriven)
+        );
+        assert_eq!(BackendKind::from_name("nope"), None);
+        assert_eq!(BackendKind::default(), BackendKind::CycleStepped);
+    }
+}

@@ -1,968 +1,67 @@
-//! The cycle-accurate timing engine: ACADL's §6 semantics.
+//! The timing engine front-end: one (AG, program) pair plus a selected
+//! [`SimBackend`] scheduler.
 //!
-//! Every latency-bearing object is initialized with `t := 0, ready := true`
-//! and the simulation clock `T := 0`; transitions fire at end-of-cycle.
-//! One engine step processes, in order (downstream-first so an instruction
-//! advances at most one stage per cycle while freed slots refill the same
-//! cycle, like a real pipeline):
-//!
-//! 1. **FU completions** (Fig. 11) — commit effects, retire, resolve
-//!    branches (squash/steer fetch), free the owning execute stage.
-//! 2. **Stage forwarding** (Fig. 10) — buffered instructions whose latency
-//!    elapsed move to a ready, accepting target stage; execute stages hand
-//!    received instructions to a supporting, idle functional unit
-//!    (structural hazard = hold + not-ready otherwise).
-//! 3. **Issue** (Fig. 9) — the fetch stage forwards any number of buffered,
-//!    *registered* instructions out-of-order to distinct ready stages; a
-//!    fetched-but-unresolved control instruction acts as a register/issue
-//!    barrier (no speculation).
-//! 4. **FU start** — waiting instructions whose scoreboard dependencies all
-//!    retired begin processing: operands captured, memory requests issued
-//!    through the storage request slots (Figs 12–13).
-//! 5. **Fetch** — complete an in-flight instruction-memory transaction
-//!    (register in program order) and launch the next while
-//!    `insts + port_width <= issue_buffer_size` (Fig. 9's guard).
-//!
-//! The engine shares the functional semantics of [`super::exec`], so the
-//! final architectural state equals the functional ISS's — asserted by the
-//! conformance tests and the E9 golden-model comparison.
+//! The §6 state machines live in [`super::kernel`] ([`SimCore`]); the
+//! drivers live in [`super::backend`].  `Engine` binds the two and keeps
+//! the historical API (`Engine::new` → cycle-stepped) stable for every
+//! caller, while `Engine::with_backend` selects the event-driven kernel.
+//! `Engine` derefs to its [`SimCore`], so architectural state (`.regs`,
+//! `.mem`, `.get_reg(..)`) reads exactly as before.
 
-use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
 
-use thiserror::Error;
-
-use crate::acadl_core::data::Value;
-use crate::acadl_core::graph::{Ag, ObjId, RegId};
-use crate::acadl_core::latency::{Latency, LatencyCtx};
-use crate::acadl_core::object::ObjectKind;
-use crate::isa::instruction::Instruction;
-use crate::isa::opcode::Opcode;
+use crate::acadl_core::graph::Ag;
 use crate::isa::program::Program;
-use crate::isa::INSTR_BYTES;
-use crate::sim::exec::{self, Effects, MemImage, RegState};
-use crate::sim::scoreboard::{Scoreboard, Seq};
-use crate::sim::storage::{StorageSim, StorageStats};
 
-#[derive(Debug, Error)]
-pub enum SimError {
-    #[error("model has {0} fetch stages; the engine drives exactly one")]
-    FetchStageCount(usize),
-    #[error("program base {0:#x} is outside the instruction memory")]
-    ProgramOutsideImem(u64),
-    #[error("cycle limit {0} exceeded at {1} retired instructions (deadlock or runaway loop)")]
-    CycleLimit(u64, u64),
-    #[error("no forward progress for {window} cycles at T={cycle} ({retired} retired) — deadlock")]
-    Deadlock {
-        cycle: u64,
-        retired: u64,
-        window: u64,
-    },
-    #[error(transparent)]
-    Exec(#[from] exec::ExecError),
-    #[error("no stage accepts instruction `{0}` (routing dead-end)")]
-    Unroutable(String),
-}
-
-// ------------------------------------------------------------------ topology
-
-#[derive(Debug, Clone)]
-struct StageNode {
-    obj: ObjId,
-    latency: u64,
-    targets: Vec<usize>,
-    fus: Vec<usize>,
-}
-
-#[derive(Debug, Clone)]
-struct FuNode {
-    obj: ObjId,
-    cap_mask: u64,
-    latency: Latency,
-    latency_is_const: Option<u64>,
-    read_mask: Vec<u64>,
-    write_mask: Vec<u64>,
-    is_mau: bool,
-    /// (storage, served byte range) — caches resolved to their backing
-    /// range at build time so the hot path never walks the graph.
-    storages: Vec<(ObjId, u64, u64)>,
-    busy_cycles: u64,
-}
-
-// ------------------------------------------------------------------- state
-
-#[derive(Debug, Clone)]
-struct Fetched {
-    static_idx: u32,
-    addr: u64,
-    /// Set once the instruction is registered with the scoreboard
-    /// (program order, blocked behind unresolved control instructions).
-    reg: Option<(Seq, Vec<Seq>)>,
-}
-
-#[derive(Debug, Clone)]
-struct DynInstr {
-    static_idx: u32,
-    addr: u64,
-    seq: Seq,
-    deps: Vec<Seq>,
-}
-
-#[derive(Debug, Clone, PartialEq)]
-enum StageState {
-    Empty,
-    /// Buffering for `t_left` cycles before forwarding (pure pipeline
-    /// stage path, or execute stage with no supporting FU).
-    Buffering { di_slot: usize, t_left: u64 },
-    /// Holding an instruction because every supporting FU is busy
-    /// (structural hazard).
-    Holding { di_slot: usize },
-    /// Instruction handed to contained FU; stage blocked until it retires.
-    WaitingFu { fu: usize },
-}
-
-#[derive(Debug, Clone)]
-enum FuState {
-    Idle,
-    /// Received; waiting for scoreboard dependencies.
-    Waiting { di_slot: usize },
-    /// Executing; effects commit when `t_left` reaches 0.
-    Processing { seq: Seq, t_left: u64, fx_slot: usize },
-}
-
-/// Simulation statistics — the per-run report row of every experiment.
-#[derive(Debug, Clone, Default)]
-pub struct SimStats {
-    pub cycles: u64,
-    pub retired: u64,
-    pub fetched: u64,
-    /// Cycles the fetch stage could not start a transaction because the
-    /// issue buffer was full.
-    pub fetch_stalls: u64,
-    /// Cycles instructions spent waiting on data dependencies in FUs.
-    pub dep_stall_cycles: u64,
-    /// Cycles instructions were held by busy FUs (structural hazards).
-    pub structural_stall_cycles: u64,
-    /// (object name, busy cycles) per functional unit.
-    pub fu_busy: Vec<(String, u64)>,
-    pub storages: Vec<StorageStats>,
-}
-
-impl SimStats {
-    pub fn ipc(&self) -> f64 {
-        if self.cycles == 0 {
-            0.0
-        } else {
-            self.retired as f64 / self.cycles as f64
-        }
-    }
-
-    /// Mean busy fraction over all `mac`-capable units (PE utilization in
-    /// the systolic experiments).
-    pub fn mean_fu_utilization(&self) -> f64 {
-        if self.fu_busy.is_empty() || self.cycles == 0 {
-            return 0.0;
-        }
-        let total: u64 = self.fu_busy.iter().map(|(_, b)| b).sum();
-        total as f64 / (self.fu_busy.len() as f64 * self.cycles as f64)
-    }
-}
+use super::backend::{BackendKind, SimBackend};
+pub use super::kernel::{SimCore, SimError, SimStats};
 
 /// The timing engine for one (AG, program) pair.
 pub struct Engine<'a> {
-    ag: &'a Ag,
-    program: &'a Program,
-    stages: Vec<StageNode>,
-    fus: Vec<FuNode>,
-    stage_order: Vec<usize>,
-    ifs_stage: usize,
-    issue_cap: usize,
-    fetch_port: usize,
-    imem: ObjId,
-
-    t: u64,
-    pub regs: RegState,
-    pub mem: MemImage,
-    zero_regs: Vec<RegId>,
-    sb: Scoreboard,
-    storage: StorageSim,
-    stage_state: Vec<StageState>,
-    fu_state: Vec<FuState>,
-
-    pc: u64,
-    fetch_in_flight: Option<(u64, u64, usize)>, // (complete_at, addr, count)
-    buffer: VecDeque<Fetched>,
-    /// Registered-but-unretired control instruction (barrier), if any.
-    pending_control: Option<Seq>,
-    halted: bool,
-    fetch_done: bool,
-    outstanding: u64,
-
-    // slot arenas: avoid cloning DynInstr/Effects through state enums.
-    di_arena: Vec<DynInstr>,
-    fx_arena: Vec<Effects>,
-    free_di: Vec<usize>,
-    free_fx: Vec<usize>,
-
-    /// fu index -> owning stage index (completion fast path).
-    fu_stage: Vec<usize>,
-    /// static instruction -> fetch-stage targets that accept it (lazy;
-    /// routing is static so this memoizes the hot issue scan).
-    accept_cache: Vec<Option<Vec<u16>>>,
-    /// RegId -> fetch-stage targets whose FU can write that register
-    /// (candidate pruning for the accept-cache fill).
-    reg_writer_stages: Vec<Vec<u16>>,
-    /// RegId -> fetch-stage targets whose FU can read that register.
-    reg_reader_stages: Vec<Vec<u16>>,
-    /// Fetch-stage targets that are pure forwarders (accept anything).
-    forwarder_targets: Vec<u16>,
-
-    stats: SimStats,
+    core: SimCore<'a>,
+    backend: BackendKind,
 }
 
 impl<'a> Engine<'a> {
+    /// Build with the default cycle-stepped backend (reference semantics).
     pub fn new(ag: &'a Ag, program: &'a Program) -> Result<Self, SimError> {
-        let fetch_stages = ag.fetch_stages();
-        if fetch_stages.len() != 1 {
-            return Err(SimError::FetchStageCount(fetch_stages.len()));
-        }
-        let ifs_obj = fetch_stages[0];
-        let imem = ag
-            .instruction_memory(ifs_obj)
-            .expect("validated AG has an instruction memory");
-        if !ag.storage_accepts(imem, program.base) {
-            return Err(SimError::ProgramOutsideImem(program.base));
-        }
+        Self::with_backend(ag, program, BackendKind::default())
+    }
 
-        // Compile FUs (skip IMAUs — fetch is modeled directly).
-        let mut fus = Vec::new();
-        let mut fu_index = vec![usize::MAX; ag.len()];
-        let words = ag.reg_count().div_ceil(64).max(1);
-        for id in (0..ag.len() as u32).map(ObjId) {
-            let kind = ag.kind(id);
-            if !kind.is_functional_unit()
-                || matches!(kind, ObjectKind::InstructionMemoryAccessUnit(_))
-            {
-                continue;
-            }
-            let mut cap_mask = 0u64;
-            if let Some(ops) = kind.to_process() {
-                for op in Opcode::all() {
-                    if ops.contains(op.mnemonic()) {
-                        cap_mask |= 1 << op.index();
-                    }
-                }
-            }
-            let mut read_mask = vec![0u64; words];
-            let mut write_mask = vec![0u64; words];
-            for rf in ag.readable_rfs(id) {
-                for (i, info) in ag.regs().iter().enumerate() {
-                    if info.rf == rf {
-                        read_mask[i / 64] |= 1 << (i % 64);
-                    }
-                }
-            }
-            for rf in ag.writable_rfs(id) {
-                for (i, info) in ag.regs().iter().enumerate() {
-                    if info.rf == rf {
-                        write_mask[i / 64] |= 1 << (i % 64);
-                    }
-                }
-            }
-            let latency = kind.latency().cloned().unwrap_or(Latency::Const(1));
-            let latency_is_const = match &latency {
-                Latency::Const(v) => Some((*v).max(1)),
-                Latency::Expr(_) => None,
-            };
-            // Resolve each reachable storage's served byte range once
-            // (caches inherit their backing store's range).
-            let storages = ag
-                .storages_of_mau(id)
-                .into_iter()
-                .filter_map(|s| {
-                    let target = if ag.kind(s).is_cache() { ag.backing_of(s)? } else { s };
-                    let (lo, hi) = ag.kind(target).address_range()?;
-                    Some((s, lo, hi))
-                })
-                .collect();
-            fu_index[id.idx()] = fus.len();
-            fus.push(FuNode {
-                obj: id,
-                cap_mask,
-                latency,
-                latency_is_const,
-                read_mask,
-                write_mask,
-                is_mau: kind.is_memory_access_unit(),
-                storages,
-                busy_cycles: 0,
-            });
-        }
-
-        // Compile stages.
-        let mut stages = Vec::new();
-        let mut stage_index = vec![usize::MAX; ag.len()];
-        for id in (0..ag.len() as u32).map(ObjId) {
-            if !ag.kind(id).is_pipeline_stage() {
-                continue;
-            }
-            let latency = ag
-                .kind(id)
-                .latency()
-                .and_then(|l| l.eval_const().ok())
-                .unwrap_or(1)
-                .max(1);
-            stage_index[id.idx()] = stages.len();
-            stages.push(StageNode {
-                obj: id,
-                latency,
-                targets: Vec::new(),
-                fus: Vec::new(),
-            });
-        }
-        for i in 0..stages.len() {
-            let obj = stages[i].obj;
-            stages[i].targets = ag
-                .forward_targets(obj)
-                .into_iter()
-                .map(|o| stage_index[o.idx()])
-                .filter(|&x| x != usize::MAX)
-                .collect();
-            stages[i].fus = ag
-                .contained_fus(obj)
-                .into_iter()
-                .map(|o| fu_index[o.idx()])
-                .filter(|&x| x != usize::MAX)
-                .collect();
-        }
-        let ifs_stage = stage_index[ifs_obj.idx()];
-
-        // Downstream-first order: Kahn over reversed FORWARD edges.
-        let mut out_deg: Vec<usize> = stages.iter().map(|s| s.targets.len()).collect();
-        let mut order: Vec<usize> = Vec::with_capacity(stages.len());
-        let mut queue: VecDeque<usize> = (0..stages.len()).filter(|&i| out_deg[i] == 0).collect();
-        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); stages.len()];
-        for (i, s) in stages.iter().enumerate() {
-            for &t in &s.targets {
-                preds[t].push(i);
-            }
-        }
-        while let Some(i) = queue.pop_front() {
-            order.push(i);
-            for &p in &preds[i] {
-                out_deg[p] -= 1;
-                if out_deg[p] == 0 {
-                    queue.push_back(p);
-                }
-            }
-        }
-        // Cyclic forward graphs (not produced by the model zoo) fall back
-        // to declaration order for the leftover stages.
-        for i in 0..stages.len() {
-            if !order.contains(&i) {
-                order.push(i);
-            }
-        }
-
-        let (issue_cap, fetch_port) = match ag.kind(ifs_obj) {
-            ObjectKind::InstructionFetchStage(f) => {
-                let pw = ag
-                    .kind(imem)
-                    .storage_params()
-                    .map(|p| p.port_width.max(1))
-                    .unwrap_or(1);
-                (f.issue_buffer_size.max(1), pw)
-            }
-            _ => unreachable!(),
-        };
-
-        let mut fu_stage = vec![usize::MAX; fus.len()];
-        for (si, s) in stages.iter().enumerate() {
-            for &f in &s.fus {
-                fu_stage[f] = si;
-            }
-        }
-        let accept_cache = vec![None; program.len()];
-
-        // Candidate-stage maps over the fetch stage's targets: the
-        // accept-cache fill only examines stages that can actually touch
-        // one of the instruction's registers (plus pure forwarders).
-        let reg_count = ag.reg_count();
-        let mut reg_writer_stages: Vec<Vec<u16>> = vec![Vec::new(); reg_count];
-        let mut reg_reader_stages: Vec<Vec<u16>> = vec![Vec::new(); reg_count];
-        let mut forwarder_targets: Vec<u16> = Vec::new();
-        for &tgt in &stages[ifs_stage].targets {
-            let sn = &stages[tgt];
-            if sn.fus.is_empty() {
-                forwarder_targets.push(tgt as u16);
-                continue;
-            }
-            for &f in &sn.fus {
-                for r in 0..reg_count {
-                    if fus[f].write_mask[r / 64] & (1 << (r % 64)) != 0 {
-                        let v = &mut reg_writer_stages[r];
-                        if v.last() != Some(&(tgt as u16)) {
-                            v.push(tgt as u16);
-                        }
-                    }
-                    if fus[f].read_mask[r / 64] & (1 << (r % 64)) != 0 {
-                        let v = &mut reg_reader_stages[r];
-                        if v.last() != Some(&(tgt as u16)) {
-                            v.push(tgt as u16);
-                        }
-                    }
-                }
-            }
-        }
-
-        let regs: RegState = ag.regs().iter().map(|r| r.init.payload.clone()).collect();
-        let zero_regs = ag
-            .regs()
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.name == "z0" || r.name.ends_with("_z0"))
-            .map(|(i, _)| RegId(i as u32))
-            .collect();
-        let stage_count = stages.len();
-        let fu_count = fus.len();
-
+    /// Build with an explicit backend.  Both backends produce identical
+    /// cycle counts and final architectural state.
+    pub fn with_backend(
+        ag: &'a Ag,
+        program: &'a Program,
+        backend: BackendKind,
+    ) -> Result<Self, SimError> {
         Ok(Engine {
-            ag,
-            program,
-            stages,
-            fus,
-            stage_order: order,
-            ifs_stage,
-            issue_cap,
-            fetch_port,
-            imem,
-            t: 0,
-            regs,
-            mem: MemImage::new(),
-            zero_regs,
-            sb: Scoreboard::new(ag.reg_count()),
-            storage: StorageSim::new(ag),
-            stage_state: vec![StageState::Empty; stage_count],
-            fu_state: vec![FuState::Idle; fu_count],
-            pc: program.base,
-            fetch_in_flight: None,
-            buffer: VecDeque::new(),
-            pending_control: None,
-            halted: false,
-            fetch_done: false,
-            outstanding: 0,
-            di_arena: Vec::new(),
-            fx_arena: Vec::new(),
-            free_di: Vec::new(),
-            free_fx: Vec::new(),
-            fu_stage,
-            accept_cache,
-            reg_writer_stages,
-            reg_reader_stages,
-            forwarder_targets,
-            stats: SimStats::default(),
+            core: SimCore::new(ag, program)?,
+            backend,
         })
     }
 
-    // ------------------------------------------------------------ arenas
-
-    fn alloc_di(&mut self, di: DynInstr) -> usize {
-        if let Some(i) = self.free_di.pop() {
-            self.di_arena[i] = di;
-            i
-        } else {
-            self.di_arena.push(di);
-            self.di_arena.len() - 1
-        }
-    }
-
-    fn alloc_fx(&mut self, fx: Effects) -> usize {
-        if let Some(i) = self.free_fx.pop() {
-            self.fx_arena[i] = fx;
-            i
-        } else {
-            self.fx_arena.push(fx);
-            self.fx_arena.len() - 1
-        }
-    }
-
-    // ----------------------------------------------------------- routing
-
-    #[inline]
-    fn instr(&self, static_idx: u32) -> &Instruction {
-        &self.program.instrs[static_idx as usize]
-    }
-
-    fn fu_supports(&self, fu: &FuNode, ins: &Instruction) -> bool {
-        if fu.cap_mask & (1 << ins.op.index()) == 0 {
-            return false;
-        }
-        for r in ins.all_read_regs() {
-            let i = r.idx();
-            if fu.read_mask[i / 64] & (1 << (i % 64)) == 0
-                && fu.write_mask[i / 64] & (1 << (i % 64)) == 0
-            {
-                return false;
-            }
-        }
-        for w in &ins.writes {
-            let i = w.idx();
-            if fu.write_mask[i / 64] & (1 << (i % 64)) == 0 {
-                return false;
-            }
-        }
-        true
-    }
-
-    /// §3's ExecuteStage receive check: a contained FU supports the op and
-    /// can reach its registers — or the stage is a pure forwarder.
-    fn stage_accepts(&self, stage: usize, ins: &Instruction) -> bool {
-        let s = &self.stages[stage];
-        if s.fus.iter().any(|&f| self.fu_supports(&self.fus[f], ins)) {
-            return true;
-        }
-        s.fus.is_empty() && !s.targets.is_empty()
-    }
-
-    /// On receive: hand to a supporting idle FU (no stage latency), hold on
-    /// structural hazard, or start buffering for later forwarding.
-    fn stage_receive(&mut self, stage: usize, di_slot: usize) {
-        let ins = self.instr(self.di_arena[di_slot].static_idx);
-        let sn = &self.stages[stage];
-        let mut supporting_busy = false;
-        for &f in &sn.fus {
-            if self.fu_supports(&self.fus[f], ins) {
-                if matches!(self.fu_state[f], FuState::Idle) {
-                    self.fu_state[f] = FuState::Waiting { di_slot };
-                    self.stage_state[stage] = StageState::WaitingFu { fu: f };
-                    return;
-                }
-                supporting_busy = true;
-            }
-        }
-        if supporting_busy {
-            self.stage_state[stage] = StageState::Holding { di_slot };
-        } else {
-            let lat = self.stages[stage].latency;
-            self.stage_state[stage] = StageState::Buffering {
-                di_slot,
-                t_left: lat,
-            };
-        }
-    }
-
-    // -------------------------------------------------------- phase 1: FUs
-
-    fn phase_completions(&mut self) {
-        for f in 0..self.fus.len() {
-            let FuState::Processing { seq, t_left, fx_slot } = &mut self.fu_state[f] else {
-                continue;
-            };
-            self.fus[f].busy_cycles += 1;
-            *t_left -= 1;
-            if *t_left > 0 {
-                continue;
-            }
-            let seq = *seq;
-            let fx_slot = *fx_slot;
-            // Commit.
-            {
-                let fx = &self.fx_arena[fx_slot];
-                exec::apply(fx, &mut self.regs, &mut self.mem);
-                for z in &self.zero_regs {
-                    self.regs[z.idx()] = Value::Int(0);
-                }
-            }
-            let (branch, halt) = {
-                let fx = &self.fx_arena[fx_slot];
-                (fx.branch, fx.halt)
-            };
-            self.sb.retire(seq);
-            self.outstanding -= 1;
-            self.stats.retired += 1;
-            self.free_fx.push(fx_slot);
-            self.fu_state[f] = FuState::Idle;
-            // Free the owning stage (precomputed fu -> stage map).
-            let s = self.fu_stage[f];
-            if s != usize::MAX && self.stage_state[s] == (StageState::WaitingFu { fu: f }) {
-                self.stage_state[s] = StageState::Empty;
-            }
-            // Control resolution.
-            if self.pending_control == Some(seq) {
-                self.pending_control = None;
-                if halt {
-                    self.halted = true;
-                    self.fetch_done = true;
-                    self.buffer.clear();
-                    self.fetch_in_flight = None;
-                } else if let Some(target) = branch {
-                    // Taken: squash unregistered (post-branch) entries and
-                    // any in-flight fetch, steer pc.
-                    self.buffer.retain(|e| e.reg.is_some());
-                    self.fetch_in_flight = None;
-                    self.pc = target;
-                    self.fetch_done = false;
-                }
-            }
-        }
-    }
-
-    // ------------------------------------------------- phase 2: forwarding
-
-    fn phase_forward(&mut self) {
-        for oi in 0..self.stage_order.len() {
-            let s = self.stage_order[oi];
-            if s == self.ifs_stage {
-                continue;
-            }
-            match self.stage_state[s] {
-                StageState::Buffering { di_slot, t_left } => {
-                    if t_left > 1 {
-                        self.stage_state[s] = StageState::Buffering {
-                            di_slot,
-                            t_left: t_left - 1,
-                        };
-                        continue;
-                    }
-                    // Try to forward to a ready, accepting target
-                    // (take/put-back avoids cloning in the cycle loop).
-                    let ins_idx = self.di_arena[di_slot].static_idx;
-                    let targets = std::mem::take(&mut self.stages[s].targets);
-                    let target = targets.iter().copied().find(|&tgt| {
-                        matches!(self.stage_state[tgt], StageState::Empty)
-                            && self.stage_accepts(tgt, self.instr(ins_idx))
-                    });
-                    self.stages[s].targets = targets;
-                    match target {
-                        Some(tgt) => {
-                            self.stage_state[s] = StageState::Empty;
-                            self.stage_receive(tgt, di_slot);
-                        }
-                        None => {
-                            // Stalled at 1 remaining cycle.
-                            self.stage_state[s] = StageState::Buffering { di_slot, t_left: 1 };
-                        }
-                    }
-                }
-                StageState::Holding { di_slot } => {
-                    // Structural hazard: retry dispatch.
-                    self.stats.structural_stall_cycles += 1;
-                    self.stage_state[s] = StageState::Empty;
-                    self.stage_receive(s, di_slot);
-                    if self.stage_state[s] == StageState::Empty {
-                        // stage_receive always sets a non-empty state.
-                        unreachable!();
-                    }
-                }
-                _ => {}
-            }
-        }
-    }
-
-    // ------------------------------------------------------ phase 3: issue
-
-    /// `halt` retires at the fetch stage once every earlier instruction
-    /// has drained — models whose functional units process no `halt`
-    /// mnemonic (the parallel machines: systolic, Γ̈, …) stop here; the
-    /// OMA's `fu0` may alternatively consume it through the pipeline.
-    fn try_retire_halt_at_fetch(&mut self) {
-        if self.outstanding != 1 {
-            return;
-        }
-        let Some(head) = self.buffer.front() else {
-            return;
-        };
-        let Some((seq, _)) = head.reg else { return };
-        if self.pending_control != Some(seq)
-            || self.program.instrs[head.static_idx as usize].op != Opcode::Halt
-        {
-            return;
-        }
-        self.sb.retire(seq);
-        self.outstanding -= 1;
-        self.stats.retired += 1;
-        self.pending_control = None;
-        self.halted = true;
-        self.fetch_done = true;
-        self.buffer.clear();
-        self.fetch_in_flight = None;
-    }
-
-    fn phase_issue(&mut self) -> Result<(), SimError> {
-        self.try_retire_halt_at_fetch();
-        // Register buffered entries in program order up to (and including)
-        // the first control instruction.
-        let mut i = 0;
-        while i < self.buffer.len() {
-            if self.buffer[i].reg.is_none() {
-                if self.pending_control.is_some() {
-                    break;
-                }
-                let static_idx = self.buffer[i].static_idx;
-                let ins = &self.program.instrs[static_idx as usize];
-                let (seq, deps) = self.sb.issue(ins);
-                self.outstanding += 1;
-                if ins.is_control() {
-                    self.pending_control = Some(seq);
-                }
-                self.buffer[i].reg = Some((seq, deps));
-            }
-            i += 1;
-        }
-
-        // Out-of-order issue: any registered entry may go to a ready,
-        // accepting stage; one instruction per stage per cycle (Fig. 9's
-        // multi-forward double arrow).  Routing is static per instruction,
-        // so the accepting-stage set is memoized per static index.
-        let mut bi = 0;
-        while bi < self.buffer.len() {
-            let Some((_seq, _)) = self.buffer[bi].reg else {
-                break; // unregistered tail
-            };
-            let static_idx = self.buffer[bi].static_idx;
-            self.ensure_accept_cache(static_idx);
-            let tgt = self.accept_cache[static_idx as usize]
-                .as_ref()
-                .unwrap()
-                .iter()
-                .map(|&t| t as usize)
-                .find(|&t| matches!(self.stage_state[t], StageState::Empty));
-            match tgt {
-                Some(tgt) => {
-                    let e = self.buffer.remove(bi).unwrap();
-                    let (seq, deps) = e.reg.unwrap();
-                    let slot = self.alloc_di(DynInstr {
-                        static_idx: e.static_idx,
-                        addr: e.addr,
-                        seq,
-                        deps,
-                    });
-                    self.stage_receive(tgt, slot);
-                }
-                None => bi += 1,
-            }
-        }
-        Ok(())
-    }
-
-    /// Memoize the fetch-stage targets that accept static instruction `i`.
-    /// Candidates come from the register-ownership maps (a stage can only
-    /// accept an instruction whose registers one of its FUs can touch),
-    /// so the fill is O(candidates), not O(stages).
-    fn ensure_accept_cache(&mut self, i: u32) {
-        if self.accept_cache[i as usize].is_some() {
-            return;
-        }
-        let ins = &self.program.instrs[i as usize];
-        let candidates: &[u16] = if let Some(w) = ins.writes.first() {
-            &self.reg_writer_stages[w.idx()]
-        } else if let Some(r) = ins.reads.first() {
-            &self.reg_reader_stages[r.idx()]
-        } else {
-            // Register-free instructions (nop/halt/jumpi): no pruning key;
-            // scan all fetch targets.
-            let targets = std::mem::take(&mut self.stages[self.ifs_stage].targets);
-            let mut list: Vec<u16> = targets
-                .iter()
-                .copied()
-                .filter(|&t| self.stage_accepts(t, self.instr(i)))
-                .map(|t| t as u16)
-                .collect();
-            self.stages[self.ifs_stage].targets = targets;
-            list.extend_from_slice(&self.forwarder_targets);
-            list.dedup();
-            self.accept_cache[i as usize] = Some(list);
-            return;
-        };
-        let mut list: Vec<u16> = candidates
-            .iter()
-            .copied()
-            .filter(|&t| self.stage_accepts(t as usize, self.instr(i)))
-            .collect();
-        list.extend_from_slice(&self.forwarder_targets);
-        self.accept_cache[i as usize] = Some(list);
-    }
-
-    // --------------------------------------------------- phase 4: FU start
-
-    fn phase_fu_start(&mut self) -> Result<(), SimError> {
-        for f in 0..self.fus.len() {
-            let FuState::Waiting { di_slot } = self.fu_state[f] else {
-                continue;
-            };
-            let (deps_ok, seq, addr, static_idx) = {
-                let di = &mut self.di_arena[di_slot];
-                di.deps.retain(|&d| !self.sb.is_retired(d));
-                (di.deps.is_empty(), di.seq, di.addr, di.static_idx)
-            };
-            if !deps_ok {
-                self.stats.dep_stall_cycles += 1;
-                continue;
-            }
-            let ins = &self.program.instrs[static_idx as usize];
-            let fx = exec::execute(ins, addr, &self.regs, &mut self.mem)?;
-
-            // Latency: FU latency (+ memory path for MAUs).
-            let base_lat = match self.fus[f].latency_is_const {
-                Some(v) => v,
-                None => {
-                    let ctx = LatencyCtx::new()
-                        .with("is_mac", i64::from(ins.op == Opcode::Mac))
-                        .with("lanes", 8);
-                    self.fus[f].latency.eval(&ctx).unwrap_or(1).max(1)
-                }
-            };
-            let mut completion = self.t + base_lat;
-            if self.fus[f].is_mau {
-                let storages = std::mem::take(&mut self.fus[f].storages);
-                for (a, bytes) in fx.mem_reads.iter().chain(fx.mem_stores.iter()) {
-                    let is_write = fx.mem_stores.iter().any(|(sa, _)| sa == a)
-                        && !fx.mem_reads.iter().any(|(ra, _)| ra == a);
-                    if let Some(&(st, _, _)) =
-                        storages.iter().find(|&&(_, lo, hi)| (lo..hi).contains(a))
-                    {
-                        let done = self.storage.access(st, *a, *bytes, is_write, self.t);
-                        completion = completion.max(done + base_lat);
-                    }
-                }
-                self.fus[f].storages = storages;
-            }
-            let t_left = completion - self.t;
-            let fx_slot = self.alloc_fx(fx);
-            self.free_di.push(di_slot);
-            self.fu_state[f] = FuState::Processing {
-                seq,
-                t_left: t_left.max(1),
-                fx_slot,
-            };
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------ phase 5: fetch
-
-    fn phase_fetch(&mut self) {
-        // Complete an in-flight transaction.
-        if let Some((complete_at, addr, count)) = self.fetch_in_flight {
-            if complete_at <= self.t {
-                for k in 0..count {
-                    let a = addr + k as u64 * INSTR_BYTES;
-                    if let Some(idx) = self.program.index_of(a) {
-                        self.buffer.push_back(Fetched {
-                            static_idx: idx as u32,
-                            addr: a,
-                            reg: None,
-                        });
-                        self.stats.fetched += 1;
-                    }
-                }
-                self.fetch_in_flight = None;
-            }
-        }
-        if self.fetch_in_flight.is_some() || self.fetch_done {
-            return;
-        }
-        // No speculation: while a control instruction is unresolved (or
-        // sits unregistered in the buffer), do not fetch further.
-        let control_in_buffer = self
-            .buffer
-            .iter()
-            .any(|e| self.program.instrs[e.static_idx as usize].is_control());
-        if self.pending_control.is_some() || control_in_buffer {
-            return;
-        }
-        if self.program.index_of(self.pc).is_none() {
-            self.fetch_done = true;
-            return;
-        }
-        // Fig. 9 guard: insts + port_width <= issue_buffer_size.
-        if self.buffer.len() + self.fetch_port > self.issue_cap {
-            self.stats.fetch_stalls += 1;
-            return;
-        }
-        let remaining = self
-            .program
-            .index_of(self.pc)
-            .map(|i| self.program.len() - i)
-            .unwrap_or(0);
-        let count = self.fetch_port.min(remaining);
-        // Stop the batch at the first control instruction (later slots
-        // would be speculative).
-        let mut take = 0;
-        for k in 0..count {
-            take = k + 1;
-            let idx = self.program.index_of(self.pc + k as u64 * INSTR_BYTES).unwrap();
-            if self.program.instrs[idx].is_control() {
-                break;
-            }
-        }
-        let done = self
-            .storage
-            .access(self.imem, self.pc, (take as u32) * INSTR_BYTES as u32, false, self.t);
-        self.fetch_in_flight = Some((done, self.pc, take));
-        self.pc += take as u64 * INSTR_BYTES;
-    }
-
-    // -------------------------------------------------------------- driver
-
-    fn idle(&self) -> bool {
-        (self.halted || (self.fetch_done && self.buffer.is_empty() && self.fetch_in_flight.is_none()))
-            && self.outstanding == 0
-            && self
-                .stage_state
-                .iter()
-                .all(|s| matches!(s, StageState::Empty))
-            && self.fu_state.iter().all(|f| matches!(f, FuState::Idle))
-    }
-
-    /// One clock cycle (T := T + 1 at the end).
-    pub fn step(&mut self) -> Result<(), SimError> {
-        self.phase_completions();
-        self.phase_forward();
-        self.phase_issue()?;
-        self.phase_fu_start()?;
-        self.phase_fetch();
-        self.t += 1;
-        Ok(())
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Run to completion (halt + drained pipeline) or `max_cycles`.
-    /// A window with no retirements while work is outstanding is reported
-    /// as a deadlock (far cheaper than spinning to the cycle limit).
     pub fn run(&mut self, max_cycles: u64) -> Result<SimStats, SimError> {
-        const DEADLOCK_WINDOW: u64 = 100_000;
-        let mut last_progress = (self.t, self.stats.retired, self.stats.fetched);
-        while !self.idle() {
-            if self.t >= max_cycles {
-                return Err(SimError::CycleLimit(max_cycles, self.stats.retired));
-            }
-            self.step()?;
-            if (self.stats.retired, self.stats.fetched) != (last_progress.1, last_progress.2) {
-                last_progress = (self.t, self.stats.retired, self.stats.fetched);
-            } else if self.t - last_progress.0 > DEADLOCK_WINDOW {
-                return Err(SimError::Deadlock {
-                    cycle: self.t,
-                    retired: self.stats.retired,
-                    window: DEADLOCK_WINDOW,
-                });
-            }
-        }
-        self.stats.cycles = self.t;
-        self.stats.fu_busy = self
-            .fus
-            .iter()
-            .map(|f| (self.ag.name(f.obj).to_string(), f.busy_cycles))
-            .collect();
-        self.stats.storages = self.storage.stats(self.ag);
-        Ok(self.stats.clone())
+        self.backend.instance().run(&mut self.core, max_cycles)
     }
+}
 
-    pub fn cycles(&self) -> u64 {
-        self.t
+impl<'a> Deref for Engine<'a> {
+    type Target = SimCore<'a>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.core
     }
+}
 
-    /// Register value by AG name (result extraction / validation).
-    pub fn get_reg(&self, name: &str) -> Option<&Value> {
-        self.ag.reg_id(name).map(|r| &self.regs[r.idx()])
+impl<'a> DerefMut for Engine<'a> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.core
     }
 }
 
@@ -1145,6 +244,103 @@ mod tests {
         let m = OmaConfig::default().build().unwrap();
         let p = assemble(&m.ag, "loop: jumpi @loop => pc", 0).unwrap();
         let mut e = Engine::new(&m.ag, &p).unwrap();
+        assert!(matches!(e.run(500), Err(SimError::CycleLimit(500, _))));
+    }
+
+    // ------------------------------------------------ backend parity
+
+    /// Run `src` on the OMA with both backends and assert identical
+    /// cycles, retirements, fetches, stall statistics, and final state.
+    fn assert_backend_parity(m: &crate::arch::oma::OmaMachine, src: &str) -> SimStats {
+        let p = assemble(&m.ag, src, 0).unwrap();
+        let mut cycle = Engine::with_backend(&m.ag, &p, BackendKind::CycleStepped).unwrap();
+        let cs = cycle.run(10_000_000).unwrap();
+        let mut event = Engine::with_backend(&m.ag, &p, BackendKind::EventDriven).unwrap();
+        let es = event.run(10_000_000).unwrap();
+        assert_eq!(cs.cycles, es.cycles, "cycle count");
+        assert_eq!(cs.retired, es.retired, "retired");
+        assert_eq!(cs.fetched, es.fetched, "fetched");
+        assert_eq!(cs.fetch_stalls, es.fetch_stalls, "fetch stalls");
+        assert_eq!(cs.dep_stall_cycles, es.dep_stall_cycles, "dep stalls");
+        assert_eq!(
+            cs.structural_stall_cycles, es.structural_stall_cycles,
+            "structural stalls"
+        );
+        assert_eq!(cs.fu_busy, es.fu_busy, "fu busy cycles");
+        assert_eq!(cycle.regs, event.regs, "final registers");
+        for w in 0..32u64 {
+            let a = m.dmem_base() + w * 4;
+            assert_eq!(cycle.mem.peek(a), event.mem.peek(a), "mem[{a:#x}]");
+        }
+        es
+    }
+
+    #[test]
+    fn event_backend_matches_on_branchy_loop() {
+        let m = OmaConfig::default().build().unwrap();
+        let base = m.dmem_base();
+        let src = format!(
+            "movi #{base} => r10\n\
+             movi #5 => r0\n\
+             movi #0 => r1\n\
+             loop: add r1, r0 => r1\n\
+             addi r0, #-1 => r0\n\
+             bnei r0, z0, @loop => pc\n\
+             store r1 => [r10]\n\
+             halt"
+        );
+        assert_backend_parity(&m, &src);
+    }
+
+    #[test]
+    fn event_backend_matches_on_slow_memory() {
+        // 40-cycle SRAM: the event backend must skip the stall windows yet
+        // report the exact same numbers.
+        let m = OmaConfig {
+            dmem: DataMem::Sram { latency: 40 },
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        let base = m.dmem_base();
+        let src = format!(
+            "movi #{base} => r10\n\
+             movi #3 => r1\n\
+             store r1 => [r10]\n\
+             load [r10] => r2\n\
+             load [r10+4] => r3\n\
+             add r2, r3 => r4\n\
+             store r4 => [r10+8]\n\
+             halt"
+        );
+        let stats = assert_backend_parity(&m, &src);
+        assert!(stats.cycles > 200, "memory latency dominates: {stats:?}");
+    }
+
+    #[test]
+    fn event_backend_matches_on_dram() {
+        let m = OmaConfig {
+            dmem: DataMem::Dram,
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        let base = m.dmem_base();
+        let mut src = format!("movi #{base} => r10\nmovi #2 => r1\n");
+        for i in 0..8u64 {
+            src.push_str(&format!("store r1 => [r10+{}]\n", i * 4));
+        }
+        src.push_str("halt");
+        assert_backend_parity(&m, &src);
+    }
+
+    #[test]
+    fn event_backend_cycle_limit_matches() {
+        let m = OmaConfig::default().build().unwrap();
+        let p = assemble(&m.ag, "loop: jumpi @loop => pc", 0).unwrap();
+        let mut e = Engine::with_backend(&m.ag, &p, BackendKind::EventDriven).unwrap();
         assert!(matches!(e.run(500), Err(SimError::CycleLimit(500, _))));
     }
 }

@@ -9,15 +9,26 @@
 //! * [`scoreboard`] — the global last-user map (§6): RAW/WAW/WAR tracking
 //!   over registers and memory addresses.
 //! * [`storage`] — request slots + FIFO queuing for `DataStorage` objects
-//!   (Figs 12–13), recursing caches into their backing stores.
-//! * [`engine`] — the cycle-accurate engine: fetch (Fig 9), pipeline /
-//!   execute stages (Fig 10), functional units (Fig 11).
+//!   (Figs 12–13), recursing caches into their backing stores; exposes
+//!   next-free horizons for event-driven scheduling.
+//! * [`kernel`] — the shared simulation kernel: fetch (Fig 9), pipeline /
+//!   execute stages (Fig 10), functional units (Fig 11) as reusable
+//!   per-object state machines with activity tracking and an event queue.
+//! * [`backend`] — the [`SimBackend`] schedulers: [`CycleStepped`] (one
+//!   step per cycle) and [`EventDriven`] (idle-cycle-skipping event
+//!   queue).  Identical results, different wall-clock profiles.
+//! * [`engine`] — the front-end binding one (AG, program) pair to a
+//!   selected backend.
 
+pub mod backend;
 pub mod engine;
 pub mod exec;
 pub mod functional;
+pub mod kernel;
 pub mod scoreboard;
 pub mod storage;
 
+pub use backend::{BackendKind, CycleStepped, EventDriven, SimBackend};
 pub use engine::{Engine, SimStats};
 pub use functional::FunctionalSim;
+pub use kernel::{SimCore, SimError};

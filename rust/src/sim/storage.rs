@@ -207,6 +207,19 @@ impl StorageSim {
         completion
     }
 
+    /// Earliest cycle at which `storage` can *begin* a new request: the
+    /// busy-until time of its earliest-freeing request slot.  This is the
+    /// storage's next-event horizon — before it, a newly issued request
+    /// only queues deeper; at it, the FIFO state changes.  External
+    /// schedulers and estimators read this instead of polling the slots
+    /// every cycle (the simulation kernel itself folds the absolute
+    /// completion cycles [`Self::access`] returns into its event queue).
+    pub fn next_free(&self, storage: ObjId) -> u64 {
+        let idx = self.index[storage.idx()];
+        debug_assert_ne!(idx, usize::MAX, "not a storage object");
+        self.nodes[idx].slots.iter().copied().min().unwrap_or(0)
+    }
+
     /// Statistics for all storages (experiment reports).
     pub fn stats(&self, ag: &Ag) -> Vec<StorageStats> {
         self.nodes
@@ -279,6 +292,20 @@ mod tests {
         assert_eq!(c1, 12);
         assert_eq!(c2, 12);
         assert_eq!(c3, 14, "third request waits for a slot");
+    }
+
+    #[test]
+    fn next_free_tracks_earliest_slot() {
+        let mut ag = Ag::new();
+        let s = ag.add(parts::sram("s", 0, 0x1000, 2, 1)).unwrap();
+        let mut sim = StorageSim::new(&ag);
+        assert_eq!(sim.next_free(s), 0, "fresh storage is immediately free");
+        sim.access(s, 0x0, 4, false, 10); // slot 0 busy until 12
+        assert_eq!(sim.next_free(s), 0, "second slot still free");
+        sim.access(s, 0x4, 4, false, 10); // slot 1 busy until 12
+        assert_eq!(sim.next_free(s), 12, "both slots busy until 12");
+        sim.access(s, 0x8, 4, false, 10); // queues on slot 0 (until 14)
+        assert_eq!(sim.next_free(s), 12, "slot 1 frees first");
     }
 
     #[test]

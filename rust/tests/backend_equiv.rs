@@ -1,0 +1,379 @@
+//! Backend equivalence: the cycle-stepped and event-driven simulation
+//! backends must produce **identical** cycle counts, retirement counts,
+//! stall statistics, and final architectural state on every model of the
+//! arch zoo — the event queue may only skip cycles in which nothing could
+//! have happened.
+//!
+//! Covers the acceptance set (OMA, systolic array, Γ̈ GeMM workloads),
+//! the Eyeriss- and Plasticine-derived models, and a property test over
+//! randomized programs / GeMM shapes on three zoo models.
+
+use acadl::acadl_core::graph::Ag;
+use acadl::arch::eyeriss::EyerissConfig;
+use acadl::arch::gamma::GammaConfig;
+use acadl::arch::oma::{DataMem, OmaConfig};
+use acadl::arch::plasticine::PlasticineConfig;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::isa::assembler::assemble;
+use acadl::isa::program::Program;
+use acadl::mapping::gamma_gemm::{gamma_gemm, GammaGemmOpts};
+use acadl::mapping::gemm::{oma_gemm_listing5, oma_tiled_gemm, GemmLayout, GemmParams};
+use acadl::mapping::systolic_gemm::systolic_gemm;
+use acadl::sim::{BackendKind, Engine, SimStats};
+use acadl::util::prop::{forall, Gen};
+
+/// Run `prog` on both backends (identical input setup) and assert every
+/// reported number and the final architectural state agree.  Returns the
+/// stats and a memory dump for further workload-specific checks.
+fn assert_equiv(
+    ag: &Ag,
+    prog: &Program,
+    setup: impl Fn(&mut Engine),
+    dump: (u64, usize),
+    max_cycles: u64,
+) -> (SimStats, Vec<f32>) {
+    let mut cycle = Engine::with_backend(ag, prog, BackendKind::CycleStepped).unwrap();
+    setup(&mut cycle);
+    let cs = cycle.run(max_cycles).unwrap();
+
+    let mut event = Engine::with_backend(ag, prog, BackendKind::EventDriven).unwrap();
+    setup(&mut event);
+    let es = event.run(max_cycles).unwrap();
+
+    assert_eq!(cs.cycles, es.cycles, "total cycles");
+    assert_eq!(cs.retired, es.retired, "retired instructions");
+    assert_eq!(cs.fetched, es.fetched, "fetched instructions");
+    assert_eq!(cs.fetch_stalls, es.fetch_stalls, "fetch stalls");
+    assert_eq!(cs.dep_stall_cycles, es.dep_stall_cycles, "dependency stalls");
+    assert_eq!(
+        cs.structural_stall_cycles, es.structural_stall_cycles,
+        "structural stalls"
+    );
+    assert_eq!(cs.fu_busy, es.fu_busy, "per-FU busy cycles");
+    assert_eq!(cycle.regs, event.regs, "final register state");
+
+    let (base, words) = dump;
+    let c_dump = cycle.mem.dump_f32(base, words);
+    let e_dump = event.mem.dump_f32(base, words);
+    assert_eq!(c_dump, e_dump, "final memory state at {base:#x}");
+    (cs, c_dump)
+}
+
+// ------------------------------------------------------- acceptance zoo
+
+#[test]
+fn oma_listing5_gemm_backends_agree() {
+    let m = OmaConfig::default().build().unwrap();
+    let p = GemmParams::new(8, 8, 8);
+    let prog = oma_gemm_listing5(&m, &p).expect("asm");
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let a: Vec<f32> = (0..64).map(|i| ((i % 7) as f32) - 3.0).collect();
+    let b: Vec<f32> = (0..64).map(|i| ((i % 5) as f32) - 2.0).collect();
+    let (stats, _) = assert_equiv(
+        &m.ag,
+        &prog,
+        |e| layout.load_inputs(&p, &mut e.mem, &a, &b),
+        (layout.c_base, 64),
+        200_000_000,
+    );
+    assert!(stats.cycles > 0);
+}
+
+#[test]
+fn oma_tiled_gemm_backends_agree() {
+    let m = OmaConfig::default().build().unwrap();
+    let p = GemmParams::new(8, 8, 8);
+    let prog = oma_tiled_gemm(&m, &p).expect("codegen");
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let a: Vec<f32> = (0..64).map(|i| (i % 9) as f32 * 0.5 - 2.0).collect();
+    let b: Vec<f32> = (0..64).map(|i| (i % 4) as f32 - 1.5).collect();
+    assert_equiv(
+        &m.ag,
+        &prog,
+        |e| layout.load_inputs(&p, &mut e.mem, &a, &b),
+        (layout.c_base, 64),
+        200_000_000,
+    );
+}
+
+#[test]
+fn oma_dram_gemm_backends_agree() {
+    // The DRAM-backed OMA is the memory-bound case the event backend
+    // exists for: long t_RCD/t_RP/t_RAS stalls must be skipped without
+    // moving a single reported cycle.
+    let m = OmaConfig {
+        dmem: DataMem::Dram,
+        cache: None,
+        ..OmaConfig::default()
+    }
+    .build()
+    .unwrap();
+    let p = GemmParams::new(6, 6, 6);
+    let prog = oma_tiled_gemm(&m, &p).expect("codegen");
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let a: Vec<f32> = (0..36).map(|i| (i % 5) as f32 - 2.0).collect();
+    let b: Vec<f32> = (0..36).map(|i| (i % 3) as f32).collect();
+    assert_equiv(
+        &m.ag,
+        &prog,
+        |e| layout.load_inputs(&p, &mut e.mem, &a, &b),
+        (layout.c_base, 36),
+        500_000_000,
+    );
+}
+
+#[test]
+fn systolic_gemm_backends_agree() {
+    let m = SystolicConfig::new(4, 4).build().unwrap();
+    let p = GemmParams::new(8, 8, 8);
+    let prog = systolic_gemm(&m, &p);
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let a: Vec<f32> = (0..64).map(|i| (i % 6) as f32 - 2.5).collect();
+    let b: Vec<f32> = (0..64).map(|i| (i % 7) as f32 * 0.25).collect();
+    assert_equiv(
+        &m.ag,
+        &prog,
+        |e| layout.load_inputs(&p, &mut e.mem, &a, &b),
+        (layout.c_base, 64),
+        200_000_000,
+    );
+}
+
+#[test]
+fn gamma_gemm_backends_agree() {
+    let m = GammaConfig::new(2).build().unwrap();
+    let p = GemmParams::new(16, 16, 16);
+    let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+    let layout = GemmLayout::at(m.dram_base(), &p);
+    let mut g = Gen::new(0xE0_0D);
+    let a = g.vec_f32(16 * 16, -2.0, 2.0);
+    let b = g.vec_f32(16 * 16, -2.0, 2.0);
+    assert_equiv(
+        &m.ag,
+        &prog,
+        |e| layout.load_inputs(&p, &mut e.mem, &a, &b),
+        (layout.c_base, 16 * 16),
+        200_000_000,
+    );
+}
+
+#[test]
+fn eyeriss_dataflow_backends_agree() {
+    let m = EyerissConfig::default().build().unwrap();
+    let dram = m.dram_base();
+    let glb = m.glb_base();
+    let src = format!(
+        "load [{dram:#x}] => dma0_s0\n\
+         store dma0_s0 => [{glb:#x}]\n\
+         load [{:#x}] => dma0_s1\n\
+         store dma0_s1 => [{:#x}]\n\
+         load [{glb:#x}] => e0_0_w\n\
+         load [{:#x}] => e0_0_x\n\
+         mac e0_0_w, e0_0_x => e0_0_p\n\
+         store e0_0_p => [{:#x}]\n\
+         halt",
+        dram + 4,
+        glb + 4,
+        glb + 4,
+        glb + 64,
+    );
+    let prog = assemble(&m.ag, &src, 0).unwrap();
+    let (_, dump) = assert_equiv(
+        &m.ag,
+        &prog,
+        |e| e.mem.load_f32(dram, &[3.0, 4.0]),
+        (glb + 64, 1),
+        1_000_000,
+    );
+    assert_eq!(dump, vec![12.0]);
+}
+
+#[test]
+fn plasticine_pipeline_backends_agree() {
+    let m = PlasticineConfig::default().build().unwrap();
+    let (pmu0, _) = m.pmu_range(0);
+    let (pmu1, _) = m.pmu_range(1);
+    let src = format!(
+        "load [{pmu0:#x}] => p[0].0\n\
+         load [{:#x}] => p[0].1\n\
+         vmul p[0].0, p[0].1 => p[0].2\n\
+         vadd p[0].2, p[0].0 => p[0].2\n\
+         vrelu p[0].2 => p[0].3\n\
+         store p[0].3 => [{pmu1:#x}]\n\
+         halt",
+        pmu0 + 32,
+    );
+    let prog = assemble(&m.ag, &src, 0).unwrap();
+    let a: Vec<f32> = vec![1.0, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0];
+    let b: Vec<f32> = vec![2.0; 8];
+    let (_, dump) = assert_equiv(
+        &m.ag,
+        &prog,
+        |e| {
+            e.mem.load_f32(pmu0, &a);
+            e.mem.load_f32(pmu0 + 32, &b);
+        },
+        (pmu1, 8),
+        1_000_000,
+    );
+    let want: Vec<f32> = a.iter().map(|x| (x * 2.0 + x).max(0.0)).collect();
+    assert_eq!(dump, want);
+}
+
+// ------------------------------------------------------- property tests
+
+/// Randomized scalar programs on the OMA: both backends agree on every
+/// statistic and the final register/memory state.
+#[test]
+fn prop_random_oma_programs_backends_agree() {
+    let m = OmaConfig::default().build().unwrap();
+    let base = m.dmem_base();
+    forall(
+        "cycle ≡ event on random OMA programs",
+        40,
+        |g| {
+            let mut src = String::new();
+            let n = g.usize(1, 24);
+            for i in 0..n {
+                match g.usize(0, 6) {
+                    0 => src.push_str(&format!("movi #{} => r{}\n", g.int(-99, 99), g.usize(0, 7))),
+                    1 => src.push_str(&format!(
+                        "add r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(0, 7)
+                    )),
+                    2 => src.push_str(&format!(
+                        "mac r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(8, 12)
+                    )),
+                    3 => src.push_str(&format!(
+                        "load [{:#x}] => r{}\n",
+                        base + g.usize(0, 23) as u64 * 4,
+                        g.usize(0, 5)
+                    )),
+                    4 => src.push_str(&format!(
+                        "store r{} => [{:#x}]\n",
+                        g.usize(0, 5),
+                        base + (i as u64 % 24) * 4
+                    )),
+                    5 => src.push_str(&format!(
+                        "addi r{}, #{} => r{}\n",
+                        g.usize(0, 7),
+                        g.int(-9, 9),
+                        g.usize(0, 7)
+                    )),
+                    _ => src.push_str("nop\n"),
+                }
+            }
+            src.push_str("halt\n");
+            src
+        },
+        |src| {
+            let p = assemble(&m.ag, src, 0).map_err(|e| e.to_string())?;
+            let mut cycle = Engine::with_backend(&m.ag, &p, BackendKind::CycleStepped)
+                .map_err(|e| e.to_string())?;
+            let cs = cycle.run(10_000_000).map_err(|e| e.to_string())?;
+            let mut event = Engine::with_backend(&m.ag, &p, BackendKind::EventDriven)
+                .map_err(|e| e.to_string())?;
+            let es = event.run(10_000_000).map_err(|e| e.to_string())?;
+            if cs.cycles != es.cycles {
+                return Err(format!("cycles {} vs {}", cs.cycles, es.cycles));
+            }
+            if cs.retired != es.retired {
+                return Err(format!("retired {} vs {}", cs.retired, es.retired));
+            }
+            if (cs.fetched, cs.fetch_stalls, cs.dep_stall_cycles, cs.structural_stall_cycles)
+                != (es.fetched, es.fetch_stalls, es.dep_stall_cycles, es.structural_stall_cycles)
+            {
+                return Err(format!("stall stats differ: {cs:?} vs {es:?}"));
+            }
+            if cycle.regs != event.regs {
+                return Err("register state differs".into());
+            }
+            for w in 0..24u64 {
+                let (cv, ev) = (cycle.mem.peek(base + w * 4), event.mem.peek(base + w * 4));
+                if cv != ev {
+                    return Err(format!("mem[{w}]: {cv} vs {ev}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Randomized GeMM shapes on the systolic array and Γ̈: cycles, retired
+/// count, and the produced C matrix agree between backends.
+#[test]
+fn prop_random_gemm_shapes_backends_agree() {
+    forall(
+        "cycle ≡ event on random systolic/Γ̈ GeMMs",
+        10,
+        |g| {
+            let dims = |mult: usize| {
+                (
+                    g.usize(1, 2) * mult,
+                    g.usize(1, 2) * mult,
+                    g.usize(1, 2) * mult,
+                )
+            };
+            (dims(4), dims(8), g.next_u64())
+        },
+        |&((sm, sk, sn), (gm, gk, gn), seed)| {
+            // Systolic array.
+            {
+                let m = SystolicConfig::new(2, 2).build().map_err(|e| e.to_string())?;
+                let p = GemmParams::new(sm, sk, sn);
+                let prog = systolic_gemm(&m, &p);
+                let layout = GemmLayout::at(m.dmem_base(), &p);
+                let mut g = Gen::new(seed);
+                let a = g.vec_f32(sm * sk, -2.0, 2.0);
+                let b = g.vec_f32(sk * sn, -2.0, 2.0);
+                check_gemm(&m.ag, &prog, &layout, &p, &a, &b)?;
+            }
+            // Γ̈ (dims multiples of the 8×8 MXU tile).
+            {
+                let m = GammaConfig::new(1).build().map_err(|e| e.to_string())?;
+                let p = GemmParams::new(gm, gk, gn);
+                let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
+                let layout = GemmLayout::at(m.dram_base(), &p);
+                let mut g = Gen::new(seed ^ 0xFFFF);
+                let a = g.vec_f32(gm * gk, -2.0, 2.0);
+                let b = g.vec_f32(gk * gn, -2.0, 2.0);
+                check_gemm(&m.ag, &prog, &layout, &p, &a, &b)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn check_gemm(
+    ag: &Ag,
+    prog: &Program,
+    layout: &GemmLayout,
+    p: &GemmParams,
+    a: &[f32],
+    b: &[f32],
+) -> Result<(), String> {
+    let run = |backend: BackendKind| -> Result<(SimStats, Vec<f32>), String> {
+        let mut e = Engine::with_backend(ag, prog, backend).map_err(|e| e.to_string())?;
+        layout.load_inputs(p, &mut e.mem, a, b);
+        let stats = e.run(500_000_000).map_err(|e| e.to_string())?;
+        let c = layout.read_c(p, &e.mem);
+        Ok((stats, c))
+    };
+    let (cs, cc) = run(BackendKind::CycleStepped)?;
+    let (es, ec) = run(BackendKind::EventDriven)?;
+    if cs.cycles != es.cycles || cs.retired != es.retired {
+        return Err(format!(
+            "gemm {}x{}x{}: cycles {} vs {}, retired {} vs {}",
+            p.m, p.k, p.n, cs.cycles, es.cycles, cs.retired, es.retired
+        ));
+    }
+    if cc != ec {
+        return Err(format!("gemm {}x{}x{}: C matrices differ", p.m, p.k, p.n));
+    }
+    Ok(())
+}

@@ -23,6 +23,10 @@ fn golden() -> Option<Golden> {
             eprintln!("skipping: artifacts/ missing — run `make artifacts`");
             None
         }
+        Err(RuntimeError::Disabled) => {
+            eprintln!("skipping: built without the `pjrt` feature");
+            None
+        }
         Err(e) => panic!("unexpected runtime error: {e}"),
     }
 }

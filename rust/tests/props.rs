@@ -21,6 +21,7 @@ use acadl::isa::assembler::assemble;
 use acadl::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
 use acadl::mapping::uma::{lower, Machine, Operator, TargetConfig};
 use acadl::mem::cache::{CacheState, ReplacementPolicy};
+use acadl::sim::backend::BackendKind;
 use acadl::sim::engine::Engine;
 use acadl::sim::functional::FunctionalSim;
 use acadl::util::json::Json;
@@ -320,6 +321,7 @@ fn prop_jobspec_json_roundtrip() {
                 SimModeSpec::Timed,
                 SimModeSpec::Estimate,
             ]),
+            backend: *g.choose(&BackendKind::ALL),
             max_cycles: g.next_u64() % 1_000_000 + 1,
         },
         |spec| {

@@ -1,110 +1,60 @@
-//! E10 — design-space exploration through the coordinator (§7's
+//! E10 — design-space exploration through the `dse` engine (§7's
 //! "optimization loop of hardware-aware NAS and DNN/HW Co-Design").
 //!
-//! Sweeps systolic-array sizes and Γ̈ unit counts (plus the OMA as the
-//! scalar floor) over a GeMM workload, runs every candidate in parallel on
-//! the worker pool, and reports the cycles-vs-area Pareto frontier.
+//! Enumerates the full (architecture × tile × loop order × backend)
+//! candidate cross-product — OMA cache variants, every power-of-two
+//! systolic grid up to 16×16, Γ̈ up to 8 units; 136 candidates — prunes
+//! with the per-target roofline lower bound, evaluates the survivors in
+//! parallel on the coordinator pool with memoized results, and reports
+//! the cycles-vs-area Pareto frontier plus pruning/cache statistics.
 //!
 //! Run with: `cargo run --release --example design_space_exploration`
 
-use acadl::coordinator::{run_jobs, JobSpec, SimModeSpec, TargetSpec, Workload};
-use acadl::metrics::Table;
-use acadl::sim::BackendKind;
+use acadl::dse::{explore, DseSpace};
 
 fn main() {
     let dim = 32;
-    let workload = Workload::Gemm {
-        m: dim,
-        k: dim,
-        n: dim,
-        tile: None,
-        order: None,
-    };
-
-    // Candidate architectures.
-    let mut targets = vec![TargetSpec::Oma {
-        cache: true,
-        mac_latency: None,
-    }];
-    for edge in [2usize, 4, 8, 16] {
-        targets.push(TargetSpec::Systolic {
-            rows: edge,
-            cols: edge,
-        });
-    }
-    for units in [1usize, 2, 4, 8] {
-        targets.push(TargetSpec::Gamma { units });
-    }
-
-    let specs: Vec<JobSpec> = targets
-        .into_iter()
-        .enumerate()
-        .map(|(id, target)| JobSpec {
-            id: id as u64,
-            target,
-            workload: workload.clone(),
-            mode: SimModeSpec::Timed,
-            // DSE sweeps are throughput-bound: the event-driven backend
-            // reports identical cycles and skips the memory-stall idle
-            // cycles that dominate the big Γ̈ candidates.
-            backend: BackendKind::EventDriven,
-            max_cycles: 2_000_000_000,
-        })
-        .collect();
-    let n = specs.len();
+    let space = DseSpace::standard(dim);
+    let candidates = space.enumerate().len();
+    assert!(
+        candidates >= 100,
+        "the standard sweep must cover ≥100 candidates (got {candidates})"
+    );
 
     let workers = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4);
-    println!("exploring {n} design points on {workers} workers…\n");
-    let t0 = std::time::Instant::now();
-    let results = run_jobs(specs, workers);
-    let wall = t0.elapsed();
+    println!("exploring gemm {dim}³ over {candidates} candidates on {workers} workers…\n");
 
-    let mut table = Table::new(
-        &format!("E10: design space, gemm {dim}³ (timed)"),
-        &["target", "area", "cycles", "util", "numerics", "wall ms", "pareto"],
+    let report = explore(&space, workers, true);
+
+    print!(
+        "{}",
+        report
+            .table(&format!("E10: design space, gemm {dim}³ (timed)"))
+            .render()
     );
-    // Pareto: no other point has both lower cycles and lower area.
-    let pareto = |i: usize| -> bool {
-        let r = &results[i];
-        r.error.is_none()
-            && !results.iter().any(|o| {
-                o.error.is_none()
-                    && o.cycles < r.cycles
-                    && o.area_proxy <= r.area_proxy
-                    && (o.cycles, o.area_proxy as u64) != (r.cycles, r.area_proxy as u64)
-            })
-    };
-    for (i, r) in results.iter().enumerate() {
-        table.row(vec![
-            r.target.clone(),
-            format!("{:.0}", r.area_proxy),
-            if r.error.is_some() {
-                format!("ERR: {}", r.error.as_deref().unwrap_or(""))
-            } else {
-                r.cycles.to_string()
-            },
-            format!("{:.1}%", r.utilization * 100.0),
-            match r.numerics_ok {
-                Some(true) => "ok".into(),
-                Some(false) => "MISMATCH".into(),
-                None => "-".into(),
-            },
-            (r.wall_micros / 1000).to_string(),
-            if pareto(i) { "★".into() } else { String::new() },
-        ]);
-    }
-    print!("{}", table.render());
-    println!(
-        "\n{} jobs in {wall:.2?} ({:.1} jobs/s) — every numerics check must be ok",
-        n,
-        n as f64 / wall.as_secs_f64()
+    println!("\n{}", report.summary());
+
+    // Invariants the sweep must uphold.
+    let s = &report.stats;
+    assert_eq!(s.candidates, candidates);
+    assert_eq!(s.evaluated + s.pruned, s.candidates, "every candidate accounted for");
+    assert!(s.pruned > 0, "the roofline pre-filter must cut the scalar tail");
+    assert!(s.cache_hits > 0, "backend aliases must be served from the memo");
+    assert!(!report.frontier.is_empty(), "a frontier must exist");
+    // Every error-free timed point must have *performed* the numerics
+    // check and passed it — `None` would mean the comparison was skipped.
+    assert!(
+        report.points.iter().all(|p| p.result.error.is_some()
+            || p.result.numerics_ok == Some(true)),
+        "a design point produced wrong (or unchecked) numerics"
     );
     assert!(
-        results
+        report
+            .points
             .iter()
-            .all(|r| r.error.is_some() || r.numerics_ok == Some(true)),
-        "a design point produced wrong numerics"
+            .all(|p| p.result.error.is_some() || p.result.cycles >= p.lower_bound),
+        "a simulation undercut its analytical lower bound"
     );
 }

@@ -41,6 +41,37 @@ pub struct Roofline {
 }
 
 impl Roofline {
+    /// The OMA scalar core: one single-slot MAC functional unit (≤ 1 MAC
+    /// retired per cycle) and one single-slot memory access unit (≤ 1 word
+    /// per cycle).  Both sides are sound lower-bound denominators.
+    pub fn oma() -> Self {
+        Roofline {
+            macs_per_cycle: 1,
+            words_per_cycle: 1,
+        }
+    }
+
+    /// A `rows×cols` systolic array: one MAC-and-forward unit per PE, and
+    /// `rows + cols` edge load units plus as many store units — each a
+    /// single-slot unit moving one word per operation.
+    pub fn systolic(rows: usize, cols: usize) -> Self {
+        Roofline {
+            macs_per_cycle: (rows * cols) as u64,
+            words_per_cycle: (2 * (rows + cols)) as u64,
+        }
+    }
+
+    /// Γ̈ with `units` LSU/compute/scratchpad complexes: each fused `gemm`
+    /// op performs 8·8·8 = 512 MACs and a unit cannot complete more than
+    /// one op per cycle even fully pipelined; each LSU moves one 8-wide
+    /// vector row per op.
+    pub fn gamma(units: usize) -> Self {
+        Roofline {
+            macs_per_cycle: (units * 512) as u64,
+            words_per_cycle: (units * 8) as u64,
+        }
+    }
+
     /// Minimum cycles for a GeMM with perfect reuse (each operand word
     /// moved once).
     pub fn gemm_cycles(&self, p: &GemmParams) -> u64 {
@@ -81,6 +112,17 @@ mod tests {
         // Perfect fit with long K → utilization approaches 1.
         let p_long = GemmParams::new(8, 1024, 8);
         assert!(scalesim_utilization(&p_long, 8, 8) > 0.9);
+    }
+
+    #[test]
+    fn per_target_rooflines_order_sensibly() {
+        let p = GemmParams::new(32, 32, 32);
+        let oma = Roofline::oma().gemm_cycles(&p);
+        let sys = Roofline::systolic(8, 8).gemm_cycles(&p);
+        let gam = Roofline::gamma(4).gemm_cycles(&p);
+        assert!(oma > sys, "scalar floor above array: {oma} vs {sys}");
+        assert!(sys > gam, "array above fused tensor: {sys} vs {gam}");
+        assert_eq!(oma, p.macs(), "OMA is compute-bound at 1 MAC/cycle");
     }
 
     #[test]

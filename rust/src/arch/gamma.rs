@@ -70,6 +70,13 @@ impl Default for GammaConfig {
 }
 
 impl GammaConfig {
+    /// DSE enumeration hook: power-of-two unit counts in `[1, max_units]`.
+    pub fn enumerate_units(max_units: usize) -> Vec<usize> {
+        std::iter::successors(Some(1usize), |u| Some(u * 2))
+            .take_while(|&u| u <= max_units)
+            .collect()
+    }
+
     pub fn new(units: usize) -> Self {
         GammaConfig {
             units,

@@ -106,6 +106,12 @@ pub struct OmaHandles {
 }
 
 impl OmaConfig {
+    /// DSE enumeration hook: the cache on/off variants of the scalar core
+    /// (the OMA's only sweep-relevant structural knob).
+    pub fn enumerate_cache_variants() -> Vec<bool> {
+        vec![true, false]
+    }
+
     /// Instantiate the AG of Listing 1.
     pub fn build(&self) -> Result<OmaMachine, AgError> {
         let mut ag = Ag::new();

@@ -65,6 +65,19 @@ impl Default for SystolicConfig {
 }
 
 impl SystolicConfig {
+    /// DSE enumeration hook: every power-of-two `(rows, cols)` grid with
+    /// both edges in `[2, max_edge]` — the candidate array shapes a sweep
+    /// considers (square and rectangular).
+    pub fn enumerate_grids(max_edge: usize) -> Vec<(usize, usize)> {
+        let edges: Vec<usize> = std::iter::successors(Some(2usize), |e| Some(e * 2))
+            .take_while(|&e| e <= max_edge)
+            .collect();
+        edges
+            .iter()
+            .flat_map(|&r| edges.iter().map(move |&c| (r, c)))
+            .collect()
+    }
+
     pub fn new(rows: usize, cols: usize) -> Self {
         SystolicConfig {
             rows,

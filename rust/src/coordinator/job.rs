@@ -68,6 +68,18 @@ impl TargetSpec {
             TargetSpec::Gamma { units } => (units * 64) as f64, // 8×8 MXU each
         }
     }
+
+    /// The analytical roofline of this target: sound lower-bound
+    /// denominators for the DSE pre-filter (see [`crate::analytical`]).
+    pub fn roofline(&self) -> crate::analytical::Roofline {
+        match self {
+            TargetSpec::Oma { .. } => crate::analytical::Roofline::oma(),
+            TargetSpec::Systolic { rows, cols } => {
+                crate::analytical::Roofline::systolic(*rows, *cols)
+            }
+            TargetSpec::Gamma { units } => crate::analytical::Roofline::gamma(*units),
+        }
+    }
 }
 
 /// The workload half of a job.
@@ -88,6 +100,41 @@ pub enum Workload {
 }
 
 impl Workload {
+    /// The canonical form of this workload **for a given target**:
+    /// mapping parameters that cannot reach the target's code generator
+    /// are normalized away so semantically identical jobs share a memo
+    /// key.  Tile and loop order only affect the OMA's unrolled GeMM;
+    /// on the OMA, an absent order is the generator default (`ijk`) and a
+    /// tile covering every dim is the untiled program.
+    pub fn canonical_for(&self, target: &TargetSpec) -> Workload {
+        match self {
+            Workload::Gemm { m, k, n, tile, order } => {
+                let (m, k, n) = (*m, *k, *n);
+                if matches!(target, TargetSpec::Oma { .. }) {
+                    Workload::Gemm {
+                        m,
+                        k,
+                        n,
+                        tile: (*tile).filter(|&t| t < m.max(k).max(n)),
+                        order: Some(order.unwrap_or(LoopOrder::Ijk)),
+                    }
+                } else {
+                    Workload::Gemm {
+                        m,
+                        k,
+                        n,
+                        tile: None,
+                        order: None,
+                    }
+                }
+            }
+            Workload::Mlp { small, batch } => Workload::Mlp {
+                small: *small,
+                batch: *batch,
+            },
+        }
+    }
+
     pub fn describe(&self) -> String {
         match self {
             Workload::Gemm { m, k, n, tile, order } => {
@@ -346,11 +393,11 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
     }
 }
 
-/// Build the machine and execute (standalone path; the pool prefers
-/// [`execute_on`] with a shared machine).
+/// Fetch the machine from the process-wide cache and execute (standalone
+/// path; the pool calls [`execute_on`] with the shared machine directly).
 pub fn execute(spec: &JobSpec) -> JobResult {
     let start = std::time::Instant::now();
-    match spec.target.to_config().build() {
+    match super::machines::build_cached(&spec.target) {
         Ok(machine) => execute_on(&machine, spec),
         Err(e) => JobResult::err(spec, e.to_string(), start.elapsed().as_micros() as u64),
     }
@@ -459,6 +506,22 @@ impl SimModeSpec {
 }
 
 impl JobSpec {
+    /// Canonical memo key: FNV-1a over the canonical JSON of the spec's
+    /// *semantic identity*.  The id is dropped (it names the request, not
+    /// the result), the workload is normalized per target
+    /// ([`Workload::canonical_for`]), and the timing backend is dropped —
+    /// both backends report identical cycle counts by construction (a
+    /// tested invariant), so a result computed on either answers both.
+    pub fn canonical_key(&self) -> u64 {
+        let v = Json::obj(vec![
+            ("target", self.target.to_json()),
+            ("workload", self.workload.canonical_for(&self.target).to_json()),
+            ("mode", Json::str(self.mode.name())),
+            ("max_cycles", Json::num(self.max_cycles as f64)),
+        ]);
+        crate::util::hash::fnv1a_str(&v.to_string())
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id as f64)),
@@ -592,6 +655,83 @@ mod tests {
         assert_eq!(back.id, r.id);
         assert_eq!(back.cycles, r.cycles);
         assert_eq!(back.numerics_ok, r.numerics_ok);
+    }
+
+    #[test]
+    fn canonical_key_collapses_equivalent_specs() {
+        let base = JobSpec {
+            id: 1,
+            target: TargetSpec::Systolic { rows: 4, cols: 4 },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::CycleStepped,
+            max_cycles: 1_000_000,
+        };
+        // Different id / backend / (target-irrelevant) tile+order: same key.
+        let same = JobSpec {
+            id: 99,
+            backend: BackendKind::EventDriven,
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: Some(4),
+                order: Some(LoopOrder::Kij),
+            },
+            ..base.clone()
+        };
+        assert_eq!(base.canonical_key(), same.canonical_key());
+
+        // On the OMA, tile and order DO reach the generator: distinct keys…
+        let oma = JobSpec {
+            target: TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            ..base.clone()
+        };
+        let oma_kij = JobSpec {
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: Some(LoopOrder::Kij),
+            },
+            ..oma.clone()
+        };
+        assert_ne!(oma.canonical_key(), oma_kij.canonical_key());
+        // …but the default order and a dim-covering tile normalize away.
+        let oma_explicit_default = JobSpec {
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: Some(16),
+                order: Some(LoopOrder::Ijk),
+            },
+            ..oma.clone()
+        };
+        assert_eq!(oma.canonical_key(), oma_explicit_default.canonical_key());
+
+        // Different problem: different key.
+        let bigger = JobSpec {
+            workload: Workload::Gemm {
+                m: 16,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            ..base.clone()
+        };
+        assert_ne!(base.canonical_key(), bigger.canonical_key());
     }
 
     #[test]

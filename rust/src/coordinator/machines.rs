@@ -1,0 +1,110 @@
+//! The built-machine cache: architecture graphs are expensive to
+//! construct (hundreds of objects and edges for big systolic arrays) and
+//! completely immutable once built — all simulation state lives in the
+//! engine, never the `Machine`.  The coordinator used to rebuild an
+//! identical graph for every job batch; this cache builds each distinct
+//! target **once per process**, keyed by the canonical config hash
+//! (FNV-1a over the target's canonical JSON), and hands out `Arc`s that
+//! pool workers, the TCP server, and the DSE engine share freely.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::acadl_core::graph::AgError;
+use crate::mapping::uma::Machine;
+use crate::util::hash::fnv1a_str;
+
+use super::job::TargetSpec;
+use super::lock_unpoisoned;
+
+/// Canonical config hash of a target: FNV-1a over its canonical JSON
+/// serialization (the job wire format, so the key survives round-trips).
+pub fn config_hash(target: &TargetSpec) -> u64 {
+    fnv1a_str(&target.to_json().to_string())
+}
+
+struct Cache {
+    map: Mutex<HashMap<u64, Arc<Machine>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+fn cache() -> &'static Cache {
+    static CACHE: OnceLock<Cache> = OnceLock::new();
+    CACHE.get_or_init(|| Cache {
+        map: Mutex::new(HashMap::new()),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+    })
+}
+
+/// Retention cap: a long-lived serving process fed an endless stream of
+/// *distinct* configs (a NAS client sweeping array shapes) must not
+/// accumulate machines forever.  Past the cap, misses still build and
+/// return a machine — it just isn't retained.  256 machines comfortably
+/// covers every sweep in-tree while bounding worst-case residency.
+const MAX_CACHED_MACHINES: usize = 256;
+
+/// Build (or fetch) the machine for `target`.  Concurrent misses on the
+/// same key may both build, but only one instance is kept — the graph is
+/// immutable, so either copy is equally valid; the build happens outside
+/// the lock so slow constructions never serialize unrelated targets.
+pub fn build_cached(target: &TargetSpec) -> Result<Arc<Machine>, AgError> {
+    let c = cache();
+    let key = config_hash(target);
+    if let Some(m) = lock_unpoisoned(&c.map).get(&key) {
+        c.hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(Arc::clone(m));
+    }
+    let built = Arc::new(target.to_config().build()?);
+    c.misses.fetch_add(1, Ordering::Relaxed);
+    let mut map = lock_unpoisoned(&c.map);
+    if map.len() >= MAX_CACHED_MACHINES && !map.contains_key(&key) {
+        return Ok(built);
+    }
+    let entry = map.entry(key).or_insert_with(|| Arc::clone(&built));
+    Ok(Arc::clone(entry))
+}
+
+/// (hits, misses) since process start.  Monotonic — tests should assert
+/// on deltas, not absolutes (the cache is process-global).
+pub fn cache_stats() -> (u64, u64) {
+    let c = cache();
+    (
+        c.hits.load(Ordering::Relaxed),
+        c.misses.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_config_hits_distinct_config_misses() {
+        // An exotic shape no other test uses, so the first build is a miss
+        // even when the whole suite shares this process-global cache.
+        let t = TargetSpec::Systolic { rows: 3, cols: 7 };
+        let (_, m0) = cache_stats();
+        let a = build_cached(&t).unwrap();
+        let (h1, m1) = cache_stats();
+        // Counters are process-global and other tests run concurrently, so
+        // assert direction, not exact deltas.
+        assert!(m1 > m0, "first build of a fresh config is a miss");
+        let b = build_cached(&t).unwrap();
+        let (h2, _) = cache_stats();
+        assert!(h2 > h1, "second build hits");
+        assert!(Arc::ptr_eq(&a, &b), "same machine instance shared");
+
+        let other = TargetSpec::Systolic { rows: 7, cols: 3 };
+        assert_ne!(config_hash(&t), config_hash(&other));
+    }
+
+    #[test]
+    fn hash_is_stable_for_equal_specs() {
+        let a = TargetSpec::Gamma { units: 2 };
+        let b = TargetSpec::Gamma { units: 2 };
+        assert_eq!(config_hash(&a), config_hash(&b));
+    }
+}

@@ -7,6 +7,10 @@
 //!
 //! * [`job`] — serializable job descriptors (target config, workload,
 //!   simulation mode) and result rows.
+//! * [`machines`] — the built-machine cache: each distinct target's
+//!   architecture graph builds **once per process** (keyed by the
+//!   canonical config hash) and is shared across pool workers, server
+//!   connections, and DSE waves.
 //! * [`pool`] — a tokio worker pool executing jobs on blocking threads,
 //!   **batched by target** so each architecture graph is built once and
 //!   shared across the jobs that sweep workloads on it.
@@ -14,8 +18,22 @@
 //!   (NAS searchers, DSE scripts) submit jobs and stream results.
 
 pub mod job;
+pub mod machines;
 pub mod pool;
 pub mod server;
 
+/// Lock with poison recovery, shared by the pool and the machine cache: a
+/// worker that panicked mid-job poisons the mutex, but the state each of
+/// these guards (a queue receiver, an immutable-machine map) is never
+/// left mid-update — so recover the guard instead of cascading panics
+/// through every later `.lock().expect(..)`.
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 pub use job::{JobResult, JobSpec, SimModeSpec, TargetSpec, Workload};
+pub use machines::build_cached;
 pub use pool::{run_jobs, run_jobs_blocking};

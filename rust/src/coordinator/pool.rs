@@ -6,22 +6,12 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex};
 
 use crate::mapping::uma::Machine;
 
 use super::job::{execute_on, JobResult, JobSpec};
-
-/// Lock with poison recovery: a worker that panicked mid-job poisons the
-/// mutex, but the queue state it guards (an mpsc receiver) is still
-/// coherent — the remaining workers keep draining instead of cascading
-/// panics through every `.lock().expect(..)`.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    match m.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
-}
+use super::lock_unpoisoned;
 
 /// Group specs by serialized target (machines are reused within a group).
 fn group_by_target(specs: &[JobSpec]) -> Vec<Vec<JobSpec>> {
@@ -43,11 +33,12 @@ pub fn run_jobs(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
     if n == 0 {
         return Vec::new();
     }
-    // Build each target's machine once.
+    // Fetch each target's machine from the process-wide cache (built at
+    // most once per distinct config, shared across batches and workers).
     type Work = (Option<Arc<Machine>>, JobSpec);
     let (work_tx, work_rx) = mpsc::channel::<Work>();
     'groups: for group in group_by_target(&specs) {
-        let machine = group[0].target.to_config().build().ok().map(Arc::new);
+        let machine = super::machines::build_cached(&group[0].target).ok();
         for spec in group {
             if work_tx.send((machine.clone(), spec)).is_err() {
                 // Receiver gone (cannot normally happen: we hold it below);
@@ -144,6 +135,26 @@ mod tests {
         let results = run_jobs(specs, 2);
         assert_eq!(results[0].error, None);
         assert!(results[1].error.is_some());
+    }
+
+    #[test]
+    fn machine_cache_reused_across_batches() {
+        // Two separate run_jobs calls on the same exotic target: the
+        // second batch must not rebuild the architecture graph.
+        let mk = |id| JobSpec {
+            target: TargetSpec::Systolic { rows: 5, cols: 3 },
+            ..gemm_spec(id, 2)
+        };
+        let _ = run_jobs(vec![mk(0)], 1);
+        let (hits_before, misses_before) = crate::coordinator::machines::cache_stats();
+        let results = run_jobs(vec![mk(1), mk(2)], 2);
+        let (hits_after, misses_after) = crate::coordinator::machines::cache_stats();
+        assert!(results.iter().all(|r| r.error.is_none()));
+        assert!(hits_after > hits_before, "second batch reuses the machine");
+        // Other tests may add misses concurrently for their own targets,
+        // but this exact config was already cached: misses can only have
+        // grown for *other* configs.  Sanity: at least no runaway rebuild.
+        assert!(misses_after >= misses_before);
     }
 
     #[test]

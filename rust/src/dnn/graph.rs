@@ -4,6 +4,36 @@
 
 use crate::mapping::conv::Conv2d;
 
+/// Host-side 2×2 max-pool on batch × (c·h·w) channel-major activations —
+/// the single implementation shared by the reference forward pass and the
+/// lowered-schedule runner (`dnn::lowering`), so the two can't drift.
+pub(crate) fn maxpool2x2(act: &[f32], batch: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let (in_feat, out_feat) = (c * h * w, c * oh * ow);
+    let mut out = vec![0.0f32; batch * out_feat];
+    for bi in 0..batch {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(
+                                act[bi * in_feat
+                                    + ch * h * w
+                                    + (oy * 2 + dy) * w
+                                    + (ox * 2 + dx)],
+                            );
+                        }
+                    }
+                    out[bi * out_feat + ch * oh * ow + oy * ow + ox] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// One layer of a sequential model.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Layer {
@@ -56,6 +86,38 @@ impl DnnGraph {
         }
     }
 
+    /// A small CNN (1×8×8 input): Conv2d(1→4, 3×3, pad 1) + ReLU →
+    /// MaxPool2×2 → Flatten → Dense(64→10).  Exercises the im2col path
+    /// end-to-end while staying fast enough for tests.
+    pub fn cnn_small() -> Self {
+        DnnGraph {
+            input_features: 64,
+            layers: vec![
+                Layer::Conv2d {
+                    conv: Conv2d {
+                        in_c: 1,
+                        in_h: 8,
+                        in_w: 8,
+                        out_c: 4,
+                        k_h: 3,
+                        k_w: 3,
+                        stride: 1,
+                        pad: 1,
+                    },
+                    relu: true,
+                },
+                Layer::MaxPool2x2,
+                Layer::Flatten,
+                Layer::Dense {
+                    in_features: 64,
+                    out_features: 10,
+                    relu: false,
+                },
+            ],
+            name: "cnn_small".into(),
+        }
+    }
+
     /// A small MLP for fast tests.
     pub fn mlp_small() -> Self {
         DnnGraph {
@@ -100,6 +162,27 @@ impl DnnGraph {
         Some((w, b))
     }
 
+    /// Deterministic pseudo-random OIHW weights for a Conv2d layer `idx`
+    /// (same xorshift-over-layer-index scheme as [`Self::dense_params`];
+    /// conv layers carry no bias).
+    pub fn conv_params(&self, idx: usize) -> Option<Vec<f32>> {
+        let Layer::Conv2d { conv, .. } = self.layers.get(idx)? else {
+            return None;
+        };
+        let mut s = (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (((s >> 16) % 2001) as f32 - 1000.0) / 10_000.0 // ±0.1
+        };
+        Some(
+            (0..conv.out_c * conv.in_c * conv.k_h * conv.k_w)
+                .map(|_| next())
+                .collect(),
+        )
+    }
+
     /// Deterministic input batch (batch × input_features).
     pub fn input_batch(&self, batch: usize) -> Vec<f32> {
         let mut s = 0xDEAD_BEEF_u64;
@@ -114,9 +197,13 @@ impl DnnGraph {
     }
 
     /// Host-side reference forward pass (row-major, batch × features).
+    /// Conv/pool stages use channel-major (C,H,W) flattening per image;
+    /// the spatial shape is tracked from each conv layer's own dims.
     pub fn forward_ref(&self, x: &[f32], batch: usize) -> Vec<f32> {
         let mut h = x.to_vec();
         let mut feat = self.input_features;
+        // (channels, height, width) of the current activations, when known.
+        let mut shape: Option<(usize, usize, usize)> = None;
         for (idx, layer) in self.layers.iter().enumerate() {
             match layer {
                 Layer::Dense {
@@ -138,8 +225,42 @@ impl DnnGraph {
                     }
                     h = out;
                     feat = *out_features;
+                    shape = None;
                 }
-                _ => unimplemented!("reference path covers dense stacks"),
+                Layer::Conv2d { conv, relu } => {
+                    assert_eq!(
+                        feat,
+                        conv.in_c * conv.in_h * conv.in_w,
+                        "conv input shape mismatch at layer {idx}"
+                    );
+                    let w = self.conv_params(idx).unwrap();
+                    let (oh, ow) = (conv.out_h(), conv.out_w());
+                    let out_feat = conv.out_c * oh * ow;
+                    let mut out = vec![0.0f32; batch * out_feat];
+                    for bi in 0..batch {
+                        let img = &h[bi * feat..(bi + 1) * feat];
+                        let mut y = conv.conv_ref(img, &w);
+                        if *relu {
+                            for v in &mut y {
+                                *v = v.max(0.0);
+                            }
+                        }
+                        out[bi * out_feat..(bi + 1) * out_feat].copy_from_slice(&y);
+                    }
+                    h = out;
+                    feat = out_feat;
+                    shape = Some((conv.out_c, oh, ow));
+                }
+                Layer::MaxPool2x2 => {
+                    let (c, ih, iw) = shape.expect("pool needs a known spatial shape");
+                    h = maxpool2x2(&h, batch, c, ih, iw);
+                    feat = c * (ih / 2) * (iw / 2);
+                    shape = Some((c, ih / 2, iw / 2));
+                }
+                Layer::Flatten => {
+                    // (C,H,W) is already flattened channel-major.
+                    shape = None;
+                }
             }
         }
         h
@@ -176,6 +297,20 @@ mod tests {
         assert_eq!(b.len(), 256);
         // Deterministic.
         assert_eq!(g.dense_params(0).unwrap().0[..8], w[..8]);
+    }
+
+    #[test]
+    fn cnn_forward_ref_runs() {
+        let g = DnnGraph::cnn_small();
+        let x = g.input_batch(2);
+        let y = g.forward_ref(&x, 2);
+        assert_eq!(y.len(), 2 * 10);
+        assert!(y.iter().any(|&v| v != 0.0));
+        // Conv weights are deterministic and the right size.
+        let w = g.conv_params(0).unwrap();
+        assert_eq!(w.len(), 36); // out_c 4 × in_c 1 × 3 × 3
+        assert_eq!(g.conv_params(0).unwrap()[..4], w[..4]);
+        assert!(g.conv_params(1).is_none(), "maxpool has no conv params");
     }
 
     #[test]

@@ -2,10 +2,18 @@
 //! host-managed inter-layer transfers (TVM's graph-runtime role), and the
 //! schedule runner that produces per-layer cycle counts (§5's "functional
 //! and optional timing simulation").
+//!
+//! Dense **and Conv2d** layers map onto the accelerator through the UMA
+//! registry seam (`mapping::uma::lower`): a convolution becomes the
+//! im2col patch-matrix GeMM (the `im2col_conv` composite mapper), with
+//! the host performing the patch transform when loading inputs.  MaxPool
+//! and Flatten are host glue steps between accelerator calls — the layout
+//! transforms TVM's graph runtime would schedule on the CPU.
 
 use thiserror::Error;
 
 use crate::isa::GAMMA_TILE;
+use crate::mapping::conv::Conv2d;
 use crate::mapping::gemm::{GemmLayout, GemmParams};
 use crate::mapping::uma::{self, Machine, Operator, UmaError};
 use crate::sim::backend::BackendKind;
@@ -26,7 +34,7 @@ pub enum SimMode {
 
 #[derive(Debug, Error)]
 pub enum LowerError {
-    #[error("layer {0}: only Dense stacks lower end-to-end (got {1})")]
+    #[error("layer {0}: cannot lower {1} here (host stages need a known spatial shape)")]
     Unsupported(usize, &'static str),
     #[error(transparent)]
     Uma(#[from] UmaError),
@@ -36,26 +44,51 @@ pub enum LowerError {
     Func(#[from] FuncError),
 }
 
-/// One lowered layer: operator, program, layout, padded dims.
+/// One accelerator-mapped layer: operator, program, layout, padded dims.
 #[derive(Debug, Clone)]
 pub struct LoweredLayer {
     pub name: String,
     pub op: Operator,
     pub lowered: uma::Lowered,
-    /// Logical (unpadded) m, k, n.
+    /// Logical (unpadded) m, k, n of the GeMM view.
     pub logical: (usize, usize, usize),
-    /// Weights (padded, row-major k×n) and bias (padded, len n).
+    /// GeMM B operand (padded, row-major k×n).
     pub weights: Vec<f32>,
+    /// Bias (padded, len n; empty for conv layers).
     pub bias: Vec<f32>,
     pub relu: bool,
     pub bias_base: Option<u64>,
+    /// For conv layers: the convolution whose im2col patches form the A
+    /// operand (per image of the batch).
+    pub conv: Option<Conv2d>,
+}
+
+/// One step of the lowered schedule: an accelerator program or a host
+/// data-transform between accelerator calls.
+#[derive(Debug, Clone)]
+pub enum Step {
+    Mapped(LoweredLayer),
+    /// 2×2 max-pool on channel-major activations of the given input shape.
+    MaxPool2x2 { c: usize, h: usize, w: usize },
+    /// No-op on the flat channel-major layout.
+    Flatten,
 }
 
 /// The whole lowered model.
 #[derive(Debug, Clone)]
 pub struct LoweredGraph {
-    pub layers: Vec<LoweredLayer>,
+    pub steps: Vec<Step>,
     pub batch: usize,
+}
+
+impl LoweredGraph {
+    /// The accelerator-mapped layers, in schedule order.
+    pub fn mapped(&self) -> impl Iterator<Item = &LoweredLayer> {
+        self.steps.iter().filter_map(|s| match s {
+            Step::Mapped(l) => Some(l),
+            _ => None,
+        })
+    }
 }
 
 /// Per-layer and total results of running a schedule.
@@ -90,11 +123,13 @@ fn pad_matrix(data: &[f32], r: usize, c: usize, pr: usize, pc: usize) -> Vec<f32
     out
 }
 
-/// Lower every Dense layer of `graph` for `machine` (batch rows).  Γ̈ pads
-/// all GeMM dims to multiples of [`GAMMA_TILE`]; scalar targets use the
-/// logical dims directly.  Fused bias+ReLU goes through the `Dense`
-/// operator on Γ̈; scalar targets get a plain GeMM and host-applied
-/// bias/activation (the data transform TVM would schedule separately).
+/// Lower every layer of `graph` for `machine` (batch rows).  Γ̈ pads all
+/// GeMM dims to multiples of [`GAMMA_TILE`]; scalar targets use the
+/// logical dims directly.  Dense bias+ReLU fuses on Γ̈ (the `Dense`
+/// operator); scalar targets get a plain GeMM and host-applied
+/// bias/activation.  Conv2d lowers to the im2col GeMM on every target
+/// (ReLU host-applied — the fused path needs a bias row); MaxPool2x2 and
+/// Flatten become host steps.
 pub fn lower_graph(
     machine: &Machine,
     graph: &DnnGraph,
@@ -102,58 +137,97 @@ pub fn lower_graph(
 ) -> Result<LoweredGraph, LowerError> {
     let is_gamma = matches!(machine, Machine::Gamma(_));
     let mult = if is_gamma { GAMMA_TILE } else { 1 };
-    let mut layers = Vec::new();
+    let mut steps = Vec::new();
+    let mut feat = graph.input_features;
+    let mut shape: Option<(usize, usize, usize)> = None;
     for (idx, layer) in graph.layers.iter().enumerate() {
-        let Layer::Dense {
-            in_features,
-            out_features,
-            relu,
-        } = layer
-        else {
-            return Err(LowerError::Unsupported(
-                idx,
-                match layer {
-                    Layer::Conv2d { .. } => "Conv2d",
-                    Layer::MaxPool2x2 => "MaxPool2x2",
-                    Layer::Flatten => "Flatten",
-                    Layer::Dense { .. } => unreachable!(),
-                },
-            ));
-        };
-        let (w, b) = graph.dense_params(idx).unwrap();
-        let (m, k, n) = (batch, *in_features, *out_features);
-        let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
-        let p = GemmParams::new(pm, pk, pn);
-        let weights = pad_matrix(&w, k, n, pk, pn);
-        let mut bias = b.clone();
-        bias.resize(pn, 0.0);
+        match layer {
+            Layer::Dense {
+                in_features,
+                out_features,
+                relu,
+            } => {
+                debug_assert_eq!(feat, *in_features);
+                let (w, b) = graph.dense_params(idx).unwrap();
+                let (m, k, n) = (batch, *in_features, *out_features);
+                let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
+                let p = GemmParams::new(pm, pk, pn);
+                let weights = pad_matrix(&w, k, n, pk, pn);
+                let mut bias = b.clone();
+                bias.resize(pn, 0.0);
 
-        // Operand region: after the layout's C, leave room for the bias.
-        let layout = GemmLayout::at(machine.data_base(), &p);
-        let bias_base = layout.c_base + (pm * pn * 4) as u64;
+                // Operand region: after the layout's C, leave room for the
+                // bias.
+                let layout = GemmLayout::at(machine.data_base(), &p);
+                let bias_base = layout.c_base + (pm * pn * 4) as u64;
 
-        let op = if is_gamma {
-            Operator::Dense {
-                gemm: p,
-                bias_base,
-                relu: *relu,
+                let op = if is_gamma {
+                    Operator::Dense {
+                        gemm: p,
+                        bias_base,
+                        relu: *relu,
+                    }
+                } else {
+                    Operator::Gemm(p)
+                };
+                let lowered = uma::lower(machine, &op)?;
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("dense{idx}_{k}x{n}"),
+                    op,
+                    lowered,
+                    logical: (m, k, n),
+                    weights,
+                    bias,
+                    relu: *relu,
+                    bias_base: is_gamma.then_some(bias_base),
+                    conv: None,
+                }));
+                feat = n;
+                shape = None;
             }
-        } else {
-            Operator::Gemm(p)
-        };
-        let lowered = uma::lower(machine, &op)?;
-        layers.push(LoweredLayer {
-            name: format!("dense{idx}_{k}x{n}"),
-            op,
-            lowered,
-            logical: (m, k, n),
-            weights,
-            bias,
-            relu: *relu,
-            bias_base: is_gamma.then_some(bias_base),
-        });
+            Layer::Conv2d { conv, relu } => {
+                debug_assert_eq!(feat, conv.in_c * conv.in_h * conv.in_w);
+                let (oh, ow) = (conv.out_h(), conv.out_w());
+                let g = conv.as_gemm(); // per-image (oh·ow) × kk × out_c
+                let (m, k, n) = (batch * g.m, g.k, g.n);
+                let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
+                let p = GemmParams::new(pm, pk, pn);
+                let w = graph.conv_params(idx).unwrap();
+                let weights = pad_matrix(&conv.reshape_weights(&w), k, n, pk, pn);
+                let op = Operator::Conv2d {
+                    conv: *conv,
+                    gemm: p,
+                };
+                let lowered = uma::lower(machine, &op)?;
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("conv{idx}_{}x{}x{}", conv.out_c, oh, ow),
+                    op,
+                    lowered,
+                    logical: (m, k, n),
+                    weights,
+                    bias: Vec::new(),
+                    relu: *relu,
+                    bias_base: None,
+                    conv: Some(*conv),
+                }));
+                feat = conv.out_c * oh * ow;
+                shape = Some((conv.out_c, oh, ow));
+            }
+            Layer::MaxPool2x2 => {
+                let Some((c, h, w)) = shape else {
+                    return Err(LowerError::Unsupported(idx, "MaxPool2x2"));
+                };
+                steps.push(Step::MaxPool2x2 { c, h, w });
+                feat = c * (h / 2) * (w / 2);
+                shape = Some((c, h / 2, w / 2));
+            }
+            Layer::Flatten => {
+                steps.push(Step::Flatten);
+                shape = None;
+            }
+        }
     }
-    Ok(LoweredGraph { layers, batch })
+    Ok(LoweredGraph { steps, batch })
 }
 
 /// Run the lowered schedule: per-layer simulation with host-managed
@@ -168,13 +242,39 @@ pub fn run_schedule(
     let mut report = ScheduleReport::default();
     let batch = lg.batch;
     let mut act = input.to_vec(); // batch × features, unpadded
-    let mut feat = act.len() / batch;
 
-    for ll in &lg.layers {
+    for step in &lg.steps {
+        let ll = match step {
+            Step::Mapped(ll) => ll,
+            Step::MaxPool2x2 { c, h, w } => {
+                act = super::graph::maxpool2x2(&act, batch, *c, *h, *w);
+                continue;
+            }
+            Step::Flatten => continue,
+        };
         let (m, k, n) = ll.logical;
-        assert_eq!(feat, k, "activation width mismatch at {}", ll.name);
         let p = *ll.op.gemm_params();
-        let padded_a = pad_matrix(&act, m, k, p.m, p.k);
+
+        // Assemble the (m×k) A operand: dense layers use the activations
+        // directly; conv layers im2col each image's patches.
+        let a = match &ll.conv {
+            None => {
+                assert_eq!(act.len(), m * k, "activation width mismatch at {}", ll.name);
+                act.clone()
+            }
+            Some(conv) => {
+                let in_feat = conv.in_c * conv.in_h * conv.in_w;
+                assert_eq!(act.len(), batch * in_feat, "conv input mismatch at {}", ll.name);
+                let rows_per_img = conv.out_h() * conv.out_w();
+                let mut a = Vec::with_capacity(m * k);
+                for bi in 0..batch {
+                    a.extend(conv.im2col(&act[bi * in_feat..(bi + 1) * in_feat]));
+                }
+                debug_assert_eq!(a.len(), batch * rows_per_img * k);
+                a
+            }
+        };
+        let padded_a = pad_matrix(&a, m, k, p.m, p.k);
 
         let (cycles, instrs, c_out) = match mode {
             SimMode::Functional => {
@@ -201,22 +301,45 @@ pub fn run_schedule(
             }
         };
 
-        // Unpad and (scalar targets) apply bias + activation on the host.
-        let mut next = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut v = c_out[i * p.n + j];
-                if ll.bias_base.is_none() {
-                    v += ll.bias[j];
-                    if ll.relu {
-                        v = v.max(0.0);
+        // Unpad, then post-process on the host.
+        act = match &ll.conv {
+            None => {
+                // Dense: apply bias + activation where not fused on-device.
+                let mut next = vec![0.0f32; m * n];
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut v = c_out[i * p.n + j];
+                        if ll.bias_base.is_none() {
+                            v += ll.bias[j];
+                            if ll.relu {
+                                v = v.max(0.0);
+                            }
+                        }
+                        next[i * n + j] = v;
                     }
                 }
-                next[i * n + j] = v;
+                next
             }
-        }
-        act = next;
-        feat = n;
+            Some(conv) => {
+                // Conv: GeMM rows are (image, pixel) × out_c; transpose to
+                // channel-major (C,H,W) per image, ReLU on the host.
+                let rows_per_img = conv.out_h() * conv.out_w();
+                let out_feat = conv.out_c * rows_per_img;
+                let mut next = vec![0.0f32; batch * out_feat];
+                for bi in 0..batch {
+                    for px in 0..rows_per_img {
+                        for o in 0..conv.out_c {
+                            let mut v = c_out[(bi * rows_per_img + px) * p.n + o];
+                            if ll.relu {
+                                v = v.max(0.0);
+                            }
+                            next[bi * out_feat + o * rows_per_img + px] = v;
+                        }
+                    }
+                }
+                next
+            }
+        };
 
         report.per_layer.push(LayerReport {
             name: ll.name.clone(),
@@ -241,6 +364,8 @@ mod tests {
     use super::*;
     use crate::arch::gamma::GammaConfig;
     use crate::arch::oma::OmaConfig;
+    use crate::arch::systolic::SystolicConfig;
+    use crate::dnn::graph::DnnGraph;
     use crate::mapping::uma::TargetConfig;
 
     fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -312,16 +437,60 @@ mod tests {
     }
 
     #[test]
-    fn conv_layers_report_unsupported() {
+    fn small_cnn_lowers_end_to_end_on_all_targets() {
+        let g = DnnGraph::cnn_small();
+        let batch = 2;
+        let x = g.input_batch(batch);
+        let want = g.forward_ref(&x, batch);
+        for t in [
+            TargetConfig::Oma(OmaConfig::default()),
+            TargetConfig::Systolic(SystolicConfig::new(4, 4)),
+            TargetConfig::Gamma(GammaConfig::new(2)),
+        ] {
+            let machine = t.build().unwrap();
+            let lg = lower_graph(&machine, &g, batch).unwrap();
+            // conv + pool + flatten + dense = 4 schedule steps, 2 mapped.
+            assert_eq!(lg.steps.len(), 4);
+            assert_eq!(lg.mapped().count(), 2);
+            let rep =
+                run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+            let diff = max_abs_diff(&rep.output, &want);
+            assert!(diff < 1e-2, "{}: diff={diff}", machine.name());
+        }
+    }
+
+    #[test]
+    fn small_cnn_timed_on_gamma_counts_conv_cycles() {
+        let g = DnnGraph::cnn_small();
+        let machine = TargetConfig::Gamma(GammaConfig::new(2)).build().unwrap();
+        let lg = lower_graph(&machine, &g, 1).unwrap();
+        let x = g.input_batch(1);
+        let rep = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::EventDriven),
+            500_000_000,
+        )
+        .unwrap();
+        assert_eq!(rep.per_layer.len(), 2);
+        assert!(rep.per_layer[0].name.starts_with("conv"), "{:?}", rep.per_layer[0]);
+        assert!(rep.per_layer[0].cycles > 0);
+        let want = g.forward_ref(&x, 1);
+        assert!(max_abs_diff(&rep.output, &want) < 1e-2);
+    }
+
+    #[test]
+    fn pool_without_shape_reports_unsupported() {
         let g = DnnGraph {
             input_features: 25,
-            layers: vec![Layer::Flatten],
+            layers: vec![crate::dnn::graph::Layer::MaxPool2x2],
             name: "x".into(),
         };
         let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
         assert!(matches!(
             lower_graph(&machine, &g, 1),
-            Err(LowerError::Unsupported(0, "Flatten"))
+            Err(LowerError::Unsupported(0, "MaxPool2x2"))
         ));
     }
 }

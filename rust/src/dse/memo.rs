@@ -1,0 +1,65 @@
+//! Result memoization for design-space exploration.
+//!
+//! Keyed by [`JobSpec::canonical_key`]: semantically identical jobs (same
+//! target + canonicalized workload + mode + cycle budget — backend and id
+//! excluded) share one simulation.  The sweep enumerator deliberately
+//! emits the full (arch × tile × order × backend) cross-product; the memo
+//! is what collapses the axes a given target cannot observe, so e.g. the
+//! second backend of every pair and every tile/order variant on a
+//! systolic target are served from cache.
+
+use std::collections::HashMap;
+
+use crate::coordinator::job::JobResult;
+
+/// A single-exploration memo (the orchestration loop is single-threaded;
+/// parallelism lives inside the pool, so no locking here).
+#[derive(Debug, Default)]
+pub struct Memo {
+    map: HashMap<u64, JobResult>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Memo {
+    pub fn new() -> Self {
+        Memo::default()
+    }
+
+    /// Non-counting probe (wave scheduling).
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    pub fn get(&self, key: u64) -> Option<&JobResult> {
+        self.map.get(&key)
+    }
+
+    pub fn insert(&mut self, key: u64, result: JobResult) {
+        self.map.insert(key, result);
+    }
+
+    /// Record that a candidate was served from the memo.
+    pub fn note_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Record that a candidate required a fresh simulation.
+    pub fn note_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// (hits, misses) over the exploration so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Distinct results stored.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}

@@ -1,0 +1,447 @@
+//! Design-space exploration (§7's "optimization loop of hardware-aware
+//! NAS and DNN/HW Co-Design"): enumerate → prune → simulate → frontier.
+//!
+//! The pipeline:
+//!
+//! 1. **Enumerate** ([`space::DseSpace`]) the (arch config × tile × loop
+//!    order × backend) candidate cross-product, via the arch layer's
+//!    enumeration hooks.
+//! 2. **Pre-filter** each candidate with its analytical cycle lower bound
+//!    ([`lower_bound_cycles`]: the per-target `analytical::Roofline`).
+//!    Candidates are evaluated in waves, cheapest bound first; once a
+//!    bound exceeds the best simulated cycle count so far, the entire
+//!    remaining (sorted) tail is pruned without simulating.  Because the
+//!    bound is sound (simulated cycles can never undercut it — a tested
+//!    property), pruning can never discard a cycle-optimal candidate.
+//!    Pruning serves the *cycle* objective: a cut candidate never gets an
+//!    area-frontier chance, so with pruning on, the reported frontier
+//!    spans the evaluated candidates (the report says so; `--no-prune
+//!    true` computes the exhaustive frontier).
+//! 3. **Evaluate** each surviving wave in parallel on the coordinator
+//!    pool (which shares cached machines), **memoizing** results by the
+//!    canonical job-spec hash ([`memo::Memo`]) so aliased candidates
+//!    (second backend, tile/order on targets that ignore them) cost
+//!    nothing.
+//! 4. **Report** the cycles-vs-area Pareto frontier plus pruning and
+//!    cache statistics.
+//!
+//! # CLI quickstart
+//!
+//! ```text
+//! acadl-cli dse                        # standard sweep: 136 candidates, 32³ GeMM
+//! acadl-cli dse --dim 64               # bigger workload
+//! acadl-cli dse --quick true --dim 8   # tiny smoke sweep (CI)
+//! acadl-cli dse --no-prune true        # exhaustive (validates the pre-filter)
+//! acadl-cli dse --workers 8            # pool width
+//! ```
+//!
+//! Programmatic: `dse::explore(&DseSpace::standard(32), workers, true)`.
+
+pub mod memo;
+pub mod space;
+
+pub use memo::Memo;
+pub use space::DseSpace;
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::job::{JobResult, JobSpec, Workload};
+use crate::coordinator::pool;
+use crate::dnn::graph::{DnnGraph, Layer};
+use crate::mapping::gemm::GemmParams;
+use crate::metrics::Table;
+
+/// Sound lower bound on the timed cycles of `spec`: the target's roofline
+/// applied to the workload's GeMM(s).  Target-side padding (Γ̈ rounds dims
+/// up to 8) only raises true cycles, so bounding the unpadded problem
+/// stays sound.
+pub fn lower_bound_cycles(spec: &JobSpec) -> u64 {
+    let rl = spec.target.roofline();
+    match &spec.workload {
+        Workload::Gemm { m, k, n, .. } => rl.gemm_cycles(&GemmParams::new(*m, *k, *n)),
+        Workload::Mlp { small, batch } => {
+            let g = if *small {
+                DnnGraph::mlp_small()
+            } else {
+                DnnGraph::mlp_784_256_128_10()
+            };
+            g.layers
+                .iter()
+                .filter_map(|l| match l {
+                    Layer::Dense {
+                        in_features,
+                        out_features,
+                        ..
+                    } => Some(rl.gemm_cycles(&GemmParams::new(
+                        *batch,
+                        *in_features,
+                        *out_features,
+                    ))),
+                    _ => None,
+                })
+                .sum()
+        }
+    }
+}
+
+/// One explored candidate: its spec, bound, and (possibly cache-served)
+/// result.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub spec: JobSpec,
+    pub lower_bound: u64,
+    pub result: JobResult,
+    /// Served from the memo instead of simulated.
+    pub cached: bool,
+}
+
+/// Exploration statistics (the headline numbers the CLI prints).
+#[derive(Debug, Clone, Default)]
+pub struct DseStats {
+    pub candidates: usize,
+    /// Candidates that received a result (simulated or cache-served).
+    pub evaluated: usize,
+    /// Candidates cut by the analytical pre-filter.
+    pub pruned: usize,
+    /// Unique simulations actually run.
+    pub simulated: usize,
+    pub cache_hits: usize,
+    pub failed: usize,
+    pub best_cycles: u64,
+    pub best_target: String,
+    pub wall: Duration,
+}
+
+/// The exploration outcome: evaluated points (sorted by cycles, then
+/// area), Pareto-frontier indices into `points`, and statistics.
+///
+/// With pruning on, `frontier` is the frontier **of the evaluated
+/// candidates**: pruning serves the cycle objective, so a candidate whose
+/// cycle bound exceeds the best (e.g. the minimum-area scalar OMA) is cut
+/// before its area-frontier merit is measured.  `explore(.., false)`
+/// yields the exhaustive frontier.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    pub points: Vec<DsePoint>,
+    pub frontier: Vec<usize>,
+    pub stats: DseStats,
+}
+
+/// Run the exploration.  `prune = false` evaluates exhaustively (the
+/// validation mode the property tests compare against).
+pub fn explore(space: &DseSpace, workers: usize, prune: bool) -> DseReport {
+    let t0 = Instant::now();
+    let mut cands: Vec<(JobSpec, u64)> = space
+        .enumerate()
+        .into_iter()
+        .map(|s| {
+            let lb = lower_bound_cycles(&s);
+            (s, lb)
+        })
+        .collect();
+    // Cheapest bound first: the most promising candidates simulate first,
+    // and the prunable tail becomes one contiguous cut.
+    cands.sort_by_key(|(s, lb)| (*lb, s.id));
+
+    let mut memo = Memo::new();
+    let mut points: Vec<DsePoint> = Vec::new();
+    let mut best = u64::MAX;
+    let mut best_target = String::new();
+    let mut pruned = 0usize;
+    let wave_len = (workers.max(1) * 2).max(8);
+
+    let mut i = 0;
+    while i < cands.len() {
+        if prune && cands[i].1 > best {
+            // Sorted ascending: every remaining bound also exceeds the
+            // best simulated cycles — cut the whole tail analytically.
+            pruned = cands.len() - i;
+            break;
+        }
+        let mut end = (i + wave_len).min(cands.len());
+        if prune {
+            // Keep the wave inside the still-plausible prefix.
+            while end > i + 1 && cands[end - 1].1 > best {
+                end -= 1;
+            }
+        }
+        let wave = &cands[i..end];
+
+        // Partition the wave: one representative simulation per canonical
+        // key; everything else is served from the memo.
+        let mut to_run: Vec<JobSpec> = Vec::new();
+        let mut scheduled: HashSet<u64> = HashSet::new();
+        let mut id_to_key: HashMap<u64, u64> = HashMap::new();
+        for (spec, _) in wave {
+            let key = spec.canonical_key();
+            if memo.contains(key) || !scheduled.insert(key) {
+                continue;
+            }
+            id_to_key.insert(spec.id, key);
+            to_run.push(spec.clone());
+        }
+        let ran_ids: HashSet<u64> = to_run.iter().map(|s| s.id).collect();
+        for r in pool::run_jobs(to_run, workers) {
+            let key = id_to_key[&r.id];
+            memo.insert(key, r);
+        }
+
+        // Serve every wave candidate and fold in the new best.
+        for (spec, lb) in wave {
+            let key = spec.canonical_key();
+            // run_jobs returns one result per spec, so the miss arm is
+            // unreachable in practice — but if the pool ever degrades, the
+            // candidate must still be *accounted for* (an error point, not
+            // a silent drop, or `evaluated + pruned == candidates` breaks).
+            let mut result = memo.get(key).cloned().unwrap_or_else(|| JobResult {
+                id: spec.id,
+                target: spec.target.describe(),
+                workload: spec.workload.describe(),
+                mode: spec.mode,
+                cycles: 0,
+                instructions: 0,
+                ipc: 0.0,
+                utilization: 0.0,
+                numerics_ok: None,
+                wall_micros: 0,
+                error: Some("worker pool returned no result for this job".into()),
+                area_proxy: spec.target.area_proxy(),
+            });
+            let cached = !ran_ids.contains(&spec.id);
+            if cached {
+                memo.note_hit();
+            } else {
+                memo.note_miss();
+            }
+            result.id = spec.id;
+            if result.error.is_none() && result.cycles > 0 && result.cycles < best {
+                best = result.cycles;
+                best_target = result.target.clone();
+            }
+            points.push(DsePoint {
+                spec: spec.clone(),
+                lower_bound: *lb,
+                result,
+                cached,
+            });
+        }
+        i = end;
+    }
+
+    points.sort_by(|a, b| {
+        (a.result.cycles, a.result.area_proxy as u64, a.spec.id).cmp(&(
+            b.result.cycles,
+            b.result.area_proxy as u64,
+            b.spec.id,
+        ))
+    });
+    let frontier = pareto_frontier(&points);
+    let (cache_hits, simulated) = memo.stats();
+    let failed = points.iter().filter(|p| p.result.error.is_some()).count();
+    DseReport {
+        stats: DseStats {
+            candidates: cands.len(),
+            evaluated: points.len(),
+            pruned,
+            simulated: simulated as usize,
+            cache_hits: cache_hits as usize,
+            failed,
+            best_cycles: best,
+            best_target,
+            wall: t0.elapsed(),
+        },
+        points,
+        frontier,
+    }
+}
+
+/// Indices of the cycles-vs-area Pareto frontier among error-free points.
+/// Duplicate (cycles, area) pairs — memo aliases — are starred once.
+fn pareto_frontier(points: &[DsePoint]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        if p.result.error.is_some() {
+            continue;
+        }
+        let dominated = points.iter().enumerate().any(|(j, o)| {
+            o.result.error.is_none()
+                && o.result.cycles <= p.result.cycles
+                && o.result.area_proxy <= p.result.area_proxy
+                && (o.result.cycles < p.result.cycles
+                    || o.result.area_proxy < p.result.area_proxy
+                    || (j < i
+                        && o.result.cycles == p.result.cycles
+                        && o.result.area_proxy == p.result.area_proxy))
+        });
+        if !dominated {
+            out.push(i);
+        }
+    }
+    out
+}
+
+impl DseReport {
+    /// The point table the CLI and examples print.
+    pub fn table(&self, title: &str) -> Table {
+        let frontier: HashSet<usize> = self.frontier.iter().copied().collect();
+        let mut t = Table::new(
+            title,
+            &[
+                "target", "workload", "backend", "area", "bound", "cycles", "util", "src",
+                "pareto",
+            ],
+        );
+        for (i, p) in self.points.iter().enumerate() {
+            t.row(vec![
+                p.result.target.clone(),
+                p.result.workload.clone(),
+                p.spec.backend.name().to_string(),
+                format!("{:.0}", p.result.area_proxy),
+                p.lower_bound.to_string(),
+                if p.result.error.is_some() {
+                    format!("ERR: {}", p.result.error.as_deref().unwrap_or(""))
+                } else {
+                    p.result.cycles.to_string()
+                },
+                format!("{:.1}%", p.result.utilization * 100.0),
+                if p.cached { "cache" } else { "sim" }.to_string(),
+                if frontier.contains(&i) { "★" } else { "" }.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// One-line statistics summary.
+    pub fn summary(&self) -> String {
+        let s = &self.stats;
+        let mut line = format!(
+            "{} candidates: {} evaluated ({} simulated + {} cache hits), \
+             {} pruned analytically, {} failed; best {} @ {} cycles; \
+             frontier {} points; wall {:.2?}",
+            s.candidates,
+            s.evaluated,
+            s.simulated,
+            s.cache_hits,
+            s.pruned,
+            s.failed,
+            if s.best_target.is_empty() {
+                "-"
+            } else {
+                &s.best_target
+            },
+            if s.best_cycles == u64::MAX {
+                0
+            } else {
+                s.best_cycles
+            },
+            self.frontier.len(),
+            s.wall
+        );
+        if s.pruned > 0 {
+            // Pruning optimizes the *cycle* objective, so cut candidates
+            // (typically the high-bound, low-area scalar tail) never get
+            // an area-frontier chance — say so rather than implying the
+            // frontier is exhaustive.
+            line.push_str(
+                "\nnote: frontier spans evaluated candidates only — pruning targets the \
+                 cycle objective; rerun with pruning off for the exhaustive frontier",
+            );
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{SimModeSpec, TargetSpec};
+    use crate::sim::backend::BackendKind;
+
+    fn gemm_spec(target: TargetSpec, dim: usize) -> JobSpec {
+        JobSpec {
+            id: 0,
+            target,
+            workload: Workload::Gemm {
+                m: dim,
+                k: dim,
+                n: dim,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
+            max_cycles: 100_000_000,
+        }
+    }
+
+    #[test]
+    fn bounds_order_targets_sensibly() {
+        let oma = lower_bound_cycles(&gemm_spec(
+            TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            32,
+        ));
+        let sys = lower_bound_cycles(&gemm_spec(TargetSpec::Systolic { rows: 8, cols: 8 }, 32));
+        let gamma = lower_bound_cycles(&gemm_spec(TargetSpec::Gamma { units: 4 }, 32));
+        assert!(oma > sys && sys > gamma, "{oma} / {sys} / {gamma}");
+        assert_eq!(oma, 32 * 32 * 32, "scalar bound is the MAC count");
+    }
+
+    #[test]
+    fn mlp_bound_sums_dense_layers() {
+        let spec = JobSpec {
+            workload: Workload::Mlp {
+                small: true,
+                batch: 4,
+            },
+            ..gemm_spec(
+                TargetSpec::Oma {
+                    cache: true,
+                    mac_latency: None,
+                },
+                1,
+            )
+        };
+        // mlp_small: 16→24→8 at batch 4 ⇒ 4·16·24 + 4·24·8 MACs.
+        assert_eq!(lower_bound_cycles(&spec), 4 * 16 * 24 + 4 * 24 * 8);
+    }
+
+    #[test]
+    fn tiny_exploration_produces_frontier_and_cache_hits() {
+        // Two backends ⇒ the second of every pair is a guaranteed memo hit.
+        let mut space = DseSpace::quick(6);
+        space.backends = vec![BackendKind::CycleStepped, BackendKind::EventDriven];
+        space.include_oma = false; // keep the test fast
+        let rep = explore(&space, 2, true);
+        assert!(rep.stats.evaluated > 0);
+        assert_eq!(rep.stats.failed, 0, "{}", rep.summary());
+        assert!(rep.stats.cache_hits > 0, "{}", rep.summary());
+        assert!(!rep.frontier.is_empty());
+        // Frontier points are mutually non-dominating.
+        for &i in &rep.frontier {
+            for &j in &rep.frontier {
+                if i == j {
+                    continue;
+                }
+                let (a, b) = (&rep.points[i].result, &rep.points[j].result);
+                assert!(
+                    !(a.cycles < b.cycles && a.area_proxy < b.area_proxy),
+                    "{i} dominates {j}"
+                );
+            }
+        }
+        // Every evaluated point respects its own lower bound.
+        for p in &rep.points {
+            assert!(
+                p.result.cycles >= p.lower_bound,
+                "{}: {} < bound {}",
+                p.result.target,
+                p.result.cycles,
+                p.lower_bound
+            );
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Candidate enumeration: the (architecture config × tile size × loop
+//! order × backend) cross-product a sweep explores.
+//!
+//! Architecture knobs come from the arch layer's enumeration hooks
+//! (`SystolicConfig::enumerate_grids`, `GammaConfig::enumerate_units`,
+//! `OmaConfig::enumerate_cache_variants`); mapping knobs (tile, loop
+//! order) are only attached to the OMA, the one target whose generator
+//! reads them — on the others they would only inflate the sweep with
+//! aliases the memo collapses anyway.
+
+use crate::arch::gamma::GammaConfig;
+use crate::arch::oma::OmaConfig;
+use crate::arch::systolic::SystolicConfig;
+use crate::coordinator::job::{JobSpec, SimModeSpec, TargetSpec, Workload};
+use crate::mapping::gemm::LoopOrder;
+use crate::sim::backend::BackendKind;
+
+/// The design space of one exploration: a square GeMM workload swept over
+/// the model zoo's structural and mapping parameters.
+#[derive(Debug, Clone)]
+pub struct DseSpace {
+    /// GeMM edge (`m = k = n = dim`).
+    pub dim: usize,
+    /// Systolic arrays up to `max_edge × max_edge` (powers of two).
+    pub max_edge: usize,
+    /// Γ̈ unit counts up to `max_units` (powers of two).
+    pub max_units: usize,
+    /// Include the scalar OMA floor (cache on/off × tiles × orders)?
+    pub include_oma: bool,
+    /// OMA tile sizes (None = untiled).
+    pub tiles: Vec<Option<usize>>,
+    /// OMA loop orders.
+    pub orders: Vec<LoopOrder>,
+    /// Timing backends to sweep (identical cycles; different wall time —
+    /// the memo serves the second of each pair from cache).
+    pub backends: Vec<BackendKind>,
+    pub max_cycles: u64,
+}
+
+impl DseSpace {
+    /// The full sweep (≥ 100 candidates): 2 OMA variants × 4 tiles × 6
+    /// orders, every power-of-two array up to 16×16, Γ̈ up to 8 units,
+    /// both backends.
+    pub fn standard(dim: usize) -> Self {
+        DseSpace {
+            dim,
+            max_edge: 16,
+            max_units: 8,
+            include_oma: true,
+            tiles: vec![None, Some(2), Some(4), Some(8)],
+            orders: LoopOrder::ALL.to_vec(),
+            backends: vec![BackendKind::CycleStepped, BackendKind::EventDriven],
+            max_cycles: 500_000_000,
+        }
+    }
+
+    /// A tiny space for smoke tests and CI (seconds, not minutes).
+    pub fn quick(dim: usize) -> Self {
+        DseSpace {
+            dim,
+            max_edge: 4,
+            max_units: 2,
+            include_oma: true,
+            tiles: vec![None, Some(4)],
+            orders: vec![LoopOrder::Ijk, LoopOrder::Kij],
+            backends: vec![BackendKind::EventDriven],
+            max_cycles: 500_000_000,
+        }
+    }
+
+    fn gemm(&self, tile: Option<usize>, order: Option<LoopOrder>) -> Workload {
+        Workload::Gemm {
+            m: self.dim,
+            k: self.dim,
+            n: self.dim,
+            tile,
+            order,
+        }
+    }
+
+    /// Every candidate as a timed job spec (ids are enumeration order).
+    pub fn enumerate(&self) -> Vec<JobSpec> {
+        let mut specs = Vec::new();
+        let push = |specs: &mut Vec<JobSpec>,
+                        target: TargetSpec,
+                        workload: Workload,
+                        backend: BackendKind| {
+            specs.push(JobSpec {
+                id: 0, // assigned below
+                target,
+                workload,
+                mode: SimModeSpec::Timed,
+                backend,
+                max_cycles: self.max_cycles,
+            });
+        };
+        if self.include_oma {
+            for cache in OmaConfig::enumerate_cache_variants() {
+                for &tile in &self.tiles {
+                    for &order in &self.orders {
+                        for &backend in &self.backends {
+                            push(
+                                &mut specs,
+                                TargetSpec::Oma {
+                                    cache,
+                                    mac_latency: None,
+                                },
+                                self.gemm(tile, Some(order)),
+                                backend,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        for (rows, cols) in SystolicConfig::enumerate_grids(self.max_edge) {
+            for &backend in &self.backends {
+                push(
+                    &mut specs,
+                    TargetSpec::Systolic { rows, cols },
+                    self.gemm(None, None),
+                    backend,
+                );
+            }
+        }
+        for units in GammaConfig::enumerate_units(self.max_units) {
+            for &backend in &self.backends {
+                push(
+                    &mut specs,
+                    TargetSpec::Gamma { units },
+                    self.gemm(None, None),
+                    backend,
+                );
+            }
+        }
+        for (i, s) in specs.iter_mut().enumerate() {
+            s.id = i as u64;
+        }
+        specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_space_exceeds_hundred_candidates() {
+        let specs = DseSpace::standard(32).enumerate();
+        // 2·4·6·2 OMA + 16·2 systolic + 4·2 Γ̈ = 136.
+        assert!(specs.len() >= 100, "only {} candidates", specs.len());
+        // Ids are unique enumeration order.
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn quick_space_is_small_but_covers_all_families() {
+        let specs = DseSpace::quick(8).enumerate();
+        assert!(specs.len() < 20, "{}", specs.len());
+        let has = |f: &dyn Fn(&TargetSpec) -> bool| specs.iter().any(|s| f(&s.target));
+        assert!(has(&|t| matches!(t, TargetSpec::Oma { .. })));
+        assert!(has(&|t| matches!(t, TargetSpec::Systolic { .. })));
+        assert!(has(&|t| matches!(t, TargetSpec::Gamma { .. })));
+    }
+
+    #[test]
+    fn enumeration_hooks_scale_with_limits() {
+        assert_eq!(SystolicConfig::enumerate_grids(16).len(), 16);
+        assert_eq!(SystolicConfig::enumerate_grids(4).len(), 4);
+        assert_eq!(GammaConfig::enumerate_units(8), vec![1, 2, 4, 8]);
+        assert_eq!(OmaConfig::enumerate_cache_variants().len(), 2);
+    }
+}

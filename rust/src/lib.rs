@@ -28,10 +28,12 @@
 //!   functional ISS for mapping validation.
 //! * [`arch`] — the model zoo: OMA (§4.1), the parameterizable systolic
 //!   array (§4.2), Γ̈ (§4.3), and Eyeriss- / Plasticine-derived models (§6).
-//! * [`mapping`] — DNN operator mapping (§5): tiled-GeMM code generation per
-//!   accelerator, loop orders, im2col convolution, and the UMA-style
-//!   operator registry.
-//! * [`dnn`] — a DNN graph IR and its lowering to operator schedules.
+//! * [`mapping`] — DNN operator mapping (§5): the `Mapper` trait and the
+//!   UMA-style registry it plugs into — tiled-GeMM code generation per
+//!   accelerator, loop orders, im2col convolution — the single seam every
+//!   consumer lowers through.
+//! * [`dnn`] — a DNN graph IR and its lowering to operator schedules
+//!   (Dense and Conv2d on the accelerator, pool/flatten as host glue).
 //! * [`aidg`] — the Architectural Instruction Dependency Graph fast
 //!   performance estimator (fixed-point loop analysis).
 //! * [`analytical`] — ScaleSim-like and roofline baselines (§2 comparisons).
@@ -39,7 +41,11 @@
 //!   (`artifacts/*.hlo.txt`) via the `xla` crate; gated behind the
 //!   `pjrt` cargo feature (stubbed otherwise, golden tests skip).
 //! * [`coordinator`] — async job queue + worker pool for simulation
-//!   campaigns, design-space sweeps, and the TCP serving front-end.
+//!   campaigns, design-space sweeps, and the TCP serving front-end, with
+//!   a process-wide built-machine cache.
+//! * [`dse`] — the design-space exploration engine: candidate
+//!   enumeration, analytical pruning, memoized parallel evaluation, and
+//!   Pareto-frontier reporting (`acadl-cli dse`).
 //! * [`metrics`] — report tables for the EXPERIMENTS.md experiments.
 //!
 //! ## Quickstart
@@ -68,6 +74,7 @@ pub mod analytical;
 pub mod arch;
 pub mod coordinator;
 pub mod dnn;
+pub mod dse;
 pub mod isa;
 pub mod mapping;
 pub mod mem;

@@ -32,6 +32,13 @@ COMMANDS:
       memory-bound workloads).
   sweep [--dim N] [--workers N] [--backend cycle|event]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
+  dse [--dim N] [--workers N] [--quick true] [--no-prune true]
+      [--max-edge N] [--max-units N]
+      Full design-space exploration on an N³ GeMM: enumerate the
+      (arch × tile × loop order × backend) candidates, prune with the
+      analytical roofline bound, evaluate survivors in parallel with
+      memoization, print the cycles-vs-area Pareto frontier and the
+      pruning/cache statistics.
   serve [--addr HOST:PORT] [--workers N]
       Serve JobSpec JSON lines over TCP.
   golden <name> [--dir artifacts]
@@ -83,6 +90,18 @@ impl Args {
             .get(key)
             .cloned()
             .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag: absent → false; `--key true|false` parsed strictly
+    /// (so `--no-prune false` means what it says instead of silently
+    /// acting like `--no-prune true`).
+    fn bool_flag(&self, key: &str) -> Result<bool, String> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(false),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(other) => Err(format!("--{key}: expected true|false, got `{other}`")),
+        }
     }
 }
 
@@ -220,6 +239,39 @@ fn run() -> Result<(), String> {
                 ]);
             }
             print!("{}", table.render());
+        }
+        "dse" => {
+            let dim = args.usize("dim", 32)?;
+            let workers = args.usize(
+                "workers",
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(4),
+            )?;
+            let quick = args.bool_flag("quick")?;
+            let prune = !args.bool_flag("no-prune")?;
+            let mut space = if quick {
+                acadl::dse::DseSpace::quick(dim)
+            } else {
+                acadl::dse::DseSpace::standard(dim)
+            };
+            if let Some(e) = args.opt_usize("max-edge")? {
+                space.max_edge = e;
+            }
+            if let Some(u) = args.opt_usize("max-units")? {
+                space.max_units = u;
+            }
+            println!(
+                "exploring gemm {dim}³ over {} candidates on {workers} workers (prune: {})…\n",
+                space.enumerate().len(),
+                if prune { "roofline" } else { "off" },
+            );
+            let report = acadl::dse::explore(&space, workers, prune);
+            print!(
+                "{}",
+                report.table(&format!("design space, gemm {dim}³ (timed)")).render()
+            );
+            println!("\n{}", report.summary());
         }
         "serve" => {
             let addr = args.str("addr", "127.0.0.1:7474");

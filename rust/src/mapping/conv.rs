@@ -4,6 +4,8 @@
 //! and it is what TVM emits for GeMM-only accelerators like the OMA/Γ̈).
 
 use crate::mapping::gemm::GemmParams;
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
 
 /// A 2-D convolution: NCHW input (N=1), OIHW weights, unit dilation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,6 +119,54 @@ impl Conv2d {
             }
         }
         out
+    }
+}
+
+/// Registry entry for im2col convolution: a **composite** mapper.  It
+/// owns no code generation of its own — it re-enters the registry with
+/// the patch-matrix GeMM the convolution reduces to, so every target that
+/// implements GeMM gets convolution for free (exactly TVM's im2col
+/// strategy for GeMM-only accelerators).  The host performs the im2col
+/// data transform when loading inputs (see `dnn::lowering`).
+pub struct Im2colConvMapper;
+
+impl Im2colConvMapper {
+    fn inner_gemm(op: &Operator) -> Option<Operator> {
+        match op {
+            Operator::Conv2d { gemm, .. } => Some(Operator::Gemm(*gemm)),
+            _ => None,
+        }
+    }
+}
+
+impl Mapper for Im2colConvMapper {
+    fn name(&self) -> &'static str {
+        "im2col_conv"
+    }
+
+    fn supports(&self, reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        // Supported wherever the *owning* registry maps the reduced GeMM
+        // (the stored `gemm` carries any target padding the caller
+        // applied), so `supports` and `lower` always agree.
+        Self::inner_gemm(op).is_some_and(|g| reg.mapper_for(machine, &g).is_some())
+    }
+
+    fn lower(
+        &self,
+        reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let Some(gemm) = Self::inner_gemm(op) else {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        };
+        reg.lower(machine, &gemm)
+    }
+
+    fn cost_hints(&self, reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
+        Self::inner_gemm(op)
+            .and_then(|g| reg.cost_hints(machine, &g).ok())
+            .unwrap_or_default()
     }
 }
 

@@ -16,12 +16,15 @@
 //! before storing the 8 result rows.
 
 use crate::acadl_core::graph::RegId;
+use crate::analytical::Roofline;
 use crate::arch::gamma::GammaMachine;
 use crate::isa::instruction::{AddrRef, Instruction};
 use crate::isa::opcode::Opcode;
 use crate::isa::program::Program;
 use crate::isa::GAMMA_TILE;
 use crate::mapping::gemm::{GemmLayout, GemmParams};
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
 
 /// Extra mapping options for the Γ̈ generator.
 #[derive(Debug, Clone, Copy, Default)]
@@ -223,6 +226,77 @@ pub fn gamma_listing4_program(machine: &GammaMachine) -> Program {
     src.push_str("halt\n");
     crate::isa::assembler::assemble(&machine.ag, &src, machine.cfg.imem_range.0)
         .expect("listing 4 text assembles")
+}
+
+/// Registry entry for [`gamma_gemm`]: the Γ̈ fused-tensor mapping.  The
+/// only mapper that accepts the fused `Dense` operator (bias + ReLU
+/// applied on-device); requires all GeMM dims padded to [`GAMMA_TILE`].
+pub struct GammaFusedTensorMapper;
+
+impl Mapper for GammaFusedTensorMapper {
+    fn name(&self) -> &'static str {
+        "gamma_fused_gemm"
+    }
+
+    fn supports(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        let t = GAMMA_TILE;
+        let padded = |p: &GemmParams| p.m % t == 0 && p.k % t == 0 && p.n % t == 0;
+        matches!(machine, Machine::Gamma(_))
+            && match op {
+                Operator::Gemm(p) => padded(p),
+                Operator::Dense { gemm, .. } => padded(gemm),
+                Operator::Conv2d { .. } => false,
+            }
+    }
+
+    fn lower(
+        &self,
+        _reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let Machine::Gamma(m) = machine else {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        };
+        let program = match op {
+            Operator::Gemm(p) => gamma_gemm(m, p, GammaGemmOpts::default()),
+            Operator::Dense {
+                gemm,
+                bias_base,
+                relu,
+            } => gamma_gemm(
+                m,
+                gemm,
+                GammaGemmOpts {
+                    relu: *relu,
+                    bias_base: Some(*bias_base),
+                    ..Default::default()
+                },
+            ),
+            Operator::Conv2d { .. } => {
+                return Err(UmaError::Unsupported(machine.name(), *op))
+            }
+        };
+        Ok(Lowered::new(program, machine, op))
+    }
+
+    fn cost_hints(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
+        let p = op.gemm_params();
+        let units = match machine {
+            Machine::Gamma(m) => m.cfg.units,
+            _ => 1,
+        };
+        let t = GAMMA_TILE as u64;
+        // Per 8×8 output tile and k-step: 2·8 row loads + gemm + vadd;
+        // plus 8 stores (and bias/activation ops) per output tile.
+        let out_tiles = ((p.m / GAMMA_TILE) * (p.n / GAMMA_TILE)).max(1) as u64;
+        let ksteps = (p.k / GAMMA_TILE).max(1) as u64;
+        let est = out_tiles * (ksteps * (2 * t + 2) + t + 2) + 1;
+        CostHints {
+            min_cycles: Roofline::gamma(units).gemm_cycles(p),
+            est_instructions: est,
+        }
+    }
 }
 
 #[cfg(test)]

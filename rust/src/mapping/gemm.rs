@@ -19,11 +19,14 @@
 //! `C (m×n)` at `c_base`, f32 elements.
 
 use crate::acadl_core::graph::{Ag, RegId};
+use crate::analytical::Roofline;
 use crate::arch::oma::OmaMachine;
 use crate::isa::assembler::{assemble, AsmError};
 use crate::isa::instruction::{AddrRef, Instruction};
 use crate::isa::opcode::Opcode;
 use crate::isa::program::Program;
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
 use crate::sim::exec::MemImage;
 
 /// The six classic GeMM loop orders.
@@ -299,6 +302,87 @@ pub fn oma_gemm_listing5(machine: &OmaMachine, p: &GemmParams) -> Result<Program
         astride = k * 4,
     );
     assemble(&machine.ag, &src, machine.cfg.imem_range.0)
+}
+
+/// Registry entry for [`oma_tiled_gemm`]: the parameterizable tiled-GeMM
+/// generator, the OMA's preferred (first-registered) GeMM mapping.
+pub struct OmaTiledGemmMapper;
+
+impl Mapper for OmaTiledGemmMapper {
+    fn name(&self) -> &'static str {
+        "oma_tiled_gemm"
+    }
+
+    fn supports(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        matches!(machine, Machine::Oma(_)) && matches!(op, Operator::Gemm(_))
+    }
+
+    fn lower(
+        &self,
+        _reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let (Machine::Oma(m), Operator::Gemm(p)) = (machine, op) else {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        };
+        Ok(Lowered::new(oma_tiled_gemm(m, p)?, machine, op))
+    }
+
+    fn cost_hints(&self, _reg: &Registry, _machine: &Machine, op: &Operator) -> CostHints {
+        let p = op.gemm_params();
+        let est = if p.order.k_innermost() && p.tile.map_or(true, |t| t >= p.k) {
+            // movi + k·(load, load, mac) + store per output element.
+            (p.m * p.n * (3 * p.k + 2) + 1) as u64
+        } else {
+            // load C, load A, load B, mac, store C per MAC step.
+            5 * p.macs() + 1
+        };
+        CostHints {
+            min_cycles: Roofline::oma().gemm_cycles(p),
+            est_instructions: est,
+        }
+    }
+}
+
+/// Registry entry for [`oma_gemm_listing5`]: the literal register-loop
+/// program.  Shadowed by the unrolled generator in dispatch order, so it
+/// is reached via `Registry::lower_with("oma_gemm_listing5", ..)`.
+pub struct OmaListing5Mapper;
+
+impl Mapper for OmaListing5Mapper {
+    fn name(&self) -> &'static str {
+        "oma_gemm_listing5"
+    }
+
+    fn supports(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        // The loop program hard-codes the ijk untiled traversal.
+        matches!(machine, Machine::Oma(_))
+            && matches!(
+                op,
+                Operator::Gemm(p) if p.tile.is_none() && p.order == LoopOrder::Ijk
+            )
+    }
+
+    fn lower(
+        &self,
+        _reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let (Machine::Oma(m), Operator::Gemm(p)) = (machine, op) else {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        };
+        Ok(Lowered::new(oma_gemm_listing5(m, p)?, machine, op))
+    }
+
+    fn cost_hints(&self, _reg: &Registry, _machine: &Machine, op: &Operator) -> CostHints {
+        CostHints {
+            min_cycles: Roofline::oma().gemm_cycles(op.gemm_params()),
+            // Static size of the Listing-5 program (loops, not unrolled).
+            est_instructions: 24,
+        }
+    }
 }
 
 #[cfg(test)]

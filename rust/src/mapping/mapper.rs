@@ -1,0 +1,65 @@
+//! The `Mapper` trait: the single seam between DNN operators and
+//! accelerator code generation.
+//!
+//! Every per-architecture code generator (the paper's UMA "interface
+//! functions", §5) implements this trait and is registered with the
+//! [`Registry`](crate::mapping::uma::Registry).  Consumers — the DNN graph
+//! lowering, the coordinator's job executor, the DSE engine — never call a
+//! generator directly: they ask the registry for a mapper that `supports`
+//! the (machine, operator) pair and get back a lowered program, an operand
+//! layout, and **static cost hints** (simulation-free estimates for
+//! consumers that already hold a built machine).
+//!
+//! Both the hints' `min_cycles` and the DSE pre-filter's machine-free
+//! bound (`TargetSpec::roofline()` in `dse::lower_bound_cycles`) derive
+//! from the same per-target constructors
+//! (`analytical::Roofline::{oma,systolic,gamma}`), so the two paths
+//! cannot drift apart: `analytical` is the single source of truth for
+//! what "cycles can never go below this" means.
+
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
+
+/// Static, simulation-free cost estimates for a lowered operator.
+///
+/// `min_cycles` is the load-bearing field: it must be a **sound lower
+/// bound** on the cycles any timed simulation of the mapping reports — it
+/// is built from the same `analytical::Roofline` per-target constructors
+/// the DSE pre-filter prunes with, and a property test asserts simulated
+/// cycles never dip below that roofline.  The instruction estimate is
+/// advisory (program-size ballpark for memory budgeting and reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CostHints {
+    /// Sound lower bound on timed-simulation cycles (0 = no claim).
+    pub min_cycles: u64,
+    /// Approximate static instruction count of the generated program.
+    pub est_instructions: u64,
+}
+
+/// A registered operator → program code generator for one target family.
+///
+/// Implementations are stateless (`Send + Sync`, zero-sized in practice):
+/// all problem state arrives through the operator and the built machine.
+/// `lower` and `cost_hints` receive the registry so composite mappers
+/// (e.g. im2col convolution) can delegate to the mapper of the operator
+/// they decompose into.
+pub trait Mapper: Send + Sync {
+    /// Stable registry name (CLI `--mapper`, diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Can this mapper lower `op` onto `machine`?  The registry dispatches
+    /// to the first registered mapper that answers yes, passing itself so
+    /// composite mappers probe the *owning* registry (not the global one)
+    /// and `supports`/`lower` can never disagree on a custom registry.
+    fn supports(&self, reg: &Registry, machine: &Machine, op: &Operator) -> bool;
+
+    /// Generate the program and operand layout.
+    fn lower(
+        &self,
+        reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError>;
+
+    /// Analytical cost hints for the DSE pre-filter (see [`CostHints`]).
+    fn cost_hints(&self, reg: &Registry, machine: &Machine, op: &Operator) -> CostHints;
+}

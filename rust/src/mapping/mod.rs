@@ -4,22 +4,32 @@
 //! The paper proposes TVM + UMA: *"the interface function for GeMM
 //! `oma_tiled_gemm(...)` may generate ACADL instructions ... according to
 //! the arguments passed, and then runs a functional and optional timing
-//! simulation"*.  Our equivalents:
+//! simulation"*.  Since the `Mapper` refactor every generator implements
+//! one trait and is reachable **only** through the registry seam:
 //!
+//! * [`mapper`] — the [`Mapper`](mapper::Mapper) trait: (operator, target)
+//!   → lowered program + layout + static [`CostHints`](mapper::CostHints)
+//!   (simulation-free estimates; their `min_cycles` derives from the same
+//!   `analytical::Roofline` constructors the DSE pre-filter prunes with).
 //! * [`gemm`] — `oma_tiled_gemm`: parameterizable tiled GeMM on the OMA
 //!   (tile size, six loop orders, Fig. 8's divide-and-conquer), plus the
-//!   literal Listing-5 register-loop program.
+//!   literal Listing-5 register-loop program; registered as
+//!   `oma_tiled_gemm` and `oma_gemm_listing5`.
 //! * [`systolic_gemm`] — output-stationary wavefront mapping onto the
-//!   rows×cols systolic array (macf chains carry the dataflow).
+//!   rows×cols systolic array (`systolic_wavefront_gemm`).
 //! * [`gamma_gemm`] — fused-tensor mapping onto Γ̈ (Listing 4 codegen):
 //!   8×8 `gemm` tiles with accumulation, optional fused ReLU and bias,
-//!   optional scratchpad staging, multi-unit round-robin.
-//! * [`conv`] — im2col lowering of 2-D convolution to GeMM.
+//!   optional scratchpad staging, multi-unit round-robin
+//!   (`gamma_fused_gemm`).
+//! * [`conv`] — im2col lowering of 2-D convolution, a composite mapper
+//!   that re-enters the registry with the reduced GeMM (`im2col_conv`).
 //! * [`uma`] — the operator registry: (operator, target) → program +
-//!   memory layout, the seam the DNN graph lowering plugs into.
+//!   memory layout, the seam the DNN graph lowering, the coordinator's
+//!   job executor, and the DSE engine all call.
 
 pub mod conv;
 pub mod gamma_gemm;
 pub mod gemm;
+pub mod mapper;
 pub mod systolic_gemm;
 pub mod uma;

@@ -12,11 +12,14 @@
 //! pipeline of a physical systolic array.
 
 use crate::acadl_core::graph::RegId;
+use crate::analytical::Roofline;
 use crate::arch::systolic::SystolicMachine;
 use crate::isa::instruction::{AddrRef, Instruction};
 use crate::isa::opcode::Opcode;
 use crate::isa::program::Program;
 use crate::mapping::gemm::{GemmLayout, GemmParams};
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
 
 /// Generate the output-stationary program for `C (m×n) = A (m×k) · B (k×n)`
 /// on `machine`.  Dimensions need not divide the array; edge tiles shrink.
@@ -109,6 +112,49 @@ pub fn systolic_gemm(machine: &SystolicMachine, p: &GemmParams) -> Program {
     }
     out.push(Instruction::new(Opcode::Halt));
     Program::new(out, machine.cfg.imem_range.0)
+}
+
+/// Registry entry for [`systolic_gemm`]: the output-stationary wavefront
+/// mapping onto the rows×cols array.
+pub struct SystolicWavefrontMapper;
+
+impl Mapper for SystolicWavefrontMapper {
+    fn name(&self) -> &'static str {
+        "systolic_wavefront_gemm"
+    }
+
+    fn supports(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        matches!(machine, Machine::Systolic(_)) && matches!(op, Operator::Gemm(_))
+    }
+
+    fn lower(
+        &self,
+        _reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let (Machine::Systolic(m), Operator::Gemm(p)) = (machine, op) else {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        };
+        Ok(Lowered::new(systolic_gemm(m, p), machine, op))
+    }
+
+    fn cost_hints(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
+        let p = op.gemm_params();
+        let (rows, cols) = match machine {
+            Machine::Systolic(m) => (m.cfg.rows, m.cfg.cols),
+            _ => (1, 1),
+        };
+        // Per output tile: reset + drain (tr·tc each) and, per k-step,
+        // tr + tc edge loads plus tr·tc macf ops.
+        let tiles = (p.m.div_ceil(rows) * p.n.div_ceil(cols)) as u64;
+        let per_tile =
+            (2 * rows * cols + p.k * (rows + cols) + p.k * rows * cols) as u64;
+        CostHints {
+            min_cycles: Roofline::systolic(rows, cols).gemm_cycles(p),
+            est_instructions: tiles * per_tile + 1,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -4,9 +4,23 @@
 //! integrated ... by registering an interface function which implements a
 //! DNN operator such as GeMM"*.
 //!
-//! [`lower`] dispatches an [`Operator`] to the target machine's registered
-//! generator and returns the ACADL program plus the memory layout the
-//! caller uses to place inputs and read results.
+//! Since the `Mapper`-trait refactor this module owns the **registry**
+//! only; the code generators themselves live in their modules and
+//! implement [`Mapper`](crate::mapping::mapper::Mapper):
+//!
+//! * [`OmaTiledGemmMapper`](crate::mapping::gemm::OmaTiledGemmMapper)
+//! * [`OmaListing5Mapper`](crate::mapping::gemm::OmaListing5Mapper)
+//! * [`SystolicWavefrontMapper`](crate::mapping::systolic_gemm::SystolicWavefrontMapper)
+//! * [`GammaFusedTensorMapper`](crate::mapping::gamma_gemm::GammaFusedTensorMapper)
+//! * [`Im2colConvMapper`](crate::mapping::conv::Im2colConvMapper)
+//!
+//! [`lower`] dispatches an [`Operator`] to the first registered mapper
+//! that supports the (machine, operator) pair and returns the ACADL
+//! program plus the memory layout the caller uses to place inputs and
+//! read results; [`cost_hints`] returns the same mapper's analytical
+//! estimates without generating anything — the DSE pre-filter's probe.
+
+use std::sync::OnceLock;
 
 use thiserror::Error;
 
@@ -15,9 +29,11 @@ use crate::arch::gamma::{GammaConfig, GammaMachine};
 use crate::arch::oma::{OmaConfig, OmaMachine};
 use crate::arch::systolic::{SystolicConfig, SystolicMachine};
 use crate::isa::program::Program;
-use crate::mapping::gamma_gemm::{gamma_gemm, GammaGemmOpts};
-use crate::mapping::gemm::{oma_tiled_gemm, GemmLayout, GemmParams};
-use crate::mapping::systolic_gemm::systolic_gemm;
+use crate::mapping::conv::{Conv2d, Im2colConvMapper};
+use crate::mapping::gamma_gemm::GammaFusedTensorMapper;
+use crate::mapping::gemm::{GemmLayout, GemmParams, OmaListing5Mapper, OmaTiledGemmMapper};
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::systolic_gemm::SystolicWavefrontMapper;
 
 /// A built accelerator, uniformly accessible.
 #[derive(Debug, Clone)]
@@ -91,6 +107,11 @@ pub enum Operator {
         bias_base: u64,
         relu: bool,
     },
+    /// 2-D convolution lowered im2col → GeMM.  `gemm` is the (possibly
+    /// target-padded) patch-matrix GeMM the convolution reduces to; the
+    /// host performs the im2col data transform before loading inputs
+    /// (TVM's layout-transform glue).
+    Conv2d { conv: Conv2d, gemm: GemmParams },
 }
 
 impl Operator {
@@ -98,6 +119,7 @@ impl Operator {
         match self {
             Operator::Gemm(p) => p,
             Operator::Dense { gemm, .. } => gemm,
+            Operator::Conv2d { gemm, .. } => gemm,
         }
     }
 }
@@ -109,45 +131,125 @@ pub struct Lowered {
     pub layout: GemmLayout,
 }
 
+impl Lowered {
+    /// The uniform (program, layout) pair every mapper returns.
+    pub fn new(program: Program, machine: &Machine, op: &Operator) -> Self {
+        Lowered {
+            program,
+            layout: GemmLayout::at(machine.data_base(), op.gemm_params()),
+        }
+    }
+}
+
 #[derive(Debug, Error)]
 pub enum UmaError {
     #[error("target `{0}` does not implement operator {1:?} (fused bias/activation is fused-tensor level)")]
     Unsupported(&'static str, Operator),
+    #[error("no mapper named `{0}` is registered")]
+    UnknownMapper(String),
     #[error(transparent)]
     Asm(#[from] crate::isa::assembler::AsmError),
 }
 
-/// The registry dispatch: lower `op` onto `machine`.
+/// The mapper registry: an ordered list of [`Mapper`] implementations.
+/// Dispatch picks the first mapper whose `supports` accepts the
+/// (machine, operator) pair, so registration order encodes preference
+/// (e.g. the unrolled OMA GeMM shadows the Listing-5 register-loop
+/// variant, which stays reachable by name).
+pub struct Registry {
+    mappers: Vec<Box<dyn Mapper>>,
+}
+
+impl Registry {
+    /// An empty registry (tests; custom tool stacks).
+    pub fn empty() -> Self {
+        Registry {
+            mappers: Vec::new(),
+        }
+    }
+
+    /// The five in-tree code generators, in dispatch-preference order.
+    pub fn with_defaults() -> Self {
+        let mut r = Registry::empty();
+        r.register(Box::new(OmaTiledGemmMapper));
+        r.register(Box::new(SystolicWavefrontMapper));
+        r.register(Box::new(GammaFusedTensorMapper));
+        r.register(Box::new(Im2colConvMapper));
+        r.register(Box::new(OmaListing5Mapper));
+        r
+    }
+
+    /// The process-wide default registry (what [`lower`] dispatches
+    /// through).
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::with_defaults)
+    }
+
+    pub fn register(&mut self, mapper: Box<dyn Mapper>) {
+        self.mappers.push(mapper);
+    }
+
+    /// Registered mapper names, in dispatch order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.mappers.iter().map(|m| m.name()).collect()
+    }
+
+    /// First registered mapper supporting the pair.
+    pub fn mapper_for(&self, machine: &Machine, op: &Operator) -> Option<&dyn Mapper> {
+        self.mappers
+            .iter()
+            .map(|m| m.as_ref())
+            .find(|m| m.supports(self, machine, op))
+    }
+
+    /// Dispatch: lower `op` onto `machine` through the first supporting
+    /// mapper.
+    pub fn lower(&self, machine: &Machine, op: &Operator) -> Result<Lowered, UmaError> {
+        match self.mapper_for(machine, op) {
+            Some(m) => m.lower(self, machine, op),
+            None => Err(UmaError::Unsupported(machine.name(), *op)),
+        }
+    }
+
+    /// Lower through a specific mapper by registry name (ignores
+    /// dispatch preference but still checks `supports`).
+    pub fn lower_with(
+        &self,
+        name: &str,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        let m = self
+            .mappers
+            .iter()
+            .find(|m| m.name() == name)
+            .ok_or_else(|| UmaError::UnknownMapper(name.to_string()))?;
+        if !m.supports(self, machine, op) {
+            return Err(UmaError::Unsupported(machine.name(), *op));
+        }
+        m.lower(self, machine, op)
+    }
+
+    /// Analytical cost hints for the pair, from the mapper dispatch would
+    /// pick — no program is generated.
+    pub fn cost_hints(&self, machine: &Machine, op: &Operator) -> Result<CostHints, UmaError> {
+        match self.mapper_for(machine, op) {
+            Some(m) => Ok(m.cost_hints(self, machine, op)),
+            None => Err(UmaError::Unsupported(machine.name(), *op)),
+        }
+    }
+}
+
+/// The registry dispatch: lower `op` onto `machine` through the global
+/// default registry (the seam every consumer calls).
 pub fn lower(machine: &Machine, op: &Operator) -> Result<Lowered, UmaError> {
-    let p = op.gemm_params();
-    let layout = GemmLayout::at(machine.data_base(), p);
-    let program = match (machine, op) {
-        (Machine::Oma(m), Operator::Gemm(p)) => oma_tiled_gemm(m, p)?,
-        (Machine::Systolic(m), Operator::Gemm(p)) => systolic_gemm(m, p),
-        (Machine::Gamma(m), Operator::Gemm(p)) => {
-            gamma_gemm(m, p, GammaGemmOpts::default())
-        }
-        (
-            Machine::Gamma(m),
-            Operator::Dense {
-                gemm,
-                bias_base,
-                relu,
-            },
-        ) => gamma_gemm(
-            m,
-            gemm,
-            GammaGemmOpts {
-                relu: *relu,
-                bias_base: Some(*bias_base),
-                ..Default::default()
-            },
-        ),
-        (m, op @ Operator::Dense { .. }) => {
-            return Err(UmaError::Unsupported(m.name(), *op))
-        }
-    };
-    Ok(Lowered { program, layout })
+    Registry::global().lower(machine, op)
+}
+
+/// Analytical cost hints through the global registry.
+pub fn cost_hints(machine: &Machine, op: &Operator) -> Result<CostHints, UmaError> {
+    Registry::global().cost_hints(machine, op)
 }
 
 #[cfg(test)]
@@ -185,6 +287,57 @@ mod tests {
         ));
         let gamma = TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
         assert!(lower(&gamma, &dense).is_ok());
+    }
+
+    #[test]
+    fn registry_lists_all_five_generators() {
+        let names = Registry::global().names();
+        for expect in [
+            "oma_tiled_gemm",
+            "systolic_wavefront_gemm",
+            "gamma_fused_gemm",
+            "im2col_conv",
+            "oma_gemm_listing5",
+        ] {
+            assert!(names.contains(&expect), "missing mapper `{expect}` in {names:?}");
+        }
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn lower_with_reaches_shadowed_mapper() {
+        let p = GemmParams::new(4, 4, 4);
+        let oma = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let reg = Registry::global();
+        // Dispatch preference picks the unrolled generator…
+        let dispatched = reg.lower(&oma, &Operator::Gemm(p)).unwrap();
+        // …while the Listing-5 register-loop variant stays reachable by
+        // name and produces a (much shorter) branchy program.
+        let listing5 = reg
+            .lower_with("oma_gemm_listing5", &oma, &Operator::Gemm(p))
+            .unwrap();
+        assert!(listing5.program.len() < dispatched.program.len());
+        assert!(matches!(
+            reg.lower_with("nope", &oma, &Operator::Gemm(p)),
+            Err(UmaError::UnknownMapper(_))
+        ));
+    }
+
+    #[test]
+    fn cost_hints_are_positive_and_ordered() {
+        let p = GemmParams::new(16, 16, 16);
+        let op = Operator::Gemm(p);
+        let oma = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let sys = TargetConfig::Systolic(SystolicConfig::new(8, 8))
+            .build()
+            .unwrap();
+        let h_oma = cost_hints(&oma, &op).unwrap();
+        let h_sys = cost_hints(&sys, &op).unwrap();
+        assert!(h_oma.min_cycles > 0 && h_sys.min_cycles > 0);
+        assert!(
+            h_oma.min_cycles > h_sys.min_cycles,
+            "scalar bound above array bound: {h_oma:?} vs {h_sys:?}"
+        );
     }
 
     #[test]

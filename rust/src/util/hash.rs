@@ -1,0 +1,38 @@
+//! Stable hashing for canonical keys (machine cache, DSE memo).
+//!
+//! `std::hash::DefaultHasher` makes no cross-release stability promise,
+//! and the coordinator's caches key persisted/wire-visible identities
+//! (canonical config and job JSON) — so we pin the exact function.
+
+/// FNV-1a, 64-bit.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a string (the common canonical-JSON case).
+pub fn fnv1a_str(s: &str) -> u64 {
+    fnv1a(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_str("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn distinguishes_close_inputs() {
+        assert_ne!(fnv1a_str("gemm_8x8x8"), fnv1a_str("gemm_8x8x9"));
+    }
+}

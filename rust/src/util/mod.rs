@@ -7,7 +7,9 @@
 //!   behind `cargo bench` (`harness = false` targets).
 //! * [`prop`]  — proptest's role: seeded generators + a `forall` driver
 //!   with failure-case reporting for property tests.
+//! * [`hash`]  — stable FNV-1a for canonical cache/memo keys.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,136 @@
+//! DSE-layer properties:
+//!
+//! * **Soundness of the pre-filter bound** — simulated cycles (both
+//!   backends) never undercut the per-target `Roofline` lower bound, for
+//!   randomized GeMMs across the arch zoo.  This is the property that
+//!   makes analytical pruning safe.
+//! * **Pruning preserves the optimum** — on a small exhaustively
+//!   enumerated sweep, the pruned exploration finds exactly the best
+//!   cycle count the exhaustive one finds.
+//! * **Memo correctness** — aliased candidates (second backend) are
+//!   cache-served with identical cycles.
+
+use acadl::coordinator::job::{execute, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::dse::{explore, lower_bound_cycles, DseSpace};
+use acadl::mapping::gemm::LoopOrder;
+use acadl::sim::backend::BackendKind;
+use acadl::util::prop::{forall, Gen};
+
+fn random_target(g: &mut Gen) -> TargetSpec {
+    match g.usize(0, 3) {
+        0 => TargetSpec::Oma {
+            cache: g.bool(),
+            mac_latency: None,
+        },
+        1 => TargetSpec::Systolic {
+            rows: g.usize(1, 2) * 2,
+            cols: g.usize(1, 2) * 2,
+        },
+        _ => TargetSpec::Gamma {
+            units: g.usize(1, 2),
+        },
+    }
+}
+
+#[test]
+fn prop_sim_cycles_never_undercut_roofline_bound() {
+    forall(
+        "timed cycles >= roofline bound (both backends, arch zoo)",
+        12,
+        |g| {
+            let target = random_target(g);
+            let (m, k, n) = (g.usize(2, 10), g.usize(2, 10), g.usize(2, 10));
+            let tile = if g.bool() { Some(g.usize(2, 4)) } else { None };
+            let order = *g.choose(&LoopOrder::ALL);
+            JobSpec {
+                id: 0,
+                target,
+                workload: Workload::Gemm {
+                    m,
+                    k,
+                    n,
+                    tile,
+                    order: Some(order),
+                },
+                mode: SimModeSpec::Timed,
+                backend: BackendKind::CycleStepped,
+                max_cycles: 200_000_000,
+            }
+        },
+        |spec| {
+            let bound = lower_bound_cycles(spec);
+            for backend in BackendKind::ALL {
+                let r = execute(&JobSpec {
+                    backend,
+                    ..spec.clone()
+                });
+                if let Some(e) = &r.error {
+                    return Err(format!("{}: job failed: {e}", r.target));
+                }
+                if r.cycles < bound {
+                    return Err(format!(
+                        "{} ({}): simulated {} cycles < bound {bound}",
+                        r.target,
+                        backend.name(),
+                        r.cycles
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dse_pruning_never_discards_the_optimum() {
+    // Small, exhaustively enumerable space: scalar OMA variants plus tiny
+    // arrays — the scalar tail is exactly what pruning should cut.
+    let mut space = DseSpace::quick(6);
+    space.backends = vec![BackendKind::EventDriven];
+    let exhaustive = explore(&space, 2, false);
+    let pruned = explore(&space, 2, true);
+
+    assert_eq!(exhaustive.stats.pruned, 0);
+    assert_eq!(
+        exhaustive.stats.evaluated,
+        exhaustive.stats.candidates,
+        "exhaustive mode evaluates everything"
+    );
+    assert_eq!(
+        pruned.stats.evaluated + pruned.stats.pruned,
+        pruned.stats.candidates,
+        "every candidate is evaluated or pruned"
+    );
+    assert_eq!(
+        pruned.stats.best_cycles, exhaustive.stats.best_cycles,
+        "pruning changed the optimum: {} vs {}",
+        pruned.summary(),
+        exhaustive.summary()
+    );
+    assert_eq!(pruned.stats.failed, 0, "{}", pruned.summary());
+    // The pruned run must not simulate more than the exhaustive one.
+    assert!(pruned.stats.simulated <= exhaustive.stats.simulated);
+}
+
+#[test]
+fn dse_memo_serves_backend_aliases_with_identical_cycles() {
+    let mut space = DseSpace::quick(6);
+    space.include_oma = false;
+    space.backends = vec![BackendKind::CycleStepped, BackendKind::EventDriven];
+    let rep = explore(&space, 2, false);
+    assert!(rep.stats.cache_hits > 0, "{}", rep.summary());
+    // Every (target, workload) pair appears once per backend with the
+    // same cycles — one simulated, one cache-served.
+    for p in &rep.points {
+        let twin = rep
+            .points
+            .iter()
+            .find(|q| {
+                q.spec.id != p.spec.id
+                    && q.result.target == p.result.target
+                    && q.result.workload == p.result.workload
+            })
+            .expect("every candidate has its other-backend twin");
+        assert_eq!(twin.result.cycles, p.result.cycles);
+    }
+}

@@ -79,4 +79,6 @@ fn main() {
         let prog = gamma_gemm(&m, &p, GammaGemmOpts::default());
         pair(&mut bench, "gamma2u_gemm24", &m.ag, &prog, 2_000_000_000);
     }
+
+    bench.write_json_if_requested();
 }

@@ -103,4 +103,6 @@ fn main() {
             Engine::new(&m.ag, &prog).expect("engine")
         });
     }
+
+    bench.write_json_if_requested();
 }

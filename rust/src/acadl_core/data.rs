@@ -24,6 +24,31 @@ pub enum Value {
     Vec(Box<[f32]>),
 }
 
+/// The discriminant of a [`Value`] without its payload.  The simulator's
+/// register file stores scalar payloads as untagged 64-bit words next to a
+/// dense tag array (see `sim::exec::RegState`), so the hot scalar ALU path
+/// branches on a one-byte tag instead of matching (and cloning) a full
+/// `Value`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ValueTag {
+    Int,
+    F32,
+    Vec,
+}
+
+impl Value {
+    /// This value's tag (payload-free discriminant).
+    #[inline]
+    pub fn tag(&self) -> ValueTag {
+        match self {
+            Value::Int(_) => ValueTag::Int,
+            Value::F32(_) => ValueTag::F32,
+            Value::Vec(_) => ValueTag::Vec,
+        }
+    }
+}
+
 impl Value {
     pub fn zero_int() -> Self {
         Value::Int(0)
@@ -125,6 +150,13 @@ impl Data {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tags() {
+        assert_eq!(Value::Int(3).tag(), ValueTag::Int);
+        assert_eq!(Value::F32(1.5).tag(), ValueTag::F32);
+        assert_eq!(Value::zero_vec(2).tag(), ValueTag::Vec);
+    }
 
     #[test]
     fn conversions() {

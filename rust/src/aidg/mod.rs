@@ -380,7 +380,7 @@ fn run(
 
         exec::apply(&fx, &mut regs, &mut mem);
         for &z in &zero_regs {
-            regs[z] = crate::acadl_core::data::Value::Int(0);
+            regs.set_int(z, 0);
         }
         steps += 1;
         if fx.halt {
@@ -459,7 +459,7 @@ fn count_remaining_iters(
         let fx = exec::execute(ins, pc, regs, mem)?;
         exec::apply(&fx, regs, mem);
         for &z in zero_regs {
-            regs[z] = crate::acadl_core::data::Value::Int(0);
+            regs.set_int(z, 0);
         }
         steps += 1;
         if steps >= max_steps {

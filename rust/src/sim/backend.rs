@@ -96,6 +96,15 @@ impl SimBackend for EventDriven {
             }
             match core.events.peek() {
                 Some(&Reverse(e)) if e > now => {
+                    // Consume the event we are jumping to — and every
+                    // duplicate scheduled for the same cycle (same-cycle
+                    // FU completions, squashed fetch transactions) — so
+                    // dead entries never trigger a second wake-up or
+                    // bloat the heap.  The step at `e` services all
+                    // timers due then regardless of heap contents.
+                    while matches!(core.events.peek(), Some(&Reverse(x)) if x == e) {
+                        core.events.pop();
+                    }
                     // Clamp to the cycle limit so a CycleLimit error
                     // reports the same retirement count as cycle-stepped.
                     let dt = e.min(max_cycles).saturating_sub(now);
@@ -166,6 +175,87 @@ impl std::fmt::Display for BackendKind {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::oma::{DataMem, OmaConfig};
+    use crate::isa::assembler::assemble;
+
+    /// Squashed fetches leave dead entries in the event heap; they are
+    /// drained at pop time, so a branch-heavy loop must not make the event
+    /// backend take spurious extra steps or report different stall
+    /// statistics than the cycle-stepped reference.
+    #[test]
+    fn branchy_loop_has_no_spurious_event_steps() {
+        let m = OmaConfig::default().build().unwrap();
+        let base = m.dmem_base();
+        // Tight countdown loop: every taken branch squashes an in-flight
+        // wrong-path fetch, leaving a dead event behind.
+        let src = format!(
+            "movi #{base} => r10\n\
+             movi #12 => r0\n\
+             movi #0 => r1\n\
+             loop: add r1, r0 => r1\n\
+             addi r0, #-1 => r0\n\
+             bnei r0, z0, @loop => pc\n\
+             store r1 => [r10]\n\
+             halt"
+        );
+        let p = assemble(&m.ag, &src, 0).unwrap();
+
+        let mut cycle_core = SimCore::new(&m.ag, &p).unwrap();
+        let cs = CycleStepped.run(&mut cycle_core, 1_000_000).unwrap();
+        let mut event_core = SimCore::new(&m.ag, &p).unwrap();
+        let es = EventDriven.run(&mut event_core, 1_000_000).unwrap();
+
+        assert_eq!(cs.cycles, es.cycles, "cycle count");
+        assert_eq!(cs.fetched, es.fetched, "fetched");
+        assert_eq!(cs.fetch_stalls, es.fetch_stalls, "fetch stalls");
+        assert_eq!(cs.dep_stall_cycles, es.dep_stall_cycles, "dep stalls");
+        assert_eq!(
+            cs.structural_stall_cycles, es.structural_stall_cycles,
+            "structural stalls"
+        );
+        assert!(
+            event_core.steps_executed <= cycle_core.steps_executed,
+            "event backend stepped {} times vs {} cycles — dead heap \
+             entries caused spurious wake-up steps",
+            event_core.steps_executed,
+            cycle_core.steps_executed
+        );
+    }
+
+    /// On a long-stall workload the event backend must actually skip: far
+    /// fewer steps than simulated cycles, with identical reported numbers.
+    #[test]
+    fn event_backend_skips_stall_windows() {
+        let m = OmaConfig {
+            dmem: DataMem::Sram { latency: 60 },
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .unwrap();
+        let base = m.dmem_base();
+        let src = format!(
+            "movi #{base} => r10\n\
+             load [r10] => r1\n\
+             load [r10+4] => r2\n\
+             add r1, r2 => r3\n\
+             store r3 => [r10+8]\n\
+             halt"
+        );
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        let mut cycle_core = SimCore::new(&m.ag, &p).unwrap();
+        let cs = CycleStepped.run(&mut cycle_core, 1_000_000).unwrap();
+        let mut event_core = SimCore::new(&m.ag, &p).unwrap();
+        let es = EventDriven.run(&mut event_core, 1_000_000).unwrap();
+        assert_eq!(cs.cycles, es.cycles);
+        assert_eq!(cs.dep_stall_cycles, es.dep_stall_cycles);
+        assert!(
+            event_core.steps_executed < cs.cycles / 2,
+            "expected idle-cycle skipping: {} steps for {} cycles",
+            event_core.steps_executed,
+            cs.cycles
+        );
+    }
 
     #[test]
     fn kind_names_roundtrip() {

@@ -234,6 +234,40 @@ mod tests {
     }
 
     #[test]
+    fn utilization_counts_only_mac_capable_units() {
+        // Loads keep the MAU busy; the mac runs on fu0.  The reported
+        // utilization must be fu0's busy fraction alone — the MAU does not
+        // dilute it.
+        let m = OmaConfig::default().build().unwrap();
+        let base = m.dmem_base();
+        let src = format!(
+            "movi #{base} => r10\n\
+             load [r10] => r4\n\
+             load [r10+4] => r5\n\
+             mac r4, r5 => r6\n\
+             halt"
+        );
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        let mut e = Engine::new(&m.ag, &p).unwrap();
+        let stats = e.run(100_000).unwrap();
+        let fu0 = stats.fu_busy.iter().position(|(n, _)| n == "fu0").unwrap();
+        let mau = stats
+            .fu_busy
+            .iter()
+            .position(|(n, _)| n.starts_with("mau"))
+            .unwrap();
+        assert!(stats.fu_mac_capable[fu0], "fu0 processes mac");
+        assert!(!stats.fu_mac_capable[mau], "the MAU is not mac-capable");
+        assert!(stats.fu_busy[mau].1 > 0, "loads kept the MAU busy");
+        let want = stats.fu_busy[fu0].1 as f64 / stats.cycles as f64;
+        assert!(
+            (stats.mean_fu_utilization() - want).abs() < 1e-9,
+            "utilization {} must equal fu0 busy fraction {want}",
+            stats.mean_fu_utilization()
+        );
+    }
+
+    #[test]
     fn halt_drains_pipeline() {
         let (stats, ..) = run_oma("movi #1 => r0\nhalt");
         assert_eq!(stats.retired, 2, "instruction before halt still retires");

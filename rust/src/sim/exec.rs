@@ -7,12 +7,29 @@
 //! of every modeled workload; integer register traffic never touches
 //! memory in the paper's mappings except through loads/stores of data
 //! values, which we model in f32 like the Γ̈ datapath.
+//!
+//! ## Allocation discipline (the hot-loop contract)
+//!
+//! `execute` runs once per dynamic instruction per simulation, multiplied
+//! by hundreds of simulations per DSE sweep, so this module is built so
+//! the steady state allocates nothing:
+//!
+//! * [`MemImage`] is a paged flat store — 4 KiB pages in a dense page
+//!   table, with a hash-map fallback only for sparse outlier addresses —
+//!   so a word access is a shift + mask + array index, not a SipHash
+//!   probe.
+//! * [`RegState`] keeps scalars as untagged 64-bit words beside a dense
+//!   tag array; vector registers live in a stable arena.  Scalar reads
+//!   and writes never touch the heap or clone a `Value`.
+//! * [`execute_into`] fills a caller-owned [`Effects`] buffer (cleared,
+//!   capacity retained) and [`commit`] *moves* vector payloads into the
+//!   register file instead of cloning boxed slices.
 
 use std::collections::HashMap;
 
 use thiserror::Error;
 
-use crate::acadl_core::data::Value;
+use crate::acadl_core::data::{Value, ValueTag};
 use crate::acadl_core::graph::RegId;
 use crate::isa::instruction::{AddrRef, Instruction};
 use crate::isa::opcode::Opcode;
@@ -22,17 +39,242 @@ use crate::isa::GAMMA_TILE;
 pub enum ExecError {
     #[error("instruction {0} expects {1}")]
     Malformed(String, &'static str),
-    #[error("register %{0:?} holds no vector but a vector op needs one")]
-    NotVector(RegId),
 }
 
-/// Register state: dense values indexed by `RegId`.
-pub type RegState = Vec<Value>;
+// ---------------------------------------------------------- register file
 
-/// Word-addressed functional memory image (f32 payloads).
+/// Register state: a scalar fast path (dense tags + untagged 64-bit
+/// payload words) with arena-backed vector registers.
+///
+/// Scalar registers (`Int`/`F32`) live entirely in `tags[i]` + `bits[i]`;
+/// the ALU paths ([`execute_into`]) read and write them without matching
+/// on a [`Value`] or touching the heap.  Vector registers store an arena
+/// slot in `bits[i]`; overwriting a vector register *moves* the incoming
+/// boxed slice into the slot.  Slots orphaned by a scalar overwrite are
+/// recycled through a free list, so long runs never grow the arena.
+#[derive(Debug, Clone)]
+pub struct RegState {
+    tags: Vec<ValueTag>,
+    /// `Int`: the `i64` bits.  `F32`: `f32::to_bits` in the low word.
+    /// `Vec`: the arena slot index.
+    bits: Vec<u64>,
+    /// Vector-register payload arena.
+    vecs: Vec<Box<[f32]>>,
+    /// Arena slots orphaned by scalar overwrites, reused on the next
+    /// vector write.
+    free_vecs: Vec<u32>,
+}
+
+impl RegState {
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+
+    #[inline]
+    pub fn tag(&self, i: usize) -> ValueTag {
+        self.tags[i]
+    }
+
+    #[inline]
+    fn vec(&self, i: usize) -> &[f32] {
+        &self.vecs[self.bits[i] as usize]
+    }
+
+    /// Integer view with [`Value::as_int`] semantics (floats truncate,
+    /// vectors read as 0).
+    #[inline]
+    pub fn int(&self, i: usize) -> i64 {
+        match self.tags[i] {
+            ValueTag::Int => self.bits[i] as i64,
+            ValueTag::F32 => f32::from_bits(self.bits[i] as u32) as i64,
+            ValueTag::Vec => 0,
+        }
+    }
+
+    /// Float view with [`Value::as_f32`] semantics (ints convert, vectors
+    /// read their first lane).
+    #[inline]
+    pub fn f32(&self, i: usize) -> f32 {
+        match self.tags[i] {
+            ValueTag::Int => self.bits[i] as i64 as f32,
+            ValueTag::F32 => f32::from_bits(self.bits[i] as u32),
+            ValueTag::Vec => self.vec(i).first().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Lane view with [`Value::as_slice`] semantics (scalars are empty).
+    #[inline]
+    pub fn slice(&self, i: usize) -> &[f32] {
+        match self.tags[i] {
+            ValueTag::Vec => self.vec(i),
+            _ => &[],
+        }
+    }
+
+    /// Lane count of a vector register, `None` for scalars.
+    #[inline]
+    pub fn lanes(&self, i: usize) -> Option<usize> {
+        match self.tags[i] {
+            ValueTag::Vec => Some(self.vec(i).len()),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    fn release_vec_slot(&mut self, i: usize) {
+        if self.tags[i] == ValueTag::Vec {
+            self.free_vecs.push(self.bits[i] as u32);
+        }
+    }
+
+    #[inline]
+    pub fn set_int(&mut self, i: usize, v: i64) {
+        self.release_vec_slot(i);
+        self.tags[i] = ValueTag::Int;
+        self.bits[i] = v as u64;
+    }
+
+    #[inline]
+    pub fn set_f32(&mut self, i: usize, v: f32) {
+        self.release_vec_slot(i);
+        self.tags[i] = ValueTag::F32;
+        self.bits[i] = u64::from(v.to_bits());
+    }
+
+    /// Move a boxed lane payload into register `i` (no lane copy when the
+    /// register already holds a vector: the arena slot is replaced).
+    pub fn set_vec(&mut self, i: usize, v: Box<[f32]>) {
+        if self.tags[i] == ValueTag::Vec {
+            self.vecs[self.bits[i] as usize] = v;
+            return;
+        }
+        let slot = match self.free_vecs.pop() {
+            Some(s) => {
+                self.vecs[s as usize] = v;
+                s
+            }
+            None => {
+                self.vecs.push(v);
+                (self.vecs.len() - 1) as u32
+            }
+        };
+        self.tags[i] = ValueTag::Vec;
+        self.bits[i] = u64::from(slot);
+    }
+
+    /// Move a [`Value`] into register `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: Value) {
+        match v {
+            Value::Int(x) => self.set_int(i, x),
+            Value::F32(x) => self.set_f32(i, x),
+            Value::Vec(b) => self.set_vec(i, b),
+        }
+    }
+
+    /// Snapshot register `i` as a [`Value`] (clones vector lanes — result
+    /// extraction and `mov` capture, not the scalar hot path).
+    pub fn get(&self, i: usize) -> Value {
+        match self.tags[i] {
+            ValueTag::Int => Value::Int(self.bits[i] as i64),
+            ValueTag::F32 => Value::F32(f32::from_bits(self.bits[i] as u32)),
+            ValueTag::Vec => Value::Vec(self.vec(i).into()),
+        }
+    }
+}
+
+impl FromIterator<Value> for RegState {
+    fn from_iter<T: IntoIterator<Item = Value>>(iter: T) -> Self {
+        let mut rs = RegState {
+            tags: Vec::new(),
+            bits: Vec::new(),
+            vecs: Vec::new(),
+            free_vecs: Vec::new(),
+        };
+        for v in iter {
+            let i = rs.tags.len();
+            rs.tags.push(ValueTag::Int);
+            rs.bits.push(0);
+            rs.set(i, v);
+        }
+        rs
+    }
+}
+
+impl PartialEq for RegState {
+    /// Logical per-register equality: arena slot layout is ignored, so two
+    /// runs that allocated vector slots in different orders still compare
+    /// equal.  Scalars keep `Value` semantics (`Int(5) != F32(5.0)`; f32
+    /// compares as a float, not by bits).
+    fn eq(&self, other: &Self) -> bool {
+        self.tags.len() == other.tags.len()
+            && (0..self.tags.len()).all(|i| match (self.tags[i], other.tags[i]) {
+                (ValueTag::Int, ValueTag::Int) => self.bits[i] == other.bits[i],
+                (ValueTag::F32, ValueTag::F32) => {
+                    f32::from_bits(self.bits[i] as u32) == f32::from_bits(other.bits[i] as u32)
+                }
+                (ValueTag::Vec, ValueTag::Vec) => self.vec(i) == other.vec(i),
+                _ => false,
+            })
+    }
+}
+
+// ---------------------------------------------------------- memory image
+
+/// Words per page: 1024 × f32 = 4 KiB.
+const PAGE_WORDS_LOG2: u32 = 10;
+const PAGE_WORDS: usize = 1 << PAGE_WORDS_LOG2;
+/// Pages below this index live in the dense page table (grown on demand);
+/// higher addresses fall back to the word-keyed hash map.  1 << 15 pages
+/// covers the first 128 MiB of the address space — every zoo model's
+/// storage ranges fit — while a stray huge address costs one hash probe
+/// instead of a giant table.
+const DENSE_PAGES: usize = 1 << 15;
+
+#[derive(Debug, Clone)]
+struct Page {
+    words: Box<[f32; PAGE_WORDS]>,
+    /// One bit per word: ever written?  Keeps [`MemImage::len`] (distinct
+    /// resident words) exact, matching the old hash-map semantics.
+    occupied: Box<[u64; PAGE_WORDS / 64]>,
+}
+
+impl Page {
+    fn new() -> Self {
+        Page {
+            words: Box::new([0.0; PAGE_WORDS]),
+            occupied: Box::new([0; PAGE_WORDS / 64]),
+        }
+    }
+
+    /// Store word `w`; returns whether it was newly occupied.
+    #[inline]
+    fn set(&mut self, w: usize, v: f32) -> bool {
+        self.words[w] = v;
+        let (i, m) = (w >> 6, 1u64 << (w & 63));
+        let newly = self.occupied[i] & m == 0;
+        self.occupied[i] |= m;
+        newly
+    }
+}
+
+/// Word-addressed functional memory image (f32 payloads): a paged flat
+/// store.  Reads and writes mask to the 4-byte word (`addr & !3`); unknown
+/// words read as zero.  The dense page table serves the model zoo's
+/// storage ranges; `outliers` catches sparse far addresses.
 #[derive(Debug, Clone, Default)]
 pub struct MemImage {
-    words: HashMap<u64, f32>,
+    /// Dense page table over the low address range, lazily grown; `None`
+    /// pages were never written.
+    pages: Vec<Option<Page>>,
+    /// Word-index-keyed fallback for addresses past the dense range.
+    outliers: HashMap<u64, f32>,
+    /// Distinct words ever written.
+    resident: usize,
     pub reads: u64,
     pub writes: u64,
 }
@@ -45,24 +287,56 @@ impl MemImage {
     #[inline]
     pub fn read(&mut self, addr: u64) -> f32 {
         self.reads += 1;
-        self.words.get(&(addr & !3)).copied().unwrap_or(0.0)
+        self.peek(addr)
     }
 
     #[inline]
     pub fn peek(&self, addr: u64) -> f32 {
-        self.words.get(&(addr & !3)).copied().unwrap_or(0.0)
+        let w = (addr & !3) >> 2;
+        let page = (w >> PAGE_WORDS_LOG2) as usize;
+        if page < DENSE_PAGES {
+            match self.pages.get(page) {
+                Some(Some(p)) => p.words[w as usize & (PAGE_WORDS - 1)],
+                _ => 0.0,
+            }
+        } else {
+            self.outliers.get(&w).copied().unwrap_or(0.0)
+        }
     }
 
     #[inline]
     pub fn write(&mut self, addr: u64, v: f32) {
         self.writes += 1;
-        self.words.insert(addr & !3, v);
+        self.poke(addr, v);
+    }
+
+    /// Raw store without touching the write counter (bulk workload setup).
+    fn poke(&mut self, addr: u64, v: f32) {
+        let w = (addr & !3) >> 2;
+        let page = (w >> PAGE_WORDS_LOG2) as usize;
+        if page < DENSE_PAGES {
+            if page >= self.pages.len() {
+                self.pages.resize_with(page + 1, || None);
+            }
+            let p = self.pages[page].get_or_insert_with(Page::new);
+            if p.set(w as usize & (PAGE_WORDS - 1), v) {
+                self.resident += 1;
+            }
+        } else if self.outliers.insert(w, v).is_none() {
+            self.resident += 1;
+        }
     }
 
     /// Bulk-load a row-major f32 slice at `base` (workload setup).
+    ///
+    /// `base` is expected word-aligned (every codegen layout emits 4-byte
+    /// aligned bases).  An unaligned base masks down to its word — the old
+    /// hash-map store instead wrote unmasked keys that reads could never
+    /// see, so this path is saner but only equivalent for aligned bases.
     pub fn load_f32(&mut self, base: u64, data: &[f32]) {
+        debug_assert_eq!(base & 3, 0, "bulk loads use word-aligned bases");
         for (i, v) in data.iter().enumerate() {
-            self.words.insert(base + 4 * i as u64, *v);
+            self.poke(base + 4 * i as u64, *v);
         }
     }
 
@@ -73,18 +347,21 @@ impl MemImage {
             .collect()
     }
 
+    /// Distinct words ever written.
     pub fn len(&self) -> usize {
-        self.words.len()
+        self.resident
     }
 
     pub fn is_empty(&self) -> bool {
-        self.words.is_empty()
+        self.resident == 0
     }
 }
 
+// ---------------------------------------------------------------- effects
+
 /// The computed effects of one instruction: applied later by the caller
 /// (at completion in the timed engine; immediately in the ISS).
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 pub struct Effects {
     pub reg_writes: Vec<(RegId, Value)>,
     pub mem_writes: Vec<(u64, f32)>,
@@ -97,47 +374,29 @@ pub struct Effects {
     pub mem_stores: Vec<(u64, u32)>,
 }
 
+impl Effects {
+    /// Reset for reuse, keeping every buffer's capacity (the simulation
+    /// kernel and the ISS pool one `Effects` across instructions).
+    pub fn clear(&mut self) {
+        self.reg_writes.clear();
+        self.mem_writes.clear();
+        self.branch = None;
+        self.halt = false;
+        self.mem_reads.clear();
+        self.mem_stores.clear();
+    }
+}
+
 /// Resolve an address operand against current register values.
 #[inline]
 pub fn resolve_addr(a: &AddrRef, regs: &RegState) -> u64 {
     match a {
         AddrRef::Direct(x) => *x,
-        AddrRef::Indirect { base, offset } => {
-            (regs[base.idx()].as_int() + offset) as u64
-        }
+        AddrRef::Indirect { base, offset } => (regs.int(base.idx()) + offset) as u64,
     }
 }
 
-#[inline]
-fn lanes_of(v: &Value) -> Option<usize> {
-    match v {
-        Value::Vec(x) => Some(x.len()),
-        _ => None,
-    }
-}
-
-fn binop_scalar(op: Opcode, a: &Value, b: &Value) -> Value {
-    match (a, b) {
-        (Value::Int(x), Value::Int(y)) => Value::Int(match op {
-            Opcode::Add | Opcode::Addi => x.wrapping_add(*y),
-            Opcode::Sub | Opcode::Subi => x.wrapping_sub(*y),
-            Opcode::Mul | Opcode::Muli => x.wrapping_mul(*y),
-            _ => unreachable!(),
-        }),
-        _ => {
-            let (x, y) = (a.as_f32(), b.as_f32());
-            Value::F32(match op {
-                Opcode::Add | Opcode::Addi => x + y,
-                Opcode::Sub | Opcode::Subi => x - y,
-                Opcode::Mul | Opcode::Muli => x * y,
-                _ => unreachable!(),
-            })
-        }
-    }
-}
-
-fn lanewise(op: Opcode, a: &Value, b: &Value) -> Result<Value, ExecError> {
-    let (av, bv) = (a.as_slice(), b.as_slice());
+fn lanewise(op: Opcode, av: &[f32], bv: &[f32]) -> Value {
     let n = av.len().max(bv.len());
     let get = |s: &[f32], i: usize| s.get(i).copied().unwrap_or(0.0);
     let out: Vec<f32> = (0..n)
@@ -151,50 +410,84 @@ fn lanewise(op: Opcode, a: &Value, b: &Value) -> Result<Value, ExecError> {
             }
         })
         .collect();
-    Ok(Value::Vec(out.into_boxed_slice()))
+    Value::Vec(out.into_boxed_slice())
 }
 
-/// Execute one instruction against `(regs, mem)` state.  `self_addr` is the
-/// instruction's byte address (relative branch bases).  Pure apart from the
-/// memory read counters.
-pub fn execute(
+/// Execute one instruction against `(regs, mem)` state into a caller-owned
+/// effects buffer (cleared first; capacities are reused).  `self_addr` is
+/// the instruction's byte address (relative branch bases).  Pure apart
+/// from the memory read counters.
+pub fn execute_into(
     ins: &Instruction,
     self_addr: u64,
     regs: &RegState,
     mem: &mut MemImage,
-) -> Result<Effects, ExecError> {
-    let mut fx = Effects::default();
-    let rd = |i: usize| -> &Value { &regs[ins.reads[i].idx()] };
+    fx: &mut Effects,
+) -> Result<(), ExecError> {
+    fx.clear();
+    // Register index of source operand `i`.
+    let r = |i: usize| -> usize { ins.reads[i].idx() };
     match ins.op {
         Opcode::Nop => {}
         Opcode::Halt => fx.halt = true,
         Opcode::Mov => {
-            fx.reg_writes.push((ins.writes[0], rd(0).clone()));
+            fx.reg_writes.push((ins.writes[0], regs.get(r(0))));
         }
         Opcode::Movi => {
             fx.reg_writes.push((ins.writes[0], Value::Int(ins.imms[0])));
         }
         Opcode::Add | Opcode::Sub | Opcode::Mul => {
-            fx.reg_writes
-                .push((ins.writes[0], binop_scalar(ins.op, rd(0), rd(1))));
+            let (a, b) = (r(0), r(1));
+            let v = if regs.tag(a) == ValueTag::Int && regs.tag(b) == ValueTag::Int {
+                let (x, y) = (regs.int(a), regs.int(b));
+                Value::Int(match ins.op {
+                    Opcode::Add => x.wrapping_add(y),
+                    Opcode::Sub => x.wrapping_sub(y),
+                    _ => x.wrapping_mul(y),
+                })
+            } else {
+                let (x, y) = (regs.f32(a), regs.f32(b));
+                Value::F32(match ins.op {
+                    Opcode::Add => x + y,
+                    Opcode::Sub => x - y,
+                    _ => x * y,
+                })
+            };
+            fx.reg_writes.push((ins.writes[0], v));
         }
         Opcode::Addi | Opcode::Subi | Opcode::Muli => {
-            fx.reg_writes.push((
-                ins.writes[0],
-                binop_scalar(ins.op, rd(0), &Value::Int(ins.imms[0])),
-            ));
+            let a = r(0);
+            let imm = ins.imms[0];
+            let v = if regs.tag(a) == ValueTag::Int {
+                let x = regs.int(a);
+                Value::Int(match ins.op {
+                    Opcode::Addi => x.wrapping_add(imm),
+                    Opcode::Subi => x.wrapping_sub(imm),
+                    _ => x.wrapping_mul(imm),
+                })
+            } else {
+                let (x, y) = (regs.f32(a), imm as f32);
+                Value::F32(match ins.op {
+                    Opcode::Addi => x + y,
+                    Opcode::Subi => x - y,
+                    _ => x * y,
+                })
+            };
+            fx.reg_writes.push((ins.writes[0], v));
         }
         Opcode::Mac => {
             // acc' = acc + a*b; reads = [a, b, acc].
             if ins.reads.len() < 3 {
                 return Err(ExecError::Malformed(ins.to_string(), "3 source registers"));
             }
-            let (a, b, acc) = (rd(0), rd(1), rd(2));
-            let v = match (a, b, acc) {
-                (Value::Int(x), Value::Int(y), Value::Int(z)) => {
-                    Value::Int(z.wrapping_add(x.wrapping_mul(*y)))
-                }
-                _ => Value::F32(acc.as_f32() + a.as_f32() * b.as_f32()),
+            let (a, b, acc) = (r(0), r(1), r(2));
+            let all_int = regs.tag(a) == ValueTag::Int
+                && regs.tag(b) == ValueTag::Int
+                && regs.tag(acc) == ValueTag::Int;
+            let v = if all_int {
+                Value::Int(regs.int(acc).wrapping_add(regs.int(a).wrapping_mul(regs.int(b))))
+            } else {
+                Value::F32(regs.f32(acc) + regs.f32(a) * regs.f32(b))
             };
             fx.reg_writes.push((ins.writes[0], v));
         }
@@ -204,23 +497,23 @@ pub fn execute(
             if ins.reads.len() < 3 || ins.writes.is_empty() {
                 return Err(ExecError::Malformed(ins.to_string(), "3 reads / 1+ writes"));
             }
-            let (a, b, acc) = (rd(0).clone(), rd(1).clone(), rd(2));
+            let (a, b, acc) = (r(0), r(1), r(2));
             fx.reg_writes
-                .push((ins.writes[0], Value::F32(acc.as_f32() + a.as_f32() * b.as_f32())));
+                .push((ins.writes[0], Value::F32(regs.f32(acc) + regs.f32(a) * regs.f32(b))));
             let flags = ins.imms.first().copied().unwrap_or(0);
             let mut w = 1;
             if flags & 1 != 0 {
-                fx.reg_writes.push((ins.writes[w], a));
+                fx.reg_writes.push((ins.writes[w], regs.get(a)));
                 w += 1;
             }
             if flags & 2 != 0 {
-                fx.reg_writes.push((ins.writes[w], b));
+                fx.reg_writes.push((ins.writes[w], regs.get(b)));
             }
         }
         Opcode::Load => {
             let addr = resolve_addr(&ins.read_addrs[0], regs);
             let dest = ins.writes[0];
-            match lanes_of(&regs[dest.idx()]) {
+            match regs.lanes(dest.idx()) {
                 Some(n) => {
                     let v: Vec<f32> = (0..n).map(|i| mem.read(addr + 4 * i as u64)).collect();
                     fx.mem_reads.push((addr, 4 * n as u32));
@@ -237,24 +530,25 @@ pub fn execute(
         }
         Opcode::Store => {
             let addr = resolve_addr(&ins.write_addrs[0], regs);
-            let src = rd(0);
-            match src {
-                Value::Vec(v) => {
+            let src = r(0);
+            match regs.tag(src) {
+                ValueTag::Vec => {
+                    let v = regs.slice(src);
                     for (i, x) in v.iter().enumerate() {
                         fx.mem_writes.push((addr + 4 * i as u64, *x));
                     }
                     fx.mem_stores.push((addr, 4 * v.len() as u32));
                 }
-                s => {
-                    fx.mem_writes.push((addr, s.as_f32()));
+                _ => {
+                    fx.mem_writes.push((addr, regs.f32(src)));
                     fx.mem_stores.push((addr, 4));
                 }
             }
         }
         Opcode::Beqi | Opcode::Bnei => {
             let taken = match ins.op {
-                Opcode::Beqi => rd(0).as_int() == rd(1).as_int(),
-                _ => rd(0).as_int() != rd(1).as_int(),
+                Opcode::Beqi => regs.int(r(0)) == regs.int(r(1)),
+                _ => regs.int(r(0)) != regs.int(r(1)),
             };
             if taken {
                 fx.branch = Some((self_addr as i64 + ins.imms[0]) as u64);
@@ -265,10 +559,10 @@ pub fn execute(
         }
         Opcode::VAdd | Opcode::VMul | Opcode::VMaxp => {
             fx.reg_writes
-                .push((ins.writes[0], lanewise(ins.op, rd(0), rd(1))?));
+                .push((ins.writes[0], lanewise(ins.op, regs.slice(r(0)), regs.slice(r(1)))));
         }
         Opcode::VRelu => {
-            let v: Vec<f32> = rd(0).as_slice().iter().map(|x| x.max(0.0)).collect();
+            let v: Vec<f32> = regs.slice(r(0)).iter().map(|x| x.max(0.0)).collect();
             fx.reg_writes
                 .push((ins.writes[0], Value::Vec(v.into_boxed_slice())));
         }
@@ -283,7 +577,7 @@ pub fn execute(
                 ));
             }
             let relu = ins.imms.first().copied().unwrap_or(0) == 1;
-            let row = |r: usize| -> &[f32] { regs[ins.reads[r].idx()].as_slice() };
+            let row = |i: usize| -> &[f32] { regs.slice(ins.reads[i].idx()) };
             for i in 0..t {
                 let mut out = vec![0.0f32; t];
                 for (j, o) in out.iter_mut().enumerate() {
@@ -300,16 +594,42 @@ pub fn execute(
             }
         }
     }
+    Ok(())
+}
+
+/// Execute into a fresh [`Effects`] (one-shot callers; the hot paths use
+/// [`execute_into`] with a pooled buffer).
+pub fn execute(
+    ins: &Instruction,
+    self_addr: u64,
+    regs: &RegState,
+    mem: &mut MemImage,
+) -> Result<Effects, ExecError> {
+    let mut fx = Effects::default();
+    execute_into(ins, self_addr, regs, mem, &mut fx)?;
     Ok(fx)
 }
 
-/// Apply computed effects to register state + memory.
+/// Apply computed effects to register state + memory, leaving `fx` intact
+/// (clones vector payloads — estimator paths that re-read the effects).
 pub fn apply(fx: &Effects, regs: &mut RegState, mem: &mut MemImage) {
     for (r, v) in &fx.reg_writes {
-        regs[r.idx()] = v.clone();
+        regs.set(r.idx(), v.clone());
     }
     for (a, v) in &fx.mem_writes {
         mem.write(*a, *v);
+    }
+}
+
+/// Commit computed effects, draining the write lists and *moving* vector
+/// payloads into the register file (no lane clone).  `branch`/`halt` stay
+/// readable afterwards.
+pub fn commit(fx: &mut Effects, regs: &mut RegState, mem: &mut MemImage) {
+    for (r, v) in fx.reg_writes.drain(..) {
+        regs.set(r.idx(), v);
+    }
+    for (a, v) in fx.mem_writes.drain(..) {
+        mem.write(a, v);
     }
 }
 
@@ -318,21 +638,21 @@ mod tests {
     use super::*;
 
     fn regs(n: usize) -> RegState {
-        vec![Value::Int(0); n]
+        (0..n).map(|_| Value::Int(0)).collect()
     }
 
     #[test]
     fn scalar_alu() {
         let mut mem = MemImage::new();
         let mut rs = regs(4);
-        rs[0] = Value::Int(5);
-        rs[1] = Value::Int(3);
+        rs.set(0, Value::Int(5));
+        rs.set(1, Value::Int(3));
         let add = Instruction::new(Opcode::Add)
             .with_reads(vec![RegId(0), RegId(1)])
             .with_writes(vec![RegId(2)]);
         let fx = execute(&add, 0, &rs, &mut mem).unwrap();
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[2], Value::Int(8));
+        assert_eq!(rs.get(2), Value::Int(8));
 
         let subi = Instruction::new(Opcode::Subi)
             .with_reads(vec![RegId(2)])
@@ -340,30 +660,51 @@ mod tests {
             .with_writes(vec![RegId(3)]);
         let fx = execute(&subi, 0, &rs, &mut mem).unwrap();
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[3], Value::Int(-2));
+        assert_eq!(rs.get(3), Value::Int(-2));
+    }
+
+    #[test]
+    fn scalar_alu_mixed_types_fall_back_to_f32() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(3);
+        rs.set(0, Value::Int(2));
+        rs.set(1, Value::F32(1.5));
+        let add = Instruction::new(Opcode::Add)
+            .with_reads(vec![RegId(0), RegId(1)])
+            .with_writes(vec![RegId(2)]);
+        let fx = execute(&add, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs.get(2), Value::F32(3.5));
     }
 
     #[test]
     fn mac_int_and_float() {
         let mut mem = MemImage::new();
         let mut rs = regs(4);
-        rs[0] = Value::F32(2.0);
-        rs[1] = Value::F32(3.0);
-        rs[2] = Value::F32(10.0);
+        rs.set(0, Value::F32(2.0));
+        rs.set(1, Value::F32(3.0));
+        rs.set(2, Value::F32(10.0));
         let mac = Instruction::new(Opcode::Mac)
             .with_reads(vec![RegId(0), RegId(1), RegId(2)])
             .with_writes(vec![RegId(2)]);
         let fx = execute(&mac, 0, &rs, &mut mem).unwrap();
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[2], Value::F32(16.0));
+        assert_eq!(rs.get(2), Value::F32(16.0));
+
+        rs.set(0, Value::Int(2));
+        rs.set(1, Value::Int(3));
+        rs.set(2, Value::Int(10));
+        let fx = execute(&mac, 0, &rs, &mut mem).unwrap();
+        apply(&fx, &mut rs, &mut mem);
+        assert_eq!(rs.get(2), Value::Int(16), "all-int mac stays integer");
     }
 
     #[test]
     fn load_store_scalar_roundtrip() {
         let mut mem = MemImage::new();
         let mut rs = regs(4);
-        rs[1] = Value::F32(7.5);
-        rs[3] = Value::Int(0x100);
+        rs.set(1, Value::F32(7.5));
+        rs.set(3, Value::Int(0x100));
         let st = Instruction::new(Opcode::Store)
             .with_reads(vec![RegId(1)])
             .with_write_addrs(vec![AddrRef::Indirect {
@@ -380,7 +721,7 @@ mod tests {
             .with_writes(vec![RegId(0)]);
         let fx = execute(&ld, 0, &rs, &mut mem).unwrap();
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[0], Value::F32(7.5));
+        assert_eq!(rs.get(0), Value::F32(7.5));
     }
 
     #[test]
@@ -388,28 +729,28 @@ mod tests {
         let mut mem = MemImage::new();
         mem.load_f32(0x200, &[1.0, 2.0, 3.0, 4.0]);
         let mut rs = regs(2);
-        rs[0] = Value::zero_vec(4);
+        rs.set(0, Value::zero_vec(4));
         let ld = Instruction::new(Opcode::Load)
             .with_read_addrs(vec![AddrRef::Direct(0x200)])
             .with_writes(vec![RegId(0)]);
         let fx = execute(&ld, 0, &rs, &mut mem).unwrap();
         assert_eq!(fx.mem_reads, vec![(0x200, 16)]);
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[0].as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(rs.slice(0), &[1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]
     fn branches() {
         let mut mem = MemImage::new();
         let mut rs = regs(2);
-        rs[0] = Value::Int(0);
-        rs[1] = Value::Int(0);
+        rs.set(0, Value::Int(0));
+        rs.set(1, Value::Int(0));
         let beq = Instruction::new(Opcode::Beqi)
             .with_reads(vec![RegId(0), RegId(1)])
             .with_imms(vec![-28]);
         let fx = execute(&beq, 100, &rs, &mut mem).unwrap();
         assert_eq!(fx.branch, Some(72));
-        rs[0] = Value::Int(1);
+        rs.set(0, Value::Int(1));
         let fx = execute(&beq, 100, &rs, &mut mem).unwrap();
         assert_eq!(fx.branch, None, "not taken");
         let j = Instruction::new(Opcode::Jumpi).with_imms(vec![8]);
@@ -424,10 +765,10 @@ mod tests {
         // A = row-index matrix, B = identity → C = A.
         for i in 0..t {
             let a: Vec<f32> = (0..t).map(|k| (i * t + k) as f32).collect();
-            rs[i] = Value::Vec(a.into_boxed_slice());
+            rs.set(i, Value::Vec(a.into_boxed_slice()));
             let mut b = vec![0.0f32; t];
             b[i] = 1.0;
-            rs[t + i] = Value::Vec(b.into_boxed_slice());
+            rs.set(t + i, Value::Vec(b.into_boxed_slice()));
         }
         let g = Instruction::new(Opcode::Gemm)
             .with_reads((0..2 * t as u32).map(RegId).collect())
@@ -437,7 +778,7 @@ mod tests {
         apply(&fx, &mut rs, &mut mem);
         for i in 0..t {
             let want: Vec<f32> = (0..t).map(|k| (i * t + k) as f32).collect();
-            assert_eq!(rs[2 * t + i].as_slice(), &want[..]);
+            assert_eq!(rs.slice(2 * t + i), &want[..]);
         }
     }
 
@@ -447,10 +788,10 @@ mod tests {
         let mut mem = MemImage::new();
         let mut rs: RegState = (0..3 * t).map(|_| Value::zero_vec(t)).collect();
         for i in 0..t {
-            rs[i] = Value::Vec(vec![-1.0; t].into_boxed_slice());
+            rs.set(i, Value::Vec(vec![-1.0; t].into_boxed_slice()));
             let mut b = vec![0.0f32; t];
             b[i] = 1.0;
-            rs[t + i] = Value::Vec(b.into_boxed_slice());
+            rs.set(t + i, Value::Vec(b.into_boxed_slice()));
         }
         let mut g = Instruction::new(Opcode::Gemm)
             .with_reads((0..2 * t as u32).map(RegId).collect())
@@ -473,17 +814,186 @@ mod tests {
     fn macfwd_forwards_operands() {
         let mut mem = MemImage::new();
         let mut rs = regs(6);
-        rs[0] = Value::F32(2.0); // a
-        rs[1] = Value::F32(4.0); // b
-        rs[2] = Value::F32(1.0); // acc
+        rs.set(0, Value::F32(2.0)); // a
+        rs.set(1, Value::F32(4.0)); // b
+        rs.set(2, Value::F32(1.0)); // acc
         let m = Instruction::new(Opcode::MacFwd)
             .with_reads(vec![RegId(0), RegId(1), RegId(2)])
             .with_writes(vec![RegId(2), RegId(4), RegId(5)])
             .with_imms(vec![3]);
         let fx = execute(&m, 0, &rs, &mut mem).unwrap();
         apply(&fx, &mut rs, &mut mem);
-        assert_eq!(rs[2], Value::F32(9.0));
-        assert_eq!(rs[4], Value::F32(2.0), "a forwarded");
-        assert_eq!(rs[5], Value::F32(4.0), "b forwarded");
+        assert_eq!(rs.get(2), Value::F32(9.0));
+        assert_eq!(rs.get(4), Value::F32(2.0), "a forwarded");
+        assert_eq!(rs.get(5), Value::F32(4.0), "b forwarded");
+    }
+
+    // ------------------------------------------------ malformed operands
+
+    #[test]
+    fn malformed_mac_reports_exec_error() {
+        let mut mem = MemImage::new();
+        let rs = regs(4);
+        let mac = Instruction::new(Opcode::Mac)
+            .with_reads(vec![RegId(0), RegId(1)]) // needs 3
+            .with_writes(vec![RegId(2)]);
+        assert!(matches!(
+            execute(&mac, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, "3 source registers"))
+        ));
+    }
+
+    #[test]
+    fn malformed_macfwd_reports_exec_error() {
+        let mut mem = MemImage::new();
+        let rs = regs(4);
+        let short_reads = Instruction::new(Opcode::MacFwd)
+            .with_reads(vec![RegId(0), RegId(1)])
+            .with_writes(vec![RegId(2)]);
+        assert!(matches!(
+            execute(&short_reads, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
+        let no_writes = Instruction::new(Opcode::MacFwd)
+            .with_reads(vec![RegId(0), RegId(1), RegId(2)]);
+        assert!(matches!(
+            execute(&no_writes, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
+    }
+
+    #[test]
+    fn malformed_gemm_reports_exec_error() {
+        let t = GAMMA_TILE;
+        let mut mem = MemImage::new();
+        let rs = regs(3 * t);
+        let wrong_reads = Instruction::new(Opcode::Gemm)
+            .with_reads((0..t as u32).map(RegId).collect()) // needs 2t
+            .with_writes((0..t as u32).map(RegId).collect());
+        assert!(matches!(
+            execute(&wrong_reads, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
+        let wrong_writes = Instruction::new(Opcode::Gemm)
+            .with_reads((0..2 * t as u32).map(RegId).collect())
+            .with_writes((0..(t as u32 - 1)).map(RegId).collect()); // needs t
+        assert!(matches!(
+            execute(&wrong_writes, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
+    }
+
+    // ----------------------------------------------------- effects pool
+
+    #[test]
+    fn execute_into_reuses_buffers_and_commit_moves() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(3);
+        rs.set(0, Value::Int(1));
+        rs.set(1, Value::Int(2));
+        let add = Instruction::new(Opcode::Add)
+            .with_reads(vec![RegId(0), RegId(1)])
+            .with_writes(vec![RegId(2)]);
+        let mut fx = Effects::default();
+        execute_into(&add, 0, &rs, &mut mem, &mut fx).unwrap();
+        commit(&mut fx, &mut rs, &mut mem);
+        assert_eq!(rs.get(2), Value::Int(3));
+        assert!(fx.reg_writes.is_empty(), "commit drains the write list");
+        // Second use of the same buffer sees a clean slate.
+        let halt = Instruction::new(Opcode::Halt);
+        execute_into(&halt, 0, &rs, &mut mem, &mut fx).unwrap();
+        assert!(fx.halt && fx.reg_writes.is_empty() && fx.branch.is_none());
+    }
+
+    // ------------------------------------------------------ paged memory
+
+    #[test]
+    fn mem_defaults_masking_and_counters() {
+        let mut mem = MemImage::new();
+        assert_eq!(mem.peek(0x4000), 0.0, "unwritten words read zero");
+        mem.write(0x103, 2.5); // masks to 0x100
+        assert_eq!(mem.peek(0x100), 2.5);
+        assert_eq!(mem.read(0x101), 2.5, "reads mask too");
+        assert_eq!((mem.reads, mem.writes), (1, 1));
+        assert_eq!(mem.len(), 1);
+        mem.write(0x100, 3.5); // overwrite: resident count unchanged
+        assert_eq!(mem.len(), 1);
+        assert_eq!(mem.peek(0x100), 3.5);
+    }
+
+    #[test]
+    fn mem_page_boundary_roundtrip() {
+        let mut mem = MemImage::new();
+        // Straddle the 4 KiB page boundary at 0x1000.
+        let data: Vec<f32> = (0..8).map(|i| i as f32 + 0.5).collect();
+        mem.load_f32(0x1000 - 16, &data);
+        assert_eq!(mem.dump_f32(0x1000 - 16, 8), data);
+        assert_eq!(mem.len(), 8);
+        assert_eq!(mem.writes, 0, "bulk load does not count as writes");
+    }
+
+    #[test]
+    fn mem_outlier_addresses_fall_back() {
+        let mut mem = MemImage::new();
+        let far = 1u64 << 40; // far past the dense page range
+        mem.write(far, 9.0);
+        assert_eq!(mem.peek(far), 9.0);
+        assert_eq!(mem.peek(far + 4), 0.0);
+        assert_eq!(mem.len(), 1);
+    }
+
+    // ----------------------------------------------------- register file
+
+    #[test]
+    fn regstate_roundtrip_and_accessors() {
+        let mut rs = regs(3);
+        rs.set(0, Value::Int(7));
+        rs.set(1, Value::F32(2.5));
+        rs.set(2, Value::Vec(vec![1.0, 2.0].into_boxed_slice()));
+        assert_eq!(rs.int(0), 7);
+        assert_eq!(rs.f32(0), 7.0);
+        assert_eq!(rs.f32(1), 2.5);
+        assert_eq!(rs.int(1), 2, "float truncates like Value::as_int");
+        assert_eq!(rs.f32(2), 1.0, "vector reads first lane");
+        assert_eq!(rs.int(2), 0, "vector reads 0 as int");
+        assert_eq!(rs.slice(2), &[1.0, 2.0]);
+        assert_eq!(rs.slice(0), &[] as &[f32]);
+        assert_eq!(rs.lanes(2), Some(2));
+        assert_eq!(rs.lanes(0), None);
+        assert_eq!(rs.get(2), Value::Vec(vec![1.0, 2.0].into_boxed_slice()));
+    }
+
+    #[test]
+    fn regstate_equality_ignores_arena_layout() {
+        let mut a = regs(2);
+        let mut b = regs(2);
+        // Fill vector slots in opposite orders: arena indices differ.
+        a.set(0, Value::Vec(vec![1.0].into_boxed_slice()));
+        a.set(1, Value::Vec(vec![2.0].into_boxed_slice()));
+        b.set(1, Value::Vec(vec![2.0].into_boxed_slice()));
+        b.set(0, Value::Vec(vec![1.0].into_boxed_slice()));
+        assert_eq!(a, b);
+        b.set(0, Value::Vec(vec![9.0].into_boxed_slice()));
+        assert_ne!(a, b);
+        // Scalars keep Value semantics: Int(5) != F32(5.0).
+        let mut c = regs(1);
+        let mut d = regs(1);
+        c.set(0, Value::Int(5));
+        d.set(0, Value::F32(5.0));
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn regstate_recycles_vector_slots() {
+        let mut rs = regs(1);
+        // Flip the register between vector and scalar repeatedly; the
+        // arena must recycle the orphaned slot instead of growing.
+        for i in 0..64 {
+            rs.set(0, Value::Vec(vec![i as f32; 4].into_boxed_slice()));
+            rs.set(0, Value::Int(i));
+        }
+        rs.set(0, Value::Vec(vec![42.0; 4].into_boxed_slice()));
+        assert_eq!(rs.vecs.len(), 1, "orphaned arena slots are reused");
+        assert_eq!(rs.slice(0), &[42.0; 4]);
     }
 }

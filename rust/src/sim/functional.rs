@@ -69,15 +69,15 @@ impl FunctionalSim {
         let id = ag
             .reg_id(name)
             .ok_or_else(|| FuncError::UnknownReg(name.to_string()))?;
-        self.regs[id.idx()] = v;
+        self.regs.set(id.idx(), v);
         Ok(())
     }
 
-    pub fn get_reg(&self, ag: &Ag, name: &str) -> Result<&Value, FuncError> {
+    pub fn get_reg(&self, ag: &Ag, name: &str) -> Result<Value, FuncError> {
         let id = ag
             .reg_id(name)
             .ok_or_else(|| FuncError::UnknownReg(name.to_string()))?;
-        Ok(&self.regs[id.idx()])
+        Ok(self.regs.get(id.idx()))
     }
 
     /// Run `program` to `halt` (or fall off the end), program order.
@@ -85,6 +85,9 @@ impl FunctionalSim {
         let mut pc = program.base;
         let mut steps = 0u64;
         let (r0, w0) = (self.mem.reads, self.mem.writes);
+        // One pooled effects buffer for the whole run: cleared per
+        // instruction, capacities retained, vector payloads moved.
+        let mut fx = exec::Effects::default();
         loop {
             let Some(idx) = program.index_of(pc) else {
                 if pc == program.end_addr() {
@@ -93,10 +96,10 @@ impl FunctionalSim {
                 return Err(FuncError::PcOutOfRange(pc));
             };
             let ins = &program.instrs[idx];
-            let fx = exec::execute(ins, pc, &self.regs, &mut self.mem)?;
-            exec::apply(&fx, &mut self.regs, &mut self.mem);
+            exec::execute_into(ins, pc, &self.regs, &mut self.mem, &mut fx)?;
+            exec::commit(&mut fx, &mut self.regs, &mut self.mem);
             for z in &self.zero_regs {
-                self.regs[z.idx()] = Value::Int(0);
+                self.regs.set_int(z.idx(), 0);
             }
             steps += 1;
             if fx.halt {

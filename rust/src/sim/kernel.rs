@@ -25,6 +25,22 @@
 //!    (register in program order) and launch the next while
 //!    `insts + port_width <= issue_buffer_size` (Fig. 9's guard).
 //!
+//! ## O(active) scheduling
+//!
+//! Phases 1, 2, and 4 iterate *active lists* — the processing-FU list,
+//! the occupied-stage list (buffering/holding), and the waiting-FU list —
+//! instead of scanning every object each cycle, so step cost scales with
+//! the live instructions, not the machine size (a 16×16 systolic grid has
+//! hundreds of mostly idle PEs per cycle).  The lists are exact: every
+//! state transition goes through the phase loops or [`Self::stage_receive`],
+//! which maintain membership.  Each phase snapshots its list into a reused
+//! scratch buffer and sorts it (by downstream-first order position for
+//! stages, by index for FUs) so iteration order — and therefore every
+//! reported cycle count — is identical to the full scans.  The same lists
+//! drive [`Self::advance_bulk`] and the O(1) [`Self::idle`] check (busy
+//! counters), and a cached control-in-buffer counter keeps
+//! [`Self::phase_fetch`] from re-scanning the issue buffer.
+//!
 //! ## Backend hooks
 //!
 //! Two small additions let an event-driven scheduler skip idle cycles
@@ -109,6 +125,9 @@ struct FuNode {
     read_mask: Vec<u64>,
     write_mask: Vec<u64>,
     is_mau: bool,
+    /// Processes a MAC-family op (`mac`/`macf`/`gemm`) — the units whose
+    /// busy fraction defines PE utilization.
+    mac_capable: bool,
     /// (storage, served byte range) — caches resolved to their backing
     /// range at build time so the hot path never walks the graph.
     storages: Vec<(ObjId, u64, u64)>,
@@ -171,6 +190,10 @@ pub struct SimStats {
     pub structural_stall_cycles: u64,
     /// (object name, busy cycles) per functional unit.
     pub fu_busy: Vec<(String, u64)>,
+    /// Parallel to `fu_busy`: does the unit process a MAC-family op
+    /// (`mac`/`macf`/`gemm`)?  The denominator set of
+    /// [`Self::mean_fu_utilization`].
+    pub fu_mac_capable: Vec<bool>,
     pub storages: Vec<StorageStats>,
 }
 
@@ -184,13 +207,26 @@ impl SimStats {
     }
 
     /// Mean busy fraction over all `mac`-capable units (PE utilization in
-    /// the systolic experiments).
+    /// the systolic experiments) — MAUs and control units do not dilute
+    /// the average.  Stats lacking capability info (or models with no
+    /// MAC-family unit at all) fall back to averaging every FU.
     pub fn mean_fu_utilization(&self) -> f64 {
         if self.fu_busy.is_empty() || self.cycles == 0 {
             return 0.0;
         }
-        let total: u64 = self.fu_busy.iter().map(|(_, b)| b).sum();
-        total as f64 / (self.fu_busy.len() as f64 * self.cycles as f64)
+        let (n, total) = if self.fu_mac_capable.iter().any(|&m| m) {
+            self.fu_busy
+                .iter()
+                .zip(self.fu_mac_capable.iter())
+                .filter(|(_, &m)| m)
+                .fold((0u64, 0u64), |(n, t), ((_, b), _)| (n + 1, t + b))
+        } else {
+            (
+                self.fu_busy.len() as u64,
+                self.fu_busy.iter().map(|(_, b)| b).sum(),
+            )
+        };
+        total as f64 / (n as f64 * self.cycles as f64)
     }
 }
 
@@ -202,7 +238,6 @@ pub struct SimCore<'a> {
     program: &'a Program,
     stages: Vec<StageNode>,
     fus: Vec<FuNode>,
-    stage_order: Vec<usize>,
     ifs_stage: usize,
     issue_cap: usize,
     fetch_port: usize,
@@ -227,10 +262,31 @@ pub struct SimCore<'a> {
     outstanding: u64,
 
     // slot arenas: avoid cloning DynInstr/Effects through state enums.
+    // `fx_arena` slots are pooled: a freed slot keeps its vectors'
+    // capacity and `execute_into` refills it in place.
     di_arena: Vec<DynInstr>,
     fx_arena: Vec<Effects>,
     free_di: Vec<usize>,
     free_fx: Vec<usize>,
+    /// Recycled dependency buffers (capacity reuse for `issue_into`).
+    free_deps: Vec<Vec<Seq>>,
+
+    // Active sets (see module docs, "O(active) scheduling").  Exact
+    // membership: `processing_fus` ⇔ FuState::Processing, `waiting_fus`
+    // ⇔ FuState::Waiting, `occupied_stages` ⇔ Buffering | Holding.
+    processing_fus: Vec<u32>,
+    waiting_fus: Vec<u32>,
+    occupied_stages: Vec<u32>,
+    /// stage index -> position in `stage_order` (snapshot sort key).
+    order_pos: Vec<u32>,
+    /// Reused per-phase snapshot buffer.
+    scratch: Vec<u32>,
+    /// Count of non-Idle FUs / non-Empty stages (O(1) `idle()`).
+    busy_fus: usize,
+    busy_stages: usize,
+    /// Control instructions currently sitting in the issue buffer
+    /// (cached so `phase_fetch` stops re-scanning the buffer).
+    control_in_buffer: usize,
 
     /// fu index -> owning stage index (completion fast path).
     fu_stage: Vec<usize>,
@@ -252,6 +308,9 @@ pub struct SimCore<'a> {
     pub(crate) collect_events: bool,
     /// Min-heap of absolute step times at which a scheduled timer fires.
     pub(crate) events: BinaryHeap<Reverse<u64>>,
+    /// Total `step()` invocations (backend efficiency diagnostics: the
+    /// event-driven backend must never step more often than cycle-stepped).
+    pub(crate) steps_executed: u64,
 
     pub(crate) stats: SimStats,
 }
@@ -320,6 +379,11 @@ impl<'a> SimCore<'a> {
                     Some((s, lo, hi))
                 })
                 .collect();
+            let mac_capable = cap_mask
+                & ((1 << Opcode::Mac.index())
+                    | (1 << Opcode::MacFwd.index())
+                    | (1 << Opcode::Gemm.index()))
+                != 0;
             fu_index[id.idx()] = fus.len();
             fus.push(FuNode {
                 obj: id,
@@ -329,6 +393,7 @@ impl<'a> SimCore<'a> {
                 read_mask,
                 write_mask,
                 is_mau: kind.is_memory_access_unit(),
+                mac_capable,
                 storages,
                 busy_cycles: 0,
             });
@@ -398,6 +463,10 @@ impl<'a> SimCore<'a> {
                 order.push(i);
             }
         }
+        let mut order_pos = vec![0u32; stages.len()];
+        for (p, &s) in order.iter().enumerate() {
+            order_pos[s] = p as u32;
+        }
 
         let (issue_cap, fetch_port) = match ag.kind(ifs_obj) {
             ObjectKind::InstructionFetchStage(f) => {
@@ -466,7 +535,6 @@ impl<'a> SimCore<'a> {
             program,
             stages,
             fus,
-            stage_order: order,
             ifs_stage,
             issue_cap,
             fetch_port,
@@ -490,6 +558,15 @@ impl<'a> SimCore<'a> {
             fx_arena: Vec::new(),
             free_di: Vec::new(),
             free_fx: Vec::new(),
+            free_deps: Vec::new(),
+            processing_fus: Vec::new(),
+            waiting_fus: Vec::new(),
+            occupied_stages: Vec::new(),
+            order_pos,
+            scratch: Vec::new(),
+            busy_fus: 0,
+            busy_stages: 0,
+            control_in_buffer: 0,
             fu_stage,
             accept_cache,
             reg_writer_stages,
@@ -498,6 +575,7 @@ impl<'a> SimCore<'a> {
             activity: false,
             collect_events: false,
             events: BinaryHeap::new(),
+            steps_executed: 0,
             stats: SimStats::default(),
         })
     }
@@ -514,12 +592,13 @@ impl<'a> SimCore<'a> {
         }
     }
 
-    fn alloc_fx(&mut self, fx: Effects) -> usize {
+    /// Claim a pooled effects slot.  The slot's stale contents keep their
+    /// buffer capacity; `execute_into` clears and refills it in place.
+    fn take_fx_slot(&mut self) -> usize {
         if let Some(i) = self.free_fx.pop() {
-            self.fx_arena[i] = fx;
             i
         } else {
-            self.fx_arena.push(fx);
+            self.fx_arena.push(Effects::default());
             self.fx_arena.len() - 1
         }
     }
@@ -563,15 +642,21 @@ impl<'a> SimCore<'a> {
     }
 
     /// On receive: hand to a supporting idle FU (no stage latency), hold on
-    /// structural hazard, or start buffering for later forwarding.
+    /// structural hazard, or start buffering for later forwarding.  The
+    /// target stage must be Empty; every resulting state registers itself
+    /// with the active sets and busy counters.
     fn stage_receive(&mut self, stage: usize, di_slot: usize) {
-        let ins = self.instr(self.di_arena[di_slot].static_idx);
+        self.busy_stages += 1;
+        let program = self.program;
+        let ins = &program.instrs[self.di_arena[di_slot].static_idx as usize];
         let sn = &self.stages[stage];
         let mut supporting_busy = false;
         for &f in &sn.fus {
             if self.fu_supports(&self.fus[f], ins) {
                 if matches!(self.fu_state[f], FuState::Idle) {
                     self.fu_state[f] = FuState::Waiting { di_slot };
+                    self.busy_fus += 1;
+                    self.waiting_fus.push(f as u32);
                     self.stage_state[stage] = StageState::WaitingFu { fu: f };
                     return;
                 }
@@ -580,6 +665,7 @@ impl<'a> SimCore<'a> {
         }
         if supporting_busy {
             self.stage_state[stage] = StageState::Holding { di_slot };
+            self.occupied_stages.push(stage as u32);
         } else {
             let lat = self.stages[stage].latency;
             // The buffered instruction attempts its forward at step T+lat.
@@ -590,31 +676,40 @@ impl<'a> SimCore<'a> {
                 di_slot,
                 t_left: lat,
             };
+            self.occupied_stages.push(stage as u32);
         }
     }
 
     // -------------------------------------------------------- phase 1: FUs
 
     fn phase_completions(&mut self) {
-        for f in 0..self.fus.len() {
+        if self.processing_fus.is_empty() {
+            return;
+        }
+        // Snapshot and sort by FU index so commit order matches the old
+        // full scan exactly (effects application, storage FIFO order).
+        let mut snap = std::mem::take(&mut self.scratch);
+        snap.clear();
+        snap.append(&mut self.processing_fus);
+        snap.sort_unstable();
+        for &fw in &snap {
+            let f = fw as usize;
             let FuState::Processing { seq, t_left, fx_slot } = &mut self.fu_state[f] else {
                 continue;
             };
             self.fus[f].busy_cycles += 1;
             *t_left -= 1;
             if *t_left > 0 {
+                self.processing_fus.push(fw);
                 continue;
             }
             let seq = *seq;
             let fx_slot = *fx_slot;
             self.activity = true;
-            // Commit.
-            {
-                let fx = &self.fx_arena[fx_slot];
-                exec::apply(fx, &mut self.regs, &mut self.mem);
-                for z in &self.zero_regs {
-                    self.regs[z.idx()] = Value::Int(0);
-                }
+            // Commit: drain the pooled effects, moving vector payloads.
+            exec::commit(&mut self.fx_arena[fx_slot], &mut self.regs, &mut self.mem);
+            for z in &self.zero_regs {
+                self.regs.set_int(z.idx(), 0);
             }
             let (branch, halt) = {
                 let fx = &self.fx_arena[fx_slot];
@@ -625,10 +720,12 @@ impl<'a> SimCore<'a> {
             self.stats.retired += 1;
             self.free_fx.push(fx_slot);
             self.fu_state[f] = FuState::Idle;
+            self.busy_fus -= 1;
             // Free the owning stage (precomputed fu -> stage map).
             let s = self.fu_stage[f];
             if s != usize::MAX && self.stage_state[s] == (StageState::WaitingFu { fu: f }) {
                 self.stage_state[s] = StageState::Empty;
+                self.busy_stages -= 1;
             }
             // Control resolution.
             if self.pending_control == Some(seq) {
@@ -637,26 +734,44 @@ impl<'a> SimCore<'a> {
                     self.halted = true;
                     self.fetch_done = true;
                     self.buffer.clear();
+                    self.control_in_buffer = 0;
                     self.fetch_in_flight = None;
                 } else if let Some(target) = branch {
                     // Taken: squash unregistered (post-branch) entries and
                     // any in-flight fetch, steer pc.  A cancelled fetch may
-                    // leave a stale entry in the event queue; spurious
-                    // wake-ups are harmless no-op steps.
+                    // leave a stale entry in the event queue; the event
+                    // backend drains such duplicates at pop time.
+                    let program = self.program;
                     self.buffer.retain(|e| e.reg.is_some());
+                    self.control_in_buffer = self
+                        .buffer
+                        .iter()
+                        .filter(|e| program.instrs[e.static_idx as usize].is_control())
+                        .count();
                     self.fetch_in_flight = None;
                     self.pc = target;
                     self.fetch_done = false;
                 }
             }
         }
+        self.scratch = snap;
     }
 
     // ------------------------------------------------- phase 2: forwarding
 
     fn phase_forward(&mut self) {
-        for oi in 0..self.stage_order.len() {
-            let s = self.stage_order[oi];
+        if self.occupied_stages.is_empty() {
+            return;
+        }
+        // Snapshot and sort downstream-first so freed slots refill the
+        // same cycle and nothing moves two stages per cycle — identical
+        // iteration order to the old full scan over `stage_order`.
+        let mut snap = std::mem::take(&mut self.scratch);
+        snap.clear();
+        snap.append(&mut self.occupied_stages);
+        snap.sort_unstable_by_key(|&s| self.order_pos[s as usize]);
+        for &sw in &snap {
+            let s = sw as usize;
             if s == self.ifs_stage {
                 continue;
             }
@@ -667,6 +782,7 @@ impl<'a> SimCore<'a> {
                             di_slot,
                             t_left: t_left - 1,
                         };
+                        self.occupied_stages.push(sw);
                         continue;
                     }
                     // Try to forward to a ready, accepting target
@@ -682,6 +798,7 @@ impl<'a> SimCore<'a> {
                         Some(tgt) => {
                             self.activity = true;
                             self.stage_state[s] = StageState::Empty;
+                            self.busy_stages -= 1;
                             self.stage_receive(tgt, di_slot);
                         }
                         None => {
@@ -690,6 +807,7 @@ impl<'a> SimCore<'a> {
                             // phase empties a target — which raises
                             // `activity` — so quiescent skips stay exact.
                             self.stage_state[s] = StageState::Buffering { di_slot, t_left: 1 };
+                            self.occupied_stages.push(sw);
                         }
                     }
                 }
@@ -697,6 +815,7 @@ impl<'a> SimCore<'a> {
                     // Structural hazard: retry dispatch.
                     self.stats.structural_stall_cycles += 1;
                     self.stage_state[s] = StageState::Empty;
+                    self.busy_stages -= 1;
                     self.stage_receive(s, di_slot);
                     debug_assert!(
                         self.stage_state[s] != StageState::Empty,
@@ -709,6 +828,7 @@ impl<'a> SimCore<'a> {
                 _ => {}
             }
         }
+        self.scratch = snap;
     }
 
     // ------------------------------------------------------ phase 3: issue
@@ -738,6 +858,7 @@ impl<'a> SimCore<'a> {
         self.halted = true;
         self.fetch_done = true;
         self.buffer.clear();
+        self.control_in_buffer = 0;
         self.fetch_in_flight = None;
     }
 
@@ -752,8 +873,10 @@ impl<'a> SimCore<'a> {
                     break;
                 }
                 let static_idx = self.buffer[i].static_idx;
-                let ins = &self.program.instrs[static_idx as usize];
-                let (seq, deps) = self.sb.issue(ins);
+                let program = self.program;
+                let ins = &program.instrs[static_idx as usize];
+                let mut deps = self.free_deps.pop().unwrap_or_default();
+                let seq = self.sb.issue_into(ins, &mut deps);
                 self.activity = true;
                 self.outstanding += 1;
                 if ins.is_control() {
@@ -785,6 +908,9 @@ impl<'a> SimCore<'a> {
                 Some(tgt) => {
                     self.activity = true;
                     let e = self.buffer.remove(bi).unwrap();
+                    if self.program.instrs[e.static_idx as usize].is_control() {
+                        self.control_in_buffer -= 1;
+                    }
                     let (seq, deps) = e.reg.unwrap();
                     let slot = self.alloc_di(DynInstr {
                         static_idx: e.static_idx,
@@ -841,7 +967,17 @@ impl<'a> SimCore<'a> {
     // --------------------------------------------------- phase 4: FU start
 
     fn phase_fu_start(&mut self) -> Result<(), SimError> {
-        for f in 0..self.fus.len() {
+        if self.waiting_fus.is_empty() {
+            return Ok(());
+        }
+        // Snapshot in FU-index order (storage request slots are FIFO, so
+        // same-cycle dispatch order is observable in completion times).
+        let mut snap = std::mem::take(&mut self.scratch);
+        snap.clear();
+        snap.append(&mut self.waiting_fus);
+        snap.sort_unstable();
+        for &fw in &snap {
+            let f = fw as usize;
             let FuState::Waiting { di_slot } = self.fu_state[f] else {
                 continue;
             };
@@ -852,10 +988,15 @@ impl<'a> SimCore<'a> {
             };
             if !deps_ok {
                 self.stats.dep_stall_cycles += 1;
+                self.waiting_fus.push(fw);
                 continue;
             }
-            let ins = &self.program.instrs[static_idx as usize];
-            let fx = exec::execute(ins, addr, &self.regs, &mut self.mem)?;
+            let program = self.program;
+            let ins = &program.instrs[static_idx as usize];
+            let fx_slot = self.take_fx_slot();
+            // On an ExecError the simulation aborts; the emptied scratch
+            // buffer is simply reallocated by the next run.
+            exec::execute_into(ins, addr, &self.regs, &mut self.mem, &mut self.fx_arena[fx_slot])?;
 
             // Latency: FU latency (+ memory path for MAUs).
             let base_lat = match self.fus[f].latency_is_const {
@@ -870,20 +1011,25 @@ impl<'a> SimCore<'a> {
             let mut completion = self.t + base_lat;
             if self.fus[f].is_mau {
                 let storages = std::mem::take(&mut self.fus[f].storages);
-                for (a, bytes) in fx.mem_reads.iter().chain(fx.mem_stores.iter()) {
-                    let is_write = fx.mem_stores.iter().any(|(sa, _)| sa == a)
-                        && !fx.mem_reads.iter().any(|(ra, _)| ra == a);
-                    if let Some(&(st, _, _)) =
-                        storages.iter().find(|&&(_, lo, hi)| (lo..hi).contains(a))
-                    {
-                        let done = self.storage.access(st, *a, *bytes, is_write, self.t);
-                        completion = completion.max(done + base_lat);
+                {
+                    let fx = &self.fx_arena[fx_slot];
+                    for (a, bytes) in fx.mem_reads.iter().chain(fx.mem_stores.iter()) {
+                        let is_write = fx.mem_stores.iter().any(|(sa, _)| sa == a)
+                            && !fx.mem_reads.iter().any(|(ra, _)| ra == a);
+                        if let Some(&(st, _, _)) =
+                            storages.iter().find(|&&(_, lo, hi)| (lo..hi).contains(a))
+                        {
+                            let done = self.storage.access(st, *a, *bytes, is_write, self.t);
+                            completion = completion.max(done + base_lat);
+                        }
                     }
                 }
                 self.fus[f].storages = storages;
             }
             let t_left = (completion - self.t).max(1);
-            let fx_slot = self.alloc_fx(fx);
+            // Recycle the (drained) dependency buffer and the DynInstr slot.
+            let deps = std::mem::take(&mut self.di_arena[di_slot].deps);
+            self.free_deps.push(deps);
             self.free_di.push(di_slot);
             self.activity = true;
             // Effects commit during the step at T + t_left.
@@ -895,7 +1041,9 @@ impl<'a> SimCore<'a> {
                 t_left,
                 fx_slot,
             };
+            self.processing_fus.push(fw);
         }
+        self.scratch = snap;
         Ok(())
     }
 
@@ -909,6 +1057,9 @@ impl<'a> SimCore<'a> {
                 for k in 0..count {
                     let a = addr + k as u64 * INSTR_BYTES;
                     if let Some(idx) = self.program.index_of(a) {
+                        if self.program.instrs[idx].is_control() {
+                            self.control_in_buffer += 1;
+                        }
                         self.buffer.push_back(Fetched {
                             static_idx: idx as u32,
                             addr: a,
@@ -924,12 +1075,9 @@ impl<'a> SimCore<'a> {
             return;
         }
         // No speculation: while a control instruction is unresolved (or
-        // sits unregistered in the buffer), do not fetch further.
-        let control_in_buffer = self
-            .buffer
-            .iter()
-            .any(|e| self.program.instrs[e.static_idx as usize].is_control());
-        if self.pending_control.is_some() || control_in_buffer {
+        // sits unregistered in the buffer), do not fetch further.  The
+        // buffer's control population is a maintained counter, not a scan.
+        if self.pending_control.is_some() || self.control_in_buffer > 0 {
             return;
         }
         if self.program.index_of(self.pc).is_none() {
@@ -973,18 +1121,17 @@ impl<'a> SimCore<'a> {
     // -------------------------------------------------------------- driver
 
     /// Everything drained: nothing fetched, buffered, staged, or executing.
+    /// O(1): the busy counters mirror the stage/FU state arrays.
     pub fn idle(&self) -> bool {
         (self.halted || (self.fetch_done && self.buffer.is_empty() && self.fetch_in_flight.is_none()))
             && self.outstanding == 0
-            && self
-                .stage_state
-                .iter()
-                .all(|s| matches!(s, StageState::Empty))
-            && self.fu_state.iter().all(|f| matches!(f, FuState::Idle))
+            && self.busy_stages == 0
+            && self.busy_fus == 0
     }
 
     /// One clock cycle (T := T + 1 at the end).
     pub fn step(&mut self) -> Result<(), SimError> {
+        self.steps_executed += 1;
         self.phase_completions();
         self.phase_forward();
         self.phase_issue()?;
@@ -1002,37 +1149,32 @@ impl<'a> SimCore<'a> {
         self.fetch_in_flight.is_none()
             && !self.fetch_done
             && self.pending_control.is_none()
-            && !self
-                .buffer
-                .iter()
-                .any(|e| self.program.instrs[e.static_idx as usize].is_control())
+            && self.control_in_buffer == 0
             && self.program.index_of(self.pc).is_some()
             && self.buffer.len() + self.fetch_port > self.issue_cap
     }
 
     /// Advance the clock by `dt` cycles at once, as if `dt` quiescent
     /// steps had run: bulk-decrement every running timer and bulk-charge
-    /// the per-cycle statistics.  Only sound when called from a quiescent
-    /// configuration (the previous step raised no `activity`) with
-    /// `dt` at most the distance to the next scheduled event, both of
-    /// which the event-driven backend guarantees.
+    /// the per-cycle statistics — touching only the active sets.  Only
+    /// sound when called from a quiescent configuration (the previous step
+    /// raised no `activity`) with `dt` at most the distance to the next
+    /// scheduled event, both of which the event-driven backend guarantees.
     pub(crate) fn advance_bulk(&mut self, dt: u64) {
         debug_assert!(dt > 0, "bulk advance of zero cycles");
-        for f in 0..self.fu_state.len() {
-            match &mut self.fu_state[f] {
-                FuState::Processing { t_left, .. } => {
-                    debug_assert!(*t_left > dt, "bulk advance skipped a completion");
-                    *t_left -= dt;
-                    self.fus[f].busy_cycles += dt;
-                }
-                // A Waiting FU after a quiescent step has unmet
-                // dependencies, and none can retire while skipping.
-                FuState::Waiting { .. } => self.stats.dep_stall_cycles += dt,
-                FuState::Idle => {}
+        for &fw in &self.processing_fus {
+            let f = fw as usize;
+            if let FuState::Processing { t_left, .. } = &mut self.fu_state[f] {
+                debug_assert!(*t_left > dt, "bulk advance skipped a completion");
+                *t_left -= dt;
+                self.fus[f].busy_cycles += dt;
             }
         }
-        for s in self.stage_state.iter_mut() {
-            match s {
+        // A Waiting FU after a quiescent step has unmet dependencies, and
+        // none can retire while skipping.
+        self.stats.dep_stall_cycles += dt * self.waiting_fus.len() as u64;
+        for &sw in &self.occupied_stages {
+            match &mut self.stage_state[sw as usize] {
                 StageState::Buffering { t_left, .. } if *t_left > 1 => {
                     debug_assert!(*t_left > dt, "bulk advance skipped a forward attempt");
                     *t_left -= dt;
@@ -1055,6 +1197,7 @@ impl<'a> SimCore<'a> {
             .iter()
             .map(|f| (self.ag.name(f.obj).to_string(), f.busy_cycles))
             .collect();
+        self.stats.fu_mac_capable = self.fus.iter().map(|f| f.mac_capable).collect();
         self.stats.storages = self.storage.stats(self.ag);
         self.stats.clone()
     }
@@ -1063,8 +1206,58 @@ impl<'a> SimCore<'a> {
         self.t
     }
 
+    /// Total [`Self::step`] invocations this run — the scheduler-efficiency
+    /// metric: on stall-heavy workloads the event-driven backend executes
+    /// far fewer steps than simulated cycles.
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+
     /// Register value by AG name (result extraction / validation).
-    pub fn get_reg(&self, name: &str) -> Option<&Value> {
-        self.ag.reg_id(name).map(|r| &self.regs[r.idx()])
+    pub fn get_reg(&self, name: &str) -> Option<Value> {
+        self.ag.reg_id(name).map(|r| self.regs.get(r.idx()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_fu_utilization_filters_to_mac_capable() {
+        let st = SimStats {
+            cycles: 100,
+            fu_busy: vec![
+                ("pe_0_0".into(), 80),
+                ("pe_0_1".into(), 60),
+                ("mau0".into(), 10),
+            ],
+            fu_mac_capable: vec![true, true, false],
+            ..SimStats::default()
+        };
+        // (80 + 60) / (2 * 100): the MAU does not dilute PE utilization.
+        assert!((st.mean_fu_utilization() - 0.70).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_fu_utilization_falls_back_without_capability_info() {
+        let st = SimStats {
+            cycles: 100,
+            fu_busy: vec![("a".into(), 80), ("b".into(), 10)],
+            fu_mac_capable: Vec::new(),
+            ..SimStats::default()
+        };
+        assert!((st.mean_fu_utilization() - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_fu_utilization_degenerate_cases() {
+        assert_eq!(SimStats::default().mean_fu_utilization(), 0.0);
+        let st = SimStats {
+            cycles: 0,
+            fu_busy: vec![("a".into(), 5)],
+            ..SimStats::default()
+        };
+        assert_eq!(st.mean_fu_utilization(), 0.0);
     }
 }

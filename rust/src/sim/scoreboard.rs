@@ -86,20 +86,28 @@ impl Scoreboard {
     /// Issue one instruction (program order!). Returns its sequence number
     /// and dependency list (seqs that must retire before it may start).
     pub fn issue(&mut self, ins: &Instruction) -> (Seq, Vec<Seq>) {
+        let mut deps = Vec::new();
+        let seq = self.issue_into(ins, &mut deps);
+        (seq, deps)
+    }
+
+    /// [`Self::issue`] into a caller-owned dependency buffer (cleared
+    /// first) — the kernel recycles these buffers across dynamic
+    /// instructions so the issue path allocates nothing in steady state.
+    pub fn issue_into(&mut self, ins: &Instruction, deps: &mut Vec<Seq>) -> Seq {
+        deps.clear();
         let seq = self.next_seq;
         self.next_seq += 1;
         self.retired.push(false);
         debug_assert_eq!(self.retired.len() as Seq, self.next_seq);
 
-        let mut deps = Vec::new();
-
         // Register RAW (includes address base registers).
         for r in ins.all_read_regs() {
-            self.regs[r.idx()].read_dep(&mut deps);
+            self.regs[r.idx()].read_dep(deps);
         }
         // Register WAW + WAR.
         for w in &ins.writes {
-            self.regs[w.idx()].write_dep(&mut deps);
+            self.regs[w.idx()].write_dep(deps);
         }
 
         // Memory dependencies.  Direct addresses are tracked per word
@@ -114,13 +122,13 @@ impl Scoreboard {
         for a in &ins.read_addrs {
             match a {
                 AddrRef::Direct(addr) => {
-                    self.mem.entry(word(*addr)).or_default().read_dep(&mut deps);
-                    self.mem_any.read_dep(&mut deps); // vs indirect writers
+                    self.mem.entry(word(*addr)).or_default().read_dep(deps);
+                    self.mem_any.read_dep(deps); // vs indirect writers
                 }
                 AddrRef::Indirect { .. } => {
-                    self.mem_any.read_dep(&mut deps);
+                    self.mem_any.read_dep(deps);
                     for u in self.mem.values() {
-                        u.read_dep(&mut deps); // vs direct writers
+                        u.read_dep(deps); // vs direct writers
                     }
                 }
             }
@@ -128,14 +136,14 @@ impl Scoreboard {
         for a in &ins.write_addrs {
             match a {
                 AddrRef::Direct(addr) => {
-                    self.mem.entry(word(*addr)).or_default().write_dep(&mut deps);
-                    self.mem_any.write_dep(&mut deps);
+                    self.mem.entry(word(*addr)).or_default().write_dep(deps);
+                    self.mem_any.write_dep(deps);
                 }
                 AddrRef::Indirect { .. } => {
-                    self.mem_any.write_dep(&mut deps);
+                    self.mem_any.write_dep(deps);
                     // May alias any tracked word.
                     for u in self.mem.values() {
-                        u.write_dep(&mut deps);
+                        u.write_dep(deps);
                     }
                 }
             }
@@ -168,7 +176,7 @@ impl Scoreboard {
         deps.sort_unstable();
         deps.dedup();
         deps.retain(|&d| !self.retired[d as usize]);
-        (seq, deps)
+        seq
     }
 
     /// Mark a dynamic instruction finished.

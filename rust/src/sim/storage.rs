@@ -57,6 +57,9 @@ pub struct StorageSim {
     nodes: Vec<Node>,
     /// ObjId -> node index (dense, usize::MAX = not a storage).
     index: Vec<usize>,
+    /// Reused backing-job buffer for cache accesses (fills, write-backs):
+    /// the hot path allocates nothing in steady state.
+    scratch_jobs: Vec<(u64, bool)>,
 }
 
 /// Per-storage statistics snapshot.
@@ -125,7 +128,11 @@ impl StorageSim {
                 }
             }
         }
-        StorageSim { nodes, index }
+        StorageSim {
+            nodes,
+            index,
+            scratch_jobs: Vec::new(),
+        }
     }
 
     /// Issue a `bytes`-wide request at `storage` starting no earlier than
@@ -143,6 +150,11 @@ impl StorageSim {
             .unwrap();
         let start = now.max(self.nodes[idx].slots[slot]);
 
+        // Take the pooled backing-job buffer before borrowing the model so
+        // the recursive backing access below cannot alias it (a nested
+        // cache level simply starts from an empty buffer).
+        let mut jobs = std::mem::take(&mut self.scratch_jobs);
+        jobs.clear();
         let completion = match &mut self.nodes[idx].model {
             Model::Sram { cfg } => {
                 let words = (bytes as usize).div_ceil(4).max(1);
@@ -172,7 +184,6 @@ impl StorageSim {
                 let (hit_l, miss_l, backing_i, line_sz) = (*hit, *miss, *backing, *line);
                 let mut t = start;
                 let mut missed = false;
-                let mut backing_jobs: Vec<(u64, bool)> = Vec::new();
                 for l in first..=last {
                     let a = state.access(l * line_sz, is_write);
                     if a.hit {
@@ -181,17 +192,17 @@ impl StorageSim {
                         missed = true;
                         t += miss_l;
                         if a.backing_access {
-                            backing_jobs.push((l * line_sz, is_write && !a.hit));
+                            jobs.push((l * line_sz, is_write && !a.hit));
                         }
                     }
                     if let Some(victim) = a.writeback {
-                        backing_jobs.push((victim, true));
+                        jobs.push((victim, true));
                     }
                 }
                 // Backing accesses (fills are reads; write-through /
                 // write-back victims are writes). They serialize the
                 // request per Fig. 13 (slot stays busy through the miss).
-                for (a, w) in backing_jobs {
+                for (a, w) in jobs.drain(..) {
                     t = self.access_idx(backing_i, a, line_sz as u32, w, t);
                 }
                 // After a miss the filled line delivers through the hit
@@ -199,6 +210,7 @@ impl StorageSim {
                 t + if missed { hit_l } else { 0 }
             }
         };
+        self.scratch_jobs = jobs;
 
         let node = &mut self.nodes[idx];
         node.slots[slot] = completion;

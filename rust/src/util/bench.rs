@@ -96,6 +96,53 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Merge this group's results into the perf-trajectory JSON file named
+    /// by the `ACADL_BENCH_JSON` env var (no-op when unset).  Driven by
+    /// `scripts/perf_trajectory.sh`, which collects every bench group into
+    /// one `BENCH_sim.json` so future PRs can diff perf.
+    pub fn write_json_if_requested(&self) {
+        if let Ok(path) = std::env::var("ACADL_BENCH_JSON") {
+            if let Err(e) = self.write_json(&path) {
+                eprintln!("bench: failed to write {path}: {e}");
+            }
+        }
+    }
+
+    /// Merge into the JSON object at `path` (bench name → median/mean/min
+    /// nanoseconds, run count, and items-per-second throughput when a
+    /// denominator was set), preserving entries from other groups.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        let mut entries: Vec<(String, Json)> = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .and_then(|j| match j {
+                Json::Obj(fields) => Some(fields),
+                _ => None,
+            })
+            .unwrap_or_default();
+        for r in &self.results {
+            let mut fields = vec![
+                ("median_ns".to_string(), Json::num(r.median.as_nanos() as f64)),
+                ("mean_ns".to_string(), Json::num(r.mean.as_nanos() as f64)),
+                ("min_ns".to_string(), Json::num(r.min.as_nanos() as f64)),
+                ("runs".to_string(), Json::num(r.runs as f64)),
+            ];
+            if let Some(n) = r.items {
+                fields.push(("items".to_string(), Json::num(n as f64)));
+            }
+            if let Some(tp) = r.throughput() {
+                fields.push(("items_per_s".to_string(), Json::num(tp)));
+            }
+            let entry = Json::Obj(fields);
+            match entries.iter_mut().find(|(k, _)| *k == r.name) {
+                Some((_, v)) => *v = entry,
+                None => entries.push((r.name.clone(), entry)),
+            }
+        }
+        std::fs::write(path, format!("{}\n", Json::Obj(entries)))
+    }
 }
 
 /// Optimizer barrier (std::hint::black_box stabilized in 1.66).
@@ -107,6 +154,26 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_trajectory_merges_groups() {
+        let path = std::env::temp_dir().join(format!("acadl_bench_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut a = Bench::new("g1").with_runs(2);
+        a.time("x", Some(100), || 1);
+        a.write_json(&path).unwrap();
+        let mut b = Bench::new("g2").with_runs(2);
+        b.time("y", None, || 2);
+        b.write_json(&path).unwrap();
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let x = parsed.get("g1/x").expect("first group survives the merge");
+        assert!(x.get("median_ns").is_some());
+        assert!(x.get("items_per_s").is_some());
+        assert!(parsed.get("g2/y").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn reports_ordered_stats() {

@@ -278,5 +278,5 @@ fn zero_register_is_hardwired() {
     let p = assemble(&m.ag, "movi #42 => z0\nmov z0 => r1\nhalt", 0).unwrap();
     let mut e = Engine::new(&m.ag, &p).unwrap();
     e.run(10_000).unwrap();
-    assert_eq!(e.get_reg("r1"), Some(&Value::Int(0)));
+    assert_eq!(e.get_reg("r1"), Some(Value::Int(0)));
 }

@@ -1,0 +1,165 @@
+//! Property tests for the paged memory image: the 4 KiB-paged flat store
+//! must be observationally identical to the old word-addressed
+//! `HashMap<u64, f32>` semantics — unaligned masking (`addr & !3`),
+//! default-zero reads, read/write counters, resident-word counts — across
+//! random access patterns, including page-boundary straddles and sparse
+//! outlier addresses that exercise the hash-map fallback.
+
+use std::collections::HashMap;
+
+use acadl::sim::exec::MemImage;
+use acadl::util::prop::{forall, Gen};
+
+/// The reference model: the seed implementation's word-addressed map.
+#[derive(Default)]
+struct ModelMem {
+    words: HashMap<u64, f32>,
+    reads: u64,
+    writes: u64,
+}
+
+impl ModelMem {
+    fn read(&mut self, addr: u64) -> f32 {
+        self.reads += 1;
+        self.peek(addr)
+    }
+
+    fn peek(&self, addr: u64) -> f32 {
+        self.words.get(&(addr & !3)).copied().unwrap_or(0.0)
+    }
+
+    fn write(&mut self, addr: u64, v: f32) {
+        self.writes += 1;
+        self.words.insert(addr & !3, v);
+    }
+
+    fn load_f32(&mut self, base: u64, data: &[f32]) {
+        for (i, v) in data.iter().enumerate() {
+            self.words.insert((base + 4 * i as u64) & !3, *v);
+        }
+    }
+
+    fn dump_f32(&self, base: u64, len: usize) -> Vec<f32> {
+        (0..len).map(|i| self.peek(base + 4 * i as u64)).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    Read(u64),
+    Peek(u64),
+    Write(u64, f32),
+    Load(u64, Vec<f32>),
+    Dump(u64, usize),
+}
+
+/// Address generator biased toward the interesting regimes: small dense
+/// addresses, 4 KiB page boundaries, unaligned bytes, and far outliers
+/// past the dense page-table range.
+fn gen_addr(g: &mut Gen) -> u64 {
+    const PAGE: u64 = 4096;
+    let base = match g.usize(0, 3) {
+        0 => g.int(0, 0x2000) as u64,
+        // Hug a page boundary (first few pages).
+        1 => (PAGE * g.int(1, 8) as u64).saturating_add_signed(g.int(-16, 16)),
+        // Deep but still dense (tens of MiB).
+        2 => g.int(0, 1 << 25) as u64,
+        // Sparse outliers: far past the 128 MiB dense range.
+        _ => (1u64 << 30) + (g.next_u64() % (1u64 << 40)),
+    };
+    // Mix in unaligned byte offsets: masking must behave identically.
+    base.wrapping_add(g.int(0, 3) as u64)
+}
+
+#[test]
+fn paged_store_matches_hashmap_model() {
+    forall(
+        "paged MemImage ≡ word-addressed HashMap",
+        60,
+        |g| {
+            let n = g.usize(20, 120);
+            (0..n)
+                .map(|_| {
+                    let a = gen_addr(g);
+                    match g.usize(0, 4) {
+                        0 => Op::Read(a),
+                        1 => Op::Peek(a),
+                        2 => Op::Write(a, g.f32(-100.0, 100.0)),
+                        // Bulk loads use word-aligned bases (codegen's data
+                        // layout contract) and may straddle a page edge.
+                        3 => Op::Load(a & !3, g.vec_f32(g.usize(1, 32), -10.0, 10.0)),
+                        _ => Op::Dump(a & !3, g.usize(1, 32)),
+                    }
+                })
+                .collect::<Vec<Op>>()
+        },
+        |ops| {
+            let mut model = ModelMem::default();
+            let mut paged = MemImage::new();
+            for (i, op) in ops.iter().enumerate() {
+                match op {
+                    Op::Read(a) => {
+                        let (m, p) = (model.read(*a), paged.read(*a));
+                        if m != p {
+                            return Err(format!("op {i}: read({a:#x}) = {p}, model {m}"));
+                        }
+                    }
+                    Op::Peek(a) => {
+                        let (m, p) = (model.peek(*a), paged.peek(*a));
+                        if m != p {
+                            return Err(format!("op {i}: peek({a:#x}) = {p}, model {m}"));
+                        }
+                    }
+                    Op::Write(a, v) => {
+                        model.write(*a, *v);
+                        paged.write(*a, *v);
+                    }
+                    Op::Load(base, data) => {
+                        model.load_f32(*base, data);
+                        paged.load_f32(*base, data);
+                    }
+                    Op::Dump(base, len) => {
+                        let (m, p) = (model.dump_f32(*base, *len), paged.dump_f32(*base, *len));
+                        if m != p {
+                            return Err(format!("op {i}: dump({base:#x}, {len}) diverged"));
+                        }
+                    }
+                }
+                if (model.reads, model.writes) != (paged.reads, paged.writes) {
+                    return Err(format!(
+                        "op {i}: counters (r{}, w{}) vs model (r{}, w{})",
+                        paged.reads, paged.writes, model.reads, model.writes
+                    ));
+                }
+                if model.words.len() != paged.len() {
+                    return Err(format!(
+                        "op {i}: resident words {} vs model {}",
+                        paged.len(),
+                        model.words.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn load_dump_roundtrip_at_page_boundaries() {
+    // Deterministic page-boundary round-trips: every span that straddles
+    // the first few 4 KiB boundaries must read back exactly.
+    for page in 1u64..4 {
+        let boundary = page * 4096;
+        for lead in [4u64, 8, 20] {
+            let base = boundary - lead;
+            let data: Vec<f32> = (0..16).map(|i| (page * 100 + i) as f32 * 0.25).collect();
+            let mut mem = MemImage::new();
+            mem.load_f32(base, &data);
+            assert_eq!(mem.dump_f32(base, data.len()), data, "base {base:#x}");
+            assert_eq!(mem.len(), data.len(), "resident count at {base:#x}");
+            // The words before and after the span stay zero.
+            assert_eq!(mem.peek(base - 4), 0.0);
+            assert_eq!(mem.peek(base + 4 * data.len() as u64), 0.0);
+        }
+    }
+}

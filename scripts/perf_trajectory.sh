@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Perf-trajectory snapshot: run the simulation micro benches and the DSE
+# smoke sweep, collecting medians into BENCH_sim.json at the repo root
+# (bench name -> median ns, runs, cycles/sec throughput).  Future PRs diff
+# this file against the committed copy to track the hot-path trajectory.
+#
+# Usage: scripts/perf_trajectory.sh [output.json]
+# Env:   ACADL_BENCH_RUNS  samples per bench (default 7)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_sim.json}"
+rm -f "$OUT"
+export ACADL_BENCH_JSON="$OUT"
+export ACADL_BENCH_RUNS="${ACADL_BENCH_RUNS:-7}"
+
+# The engine hot-path micro benches (cycles/sec across the model zoo) and
+# the backend comparison (cycle-stepped vs event-driven wall-clock).
+cargo bench --bench sim_micro
+cargo bench --bench backend_compare
+
+# DSE smoke sweep wall-clock: the end-to-end number every hot-path win
+# multiplies into.
+start_ns=$(date +%s%N)
+cargo run --release --quiet -- dse --quick true --dim 8 --workers 2 > /dev/null
+end_ns=$(date +%s%N)
+
+python3 - "$OUT" $((end_ns - start_ns)) <<'EOF'
+import json, os, sys
+
+path, ns = sys.argv[1], int(sys.argv[2])
+data = json.load(open(path)) if os.path.exists(path) else {}
+data["dse/smoke_sweep_wall"] = {"median_ns": ns, "runs": 1}
+with open(path, "w") as f:
+    json.dump(data, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"wrote {path} ({len(data)} entries)")
+EOF

@@ -1,0 +1,183 @@
+//! The spanned abstract syntax tree of an `.acadl` file.
+//!
+//! Every declaration carries the [`Span`] of its defining token so the
+//! elaborator can report semantic errors ("unknown object", "invalid
+//! edge") at the source position that caused them.  The AST is purely
+//! syntactic: names are strings, classes and edge kinds are uninterpreted
+//! identifiers — binding and validation happen in [`crate::adl::elab`].
+
+use crate::adl::Span;
+
+/// A whole `.acadl` file: one architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    pub name_span: Span,
+    /// Optional mapping-family binding (`targets oma { cache = true }`).
+    pub target: Option<TargetDecl>,
+    pub items: Vec<Item>,
+}
+
+/// The `targets <family> { key = value … }` binding: which code-generator
+/// family this description instantiates, with its serializable knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetDecl {
+    pub family: String,
+    pub span: Span,
+    pub attrs: Vec<Attr>,
+}
+
+/// One top-level declaration, in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    Object(ObjectDecl),
+    Connect(ConnectDecl),
+    Param(ParamDecl),
+    Template(TemplateDecl),
+    Instance(InstanceDecl),
+    Join(JoinDecl),
+    Attach(AttachDecl),
+}
+
+/// `object "name" : Class { attrs… [regs { … }] }`
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectDecl {
+    pub name: String,
+    pub span: Span,
+    pub class: String,
+    pub class_span: Span,
+    pub attrs: Vec<Attr>,
+    /// RegisterFile contents (empty for every other class).
+    pub regs: Vec<RegDecl>,
+}
+
+/// `key = value`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attr {
+    pub key: String,
+    pub span: Span,
+    pub value: ValueExpr,
+}
+
+/// An attribute or parameter value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueExpr {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    /// A bare identifier (cache policies, loop orders, mnemonics).
+    Ident(String),
+    List(Vec<ValueExpr>),
+}
+
+impl ValueExpr {
+    /// Human description of the value's shape, for diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ValueExpr::Int(_) => "integer",
+            ValueExpr::Float(_) => "float",
+            ValueExpr::Bool(_) => "bool",
+            ValueExpr::Str(_) => "string",
+            ValueExpr::Ident(_) => "identifier",
+            ValueExpr::List(_) => "list",
+        }
+    }
+}
+
+/// One register of a RegisterFile: `"name" : i32 = 0`, `"a" : f32 = 0`,
+/// `"v" : vec(128, 8)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegDecl {
+    pub name: String,
+    pub span: Span,
+    pub ty: RegType,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegType {
+    Int { width: u32, init: i64 },
+    F32 { init: f32 },
+    Vec { size: u32, lanes: usize },
+}
+
+/// `connect "src" -> "dst" : EDGE_KIND`
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConnectDecl {
+    pub src: String,
+    pub dst: String,
+    pub kind: String,
+    pub span: Span,
+}
+
+/// `param key in [v1, v2, …]` — one DSE sweep axis over a target knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDecl {
+    pub key: String,
+    pub span: Span,
+    pub values: Vec<ValueExpr>,
+}
+
+/// `template Name { objects… connects… danglings… }` — a reusable block
+/// instantiated with a name prefix (the paper's §4.2 templates).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateDecl {
+    pub name: String,
+    pub span: Span,
+    pub objects: Vec<ObjectDecl>,
+    pub connects: Vec<ConnectDecl>,
+    pub danglings: Vec<DanglingDecl>,
+}
+
+/// `dangling "port" : EDGE_KIND from "obj"` (source half-edge) or
+/// `… to "obj"` (target half-edge) — the template's exported interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DanglingDecl {
+    pub name: String,
+    pub kind: String,
+    pub dir: DangleDir,
+    pub obj: String,
+    pub span: Span,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DangleDir {
+    /// The half-edge knows its source; the target is supplied later.
+    From,
+    /// The half-edge knows its target; the source is supplied later.
+    To,
+}
+
+/// `instance "prefix" : TemplateName` — instantiate a template; its
+/// objects (and registers) are named `prefix.local`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceDecl {
+    pub prefix: String,
+    pub template: String,
+    pub span: Span,
+}
+
+/// `join "a".port -> "b".port` — connect two dangling half-edges
+/// (`acadl_core::template::connect_dangling`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinDecl {
+    pub a: PortRef,
+    pub b: PortRef,
+    pub span: Span,
+}
+
+/// `attach "a".port -> "obj"` — connect a dangling half-edge straight to
+/// an object (`acadl_core::template::connect_dangling_to`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttachDecl {
+    pub port: PortRef,
+    pub obj: String,
+    pub span: Span,
+}
+
+/// `"instance".port`
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortRef {
+    pub instance: String,
+    pub port: String,
+}

@@ -1,0 +1,1062 @@
+//! The elaborator: lowers a parsed [`ast::Arch`] into a validated
+//! [`Ag`] architecture graph, resolving classes, attributes, edges,
+//! templates, and the optional `targets` binding, with `line:col`
+//! diagnostics for every semantic error.
+//!
+//! Every edge — whether written as a `connect` statement or formed by
+//! `join`/`attach` between template ports — is materialized through the
+//! existing [`crate::acadl_core::template`] half-edge machinery, so the
+//! class-diagram validity check of Fig. 1 runs on exactly the same path
+//! as the Rust builders.  An exported dangling edge that is never joined
+//! simply does not materialize (the paper's §4.2 semantics).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::acadl_core::data::Data;
+use crate::acadl_core::edge::EdgeKind;
+use crate::acadl_core::graph::Ag;
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::{
+    DataStorageParams, Dram, ExecuteStage, FunctionalUnit, InstructionFetchStage,
+    InstructionMemoryAccessUnit, MemoryAccessUnit, Object, ObjectKind, PipelineStage,
+    RegisterFile, SetAssociativeCache, Sram,
+};
+use crate::acadl_core::template::{connect_dangling, connect_dangling_to, DanglingEdge};
+use crate::adl::ast::{self, DangleDir, RegType, ValueExpr};
+use crate::adl::{printer, AdlError, Span};
+use crate::coordinator::job::TargetSpec;
+use crate::mapping::gemm::LoopOrder;
+use crate::mem::cache::ReplacementPolicy;
+
+/// One DSE sweep axis from a `param` declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamAxis {
+    pub key: String,
+    pub values: Vec<ParamValue>,
+}
+
+/// A single swept value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Bool(bool),
+    Name(String),
+}
+
+/// The elaborated form of one `.acadl` description.
+#[derive(Debug, Clone)]
+pub struct ElabArch {
+    pub name: String,
+    /// The validated architecture graph described by the file body.
+    pub ag: Ag,
+    /// The mapping-family binding, when the file declares one.
+    pub target: Option<TargetSpec>,
+    /// The `param` sweep axes, in file order.
+    pub params: Vec<ParamAxis>,
+}
+
+/// One point of a file-defined design space: the base target with a set
+/// of `param` values applied, plus the workload knobs (`tile`, `order`)
+/// the OMA generator reads.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub target: TargetSpec,
+    pub tile: Option<usize>,
+    pub order: Option<LoopOrder>,
+}
+
+impl ElabArch {
+    /// The base candidate: the `targets` binding with no params applied.
+    pub fn base_candidate(&self) -> Option<Candidate> {
+        self.target.as_ref().map(|t| Candidate {
+            target: t.clone(),
+            tile: None,
+            order: None,
+        })
+    }
+}
+
+/// Apply one swept `param` value onto a candidate.  Key/family validity
+/// was already checked during elaboration; this re-checks defensively so
+/// the DSE layer can call it on hand-built axes too.
+pub fn apply_param(c: &mut Candidate, key: &str, v: &ParamValue) -> Result<(), String> {
+    match (key, v) {
+        ("cache", ParamValue::Bool(b)) => match &mut c.target {
+            TargetSpec::Oma { cache, .. } => *cache = *b,
+            other => return Err(format!("param `cache` does not apply to {other:?}")),
+        },
+        ("mac_latency", ParamValue::Int(n)) if *n > 0 => match &mut c.target {
+            TargetSpec::Oma { mac_latency, .. } => *mac_latency = Some(*n as u64),
+            other => return Err(format!("param `mac_latency` does not apply to {other:?}")),
+        },
+        ("rows", ParamValue::Int(n)) if *n > 0 => match &mut c.target {
+            TargetSpec::Systolic { rows, .. } => *rows = *n as usize,
+            other => return Err(format!("param `rows` does not apply to {other:?}")),
+        },
+        ("cols", ParamValue::Int(n)) if *n > 0 => match &mut c.target {
+            TargetSpec::Systolic { cols, .. } => *cols = *n as usize,
+            other => return Err(format!("param `cols` does not apply to {other:?}")),
+        },
+        ("units", ParamValue::Int(n)) if *n > 0 => match &mut c.target {
+            TargetSpec::Gamma { units } => *units = *n as usize,
+            other => return Err(format!("param `units` does not apply to {other:?}")),
+        },
+        ("tile", ParamValue::Int(n)) if *n > 0 => c.tile = Some(*n as usize),
+        ("order", ParamValue::Name(name)) => {
+            c.order = Some(
+                LoopOrder::ALL
+                    .into_iter()
+                    .find(|o| o.name() == name)
+                    .ok_or_else(|| format!("unknown loop order `{name}`"))?,
+            );
+        }
+        (key, v) => return Err(format!("invalid param `{key}` value {v:?}")),
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- attrs
+
+/// Attribute extraction with duplicate/unknown detection.
+struct AttrSet<'a> {
+    span: Span,
+    attrs: &'a [ast::Attr],
+    used: Vec<bool>,
+}
+
+impl<'a> AttrSet<'a> {
+    fn new(span: Span, attrs: &'a [ast::Attr]) -> Self {
+        AttrSet {
+            span,
+            attrs,
+            used: vec![false; attrs.len()],
+        }
+    }
+
+    fn take(&mut self, key: &str) -> Result<Option<&'a ast::Attr>, AdlError> {
+        let mut found: Option<usize> = None;
+        for (i, a) in self.attrs.iter().enumerate() {
+            if a.key == key {
+                if found.is_some() {
+                    return Err(AdlError::at(a.span, format!("duplicate attribute `{key}`")));
+                }
+                found = Some(i);
+            }
+        }
+        match found {
+            Some(i) => {
+                self.used[i] = true;
+                let attrs: &'a [ast::Attr] = self.attrs;
+                Ok(Some(&attrs[i]))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn int(&mut self, key: &str, default: i64) -> Result<i64, AdlError> {
+        match self.take(key)? {
+            None => Ok(default),
+            Some(a) => match &a.value {
+                ValueExpr::Int(v) => Ok(*v),
+                other => Err(AdlError::at(
+                    a.span,
+                    format!("attribute `{key}` must be an integer, found {}", other.kind()),
+                )),
+            },
+        }
+    }
+
+    fn req_int(&mut self, key: &str) -> Result<i64, AdlError> {
+        match self.take(key)? {
+            None => Err(AdlError::at(
+                self.span,
+                format!("missing required attribute `{key}`"),
+            )),
+            Some(a) => match &a.value {
+                ValueExpr::Int(v) => Ok(*v),
+                other => Err(AdlError::at(
+                    a.span,
+                    format!("attribute `{key}` must be an integer, found {}", other.kind()),
+                )),
+            },
+        }
+    }
+
+    fn unsigned(&mut self, key: &str, default: u64) -> Result<u64, AdlError> {
+        let v = self.int(key, default as i64)?;
+        u64::try_from(v).map_err(|_| {
+            AdlError::at(self.span, format!("attribute `{key}` must be non-negative"))
+        })
+    }
+
+    fn req_unsigned(&mut self, key: &str) -> Result<u64, AdlError> {
+        let v = self.req_int(key)?;
+        u64::try_from(v).map_err(|_| {
+            AdlError::at(self.span, format!("attribute `{key}` must be non-negative"))
+        })
+    }
+
+    /// A u32-ranged attribute (bit widths): rejects out-of-range values
+    /// instead of silently truncating them.
+    fn unsigned_u32(&mut self, key: &str, default: u32) -> Result<u32, AdlError> {
+        let v = self.unsigned(key, default as u64)?;
+        u32::try_from(v).map_err(|_| {
+            AdlError::at(
+                self.span,
+                format!("attribute `{key}` out of range (max {})", u32::MAX),
+            )
+        })
+    }
+
+    fn boolean(&mut self, key: &str, default: bool) -> Result<bool, AdlError> {
+        match self.take(key)? {
+            None => Ok(default),
+            Some(a) => match &a.value {
+                ValueExpr::Bool(v) => Ok(*v),
+                other => Err(AdlError::at(
+                    a.span,
+                    format!(
+                        "attribute `{key}` must be true or false, found {}",
+                        other.kind()
+                    ),
+                )),
+            },
+        }
+    }
+
+    /// A latency: integer (constant cycles) or string (expression).
+    fn latency(&mut self, key: &str, default: u64) -> Result<Latency, AdlError> {
+        match self.take(key)? {
+            None => Ok(Latency::Const(default)),
+            Some(a) => match &a.value {
+                ValueExpr::Int(v) if *v >= 0 => Ok(Latency::Const(*v as u64)),
+                ValueExpr::Str(s) => Latency::parse(s)
+                    .map_err(|e| AdlError::at(a.span, format!("bad latency expression: {e}"))),
+                other => Err(AdlError::at(
+                    a.span,
+                    format!(
+                        "attribute `{key}` must be a non-negative integer or a quoted expression, found {}",
+                        other.kind()
+                    ),
+                )),
+            },
+        }
+    }
+
+    /// Mnemonic list: `ops = [load, store]`.
+    fn ops(&mut self) -> Result<BTreeSet<String>, AdlError> {
+        match self.take("ops")? {
+            None => Ok(BTreeSet::new()),
+            Some(a) => match &a.value {
+                ValueExpr::List(items) => {
+                    let mut out = BTreeSet::new();
+                    for it in items {
+                        match it {
+                            ValueExpr::Ident(s) | ValueExpr::Str(s) => {
+                                out.insert(s.clone());
+                            }
+                            other => {
+                                return Err(AdlError::at(
+                                    a.span,
+                                    format!("ops entries must be mnemonics, found {}", other.kind()),
+                                ))
+                            }
+                        }
+                    }
+                    Ok(out)
+                }
+                other => Err(AdlError::at(
+                    a.span,
+                    format!("attribute `ops` must be a list, found {}", other.kind()),
+                )),
+            },
+        }
+    }
+
+    fn policy(&mut self) -> Result<ReplacementPolicy, AdlError> {
+        match self.take("policy")? {
+            None => Ok(ReplacementPolicy::Lru),
+            Some(a) => match &a.value {
+                ValueExpr::Ident(s) => match s.as_str() {
+                    "lru" => Ok(ReplacementPolicy::Lru),
+                    "fifo" => Ok(ReplacementPolicy::Fifo),
+                    "plru" => Ok(ReplacementPolicy::Plru),
+                    "random" => Ok(ReplacementPolicy::Random),
+                    other => Err(AdlError::at(
+                        a.span,
+                        format!("unknown replacement policy `{other}` (lru|fifo|plru|random)"),
+                    )),
+                },
+                other => Err(AdlError::at(
+                    a.span,
+                    format!("attribute `policy` must be an identifier, found {}", other.kind()),
+                )),
+            },
+        }
+    }
+
+    /// Error on the first attribute no extractor consumed.
+    fn finish(self, class: &str) -> Result<(), AdlError> {
+        for (i, a) in self.attrs.iter().enumerate() {
+            if !self.used[i] {
+                return Err(AdlError::at(
+                    a.span,
+                    format!("unknown attribute `{}` for class {class}", a.key),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- objects
+
+fn storage_params(attrs: &mut AttrSet<'_>) -> Result<DataStorageParams, AdlError> {
+    let d = DataStorageParams::default();
+    Ok(DataStorageParams {
+        data_width: attrs.unsigned_u32("width", d.data_width)?,
+        max_concurrent_requests: attrs.unsigned("requests", d.max_concurrent_requests as u64)?
+            as usize,
+        read_write_ports: attrs.unsigned("ports", d.read_write_ports as u64)? as usize,
+        port_width: attrs.unsigned("port_width", d.port_width as u64)? as usize,
+    })
+}
+
+fn registers(decl: &ast::ObjectDecl, reg_prefix: &str) -> Vec<(String, Data)> {
+    decl.regs
+        .iter()
+        .map(|r| {
+            let name = format!("{reg_prefix}{}", r.name);
+            let data = match r.ty {
+                RegType::Int { width, init } => Data::int(width, init),
+                RegType::F32 { init } => Data::f32(init),
+                RegType::Vec { size, lanes } => Data::vec(size, lanes),
+            };
+            (name, data)
+        })
+        .collect()
+}
+
+/// Build one [`Object`] from its declaration.  `name` is the final
+/// (possibly instance-prefixed) object name; `reg_prefix` prefixes
+/// register names the same way.
+fn object_from_decl(
+    name: String,
+    decl: &ast::ObjectDecl,
+    reg_prefix: &str,
+) -> Result<Object, AdlError> {
+    if !decl.regs.is_empty() && decl.class != "RegisterFile" {
+        return Err(AdlError::at(
+            decl.class_span,
+            format!("`regs` block is only valid for RegisterFile, not {}", decl.class),
+        ));
+    }
+    let mut attrs = AttrSet::new(decl.span, &decl.attrs);
+    let kind = match decl.class.as_str() {
+        "PipelineStage" => ObjectKind::PipelineStage(PipelineStage {
+            latency: attrs.latency("latency", 1)?,
+        }),
+        "ExecuteStage" => ObjectKind::ExecuteStage(ExecuteStage {
+            latency: attrs.latency("latency", 1)?,
+        }),
+        "InstructionFetchStage" => ObjectKind::InstructionFetchStage(InstructionFetchStage {
+            latency: attrs.latency("latency", 1)?,
+            issue_buffer_size: attrs.unsigned("issue_buffer", 4)? as usize,
+        }),
+        "FunctionalUnit" => ObjectKind::FunctionalUnit(FunctionalUnit {
+            to_process: attrs.ops()?,
+            latency: attrs.latency("latency", 1)?,
+        }),
+        "MemoryAccessUnit" => ObjectKind::MemoryAccessUnit(MemoryAccessUnit {
+            to_process: attrs.ops()?,
+            latency: attrs.latency("latency", 1)?,
+        }),
+        "InstructionMemoryAccessUnit" => {
+            ObjectKind::InstructionMemoryAccessUnit(InstructionMemoryAccessUnit {
+                latency: attrs.latency("latency", 1)?,
+            })
+        }
+        "RegisterFile" => ObjectKind::RegisterFile(RegisterFile {
+            data_width: attrs.unsigned_u32("width", 32)?,
+            registers: registers(decl, reg_prefix),
+        }),
+        "SRAM" => ObjectKind::Sram(Sram {
+            address_range: (attrs.req_unsigned("base")?, attrs.req_unsigned("end")?),
+            read_latency: attrs.latency("read_latency", 1)?,
+            write_latency: attrs.latency("write_latency", 1)?,
+            ds: storage_params(&mut attrs)?,
+        }),
+        "DRAM" => ObjectKind::Dram(Dram {
+            address_range: (attrs.req_unsigned("base")?, attrs.req_unsigned("end")?),
+            banks: attrs.unsigned("banks", 8)? as usize,
+            row_bytes: attrs.unsigned("row_bytes", 1024)?,
+            t_rcd: attrs.unsigned("t_rcd", 14)?,
+            t_rp: attrs.unsigned("t_rp", 14)?,
+            t_ras: attrs.unsigned("t_ras", 33)?,
+            t_cas: attrs.unsigned("t_cas", 10)?,
+            ds: storage_params(&mut attrs)?,
+        }),
+        "SetAssociativeCache" => ObjectKind::Cache(SetAssociativeCache {
+            sets: attrs.unsigned("sets", 64)? as usize,
+            ways: attrs.unsigned("ways", 4)? as usize,
+            cache_line_size: attrs.unsigned("line", 64)?,
+            replacement_policy: attrs.policy()?,
+            hit_latency: attrs.latency("hit_latency", 1)?,
+            miss_latency: attrs.latency("miss_latency", 8)?,
+            write_allocate: attrs.boolean("write_allocate", true)?,
+            write_back: attrs.boolean("write_back", true)?,
+            ds: storage_params(&mut attrs)?,
+        }),
+        other => {
+            return Err(AdlError::at(
+                decl.class_span,
+                format!(
+                    "unknown ACADL class `{other}` (expected PipelineStage, ExecuteStage, \
+                     InstructionFetchStage, FunctionalUnit, MemoryAccessUnit, \
+                     InstructionMemoryAccessUnit, RegisterFile, SRAM, DRAM, or \
+                     SetAssociativeCache)"
+                ),
+            ))
+        }
+    };
+    attrs.finish(&decl.class)?;
+    Ok(Object::new(name, kind))
+}
+
+fn edge_kind(kind: &str, span: Span) -> Result<EdgeKind, AdlError> {
+    match kind {
+        "FORWARD" => Ok(EdgeKind::Forward),
+        "CONTAINS" => Ok(EdgeKind::Contains),
+        "READ_DATA" => Ok(EdgeKind::ReadData),
+        "WRITE_DATA" => Ok(EdgeKind::WriteData),
+        other => Err(AdlError::at(
+            span,
+            format!("unknown edge kind `{other}` (FORWARD|CONTAINS|READ_DATA|WRITE_DATA)"),
+        )),
+    }
+}
+
+// -------------------------------------------------------------- target
+
+fn target_spec(decl: &ast::TargetDecl) -> Result<TargetSpec, AdlError> {
+    let mut attrs = AttrSet::new(decl.span, &decl.attrs);
+    let spec = match decl.family.as_str() {
+        "oma" => TargetSpec::Oma {
+            cache: attrs.boolean("cache", true)?,
+            mac_latency: match attrs.take("mac_latency")? {
+                None => None,
+                Some(a) => match &a.value {
+                    ValueExpr::Int(v) if *v > 0 => Some(*v as u64),
+                    _ => {
+                        return Err(AdlError::at(
+                            a.span,
+                            "mac_latency must be a positive integer",
+                        ))
+                    }
+                },
+            },
+        },
+        "systolic" => TargetSpec::Systolic {
+            rows: pos_usize(&mut attrs, "rows")?,
+            cols: pos_usize(&mut attrs, "cols")?,
+        },
+        "gamma" => TargetSpec::Gamma {
+            units: pos_usize(&mut attrs, "units")?,
+        },
+        other => {
+            return Err(AdlError::at(
+                decl.span,
+                format!("unknown target family `{other}` (oma|systolic|gamma)"),
+            ))
+        }
+    };
+    attrs.finish(&format!("target family {}", decl.family))?;
+    Ok(spec)
+}
+
+fn pos_usize(attrs: &mut AttrSet<'_>, key: &str) -> Result<usize, AdlError> {
+    let v = attrs.req_int(key)?;
+    if v < 1 {
+        return Err(AdlError::at(
+            attrs.span,
+            format!("attribute `{key}` must be >= 1"),
+        ));
+    }
+    Ok(v as usize)
+}
+
+// -------------------------------------------------------------- params
+
+/// Sweepable keys per target family (tile/order are OMA workload knobs —
+/// the other generators ignore them, so sweeping them there would only
+/// create memo aliases).
+fn param_allowed(family: &TargetSpec, key: &str) -> bool {
+    match family {
+        TargetSpec::Oma { .. } => {
+            matches!(key, "cache" | "mac_latency" | "tile" | "order")
+        }
+        TargetSpec::Systolic { .. } => matches!(key, "rows" | "cols"),
+        TargetSpec::Gamma { .. } => matches!(key, "units"),
+    }
+}
+
+fn param_axis(
+    target: &Option<TargetSpec>,
+    decl: &ast::ParamDecl,
+) -> Result<ParamAxis, AdlError> {
+    let Some(t) = target else {
+        return Err(AdlError::at(
+            decl.span,
+            "param declarations require a `targets` binding",
+        ));
+    };
+    if !param_allowed(t, &decl.key) {
+        return Err(AdlError::at(
+            decl.span,
+            format!(
+                "param `{}` does not apply to this target family",
+                decl.key
+            ),
+        ));
+    }
+    if decl.values.is_empty() {
+        return Err(AdlError::at(decl.span, "param value list is empty"));
+    }
+    let mut values = Vec::with_capacity(decl.values.len());
+    for v in &decl.values {
+        let pv = match v {
+            ValueExpr::Int(i) => ParamValue::Int(*i),
+            ValueExpr::Bool(b) => ParamValue::Bool(*b),
+            ValueExpr::Ident(s) => ParamValue::Name(s.clone()),
+            other => {
+                return Err(AdlError::at(
+                    decl.span,
+                    format!("unsupported param value ({})", other.kind()),
+                ))
+            }
+        };
+        // Validate each value by applying it to a scratch candidate.
+        let mut probe = Candidate {
+            target: t.clone(),
+            tile: None,
+            order: None,
+        };
+        apply_param(&mut probe, &decl.key, &pv)
+            .map_err(|e| AdlError::at(decl.span, e))?;
+        values.push(pv);
+    }
+    Ok(ParamAxis {
+        key: decl.key.clone(),
+        values,
+    })
+}
+
+// --------------------------------------------------------- elaboration
+
+/// Elaborate a parsed description into its validated graph + bindings.
+pub fn elaborate(arch: &ast::Arch) -> Result<ElabArch, AdlError> {
+    let mut ag = Ag::new();
+    let target = match &arch.target {
+        Some(t) => Some(target_spec(t)?),
+        None => None,
+    };
+    let mut params: Vec<ParamAxis> = Vec::new();
+    let mut templates: HashMap<&str, &ast::TemplateDecl> = HashMap::new();
+    // (instance, port) -> exported half-edge.
+    let mut ports: HashMap<(String, String), DanglingEdge> = HashMap::new();
+
+    let lookup = |ag: &Ag, name: &str, span: Span| {
+        ag.id(name)
+            .ok_or_else(|| AdlError::at(span, format!("unknown object `{name}`")))
+    };
+
+    for item in &arch.items {
+        match item {
+            ast::Item::Object(decl) => {
+                let obj = object_from_decl(decl.name.clone(), decl, "")?;
+                ag.add(obj)
+                    .map_err(|e| AdlError::at(decl.span, e.to_string()))?;
+            }
+            ast::Item::Connect(c) => {
+                let src = lookup(&ag, &c.src, c.span)?;
+                let dst = lookup(&ag, &c.dst, c.span)?;
+                let kind = edge_kind(&c.kind, c.span)?;
+                // Lower through the template machinery: a connect is the
+                // join of a source half-edge and a target half-edge.
+                connect_dangling(
+                    &mut ag,
+                    DanglingEdge::from_source(kind, src),
+                    DanglingEdge::to_target(kind, dst),
+                )
+                .map_err(|e| {
+                    AdlError::at(
+                        c.span,
+                        format!("cannot connect `{}` -> `{}`: {e}", c.src, c.dst),
+                    )
+                })?;
+            }
+            ast::Item::Param(p) => {
+                if params.iter().any(|a| a.key == p.key) {
+                    return Err(AdlError::at(
+                        p.span,
+                        format!("duplicate param axis `{}`", p.key),
+                    ));
+                }
+                params.push(param_axis(&target, p)?);
+            }
+            ast::Item::Template(t) => {
+                if templates.insert(t.name.as_str(), t).is_some() {
+                    return Err(AdlError::at(
+                        t.span,
+                        format!("duplicate template `{}`", t.name),
+                    ));
+                }
+            }
+            ast::Item::Instance(inst) => {
+                let Some(tpl) = templates.get(inst.template.as_str()) else {
+                    return Err(AdlError::at(
+                        inst.span,
+                        format!("unknown template `{}`", inst.template),
+                    ));
+                };
+                let prefix = format!("{}.", inst.prefix);
+                for decl in &tpl.objects {
+                    let obj = object_from_decl(
+                        format!("{prefix}{}", decl.name),
+                        decl,
+                        &prefix,
+                    )?;
+                    ag.add(obj)
+                        .map_err(|e| AdlError::at(inst.span, e.to_string()))?;
+                }
+                for c in &tpl.connects {
+                    let src = lookup(&ag, &format!("{prefix}{}", c.src), c.span)?;
+                    let dst = lookup(&ag, &format!("{prefix}{}", c.dst), c.span)?;
+                    let kind = edge_kind(&c.kind, c.span)?;
+                    connect_dangling(
+                        &mut ag,
+                        DanglingEdge::from_source(kind, src),
+                        DanglingEdge::to_target(kind, dst),
+                    )
+                    .map_err(|e| {
+                        AdlError::at(
+                            c.span,
+                            format!(
+                                "cannot connect `{prefix}{}` -> `{prefix}{}`: {e}",
+                                c.src, c.dst
+                            ),
+                        )
+                    })?;
+                }
+                for d in &tpl.danglings {
+                    let obj = lookup(&ag, &format!("{prefix}{}", d.obj), d.span)?;
+                    let kind = edge_kind(&d.kind, d.span)?;
+                    let edge = match d.dir {
+                        DangleDir::From => DanglingEdge::from_source(kind, obj),
+                        DangleDir::To => DanglingEdge::to_target(kind, obj),
+                    };
+                    let key = (inst.prefix.clone(), d.name.clone());
+                    if ports.insert(key, edge).is_some() {
+                        return Err(AdlError::at(
+                            d.span,
+                            format!(
+                                "duplicate dangling edge `{}` on instance `{}`",
+                                d.name, inst.prefix
+                            ),
+                        ));
+                    }
+                }
+            }
+            ast::Item::Join(j) => {
+                let a = port(&mut ports, &j.a, j.span)?;
+                let b = port(&mut ports, &j.b, j.span)?;
+                connect_dangling(&mut ag, a, b).map_err(|e| {
+                    AdlError::at(
+                        j.span,
+                        format!(
+                            "cannot join `{}`.{} -> `{}`.{}: {e}",
+                            j.a.instance, j.a.port, j.b.instance, j.b.port
+                        ),
+                    )
+                })?;
+            }
+            ast::Item::Attach(a) => {
+                let half = port(&mut ports, &a.port, a.span)?;
+                let obj = lookup(&ag, &a.obj, a.span)?;
+                connect_dangling_to(&mut ag, half, obj).map_err(|e| {
+                    AdlError::at(
+                        a.span,
+                        format!(
+                            "cannot attach `{}`.{} -> `{}`: {e}",
+                            a.port.instance, a.port.port, a.obj
+                        ),
+                    )
+                })?;
+            }
+        }
+    }
+
+    ag.validate()
+        .map_err(|e| AdlError::at(arch.name_span, format!("graph validation failed: {e}")))?;
+    Ok(ElabArch {
+        name: arch.name.clone(),
+        ag,
+        target,
+        params,
+    })
+}
+
+/// Look up and **consume** an exported half-edge: a dangling edge can be
+/// joined or attached exactly once (one half-edge, one connection —
+/// §4.2); a second use is an error rather than a silent duplicate edge.
+fn port(
+    ports: &mut HashMap<(String, String), DanglingEdge>,
+    r: &ast::PortRef,
+    span: Span,
+) -> Result<DanglingEdge, AdlError> {
+    ports
+        .remove(&(r.instance.clone(), r.port.clone()))
+        .ok_or_else(|| {
+            AdlError::at(
+                span,
+                format!(
+                    "unknown or already-connected dangling edge `{}`.{}",
+                    r.instance, r.port
+                ),
+            )
+        })
+}
+
+// ---------------------------------------------------------- equivalence
+
+/// Order-insensitive graph equivalence: same objects (by name, with
+/// identical attributes and register contents) and the same edge
+/// multiset.  Returns a human-readable first difference.
+pub fn ag_equiv(a: &Ag, b: &Ag) -> Result<(), String> {
+    let canon = |ag: &Ag| -> BTreeMap<String, String> {
+        ag.objects
+            .iter()
+            .map(|o| (o.name.clone(), printer::print_object(o)))
+            .collect()
+    };
+    let am = canon(a);
+    let bm = canon(b);
+    for (name, sa) in &am {
+        match bm.get(name) {
+            None => return Err(format!("object `{name}` present only in the first graph")),
+            Some(sb) if sb != sa => {
+                return Err(format!(
+                    "object `{name}` differs:\n--- first\n{sa}--- second\n{sb}"
+                ))
+            }
+            _ => {}
+        }
+    }
+    for name in bm.keys() {
+        if !am.contains_key(name) {
+            return Err(format!("object `{name}` present only in the second graph"));
+        }
+    }
+    let edge_list = |ag: &Ag| -> Vec<(String, String, String)> {
+        let mut v: Vec<_> = ag
+            .edges
+            .iter()
+            .map(|e| {
+                (
+                    ag.name(e.src).to_string(),
+                    ag.name(e.dst).to_string(),
+                    e.kind.to_string(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    let ea = edge_list(a);
+    let eb = edge_list(b);
+    if ea != eb {
+        for e in &ea {
+            if !eb.contains(e) {
+                return Err(format!(
+                    "edge {} `{}` -> `{}` present only in the first graph",
+                    e.2, e.0, e.1
+                ));
+            }
+        }
+        for e in &eb {
+            if !ea.contains(e) {
+                return Err(format!(
+                    "edge {} `{}` -> `{}` present only in the second graph",
+                    e.2, e.0, e.1
+                ));
+            }
+        }
+        return Err(format!(
+            "edge multiplicities differ ({} vs {} edges)",
+            ea.len(),
+            eb.len()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adl::{load_str, parse};
+
+    const TINY: &str = r#"
+arch "tiny"
+object "ex0" : ExecuteStage {
+  latency = 1
+}
+object "fu0" : FunctionalUnit {
+  ops = [add, mac]
+  latency = 2
+}
+object "rf0" : RegisterFile {
+  width = 32
+  regs {
+    "r0" : i32 = 0
+    "r1" : i32 = 7
+  }
+}
+connect "ex0" -> "fu0" : CONTAINS
+connect "rf0" -> "fu0" : READ_DATA
+connect "fu0" -> "rf0" : WRITE_DATA
+"#;
+
+    #[test]
+    fn tiny_arch_elaborates() {
+        let e = load_str(TINY).unwrap();
+        assert_eq!(e.ag.len(), 3);
+        assert_eq!(e.ag.edges.len(), 3);
+        assert_eq!(e.ag.reg_count(), 2);
+        assert_eq!(e.ag.reg(e.ag.reg_id("r1").unwrap()).init.payload.as_int(), 7);
+        let fu = e.ag.id("fu0").unwrap();
+        assert!(e.ag.kind(fu).to_process().unwrap().contains("mac"));
+        assert_eq!(e.ag.kind(fu).latency().unwrap().eval_const().unwrap(), 2);
+    }
+
+    #[test]
+    fn unknown_class_and_attr_diagnosed_with_spans() {
+        let e = load_str("arch \"x\"\nobject \"a\" : Sram2 {\n}").unwrap_err();
+        assert!(e.to_string().contains("unknown ACADL class"), "{e}");
+        assert_eq!(e.span.unwrap().line, 2);
+
+        let e = load_str("arch \"x\"\nobject \"a\" : ExecuteStage {\n  wombat = 3\n}")
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown attribute `wombat`"), "{e}");
+        assert_eq!(e.span.unwrap().line, 3);
+    }
+
+    #[test]
+    fn invalid_edges_diagnosed() {
+        let src = r#"
+arch "x"
+object "rf0" : RegisterFile {
+  width = 32
+  regs {
+    "r0" : i32 = 0
+  }
+}
+object "ex0" : ExecuteStage {
+  latency = 1
+}
+connect "rf0" -> "ex0" : FORWARD
+"#;
+        let e = load_str(src).unwrap_err();
+        assert!(e.to_string().contains("FORWARD"), "{e}");
+        assert_eq!(e.span.unwrap().line, 12);
+
+        let e = load_str("arch \"x\"\nconnect \"a\" -> \"b\" : FORWARD").unwrap_err();
+        assert!(e.to_string().contains("unknown object `a`"), "{e}");
+    }
+
+    #[test]
+    fn validation_failures_surface() {
+        // An orphan functional unit fails whole-graph validation.
+        let e = load_str(
+            "arch \"x\"\nobject \"fu0\" : FunctionalUnit {\n  ops = [add]\n  latency = 1\n}",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("graph validation failed"), "{e}");
+    }
+
+    #[test]
+    fn targets_and_params_elaborate() {
+        let src = r#"
+arch "sweep" targets systolic {
+  rows = 2
+  cols = 4
+}
+param rows in [2, 4, 8]
+param cols in [2, 4]
+"#;
+        let e = load_str(src).unwrap();
+        assert_eq!(
+            e.target,
+            Some(TargetSpec::Systolic { rows: 2, cols: 4 })
+        );
+        assert_eq!(e.params.len(), 2);
+        assert_eq!(e.params[0].values.len(), 3);
+        let mut c = e.base_candidate().unwrap();
+        apply_param(&mut c, "rows", &ParamValue::Int(8)).unwrap();
+        assert_eq!(c.target, TargetSpec::Systolic { rows: 8, cols: 4 });
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        let e = load_str("arch \"x\" param rows in [2]").unwrap_err();
+        assert!(e.to_string().contains("targets"), "{e}");
+
+        let e = load_str(
+            "arch \"x\" targets gamma {\n  units = 1\n}\nparam rows in [2]",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("does not apply"), "{e}");
+
+        let e = load_str(
+            "arch \"x\" targets oma {\n  cache = true\n}\nparam order in [ijk, bogus]",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unknown loop order"), "{e}");
+    }
+
+    #[test]
+    fn templates_expand_through_dangling_edges() {
+        let src = r#"
+arch "pair"
+template Pe {
+  object "ex" : ExecuteStage {
+    latency = 1
+  }
+  object "fu" : FunctionalUnit {
+    ops = [macf]
+    latency = 1
+  }
+  object "rf" : RegisterFile {
+    width = 32
+    regs {
+      "acc" : f32 = 0
+    }
+  }
+  connect "ex" -> "fu" : CONTAINS
+  connect "rf" -> "fu" : READ_DATA
+  connect "fu" -> "rf" : WRITE_DATA
+  dangling "out" : WRITE_DATA from "fu"
+  dangling "in" : WRITE_DATA to "rf"
+}
+instance "a" : Pe
+instance "b" : Pe
+join "a".out -> "b".in
+"#;
+        let e = load_str(src).unwrap();
+        assert_eq!(e.ag.len(), 6);
+        // 3 internal edges per instance + 1 joined; the unconnected
+        // half-edges (`a`.in, `b`.out) never materialize.
+        assert_eq!(e.ag.edges.len(), 7);
+        let fu_a = e.ag.id("a.fu").unwrap();
+        let rf_b = e.ag.id("b.rf").unwrap();
+        assert!(e.ag.writable_rfs(fu_a).contains(&rf_b));
+        // Registers are instance-prefixed.
+        assert!(e.ag.reg_id("a.acc").is_some());
+        assert!(e.ag.reg_id("b.acc").is_some());
+    }
+
+    #[test]
+    fn join_errors_diagnosed() {
+        let src = r#"
+arch "pair"
+template T {
+  object "ex" : ExecuteStage {
+    latency = 1
+  }
+  object "fu" : FunctionalUnit {
+    ops = [add]
+    latency = 1
+  }
+  connect "ex" -> "fu" : CONTAINS
+  dangling "out" : WRITE_DATA from "fu"
+}
+instance "a" : T
+instance "b" : T
+join "a".out -> "b".out
+"#;
+        let e = load_str(src).unwrap_err();
+        assert!(e.to_string().contains("cannot join"), "{e}");
+
+        let e = load_str("arch \"x\"\ninstance \"a\" : Nope").unwrap_err();
+        assert!(e.to_string().contains("unknown template"), "{e}");
+    }
+
+    #[test]
+    fn dangling_edges_connect_exactly_once() {
+        let base = r#"
+arch "pair"
+template Pe {
+  object "ex" : ExecuteStage {
+    latency = 1
+  }
+  object "fu" : FunctionalUnit {
+    ops = [macf]
+    latency = 1
+  }
+  object "rf" : RegisterFile {
+    width = 32
+    regs {
+      "acc" : f32 = 0
+    }
+  }
+  connect "ex" -> "fu" : CONTAINS
+  connect "rf" -> "fu" : READ_DATA
+  connect "fu" -> "rf" : WRITE_DATA
+  dangling "out" : WRITE_DATA from "fu"
+  dangling "in" : WRITE_DATA to "rf"
+}
+instance "a" : Pe
+instance "b" : Pe
+instance "c" : Pe
+join "a".out -> "b".in
+"#;
+        // Re-joining a consumed half-edge is an error, not a duplicate
+        // edge (one half-edge, one connection — §4.2).
+        let e = load_str(&format!("{base}join \"a\".out -> \"c\".in\n")).unwrap_err();
+        assert!(e.to_string().contains("already-connected"), "{e}");
+        // Same for attach after join.
+        let e = load_str(&format!("{base}attach \"a\".out -> \"c.rf\"\n")).unwrap_err();
+        assert!(e.to_string().contains("already-connected"), "{e}");
+    }
+
+    #[test]
+    fn oversized_widths_rejected_not_truncated() {
+        let e = load_str(
+            "arch \"x\"\nobject \"rf0\" : RegisterFile {\n  width = 4294967296\n  regs {\n    \"r0\" : i32 = 0\n  }\n}",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+    }
+
+    #[test]
+    fn ag_equiv_detects_differences() {
+        let a = load_str(TINY).unwrap().ag;
+        let b = load_str(TINY).unwrap().ag;
+        ag_equiv(&a, &b).unwrap();
+        // Drop an edge.
+        let mut c = load_str(TINY).unwrap().ag;
+        c.edges.pop();
+        let msg = ag_equiv(&a, &c).unwrap_err();
+        assert!(msg.contains("only in the first graph"), "{msg}");
+        // Change an attribute.
+        let d = load_str(&TINY.replace("latency = 2", "latency = 3")).unwrap().ag;
+        let msg = ag_equiv(&a, &d).unwrap_err();
+        assert!(msg.contains("`fu0` differs"), "{msg}");
+    }
+
+    #[test]
+    fn parse_is_pure_syntax() {
+        // The parser accepts semantically-wrong input; elaboration rejects.
+        let ast = parse("arch \"x\"\nobject \"a\" : Nope {\n}").unwrap();
+        assert!(elaborate(&ast).is_err());
+    }
+}

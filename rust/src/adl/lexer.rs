@@ -1,0 +1,386 @@
+//! Lexer for the `.acadl` concrete syntax: a flat token stream with
+//! line/column spans, so parser and elaborator diagnostics can point at
+//! the offending source position.
+//!
+//! Tokens: identifiers (`arch`, `SRAM`, `lru` — keywords are contextual),
+//! quoted names/strings (`"ex[0][1]"`, latency expressions), integers
+//! (decimal or `0x` hex, optionally negative), floats (`1.5`, `-0.25`),
+//! and the punctuation `{ } [ ] ( ) : , = . ->`.  Comments run from `//`
+//! or `#` to end of line.
+
+use std::fmt;
+
+use crate::adl::{AdlError, Span};
+
+/// One lexical token (payload only; the span lives in [`Lexed`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// Quoted string: object/register names, latency expressions.
+    Str(String),
+    Int(i64),
+    Float(f64),
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    LParen,
+    RParen,
+    Colon,
+    Comma,
+    Eq,
+    Dot,
+    Arrow,
+    /// Synthetic end-of-input marker (simplifies the parser's lookahead).
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "`{s}`"),
+            Tok::Str(s) => write!(f, "\"{s}\""),
+            Tok::Int(v) => write!(f, "`{v}`"),
+            Tok::Float(v) => write!(f, "`{v}`"),
+            Tok::LBrace => f.write_str("`{`"),
+            Tok::RBrace => f.write_str("`}`"),
+            Tok::LBracket => f.write_str("`[`"),
+            Tok::RBracket => f.write_str("`]`"),
+            Tok::LParen => f.write_str("`(`"),
+            Tok::RParen => f.write_str("`)`"),
+            Tok::Colon => f.write_str("`:`"),
+            Tok::Comma => f.write_str("`,`"),
+            Tok::Eq => f.write_str("`=`"),
+            Tok::Dot => f.write_str("`.`"),
+            Tok::Arrow => f.write_str("`->`"),
+            Tok::Eof => f.write_str("end of input"),
+        }
+    }
+}
+
+/// A token plus the source position where it starts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lexed {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    fn span(&self) -> Span {
+        Span {
+            line: self.line,
+            col: self.col,
+        }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> AdlError {
+        AdlError::at(self.span(), msg)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.bytes.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.bytes.get(self.pos).copied()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(b)
+    }
+
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b) if b.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'#') => self.skip_line(),
+                Some(b'/') if self.peek2() == Some(b'/') => self.skip_line(),
+                _ => break,
+            }
+        }
+    }
+
+    fn skip_line(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.pos;
+        while self
+            .peek()
+            .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_')
+        {
+            self.bump();
+        }
+        String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned()
+    }
+
+    fn string(&mut self) -> Result<String, AdlError> {
+        // Opening quote already seen by the caller.
+        self.bump();
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None | Some(b'\n') => {
+                    return Err(self.err("unterminated string (missing closing `\"`)"))
+                }
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    other => {
+                        return Err(self.err(format!(
+                            "bad string escape `\\{}`",
+                            other.map(|b| b as char).unwrap_or(' ')
+                        )))
+                    }
+                },
+                Some(b) if b < 0x80 => out.push(b as char),
+                Some(b) => {
+                    // Multi-byte UTF-8: copy the full sequence verbatim.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0xF0..=0xF7 => 4,
+                        0xE0..=0xEF => 3,
+                        0xC0..=0xDF => 2,
+                        _ => 1,
+                    };
+                    for _ in 1..len {
+                        self.bump();
+                    }
+                    let end = self.pos.min(self.bytes.len());
+                    match std::str::from_utf8(&self.bytes[start..end]) {
+                        Ok(s) => out.push_str(s),
+                        Err(_) => return Err(self.err("bad utf-8 in string")),
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self, neg: bool) -> Result<Tok, AdlError> {
+        if neg {
+            self.bump(); // the `-`
+        }
+        let start = self.pos;
+        if self.peek() == Some(b'0') && matches!(self.peek2(), Some(b'x') | Some(b'X')) {
+            self.bump();
+            self.bump();
+            let hstart = self.pos;
+            while self.peek().is_some_and(|b| b.is_ascii_hexdigit()) {
+                self.bump();
+            }
+            let text = std::str::from_utf8(&self.bytes[hstart..self.pos]).unwrap_or("");
+            let v = i64::from_str_radix(text, 16)
+                .map_err(|_| self.err(format!("bad hex literal `0x{text}`")))?;
+            return Ok(Tok::Int(if neg { -v } else { v }));
+        }
+        while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+            self.bump();
+        }
+        let is_float = self.peek() == Some(b'.')
+            && self.peek2().is_some_and(|b| b.is_ascii_digit());
+        if is_float {
+            self.bump(); // `.`
+            while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+                self.bump();
+            }
+            let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+            let v: f64 = text
+                .parse()
+                .map_err(|_| self.err(format!("bad float literal `{text}`")))?;
+            return Ok(Tok::Float(if neg { -v } else { v }));
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        let v: i64 = text
+            .parse()
+            .map_err(|_| self.err(format!("bad integer literal `{text}`")))?;
+        Ok(Tok::Int(if neg { -v } else { v }))
+    }
+}
+
+/// Lex `src` into a token stream ending with [`Tok::Eof`].
+pub fn lex(src: &str) -> Result<Vec<Lexed>, AdlError> {
+    let mut lx = Lexer {
+        bytes: src.as_bytes(),
+        pos: 0,
+        line: 1,
+        col: 1,
+    };
+    let mut out = Vec::new();
+    loop {
+        lx.skip_trivia();
+        let span = lx.span();
+        let Some(b) = lx.peek() else {
+            out.push(Lexed {
+                tok: Tok::Eof,
+                span,
+            });
+            return Ok(out);
+        };
+        let tok = match b {
+            b'{' => {
+                lx.bump();
+                Tok::LBrace
+            }
+            b'}' => {
+                lx.bump();
+                Tok::RBrace
+            }
+            b'[' => {
+                lx.bump();
+                Tok::LBracket
+            }
+            b']' => {
+                lx.bump();
+                Tok::RBracket
+            }
+            b'(' => {
+                lx.bump();
+                Tok::LParen
+            }
+            b')' => {
+                lx.bump();
+                Tok::RParen
+            }
+            b':' => {
+                lx.bump();
+                Tok::Colon
+            }
+            b',' => {
+                lx.bump();
+                Tok::Comma
+            }
+            b'=' => {
+                lx.bump();
+                Tok::Eq
+            }
+            b'.' => {
+                lx.bump();
+                Tok::Dot
+            }
+            b'-' => {
+                if lx.peek2() == Some(b'>') {
+                    lx.bump();
+                    lx.bump();
+                    Tok::Arrow
+                } else if lx.peek2().is_some_and(|c| c.is_ascii_digit()) {
+                    lx.number(true)?
+                } else {
+                    return Err(lx.err("stray `-` (expected `->` or a negative number)"));
+                }
+            }
+            b'"' => Tok::Str(lx.string()?),
+            c if c.is_ascii_digit() => lx.number(false)?,
+            c if c.is_ascii_alphabetic() || c == b'_' => Tok::Ident(lx.ident()),
+            c => return Err(lx.err(format!("unexpected character `{}`", c as char))),
+        };
+        out.push(Lexed { tok, span });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|l| l.tok).collect()
+    }
+
+    #[test]
+    fn punctuation_and_idents() {
+        assert_eq!(
+            toks("arch \"x\" { a = 1 }"),
+            vec![
+                Tok::Ident("arch".into()),
+                Tok::Str("x".into()),
+                Tok::LBrace,
+                Tok::Ident("a".into()),
+                Tok::Eq,
+                Tok::Int(1),
+                Tok::RBrace,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(toks("0x10 -4 1.5 -0.25 0"), vec![
+            Tok::Int(16),
+            Tok::Int(-4),
+            Tok::Float(1.5),
+            Tok::Float(-0.25),
+            Tok::Int(0),
+            Tok::Eof,
+        ]);
+    }
+
+    #[test]
+    fn arrow_vs_minus() {
+        assert_eq!(
+            toks("\"a\" -> \"b\""),
+            vec![
+                Tok::Str("a".into()),
+                Tok::Arrow,
+                Tok::Str("b".into()),
+                Tok::Eof
+            ]
+        );
+        assert!(lex("a - b").is_err());
+    }
+
+    #[test]
+    fn comments_skipped_and_spans_tracked() {
+        let l = lex("// c1\n# c2\n  arch").unwrap();
+        assert_eq!(l[0].tok, Tok::Ident("arch".into()));
+        assert_eq!(l[0].span.line, 3);
+        assert_eq!(l[0].span.col, 3);
+    }
+
+    #[test]
+    fn strings_with_escapes_and_brackets() {
+        assert_eq!(
+            toks(r#""ex[0][1]" "v[0].3" "a\"b" "1 + is_mac * 3""#),
+            vec![
+                Tok::Str("ex[0][1]".into()),
+                Tok::Str("v[0].3".into()),
+                Tok::Str("a\"b".into()),
+                Tok::Str("1 + is_mac * 3".into()),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn errors_carry_positions() {
+        let e = lex("a\n  \"oops").unwrap_err();
+        assert_eq!(e.span.unwrap().line, 2);
+        let e = lex("$").unwrap_err();
+        assert!(e.to_string().contains("unexpected character"));
+    }
+}

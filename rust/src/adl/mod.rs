@@ -1,0 +1,101 @@
+//! The ACADL textual frontend: parse, elaborate, and round-trip `.acadl`
+//! architecture descriptions.
+//!
+//! The paper's central artifact is the *language* — Listings 1–3 define
+//! accelerators as class/template descriptions.  This module gives the
+//! repo a concrete textual syntax for it, so architectures arrive as
+//! files (or inline job-spec strings) instead of recompiled Rust:
+//!
+//! * [`lexer`] / [`parser`] — a spanned token stream and a
+//!   recursive-descent parser producing the [`ast`] of one `arch`
+//!   description: object declarations with attributes and latencies,
+//!   `connect` statements, templates with dangling edges
+//!   (`template` / `instance` / `join` / `attach`), and a `param` block
+//!   declaring DSE sweep axes.
+//! * [`elab`] — the elaborator: lowers the AST through the existing
+//!   [`crate::acadl_core::template`] machinery (every edge is formed by
+//!   joining half-edges) into a validated [`Ag`], resolves the optional
+//!   `targets` binding to a serializable
+//!   [`TargetSpec`](crate::coordinator::job::TargetSpec), and reports
+//!   rich `line:col` diagnostics ([`AdlError`]).
+//! * [`printer`] — the canonical pretty-printer.  `parse(print(ag))`
+//!   reproduces the graph exactly ([`elab::ag_equiv`]), and printing is
+//!   byte-idempotent: `print(parse(print(parse(src))))
+//!   == print(parse(src))` — the contract behind `acadl-cli fmt`.
+//!
+//! Grammar sketch (see DESIGN.md §"ACADL textual frontend" for the full
+//! version):
+//!
+//! ```text
+//! file     := 'arch' name [ 'targets' IDENT '{' attr* '}' ] item*
+//! item     := object | connect | param | template | instance | join | attach
+//! object   := 'object' name ':' CLASS '{' (attr | regs)* '}'
+//! regs     := 'regs' '{' (name ':' regtype)* '}'
+//! regtype  := 'i'WIDTH '=' INT | 'f32' '=' NUM | 'vec' '(' INT ',' INT ')'
+//! connect  := 'connect' name '->' name ':' EDGE_KIND
+//! param    := 'param' IDENT 'in' '[' value (',' value)* ']'
+//! template := 'template' IDENT '{' (object | connect | dangling)* '}'
+//! dangling := 'dangling' name ':' EDGE_KIND ('from'|'to') name
+//! instance := 'instance' name ':' IDENT
+//! join     := 'join' name '.' name '->' name '.' name
+//! attach   := 'attach' name '.' name '->' name
+//! name     := IDENT | STRING      (quote names containing `[ ] .`)
+//! ```
+
+pub mod ast;
+pub mod elab;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+
+pub use elab::{ag_equiv, elaborate, ElabArch, ParamAxis, ParamValue};
+pub use parser::parse;
+pub use printer::{print_arch, print_elab};
+
+use std::fmt;
+
+/// A 1-based source position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A frontend diagnostic: message plus (when known) the source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdlError {
+    pub span: Option<Span>,
+    pub msg: String,
+}
+
+impl AdlError {
+    pub fn at(span: Span, msg: impl Into<String>) -> Self {
+        AdlError {
+            span: Some(span),
+            msg: msg.into(),
+        }
+    }
+
+    pub fn global(msg: impl Into<String>) -> Self {
+        AdlError {
+            span: None,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl fmt::Display for AdlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.span {
+            Some(s) => write!(f, "{}:{}: {}", s.line, s.col, self.msg),
+            None => f.write_str(&self.msg),
+        }
+    }
+}
+
+impl std::error::Error for AdlError {}
+
+/// Parse and elaborate one `.acadl` source string.
+pub fn load_str(src: &str) -> Result<ElabArch, AdlError> {
+    elaborate(&parse(src)?)
+}

@@ -1,0 +1,623 @@
+//! Recursive-descent parser for the `.acadl` grammar (see the module docs
+//! of [`crate::adl`] for the grammar sketch).  Produces the spanned
+//! [`ast::Arch`]; all semantic checking is deferred to the elaborator.
+
+use crate::adl::ast::*;
+use crate::adl::lexer::{lex, Lexed, Tok};
+use crate::adl::{AdlError, Span};
+
+struct Parser {
+    toks: Vec<Lexed>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+
+    fn bump(&mut self) -> Lexed {
+        let l = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        l
+    }
+
+    fn err(&self, msg: impl Into<String>) -> AdlError {
+        AdlError::at(self.span(), msg)
+    }
+
+    /// Consume a keyword (contextual identifier).
+    fn expect_kw(&mut self, kw: &str) -> Result<Span, AdlError> {
+        match self.peek() {
+            Tok::Ident(s) if s == kw => Ok(self.bump().span),
+            other => Err(self.err(format!("expected `{kw}`, found {other}"))),
+        }
+    }
+
+    fn expect_tok(&mut self, want: Tok, desc: &str) -> Result<Span, AdlError> {
+        if *self.peek() == want {
+            Ok(self.bump().span)
+        } else {
+            Err(self.err(format!("expected {desc}, found {}", self.peek())))
+        }
+    }
+
+    /// A bare identifier (class names, edge kinds, param keys).
+    fn ident(&mut self, what: &str) -> Result<(String, Span), AdlError> {
+        match self.peek().clone() {
+            Tok::Ident(s) => Ok((s, self.bump().span)),
+            other => Err(self.err(format!("expected {what}, found {other}"))),
+        }
+    }
+
+    /// A name: quoted string or bare identifier.
+    fn name(&mut self, what: &str) -> Result<(String, Span), AdlError> {
+        match self.peek().clone() {
+            Tok::Ident(s) | Tok::Str(s) => Ok((s, self.bump().span)),
+            other => Err(self.err(format!("expected {what}, found {other}"))),
+        }
+    }
+
+    fn value(&mut self) -> Result<ValueExpr, AdlError> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(ValueExpr::Int(v))
+            }
+            Tok::Float(v) => {
+                self.bump();
+                Ok(ValueExpr::Float(v))
+            }
+            Tok::Str(s) => {
+                self.bump();
+                Ok(ValueExpr::Str(s))
+            }
+            Tok::Ident(s) => {
+                self.bump();
+                match s.as_str() {
+                    "true" => Ok(ValueExpr::Bool(true)),
+                    "false" => Ok(ValueExpr::Bool(false)),
+                    _ => Ok(ValueExpr::Ident(s)),
+                }
+            }
+            Tok::LBracket => {
+                self.bump();
+                let mut items = Vec::new();
+                if *self.peek() == Tok::RBracket {
+                    self.bump();
+                    return Ok(ValueExpr::List(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Tok::Comma => {
+                            self.bump();
+                        }
+                        Tok::RBracket => {
+                            self.bump();
+                            return Ok(ValueExpr::List(items));
+                        }
+                        other => {
+                            return Err(
+                                self.err(format!("expected `,` or `]` in list, found {other}"))
+                            )
+                        }
+                    }
+                }
+            }
+            other => Err(self.err(format!("expected a value, found {other}"))),
+        }
+    }
+
+    /// `key = value`, where the current token is the key identifier.
+    fn attr(&mut self) -> Result<Attr, AdlError> {
+        let (key, span) = self.ident("an attribute name")?;
+        self.expect_tok(Tok::Eq, "`=`")?;
+        let value = self.value()?;
+        Ok(Attr { key, span, value })
+    }
+
+    /// `'{' attr* '}'`
+    fn attr_block(&mut self) -> Result<Vec<Attr>, AdlError> {
+        self.expect_tok(Tok::LBrace, "`{`")?;
+        let mut attrs = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            attrs.push(self.attr()?);
+        }
+        self.bump(); // `}`
+        Ok(attrs)
+    }
+
+    fn reg_decl(&mut self) -> Result<RegDecl, AdlError> {
+        let (name, span) = self.name("a register name")?;
+        self.expect_tok(Tok::Colon, "`:`")?;
+        let (ty_name, ty_span) = self.ident("a register type (i<width>, f32, vec)")?;
+        let ty = match ty_name.as_str() {
+            "f32" => {
+                self.expect_tok(Tok::Eq, "`=`")?;
+                let init = match self.bump().tok {
+                    Tok::Int(v) => v as f32,
+                    Tok::Float(v) => v as f32,
+                    other => {
+                        return Err(AdlError::at(
+                            ty_span,
+                            format!("expected a numeric f32 initializer, found {other}"),
+                        ))
+                    }
+                };
+                RegType::F32 { init }
+            }
+            "vec" => {
+                self.expect_tok(Tok::LParen, "`(`")?;
+                let size = self.int_in_range(ty_span, "vector bit size", 1, u32::MAX as i64)?;
+                self.expect_tok(Tok::Comma, "`,`")?;
+                let lanes = self.int_in_range(ty_span, "vector lane count", 1, 1 << 16)?;
+                self.expect_tok(Tok::RParen, "`)`")?;
+                RegType::Vec {
+                    size: size as u32,
+                    lanes: lanes as usize,
+                }
+            }
+            other => {
+                let width: u32 = other
+                    .strip_prefix('i')
+                    .and_then(|w| w.parse().ok())
+                    .ok_or_else(|| {
+                        AdlError::at(
+                            ty_span,
+                            format!("unknown register type `{other}` (expected i<width>, f32, or vec)"),
+                        )
+                    })?;
+                self.expect_tok(Tok::Eq, "`=`")?;
+                let init = match self.bump().tok {
+                    Tok::Int(v) => v,
+                    other => {
+                        return Err(AdlError::at(
+                            ty_span,
+                            format!("expected an integer initializer, found {other}"),
+                        ))
+                    }
+                };
+                RegType::Int { width, init }
+            }
+        };
+        Ok(RegDecl { name, span, ty })
+    }
+
+    fn int_in_range(
+        &mut self,
+        span: Span,
+        what: &str,
+        lo: i64,
+        hi: i64,
+    ) -> Result<i64, AdlError> {
+        match self.bump().tok {
+            Tok::Int(v) if v >= lo && v <= hi => Ok(v),
+            Tok::Int(v) => Err(AdlError::at(
+                span,
+                format!("{what} {v} out of range [{lo}, {hi}]"),
+            )),
+            other => Err(AdlError::at(
+                span,
+                format!("expected an integer {what}, found {other}"),
+            )),
+        }
+    }
+
+    /// `object "name" : Class { … }` (the `object` keyword is consumed).
+    fn object(&mut self) -> Result<ObjectDecl, AdlError> {
+        let (name, span) = self.name("an object name")?;
+        self.expect_tok(Tok::Colon, "`:`")?;
+        let (class, class_span) = self.ident("an ACADL class name")?;
+        self.expect_tok(Tok::LBrace, "`{`")?;
+        let mut attrs = Vec::new();
+        let mut regs = Vec::new();
+        loop {
+            match self.peek().clone() {
+                Tok::RBrace => {
+                    self.bump();
+                    break;
+                }
+                Tok::Ident(k) if k == "regs" => {
+                    self.bump();
+                    self.expect_tok(Tok::LBrace, "`{`")?;
+                    while *self.peek() != Tok::RBrace {
+                        regs.push(self.reg_decl()?);
+                    }
+                    self.bump(); // `}`
+                }
+                Tok::Ident(_) => attrs.push(self.attr()?),
+                other => {
+                    return Err(
+                        self.err(format!("expected an attribute or `}}`, found {other}"))
+                    )
+                }
+            }
+        }
+        Ok(ObjectDecl {
+            name,
+            span,
+            class,
+            class_span,
+            attrs,
+            regs,
+        })
+    }
+
+    /// `connect "a" -> "b" : KIND` (the `connect` keyword is consumed).
+    fn connect(&mut self, span: Span) -> Result<ConnectDecl, AdlError> {
+        let (src, _) = self.name("a source object name")?;
+        self.expect_tok(Tok::Arrow, "`->`")?;
+        let (dst, _) = self.name("a destination object name")?;
+        self.expect_tok(Tok::Colon, "`:`")?;
+        let (kind, _) = self.ident("an edge kind")?;
+        Ok(ConnectDecl {
+            src,
+            dst,
+            kind,
+            span,
+        })
+    }
+
+    fn port_ref(&mut self) -> Result<PortRef, AdlError> {
+        let (instance, _) = self.name("an instance name")?;
+        self.expect_tok(Tok::Dot, "`.`")?;
+        let (port, _) = self.name("a dangling-edge name")?;
+        Ok(PortRef { instance, port })
+    }
+
+    fn template(&mut self, span: Span) -> Result<TemplateDecl, AdlError> {
+        let (name, _) = self.ident("a template name")?;
+        self.expect_tok(Tok::LBrace, "`{`")?;
+        let mut objects = Vec::new();
+        let mut connects = Vec::new();
+        let mut danglings = Vec::new();
+        loop {
+            match self.peek().clone() {
+                Tok::RBrace => {
+                    self.bump();
+                    break;
+                }
+                Tok::Ident(k) if k == "object" => {
+                    self.bump();
+                    objects.push(self.object()?);
+                }
+                Tok::Ident(k) if k == "connect" => {
+                    let s = self.bump().span;
+                    connects.push(self.connect(s)?);
+                }
+                Tok::Ident(k) if k == "dangling" => {
+                    let s = self.bump().span;
+                    let (dname, _) = self.name("a dangling-edge name")?;
+                    self.expect_tok(Tok::Colon, "`:`")?;
+                    let (kind, _) = self.ident("an edge kind")?;
+                    let dir = match self.peek().clone() {
+                        Tok::Ident(d) if d == "from" => {
+                            self.bump();
+                            DangleDir::From
+                        }
+                        Tok::Ident(d) if d == "to" => {
+                            self.bump();
+                            DangleDir::To
+                        }
+                        other => {
+                            return Err(
+                                self.err(format!("expected `from` or `to`, found {other}"))
+                            )
+                        }
+                    };
+                    let (obj, _) = self.name("an object name")?;
+                    danglings.push(DanglingDecl {
+                        name: dname,
+                        kind,
+                        dir,
+                        obj,
+                        span: s,
+                    });
+                }
+                other => {
+                    return Err(self.err(format!(
+                        "expected `object`, `connect`, `dangling`, or `}}` in template, found {other}"
+                    )))
+                }
+            }
+        }
+        Ok(TemplateDecl {
+            name,
+            span,
+            objects,
+            connects,
+            danglings,
+        })
+    }
+
+    fn file(&mut self) -> Result<Arch, AdlError> {
+        self.expect_kw("arch")?;
+        let (name, name_span) = self.name("an architecture name")?;
+        let mut target = None;
+        if matches!(self.peek(), Tok::Ident(k) if k == "targets") {
+            self.bump();
+            let (family, span) = self.ident("a target family (oma, systolic, gamma)")?;
+            let attrs = self.attr_block()?;
+            target = Some(TargetDecl {
+                family,
+                span,
+                attrs,
+            });
+        }
+        let mut items = Vec::new();
+        loop {
+            match self.peek().clone() {
+                Tok::Eof => break,
+                Tok::Ident(k) => {
+                    let span = self.span();
+                    match k.as_str() {
+                        "object" => {
+                            self.bump();
+                            items.push(Item::Object(self.object()?));
+                        }
+                        "connect" => {
+                            self.bump();
+                            items.push(Item::Connect(self.connect(span)?));
+                        }
+                        "param" => {
+                            self.bump();
+                            let (key, kspan) = self.ident("a parameter key")?;
+                            self.expect_kw("in")?;
+                            let values = match self.value()? {
+                                ValueExpr::List(vs) => vs,
+                                other => {
+                                    return Err(AdlError::at(
+                                        kspan,
+                                        format!(
+                                            "param values must be a list `[…]`, found {}",
+                                            other.kind()
+                                        ),
+                                    ))
+                                }
+                            };
+                            items.push(Item::Param(ParamDecl {
+                                key,
+                                span: kspan,
+                                values,
+                            }));
+                        }
+                        "template" => {
+                            self.bump();
+                            items.push(Item::Template(self.template(span)?));
+                        }
+                        "instance" => {
+                            self.bump();
+                            let (prefix, _) = self.name("an instance name")?;
+                            self.expect_tok(Tok::Colon, "`:`")?;
+                            let (template, _) = self.ident("a template name")?;
+                            items.push(Item::Instance(InstanceDecl {
+                                prefix,
+                                template,
+                                span,
+                            }));
+                        }
+                        "join" => {
+                            self.bump();
+                            let a = self.port_ref()?;
+                            self.expect_tok(Tok::Arrow, "`->`")?;
+                            let b = self.port_ref()?;
+                            items.push(Item::Join(JoinDecl { a, b, span }));
+                        }
+                        "attach" => {
+                            self.bump();
+                            let port = self.port_ref()?;
+                            self.expect_tok(Tok::Arrow, "`->`")?;
+                            let (obj, _) = self.name("an object name")?;
+                            items.push(Item::Attach(AttachDecl { port, obj, span }));
+                        }
+                        other => {
+                            return Err(self.err(format!(
+                                "expected a declaration (object/connect/param/template/instance/join/attach), found `{other}`"
+                            )))
+                        }
+                    }
+                }
+                other => {
+                    return Err(self.err(format!("expected a declaration, found {other}")))
+                }
+            }
+        }
+        Ok(Arch {
+            name,
+            name_span,
+            target,
+            items,
+        })
+    }
+}
+
+/// Parse one `.acadl` source string into its AST.
+pub fn parse(src: &str) -> Result<Arch, AdlError> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_arch() {
+        let a = parse("arch \"tiny\"").unwrap();
+        assert_eq!(a.name, "tiny");
+        assert!(a.target.is_none());
+        assert!(a.items.is_empty());
+    }
+
+    #[test]
+    fn target_and_object_and_connect() {
+        let src = r#"
+arch "m" targets systolic {
+  rows = 2
+  cols = 2
+}
+object "ex0" : ExecuteStage {
+  latency = 1
+}
+object "fu0" : FunctionalUnit {
+  ops = [mac, mov]
+  latency = "1 + is_mac * 3"
+}
+connect "ex0" -> "fu0" : CONTAINS
+"#;
+        let a = parse(src).unwrap();
+        let t = a.target.as_ref().unwrap();
+        assert_eq!(t.family, "systolic");
+        assert_eq!(t.attrs.len(), 2);
+        assert_eq!(a.items.len(), 3);
+        match &a.items[1] {
+            Item::Object(o) => {
+                assert_eq!(o.class, "FunctionalUnit");
+                assert_eq!(o.attrs.len(), 2);
+                assert_eq!(
+                    o.attrs[0].value,
+                    ValueExpr::List(vec![
+                        ValueExpr::Ident("mac".into()),
+                        ValueExpr::Ident("mov".into())
+                    ])
+                );
+                assert_eq!(o.attrs[1].value, ValueExpr::Str("1 + is_mac * 3".into()));
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        match &a.items[2] {
+            Item::Connect(c) => {
+                assert_eq!((c.src.as_str(), c.dst.as_str()), ("ex0", "fu0"));
+                assert_eq!(c.kind, "CONTAINS");
+            }
+            other => panic!("expected connect, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn register_files_and_params() {
+        let src = r#"
+arch "m" targets oma {
+  cache = true
+}
+param mac_latency in [1, 2, 4]
+param cache in [true, false]
+param order in [ijk, kij]
+object "rf0" : RegisterFile {
+  width = 32
+  regs {
+    "r0" : i32 = 0
+    "a" : f32 = 0
+    "v[0].0" : vec(128, 8)
+  }
+}
+"#;
+        let a = parse(src).unwrap();
+        let params: Vec<_> = a
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                Item::Param(p) => Some(p),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(params.len(), 3);
+        assert_eq!(params[0].key, "mac_latency");
+        assert_eq!(params[2].values[1], ValueExpr::Ident("kij".into()));
+        let obj = a
+            .items
+            .iter()
+            .find_map(|i| match i {
+                Item::Object(o) => Some(o),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(obj.regs.len(), 3);
+        assert_eq!(obj.regs[0].ty, RegType::Int { width: 32, init: 0 });
+        assert_eq!(obj.regs[1].ty, RegType::F32 { init: 0.0 });
+        assert_eq!(
+            obj.regs[2].ty,
+            RegType::Vec {
+                size: 128,
+                lanes: 8
+            }
+        );
+        assert_eq!(obj.regs[2].name, "v[0].0");
+    }
+
+    #[test]
+    fn templates_instances_joins() {
+        let src = r#"
+arch "pair"
+template Pe {
+  object "ex" : ExecuteStage {
+    latency = 1
+  }
+  object "fu" : FunctionalUnit {
+    ops = [mac]
+    latency = 1
+  }
+  object "rf" : RegisterFile {
+    width = 32
+    regs {
+      "acc" : f32 = 0
+    }
+  }
+  connect "ex" -> "fu" : CONTAINS
+  connect "rf" -> "fu" : READ_DATA
+  connect "fu" -> "rf" : WRITE_DATA
+  dangling "out" : WRITE_DATA from "fu"
+  dangling "in" : WRITE_DATA to "rf"
+}
+instance "a" : Pe
+instance "b" : Pe
+join "a".out -> "b".in
+attach "b".out -> "a.rf"
+"#;
+        let a = parse(src).unwrap();
+        let tpl = a
+            .items
+            .iter()
+            .find_map(|i| match i {
+                Item::Template(t) => Some(t),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(tpl.objects.len(), 3);
+        assert_eq!(tpl.connects.len(), 3);
+        assert_eq!(tpl.danglings.len(), 2);
+        assert_eq!(tpl.danglings[0].dir, DangleDir::From);
+        assert_eq!(tpl.danglings[1].dir, DangleDir::To);
+        let joins = a
+            .items
+            .iter()
+            .filter(|i| matches!(i, Item::Join(_)))
+            .count();
+        assert_eq!(joins, 1);
+    }
+
+    #[test]
+    fn errors_point_at_positions() {
+        let e = parse("arch \"x\"\nobject \"a\" ; ExecuteStage {}").unwrap_err();
+        // `;` is not even lexable — position on line 2.
+        assert_eq!(e.span.unwrap().line, 2);
+
+        let e = parse("arch \"x\"\nfrobnicate \"a\"").unwrap_err();
+        assert!(e.to_string().contains("frobnicate"), "{e}");
+        assert!(e.to_string().starts_with("2:"), "{e}");
+    }
+
+    #[test]
+    fn param_requires_list() {
+        let e = parse("arch \"x\" param rows in 4").unwrap_err();
+        assert!(e.to_string().contains("list"), "{e}");
+    }
+}

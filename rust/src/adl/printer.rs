@@ -1,0 +1,317 @@
+//! The canonical `.acadl` pretty-printer.
+//!
+//! Printing is a pure function of the elaborated form: the `targets`
+//! binding, the `param` axes, then every object (in graph insertion
+//! order) and every edge (in insertion order).  Templates do not survive
+//! printing — `fmt` canonicalizes them into their flattened objects and
+//! edges.  The canonical form quotes every name, prints every attribute
+//! of every class (in a fixed per-class order), and uses plain decimal
+//! integers, so that:
+//!
+//! * `parse(print(ag))` elaborates to an equivalent graph
+//!   ([`crate::adl::elab::ag_equiv`]), and
+//! * printing is byte-idempotent — the contract `acadl-cli fmt --check`
+//!   enforces over `examples/*.acadl`.
+
+use std::fmt::Write as _;
+
+use crate::acadl_core::data::Value;
+use crate::acadl_core::graph::Ag;
+use crate::acadl_core::latency::Latency;
+use crate::acadl_core::object::{Object, ObjectKind};
+use crate::adl::elab::{ElabArch, ParamAxis, ParamValue};
+use crate::coordinator::job::TargetSpec;
+use crate::mem::cache::ReplacementPolicy;
+
+/// Quote a name or expression string (the inverse of the lexer's string
+/// rules).
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn latency_str(l: &Latency) -> String {
+    match l {
+        Latency::Const(v) => v.to_string(),
+        Latency::Expr(_) => quote(&l.to_string()),
+    }
+}
+
+fn policy_name(p: ReplacementPolicy) -> &'static str {
+    match p {
+        ReplacementPolicy::Lru => "lru",
+        ReplacementPolicy::Fifo => "fifo",
+        ReplacementPolicy::Plru => "plru",
+        ReplacementPolicy::Random => "random",
+    }
+}
+
+/// Does a mnemonic re-lex as a plain identifier (and not a boolean
+/// keyword)?  Anything else must be quoted or the canonical form would
+/// not re-parse.
+fn is_bare_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    let head_ok = chars
+        .next()
+        .is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+    head_ok
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+        && s != "true"
+        && s != "false"
+}
+
+fn ops_str(ops: &std::collections::BTreeSet<String>) -> String {
+    let mut out = String::from("[");
+    for (i, op) in ops.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        if is_bare_ident(op) {
+            out.push_str(op);
+        } else {
+            out.push_str(&quote(op));
+        }
+    }
+    out.push(']');
+    out
+}
+
+/// Print one object declaration in canonical form (ends with a newline).
+pub fn print_object(obj: &Object) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "object {} : {} {{", quote(&obj.name), obj.kind.class_name());
+    match &obj.kind {
+        ObjectKind::PipelineStage(p) => {
+            let _ = writeln!(s, "  latency = {}", latency_str(&p.latency));
+        }
+        ObjectKind::ExecuteStage(e) => {
+            let _ = writeln!(s, "  latency = {}", latency_str(&e.latency));
+        }
+        ObjectKind::InstructionFetchStage(i) => {
+            let _ = writeln!(s, "  latency = {}", latency_str(&i.latency));
+            let _ = writeln!(s, "  issue_buffer = {}", i.issue_buffer_size);
+        }
+        ObjectKind::FunctionalUnit(f) => {
+            let _ = writeln!(s, "  ops = {}", ops_str(&f.to_process));
+            let _ = writeln!(s, "  latency = {}", latency_str(&f.latency));
+        }
+        ObjectKind::MemoryAccessUnit(m) => {
+            let _ = writeln!(s, "  ops = {}", ops_str(&m.to_process));
+            let _ = writeln!(s, "  latency = {}", latency_str(&m.latency));
+        }
+        ObjectKind::InstructionMemoryAccessUnit(i) => {
+            let _ = writeln!(s, "  latency = {}", latency_str(&i.latency));
+        }
+        ObjectKind::RegisterFile(rf) => {
+            let _ = writeln!(s, "  width = {}", rf.data_width);
+            if !rf.registers.is_empty() {
+                s.push_str("  regs {\n");
+                for (name, data) in &rf.registers {
+                    match &data.payload {
+                        Value::Int(v) => {
+                            let _ = writeln!(s, "    {} : i{} = {}", quote(name), data.size, v);
+                        }
+                        Value::F32(v) => {
+                            let _ = writeln!(s, "    {} : f32 = {}", quote(name), v);
+                        }
+                        Value::Vec(lanes) => {
+                            let _ = writeln!(
+                                s,
+                                "    {} : vec({}, {})",
+                                quote(name),
+                                data.size,
+                                lanes.len()
+                            );
+                        }
+                    }
+                }
+                s.push_str("  }\n");
+            }
+        }
+        ObjectKind::Sram(m) => {
+            let _ = writeln!(s, "  base = {}", m.address_range.0);
+            let _ = writeln!(s, "  end = {}", m.address_range.1);
+            let _ = writeln!(s, "  read_latency = {}", latency_str(&m.read_latency));
+            let _ = writeln!(s, "  write_latency = {}", latency_str(&m.write_latency));
+            let _ = writeln!(s, "  width = {}", m.ds.data_width);
+            let _ = writeln!(s, "  requests = {}", m.ds.max_concurrent_requests);
+            let _ = writeln!(s, "  ports = {}", m.ds.read_write_ports);
+            let _ = writeln!(s, "  port_width = {}", m.ds.port_width);
+        }
+        ObjectKind::Dram(d) => {
+            let _ = writeln!(s, "  base = {}", d.address_range.0);
+            let _ = writeln!(s, "  end = {}", d.address_range.1);
+            let _ = writeln!(s, "  banks = {}", d.banks);
+            let _ = writeln!(s, "  row_bytes = {}", d.row_bytes);
+            let _ = writeln!(s, "  t_rcd = {}", d.t_rcd);
+            let _ = writeln!(s, "  t_rp = {}", d.t_rp);
+            let _ = writeln!(s, "  t_ras = {}", d.t_ras);
+            let _ = writeln!(s, "  t_cas = {}", d.t_cas);
+            let _ = writeln!(s, "  width = {}", d.ds.data_width);
+            let _ = writeln!(s, "  requests = {}", d.ds.max_concurrent_requests);
+            let _ = writeln!(s, "  ports = {}", d.ds.read_write_ports);
+            let _ = writeln!(s, "  port_width = {}", d.ds.port_width);
+        }
+        ObjectKind::Cache(c) => {
+            let _ = writeln!(s, "  sets = {}", c.sets);
+            let _ = writeln!(s, "  ways = {}", c.ways);
+            let _ = writeln!(s, "  line = {}", c.cache_line_size);
+            let _ = writeln!(s, "  policy = {}", policy_name(c.replacement_policy));
+            let _ = writeln!(s, "  hit_latency = {}", latency_str(&c.hit_latency));
+            let _ = writeln!(s, "  miss_latency = {}", latency_str(&c.miss_latency));
+            let _ = writeln!(s, "  write_allocate = {}", c.write_allocate);
+            let _ = writeln!(s, "  write_back = {}", c.write_back);
+            let _ = writeln!(s, "  width = {}", c.ds.data_width);
+            let _ = writeln!(s, "  requests = {}", c.ds.max_concurrent_requests);
+            let _ = writeln!(s, "  ports = {}", c.ds.read_write_ports);
+            let _ = writeln!(s, "  port_width = {}", c.ds.port_width);
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+fn param_value_str(v: &ParamValue) -> String {
+    match v {
+        ParamValue::Int(i) => i.to_string(),
+        ParamValue::Bool(b) => b.to_string(),
+        ParamValue::Name(n) => n.clone(),
+    }
+}
+
+fn target_block(t: &TargetSpec) -> String {
+    let mut s = String::new();
+    match t {
+        TargetSpec::Oma { cache, mac_latency } => {
+            s.push_str("targets oma {\n");
+            let _ = writeln!(s, "  cache = {cache}");
+            if let Some(l) = mac_latency {
+                let _ = writeln!(s, "  mac_latency = {l}");
+            }
+        }
+        TargetSpec::Systolic { rows, cols } => {
+            s.push_str("targets systolic {\n");
+            let _ = writeln!(s, "  rows = {rows}");
+            let _ = writeln!(s, "  cols = {cols}");
+        }
+        TargetSpec::Gamma { units } => {
+            s.push_str("targets gamma {\n");
+            let _ = writeln!(s, "  units = {units}");
+        }
+    }
+    s.push('}');
+    s
+}
+
+/// Print a full architecture description in canonical form.
+pub fn print_arch(
+    name: &str,
+    target: Option<&TargetSpec>,
+    params: &[ParamAxis],
+    ag: &Ag,
+) -> String {
+    let mut s = String::new();
+    match target {
+        Some(t) => {
+            let _ = writeln!(s, "arch {} {}", quote(name), target_block(t));
+        }
+        None => {
+            let _ = writeln!(s, "arch {}", quote(name));
+        }
+    }
+    for axis in params {
+        let vals: Vec<String> = axis.values.iter().map(param_value_str).collect();
+        let _ = writeln!(s, "param {} in [{}]", axis.key, vals.join(", "));
+    }
+    for obj in &ag.objects {
+        s.push_str(&print_object(obj));
+    }
+    for e in &ag.edges {
+        let _ = writeln!(
+            s,
+            "connect {} -> {} : {}",
+            quote(ag.name(e.src)),
+            quote(ag.name(e.dst)),
+            e.kind
+        );
+    }
+    s
+}
+
+/// Print an elaborated architecture (the `fmt` entry point).
+pub fn print_elab(e: &ElabArch) -> String {
+    print_arch(&e.name, e.target.as_ref(), &e.params, &e.ag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl_core::data::Data;
+    use crate::acadl_core::latency::Latency;
+    use crate::acadl_core::object::build;
+
+    #[test]
+    fn object_formats() {
+        let fu = build::functional_unit("fu0", &["mov", "mac"], Latency::Const(2));
+        assert_eq!(
+            print_object(&fu),
+            "object \"fu0\" : FunctionalUnit {\n  ops = [mac, mov]\n  latency = 2\n}\n"
+        );
+        let rf = build::register_file(
+            "rf[0][1]",
+            32,
+            vec![
+                ("r0".into(), Data::int(32, 7)),
+                ("a".into(), Data::f32(0.0)),
+                ("v".into(), Data::vec(128, 8)),
+            ],
+        );
+        assert_eq!(
+            print_object(&rf),
+            "object \"rf[0][1]\" : RegisterFile {\n  width = 32\n  regs {\n    \"r0\" : i32 = 7\n    \"a\" : f32 = 0\n    \"v\" : vec(128, 8)\n  }\n}\n"
+        );
+    }
+
+    #[test]
+    fn exotic_ops_are_quoted() {
+        // Mnemonics that would not re-lex as identifiers (or would
+        // re-parse as booleans) must be quoted in canonical form.
+        let fu = build::functional_unit("fu0", &["mov", "true", "2x"], Latency::Const(1));
+        let s = print_object(&fu);
+        assert!(s.contains("ops = [\"2x\", mov, \"true\"]"), "{s}");
+    }
+
+    #[test]
+    fn expression_latency_is_quoted() {
+        let fu = build::functional_unit(
+            "fu0",
+            &["mac"],
+            Latency::parse("1 + is_mac * 3").unwrap(),
+        );
+        assert!(print_object(&fu).contains("latency = \"1 + is_mac * 3\""));
+    }
+
+    #[test]
+    fn arch_header_forms() {
+        let ag = Ag::new();
+        let s = print_arch("empty", None, &[], &ag);
+        assert_eq!(s, "arch \"empty\"\n");
+        let t = TargetSpec::Systolic { rows: 2, cols: 3 };
+        let s = print_arch("sys", Some(&t), &[], &ag);
+        assert_eq!(
+            s,
+            "arch \"sys\" targets systolic {\n  rows = 2\n  cols = 3\n}\n"
+        );
+    }
+}

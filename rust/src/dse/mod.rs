@@ -41,7 +41,7 @@ pub mod memo;
 pub mod space;
 
 pub use memo::Memo;
-pub use space::DseSpace;
+pub use space::{DseSpace, FileSpace};
 
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
@@ -131,9 +131,16 @@ pub struct DseReport {
 /// Run the exploration.  `prune = false` evaluates exhaustively (the
 /// validation mode the property tests compare against).
 pub fn explore(space: &DseSpace, workers: usize, prune: bool) -> DseReport {
+    explore_specs(space.enumerate(), workers, prune)
+}
+
+/// Explore an explicit candidate list — the entry point for spaces that
+/// don't come from [`DseSpace`], e.g. a `.acadl` file's `param` block
+/// ([`space::FileSpace`]).  Same pipeline: sort by analytical bound,
+/// prune the tail, evaluate waves in parallel with memoization.
+pub fn explore_specs(specs: Vec<JobSpec>, workers: usize, prune: bool) -> DseReport {
     let t0 = Instant::now();
-    let mut cands: Vec<(JobSpec, u64)> = space
-        .enumerate()
+    let mut cands: Vec<(JobSpec, u64)> = specs
         .into_iter()
         .map(|s| {
             let lb = lower_bound_cycles(&s);

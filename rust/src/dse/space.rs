@@ -8,6 +8,7 @@
 //! reads them — on the others they would only inflate the sweep with
 //! aliases the memo collapses anyway.
 
+use crate::adl::elab::{apply_param, Candidate, ElabArch, ParamAxis};
 use crate::arch::gamma::GammaConfig;
 use crate::arch::oma::OmaConfig;
 use crate::arch::systolic::SystolicConfig;
@@ -140,6 +141,81 @@ impl DseSpace {
     }
 }
 
+/// A design space defined entirely by an `.acadl` file: the `targets`
+/// binding is the base candidate and each `param` axis contributes one
+/// dimension of the cross-product (in file order).  This is how a sweep
+/// is specified without touching Rust: write the description, declare
+/// the axes, run `acadl-cli dse --arch-file <file>`.
+#[derive(Debug, Clone)]
+pub struct FileSpace {
+    pub base: Candidate,
+    pub axes: Vec<ParamAxis>,
+    /// GeMM edge (`m = k = n = dim`).
+    pub dim: usize,
+    pub backends: Vec<BackendKind>,
+    pub max_cycles: u64,
+}
+
+impl FileSpace {
+    /// Build the space from an elaborated description.  Errors when the
+    /// file has no `targets` binding (nothing to sweep).
+    pub fn from_arch(arch: &ElabArch, dim: usize) -> Result<Self, String> {
+        let base = arch.base_candidate().ok_or_else(|| {
+            format!(
+                "architecture `{}` has no `targets` binding — add `targets <family> {{ … }}` \
+                 to make it sweepable",
+                arch.name
+            )
+        })?;
+        Ok(FileSpace {
+            base,
+            axes: arch.params.clone(),
+            dim,
+            backends: vec![BackendKind::EventDriven],
+            max_cycles: 500_000_000,
+        })
+    }
+
+    /// Every candidate of the axes' cross-product as a timed job spec
+    /// (ids are enumeration order).  A file with no `param` axes yields
+    /// exactly the base candidate.
+    pub fn enumerate(&self) -> Result<Vec<JobSpec>, String> {
+        let mut cands = vec![self.base.clone()];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(cands.len() * axis.values.len());
+            for c in &cands {
+                for v in &axis.values {
+                    let mut applied = c.clone();
+                    apply_param(&mut applied, &axis.key, v)
+                        .map_err(|e| format!("param `{}`: {e}", axis.key))?;
+                    next.push(applied);
+                }
+            }
+            cands = next;
+        }
+        let mut specs = Vec::with_capacity(cands.len() * self.backends.len());
+        for c in cands {
+            for &backend in &self.backends {
+                specs.push(JobSpec {
+                    id: specs.len() as u64,
+                    target: c.target.clone(),
+                    workload: Workload::Gemm {
+                        m: self.dim,
+                        k: self.dim,
+                        n: self.dim,
+                        tile: c.tile,
+                        order: c.order,
+                    },
+                    mode: SimModeSpec::Timed,
+                    backend,
+                    max_cycles: self.max_cycles,
+                });
+            }
+        }
+        Ok(specs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +239,42 @@ mod tests {
         assert!(has(&|t| matches!(t, TargetSpec::Oma { .. })));
         assert!(has(&|t| matches!(t, TargetSpec::Systolic { .. })));
         assert!(has(&|t| matches!(t, TargetSpec::Gamma { .. })));
+    }
+
+    #[test]
+    fn file_space_enumerates_param_cross_product() {
+        let src = r#"
+arch "sweep" targets systolic {
+  rows = 2
+  cols = 2
+}
+param rows in [2, 4]
+param cols in [2, 4, 8]
+"#;
+        let arch = crate::adl::load_str(src).unwrap();
+        let space = FileSpace::from_arch(&arch, 16).unwrap();
+        let specs = space.enumerate().unwrap();
+        // 2 rows × 3 cols × 1 backend.
+        assert_eq!(specs.len(), 6);
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert!(matches!(s.target, TargetSpec::Systolic { .. }));
+        }
+        assert_eq!(specs[0].target, TargetSpec::Systolic { rows: 2, cols: 2 });
+        assert_eq!(specs[5].target, TargetSpec::Systolic { rows: 4, cols: 8 });
+
+        // A file without params sweeps exactly its base candidate.
+        let lone = crate::adl::load_str(
+            "arch \"one\" targets gamma {\n  units = 2\n}",
+        )
+        .unwrap();
+        let specs = FileSpace::from_arch(&lone, 8).unwrap().enumerate().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].target, TargetSpec::Gamma { units: 2 });
+
+        // No binding: not sweepable.
+        let unbound = crate::adl::load_str("arch \"free\"").unwrap();
+        assert!(FileSpace::from_arch(&unbound, 8).is_err());
     }
 
     #[test]

@@ -394,12 +394,67 @@ mod tests {
         assert_eq!(p.instrs[0].read_addrs[0], AddrRef::Direct(0x3030));
         match p.instrs[1].read_addrs[0] {
             AddrRef::Indirect { offset, .. } => assert_eq!(offset, 8),
-            _ => panic!(),
+            other => panic!("[r9+8] must parse register-indirect, got {other:?}"),
         }
         match p.instrs[2].read_addrs[0] {
             AddrRef::Indirect { offset, .. } => assert_eq!(offset, -4),
-            _ => panic!(),
+            other => panic!("[r9-4] must parse register-indirect, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn malformed_operands_rejected() {
+        let ag = test_ag();
+        // Unterminated bracket.
+        assert!(matches!(
+            assemble(&ag, "load [0x3000 => r1", 0),
+            Err(AsmError::BadOperand(1, _))
+        ));
+        // Garbage immediate.
+        assert!(matches!(
+            assemble(&ag, "addi r3, #xyz => r3", 0),
+            Err(AsmError::BadOperand(1, _))
+        ));
+        // Garbage indirect offset.
+        assert!(matches!(
+            assemble(&ag, "load [r9+q] => r1", 0),
+            Err(AsmError::BadOperand(1, _))
+        ));
+        // Immediates and labels cannot be destinations.
+        assert!(matches!(
+            assemble(&ag, "mov r1 => #5", 0),
+            Err(AsmError::BadOperand(1, _))
+        ));
+        assert!(matches!(
+            assemble(&ag, "x: mov r1 => @x", 0),
+            Err(AsmError::BadOperand(1, _))
+        ));
+        // Unknown register inside an indirect operand.
+        assert!(matches!(
+            assemble(&ag, "nop\nload [rQ] => r1", 0),
+            Err(AsmError::UnknownRegister(2, _))
+        ));
+    }
+
+    #[test]
+    fn malformed_gemm_groups_rejected() {
+        let ag = test_ag();
+        // Wrong operand arity.
+        assert!(matches!(
+            assemble(&ag, "gemm v[0].0 => v[0].16", 0),
+            Err(AsmError::Other(1, _))
+        ));
+        // Group base without a numeric suffix cannot expand.
+        assert!(matches!(
+            assemble(&ag, "gemm pc, v[0].8, 1 => v[0].16", 0),
+            Err(AsmError::Other(1, _))
+        ));
+        // Group running past the register file: v[0].25..32 with only
+        // 32 vector registers (v[0].0..31) — v[0].32 does not exist.
+        assert!(matches!(
+            assemble(&ag, "gemm v[0].0, v[0].8, 1 => v[0].25", 0),
+            Err(AsmError::UnknownRegister(1, _))
+        ));
     }
 
     #[test]

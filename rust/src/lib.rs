@@ -14,6 +14,11 @@
 //!
 //! * [`acadl_core`] — the language: objects, typed edges, validity rules,
 //!   templates with dangling edges, latency expressions.
+//! * [`adl`] — the textual frontend: a concrete `.acadl` syntax (objects,
+//!   connects, templates with dangling edges, `param` sweep axes), its
+//!   lexer/parser with spanned diagnostics, the elaborator lowering to a
+//!   validated [`acadl_core::graph::Ag`], and the canonical round-trip
+//!   pretty-printer behind `acadl-cli parse` / `fmt` / `--arch-file`.
 //! * [`mem`] — memory substrates: SRAM, banked DRAM timing (t_RCD/t_RP/t_RAS),
 //!   set-associative cache simulation (LRU/FIFO/PLRU/Random).
 //! * [`isa`] — the union instruction set of the paper's three accelerators,
@@ -68,6 +73,7 @@
 //! ```
 
 pub mod acadl_core;
+pub mod adl;
 pub mod aidg;
 pub mod util;
 pub mod analytical;

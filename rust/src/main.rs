@@ -1,12 +1,15 @@
-//! `acadl-cli` — the command-line front-end: validate models, map
-//! operators, run simulations and sweeps, serve jobs over TCP, and execute
-//! golden-model artifacts.
+//! `acadl-cli` — the command-line front-end: parse and format ACADL
+//! descriptions, validate models, map operators, run simulations and
+//! sweeps, serve jobs over TCP, and execute golden-model artifacts.
 //!
 //! Argument parsing is hand-rolled (`--key value` flags after a
 //! subcommand) — the offline build has no clap (DESIGN.md §Substitutions).
+//! Each subcommand declares the flags it accepts; anything else is
+//! rejected with the expected list instead of being silently ignored.
 
 use std::collections::HashMap;
 
+use acadl::adl;
 use acadl::coordinator::{self, JobSpec, SimModeSpec, TargetSpec, Workload};
 use acadl::mapping::gemm::GemmParams;
 use acadl::mapping::uma::{self, Operator};
@@ -20,27 +23,39 @@ acadl-cli — ACADL: model AI hardware accelerators, map DNN operators, simulate
 USAGE: acadl-cli <COMMAND> [--flag value]...
 
 COMMANDS:
+  parse <file.acadl>
+      Parse + elaborate an ACADL description: print line:col diagnostics
+      on error, otherwise its AG summary, target binding, and param axes.
+  fmt <file.acadl> [--check true]
+      Print the canonical form of a description.  With --check true,
+      exit nonzero unless the file is already canonical (the CI golden).
   validate --target <oma|systolic|gamma> [--rows N --cols N --units N]
-      Build an architecture model and print its AG summary.
+           | --arch-file <file.acadl>
+      Build an architecture model and print its AG summary.  With
+      --arch-file, elaborate the description instead (and, when it has a
+      `targets` binding, verify the graph matches the built machine).
   map --target <oma|systolic|gamma> [--m N --k N --n N --tile N --head N]
+      [--arch-file <file.acadl>]
       Lower a GeMM and print the disassembly head.
   simulate --target <oma|systolic|gamma> [--m/--k/--n N] [--tile N]
            [--mode functional|timed|estimate] [--backend cycle|event]
-           [--rows/--cols/--units N]
+           [--rows/--cols/--units N] [--arch-file <file.acadl>]
       Simulate a GeMM, print the result row as JSON.  The timing backends
       report identical cycles; `event` skips idle cycles (faster on
       memory-bound workloads).
   sweep [--dim N] [--workers N] [--backend cycle|event]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   dse [--dim N] [--workers N] [--quick true] [--no-prune true]
-      [--max-edge N] [--max-units N]
+      [--max-edge N] [--max-units N] [--arch-file <file.acadl>]
       Full design-space exploration on an N³ GeMM: enumerate the
-      (arch × tile × loop order × backend) candidates, prune with the
-      analytical roofline bound, evaluate survivors in parallel with
-      memoization, print the cycles-vs-area Pareto frontier and the
-      pruning/cache statistics.
-  serve [--addr HOST:PORT] [--workers N]
-      Serve JobSpec JSON lines over TCP.
+      candidates, prune with the analytical roofline bound, evaluate
+      survivors in parallel with memoization, print the cycles-vs-area
+      Pareto frontier and the pruning/cache statistics.  With
+      --arch-file, the space is the file's `param` block cross-product.
+  serve [--addr HOST:PORT] [--workers N] [--arch-file <file.acadl>]
+      Serve JobSpec JSON lines over TCP.  Jobs may inline ADL text as
+      {\"kind\":\"adl\",\"source\":\"…\"} targets; --arch-file pre-builds
+      (and verifies) one description into the machine cache.
   golden <name> [--dir artifacts]
       Run a golden-model artifact with synthetic inputs.
 ";
@@ -50,13 +65,49 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
+/// Flags each subcommand accepts; anything else is an error.
+fn allowed_flags(cmd: &str) -> &'static [&'static str] {
+    match cmd {
+        "validate" => &["target", "rows", "cols", "units", "arch-file"],
+        "map" => &[
+            "target", "rows", "cols", "units", "m", "k", "n", "tile", "head", "arch-file",
+        ],
+        "simulate" => &[
+            "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
+            "arch-file",
+        ],
+        "sweep" => &["dim", "workers", "backend"],
+        "dse" => &[
+            "dim", "workers", "quick", "no-prune", "max-edge", "max-units", "arch-file",
+        ],
+        "serve" => &["addr", "workers", "arch-file"],
+        "golden" => &["dir"],
+        "fmt" => &["check"],
+        _ => &[],
+    }
+}
+
 impl Args {
-    fn parse(argv: &[String]) -> Result<Self, String> {
+    fn parse(argv: &[String], allowed: &[&str]) -> Result<Self, String> {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut it = argv.iter();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
+                if !allowed.contains(&key) {
+                    return Err(if allowed.is_empty() {
+                        format!("unknown flag --{key} (this command takes no flags)")
+                    } else {
+                        format!(
+                            "unknown flag --{key} (expected: {})",
+                            allowed
+                                .iter()
+                                .map(|f| format!("--{f}"))
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        )
+                    });
+                }
                 let val = it
                     .next()
                     .ok_or_else(|| format!("flag --{key} needs a value"))?;
@@ -111,7 +162,58 @@ fn backend_kind(args: &Args) -> Result<BackendKind, String> {
         .ok_or_else(|| format!("unknown backend `{name}` (use cycle|event)"))
 }
 
+/// Read + parse + elaborate an `.acadl` file, prefixing diagnostics with
+/// the path.
+fn load_arch_file(path: &str) -> Result<adl::ElabArch, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    adl::load_str(&src).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Load an `.acadl` file once and, when it carries a `targets` binding,
+/// build the bound machine through the config-hash cache and verify the
+/// description's graph is equivalent to it — so the cycles a file-driven
+/// run reports always belong to the architecture the text describes.
+fn load_verified(path: &str) -> Result<adl::ElabArch, String> {
+    let arch = load_arch_file(path)?;
+    if let Some(spec) = &arch.target {
+        let machine = coordinator::build_cached(spec).map_err(|e| e.to_string())?;
+        adl::ag_equiv(&arch.ag, machine.ag()).map_err(|e| {
+            format!("{path}: description does not match its `targets` binding: {e}")
+        })?;
+    }
+    Ok(arch)
+}
+
+/// Resolve an `.acadl` file to its (verified) mapping target.
+fn arch_file_target(path: &str) -> Result<TargetSpec, String> {
+    load_verified(path)?.target.ok_or_else(|| {
+        format!(
+            "{path}: no `targets` binding — `parse`/`fmt`/`validate` work on the graph \
+             alone, but simulate/map/dse need a code-generator family"
+        )
+    })
+}
+
+/// With `--arch-file`, the file defines the whole architecture: reject
+/// every flag that would otherwise pick or shape a built-in target,
+/// instead of silently running something other than what was asked for.
+fn reject_target_flags(args: &Args) -> Result<(), String> {
+    for conflicting in ["target", "rows", "cols", "units"] {
+        if args.flags.contains_key(conflicting) {
+            return Err(format!(
+                "--{conflicting} does not apply with --arch-file (the file defines \
+                 the architecture)"
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn target_spec(args: &Args) -> Result<TargetSpec, String> {
+    if let Some(path) = args.flags.get("arch-file") {
+        reject_target_flags(args)?;
+        return arch_file_target(path);
+    }
     match args.str("target", "oma").as_str() {
         "oma" => Ok(TargetSpec::Oma {
             cache: true,
@@ -128,18 +230,89 @@ fn target_spec(args: &Args) -> Result<TargetSpec, String> {
     }
 }
 
+fn print_dse_report(report: &acadl::dse::DseReport, title: &str) {
+    print!("{}", report.table(title).render());
+    println!("\n{}", report.summary());
+}
+
+/// Every subcommand `run()` dispatches on.
+const COMMANDS: &[&str] = &[
+    "parse", "fmt", "validate", "map", "simulate", "sweep", "dse", "serve", "golden",
+    "help", "--help", "-h",
+];
+
 fn run() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
+    // Reject unknown commands before flag validation, so a typoed command
+    // reports itself rather than a misleading "takes no flags" error.
+    if !COMMANDS.contains(&cmd.as_str()) {
+        return Err(format!("unknown command `{cmd}`\n\n{USAGE}"));
+    }
+    let args = Args::parse(&argv[1..], allowed_flags(&cmd))?;
     match cmd.as_str() {
+        "parse" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or("parse needs a file path (acadl-cli parse <file.acadl>)")?;
+            let arch = load_arch_file(path)?;
+            let binding = match &arch.target {
+                Some(t) => t.describe(),
+                None => "unbound".to_string(),
+            };
+            println!("{path}: arch `{}` [{binding}] | {}", arch.name, arch.ag.summary());
+            if !arch.params.is_empty() {
+                let cross: usize = arch.params.iter().map(|a| a.values.len()).product();
+                let axes: Vec<String> = arch
+                    .params
+                    .iter()
+                    .map(|a| format!("{}×{}", a.key, a.values.len()))
+                    .collect();
+                println!("params: {} ({cross} candidates)", axes.join(" "));
+            }
+        }
+        "fmt" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or("fmt needs a file path (acadl-cli fmt <file.acadl> [--check true])")?;
+            let src =
+                std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+            let arch = adl::load_str(&src).map_err(|e| format!("{path}: {e}"))?;
+            let canonical = adl::print_elab(&arch);
+            if args.bool_flag("check")? {
+                if canonical == src {
+                    println!("{path}: canonical");
+                } else {
+                    let line = src
+                        .lines()
+                        .zip(canonical.lines())
+                        .position(|(a, b)| a != b)
+                        .map(|i| i + 1)
+                        .unwrap_or_else(|| src.lines().count().min(canonical.lines().count()) + 1);
+                    return Err(format!(
+                        "{path}: not canonical (first difference at line {line}); \
+                         run `acadl-cli fmt {path}` for the canonical text"
+                    ));
+                }
+            } else {
+                print!("{canonical}");
+            }
+        }
         "validate" => {
-            let spec = target_spec(&args)?;
-            let machine = spec.to_config().build().map_err(|e| e.to_string())?;
-            println!("{}: {}", spec.describe(), machine.ag().summary());
+            if let Some(path) = args.flags.get("arch-file") {
+                reject_target_flags(&args)?;
+                let arch = load_verified(path)?;
+                println!("{path}: {}", arch.ag.summary());
+            } else {
+                let spec = target_spec(&args)?;
+                let machine = spec.to_config().build().map_err(|e| e.to_string())?;
+                println!("{}: {}", spec.describe(), machine.ag().summary());
+            }
         }
         "map" => {
             let spec = target_spec(&args)?;
@@ -248,34 +421,59 @@ fn run() -> Result<(), String> {
                     .map(|p| p.get())
                     .unwrap_or(4),
             )?;
-            let quick = args.bool_flag("quick")?;
             let prune = !args.bool_flag("no-prune")?;
-            let mut space = if quick {
-                acadl::dse::DseSpace::quick(dim)
+            if let Some(path) = args.flags.get("arch-file").cloned() {
+                for conflicting in ["quick", "max-edge", "max-units"] {
+                    if args.flags.contains_key(conflicting) {
+                        return Err(format!(
+                            "--{conflicting} does not apply with --arch-file (the file's \
+                             `param` block defines the space)"
+                        ));
+                    }
+                }
+                // One load: verify the description against its binding up
+                // front (the sweep itself varies the bound config), then
+                // enumerate from the same elaboration.
+                let arch = load_verified(&path)?;
+                let space = acadl::dse::FileSpace::from_arch(&arch, dim)?;
+                let specs = space.enumerate()?;
+                println!(
+                    "exploring gemm {dim}³ over {} candidates from {path} on {workers} \
+                     workers (prune: {})…\n",
+                    specs.len(),
+                    if prune { "roofline" } else { "off" },
+                );
+                let report = acadl::dse::explore_specs(specs, workers, prune);
+                print_dse_report(&report, &format!("design space from {path}, gemm {dim}³"));
             } else {
-                acadl::dse::DseSpace::standard(dim)
-            };
-            if let Some(e) = args.opt_usize("max-edge")? {
-                space.max_edge = e;
+                let quick = args.bool_flag("quick")?;
+                let mut space = if quick {
+                    acadl::dse::DseSpace::quick(dim)
+                } else {
+                    acadl::dse::DseSpace::standard(dim)
+                };
+                if let Some(e) = args.opt_usize("max-edge")? {
+                    space.max_edge = e;
+                }
+                if let Some(u) = args.opt_usize("max-units")? {
+                    space.max_units = u;
+                }
+                println!(
+                    "exploring gemm {dim}³ over {} candidates on {workers} workers (prune: {})…\n",
+                    space.enumerate().len(),
+                    if prune { "roofline" } else { "off" },
+                );
+                let report = acadl::dse::explore(&space, workers, prune);
+                print_dse_report(&report, &format!("design space, gemm {dim}³ (timed)"));
             }
-            if let Some(u) = args.opt_usize("max-units")? {
-                space.max_units = u;
-            }
-            println!(
-                "exploring gemm {dim}³ over {} candidates on {workers} workers (prune: {})…\n",
-                space.enumerate().len(),
-                if prune { "roofline" } else { "off" },
-            );
-            let report = acadl::dse::explore(&space, workers, prune);
-            print!(
-                "{}",
-                report.table(&format!("design space, gemm {dim}³ (timed)")).render()
-            );
-            println!("\n{}", report.summary());
         }
         "serve" => {
             let addr = args.str("addr", "127.0.0.1:7474");
             let workers = args.usize("workers", 4)?;
+            if let Some(path) = args.flags.get("arch-file") {
+                let spec = arch_file_target(path)?;
+                println!("pre-built machine from {path}: {}", spec.describe());
+            }
             let listener =
                 std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
             println!("acadl-cli serving on {addr} ({workers} workers)");
@@ -317,5 +515,103 @@ fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_flags_rejected_with_expected_list() {
+        let e = Args::parse(&argv(&["--bogus", "1"]), &["dim", "workers"]).unwrap_err();
+        assert!(e.contains("unknown flag --bogus"), "{e}");
+        assert!(e.contains("--dim"), "{e}");
+        assert!(e.contains("--workers"), "{e}");
+
+        let e = Args::parse(&argv(&["--check", "true"]), &[]).unwrap_err();
+        assert!(e.contains("takes no flags"), "{e}");
+    }
+
+    #[test]
+    fn known_flags_and_positionals_parse() {
+        let a = Args::parse(
+            &argv(&["file.acadl", "--dim", "8", "--workers", "2"]),
+            &["dim", "workers"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["file.acadl"]);
+        assert_eq!(a.usize("dim", 0).unwrap(), 8);
+        assert_eq!(a.usize("workers", 0).unwrap(), 2);
+        assert_eq!(a.usize("absent", 7).unwrap(), 7);
+        assert_eq!(a.opt_usize("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn flag_value_errors() {
+        let e = Args::parse(&argv(&["--dim"]), &["dim"]).unwrap_err();
+        assert!(e.contains("needs a value"), "{e}");
+
+        let a = Args::parse(&argv(&["--dim", "xyz"]), &["dim"]).unwrap();
+        assert!(a.usize("dim", 0).is_err());
+        assert!(a.opt_usize("dim").is_err());
+    }
+
+    #[test]
+    fn bool_flags_are_strict() {
+        let a = Args::parse(&argv(&["--quick", "true"]), &["quick"]).unwrap();
+        assert!(a.bool_flag("quick").unwrap());
+        assert!(!a.bool_flag("absent").unwrap());
+        let a = Args::parse(&argv(&["--quick", "yes"]), &["quick"]).unwrap();
+        assert!(a.bool_flag("quick").is_err());
+    }
+
+    #[test]
+    fn per_command_allowlists_cover_documented_flags() {
+        // Every command that reads a flag in run() must allow it.
+        assert!(allowed_flags("simulate").contains(&"backend"));
+        assert!(allowed_flags("simulate").contains(&"arch-file"));
+        assert!(allowed_flags("dse").contains(&"arch-file"));
+        assert!(allowed_flags("serve").contains(&"arch-file"));
+        assert!(allowed_flags("fmt").contains(&"check"));
+        assert!(allowed_flags("parse").is_empty());
+        // Every command with an allowlist is a known command, so the
+        // unknown-command check fires before flag validation.
+        for c in [
+            "parse", "fmt", "validate", "map", "simulate", "sweep", "dse", "serve", "golden",
+        ] {
+            assert!(COMMANDS.contains(&c), "{c} missing from COMMANDS");
+        }
+    }
+
+    #[test]
+    fn target_spec_conflicts_and_unknowns() {
+        let a = Args::parse(
+            &argv(&["--target", "oma", "--arch-file", "x.acadl"]),
+            allowed_flags("simulate"),
+        )
+        .unwrap();
+        let e = target_spec(&a).unwrap_err();
+        assert!(e.contains("--target does not apply"), "{e}");
+
+        // Geometry flags cannot silently lose against the file either.
+        let a = Args::parse(
+            &argv(&["--rows", "8", "--arch-file", "x.acadl"]),
+            allowed_flags("simulate"),
+        )
+        .unwrap();
+        let e = target_spec(&a).unwrap_err();
+        assert!(e.contains("--rows does not apply"), "{e}");
+
+        let a = Args::parse(&argv(&["--target", "tpu"]), allowed_flags("simulate")).unwrap();
+        assert!(target_spec(&a).unwrap_err().contains("unknown target"));
+
+        let a = Args::parse(&argv(&["--arch-file", "/nonexistent.acadl"]), allowed_flags("simulate"))
+            .unwrap();
+        assert!(target_spec(&a).unwrap_err().contains("read /nonexistent.acadl"));
     }
 }

@@ -27,6 +27,10 @@ pub enum JsonError {
     Type(&'static str, &'static str),
     #[error("missing field `{0}`")]
     Missing(String),
+    /// A field parsed as JSON but failed domain validation (e.g. inline
+    /// ADL text in a job spec that does not elaborate).
+    #[error("{0}")]
+    Invalid(String),
 }
 
 impl Json {
@@ -444,6 +448,71 @@ mod tests {
     fn integer_rendering_is_clean() {
         assert_eq!(Json::num(123456789.0).to_string(), "123456789");
         assert_eq!(Json::num(0.25).to_string(), "0.25");
+    }
+
+    #[test]
+    fn control_and_rare_escapes_roundtrip() {
+        // \b, \f, and raw control characters below 0x20.
+        assert_eq!(
+            Json::parse(r#""a\bb\fc\/d""#).unwrap(),
+            Json::Str("a\u{8}b\u{c}c/d".into())
+        );
+        let original = Json::str("bell\u{7} ctl\u{1}");
+        let text = original.to_string();
+        assert!(text.contains("\\u0007"), "{text}");
+        assert!(text.contains("\\u0001"), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), original);
+        // \u escape for an ASCII control char parses back.
+        assert_eq!(
+            Json::parse("\"\\u0009\"").unwrap(),
+            Json::Str("\t".into())
+        );
+    }
+
+    #[test]
+    fn escape_error_paths() {
+        // Unknown escape, truncated escape, bad \u payload.
+        assert!(matches!(Json::parse(r#""\q""#), Err(JsonError::Parse(..))));
+        assert!(matches!(Json::parse("\"abc\\"), Err(JsonError::Parse(..))));
+        assert!(matches!(
+            Json::parse(r#""\uZZZZ""#),
+            Err(JsonError::Parse(..))
+        ));
+        assert!(matches!(Json::parse(r#""\u00""#), Err(JsonError::Parse(..))));
+        // An unpaired surrogate code point degrades to the replacement
+        // character instead of erroring.
+        assert_eq!(
+            Json::parse(r#""\ud800""#).unwrap(),
+            Json::Str("\u{fffd}".into())
+        );
+    }
+
+    #[test]
+    fn accessor_error_paths() {
+        let v = Json::parse(r#"{"a": [1], "s": "x"}"#).unwrap();
+        assert!(matches!(
+            v.field("a").unwrap().as_obj(),
+            Err(JsonError::Type("object", "array"))
+        ));
+        assert!(matches!(
+            v.field("s").unwrap().as_arr(),
+            Err(JsonError::Type("array", "string"))
+        ));
+        assert!(matches!(
+            v.field("a").unwrap().as_bool(),
+            Err(JsonError::Type("bool", "array"))
+        ));
+        assert!(matches!(
+            v.field("s").unwrap().as_f64(),
+            Err(JsonError::Type("number", "string"))
+        ));
+        assert!(v.to_map().is_ok());
+        assert!(v.field("a").unwrap().to_map().is_err());
+        assert!(v.get("zzz").is_none());
+        assert!(!v.opt_bool("s", false), "non-bool falls back to default");
+        assert!(v.opt_bool("zzz", true));
+        let inv = JsonError::Invalid("inline ADL: bad".into());
+        assert_eq!(inv.to_string(), "inline ADL: bad");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Property tests for the ACADL textual frontend: the pretty-printer
+//! round-trips randomized architecture graphs (`parse(print(ag)) ≡ ag`,
+//! byte-idempotent), and random `targets`/`param` headers survive the
+//! trip — built on `util::prop` (the in-tree proptest substitute).
+
+use acadl::acadl_core::data::Data;
+use acadl::acadl_core::edge::EdgeKind;
+use acadl::acadl_core::graph::Ag;
+use acadl::acadl_core::latency::Latency;
+use acadl::acadl_core::object::build;
+use acadl::adl::{ag_equiv, load_str, print_arch, print_elab, ParamAxis, ParamValue};
+use acadl::coordinator::job::TargetSpec;
+use acadl::util::prop::{forall, Gen};
+
+/// A random, *valid* flat architecture graph: 1–4 cores (execute stage +
+/// functional unit + register file), optionally a memory access unit
+/// with an SRAM behind an optional cache, with randomized attributes,
+/// exotic names, and occasional duplicate edges.
+fn random_ag(g: &mut Gen) -> Ag {
+    let mut ag = Ag::new();
+    let cores = g.usize(1, 4);
+    for c in 0..cores {
+        let ex = ag
+            .add(build::execute_stage(&format!("core[{c}].ex"), g.int(1, 4) as u64))
+            .unwrap();
+        let all_ops = ["mac", "add", "mov", "gemm", "vadd", "macf"];
+        let n_ops = g.usize(1, all_ops.len());
+        let ops: Vec<&str> = (0..n_ops).map(|i| all_ops[i]).collect();
+        let latency = if g.bool() {
+            Latency::Const(g.int(1, 20) as u64)
+        } else {
+            Latency::parse(&format!("{} + is_mac * {}", g.int(1, 4), g.int(1, 8)))
+                .unwrap()
+        };
+        let fu = ag
+            .add(build::functional_unit(&format!("core[{c}].fu"), &ops, latency))
+            .unwrap();
+        let mut regs: Vec<(String, Data)> = Vec::new();
+        for r in 0..g.usize(1, 4) {
+            let name = format!("c{c}_r{r}");
+            let data = match g.usize(0, 2) {
+                0 => Data::int(32, g.int(-5, 5)),
+                1 => Data::f32(0.0),
+                _ => Data::vec(128, 8),
+            };
+            regs.push((name, data));
+        }
+        let width = if g.bool() { 32 } else { 128 };
+        let rf = ag
+            .add(build::register_file(&format!("core[{c}].rf"), width, regs))
+            .unwrap();
+        ag.connect(ex, fu, EdgeKind::Contains).unwrap();
+        ag.connect(rf, fu, EdgeKind::ReadData).unwrap();
+        ag.connect(fu, rf, EdgeKind::WriteData).unwrap();
+        if g.bool() {
+            // Duplicate edge: the multiset must survive the round-trip.
+            ag.connect(fu, rf, EdgeKind::WriteData).unwrap();
+        }
+
+        if g.bool() {
+            let mau = ag
+                .add(build::memory_access_unit(
+                    &format!("core[{c}].mau"),
+                    &["load", "store"],
+                    g.int(1, 3) as u64,
+                ))
+                .unwrap();
+            ag.connect(ex, mau, EdgeKind::Contains).unwrap();
+            ag.connect(rf, mau, EdgeKind::ReadData).unwrap();
+            ag.connect(mau, rf, EdgeKind::WriteData).unwrap();
+            let base = 0x1000 * (c as u64 + 1) * 16;
+            let end = base + 0x100 * g.int(1, 16) as u64;
+            let sram = ag
+                .add(acadl::arch::parts::sram_ports(
+                    &format!("core[{c}].sram"),
+                    base,
+                    end,
+                    g.int(1, 8) as u64,
+                    g.usize(1, 8),
+                    g.usize(1, 4),
+                    g.usize(1, 4),
+                ))
+                .unwrap();
+            if g.bool() {
+                use acadl::mem::cache::ReplacementPolicy;
+                let policy = *g.choose(&[
+                    ReplacementPolicy::Lru,
+                    ReplacementPolicy::Fifo,
+                    ReplacementPolicy::Plru,
+                    ReplacementPolicy::Random,
+                ]);
+                let cache = ag
+                    .add(acadl::arch::parts::cache(
+                        &format!("core[{c}].cache"),
+                        1 << g.usize(2, 6),
+                        1 << g.usize(0, 3),
+                        64,
+                        policy,
+                        g.int(1, 2) as u64,
+                        g.int(4, 12) as u64,
+                    ))
+                    .unwrap();
+                ag.connect(mau, cache, EdgeKind::WriteData).unwrap();
+                ag.connect(cache, mau, EdgeKind::ReadData).unwrap();
+                ag.connect(cache, sram, EdgeKind::WriteData).unwrap();
+                ag.connect(sram, cache, EdgeKind::ReadData).unwrap();
+            } else {
+                ag.connect(mau, sram, EdgeKind::WriteData).unwrap();
+                ag.connect(sram, mau, EdgeKind::ReadData).unwrap();
+            }
+        }
+    }
+    ag.validate().expect("generator must emit valid graphs");
+    ag
+}
+
+#[test]
+fn printer_roundtrips_random_graphs() {
+    forall(
+        "parse(print(ag)) ≡ ag over random graphs",
+        64,
+        |g| {
+            let ag = random_ag(g);
+            // Return the printed form: it is both the test input and the
+            // debug artifact shown on failure.
+            print_arch("rand", None, &[], &ag)
+        },
+        |printed| {
+            let e = load_str(printed).map_err(|err| format!("reparse failed: {err}"))?;
+            let back = print_elab(&e);
+            if back != *printed {
+                return Err("printing is not byte-idempotent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn roundtrip_preserves_graph_equivalence() {
+    forall(
+        "ag_equiv(ag, parse(print(ag)))",
+        32,
+        random_ag,
+        |ag| {
+            let printed = print_arch("rand", None, &[], ag);
+            let e = load_str(&printed).map_err(|err| format!("reparse failed: {err}"))?;
+            ag_equiv(ag, &e.ag)
+        },
+    );
+}
+
+/// Random (target, params) headers survive the round-trip.
+#[test]
+fn headers_roundtrip() {
+    forall(
+        "target + param headers round-trip",
+        32,
+        |g| {
+            let (target, params) = match g.usize(0, 2) {
+                0 => (
+                    TargetSpec::Oma {
+                        cache: g.bool(),
+                        mac_latency: if g.bool() {
+                            Some(g.int(1, 8) as u64)
+                        } else {
+                            None
+                        },
+                    },
+                    vec![
+                        ParamAxis {
+                            key: "tile".into(),
+                            values: vec![ParamValue::Int(2), ParamValue::Int(4)],
+                        },
+                        ParamAxis {
+                            key: "order".into(),
+                            values: vec![
+                                ParamValue::Name("ijk".into()),
+                                ParamValue::Name("kij".into()),
+                            ],
+                        },
+                    ],
+                ),
+                1 => (
+                    TargetSpec::Systolic {
+                        rows: 1 << g.usize(1, 4),
+                        cols: 1 << g.usize(1, 4),
+                    },
+                    vec![ParamAxis {
+                        key: "rows".into(),
+                        values: vec![ParamValue::Int(2), ParamValue::Int(4), ParamValue::Int(8)],
+                    }],
+                ),
+                _ => (
+                    TargetSpec::Gamma {
+                        units: g.usize(1, 8),
+                    },
+                    vec![ParamAxis {
+                        key: "units".into(),
+                        values: vec![ParamValue::Int(1), ParamValue::Int(2)],
+                    }],
+                ),
+            };
+            let ag = random_ag(g);
+            (target, params, print_arch("hdr", None, &[], &ag))
+        },
+        |(target, params, body)| {
+            // Reuse the printed body; prepend a fresh header.
+            let ag = load_str(body).map_err(|e| e.to_string())?.ag;
+            let printed = print_arch("hdr", Some(target), params, &ag);
+            let e = load_str(&printed).map_err(|err| format!("reparse failed: {err}"))?;
+            if e.target.as_ref() != Some(target) {
+                return Err(format!("target changed: {:?} vs {:?}", e.target, target));
+            }
+            if e.params != *params {
+                return Err(format!("params changed: {:?} vs {:?}", e.params, params));
+            }
+            if print_elab(&e) != printed {
+                return Err("not byte-idempotent".into());
+            }
+            Ok(())
+        },
+    );
+}

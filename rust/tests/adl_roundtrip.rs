@@ -1,0 +1,203 @@
+//! ACADL textual-frontend acceptance tests:
+//!
+//! * every zoo `.acadl` example elaborates to a graph **equivalent to its
+//!   Rust-builder counterpart**,
+//! * `parse(print(ag))` reproduces every builder graph exactly
+//!   (round-trip), and printing is byte-idempotent,
+//! * file-bound targets drive `simulate`-equivalent job execution with
+//!   cycle counts identical to builder-constructed machines,
+//! * a file's `param` block drives a DSE sweep end-to-end.
+
+use acadl::adl::{ag_equiv, load_str, print_arch, print_elab, ElabArch};
+use acadl::arch::eyeriss::EyerissConfig;
+use acadl::arch::gamma::GammaConfig;
+use acadl::arch::oma::OmaConfig;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::arch::plasticine::PlasticineConfig;
+use acadl::coordinator::job::{self, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::sim::BackendKind;
+
+fn example(name: &str) -> String {
+    let path = format!("{}/../examples/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Elaborate, round-trip through the printer, and check idempotence.
+fn check_roundtrip(src: &str) -> ElabArch {
+    let e = load_str(src).expect("source elaborates");
+    let printed = print_elab(&e);
+    let e2 = load_str(&printed).expect("canonical form elaborates");
+    ag_equiv(&e.ag, &e2.ag).expect("round-trip graph is equivalent");
+    assert_eq!(e2.target, e.target, "target binding survives round-trip");
+    assert_eq!(e2.params, e.params, "param axes survive round-trip");
+    assert_eq!(print_elab(&e2), printed, "printing is byte-idempotent");
+    e
+}
+
+#[test]
+fn oma_example_matches_builder() {
+    let e = check_roundtrip(&example("oma.acadl"));
+    assert_eq!(
+        e.target,
+        Some(TargetSpec::Oma {
+            cache: true,
+            mac_latency: None
+        })
+    );
+    assert_eq!(e.params.len(), 3);
+    let built = OmaConfig::default().build().unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("oma.acadl ≡ OmaConfig::default()");
+}
+
+#[test]
+fn systolic_example_matches_builder() {
+    let e = check_roundtrip(&example("systolic_2x2.acadl"));
+    assert_eq!(e.target, Some(TargetSpec::Systolic { rows: 2, cols: 2 }));
+    let built = SystolicConfig::new(2, 2).build().unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("systolic_2x2.acadl ≡ SystolicConfig::new(2, 2)");
+}
+
+#[test]
+fn gamma_example_matches_builder() {
+    let e = check_roundtrip(&example("gamma_1u.acadl"));
+    assert_eq!(e.target, Some(TargetSpec::Gamma { units: 1 }));
+    let built = GammaConfig::new(1).build().unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("gamma_1u.acadl ≡ GammaConfig::new(1)");
+}
+
+#[test]
+fn eyeriss_example_matches_builder() {
+    let e = check_roundtrip(&example("eyeriss_2x2.acadl"));
+    assert_eq!(e.target, None, "no code generator targets eyeriss");
+    let built = EyerissConfig {
+        rows: 2,
+        cols: 2,
+        dma_units: 1,
+        ..EyerissConfig::default()
+    }
+    .build()
+    .unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("eyeriss_2x2.acadl ≡ EyerissConfig{2,2,1}");
+}
+
+#[test]
+fn plasticine_example_matches_builder() {
+    let e = check_roundtrip(&example("plasticine_2s.acadl"));
+    assert_eq!(e.target, None, "no code generator targets plasticine");
+    let built = PlasticineConfig {
+        stages: 2,
+        ..PlasticineConfig::default()
+    }
+    .build()
+    .unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("plasticine_2s.acadl ≡ PlasticineConfig{stages: 2}");
+}
+
+#[test]
+fn printer_roundtrips_every_builder_graph() {
+    // parse(print(ag)) ≡ ag over the whole zoo, independent of the
+    // committed files — including an expression-latency OMA variant.
+    let graphs = vec![
+        ("oma", OmaConfig::default().build().unwrap().ag),
+        (
+            "oma_mac4",
+            OmaConfig {
+                mac_latency: 4,
+                ..OmaConfig::default()
+            }
+            .build()
+            .unwrap()
+            .ag,
+        ),
+        (
+            "oma_nocache_dram",
+            OmaConfig {
+                cache: None,
+                dmem: acadl::arch::oma::DataMem::Dram,
+                ..OmaConfig::default()
+            }
+            .build()
+            .unwrap()
+            .ag,
+        ),
+        ("systolic", SystolicConfig::new(3, 2).build().unwrap().ag),
+        ("gamma", GammaConfig::new(2).build().unwrap().ag),
+        ("eyeriss", EyerissConfig::default().build().unwrap().ag),
+        (
+            "plasticine",
+            PlasticineConfig::default().build().unwrap().ag,
+        ),
+    ];
+    for (name, ag) in graphs {
+        let printed = print_arch(name, None, &[], &ag);
+        let e = load_str(&printed)
+            .unwrap_or_else(|err| panic!("printed {name} reparses: {err}"));
+        ag_equiv(&ag, &e.ag).unwrap_or_else(|err| panic!("{name} round-trip: {err}"));
+        assert_eq!(print_elab(&e), printed, "{name}: byte-idempotent");
+    }
+}
+
+fn gemm_job(target: TargetSpec, backend: BackendKind) -> JobSpec {
+    JobSpec {
+        id: 0,
+        target,
+        workload: Workload::Gemm {
+            m: 8,
+            k: 8,
+            n: 8,
+            tile: None,
+            order: None,
+        },
+        mode: SimModeSpec::Timed,
+        backend,
+        max_cycles: 50_000_000,
+    }
+}
+
+#[test]
+fn file_targets_drive_simulation_with_builder_cycles() {
+    for (file, explicit) in [
+        (
+            "oma.acadl",
+            TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+        ),
+        ("systolic_2x2.acadl", TargetSpec::Systolic { rows: 2, cols: 2 }),
+        ("gamma_1u.acadl", TargetSpec::Gamma { units: 1 }),
+    ] {
+        let e = load_str(&example(file)).unwrap();
+        let spec = e.target.clone().expect("bound example");
+        // The file's graph is the machine the binding builds — the
+        // guarantee behind `--arch-file` cycle fidelity.
+        let machine = acadl::coordinator::build_cached(&spec).unwrap();
+        ag_equiv(&e.ag, machine.ag()).unwrap_or_else(|err| panic!("{file}: {err}"));
+
+        let from_file = job::execute(&gemm_job(spec, BackendKind::EventDriven));
+        let from_rust = job::execute(&gemm_job(explicit, BackendKind::EventDriven));
+        assert_eq!(from_file.error, None, "{file}");
+        assert_eq!(from_file.numerics_ok, Some(true), "{file}");
+        assert!(from_file.cycles > 0, "{file}");
+        assert_eq!(from_file.cycles, from_rust.cycles, "{file}");
+        assert_eq!(from_file.instructions, from_rust.instructions, "{file}");
+    }
+}
+
+#[test]
+fn param_block_drives_dse_sweep() {
+    let e = load_str(&example("oma.acadl")).unwrap();
+    let space = acadl::dse::FileSpace::from_arch(&e, 4).unwrap();
+    let specs = space.enumerate().unwrap();
+    // cache(2) × tile(3) × order(2) × 1 backend.
+    assert_eq!(specs.len(), 12);
+    let report = acadl::dse::explore_specs(specs, 2, true);
+    assert_eq!(report.stats.candidates, 12);
+    assert_eq!(
+        report.stats.evaluated + report.stats.pruned,
+        report.stats.candidates
+    );
+    assert_eq!(report.stats.failed, 0, "{}", report.summary());
+    assert!(report.stats.best_cycles > 0);
+    assert!(!report.frontier.is_empty());
+}

@@ -57,4 +57,24 @@ fn main() {
             .all(|p| p.result.error.is_some() || p.result.cycles >= p.lower_bound),
         "a simulation undercut its analytical lower bound"
     );
+
+    // Sibling sweep: the same architecture axes on the transformer
+    // workload (a separate exploration — pruning's cycle incumbent must
+    // not cross workloads).
+    let tf_specs = space.enumerate_transformer();
+    assert!(!tf_specs.is_empty(), "the standard space sweeps the transformer");
+    println!(
+        "\nexploring tiny_transformer over {} candidates on {workers} workers…\n",
+        tf_specs.len()
+    );
+    let tf = acadl::dse::explore_specs(tf_specs, workers, true);
+    print!("{}", tf.table("E10b: design space, tiny_transformer seq 8 (timed)").render());
+    println!("\n{}", tf.summary());
+    let s = &tf.stats;
+    assert_eq!(s.evaluated + s.pruned, s.candidates, "every candidate accounted for");
+    assert!(
+        tf.points.iter().all(|p| p.result.error.is_some()
+            || (p.result.numerics_ok == Some(true) && p.result.cycles >= p.lower_bound)),
+        "a transformer design point failed numerics or undercut its bound"
+    );
 }

@@ -8,6 +8,7 @@
 //!   simulated number must sit above.
 
 use crate::mapping::gemm::GemmParams;
+use crate::mapping::uma::Operator;
 
 /// ScaleSim-like output-stationary estimate for `C (m×n) = A(m×k)·B(k×n)`
 /// on an `rows×cols` array.
@@ -81,6 +82,30 @@ impl Roofline {
         compute.max(memory)
     }
 
+    /// Minimum cycles to stream `words` f32 words through the memory
+    /// system — the bound for element-wise / row-reduction operators
+    /// whose arithmetic is dominated by operand movement.  Sound on every
+    /// target: a word cannot cross the memory interface faster than
+    /// `words_per_cycle`, however the arithmetic is scheduled.
+    pub fn stream_cycles(&self, words: u64) -> u64 {
+        words.div_ceil(self.words_per_cycle.max(1)).max(1)
+    }
+
+    /// Sound lower bound for any [`Operator`]: GeMM-backed operators use
+    /// the compute-vs-memory GeMM bound; the row-wise transformer
+    /// operators use the streaming bound over their mandatory traffic
+    /// (each input word read once, each output word written once).
+    ///
+    /// This is the *single* definition both the mapper cost hints and the
+    /// DSE pre-filter (`dse::lower_bound_cycles`) derive from, so the two
+    /// paths cannot drift apart.
+    pub fn op_cycles(&self, op: &Operator) -> u64 {
+        match op.gemm_params() {
+            Some(p) => self.gemm_cycles(p),
+            None => self.stream_cycles((op.a_words() + op.b_words() + op.c_words()) as u64),
+        }
+    }
+
     /// Which side binds?
     pub fn gemm_bound(&self, p: &GemmParams) -> &'static str {
         let compute = p.macs().div_ceil(self.macs_per_cycle.max(1));
@@ -123,6 +148,31 @@ mod tests {
         assert!(oma > sys, "scalar floor above array: {oma} vs {sys}");
         assert!(sys > gam, "array above fused tensor: {sys} vs {gam}");
         assert_eq!(oma, p.macs(), "OMA is compute-bound at 1 MAC/cycle");
+    }
+
+    #[test]
+    fn op_cycles_covers_rowwise_operators() {
+        let rl = Roofline::oma();
+        // Softmax 4×8: 32 in + 32 out words at 1 word/cycle.
+        let sm = Operator::Softmax { rows: 4, cols: 8 };
+        assert_eq!(rl.op_cycles(&sm), 64);
+        // AddMat moves three matrices.
+        let add = Operator::AddMat { rows: 4, cols: 8 };
+        assert_eq!(rl.op_cycles(&add), 96);
+        // LayerNorm carries one epsilon word in B.
+        let ln = Operator::LayerNorm {
+            rows: 4,
+            cols: 8,
+            eps: 1e-5,
+        };
+        assert_eq!(rl.op_cycles(&ln), 65);
+        // GeMM-backed operators defer to the GeMM bound.
+        let p = GemmParams::new(8, 8, 8);
+        assert_eq!(rl.op_cycles(&Operator::Gemm(p)), rl.gemm_cycles(&p));
+        // Wider memory lowers the streaming bound but never below 1.
+        let wide = Roofline::systolic(8, 8);
+        assert!(wide.op_cycles(&sm) < rl.op_cycles(&sm));
+        assert!(wide.stream_cycles(0) >= 1);
     }
 
     #[test]

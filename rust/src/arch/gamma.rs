@@ -121,14 +121,16 @@ impl GammaConfig {
             self.fetch_width,
         )?;
 
-        // One controller port per LSU (plus headroom) so scaling the unit
-        // count never violates the port budget — contention is still
-        // modeled by the request slots.
+        // One controller port per LSU plus one for the scalar epilogue's
+        // MAU, so scaling the unit count never violates the port budget —
+        // contention is still modeled by the request slots.  (The ≤-LSU
+        // concurrent-requester count is unchanged during tensor programs,
+        // so existing cycle counts are too.)
         let dram = ag.add(parts::dram_ports(
             "dram0",
             self.dram_range.0,
             self.dram_range.1,
-            self.units,
+            self.units + 1,
         ))?;
 
         let mut units = Vec::with_capacity(self.units);
@@ -217,6 +219,12 @@ impl GammaConfig {
             }
         }
 
+        // Scalar epilogue unit over the shared DRAM (softmax / layer-norm
+        // tail for the transformer mappings): private `s*` registers, so
+        // LSU / tensor-unit routing — and existing cycle counts — are
+        // untouched.
+        parts::scalar_epilogue(&mut ag, fe.ifs, dram)?;
+
         ag.validate()?;
         Ok(GammaMachine {
             ag,
@@ -258,8 +266,18 @@ mod tests {
         assert!(s.contains("DRAM=1"), "{s}");
         assert!(s.contains("SRAM=3"), "2 spads + imem: {s}"); // imem is SRAM
         assert_eq!(m.units.len(), 2);
-        // 2 units × 32 vregs + pc.
-        assert_eq!(m.ag.reg_count(), 65);
+        // 2 units × 32 vregs + pc + 8 epilogue scalars.
+        assert_eq!(m.ag.reg_count(), 73);
+    }
+
+    #[test]
+    fn scalar_epilogue_reaches_dram_only() {
+        let m = GammaConfig::new(1).build().unwrap();
+        let smau = m.ag.id("smau0").expect("epilogue MAU exists");
+        assert_eq!(m.ag.storages_of_mau(smau), vec![m.dram]);
+        let sfu = m.ag.id("sfu0").unwrap();
+        let ops = m.ag.kind(sfu).to_process().unwrap();
+        assert!(ops.contains("exp") && ops.contains("rsqrt") && !ops.contains("mac"));
     }
 
     #[test]

@@ -134,7 +134,7 @@ impl OmaConfig {
             "fu0",
             &[
                 "nop", "halt", "mov", "movi", "add", "addi", "sub", "subi", "mul", "muli",
-                "mac", "beqi", "bnei", "jumpi",
+                "mac", "div", "max", "exp", "rsqrt", "gelu", "beqi", "bnei", "jumpi",
             ],
             if self.mac_latency == self.alu_latency {
                 Latency::Const(self.alu_latency)

@@ -108,6 +108,59 @@ pub fn cache(
     )
 }
 
+/// Mnemonics of the scalar epilogue unit: exactly the instruction set the
+/// row-wise transformer mappers ([`crate::mapping::rowwise`]) emit for
+/// softmax / layer-norm / GELU / residual-add / transpose loops.  Shared
+/// by the systolic and Γ̈ models so the two epilogues (and their `.acadl`
+/// descriptions) cannot drift apart.  Deliberately excludes `mac` so the
+/// unit never dilutes the MAC-capable utilization statistic.
+pub const SCALAR_EPILOGUE_OPS: &[&str] = &[
+    "add", "div", "exp", "gelu", "max", "movi", "mul", "rsqrt", "sub",
+];
+
+/// Number of scalar registers (`s0..s{N-1}`) in the epilogue register
+/// file.
+pub const SCALAR_EPILOGUE_REGS: usize = 8;
+
+/// Attach a scalar post-processing ("epilogue") unit to a parallel model:
+/// one execute stage `sfu_ex0` containing a scalar FU `sfu0`
+/// ([`SCALAR_EPILOGUE_OPS`]) and a MAU `smau0` (`load store`), over a
+/// small register file `srf0` (`s0..s7`), with the MAU wired to `dmem`.
+///
+/// This is the softmax/layer-norm engine of the transformer mappings:
+/// GeMM-shaped work keeps running on the array / tensor units, while the
+/// streaming row reductions (max, Σexp, mean/variance) run here — the
+/// usual "vector/scalar tail unit" of real accelerators.  The unit's
+/// registers are private (`s*` names), so it can never capture
+/// instructions belonging to the PE grid or the tensor units: existing
+/// programs route, and time, exactly as before.
+pub fn scalar_epilogue(ag: &mut Ag, ifs: ObjId, dmem: ObjId) -> Result<(), AgError> {
+    let ex = ag.add(build::execute_stage("sfu_ex0", 1))?;
+    let fu = ag.add(build::functional_unit(
+        "sfu0",
+        SCALAR_EPILOGUE_OPS,
+        Latency::Const(1),
+    ))?;
+    let mau = ag.add(build::memory_access_unit("smau0", &["load", "store"], 1))?;
+    let rf = ag.add(build::register_file(
+        "srf0",
+        32,
+        (0..SCALAR_EPILOGUE_REGS)
+            .map(|i| (format!("s{i}"), Data::int(32, 0)))
+            .collect(),
+    ))?;
+    ag.connect(ifs, ex, EdgeKind::Forward)?;
+    ag.connect(ex, fu, EdgeKind::Contains)?;
+    ag.connect(ex, mau, EdgeKind::Contains)?;
+    ag.connect(fu, rf, EdgeKind::WriteData)?;
+    ag.connect(rf, fu, EdgeKind::ReadData)?;
+    ag.connect(mau, rf, EdgeKind::WriteData)?;
+    ag.connect(rf, mau, EdgeKind::ReadData)?;
+    ag.connect(mau, dmem, EdgeKind::WriteData)?;
+    ag.connect(dmem, mau, EdgeKind::ReadData)?;
+    Ok(())
+}
+
 /// A complete fetch front-end (Fig. 3's upper half): instruction memory,
 /// pc register file, IMAU, and the fetch stage containing it.
 ///

@@ -198,14 +198,17 @@ impl SystolicConfig {
             .store_units
             .unwrap_or((self.rows + self.cols) / 2)
             .max(1);
+        // +1 port/slot for the scalar epilogue's MAU; the extra port is
+        // idle during GeMM programs (≤ n_load + n_store concurrent
+        // requesters), so existing cycle counts are unchanged.
         let dmem = ag.add(parts::sram_ports(
             "dmem0",
             self.dmem_range.0,
             self.dmem_range.1,
             self.dmem_latency,
             4,
-            n_load + n_store,
-            n_load + n_store,
+            n_load + n_store + 1,
+            n_load + n_store + 1,
         ))?;
 
         // Load units: first row + first column (B from the top, A from the
@@ -248,6 +251,12 @@ impl SystolicConfig {
             }
         }
 
+        // Scalar epilogue unit (softmax / layer-norm tail for the
+        // transformer mappings): private registers, so PE instruction
+        // routing — and therefore every existing cycle count — is
+        // untouched.
+        parts::scalar_epilogue(&mut ag, fe.ifs, dmem)?;
+
         ag.validate()?;
         Ok(SystolicMachine {
             ag,
@@ -277,13 +286,27 @@ mod tests {
         for (r, c) in [(1, 1), (2, 3), (4, 4)] {
             let m = SystolicConfig::new(r, c).build().unwrap();
             let s = m.ag.summary();
+            // One RF per PE + pcrf0 + the scalar epilogue's srf0.
             assert!(
-                s.contains(&format!("RegisterFile={}", r * c + 1)),
+                s.contains(&format!("RegisterFile={}", r * c + 2)),
                 "{r}x{c}: {s}"
             );
-            // 3 regs per PE + pc.
-            assert_eq!(m.ag.reg_count(), 3 * r * c + 1);
+            // 3 regs per PE + pc + 8 epilogue scalars.
+            assert_eq!(m.ag.reg_count(), 3 * r * c + 1 + 8);
         }
+    }
+
+    #[test]
+    fn scalar_epilogue_is_private() {
+        let m = SystolicConfig::new(2, 2).build().unwrap();
+        let sfu = m.ag.id("sfu0").expect("epilogue FU exists");
+        let smau = m.ag.id("smau0").expect("epilogue MAU exists");
+        let srf = m.ag.id("srf0").unwrap();
+        // The epilogue only reaches its own registers — PE routing is
+        // untouched.
+        assert_eq!(m.ag.writable_rfs(sfu), vec![srf]);
+        assert_eq!(m.ag.storages_of_mau(smau), vec![m.dmem]);
+        assert!(m.ag.reg_id("s0").is_some() && m.ag.reg_id("s7").is_some());
     }
 
     #[test]
@@ -300,7 +323,7 @@ mod tests {
     #[test]
     fn scales_to_16x16() {
         let m = SystolicConfig::new(16, 16).build().unwrap();
-        assert_eq!(m.ag.reg_count(), 3 * 256 + 1);
+        assert_eq!(m.ag.reg_count(), 3 * 256 + 1 + 8);
         m.ag.validate().unwrap();
     }
 }

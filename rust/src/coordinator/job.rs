@@ -97,6 +97,11 @@ pub enum Workload {
         small: bool,
         batch: usize,
     },
+    /// The `tiny_transformer` block (embed → MHA → FFN → head); `seq` is
+    /// the sequence length (the schedule's batch — one token per row).
+    Transformer {
+        seq: usize,
+    },
 }
 
 impl Workload {
@@ -132,6 +137,7 @@ impl Workload {
                 small: *small,
                 batch: *batch,
             },
+            Workload::Transformer { seq } => Workload::Transformer { seq: *seq },
         }
     }
 
@@ -150,6 +156,7 @@ impl Workload {
             Workload::Mlp { small, batch } => {
                 format!("mlp_{}_b{batch}", if *small { "small" } else { "784" })
             }
+            Workload::Transformer { seq } => format!("tiny_transformer_s{seq}"),
         }
     }
 }
@@ -352,24 +359,31 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                 }
             }
         }
-        Workload::Mlp { small, batch } => {
-            let graph = if *small {
-                DnnGraph::mlp_small()
-            } else {
-                DnnGraph::mlp_784_256_128_10()
+        wl @ (Workload::Mlp { .. } | Workload::Transformer { .. }) => {
+            let (graph, batch) = match wl {
+                Workload::Mlp { small, batch } => (
+                    if *small {
+                        DnnGraph::mlp_small()
+                    } else {
+                        DnnGraph::mlp_784_256_128_10()
+                    },
+                    *batch,
+                ),
+                Workload::Transformer { seq } => (DnnGraph::tiny_transformer(), *seq),
+                Workload::Gemm { .. } => unreachable!("outer match"),
             };
             let mode = match spec.mode {
                 SimModeSpec::Functional => SimMode::Functional,
                 _ => SimMode::Timed(spec.backend),
             };
-            let lg = match lowering::lower_graph(machine, &graph, *batch) {
+            let lg = match lowering::lower_graph(machine, &graph, batch) {
                 Ok(l) => l,
                 Err(e) => return done(JobResult::err(spec, e.to_string(), 0)),
             };
-            let x = graph.input_batch(*batch);
+            let x = graph.input_batch(batch);
             match lowering::run_schedule(machine, &lg, &x, mode, spec.max_cycles) {
                 Ok(rep) => {
-                    let want = graph.forward_ref(&x, *batch);
+                    let want = graph.forward_ref(&x, batch);
                     let ok = rep
                         .output
                         .iter()
@@ -518,6 +532,10 @@ impl Workload {
                 ("small", Json::Bool(*small)),
                 ("batch", Json::num(*batch as f64)),
             ]),
+            Workload::Transformer { seq } => Json::obj(vec![
+                ("kind", Json::str("transformer")),
+                ("seq", Json::num(*seq as f64)),
+            ]),
         }
     }
 
@@ -537,7 +555,10 @@ impl Workload {
                 small: v.opt_bool("small", true),
                 batch: v.field("batch")?.as_usize()?,
             }),
-            _ => Err(JsonError::Type("gemm|mlp", "other")),
+            "transformer" => Ok(Workload::Transformer {
+                seq: v.field("seq")?.as_usize()?,
+            }),
+            _ => Err(JsonError::Type("gemm|mlp|transformer", "other")),
         }
     }
 }
@@ -813,6 +834,43 @@ mod tests {
         assert_eq!(ev.cycles, r.cycles, "backends agree on cycles");
         assert_eq!(ev.instructions, r.instructions);
         assert_eq!(ev.numerics_ok, Some(true));
+    }
+
+    #[test]
+    fn transformer_job_roundtrips_and_executes() {
+        let spec = JobSpec {
+            id: 11,
+            target: TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            workload: Workload::Transformer { seq: 8 },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
+            max_cycles: 500_000_000,
+        };
+        let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(spec.workload.describe(), "tiny_transformer_s8");
+
+        let r = execute(&spec);
+        assert_eq!(r.error, None);
+        assert!(r.cycles > 0);
+        assert_eq!(r.numerics_ok, Some(true));
+        // Backend aliases share a canonical key (the memo collapses them).
+        let cs = JobSpec {
+            backend: BackendKind::CycleStepped,
+            ..spec.clone()
+        };
+        assert_eq!(spec.canonical_key(), cs.canonical_key());
+        assert_ne!(
+            spec.canonical_key(),
+            JobSpec {
+                workload: Workload::Transformer { seq: 16 },
+                ..spec
+            }
+            .canonical_key()
+        );
     }
 
     #[test]

@@ -1,8 +1,20 @@
-//! A minimal sequential DNN graph IR: the shapes the mapping layer needs,
-//! with deterministic parameter initialization for experiments (the PyTorch
+//! A minimal DNN graph IR: the shapes the mapping layer needs, with
+//! deterministic parameter initialization for experiments (the PyTorch
 //! / TVM ingestion role of §5, per DESIGN.md's substitution table).
+//!
+//! The IR is a layer *sequence* over one running activation matrix
+//! (`rows × features`, rows = batch / sequence tokens), extended with
+//! numbered **stash slots** (`Stash` / `Recall`) so non-linear dataflow —
+//! attention's Q/K/V fan-out, residual skip connections,
+//! activation-×-activation `MatMul` — still expresses as a flat schedule.
+//! That is exactly the shape the lowering layer executes: one accelerator
+//! program (or host glue step) at a time with host-managed transfers.
+
+use std::collections::HashMap;
 
 use crate::mapping::conv::Conv2d;
+use crate::mapping::gemm::{gemm_ref, GemmParams};
+use crate::mapping::rowwise::{addmat_ref, gelu_ref, layernorm_ref, softmax_ref, transpose_ref};
 
 /// Host-side 2×2 max-pool on batch × (c·h·w) channel-major activations —
 /// the single implementation shared by the reference forward pass and the
@@ -49,6 +61,26 @@ pub enum Layer {
     /// accelerator calls, like TVM's layout-transform glue).
     MaxPool2x2,
     Flatten,
+    // ----- transformer layers (activation matrix is rows × features) ---
+    /// Activation-×-activation matrix multiply: `act · stash[slot]`,
+    /// scaled by `scale` (attention's `Q·K^T / √d` and `P·V`).  The
+    /// stashed operand must be `features × n`-shaped at run time.
+    MatMul { slot: usize, scale: f32 },
+    /// Row-wise numerically stable softmax over the feature axis.
+    Softmax,
+    /// Row-wise non-affine layer normalization over the feature axis.
+    LayerNorm { eps: f32 },
+    /// Element-wise GELU (tanh approximation).
+    Gelu,
+    /// Residual connection: `act += stash[slot]` (same shape).
+    AddResidual { slot: usize },
+    /// Transpose the activation matrix (`rows × features` →
+    /// `features × rows`) — attention's `K^T` data movement.
+    Transpose,
+    /// Save the current activation into numbered slot `slot`.
+    Stash { slot: usize },
+    /// Restore the activation saved in slot `slot`.
+    Recall { slot: usize },
 }
 
 /// A sequential DNN: input shape + layers + deterministic parameters.
@@ -115,6 +147,66 @@ impl DnnGraph {
                 },
             ],
             name: "cnn_small".into(),
+        }
+    }
+
+    /// A single-head, single-block transformer over `d = 16` token
+    /// features: embed → pre-norm self-attention (Q·K^T/√d softmax · V,
+    /// output projection, residual) → pre-stash GELU FFN (16→32→16,
+    /// residual) → final norm → 8-class head.  The *batch* of the
+    /// workload is the **sequence length** (one token per activation
+    /// row); every GeMM dimension is a multiple of 8, so the model runs
+    /// unpadded on Γ̈'s 8×8 MXU whenever the sequence length is too.
+    ///
+    /// This is the first non-matmul-only dataflow in the zoo: it
+    /// exercises `MatMul` over stashed activations, `Transpose`,
+    /// `Softmax`, `LayerNorm`, `Gelu`, and residual `AddResidual` —
+    /// lowered through the same registry seam as everything else.
+    pub fn tiny_transformer() -> Self {
+        const D: usize = 16;
+        const FFN: usize = 32;
+        const OUT: usize = 8;
+        const EPS: f32 = 1e-5;
+        let dense = |i: usize, o: usize| Layer::Dense {
+            in_features: i,
+            out_features: o,
+            relu: false,
+        };
+        DnnGraph {
+            input_features: D,
+            layers: vec![
+                dense(D, D),                   // 0: embed
+                Layer::LayerNorm { eps: EPS }, // 1: pre-attention norm
+                Layer::Stash { slot: 0 },      // 2: x
+                dense(D, D),                   // 3: K = x·Wk
+                Layer::Transpose,              // 4: K^T (d × T)
+                Layer::Stash { slot: 1 },      // 5
+                Layer::Recall { slot: 0 },     // 6
+                dense(D, D),                   // 7: V = x·Wv
+                Layer::Stash { slot: 2 },      // 8
+                Layer::Recall { slot: 0 },     // 9
+                dense(D, D),                   // 10: Q = x·Wq
+                Layer::MatMul {
+                    slot: 1,
+                    scale: 0.25, // 1/√16
+                },                             // 11: S = Q·K^T/√d (T × T)
+                Layer::Softmax,                // 12: P = softmax(S)
+                Layer::MatMul {
+                    slot: 2,
+                    scale: 1.0,
+                },                             // 13: ctx = P·V (T × d)
+                dense(D, D),                   // 14: output projection
+                Layer::AddResidual { slot: 0 }, // 15: + x
+                Layer::LayerNorm { eps: EPS }, // 16
+                Layer::Stash { slot: 3 },      // 17: y
+                dense(D, FFN),                 // 18: FFN up
+                Layer::Gelu,                   // 19
+                dense(FFN, D),                 // 20: FFN down
+                Layer::AddResidual { slot: 3 }, // 21: + y
+                Layer::LayerNorm { eps: EPS }, // 22: final norm
+                dense(D, OUT),                 // 23: head
+            ],
+            name: "tiny_transformer".into(),
         }
     }
 
@@ -196,14 +288,26 @@ impl DnnGraph {
             .collect()
     }
 
-    /// Host-side reference forward pass (row-major, batch × features).
-    /// Conv/pool stages use channel-major (C,H,W) flattening per image;
-    /// the spatial shape is tracked from each conv layer's own dims.
+    /// Host-side reference forward pass (row-major, rows × features; rows
+    /// start at `batch` and only [`Layer::Transpose`]/[`Layer::Recall`]
+    /// change them).  Conv/pool stages use channel-major (C,H,W)
+    /// flattening per image; the spatial shape is tracked from each conv
+    /// layer's own dims.
+    ///
+    /// Every operator reference here computes the **same f32 operations
+    /// in the same order** as the lowered scalar/GeMM programs (the
+    /// accumulation runs k-sequentially from zero with bias added last,
+    /// matching the device + host-epilogue order), so on targets whose
+    /// GeMM accumulates sequentially (OMA, systolic) the simulated model
+    /// output equals this reference *bit-for-bit*.
     pub fn forward_ref(&self, x: &[f32], batch: usize) -> Vec<f32> {
         let mut h = x.to_vec();
         let mut feat = self.input_features;
+        let mut rows = batch;
         // (channels, height, width) of the current activations, when known.
         let mut shape: Option<(usize, usize, usize)> = None;
+        // Stash slots: (activation, rows, features).
+        let mut stash: HashMap<usize, (Vec<f32>, usize, usize)> = HashMap::new();
         for (idx, layer) in self.layers.iter().enumerate() {
             match layer {
                 Layer::Dense {
@@ -213,13 +317,14 @@ impl DnnGraph {
                 } => {
                     assert_eq!(feat, *in_features);
                     let (w, b) = self.dense_params(idx).unwrap();
-                    let mut out = vec![0.0f32; batch * out_features];
-                    for bi in 0..batch {
+                    let mut out = vec![0.0f32; rows * out_features];
+                    for bi in 0..rows {
                         for o in 0..*out_features {
-                            let mut acc = b[o];
+                            let mut acc = 0.0f32;
                             for i in 0..*in_features {
                                 acc += h[bi * in_features + i] * w[i * out_features + o];
                             }
+                            acc += b[o];
                             out[bi * out_features + o] = if *relu { acc.max(0.0) } else { acc };
                         }
                     }
@@ -228,6 +333,7 @@ impl DnnGraph {
                     shape = None;
                 }
                 Layer::Conv2d { conv, relu } => {
+                    assert_eq!(rows, batch, "conv layers run on the full batch");
                     assert_eq!(
                         feat,
                         conv.in_c * conv.in_h * conv.in_w,
@@ -259,6 +365,47 @@ impl DnnGraph {
                 }
                 Layer::Flatten => {
                     // (C,H,W) is already flattened channel-major.
+                    shape = None;
+                }
+                Layer::MatMul { slot, scale } => {
+                    let (b, brows, bcols) = stash
+                        .get(slot)
+                        .unwrap_or_else(|| panic!("matmul at layer {idx}: empty slot {slot}"));
+                    assert_eq!(feat, *brows, "matmul operand shapes at layer {idx}");
+                    let p = GemmParams::new(rows, feat, *bcols);
+                    h = gemm_ref(&p, &h, b);
+                    for v in &mut h {
+                        *v *= scale;
+                    }
+                    feat = *bcols;
+                    shape = None;
+                }
+                Layer::Softmax => h = softmax_ref(rows, feat, &h),
+                Layer::LayerNorm { eps } => h = layernorm_ref(rows, feat, *eps, &h),
+                Layer::Gelu => h = gelu_ref(&h),
+                Layer::AddResidual { slot } => {
+                    let (b, brows, bcols) = stash
+                        .get(slot)
+                        .unwrap_or_else(|| panic!("residual at layer {idx}: empty slot {slot}"));
+                    assert_eq!((rows, feat), (*brows, *bcols), "residual shape at layer {idx}");
+                    h = addmat_ref(&h, b);
+                }
+                Layer::Transpose => {
+                    h = transpose_ref(rows, feat, &h);
+                    std::mem::swap(&mut rows, &mut feat);
+                    shape = None;
+                }
+                Layer::Stash { slot } => {
+                    stash.insert(*slot, (h.clone(), rows, feat));
+                }
+                Layer::Recall { slot } => {
+                    let (v, r, c) = stash
+                        .get(slot)
+                        .unwrap_or_else(|| panic!("recall at layer {idx}: empty slot {slot}"))
+                        .clone();
+                    h = v;
+                    rows = r;
+                    feat = c;
                     shape = None;
                 }
             }
@@ -311,6 +458,25 @@ mod tests {
         assert_eq!(w.len(), 36); // out_c 4 × in_c 1 × 3 × 3
         assert_eq!(g.conv_params(0).unwrap()[..4], w[..4]);
         assert!(g.conv_params(1).is_none(), "maxpool has no conv params");
+    }
+
+    #[test]
+    fn tiny_transformer_forward_ref_runs() {
+        let g = DnnGraph::tiny_transformer();
+        let t = 8; // sequence length = workload batch
+        let x = g.input_batch(t);
+        let y = g.forward_ref(&x, t);
+        assert_eq!(y.len(), t * 8, "8-class head per token");
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(y.iter().any(|&v| v != 0.0));
+        // Deterministic (parameters and input are seeded).
+        assert_eq!(g.forward_ref(&x, t), y);
+        // Every dense layer has parameters; glue layers have none.
+        assert!(g.dense_params(0).is_some() && g.dense_params(23).is_some());
+        assert!(g.dense_params(12).is_none(), "softmax has no parameters");
+        // Sequence length is a free workload knob (non-multiple-of-8 too).
+        let y6 = g.forward_ref(&g.input_batch(6), 6);
+        assert_eq!(y6.len(), 6 * 8);
     }
 
     #[test]

@@ -9,6 +9,16 @@
 //! the host performing the patch transform when loading inputs.  MaxPool
 //! and Flatten are host glue steps between accelerator calls — the layout
 //! transforms TVM's graph runtime would schedule on the CPU.
+//!
+//! The transformer layers ride the same seam: `MatMul` over a stashed
+//! activation reuses the tiled-GeMM mappers (the B operand comes from a
+//! stash slot instead of the weight table), while `Softmax`, `LayerNorm`,
+//! `Gelu`, residual `AddResidual`, and `Transpose` lower through the
+//! `scalar_rowwise` mapper onto each target's scalar unit.  `Stash` /
+//! `Recall` are pure host bookkeeping — saving and restoring the running
+//! activation between accelerator calls.
+
+use std::collections::HashMap;
 
 use thiserror::Error;
 
@@ -18,6 +28,7 @@ use crate::mapping::gemm::{GemmLayout, GemmParams};
 use crate::mapping::uma::{self, Machine, Operator, UmaError};
 use crate::sim::backend::BackendKind;
 use crate::sim::engine::{Engine, SimError};
+use crate::sim::exec::MemImage;
 use crate::sim::functional::{FuncError, FunctionalSim};
 
 use super::graph::{DnnGraph, Layer};
@@ -36,6 +47,8 @@ pub enum SimMode {
 pub enum LowerError {
     #[error("layer {0}: cannot lower {1} here (host stages need a known spatial shape)")]
     Unsupported(usize, &'static str),
+    #[error("layer {0}: {1}")]
+    BadGraph(usize, String),
     #[error(transparent)]
     Uma(#[from] UmaError),
     #[error(transparent)]
@@ -44,23 +57,46 @@ pub enum LowerError {
     Func(#[from] FuncError),
 }
 
+/// Where a mapped layer's B operand (the layout's second region) comes
+/// from at schedule-run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BSource {
+    /// The layer's own (padded) weight matrix, fixed at lowering time.
+    Weights,
+    /// A stash slot's activation (activation-×-activation `MatMul`,
+    /// residual `AddResidual`) — padded at run time where the target
+    /// requires it.
+    Stash(usize),
+    /// A single constant word (layer norm's epsilon), bit patterns fixed
+    /// at lowering time.
+    Eps,
+    /// No second operand.
+    None,
+}
+
 /// One accelerator-mapped layer: operator, program, layout, padded dims.
 #[derive(Debug, Clone)]
 pub struct LoweredLayer {
     pub name: String,
     pub op: Operator,
     pub lowered: uma::Lowered,
-    /// Logical (unpadded) m, k, n of the GeMM view.
+    /// Logical (unpadded) m, k, n of the operator's matrix view (for
+    /// row-wise operators, `m × k` is the input and `n = k`).
     pub logical: (usize, usize, usize),
-    /// GeMM B operand (padded, row-major k×n).
+    /// GeMM B operand (padded, row-major k×n) when `b_source` is
+    /// [`BSource::Weights`]; the epsilon word for [`BSource::Eps`].
     pub weights: Vec<f32>,
-    /// Bias (padded, len n; empty for conv layers).
+    /// Bias (padded, len n; empty for conv/transformer layers).
     pub bias: Vec<f32>,
     pub relu: bool,
     pub bias_base: Option<u64>,
     /// For conv layers: the convolution whose im2col patches form the A
     /// operand (per image of the batch).
     pub conv: Option<Conv2d>,
+    /// Where the B region's data comes from at run time.
+    pub b_source: BSource,
+    /// Host-applied epilogue scale (1.0 = none) — attention's `1/√d`.
+    pub scale: f32,
 }
 
 /// One step of the lowered schedule: an accelerator program or a host
@@ -72,6 +108,10 @@ pub enum Step {
     MaxPool2x2 { c: usize, h: usize, w: usize },
     /// No-op on the flat channel-major layout.
     Flatten,
+    /// Save the running activation into a numbered host slot.
+    Stash { slot: usize },
+    /// Restore the activation saved in a numbered host slot.
+    Recall { slot: usize },
 }
 
 /// The whole lowered model.
@@ -123,13 +163,15 @@ fn pad_matrix(data: &[f32], r: usize, c: usize, pr: usize, pc: usize) -> Vec<f32
     out
 }
 
-/// Lower every layer of `graph` for `machine` (batch rows).  Γ̈ pads all
-/// GeMM dims to multiples of [`GAMMA_TILE`]; scalar targets use the
-/// logical dims directly.  Dense bias+ReLU fuses on Γ̈ (the `Dense`
-/// operator); scalar targets get a plain GeMM and host-applied
-/// bias/activation.  Conv2d lowers to the im2col GeMM on every target
-/// (ReLU host-applied — the fused path needs a bias row); MaxPool2x2 and
-/// Flatten become host steps.
+/// Lower every layer of `graph` for `machine` (batch rows; for the
+/// transformer, batch = sequence length).  Γ̈ pads all GeMM dims to
+/// multiples of [`GAMMA_TILE`]; scalar targets use the logical dims
+/// directly.  Dense bias+ReLU fuses on Γ̈ (the `Dense` operator); scalar
+/// targets get a plain GeMM and host-applied bias/activation.  Conv2d
+/// lowers to the im2col GeMM on every target (ReLU host-applied — the
+/// fused path needs a bias row); the row-wise transformer operators lower
+/// to scalar-unit streaming loops; MaxPool2x2, Flatten, Stash, and Recall
+/// become host steps.
 pub fn lower_graph(
     machine: &Machine,
     graph: &DnnGraph,
@@ -139,7 +181,10 @@ pub fn lower_graph(
     let mult = if is_gamma { GAMMA_TILE } else { 1 };
     let mut steps = Vec::new();
     let mut feat = graph.input_features;
+    let mut rows = batch;
     let mut shape: Option<(usize, usize, usize)> = None;
+    // Stash slots: (rows, features) at lowering time.
+    let mut slots: HashMap<usize, (usize, usize)> = HashMap::new();
     for (idx, layer) in graph.layers.iter().enumerate() {
         match layer {
             Layer::Dense {
@@ -149,7 +194,7 @@ pub fn lower_graph(
             } => {
                 debug_assert_eq!(feat, *in_features);
                 let (w, b) = graph.dense_params(idx).unwrap();
-                let (m, k, n) = (batch, *in_features, *out_features);
+                let (m, k, n) = (rows, *in_features, *out_features);
                 let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
                 let p = GemmParams::new(pm, pk, pn);
                 let weights = pad_matrix(&w, k, n, pk, pn);
@@ -181,12 +226,15 @@ pub fn lower_graph(
                     relu: *relu,
                     bias_base: is_gamma.then_some(bias_base),
                     conv: None,
+                    b_source: BSource::Weights,
+                    scale: 1.0,
                 }));
                 feat = n;
                 shape = None;
             }
             Layer::Conv2d { conv, relu } => {
                 debug_assert_eq!(feat, conv.in_c * conv.in_h * conv.in_w);
+                debug_assert_eq!(rows, batch, "conv layers run on the full batch");
                 let (oh, ow) = (conv.out_h(), conv.out_w());
                 let g = conv.as_gemm(); // per-image (oh·ow) × kk × out_c
                 let (m, k, n) = (batch * g.m, g.k, g.n);
@@ -209,6 +257,8 @@ pub fn lower_graph(
                     relu: *relu,
                     bias_base: None,
                     conv: Some(*conv),
+                    b_source: BSource::Weights,
+                    scale: 1.0,
                 }));
                 feat = conv.out_c * oh * ow;
                 shape = Some((conv.out_c, oh, ow));
@@ -225,9 +275,177 @@ pub fn lower_graph(
                 steps.push(Step::Flatten);
                 shape = None;
             }
+            Layer::MatMul { slot, scale } => {
+                let Some(&(brows, bcols)) = slots.get(slot) else {
+                    return Err(LowerError::BadGraph(idx, format!("matmul reads empty slot {slot}")));
+                };
+                if feat != brows {
+                    return Err(LowerError::BadGraph(
+                        idx,
+                        format!("matmul shapes: {rows}x{feat} · {brows}x{bcols}"),
+                    ));
+                }
+                let (m, k, n) = (rows, feat, bcols);
+                let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
+                let op = Operator::Gemm(GemmParams::new(pm, pk, pn));
+                let lowered = uma::lower(machine, &op)?;
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("matmul{idx}_{m}x{k}x{n}"),
+                    op,
+                    lowered,
+                    logical: (m, k, n),
+                    weights: Vec::new(),
+                    bias: Vec::new(),
+                    relu: false,
+                    bias_base: None,
+                    conv: None,
+                    b_source: BSource::Stash(*slot),
+                    scale: *scale,
+                }));
+                feat = n;
+                shape = None;
+            }
+            Layer::Softmax
+            | Layer::LayerNorm { .. }
+            | Layer::Gelu
+            | Layer::Transpose => {
+                let (op, tag) = match layer {
+                    Layer::Softmax => (Operator::Softmax { rows, cols: feat }, "softmax"),
+                    Layer::LayerNorm { eps } => (
+                        Operator::LayerNorm {
+                            rows,
+                            cols: feat,
+                            eps: *eps,
+                        },
+                        "layernorm",
+                    ),
+                    Layer::Gelu => (Operator::Gelu { rows, cols: feat }, "gelu"),
+                    _ => (Operator::Transpose { rows, cols: feat }, "transpose"),
+                };
+                let lowered = uma::lower(machine, &op)?;
+                let (b_source, weights) = match op {
+                    Operator::LayerNorm { eps, .. } => (BSource::Eps, vec![eps]),
+                    _ => (BSource::None, Vec::new()),
+                };
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("{tag}{idx}_{rows}x{feat}"),
+                    op,
+                    lowered,
+                    logical: (rows, feat, feat),
+                    weights,
+                    bias: Vec::new(),
+                    relu: false,
+                    bias_base: None,
+                    conv: None,
+                    b_source,
+                    scale: 1.0,
+                }));
+                if matches!(layer, Layer::Transpose) {
+                    std::mem::swap(&mut rows, &mut feat);
+                }
+                shape = None;
+            }
+            Layer::AddResidual { slot } => {
+                let Some(&(brows, bcols)) = slots.get(slot) else {
+                    return Err(LowerError::BadGraph(idx, format!("residual reads empty slot {slot}")));
+                };
+                if (rows, feat) != (brows, bcols) {
+                    return Err(LowerError::BadGraph(
+                        idx,
+                        format!("residual shapes: {rows}x{feat} + {brows}x{bcols}"),
+                    ));
+                }
+                let op = Operator::AddMat { rows, cols: feat };
+                let lowered = uma::lower(machine, &op)?;
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("residual{idx}_{rows}x{feat}"),
+                    op,
+                    lowered,
+                    logical: (rows, feat, feat),
+                    weights: Vec::new(),
+                    bias: Vec::new(),
+                    relu: false,
+                    bias_base: None,
+                    conv: None,
+                    b_source: BSource::Stash(*slot),
+                    scale: 1.0,
+                }));
+                shape = None;
+            }
+            Layer::Stash { slot } => {
+                steps.push(Step::Stash { slot: *slot });
+                slots.insert(*slot, (rows, feat));
+            }
+            Layer::Recall { slot } => {
+                let Some(&(srows, scols)) = slots.get(slot) else {
+                    return Err(LowerError::BadGraph(idx, format!("recall of empty slot {slot}")));
+                };
+                steps.push(Step::Recall { slot: *slot });
+                rows = srows;
+                feat = scols;
+                shape = None;
+            }
         }
     }
     Ok(LoweredGraph { steps, batch })
+}
+
+/// The machine-independent operator sequence of `graph` at `batch` rows —
+/// **unpadded** (target padding only raises true cycles, so bounding the
+/// unpadded problem stays sound).  This is the single source the DSE
+/// pre-filter sums its per-operator `Roofline::op_cycles` bound over.
+pub fn roofline_ops(graph: &DnnGraph, batch: usize) -> Vec<Operator> {
+    let mut ops = Vec::new();
+    let mut feat = graph.input_features;
+    let mut rows = batch;
+    let mut slots: HashMap<usize, (usize, usize)> = HashMap::new();
+    for layer in &graph.layers {
+        match layer {
+            Layer::Dense {
+                in_features,
+                out_features,
+                ..
+            } => {
+                ops.push(Operator::Gemm(GemmParams::new(rows, *in_features, *out_features)));
+                feat = *out_features;
+            }
+            Layer::Conv2d { conv, .. } => {
+                let g = conv.as_gemm();
+                ops.push(Operator::Gemm(GemmParams::new(batch * g.m, g.k, g.n)));
+                feat = conv.out_c * conv.out_h() * conv.out_w();
+            }
+            Layer::MaxPool2x2 => feat /= 4,
+            Layer::Flatten => {}
+            Layer::MatMul { slot, .. } => {
+                let (brows, bcols) = slots.get(slot).copied().unwrap_or((feat, feat));
+                debug_assert_eq!(feat, brows);
+                ops.push(Operator::Gemm(GemmParams::new(rows, feat, bcols)));
+                feat = bcols;
+            }
+            Layer::Softmax => ops.push(Operator::Softmax { rows, cols: feat }),
+            Layer::LayerNorm { eps } => ops.push(Operator::LayerNorm {
+                rows,
+                cols: feat,
+                eps: *eps,
+            }),
+            Layer::Gelu => ops.push(Operator::Gelu { rows, cols: feat }),
+            Layer::AddResidual { .. } => ops.push(Operator::AddMat { rows, cols: feat }),
+            Layer::Transpose => {
+                ops.push(Operator::Transpose { rows, cols: feat });
+                std::mem::swap(&mut rows, &mut feat);
+            }
+            Layer::Stash { slot } => {
+                slots.insert(*slot, (rows, feat));
+            }
+            Layer::Recall { slot } => {
+                if let Some(&(r, c)) = slots.get(slot) {
+                    rows = r;
+                    feat = c;
+                }
+            }
+        }
+    }
+    ops
 }
 
 /// Run the lowered schedule: per-layer simulation with host-managed
@@ -241,7 +459,8 @@ pub fn run_schedule(
 ) -> Result<ScheduleReport, LowerError> {
     let mut report = ScheduleReport::default();
     let batch = lg.batch;
-    let mut act = input.to_vec(); // batch × features, unpadded
+    let mut act = input.to_vec(); // rows × features, unpadded
+    let mut stash: HashMap<usize, Vec<f32>> = HashMap::new();
 
     for step in &lg.steps {
         let ll = match step {
@@ -251,18 +470,30 @@ pub fn run_schedule(
                 continue;
             }
             Step::Flatten => continue,
+            Step::Stash { slot } => {
+                stash.insert(*slot, act.clone());
+                continue;
+            }
+            Step::Recall { slot } => {
+                act = stash
+                    .get(slot)
+                    .expect("lower_graph validated stash slots")
+                    .clone();
+                continue;
+            }
         };
         let (m, k, n) = ll.logical;
-        let p = *ll.op.gemm_params();
+        let gemm = ll.op.gemm_params().copied();
 
-        // Assemble the (m×k) A operand: dense layers use the activations
-        // directly; conv layers im2col each image's patches.
-        let a = match &ll.conv {
-            None => {
+        // Assemble the A operand: GeMM-backed layers pad the activations
+        // (conv layers im2col each image's patches first); row-wise
+        // layers stream the logical matrix directly.
+        let a_data: Vec<f32> = match (&gemm, &ll.conv) {
+            (Some(p), None) => {
                 assert_eq!(act.len(), m * k, "activation width mismatch at {}", ll.name);
-                act.clone()
+                pad_matrix(&act, m, k, p.m, p.k)
             }
-            Some(conv) => {
+            (Some(p), Some(conv)) => {
                 let in_feat = conv.in_c * conv.in_h * conv.in_w;
                 assert_eq!(act.len(), batch * in_feat, "conv input mismatch at {}", ll.name);
                 let rows_per_img = conv.out_h() * conv.out_w();
@@ -271,56 +502,86 @@ pub fn run_schedule(
                     a.extend(conv.im2col(&act[bi * in_feat..(bi + 1) * in_feat]));
                 }
                 debug_assert_eq!(a.len(), batch * rows_per_img * k);
-                a
+                pad_matrix(&a, m, k, p.m, p.k)
+            }
+            (None, _) => {
+                assert_eq!(act.len(), m * k, "activation width mismatch at {}", ll.name);
+                act.clone()
             }
         };
-        let padded_a = pad_matrix(&a, m, k, p.m, p.k);
+        // Assemble the B operand per source.
+        let b_data: Vec<f32> = match ll.b_source {
+            BSource::Weights | BSource::Eps => ll.weights.clone(),
+            BSource::Stash(slot) => {
+                let s = stash.get(&slot).expect("lower_graph validated stash slots");
+                match &gemm {
+                    Some(p) => {
+                        // MatMul: the stashed operand is the logical k×n
+                        // B matrix, padded to the target's tile.
+                        assert_eq!(s.len(), k * n, "stashed operand shape at {}", ll.name);
+                        pad_matrix(s, k, n, p.k, p.n)
+                    }
+                    None => {
+                        // AddMat: the second addend is rows×cols like the
+                        // input — the operator's own B-region size.
+                        assert_eq!(s.len(), ll.op.b_words(), "stashed operand shape at {}", ll.name);
+                        s.clone()
+                    }
+                }
+            }
+            BSource::None => Vec::new(),
+        };
+        let lay = &ll.lowered.layout;
+        let load = |mem: &mut MemImage| {
+            mem.load_f32(lay.a_base, &a_data);
+            if !b_data.is_empty() {
+                mem.load_f32(lay.b_base, &b_data);
+            }
+            if let Some(bb) = ll.bias_base {
+                mem.load_f32(bb, &ll.bias);
+            }
+        };
 
         let (cycles, instrs, c_out) = match mode {
             SimMode::Functional => {
                 let mut sim = FunctionalSim::new(machine.ag());
-                ll.lowered
-                    .layout
-                    .load_inputs(&p, &mut sim.mem, &padded_a, &ll.weights);
-                if let Some(bb) = ll.bias_base {
-                    sim.mem.load_f32(bb, &ll.bias);
-                }
+                load(&mut sim.mem);
                 let st = sim.run(&ll.lowered.program, max_cycles)?;
-                (0, st.instructions, ll.lowered.layout.read_c(&p, &sim.mem))
+                (0, st.instructions, sim.mem.dump_f32(lay.c_base, ll.op.c_words()))
             }
             SimMode::Timed(backend) => {
                 let mut e = Engine::with_backend(machine.ag(), &ll.lowered.program, backend)?;
-                ll.lowered
-                    .layout
-                    .load_inputs(&p, &mut e.mem, &padded_a, &ll.weights);
-                if let Some(bb) = ll.bias_base {
-                    e.mem.load_f32(bb, &ll.bias);
-                }
+                load(&mut e.mem);
                 let st = e.run(max_cycles)?;
-                (st.cycles, st.retired, ll.lowered.layout.read_c(&p, &e.mem))
+                (st.cycles, st.retired, e.mem.dump_f32(lay.c_base, ll.op.c_words()))
             }
         };
 
         // Unpad, then post-process on the host.
-        act = match &ll.conv {
-            None => {
-                // Dense: apply bias + activation where not fused on-device.
+        act = match (&gemm, &ll.conv) {
+            (None, _) => c_out, // row-wise: logical output, no padding
+            (Some(p), None) => {
+                // GeMM/Dense: unpad; apply bias + activation where not
+                // fused on-device; apply the epilogue scale.
                 let mut next = vec![0.0f32; m * n];
                 for i in 0..m {
                     for j in 0..n {
                         let mut v = c_out[i * p.n + j];
-                        if ll.bias_base.is_none() {
+                        if ll.bias_base.is_none() && !ll.bias.is_empty() {
                             v += ll.bias[j];
                             if ll.relu {
                                 v = v.max(0.0);
                             }
+                        }
+                        if ll.scale != 1.0 {
+                            v *= ll.scale;
                         }
                         next[i * n + j] = v;
                     }
                 }
                 next
             }
-            Some(conv) => {
+            (Some(p), Some(conv)) => {
                 // Conv: GeMM rows are (image, pixel) × out_c; transpose to
                 // channel-major (C,H,W) per image, ReLU on the host.
                 let rows_per_img = conv.out_h() * conv.out_w();
@@ -345,7 +606,7 @@ pub fn run_schedule(
             name: ll.name.clone(),
             cycles,
             instructions: instrs,
-            macs: (m * k * n) as u64,
+            macs: gemm.map_or(0, |_| (m * k * n) as u64),
             ipc: if cycles > 0 {
                 instrs as f64 / cycles as f64
             } else {
@@ -426,14 +687,16 @@ mod tests {
     }
 
     #[test]
-    fn small_mlp_on_oma_matches_reference() {
+    fn small_mlp_on_oma_matches_reference_exactly() {
+        // The OMA's GeMM accumulates k-sequentially from zero with the
+        // bias applied by the host epilogue — the exact order of
+        // `forward_ref`, so the match is bit-exact, not a tolerance.
         let g = DnnGraph::mlp_small();
         let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
         let lg = lower_graph(&machine, &g, 4).unwrap();
         let x = g.input_batch(4);
         let rep = run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
-        let want = g.forward_ref(&x, 4);
-        assert!(max_abs_diff(&rep.output, &want) < 1e-3);
+        assert_eq!(rep.output, g.forward_ref(&x, 4));
     }
 
     #[test]
@@ -492,5 +755,147 @@ mod tests {
             lower_graph(&machine, &g, 1),
             Err(LowerError::Unsupported(0, "MaxPool2x2"))
         ));
+    }
+
+    // ----------------------------------------------------- transformer
+
+    #[test]
+    fn tiny_transformer_exact_on_oma_and_systolic() {
+        // Full-stack bit-exactness: every layer of the transformer —
+        // GeMMs included — reproduces `forward_ref` exactly on the
+        // sequentially-accumulating targets.
+        let g = DnnGraph::tiny_transformer();
+        let seq = 8;
+        let x = g.input_batch(seq);
+        let want = g.forward_ref(&x, seq);
+        for t in [
+            TargetConfig::Oma(OmaConfig::default()),
+            TargetConfig::Systolic(SystolicConfig::new(2, 2)),
+        ] {
+            let machine = t.build().unwrap();
+            let lg = lower_graph(&machine, &g, seq).unwrap();
+            assert_eq!(lg.mapped().count(), 18, "8 dense + 2 matmul + 8 row-wise");
+            let rep =
+                run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+            assert_eq!(rep.output, want, "bit-exact on {}", machine.name());
+        }
+    }
+
+    #[test]
+    fn tiny_transformer_on_gamma_matches_reference() {
+        // Γ̈'s 8×8-tiled GeMM accumulates per tile, so the match is a
+        // tight tolerance rather than bit equality; the row-wise
+        // operators still run on the scalar epilogue in reference order.
+        let g = DnnGraph::tiny_transformer();
+        let seq = 8;
+        let machine = TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
+        let lg = lower_graph(&machine, &g, seq).unwrap();
+        let x = g.input_batch(seq);
+        let rep = run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+        let want = g.forward_ref(&x, seq);
+        let diff = max_abs_diff(&rep.output, &want);
+        assert!(diff < 1e-3, "diff={diff}");
+    }
+
+    #[test]
+    fn tiny_transformer_timed_backends_agree_on_cycles() {
+        let g = DnnGraph::tiny_transformer();
+        let seq = 8;
+        let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2)).build().unwrap();
+        let lg = lower_graph(&machine, &g, seq).unwrap();
+        let x = g.input_batch(seq);
+        let cs = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::CycleStepped),
+            500_000_000,
+        )
+        .unwrap();
+        let ev = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::EventDriven),
+            500_000_000,
+        )
+        .unwrap();
+        assert!(cs.total_cycles > 0);
+        assert_eq!(cs.total_cycles, ev.total_cycles);
+        assert_eq!(cs.total_instructions, ev.total_instructions);
+        assert_eq!(cs.output, ev.output);
+        assert_eq!(cs.output, g.forward_ref(&x, seq), "timed state ≡ reference");
+        // Every mapped layer produced a report row with cycles.
+        assert_eq!(cs.per_layer.len(), 18);
+        assert!(cs.per_layer.iter().all(|l| l.cycles > 0));
+    }
+
+    #[test]
+    fn tiny_transformer_odd_sequence_length_pads_on_gamma() {
+        // Sequence length 6 is not a multiple of Γ̈'s tile: every GeMM —
+        // including the activation-×-activation attention matmuls over
+        // stashed operands — pads transparently.
+        let g = DnnGraph::tiny_transformer();
+        let seq = 6;
+        let machine = TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
+        let lg = lower_graph(&machine, &g, seq).unwrap();
+        let x = g.input_batch(seq);
+        let rep = run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+        let want = g.forward_ref(&x, seq);
+        let diff = max_abs_diff(&rep.output, &want);
+        assert!(diff < 1e-3, "diff={diff}");
+        assert_eq!(rep.output.len(), seq * 8);
+    }
+
+    #[test]
+    fn bad_slot_usage_reports_graph_errors() {
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let bad = |layers: Vec<Layer>| DnnGraph {
+            input_features: 4,
+            layers,
+            name: "bad".into(),
+        };
+        assert!(matches!(
+            lower_graph(&machine, &bad(vec![Layer::MatMul { slot: 0, scale: 1.0 }]), 2),
+            Err(LowerError::BadGraph(0, _))
+        ));
+        assert!(matches!(
+            lower_graph(&machine, &bad(vec![Layer::Recall { slot: 3 }]), 2),
+            Err(LowerError::BadGraph(0, _))
+        ));
+        // Residual against a mismatched shape.
+        let g = bad(vec![
+            Layer::Stash { slot: 0 },
+            Layer::Dense {
+                in_features: 4,
+                out_features: 6,
+                relu: false,
+            },
+            Layer::AddResidual { slot: 0 },
+        ]);
+        assert!(matches!(
+            lower_graph(&machine, &g, 2),
+            Err(LowerError::BadGraph(2, _))
+        ));
+    }
+
+    #[test]
+    fn roofline_ops_mirror_the_schedule() {
+        let g = DnnGraph::tiny_transformer();
+        let ops = roofline_ops(&g, 8);
+        // 18 mapped operators (stash/recall are host bookkeeping).
+        assert_eq!(ops.len(), 18);
+        let gemms = ops.iter().filter(|o| o.gemm_params().is_some()).count();
+        assert_eq!(gemms, 10, "8 dense + 2 attention matmuls");
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, Operator::Softmax { rows: 8, cols: 8 })));
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, Operator::Transpose { rows: 8, cols: 16 })));
+        // MLP graphs reduce to their dense GeMMs.
+        let mlp = roofline_ops(&DnnGraph::mlp_small(), 4);
+        assert_eq!(mlp.len(), 2);
+        assert!(mlp.iter().all(|o| o.gemm_params().is_some()));
     }
 }

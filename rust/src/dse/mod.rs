@@ -48,14 +48,17 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::job::{JobResult, JobSpec, Workload};
 use crate::coordinator::pool;
-use crate::dnn::graph::{DnnGraph, Layer};
+use crate::dnn::graph::DnnGraph;
+use crate::dnn::lowering::roofline_ops;
 use crate::mapping::gemm::GemmParams;
 use crate::metrics::Table;
 
 /// Sound lower bound on the timed cycles of `spec`: the target's roofline
-/// applied to the workload's GeMM(s).  Target-side padding (Γ̈ rounds dims
-/// up to 8) only raises true cycles, so bounding the unpadded problem
-/// stays sound.
+/// summed over the workload's operator sequence
+/// ([`crate::dnn::lowering::roofline_ops`] — GeMM bounds for the
+/// GeMM-backed operators, streaming-traffic bounds for the row-wise
+/// transformer operators).  Target-side padding (Γ̈ rounds dims up to 8)
+/// only raises true cycles, so bounding the unpadded problem stays sound.
 pub fn lower_bound_cycles(spec: &JobSpec) -> u64 {
     let rl = spec.target.roofline();
     match &spec.workload {
@@ -66,22 +69,12 @@ pub fn lower_bound_cycles(spec: &JobSpec) -> u64 {
             } else {
                 DnnGraph::mlp_784_256_128_10()
             };
-            g.layers
-                .iter()
-                .filter_map(|l| match l {
-                    Layer::Dense {
-                        in_features,
-                        out_features,
-                        ..
-                    } => Some(rl.gemm_cycles(&GemmParams::new(
-                        *batch,
-                        *in_features,
-                        *out_features,
-                    ))),
-                    _ => None,
-                })
-                .sum()
+            roofline_ops(&g, *batch).iter().map(|op| rl.op_cycles(op)).sum()
         }
+        Workload::Transformer { seq } => roofline_ops(&DnnGraph::tiny_transformer(), *seq)
+            .iter()
+            .map(|op| rl.op_cycles(op))
+            .sum(),
     }
 }
 

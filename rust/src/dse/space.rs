@@ -36,6 +36,12 @@ pub struct DseSpace {
     /// the memo serves the second of each pair from cache).
     pub backends: Vec<BackendKind>,
     pub max_cycles: u64,
+    /// When set, the sweep additionally evaluates the `tiny_transformer`
+    /// workload at this sequence length on every architecture config
+    /// (without the OMA's GeMM tile/order knobs — the transformer
+    /// schedule fixes its own mapping), so the exploration ranks
+    /// candidates on a full attention block, not just a square GeMM.
+    pub transformer_seq: Option<usize>,
 }
 
 impl DseSpace {
@@ -52,6 +58,7 @@ impl DseSpace {
             orders: LoopOrder::ALL.to_vec(),
             backends: vec![BackendKind::CycleStepped, BackendKind::EventDriven],
             max_cycles: 500_000_000,
+            transformer_seq: Some(8),
         }
     }
 
@@ -66,6 +73,7 @@ impl DseSpace {
             orders: vec![LoopOrder::Ijk, LoopOrder::Kij],
             backends: vec![BackendKind::EventDriven],
             max_cycles: 500_000_000,
+            transformer_seq: None,
         }
     }
 
@@ -136,6 +144,56 @@ impl DseSpace {
         }
         for (i, s) in specs.iter_mut().enumerate() {
             s.id = i as u64;
+        }
+        specs
+    }
+
+    /// The transformer candidates: the same architecture axes (minus the
+    /// OMA's GeMM-only mapping knobs) over the `tiny_transformer`
+    /// workload at [`Self::transformer_seq`].  Kept as a **sibling
+    /// exploration** rather than folded into [`Self::enumerate`]: the
+    /// pruning incumbent is a *cycle* count, so mixing workloads in one
+    /// sweep would let the cheaper workload's best cut the other's
+    /// candidates.  Empty when `transformer_seq` is `None`.
+    pub fn enumerate_transformer(&self) -> Vec<JobSpec> {
+        let Some(seq) = self.transformer_seq else {
+            return Vec::new();
+        };
+        let wl = Workload::Transformer { seq };
+        let mut specs = Vec::new();
+        let push = |specs: &mut Vec<JobSpec>, target: TargetSpec, backend: BackendKind| {
+            specs.push(JobSpec {
+                id: specs.len() as u64,
+                target,
+                workload: wl.clone(),
+                mode: SimModeSpec::Timed,
+                backend,
+                max_cycles: self.max_cycles,
+            });
+        };
+        if self.include_oma {
+            for cache in OmaConfig::enumerate_cache_variants() {
+                for &backend in &self.backends {
+                    push(
+                        &mut specs,
+                        TargetSpec::Oma {
+                            cache,
+                            mac_latency: None,
+                        },
+                        backend,
+                    );
+                }
+            }
+        }
+        for (rows, cols) in SystolicConfig::enumerate_grids(self.max_edge) {
+            for &backend in &self.backends {
+                push(&mut specs, TargetSpec::Systolic { rows, cols }, backend);
+            }
+        }
+        for units in GammaConfig::enumerate_units(self.max_units) {
+            for &backend in &self.backends {
+                push(&mut specs, TargetSpec::Gamma { units }, backend);
+            }
         }
         specs
     }
@@ -222,13 +280,30 @@ mod tests {
 
     #[test]
     fn standard_space_exceeds_hundred_candidates() {
-        let specs = DseSpace::standard(32).enumerate();
-        // 2·4·6·2 OMA + 16·2 systolic + 4·2 Γ̈ = 136.
+        let space = DseSpace::standard(32);
+        let specs = space.enumerate();
+        // 2·4·6·2 OMA + 16·2 systolic + 4·2 Γ̈ = 136 GeMM candidates.
         assert!(specs.len() >= 100, "only {} candidates", specs.len());
+        assert!(
+            specs.iter().all(|s| matches!(s.workload, Workload::Gemm { .. })),
+            "the GeMM sweep stays workload-pure (pruning compares cycles)"
+        );
         // Ids are unique enumeration order.
         for (i, s) in specs.iter().enumerate() {
             assert_eq!(s.id, i as u64);
         }
+        // The sibling transformer sweep covers every arch config once per
+        // backend: (2 + 16 + 4) · 2 = 44.
+        let tf = space.enumerate_transformer();
+        assert_eq!(tf.len(), 44);
+        assert!(tf
+            .iter()
+            .all(|s| matches!(s.workload, Workload::Transformer { seq: 8 })));
+        for (i, s) in tf.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+        }
+        // The quick space opts out.
+        assert!(DseSpace::quick(8).enumerate_transformer().is_empty());
     }
 
     #[test]

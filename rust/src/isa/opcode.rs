@@ -24,6 +24,17 @@ pub enum Opcode {
     Muli,
     /// Multiply-accumulate: acc += a * b (the OMA's built-in MAC).
     Mac,
+    // --- scalar reduction/activation (transformer row-wise operators) ---
+    /// f32 divide: a / b (softmax normalization, layer-norm mean).
+    Div,
+    /// Scalar max (streaming max-reduction for stable softmax).
+    Max,
+    /// f32 exponential.
+    Exp,
+    /// f32 reciprocal square root: 1 / sqrt(a) (layer-norm denominator).
+    Rsqrt,
+    /// f32 GELU activation (tanh approximation).
+    Gelu,
     /// Memory read into a register (scalar or vector by dest width).
     Load,
     /// Register into memory.
@@ -52,7 +63,7 @@ pub enum Opcode {
 }
 
 impl Opcode {
-    pub const COUNT: usize = 22;
+    pub const COUNT: usize = 27;
 
     /// Assembly mnemonic (the string stored in FU `to_process` sets).
     pub const fn mnemonic(self) -> &'static str {
@@ -68,6 +79,11 @@ impl Opcode {
             Opcode::Mul => "mul",
             Opcode::Muli => "muli",
             Opcode::Mac => "mac",
+            Opcode::Div => "div",
+            Opcode::Max => "max",
+            Opcode::Exp => "exp",
+            Opcode::Rsqrt => "rsqrt",
+            Opcode::Gelu => "gelu",
             Opcode::Load => "load",
             Opcode::Store => "store",
             Opcode::Beqi => "beqi",
@@ -113,6 +129,11 @@ impl Opcode {
             Opcode::Mul,
             Opcode::Muli,
             Opcode::Mac,
+            Opcode::Div,
+            Opcode::Max,
+            Opcode::Exp,
+            Opcode::Rsqrt,
+            Opcode::Gelu,
             Opcode::Load,
             Opcode::Store,
             Opcode::Beqi,

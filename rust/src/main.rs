@@ -37,12 +37,14 @@ COMMANDS:
   map --target <oma|systolic|gamma> [--m N --k N --n N --tile N --head N]
       [--arch-file <file.acadl>]
       Lower a GeMM and print the disassembly head.
-  simulate --target <oma|systolic|gamma> [--m/--k/--n N] [--tile N]
+  simulate --target <oma|systolic|gamma> [--workload gemm|mlp|transformer]
+           [--m/--k/--n N] [--tile N] [--seq N]
            [--mode functional|timed|estimate] [--backend cycle|event]
            [--rows/--cols/--units N] [--arch-file <file.acadl>]
-      Simulate a GeMM, print the result row as JSON.  The timing backends
-      report identical cycles; `event` skips idle cycles (faster on
-      memory-bound workloads).
+      Simulate a workload, print the result row as JSON.  `gemm` takes
+      --m/--k/--n/--tile; `mlp` and `transformer` take --seq (batch rows /
+      sequence length).  The timing backends report identical cycles;
+      `event` skips idle cycles (faster on memory-bound workloads).
   sweep [--dim N] [--workers N] [--backend cycle|event]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   dse [--dim N] [--workers N] [--quick true] [--no-prune true]
@@ -74,7 +76,7 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         ],
         "simulate" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
-            "arch-file",
+            "arch-file", "workload", "seq",
         ],
         "sweep" => &["dim", "workers", "backend"],
         "dse" => &[
@@ -355,16 +357,31 @@ fn run() -> Result<(), String> {
                 "estimate" => SimModeSpec::Estimate,
                 other => return Err(format!("unknown mode `{other}`")),
             };
-            let spec = JobSpec {
-                id: 0,
-                target: target_spec(&args)?,
-                workload: Workload::Gemm {
+            let workload = match args.str("workload", "gemm").as_str() {
+                "gemm" => Workload::Gemm {
                     m: args.usize("m", 8)?,
                     k: args.usize("k", 8)?,
                     n: args.usize("n", 8)?,
                     tile: args.opt_usize("tile")?,
                     order: None,
                 },
+                "mlp" => Workload::Mlp {
+                    small: true,
+                    batch: args.usize("seq", 8)?,
+                },
+                "transformer" => Workload::Transformer {
+                    seq: args.usize("seq", 8)?,
+                },
+                other => {
+                    return Err(format!(
+                        "unknown workload `{other}` (use gemm|mlp|transformer)"
+                    ))
+                }
+            };
+            let spec = JobSpec {
+                id: 0,
+                target: target_spec(&args)?,
+                workload,
                 mode,
                 backend: backend_kind(&args)?,
                 max_cycles: 500_000_000,
@@ -465,6 +482,22 @@ fn run() -> Result<(), String> {
                 );
                 let report = acadl::dse::explore(&space, workers, prune);
                 print_dse_report(&report, &format!("design space, gemm {dim}³ (timed)"));
+                // Sibling sweep: the same architecture axes on the
+                // transformer workload (separate exploration — the
+                // pruning incumbent must not cross workloads).
+                let tf = space.enumerate_transformer();
+                if !tf.is_empty() {
+                    let seq = space.transformer_seq.unwrap_or(8);
+                    println!(
+                        "\nexploring tiny_transformer (seq {seq}) over {} candidates…\n",
+                        tf.len()
+                    );
+                    let report = acadl::dse::explore_specs(tf, workers, prune);
+                    print_dse_report(
+                        &report,
+                        &format!("design space, tiny_transformer seq {seq} (timed)"),
+                    );
+                }
             }
         }
         "serve" => {
@@ -575,6 +608,8 @@ mod tests {
         // Every command that reads a flag in run() must allow it.
         assert!(allowed_flags("simulate").contains(&"backend"));
         assert!(allowed_flags("simulate").contains(&"arch-file"));
+        assert!(allowed_flags("simulate").contains(&"workload"));
+        assert!(allowed_flags("simulate").contains(&"seq"));
         assert!(allowed_flags("dse").contains(&"arch-file"));
         assert!(allowed_flags("serve").contains(&"arch-file"));
         assert!(allowed_flags("fmt").contains(&"check"));

@@ -245,7 +245,7 @@ impl Mapper for GammaFusedTensorMapper {
             && match op {
                 Operator::Gemm(p) => padded(p),
                 Operator::Dense { gemm, .. } => padded(gemm),
-                Operator::Conv2d { .. } => false,
+                _ => false,
             }
     }
 
@@ -273,15 +273,15 @@ impl Mapper for GammaFusedTensorMapper {
                     ..Default::default()
                 },
             ),
-            Operator::Conv2d { .. } => {
-                return Err(UmaError::Unsupported(machine.name(), *op))
-            }
+            _ => return Err(UmaError::Unsupported(machine.name(), *op)),
         };
         Ok(Lowered::new(program, machine, op))
     }
 
     fn cost_hints(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
-        let p = op.gemm_params();
+        let Some(p) = op.gemm_params() else {
+            return CostHints::default();
+        };
         let units = match machine {
             Machine::Gamma(m) => m.cfg.units,
             _ => 1,

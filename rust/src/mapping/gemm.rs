@@ -114,8 +114,16 @@ pub struct GemmLayout {
 
 impl GemmLayout {
     pub fn at(base: u64, p: &GemmParams) -> Self {
-        let a_bytes = (p.m * p.k * 4) as u64;
-        let b_bytes = (p.k * p.n * 4) as u64;
+        Self::regions(base, p.m * p.k, p.k * p.n)
+    }
+
+    /// A layout from explicit region sizes (f32 words): A at `base`, B
+    /// after it, C after B.  [`Self::at`] is the GeMM-shaped special case;
+    /// the row-wise transformer operators size their regions directly
+    /// (`Operator::layout_at`).
+    pub fn regions(base: u64, a_words: usize, b_words: usize) -> Self {
+        let a_bytes = (a_words * 4) as u64;
+        let b_bytes = (b_words * 4) as u64;
         GemmLayout {
             a_base: base,
             b_base: base + a_bytes,
@@ -330,7 +338,9 @@ impl Mapper for OmaTiledGemmMapper {
     }
 
     fn cost_hints(&self, _reg: &Registry, _machine: &Machine, op: &Operator) -> CostHints {
-        let p = op.gemm_params();
+        let Some(p) = op.gemm_params() else {
+            return CostHints::default();
+        };
         let est = if p.order.k_innermost() && p.tile.map_or(true, |t| t >= p.k) {
             // movi + k·(load, load, mac) + store per output element.
             (p.m * p.n * (3 * p.k + 2) + 1) as u64
@@ -377,8 +387,11 @@ impl Mapper for OmaListing5Mapper {
     }
 
     fn cost_hints(&self, _reg: &Registry, _machine: &Machine, op: &Operator) -> CostHints {
+        let Some(p) = op.gemm_params() else {
+            return CostHints::default();
+        };
         CostHints {
-            min_cycles: Roofline::oma().gemm_cycles(op.gemm_params()),
+            min_cycles: Roofline::oma().gemm_cycles(p),
             // Static size of the Listing-5 program (loops, not unrolled).
             est_instructions: 24,
         }

@@ -23,6 +23,9 @@
 //!   (`gamma_fused_gemm`).
 //! * [`conv`] — im2col lowering of 2-D convolution, a composite mapper
 //!   that re-enters the registry with the reduced GeMM (`im2col_conv`).
+//! * [`rowwise`] — the transformer's row-wise operators (softmax, layer
+//!   norm, GELU, residual add, transpose) as scalar-unit streaming loops,
+//!   bit-exact against their host references (`scalar_rowwise`).
 //! * [`uma`] — the operator registry: (operator, target) → program +
 //!   memory layout, the seam the DNN graph lowering, the coordinator's
 //!   job executor, and the DSE engine all call.
@@ -31,5 +34,6 @@ pub mod conv;
 pub mod gamma_gemm;
 pub mod gemm;
 pub mod mapper;
+pub mod rowwise;
 pub mod systolic_gemm;
 pub mod uma;

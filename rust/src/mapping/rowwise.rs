@@ -1,0 +1,512 @@
+//! Row-wise transformer operators (softmax, layer norm, GELU, residual
+//! add, transpose) as **scalar-FU streaming loops**.
+//!
+//! GeMM-shaped work runs on each target's array / tensor units; the
+//! reductions a transformer interleaves between its GeMMs (attention-row
+//! max and Σexp, layer-norm mean/variance) have no `m×k · k×n` structure,
+//! so they run on the scalar unit every zoo machine provides: the OMA's
+//! own ALU (`fu0`), or the scalar epilogue unit
+//! ([`crate::arch::parts::scalar_epilogue`]) of the systolic array and Γ̈.
+//!
+//! ## Bit-exactness contract
+//!
+//! Each generated program performs **exactly the f32 operations of the
+//! matching `*_ref` function here, in the same order** (streaming
+//! left-to-right per row), and the instruction semantics call the same
+//! [`crate::util::numerics`] helpers.  The cross-layer conformance suite
+//! (`tests/transformer_conformance.rs`) therefore asserts *bit equality*
+//! between the functional simulation, both timing backends, and the host
+//! reference — not a tolerance.
+//!
+//! ## Operand layout
+//!
+//! `Operator::layout_at` places the input matrix in the A region and the
+//! output in the C region; `AddMat` reads its second operand from the B
+//! region, and `LayerNorm` reads its epsilon from a single f32 word at
+//! `b_base` (immediates are integers, so an arbitrary f32 constant must
+//! travel through memory).
+
+use crate::acadl_core::graph::RegId;
+use crate::analytical::Roofline;
+use crate::isa::instruction::{AddrRef, Instruction};
+use crate::isa::opcode::Opcode;
+use crate::isa::program::Program;
+use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::uma::{Lowered, Machine, Operator, Registry, UmaError};
+use crate::util::numerics::{gelu_f32, rsqrt_f32};
+
+// ------------------------------------------------------------- references
+
+/// Row-wise numerically stable softmax (the oracle the generated program
+/// reproduces bit-for-bit): per row, streaming max, then `Σ exp(x − max)`
+/// accumulated left-to-right, then per-element division.
+pub fn softmax_ref(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mut m = row[0];
+        for &v in &row[1..] {
+            m = m.max(v);
+        }
+        let mut sum = 0.0f32;
+        for (i, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[r * cols + i] = e;
+            sum += e;
+        }
+        for i in 0..cols {
+            out[r * cols + i] /= sum;
+        }
+    }
+    out
+}
+
+/// Row-wise non-affine layer normalization: `(x − mean) · rsqrt(var + eps)`
+/// with mean and (population) variance accumulated left-to-right.
+pub fn layernorm_ref(rows: usize, cols: usize, eps: f32, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += v;
+        }
+        let mean = sum / cols as f32;
+        let mut q = 0.0f32;
+        for &v in row {
+            let d = v - mean;
+            q += d * d;
+        }
+        let var = q / cols as f32;
+        let inv = rsqrt_f32(var + eps);
+        for (i, &v) in row.iter().enumerate() {
+            out[r * cols + i] = (v - mean) * inv;
+        }
+    }
+    out
+}
+
+/// Element-wise GELU (tanh approximation, shared f32 helper).
+pub fn gelu_ref(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| gelu_f32(v)).collect()
+}
+
+/// Element-wise matrix addition.
+pub fn addmat_ref(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Transpose a row-major `rows × cols` matrix into `cols × rows`.
+pub fn transpose_ref(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = x[i * cols + j];
+        }
+    }
+    out
+}
+
+/// Host reference for any row-wise operator (dispatch table for tests and
+/// the schedule oracle).  `b` is the second operand (AddMat) and is
+/// ignored otherwise.
+pub fn rowwise_ref(op: &Operator, a: &[f32], b: &[f32]) -> Option<Vec<f32>> {
+    match *op {
+        Operator::Softmax { rows, cols } => Some(softmax_ref(rows, cols, a)),
+        Operator::LayerNorm { rows, cols, eps } => Some(layernorm_ref(rows, cols, eps, a)),
+        Operator::Gelu { .. } => Some(gelu_ref(a)),
+        Operator::AddMat { .. } => Some(addmat_ref(a, b)),
+        Operator::Transpose { rows, cols } => Some(transpose_ref(rows, cols, a)),
+        _ => None,
+    }
+}
+
+// --------------------------------------------------------------- codegen
+
+/// The three scalar registers the generated loops cycle through.
+struct ScalarRegs {
+    /// Row statistic (max / mean).
+    t0: RegId,
+    /// Streaming element scratch.
+    t1: RegId,
+    /// Running accumulator (sum / variance / divisor).
+    acc: RegId,
+}
+
+/// The scalar registers of `machine`'s scalar unit, when it has one: the
+/// OMA's general registers, or the `s*` file of the epilogue unit.
+fn scalar_regs(machine: &Machine) -> Option<ScalarRegs> {
+    let ag = machine.ag();
+    let names: [&str; 3] = match machine {
+        Machine::Oma(_) => ["r4", "r5", "r6"],
+        _ => ["s0", "s1", "s2"],
+    };
+    Some(ScalarRegs {
+        t0: ag.reg_id(names[0])?,
+        t1: ag.reg_id(names[1])?,
+        acc: ag.reg_id(names[2])?,
+    })
+}
+
+fn imem_base(machine: &Machine) -> u64 {
+    match machine {
+        Machine::Oma(m) => m.cfg.imem_range.0,
+        Machine::Systolic(m) => m.cfg.imem_range.0,
+        Machine::Gamma(m) => m.cfg.imem_range.0,
+    }
+}
+
+fn load(addr: u64, dst: RegId) -> Instruction {
+    Instruction::new(Opcode::Load)
+        .with_read_addrs(vec![AddrRef::Direct(addr)])
+        .with_writes(vec![dst])
+}
+
+fn store(src: RegId, addr: u64) -> Instruction {
+    Instruction::new(Opcode::Store)
+        .with_reads(vec![src])
+        .with_write_addrs(vec![AddrRef::Direct(addr)])
+}
+
+fn bin(op: Opcode, a: RegId, b: RegId, dst: RegId) -> Instruction {
+    Instruction::new(op)
+        .with_reads(vec![a, b])
+        .with_writes(vec![dst])
+}
+
+fn un(op: Opcode, a: RegId, dst: RegId) -> Instruction {
+    Instruction::new(op)
+        .with_reads(vec![a])
+        .with_writes(vec![dst])
+}
+
+fn movi(imm: i64, dst: RegId) -> Instruction {
+    Instruction::new(Opcode::Movi)
+        .with_imms(vec![imm])
+        .with_writes(vec![dst])
+}
+
+/// Generate the unrolled scalar program for a row-wise operator on
+/// `machine`, or `None` when the operator is not row-wise or the machine
+/// has no scalar unit.  Direct-addressed and branch-free, like the
+/// unrolled OMA GeMM — the full access order stays visible to the memory
+/// timing model.
+pub fn scalar_rowwise_program(machine: &Machine, op: &Operator) -> Option<Program> {
+    let r = scalar_regs(machine)?;
+    let layout = op.layout_at(machine.data_base());
+    let a = |i: usize| layout.a_base + 4 * i as u64;
+    let b = |i: usize| layout.b_base + 4 * i as u64;
+    let c = |i: usize| layout.c_base + 4 * i as u64;
+    let mut out: Vec<Instruction> = Vec::new();
+    match *op {
+        Operator::Softmax { rows, cols } => {
+            if rows == 0 || cols == 0 {
+                return None;
+            }
+            for row in 0..rows {
+                let ar = |i: usize| a(row * cols + i);
+                let cr = |i: usize| c(row * cols + i);
+                // Pass 1: streaming row max into t0.
+                out.push(load(ar(0), r.t0));
+                for i in 1..cols {
+                    out.push(load(ar(i), r.t1));
+                    out.push(bin(Opcode::Max, r.t0, r.t1, r.t0));
+                }
+                // Pass 2: e_i = exp(x_i − max) staged into C; Σ e_i in acc.
+                out.push(movi(0, r.acc));
+                for i in 0..cols {
+                    out.push(load(ar(i), r.t1));
+                    out.push(bin(Opcode::Sub, r.t1, r.t0, r.t1));
+                    out.push(un(Opcode::Exp, r.t1, r.t1));
+                    out.push(store(r.t1, cr(i)));
+                    out.push(bin(Opcode::Add, r.acc, r.t1, r.acc));
+                }
+                // Pass 3: normalize in place.
+                for i in 0..cols {
+                    out.push(load(cr(i), r.t1));
+                    out.push(bin(Opcode::Div, r.t1, r.acc, r.t1));
+                    out.push(store(r.t1, cr(i)));
+                }
+            }
+        }
+        Operator::LayerNorm { rows, cols, .. } => {
+            if rows == 0 || cols == 0 {
+                return None;
+            }
+            for row in 0..rows {
+                let ar = |i: usize| a(row * cols + i);
+                let cr = |i: usize| c(row * cols + i);
+                // Mean: Σ x / n  (n as an integer immediate; `div`
+                // converts it to f32 exactly like the reference).
+                out.push(movi(0, r.acc));
+                for i in 0..cols {
+                    out.push(load(ar(i), r.t1));
+                    out.push(bin(Opcode::Add, r.acc, r.t1, r.acc));
+                }
+                out.push(movi(cols as i64, r.t1));
+                out.push(bin(Opcode::Div, r.acc, r.t1, r.t0)); // t0 = mean
+                // Variance: Σ (x − mean)² / n.
+                out.push(movi(0, r.acc));
+                for i in 0..cols {
+                    out.push(load(ar(i), r.t1));
+                    out.push(bin(Opcode::Sub, r.t1, r.t0, r.t1));
+                    out.push(bin(Opcode::Mul, r.t1, r.t1, r.t1));
+                    out.push(bin(Opcode::Add, r.acc, r.t1, r.acc));
+                }
+                out.push(movi(cols as i64, r.t1));
+                out.push(bin(Opcode::Div, r.acc, r.t1, r.acc)); // acc = var
+                // inv = rsqrt(var + eps); eps travels at b_base.
+                out.push(load(layout.b_base, r.t1));
+                out.push(bin(Opcode::Add, r.acc, r.t1, r.acc));
+                out.push(un(Opcode::Rsqrt, r.acc, r.acc));
+                // Normalize.
+                for i in 0..cols {
+                    out.push(load(ar(i), r.t1));
+                    out.push(bin(Opcode::Sub, r.t1, r.t0, r.t1));
+                    out.push(bin(Opcode::Mul, r.t1, r.acc, r.t1));
+                    out.push(store(r.t1, cr(i)));
+                }
+            }
+        }
+        Operator::Gelu { rows, cols } => {
+            if rows * cols == 0 {
+                return None;
+            }
+            for i in 0..rows * cols {
+                out.push(load(a(i), r.t0));
+                out.push(un(Opcode::Gelu, r.t0, r.t0));
+                out.push(store(r.t0, c(i)));
+            }
+        }
+        Operator::AddMat { rows, cols } => {
+            if rows * cols == 0 {
+                return None;
+            }
+            for i in 0..rows * cols {
+                out.push(load(a(i), r.t0));
+                out.push(load(b(i), r.t1));
+                out.push(bin(Opcode::Add, r.t0, r.t1, r.t0));
+                out.push(store(r.t0, c(i)));
+            }
+        }
+        Operator::Transpose { rows, cols } => {
+            if rows * cols == 0 {
+                return None;
+            }
+            for i in 0..rows {
+                for j in 0..cols {
+                    out.push(load(a(i * cols + j), r.t0));
+                    out.push(store(r.t0, c(j * rows + i)));
+                }
+            }
+        }
+        _ => return None,
+    }
+    out.push(Instruction::new(Opcode::Halt));
+    Some(Program::new(out, imem_base(machine)))
+}
+
+/// Static instruction count of [`scalar_rowwise_program`] (without
+/// generating it) — the cost-hint estimate.
+fn static_len(op: &Operator) -> u64 {
+    match *op {
+        Operator::Softmax { rows, cols } => {
+            (rows * (1 + 2 * (cols - 1) + 1 + 5 * cols + 3 * cols)) as u64 + 1
+        }
+        Operator::LayerNorm { rows, cols, .. } => {
+            // Per row: movi + 2·cols (sum), movi + div (mean), movi +
+            // 4·cols (variance terms), movi + div (variance), load + add
+            // + rsqrt (epsilon), 4·cols (normalize) — 10·cols + 9.
+            (rows * (10 * cols + 9)) as u64 + 1
+        }
+        Operator::Gelu { rows, cols } => (3 * rows * cols) as u64 + 1,
+        Operator::AddMat { rows, cols } => (4 * rows * cols) as u64 + 1,
+        Operator::Transpose { rows, cols } => (2 * rows * cols) as u64 + 1,
+        _ => 0,
+    }
+}
+
+fn machine_roofline(machine: &Machine) -> Roofline {
+    match machine {
+        Machine::Oma(_) => Roofline::oma(),
+        Machine::Systolic(m) => Roofline::systolic(m.cfg.rows, m.cfg.cols),
+        Machine::Gamma(m) => Roofline::gamma(m.cfg.units),
+    }
+}
+
+/// Registry entry for the row-wise scalar loops: every machine with a
+/// scalar unit (the whole zoo) gets softmax / layer norm / GELU /
+/// residual add / transpose through the same generator.
+pub struct ScalarRowwiseMapper;
+
+impl Mapper for ScalarRowwiseMapper {
+    fn name(&self) -> &'static str {
+        "scalar_rowwise"
+    }
+
+    fn supports(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> bool {
+        let rowwise = matches!(
+            op,
+            Operator::Softmax { .. }
+                | Operator::LayerNorm { .. }
+                | Operator::Gelu { .. }
+                | Operator::AddMat { .. }
+                | Operator::Transpose { .. }
+        );
+        let (rows, cols) = op.a_dims();
+        rowwise && rows > 0 && cols > 0 && scalar_regs(machine).is_some()
+    }
+
+    fn lower(
+        &self,
+        _reg: &Registry,
+        machine: &Machine,
+        op: &Operator,
+    ) -> Result<Lowered, UmaError> {
+        match scalar_rowwise_program(machine, op) {
+            Some(program) => Ok(Lowered::new(program, machine, op)),
+            None => Err(UmaError::Unsupported(machine.name(), *op)),
+        }
+    }
+
+    fn cost_hints(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
+        CostHints {
+            min_cycles: machine_roofline(machine).op_cycles(op),
+            est_instructions: static_len(op),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::gamma::GammaConfig;
+    use crate::arch::oma::OmaConfig;
+    use crate::arch::systolic::SystolicConfig;
+    use crate::mapping::uma::{self, TargetConfig};
+    use crate::sim::functional::FunctionalSim;
+
+    fn zoo() -> Vec<Machine> {
+        vec![
+            TargetConfig::Oma(OmaConfig::default()).build().unwrap(),
+            TargetConfig::Systolic(SystolicConfig::new(2, 2)).build().unwrap(),
+            TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap(),
+        ]
+    }
+
+    fn inputs(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 401) as f32 - 200.0) / 100.0
+            })
+            .collect()
+    }
+
+    /// Lower `op` on `machine`, run the functional ISS, return the C
+    /// region.
+    fn run_functional(machine: &Machine, op: &Operator, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let lw = uma::lower(machine, op).expect("rowwise op lowers");
+        let mut sim = FunctionalSim::new(machine.ag());
+        sim.mem.load_f32(lw.layout.a_base, a);
+        if !b.is_empty() {
+            sim.mem.load_f32(lw.layout.b_base, b);
+        }
+        sim.run(&lw.program, 50_000_000).unwrap();
+        sim.mem.dump_f32(lw.layout.c_base, op.c_words())
+    }
+
+    #[test]
+    fn softmax_bit_exact_on_all_targets() {
+        let (rows, cols) = (3, 5);
+        let op = Operator::Softmax { rows, cols };
+        let x = inputs(rows * cols, 0xA1);
+        let want = softmax_ref(rows, cols, &x);
+        for m in zoo() {
+            let got = run_functional(&m, &op, &x, &[]);
+            assert_eq!(got, want, "softmax on {}", m.name());
+        }
+        // Rows sum to 1 (within float noise — the exactness claim is
+        // sim ≡ ref, not Σ ≡ 1.0 exactly).
+        for r in 0..rows {
+            let s: f32 = want[r * cols..(r + 1) * cols].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn layernorm_bit_exact_on_all_targets() {
+        let (rows, cols) = (2, 7);
+        let op = Operator::LayerNorm {
+            rows,
+            cols,
+            eps: 1e-5,
+        };
+        let x = inputs(rows * cols, 0xB2);
+        let want = layernorm_ref(rows, cols, 1e-5, &x);
+        for m in zoo() {
+            let got = run_functional(&m, &op, &x, &[1e-5]);
+            assert_eq!(got, want, "layernorm on {}", m.name());
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_bit_exact_on_all_targets() {
+        let (rows, cols) = (4, 3);
+        let x = inputs(rows * cols, 0xC3);
+        let y = inputs(rows * cols, 0xD4);
+        for m in zoo() {
+            let gelu = run_functional(&m, &Operator::Gelu { rows, cols }, &x, &[]);
+            assert_eq!(gelu, gelu_ref(&x), "gelu on {}", m.name());
+            let add = run_functional(&m, &Operator::AddMat { rows, cols }, &x, &y);
+            assert_eq!(add, addmat_ref(&x, &y), "addmat on {}", m.name());
+            let tr = run_functional(&m, &Operator::Transpose { rows, cols }, &x, &[]);
+            assert_eq!(tr, transpose_ref(rows, cols, &x), "transpose on {}", m.name());
+        }
+    }
+
+    #[test]
+    fn transpose_ref_involution() {
+        let x = inputs(12, 7);
+        let t = transpose_ref(3, 4, &x);
+        assert_eq!(transpose_ref(4, 3, &t), x);
+    }
+
+    #[test]
+    fn static_len_matches_generated_programs() {
+        let m = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        for op in [
+            Operator::Softmax { rows: 3, cols: 5 },
+            Operator::LayerNorm {
+                rows: 2,
+                cols: 4,
+                eps: 1e-5,
+            },
+            Operator::Gelu { rows: 2, cols: 3 },
+            Operator::AddMat { rows: 2, cols: 3 },
+            Operator::Transpose { rows: 2, cols: 3 },
+        ] {
+            let p = scalar_rowwise_program(&m, &op).unwrap();
+            assert_eq!(p.len() as u64, static_len(&op), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_ops_are_not_rowwise() {
+        let m = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let p = crate::mapping::gemm::GemmParams::new(4, 4, 4);
+        assert!(scalar_rowwise_program(&m, &Operator::Gemm(p)).is_none());
+        assert!(!ScalarRowwiseMapper.supports(
+            Registry::global(),
+            &m,
+            &Operator::Gemm(p)
+        ));
+    }
+}

@@ -140,7 +140,9 @@ impl Mapper for SystolicWavefrontMapper {
     }
 
     fn cost_hints(&self, _reg: &Registry, machine: &Machine, op: &Operator) -> CostHints {
-        let p = op.gemm_params();
+        let Some(p) = op.gemm_params() else {
+            return CostHints::default();
+        };
         let (rows, cols) = match machine {
             Machine::Systolic(m) => (m.cfg.rows, m.cfg.cols),
             _ => (1, 1),

@@ -13,6 +13,7 @@
 //! * [`SystolicWavefrontMapper`](crate::mapping::systolic_gemm::SystolicWavefrontMapper)
 //! * [`GammaFusedTensorMapper`](crate::mapping::gamma_gemm::GammaFusedTensorMapper)
 //! * [`Im2colConvMapper`](crate::mapping::conv::Im2colConvMapper)
+//! * [`ScalarRowwiseMapper`](crate::mapping::rowwise::ScalarRowwiseMapper)
 //!
 //! [`lower`] dispatches an [`Operator`] to the first registered mapper
 //! that supports the (machine, operator) pair and returns the ACADL
@@ -33,6 +34,7 @@ use crate::mapping::conv::{Conv2d, Im2colConvMapper};
 use crate::mapping::gamma_gemm::GammaFusedTensorMapper;
 use crate::mapping::gemm::{GemmLayout, GemmParams, OmaListing5Mapper, OmaTiledGemmMapper};
 use crate::mapping::mapper::{CostHints, Mapper};
+use crate::mapping::rowwise::ScalarRowwiseMapper;
 use crate::mapping::systolic_gemm::SystolicWavefrontMapper;
 
 /// A built accelerator, uniformly accessible.
@@ -112,15 +114,87 @@ pub enum Operator {
     /// host performs the im2col data transform before loading inputs
     /// (TVM's layout-transform glue).
     Conv2d { conv: Conv2d, gemm: GemmParams },
+    /// Row-wise numerically stable softmax over a `rows × cols` matrix
+    /// (max-reduce, exp, sum-reduce, normalize — the attention-score
+    /// operator).
+    Softmax { rows: usize, cols: usize },
+    /// Row-wise (non-affine) layer normalization with epsilon:
+    /// `(x − mean) / sqrt(var + eps)`.  The epsilon word travels in the
+    /// operand layout's B region (one f32 at `b_base`).
+    LayerNorm { rows: usize, cols: usize, eps: f32 },
+    /// Element-wise GELU activation (tanh approximation).
+    Gelu { rows: usize, cols: usize },
+    /// Element-wise matrix addition `C = A + B` (residual connections);
+    /// both operands are `rows × cols`.
+    AddMat { rows: usize, cols: usize },
+    /// Matrix transpose: `rows × cols` in the A region becomes
+    /// `cols × rows` in the C region (attention's `K^T` data movement).
+    Transpose { rows: usize, cols: usize },
 }
 
 impl Operator {
-    pub fn gemm_params(&self) -> &GemmParams {
+    /// The GeMM view of a GeMM-backed operator (`None` for the row-wise
+    /// transformer operators, which have no `m × k · k × n` structure).
+    pub fn gemm_params(&self) -> Option<&GemmParams> {
         match self {
-            Operator::Gemm(p) => p,
-            Operator::Dense { gemm, .. } => gemm,
-            Operator::Conv2d { gemm, .. } => gemm,
+            Operator::Gemm(p) => Some(p),
+            Operator::Dense { gemm, .. } => Some(gemm),
+            Operator::Conv2d { gemm, .. } => Some(gemm),
+            _ => None,
         }
+    }
+
+    /// `(rows, cols)` of the primary input operand (the A region).
+    pub fn a_dims(&self) -> (usize, usize) {
+        match *self {
+            Operator::Gemm(p) => (p.m, p.k),
+            Operator::Dense { gemm, .. } => (gemm.m, gemm.k),
+            Operator::Conv2d { gemm, .. } => (gemm.m, gemm.k),
+            Operator::Softmax { rows, cols }
+            | Operator::LayerNorm { rows, cols, .. }
+            | Operator::Gelu { rows, cols }
+            | Operator::AddMat { rows, cols }
+            | Operator::Transpose { rows, cols } => (rows, cols),
+        }
+    }
+
+    /// f32 words of the A (primary input) operand region.
+    pub fn a_words(&self) -> usize {
+        let (r, c) = self.a_dims();
+        r * c
+    }
+
+    /// f32 words of the B (secondary operand) region: the `k × n` matrix
+    /// for GeMM-backed operators, the second addend for [`Self::AddMat`],
+    /// one epsilon word for [`Self::LayerNorm`], nothing otherwise.
+    pub fn b_words(&self) -> usize {
+        match *self {
+            Operator::Gemm(p) => p.k * p.n,
+            Operator::Dense { gemm, .. } | Operator::Conv2d { gemm, .. } => gemm.k * gemm.n,
+            Operator::AddMat { rows, cols } => rows * cols,
+            Operator::LayerNorm { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    /// f32 words of the C (output) region.
+    pub fn c_words(&self) -> usize {
+        match *self {
+            Operator::Gemm(p) => p.m * p.n,
+            Operator::Dense { gemm, .. } | Operator::Conv2d { gemm, .. } => gemm.m * gemm.n,
+            Operator::Softmax { rows, cols }
+            | Operator::LayerNorm { rows, cols, .. }
+            | Operator::Gelu { rows, cols }
+            | Operator::AddMat { rows, cols }
+            | Operator::Transpose { rows, cols } => rows * cols,
+        }
+    }
+
+    /// The operand layout for this operator at `base`: A, then B, then C,
+    /// each region sized by the operator ([`GemmLayout::at`] semantics
+    /// for GeMM-backed operators — existing layouts are unchanged).
+    pub fn layout_at(&self, base: u64) -> GemmLayout {
+        GemmLayout::regions(base, self.a_words(), self.b_words())
     }
 }
 
@@ -136,7 +210,7 @@ impl Lowered {
     pub fn new(program: Program, machine: &Machine, op: &Operator) -> Self {
         Lowered {
             program,
-            layout: GemmLayout::at(machine.data_base(), op.gemm_params()),
+            layout: op.layout_at(machine.data_base()),
         }
     }
 }
@@ -168,13 +242,14 @@ impl Registry {
         }
     }
 
-    /// The five in-tree code generators, in dispatch-preference order.
+    /// The six in-tree code generators, in dispatch-preference order.
     pub fn with_defaults() -> Self {
         let mut r = Registry::empty();
         r.register(Box::new(OmaTiledGemmMapper));
         r.register(Box::new(SystolicWavefrontMapper));
         r.register(Box::new(GammaFusedTensorMapper));
         r.register(Box::new(Im2colConvMapper));
+        r.register(Box::new(ScalarRowwiseMapper));
         r.register(Box::new(OmaListing5Mapper));
         r
     }
@@ -290,18 +365,19 @@ mod tests {
     }
 
     #[test]
-    fn registry_lists_all_five_generators() {
+    fn registry_lists_all_six_generators() {
         let names = Registry::global().names();
         for expect in [
             "oma_tiled_gemm",
             "systolic_wavefront_gemm",
             "gamma_fused_gemm",
             "im2col_conv",
+            "scalar_rowwise",
             "oma_gemm_listing5",
         ] {
             assert!(names.contains(&expect), "missing mapper `{expect}` in {names:?}");
         }
-        assert_eq!(names.len(), 5);
+        assert_eq!(names.len(), 6);
     }
 
     #[test]

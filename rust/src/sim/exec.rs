@@ -34,6 +34,7 @@ use crate::acadl_core::graph::RegId;
 use crate::isa::instruction::{AddrRef, Instruction};
 use crate::isa::opcode::Opcode;
 use crate::isa::GAMMA_TILE;
+use crate::util::numerics::{gelu_f32, rsqrt_f32};
 
 #[derive(Debug, Error, Clone, PartialEq)]
 pub enum ExecError {
@@ -510,6 +511,39 @@ pub fn execute_into(
                 fx.reg_writes.push((ins.writes[w], regs.get(b)));
             }
         }
+        Opcode::Div => {
+            // Always f32: the paper's datapath divides activations, not
+            // addresses (integer division is not modeled).
+            if ins.reads.len() < 2 || ins.writes.is_empty() {
+                return Err(ExecError::Malformed(ins.to_string(), "2 source registers"));
+            }
+            let v = regs.f32(r(0)) / regs.f32(r(1));
+            fx.reg_writes.push((ins.writes[0], Value::F32(v)));
+        }
+        Opcode::Max => {
+            if ins.reads.len() < 2 || ins.writes.is_empty() {
+                return Err(ExecError::Malformed(ins.to_string(), "2 source registers"));
+            }
+            let (a, b) = (r(0), r(1));
+            let v = if regs.tag(a) == ValueTag::Int && regs.tag(b) == ValueTag::Int {
+                Value::Int(regs.int(a).max(regs.int(b)))
+            } else {
+                Value::F32(regs.f32(a).max(regs.f32(b)))
+            };
+            fx.reg_writes.push((ins.writes[0], v));
+        }
+        Opcode::Exp | Opcode::Rsqrt | Opcode::Gelu => {
+            if ins.reads.is_empty() || ins.writes.is_empty() {
+                return Err(ExecError::Malformed(ins.to_string(), "1 source register"));
+            }
+            let x = regs.f32(r(0));
+            let v = match ins.op {
+                Opcode::Exp => x.exp(),
+                Opcode::Rsqrt => rsqrt_f32(x),
+                _ => gelu_f32(x),
+            };
+            fx.reg_writes.push((ins.writes[0], Value::F32(v)));
+        }
         Opcode::Load => {
             let addr = resolve_addr(&ins.read_addrs[0], regs);
             let dest = ins.writes[0];
@@ -826,6 +860,78 @@ mod tests {
         assert_eq!(rs.get(2), Value::F32(9.0));
         assert_eq!(rs.get(4), Value::F32(2.0), "a forwarded");
         assert_eq!(rs.get(5), Value::F32(4.0), "b forwarded");
+    }
+
+    #[test]
+    fn scalar_reduction_ops() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(4);
+        rs.set(0, Value::F32(8.0));
+        rs.set(1, Value::F32(2.0));
+        let bin = |op: Opcode| {
+            Instruction::new(op)
+                .with_reads(vec![RegId(0), RegId(1)])
+                .with_writes(vec![RegId(2)])
+        };
+        let fx = execute(&bin(Opcode::Div), 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.reg_writes[0].1, Value::F32(4.0));
+        let fx = execute(&bin(Opcode::Max), 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.reg_writes[0].1, Value::F32(8.0));
+        // Both-int max stays integer (address/index comparisons).
+        rs.set(0, Value::Int(-3));
+        rs.set(1, Value::Int(5));
+        let fx = execute(&bin(Opcode::Max), 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.reg_writes[0].1, Value::Int(5));
+        // Int operands divide as f32 (Value::as_f32 view).
+        let fx = execute(&bin(Opcode::Div), 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.reg_writes[0].1, Value::F32(-0.6));
+    }
+
+    #[test]
+    fn scalar_unary_ops_match_shared_numerics() {
+        let mut mem = MemImage::new();
+        let mut rs = regs(2);
+        let un = |op: Opcode| {
+            Instruction::new(op)
+                .with_reads(vec![RegId(0)])
+                .with_writes(vec![RegId(1)])
+        };
+        for x in [-2.5f32, -0.5, 0.25, 1.0, 3.0] {
+            rs.set(0, Value::F32(x));
+            let fx = execute(&un(Opcode::Exp), 0, &rs, &mut mem).unwrap();
+            assert_eq!(fx.reg_writes[0].1, Value::F32(x.exp()));
+            let fx = execute(&un(Opcode::Gelu), 0, &rs, &mut mem).unwrap();
+            assert_eq!(
+                fx.reg_writes[0].1,
+                Value::F32(crate::util::numerics::gelu_f32(x))
+            );
+        }
+        rs.set(0, Value::F32(4.0));
+        let fx = execute(&un(Opcode::Rsqrt), 0, &rs, &mut mem).unwrap();
+        assert_eq!(fx.reg_writes[0].1, Value::F32(0.5));
+    }
+
+    #[test]
+    fn malformed_scalar_reduction_ops_report_exec_error() {
+        let mut mem = MemImage::new();
+        let rs = regs(2);
+        let short = Instruction::new(Opcode::Div)
+            .with_reads(vec![RegId(0)])
+            .with_writes(vec![RegId(1)]);
+        assert!(matches!(
+            execute(&short, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, "2 source registers"))
+        ));
+        let no_write = Instruction::new(Opcode::Exp).with_reads(vec![RegId(0)]);
+        assert!(matches!(
+            execute(&no_write, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
+        let no_reads = Instruction::new(Opcode::Gelu).with_writes(vec![RegId(1)]);
+        assert!(matches!(
+            execute(&no_reads, 0, &rs, &mut mem),
+            Err(ExecError::Malformed(_, _))
+        ));
     }
 
     // ------------------------------------------------ malformed operands

@@ -12,4 +12,5 @@
 pub mod bench;
 pub mod hash;
 pub mod json;
+pub mod numerics;
 pub mod prop;

@@ -1,0 +1,52 @@
+//! Shared scalar numerics: the *single* definitions of the transcendental
+//! helpers the transformer operators use.
+//!
+//! Both the instruction semantics ([`crate::sim::exec`]'s `rsqrt`/`gelu`
+//! opcodes) and the host reference implementations
+//! ([`crate::mapping::rowwise`]'s `*_ref` functions, `DnnGraph::forward_ref`)
+//! call these functions, so a mapped operator and its oracle execute the
+//! **same f32 expression in the same order** — the property the
+//! bit-exact cross-layer conformance suite relies on.
+
+/// `1 / sqrt(x)` in f32 (the layer-norm denominator).  Negative inputs
+/// produce `NaN`, zero produces `+inf` — IEEE semantics, no clamping.
+#[inline]
+pub fn rsqrt_f32(x: f32) -> f32 {
+    1.0 / x.sqrt()
+}
+
+/// GELU, tanh approximation (the form used by GPT-family transformers):
+/// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`, evaluated entirely in
+/// f32.
+#[inline]
+pub fn gelu_f32(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    const CUBIC: f32 = 0.044_715;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + CUBIC * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rsqrt_matches_ieee() {
+        assert_eq!(rsqrt_f32(4.0), 0.5);
+        assert_eq!(rsqrt_f32(1.0), 1.0);
+        assert!(rsqrt_f32(0.0).is_infinite());
+        assert!(rsqrt_f32(-1.0).is_nan());
+    }
+
+    #[test]
+    fn gelu_fixed_points_and_asymptotes() {
+        assert_eq!(gelu_f32(0.0), 0.0);
+        // Large positive x → identity; large negative x → 0.
+        assert!((gelu_f32(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_f32(-10.0).abs() < 1e-4);
+        // Around zero the curve sits below the identity but above zero.
+        let y = gelu_f32(1.0);
+        assert!(y > 0.8 && y < 1.0, "gelu(1) = {y}");
+        // Odd-ish shape: gelu(-x) = -x - gelu(x) ... spot check monotonicity.
+        assert!(gelu_f32(2.0) > gelu_f32(1.0));
+    }
+}

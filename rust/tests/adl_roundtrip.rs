@@ -185,6 +185,63 @@ fn file_targets_drive_simulation_with_builder_cycles() {
 }
 
 #[test]
+fn committed_zoo_examples_are_byte_canonical() {
+    // The local mirror of CI's `fmt --check` golden: every committed
+    // description *is* its own canonical form (the scalar-epilogue
+    // additions included), byte for byte.
+    for file in [
+        "oma.acadl",
+        "systolic_2x2.acadl",
+        "gamma_1u.acadl",
+        "eyeriss_2x2.acadl",
+        "plasticine_2s.acadl",
+    ] {
+        let src = example(file);
+        let e = load_str(&src).unwrap_or_else(|err| panic!("{file}: {err}"));
+        assert_eq!(print_elab(&e), src, "{file} is not canonical");
+    }
+}
+
+#[test]
+fn file_targets_drive_transformer_with_builder_cycles() {
+    // A `targets` binding lowers `tiny_transformer` from the description
+    // with cycle counts identical to the Rust-builder path — the new
+    // workload exercises the scalar epilogue the descriptions now carry.
+    for (file, explicit) in [
+        (
+            "oma.acadl",
+            TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+        ),
+        ("systolic_2x2.acadl", TargetSpec::Systolic { rows: 2, cols: 2 }),
+        ("gamma_1u.acadl", TargetSpec::Gamma { units: 1 }),
+    ] {
+        let e = load_str(&example(file)).unwrap();
+        let spec = e.target.clone().expect("bound example");
+        let machine = acadl::coordinator::build_cached(&spec).unwrap();
+        ag_equiv(&e.ag, machine.ag()).unwrap_or_else(|err| panic!("{file}: {err}"));
+
+        let job = |target: TargetSpec| JobSpec {
+            id: 0,
+            target,
+            workload: Workload::Transformer { seq: 8 },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
+            max_cycles: 500_000_000,
+        };
+        let from_file = job::execute(&job(spec));
+        let from_rust = job::execute(&job(explicit));
+        assert_eq!(from_file.error, None, "{file}");
+        assert_eq!(from_file.numerics_ok, Some(true), "{file}");
+        assert!(from_file.cycles > 0, "{file}");
+        assert_eq!(from_file.cycles, from_rust.cycles, "{file}");
+        assert_eq!(from_file.instructions, from_rust.instructions, "{file}");
+    }
+}
+
+#[test]
 fn param_block_drives_dse_sweep() {
     let e = load_str(&example("oma.acadl")).unwrap();
     let space = acadl::dse::FileSpace::from_arch(&e, 4).unwrap();

@@ -222,8 +222,14 @@ fn plasticine_pipeline_backends_agree() {
 
 // ------------------------------------------------------- property tests
 
-/// Randomized scalar programs on the OMA: both backends agree on every
-/// statistic and the final register/memory state.
+/// Randomized scalar programs on the OMA — including the transformer
+/// scalar-reduction patterns (`max` streaming reductions, `div`
+/// normalization, `exp`/`rsqrt`/`gelu` activations): both backends agree
+/// on every statistic and the final register/memory state.
+///
+/// The transcendental arms pin their operands (positive divisors, bounded
+/// exponents) so every architectural value stays finite — NaN would make
+/// bitwise-equal states compare unequal under f32 `==`.
 #[test]
 fn prop_random_oma_programs_backends_agree() {
     let m = OmaConfig::default().build().unwrap();
@@ -235,7 +241,7 @@ fn prop_random_oma_programs_backends_agree() {
             let mut src = String::new();
             let n = g.usize(1, 24);
             for i in 0..n {
-                match g.usize(0, 6) {
+                match g.usize(0, 11) {
                     0 => src.push_str(&format!("movi #{} => r{}\n", g.int(-99, 99), g.usize(0, 7))),
                     1 => src.push_str(&format!(
                         "add r{}, r{} => r{}\n",
@@ -263,6 +269,33 @@ fn prop_random_oma_programs_backends_agree() {
                         "addi r{}, #{} => r{}\n",
                         g.usize(0, 7),
                         g.int(-9, 9),
+                        g.usize(0, 7)
+                    )),
+                    6 => src.push_str(&format!(
+                        "max r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(0, 7)
+                    )),
+                    7 => src.push_str(&format!(
+                        "movi #{} => r13\ndiv r{}, r13 => r{}\n",
+                        g.int(1, 9),
+                        g.usize(0, 7),
+                        g.usize(0, 7)
+                    )),
+                    8 => src.push_str(&format!(
+                        "movi #{} => r14\nexp r14 => r{}\n",
+                        g.int(-4, 4),
+                        g.usize(0, 7)
+                    )),
+                    9 => src.push_str(&format!(
+                        "movi #{} => r15\nrsqrt r15 => r{}\n",
+                        g.int(1, 9),
+                        g.usize(0, 7)
+                    )),
+                    10 => src.push_str(&format!(
+                        "gelu r{} => r{}\n",
+                        g.usize(0, 7),
                         g.usize(0, 7)
                     )),
                     _ => src.push_str("nop\n"),

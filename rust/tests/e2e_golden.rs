@@ -2,9 +2,11 @@
 //! functional results vs the PJRT-executed JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`, built by `make artifacts`).
 //!
-//! These tests *skip* (not fail) when artifacts are absent so a fresh
-//! checkout still passes `cargo test`; `make test` always builds them
-//! first.
+//! Without the `pjrt` feature these tests are **ignored** — they show up
+//! as `ignored` in the test summary instead of silently passing, so CI
+//! cannot mistake "not run" for "validated".  *With* the feature, a
+//! missing artifacts directory is a hard failure (the opt-in asked for
+//! golden validation; `make artifacts` builds the inputs).
 
 use acadl::arch::gamma::GammaConfig;
 use acadl::arch::systolic::SystolicConfig;
@@ -16,15 +18,31 @@ use acadl::runtime::{Golden, RuntimeError};
 use acadl::sim::engine::Engine;
 use acadl::util::prop::Gen;
 
+/// Marker every golden test carries: ignored (visibly) when the `pjrt`
+/// feature is off, a real run otherwise.
+macro_rules! requires_pjrt {
+    () => {
+        if cfg!(not(feature = "pjrt")) {
+            // Belt and braces: the `#[cfg_attr(..., ignore)]` below keeps
+            // this unreachable without `--ignored`.
+            eprintln!("SKIPPED: built without the `pjrt` feature — run with --features pjrt");
+            return;
+        }
+    };
+}
+
 fn golden() -> Option<Golden> {
     match Golden::load_default() {
         Ok(g) => Some(g),
-        Err(RuntimeError::NoManifest(_)) => {
-            eprintln!("skipping: artifacts/ missing — run `make artifacts`");
-            None
+        Err(RuntimeError::NoManifest(p)) => {
+            panic!(
+                "pjrt builds must validate against the golden artifacts: \
+                 manifest missing at {} — run `make artifacts` first",
+                p.display()
+            )
         }
         Err(RuntimeError::Disabled) => {
-            eprintln!("skipping: built without the `pjrt` feature");
+            eprintln!("SKIPPED: pjrt runtime disabled at build time");
             None
         }
         Err(e) => panic!("unexpected runtime error: {e}"),
@@ -40,7 +58,9 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 
 /// Γ̈'s gemm instruction (timed engine) ≡ the Pallas kernel via PJRT.
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "golden cross-validation needs --features pjrt")]
 fn gamma_gemm_matches_pallas_kernel() {
+    requires_pjrt!();
     let Some(mut golden) = golden() else { return };
     let t = GAMMA_TILE;
     let p = GemmParams::new(t, t, t);
@@ -64,7 +84,9 @@ fn gamma_gemm_matches_pallas_kernel() {
 
 /// The ReLU variant (Listing 4's `1:` flag) against `gemm_relu_8x8`.
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "golden cross-validation needs --features pjrt")]
 fn gamma_gemm_relu_matches_pallas_kernel() {
+    requires_pjrt!();
     let Some(mut golden) = golden() else { return };
     let t = GAMMA_TILE;
     let p = GemmParams::new(t, t, t);
@@ -100,7 +122,9 @@ fn gamma_gemm_relu_matches_pallas_kernel() {
 /// abstraction, same semantics; here the full 128³ is validated on Γ̈
 /// against `gemm_tiled_128`.
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "golden cross-validation needs --features pjrt")]
 fn tiled_128_gemm_matches_pallas_kernel() {
+    requires_pjrt!();
     let Some(mut golden) = golden() else { return };
     let p = GemmParams::new(128, 128, 128);
     let machine = GammaConfig::new(4).build().unwrap();
@@ -124,7 +148,9 @@ fn tiled_128_gemm_matches_pallas_kernel() {
 
 /// The systolic array agrees with the Pallas kernel too (cross-level).
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "golden cross-validation needs --features pjrt")]
 fn systolic_matches_pallas_kernel() {
+    requires_pjrt!();
     let Some(mut golden) = golden() else { return };
     let t = GAMMA_TILE;
     let p = GemmParams::new(t, t, t);

@@ -1,0 +1,392 @@
+//! Cross-layer differential conformance for the transformer operators:
+//!
+//! * **Bit-exactness across abstraction layers** — for randomized shapes,
+//!   the functional ISS and both timing backends produce *identical*
+//!   outputs, equal bit-for-bit to the host reference (`rowwise::*_ref`),
+//!   on every zoo machine that supports the operator.  (The analytical
+//!   layer joins through the roofline assertions below — four layers, one
+//!   oracle.)
+//! * **Timing soundness** — timed cycles never undercut the per-target
+//!   `Roofline::op_cycles` bound, per operator and for the whole
+//!   `tiny_transformer` schedule.
+//! * **Numerics properties** — softmax rows sum to 1 and are
+//!   permutation-equivariant; layer norm is invariant to input shift.
+//! * **DSE soundness on the new workload** — exploring the transformer
+//!   workload prunes only candidates whose roofline bound exceeds the
+//!   incumbent, and pruning preserves the optimum.
+
+use acadl::analytical::Roofline;
+use acadl::arch::gamma::GammaConfig;
+use acadl::arch::oma::OmaConfig;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::coordinator::job::{JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::dnn::graph::DnnGraph;
+use acadl::dnn::lowering::{lower_graph, roofline_ops, run_schedule, SimMode};
+use acadl::dse::{explore_specs, lower_bound_cycles};
+use acadl::mapping::gemm::gemm_ref;
+use acadl::mapping::rowwise::{
+    addmat_ref, gelu_ref, layernorm_ref, rowwise_ref, softmax_ref, transpose_ref,
+};
+use acadl::mapping::uma::{self, Machine, Operator};
+use acadl::sim::exec::MemImage;
+use acadl::sim::functional::FunctionalSim;
+use acadl::sim::{BackendKind, Engine};
+use acadl::util::prop::{forall, Gen};
+
+/// The mappable zoo with each machine's analytical roofline.
+fn zoo() -> Vec<(Machine, Roofline)> {
+    vec![
+        (
+            uma::TargetConfig::Oma(OmaConfig::default()).build().unwrap(),
+            Roofline::oma(),
+        ),
+        (
+            uma::TargetConfig::Systolic(SystolicConfig::new(2, 2)).build().unwrap(),
+            Roofline::systolic(2, 2),
+        ),
+        (
+            uma::TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap(),
+            Roofline::gamma(1),
+        ),
+    ]
+}
+
+/// Lower `op`, run it functionally and on both timing backends with the
+/// same operands, and return (functional, cycle-stepped, event-driven)
+/// outputs plus the agreed cycle count.
+fn run_three_ways(
+    machine: &Machine,
+    op: &Operator,
+    a: &[f32],
+    b: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, u64) {
+    let lw = uma::lower(machine, op).expect("operator lowers");
+    let load = |mem: &mut MemImage| {
+        mem.load_f32(lw.layout.a_base, a);
+        if !b.is_empty() {
+            mem.load_f32(lw.layout.b_base, b);
+        }
+    };
+    let mut f = FunctionalSim::new(machine.ag());
+    load(&mut f.mem);
+    f.run(&lw.program, 200_000_000).unwrap();
+    let func = f.mem.dump_f32(lw.layout.c_base, op.c_words());
+
+    let run_timed = |backend: BackendKind| {
+        let mut e = Engine::with_backend(machine.ag(), &lw.program, backend).unwrap();
+        load(&mut e.mem);
+        let stats = e.run(500_000_000).unwrap();
+        (e.mem.dump_f32(lw.layout.c_base, op.c_words()), stats.cycles)
+    };
+    let (cs, cs_cycles) = run_timed(BackendKind::CycleStepped);
+    let (ev, ev_cycles) = run_timed(BackendKind::EventDriven);
+    assert_eq!(cs_cycles, ev_cycles, "backends agree on cycles for {op:?}");
+    (func, cs, ev, cs_cycles)
+}
+
+#[test]
+fn prop_rowwise_ops_bit_exact_across_stack_and_zoo() {
+    let zoo = zoo();
+    forall(
+        "rowwise op ≡ reference, bit-exact, all layers, all machines",
+        6,
+        |g: &mut Gen| {
+            let rows = g.usize(1, 5);
+            let cols = g.usize(1, 8);
+            let kind = g.usize(0, 4);
+            let a = g.vec_f32(rows * cols, -3.0, 3.0);
+            let b = g.vec_f32(rows * cols, -3.0, 3.0);
+            (rows, cols, kind, a, b)
+        },
+        |(rows, cols, kind, a, b)| {
+            let (rows, cols) = (*rows, *cols);
+            let (op, b_op): (Operator, &[f32]) = match *kind {
+                0 => (Operator::Softmax { rows, cols }, &[]),
+                1 => (
+                    Operator::LayerNorm {
+                        rows,
+                        cols,
+                        eps: 1e-5,
+                    },
+                    &[1e-5f32],
+                ),
+                2 => (Operator::Gelu { rows, cols }, &[]),
+                3 => (Operator::AddMat { rows, cols }, b),
+                _ => (Operator::Transpose { rows, cols }, &[]),
+            };
+            let want = rowwise_ref(&op, a, b).expect("row-wise reference");
+            for (machine, rl) in &zoo {
+                let (func, cs, ev, cycles) = run_three_ways(machine, &op, a, b_op);
+                if func != want {
+                    return Err(format!("functional ≠ ref on {} for {op:?}", machine.name()));
+                }
+                if cs != want || ev != want {
+                    return Err(format!("timed ≠ ref on {} for {op:?}", machine.name()));
+                }
+                let bound = rl.op_cycles(&op);
+                if cycles < bound {
+                    return Err(format!(
+                        "{}: {cycles} cycles under roofline {bound} for {op:?}",
+                        machine.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_backends_agree_and_sequential_targets_are_exact() {
+    let oma = uma::TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+    let sys = uma::TargetConfig::Systolic(SystolicConfig::new(2, 2)).build().unwrap();
+    let gamma = uma::TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
+    forall(
+        "activation matmul across the zoo",
+        5,
+        |g: &mut Gen| {
+            // Multiples of 8 so the same shape runs unpadded on Γ̈.
+            let m = g.usize(1, 2) * 8;
+            let k = g.usize(1, 2) * 8;
+            let n = 8;
+            let a = g.vec_f32(m * k, -2.0, 2.0);
+            let b = g.vec_f32(k * n, -2.0, 2.0);
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let p = acadl::mapping::gemm::GemmParams::new(*m, *k, *n);
+            let op = Operator::Gemm(p);
+            let want = gemm_ref(&p, a, b);
+            // Sequentially-accumulating targets: bit-exact.
+            for machine in [&oma, &sys] {
+                let (func, cs, ev, _) = run_three_ways(machine, &op, a, b);
+                if func != want || cs != want || ev != want {
+                    return Err(format!("{}: matmul ≠ gemm_ref", machine.name()));
+                }
+            }
+            // Γ̈ tiles its accumulation: backends still agree bit-for-bit
+            // with each other and with the functional ISS; the reference
+            // match is a tight tolerance.
+            let (func, cs, ev, _) = run_three_ways(&gamma, &op, a, b);
+            if func != cs || func != ev {
+                return Err("gamma: abstraction layers disagree".into());
+            }
+            let diff = func
+                .iter()
+                .zip(&want)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            if diff > 1e-3 {
+                return Err(format!("gamma: matmul off by {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------- numerics props
+
+#[test]
+fn prop_softmax_rows_sum_to_one_and_permutation_equivariant() {
+    forall(
+        "softmax Σ=1 and permutation equivariance",
+        24,
+        |g: &mut Gen| {
+            let rows = g.usize(1, 4);
+            let cols = g.usize(2, 9);
+            let x = g.vec_f32(rows * cols, -6.0, 6.0);
+            // A random permutation of the columns (Fisher–Yates).
+            let mut perm: Vec<usize> = (0..cols).collect();
+            for i in (1..cols).rev() {
+                let j = g.usize(0, i);
+                perm.swap(i, j);
+            }
+            (rows, cols, x, perm)
+        },
+        |(rows, cols, x, perm)| {
+            let (rows, cols) = (*rows, *cols);
+            let y = softmax_ref(rows, cols, x);
+            for r in 0..rows {
+                let s: f32 = y[r * cols..(r + 1) * cols].iter().sum();
+                if (s - 1.0).abs() > 1e-5 {
+                    return Err(format!("row {r} sums to {s}"));
+                }
+                if y[r * cols..(r + 1) * cols].iter().any(|&v| !(0.0..=1.0).contains(&v)) {
+                    return Err(format!("row {r} has a probability outside [0,1]"));
+                }
+            }
+            // softmax(P x) == P softmax(x): reductions are order-sensitive
+            // only in the last ulps, so compare with a tight tolerance.
+            let mut px = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for (j, &pj) in perm.iter().enumerate() {
+                    px[r * cols + j] = x[r * cols + pj];
+                }
+            }
+            let py = softmax_ref(rows, cols, &px);
+            for r in 0..rows {
+                for (j, &pj) in perm.iter().enumerate() {
+                    let (a, b) = (py[r * cols + j], y[r * cols + pj]);
+                    if (a - b).abs() > 1e-6 {
+                        return Err(format!("not equivariant at ({r},{j}): {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layernorm_shift_invariant_and_normalized() {
+    forall(
+        "layernorm shift invariance",
+        24,
+        |g: &mut Gen| {
+            let rows = g.usize(1, 4);
+            let cols = g.usize(2, 9);
+            let x = g.vec_f32(rows * cols, -4.0, 4.0);
+            let shift = g.f32(-2.0, 2.0);
+            (rows, cols, x, shift)
+        },
+        |(rows, cols, x, shift)| {
+            let (rows, cols) = (*rows, *cols);
+            let y = layernorm_ref(rows, cols, 1e-5, x);
+            // Output rows are (approximately) zero-mean.
+            for r in 0..rows {
+                let mean: f32 =
+                    y[r * cols..(r + 1) * cols].iter().sum::<f32>() / cols as f32;
+                if mean.abs() > 1e-4 {
+                    return Err(format!("row {r} mean {mean} after normalization"));
+                }
+            }
+            let shifted: Vec<f32> = x.iter().map(|&v| v + shift).collect();
+            let ys = layernorm_ref(rows, cols, 1e-5, &shifted);
+            let diff = y
+                .iter()
+                .zip(&ys)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if diff > 1e-3 {
+                return Err(format!("shift by {shift} moved output by {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gelu_and_residual_and_transpose_identities() {
+    let mut g = Gen::new(0x6E1);
+    let x = g.vec_f32(24, -3.0, 3.0);
+    let zero = vec![0.0f32; 24];
+    // x + 0 = x, bit-exactly.
+    assert_eq!(addmat_ref(&x, &zero), x);
+    // Transpose is an involution, bit-exactly.
+    assert_eq!(transpose_ref(6, 4, &transpose_ref(4, 6, &x)), x);
+    // GELU is monotone on the sampled range's positives and bounded by x.
+    for &v in &x {
+        let y = gelu_ref(&[v])[0];
+        assert!(y <= v.max(0.0) + 1e-6, "gelu({v}) = {y} exceeds relu");
+        assert!(y >= v.min(0.0) - 0.2, "gelu({v}) = {y} far below x");
+    }
+}
+
+// ------------------------------------------------- whole-model + DSE layer
+
+#[test]
+fn tiny_transformer_cycles_respect_roofline_on_all_zoo_machines() {
+    let graph = DnnGraph::tiny_transformer();
+    let seq = 8;
+    let x = graph.input_batch(seq);
+    let want = graph.forward_ref(&x, seq);
+    for (machine, rl) in zoo() {
+        let lg = lower_graph(&machine, &graph, seq).unwrap();
+        let rep = run_schedule(
+            &machine,
+            &lg,
+            &x,
+            SimMode::Timed(BackendKind::EventDriven),
+            500_000_000,
+        )
+        .unwrap();
+        // Whole-schedule bound: Σ per-operator rooflines (unpadded).
+        let bound: u64 = roofline_ops(&graph, seq).iter().map(|op| rl.op_cycles(op)).sum();
+        assert!(
+            rep.total_cycles >= bound,
+            "{}: {} cycles under bound {bound}",
+            machine.name(),
+            rep.total_cycles
+        );
+        // Functional output of the timed run matches the reference — the
+        // sequentially-accumulating targets bit-exactly, Γ̈ tightly.
+        match machine {
+            Machine::Gamma(_) => {
+                let diff = rep
+                    .output
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-3, "gamma diff {diff}");
+            }
+            _ => assert_eq!(rep.output, want, "bit-exact on {}", machine.name()),
+        }
+    }
+}
+
+#[test]
+fn dse_on_transformer_prunes_only_above_the_incumbent() {
+    let mk = |id: u64, target: TargetSpec| JobSpec {
+        id,
+        target,
+        workload: Workload::Transformer { seq: 8 },
+        mode: SimModeSpec::Timed,
+        backend: BackendKind::EventDriven,
+        max_cycles: 500_000_000,
+    };
+    let specs = vec![
+        mk(
+            0,
+            TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+        ),
+        mk(1, TargetSpec::Systolic { rows: 2, cols: 2 }),
+        mk(2, TargetSpec::Systolic { rows: 4, cols: 4 }),
+        mk(3, TargetSpec::Gamma { units: 1 }),
+    ];
+    let pruned = explore_specs(specs.clone(), 2, true);
+    let exhaustive = explore_specs(specs.clone(), 2, false);
+    assert_eq!(exhaustive.stats.failed, 0, "{}", exhaustive.summary());
+    assert_eq!(pruned.stats.failed, 0, "{}", pruned.summary());
+    // Pruning preserves the optimum.
+    assert_eq!(pruned.stats.best_cycles, exhaustive.stats.best_cycles);
+    assert_eq!(
+        pruned.stats.evaluated + pruned.stats.pruned,
+        pruned.stats.candidates
+    );
+    // Every evaluated point respects its own (sound) bound…
+    for p in pruned.points.iter().chain(exhaustive.points.iter()) {
+        assert!(
+            p.result.cycles >= p.lower_bound,
+            "{}: {} < bound {}",
+            p.result.target,
+            p.result.cycles,
+            p.lower_bound
+        );
+    }
+    // …and only candidates whose roofline bound exceeds the incumbent
+    // were cut without simulation.
+    let evaluated: Vec<u64> = pruned.points.iter().map(|p| p.spec.id).collect();
+    for spec in &specs {
+        if !evaluated.contains(&spec.id) {
+            assert!(
+                lower_bound_cycles(spec) > pruned.stats.best_cycles,
+                "candidate {} pruned below the incumbent",
+                spec.id
+            );
+        }
+    }
+}

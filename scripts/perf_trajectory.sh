@@ -25,12 +25,20 @@ start_ns=$(date +%s%N)
 cargo run --release --quiet -- dse --quick true --dim 8 --workers 2 > /dev/null
 end_ns=$(date +%s%N)
 
-python3 - "$OUT" $((end_ns - start_ns)) <<'EOF'
+# Transformer workload wall-clock: map + cycle-accurate simulation of
+# tiny_transformer on the systolic array (the attention data path).
+tf_start_ns=$(date +%s%N)
+cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
+  --workload transformer --seq 8 --backend event > /dev/null
+tf_end_ns=$(date +%s%N)
+
+python3 - "$OUT" $((end_ns - start_ns)) $((tf_end_ns - tf_start_ns)) <<'EOF'
 import json, os, sys
 
-path, ns = sys.argv[1], int(sys.argv[2])
+path, ns, tf_ns = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
 data = json.load(open(path)) if os.path.exists(path) else {}
 data["dse/smoke_sweep_wall"] = {"median_ns": ns, "runs": 1}
+data["transformer/systolic_2x2_seq8_wall"] = {"median_ns": tf_ns, "runs": 1}
 with open(path, "w") as f:
     json.dump(data, f, indent=2, sort_keys=True)
     f.write("\n")

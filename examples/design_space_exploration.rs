@@ -41,6 +41,15 @@ fn main() {
     assert_eq!(s.candidates, candidates);
     assert_eq!(s.evaluated + s.pruned, s.candidates, "every candidate accounted for");
     assert!(s.pruned > 0, "the roofline pre-filter must cut the scalar tail");
+    // The scalar OMA tail (96 of 136 candidates) is bound-pruned once the
+    // parallel targets set the incumbent — no machine is ever built for it.
+    assert!(
+        s.pruned * 2 >= s.candidates,
+        "the pre-filter must cut at least half the space before machine construction \
+         ({} of {} pruned)",
+        s.pruned,
+        s.candidates
+    );
     assert!(s.cache_hits > 0, "backend aliases must be served from the memo");
     assert!(!report.frontier.is_empty(), "a frontier must exist");
     // Every error-free timed point must have *performed* the numerics

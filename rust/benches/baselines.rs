@@ -29,6 +29,7 @@ fn main() {
             macs_per_cycle: (edge * edge) as u64,
             // loads stream through rows+cols load units, 1 word each.
             words_per_cycle: (2 * edge) as u64,
+            capacity_words: None,
         }
         .gemm_cycles(&p);
         table.row(vec![

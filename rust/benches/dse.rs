@@ -1,13 +1,44 @@
-//! DSE engine perf: what the analytical pre-filter and the memo buy on a
-//! real sweep.  Pruned + memoized exploration vs the exhaustive baseline
-//! over the same candidate space — the speedup is the headline number of
-//! the enumerate→prune→simulate pipeline.
+//! DSE engine perf: what the analytical pre-filter, the memo, and the
+//! streaming pipeline buy on a real sweep.
+//!
+//! Two comparisons:
+//! * pruned + memoized exploration vs the exhaustive baseline over the
+//!   same candidate space — the speedup of the enumerate→prune→simulate
+//!   pipeline;
+//! * streamed (lazy windows, bounded retention) vs materialized
+//!   evaluation of a large file-style `param` space — candidates/second
+//!   and peak RSS, the numbers behind the bounded-memory claim.
 //!
 //! Run: `cargo bench --bench dse`
+//! (`ACADL_BENCH_JSON=path` appends the medians to a BENCH json.)
 
-use acadl::dse::{explore, DseSpace};
+use acadl::dse::{
+    explore, explore_source, explore_specs, DseConfig, DseSpace, FileSource, FileSpace,
+};
 use acadl::metrics::Table;
 use acadl::util::bench::Bench;
+
+/// Peak resident set size of this process in bytes (`VmHWM`), or `None`
+/// off Linux.  Monotonic — order measurements smallest-footprint first.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// A large OMA `param` space in the shape a `.acadl` sweep file takes
+/// (built textually so the bench exercises the real stamp-from-one-
+/// elaboration path).
+fn file_space(tiles: usize) -> FileSpace {
+    let mut src = String::from("arch \"bench\" targets oma {\n  cache = true\n}\n");
+    src.push_str("param cache in [true, false]\n");
+    let vals: Vec<String> = (1..=tiles).map(|t| t.to_string()).collect();
+    src.push_str(&format!("param tile in [{}]\n", vals.join(", ")));
+    src.push_str("param order in [ijk, ikj, jik, jki, kij, kji]\n");
+    let arch = acadl::adl::load_str(&src).expect("bench space parses");
+    FileSpace::from_arch(&arch, 8).expect("bench space elaborates")
+}
 
 fn main() {
     let dim = 16;
@@ -17,7 +48,7 @@ fn main() {
     let workers = 4;
 
     let mut b = Bench::new("dse");
-    let n = space.enumerate().len() as u64;
+    let n = space.total();
 
     let pruned = b
         .time("pruned+memoized", Some(n), || explore(&space, workers, true))
@@ -25,6 +56,36 @@ fn main() {
     let exhaustive = b
         .time("exhaustive", Some(n), || explore(&space, workers, false))
         .clone();
+
+    // Streamed vs materialized over a ~10k-candidate param space.  The
+    // streamed run goes first: VmHWM only ever rises, so the bounded
+    // pipeline must be measured before the materializer inflates it.
+    let big = file_space(850); // 2 × 850 × 6 = 10 200 candidates
+    let big_n = big.total().expect("bench space fits u64");
+    let streamed_cfg = {
+        let mut cfg = DseConfig::new(workers);
+        cfg.window = 2048;
+        cfg.keep_points = 256;
+        cfg
+    };
+    let streamed = b
+        .time("streamed 10k (window 2048)", Some(big_n), || {
+            explore_source(
+                &mut FileSource::new(&big).expect("valid axes"),
+                &streamed_cfg,
+                None,
+            )
+            .expect("no checkpoint IO to fail")
+        })
+        .clone();
+    let rss_streamed = peak_rss_bytes();
+    let materialized = b
+        .time("materialized 10k (full Vec)", Some(big_n), || {
+            explore_specs(big.enumerate().expect("in range"), workers, true)
+        })
+        .clone();
+    let rss_materialized = peak_rss_bytes();
+    b.write_json_if_requested();
 
     // One representative run for the stats table.
     let rep = explore(&space, workers, true);
@@ -51,9 +112,59 @@ fn main() {
     ]);
     print!("{}", t.render());
 
+    let srep = explore_source(
+        &mut FileSource::new(&big).expect("valid axes"),
+        &streamed_cfg,
+        None,
+    )
+    .expect("no checkpoint IO to fail");
+    let mrep = explore_specs(big.enumerate().expect("in range"), workers, true);
+    let fmt_rss = |r: Option<u64>| {
+        r.map(|b| format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)))
+            .unwrap_or_else(|| "n/a".into())
+    };
+    let mut t = Table::new(
+        &format!("dse {big_n}-candidate param space: streamed vs materialized"),
+        &["mode", "cand/s", "peak resident pts", "peak RSS (monotonic)", "median wall"],
+    );
+    let cand_per_s = |median: std::time::Duration| {
+        let s = median.as_secs_f64();
+        if s > 0.0 {
+            format!("{:.0}", big_n as f64 / s)
+        } else {
+            "-".into()
+        }
+    };
+    t.row(vec![
+        "streamed".into(),
+        cand_per_s(streamed.median),
+        srep.stats.peak_resident.to_string(),
+        fmt_rss(rss_streamed),
+        format!("{:.3?}", streamed.median),
+    ]);
+    t.row(vec![
+        "materialized".into(),
+        cand_per_s(materialized.median),
+        mrep.stats.peak_resident.to_string(),
+        fmt_rss(rss_materialized),
+        format!("{:.3?}", materialized.median),
+    ]);
+    print!("{}", t.render());
+
     assert_eq!(
         rep.stats.best_cycles, full.stats.best_cycles,
         "pruning must preserve the optimum"
     );
     assert!(rep.stats.simulated <= full.stats.simulated);
+    assert_eq!(
+        srep.stats.best_cycles, mrep.stats.best_cycles,
+        "streaming must preserve the optimum"
+    );
+    assert!(
+        srep.stats.peak_resident < mrep.stats.peak_resident,
+        "streaming must hold fewer points than materializing \
+         ({} vs {})",
+        srep.stats.peak_resident,
+        mrep.stats.peak_resident
+    );
 }

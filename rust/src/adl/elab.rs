@@ -74,6 +74,37 @@ impl ElabArch {
             order: None,
         })
     }
+
+    /// Incremental elaboration: stamp out **one** point of the `param`
+    /// cross-product from this already-elaborated description.  The file
+    /// is parsed and elaborated once; each candidate is then the base
+    /// `targets` binding with `indices[i]`-th value of axis `i` applied —
+    /// `O(axes)` per candidate, no re-parse, no re-validation of the
+    /// architecture graph.  Because candidates differ only in their
+    /// [`TargetSpec`] fields, the coordinator's config-hash machine cache
+    /// keys them exactly as it keys built-in sweeps.
+    ///
+    /// `indices` is interpreted positionally against [`Self::params`]
+    /// (missing trailing indices keep the base value).
+    pub fn stamp(&self, indices: &[usize]) -> Result<Candidate, String> {
+        let mut c = self.base_candidate().ok_or_else(|| {
+            format!(
+                "architecture `{}` has no `targets` binding — nothing to stamp",
+                self.name
+            )
+        })?;
+        for (axis, &ix) in self.params.iter().zip(indices) {
+            let v = axis.values.get(ix).ok_or_else(|| {
+                format!(
+                    "param `{}`: value index {ix} out of range ({} values)",
+                    axis.key,
+                    axis.values.len()
+                )
+            })?;
+            apply_param(&mut c, &axis.key, v).map_err(|e| format!("param `{}`: {e}", axis.key))?;
+        }
+        Ok(c)
+    }
 }
 
 /// Apply one swept `param` value onto a candidate.  Key/family validity
@@ -1058,5 +1089,21 @@ join "a".out -> "b".in
         // The parser accepts semantically-wrong input; elaboration rejects.
         let ast = parse("arch \"x\"\nobject \"a\" : Nope {\n}").unwrap();
         assert!(elaborate(&ast).is_err());
+    }
+
+    #[test]
+    fn stamp_applies_param_indices_onto_the_base() {
+        let src = "arch \"s\" targets systolic {\n  rows = 2\n  cols = 2\n}\n\
+                   param rows in [2, 4]\nparam cols in [2, 4, 8]\n";
+        let arch = load_str(src).unwrap();
+        let c = arch.stamp(&[1, 2]).unwrap();
+        assert_eq!(c.target, TargetSpec::Systolic { rows: 4, cols: 8 });
+        // Missing trailing indices keep the base value.
+        let c = arch.stamp(&[1]).unwrap();
+        assert_eq!(c.target, TargetSpec::Systolic { rows: 4, cols: 2 });
+        // Out-of-range index is an error, not a wrap.
+        assert!(arch.stamp(&[2, 0]).is_err());
+        // No binding: nothing to stamp.
+        assert!(load_str("arch \"free\"").unwrap().stamp(&[]).is_err());
     }
 }

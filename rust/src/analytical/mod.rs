@@ -39,38 +39,65 @@ pub struct Roofline {
     pub macs_per_cycle: u64,
     /// Memory words transferable per cycle.
     pub words_per_cycle: u64,
+    /// f32 words the target's data memory can hold (`None` = unmodeled).
+    /// This is a *feasibility* parameter, not a bound denominator: a
+    /// workload whose resident operand set exceeds it cannot be laid out
+    /// on the target at all.
+    pub capacity_words: Option<u64>,
 }
 
 impl Roofline {
     /// The OMA scalar core: one single-slot MAC functional unit (≤ 1 MAC
     /// retired per cycle) and one single-slot memory access unit (≤ 1 word
-    /// per cycle).  Both sides are sound lower-bound denominators.
+    /// per cycle).  Both sides are sound lower-bound denominators.  Data
+    /// memory: `dmem0` spans 512 KiB (bytes 65536..589824) = 128 Ki f32
+    /// words.
     pub fn oma() -> Self {
         Roofline {
             macs_per_cycle: 1,
             words_per_cycle: 1,
+            capacity_words: Some(131_072),
         }
     }
 
     /// A `rows×cols` systolic array: one MAC-and-forward unit per PE, and
     /// `rows + cols` edge load units plus as many store units — each a
-    /// single-slot unit moving one word per operation.
+    /// single-slot unit moving one word per operation.  Data memory: the
+    /// array's 8 MiB SRAM = 2 Mi f32 words.
     pub fn systolic(rows: usize, cols: usize) -> Self {
         Roofline {
             macs_per_cycle: (rows * cols) as u64,
             words_per_cycle: (2 * (rows + cols)) as u64,
+            capacity_words: Some(2_097_152),
         }
     }
 
     /// Γ̈ with `units` LSU/compute/scratchpad complexes: each fused `gemm`
     /// op performs 8·8·8 = 512 MACs and a unit cannot complete more than
     /// one op per cycle even fully pipelined; each LSU moves one 8-wide
-    /// vector row per op.
+    /// vector row per op.  Data memory: the 256 MiB DRAM window = 64 Mi
+    /// f32 words.
     pub fn gamma(units: usize) -> Self {
         Roofline {
             macs_per_cycle: (units * 512) as u64,
             words_per_cycle: (units * 8) as u64,
+            capacity_words: Some(67_108_864),
         }
+    }
+
+    /// Memory-capacity feasibility: can a resident operand set of `words`
+    /// f32 words be laid out in the target's data memory?
+    pub fn fits_capacity(&self, words: u64) -> bool {
+        self.capacity_words.map_or(true, |cap| words <= cap)
+    }
+
+    /// Port-bandwidth feasibility: can `words` of mandatory traffic cross
+    /// the memory interface within `budget` cycles at full port
+    /// bandwidth?  `false` means a timed run is *guaranteed* to hit the
+    /// cycle limit (the streaming bound is sound), so the candidate can
+    /// be rejected before any machine is built.
+    pub fn traffic_fits_budget(&self, words: u64, budget: u64) -> bool {
+        self.stream_cycles(words) <= budget
     }
 
     /// Minimum cycles for a GeMM with perfect reuse (each operand word
@@ -180,14 +207,35 @@ mod tests {
         let compute_bound = Roofline {
             macs_per_cycle: 1,
             words_per_cycle: 1000,
+            capacity_words: None,
         };
         let memory_bound = Roofline {
             macs_per_cycle: 1000,
             words_per_cycle: 1,
+            capacity_words: None,
         };
         let p = GemmParams::new(16, 16, 16);
         assert_eq!(compute_bound.gemm_bound(&p), "compute");
         assert_eq!(memory_bound.gemm_bound(&p), "memory");
         assert_eq!(compute_bound.gemm_cycles(&p), p.macs());
+    }
+
+    #[test]
+    fn feasibility_checks_gate_on_capacity_and_budget() {
+        let oma = Roofline::oma();
+        // The OMA's 512 KiB dmem holds 128 Ki words.
+        assert!(oma.fits_capacity(131_072));
+        assert!(!oma.fits_capacity(131_073));
+        // Unmodeled capacity never rejects.
+        let open = Roofline {
+            capacity_words: None,
+            ..oma
+        };
+        assert!(open.fits_capacity(u64::MAX));
+        // 100 words at 1 word/cycle needs 100 cycles.
+        assert!(oma.traffic_fits_budget(100, 100));
+        assert!(!oma.traffic_fits_budget(100, 99));
+        // A wider interface relaxes the same budget.
+        assert!(Roofline::systolic(4, 4).traffic_fits_budget(100, 13));
     }
 }

@@ -272,6 +272,14 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
         area_proxy: spec.target.area_proxy(),
     };
 
+    // Feasibility gate (same predicate the DSE pre-filter prunes on): an
+    // oversized operand set would silently fall off the modeled address
+    // ranges, and a bound already past the budget guarantees a cycle-limit
+    // abort — fail fast, identically on every path.
+    if let Some(reason) = spec.infeasible() {
+        return done(JobResult::err(spec, reason, 0));
+    }
+
     match &spec.workload {
         Workload::Gemm { m, k, n, tile, order } => {
             let mut p = GemmParams::new(*m, *k, *n);
@@ -575,6 +583,96 @@ impl SimModeSpec {
 }
 
 impl JobSpec {
+    /// Sound lower bound on this job's timed cycles: the target's
+    /// roofline summed over the workload's operator sequence
+    /// ([`crate::dnn::lowering::roofline_ops`] — GeMM bounds for the
+    /// GeMM-backed operators, streaming-traffic bounds for the row-wise
+    /// transformer operators).  Target-side padding (Γ̈ rounds dims up to
+    /// 8) only raises true cycles, so bounding the unpadded problem stays
+    /// sound.  This is the *single* definition the DSE pre-filter
+    /// (`dse::lower_bound_cycles`) and the feasibility check below share.
+    pub fn lower_bound_cycles(&self) -> u64 {
+        let rl = self.target.roofline();
+        match &self.workload {
+            Workload::Gemm { m, k, n, .. } => rl.gemm_cycles(&GemmParams::new(*m, *k, *n)),
+            Workload::Mlp { small, batch } => {
+                let g = if *small {
+                    DnnGraph::mlp_small()
+                } else {
+                    DnnGraph::mlp_784_256_128_10()
+                };
+                lowering::roofline_ops(&g, *batch)
+                    .iter()
+                    .map(|op| rl.op_cycles(op))
+                    .sum()
+            }
+            Workload::Transformer { seq } => {
+                lowering::roofline_ops(&DnnGraph::tiny_transformer(), *seq)
+                    .iter()
+                    .map(|op| rl.op_cycles(op))
+                    .sum()
+            }
+        }
+    }
+
+    /// f32 words the workload keeps resident in data memory, including
+    /// target-side padding (Γ̈ rounds GeMM dims up to multiples of 8,
+    /// exactly as [`execute_on`] does before lowering).  `None` for the
+    /// graph workloads, whose schedules stage per-operator tiles rather
+    /// than holding the whole operand set.
+    pub fn footprint_words(&self) -> Option<u64> {
+        match &self.workload {
+            Workload::Gemm { m, k, n, .. } => {
+                let pad = |d: usize| -> u64 {
+                    if matches!(self.target, TargetSpec::Gamma { .. }) {
+                        (d.div_ceil(8) * 8) as u64
+                    } else {
+                        d as u64
+                    }
+                };
+                let (m, k, n) = (pad(*m), pad(*k), pad(*n));
+                Some(m * k + k * n + m * n)
+            }
+            Workload::Mlp { .. } | Workload::Transformer { .. } => None,
+        }
+    }
+
+    /// Pre-simulation feasibility verdict: `Some(reason)` when this job
+    /// provably cannot produce a useful timed result — the operand set
+    /// does not fit the target's data memory, or the sound analytical
+    /// lower bound already exceeds the cycle budget (so a timed run is
+    /// *guaranteed* to hit the limit).
+    ///
+    /// [`execute_on`] rejects on exactly this predicate before touching
+    /// the machine, and the DSE pre-filter prunes on it before a machine
+    /// is even built — the two paths agree by construction, which is what
+    /// makes pruning infeasible candidates sound (an exhaustive run turns
+    /// them into error rows that never join the Pareto frontier).
+    pub fn infeasible(&self) -> Option<String> {
+        let rl = self.target.roofline();
+        if let Some(words) = self.footprint_words() {
+            if !rl.fits_capacity(words) {
+                return Some(format!(
+                    "infeasible: operand footprint {words} words exceeds {} data-memory \
+                     capacity ({} words)",
+                    self.target.describe(),
+                    rl.capacity_words.unwrap_or(0)
+                ));
+            }
+        }
+        if self.mode == SimModeSpec::Timed {
+            let bound = self.lower_bound_cycles();
+            if bound > self.max_cycles {
+                return Some(format!(
+                    "infeasible: analytical lower bound {bound} cycles exceeds the \
+                     {}-cycle budget",
+                    self.max_cycles
+                ));
+            }
+        }
+        None
+    }
+
     /// Canonical memo key: FNV-1a over the canonical JSON of the spec's
     /// *semantic identity*.  The id is dropped (it names the request, not
     /// the result), the workload is normalized per target

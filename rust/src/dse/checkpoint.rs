@@ -1,0 +1,324 @@
+//! Sweep checkpoints: everything a streaming exploration needs to
+//! continue after an interruption, as one JSON object on disk.
+//!
+//! The format (version 1) is deliberately flat and built from the
+//! existing wire serializations ([`JobSpec::to_json`],
+//! [`JobResult::to_json`]), so external tooling that already parses job
+//! lines parses checkpoint points too:
+//!
+//! ```text
+//! {
+//!   "version": 1,
+//!   "signature": "0x…",          // space identity (FNV-1a, hex string)
+//!   "cursor": 10240,             // next enumeration index to pull
+//!   "stride": 4,                 // reservoir thinning stride
+//!   "best_cycles": 1234,         // incumbent (null before any success)
+//!   "best_target": "…",
+//!   "evaluated": …, "pruned_infeasible": …, "pruned_bound": …,
+//!   "pruned_dominated": …, "simulated": …, "cache_hits": …, "failed": …,
+//!   "frontier": [ {"spec": …, "lower_bound": …, "result": …, "cached": …} ],
+//!   "samples":  [ … ]            // thinned non-frontier reservoir
+//! }
+//! ```
+//!
+//! The signature is serialized as a hex *string* because a 64-bit hash
+//! does not survive the JSON number type (f64 mantissa).  Writes are
+//! atomic (sibling `.tmp` + rename), so a kill mid-write leaves the
+//! previous checkpoint intact.  The simulation memo is deliberately
+//! **not** checkpointed: losing it costs re-simulation on resume, never
+//! correctness, and keeps checkpoints small.
+
+use std::fs;
+
+use crate::coordinator::job::{JobResult, JobSpec};
+use crate::dse::DsePoint;
+use crate::util::json::Json;
+
+/// Where and how often to checkpoint: after any lookahead window that
+/// crosses `every` processed candidates since the last write (plus a
+/// final write at stop/completion).
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    pub path: String,
+    pub every: u64,
+}
+
+/// A serialized sweep position (see the module docs for the format).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub version: u64,
+    pub signature: u64,
+    pub cursor: u64,
+    pub stride: u64,
+    /// `u64::MAX` = no successful evaluation yet (serialized as null).
+    pub best_cycles: u64,
+    pub best_target: String,
+    pub evaluated: u64,
+    pub pruned_infeasible: u64,
+    pub pruned_bound: u64,
+    pub pruned_dominated: u64,
+    pub simulated: u64,
+    pub cache_hits: u64,
+    pub failed: u64,
+    pub frontier: Vec<DsePoint>,
+    pub samples: Vec<DsePoint>,
+}
+
+fn point_to_json(p: &DsePoint) -> Json {
+    Json::obj(vec![
+        ("spec", p.spec.to_json()),
+        ("lower_bound", Json::num(p.lower_bound as f64)),
+        ("result", p.result.to_json()),
+        ("cached", Json::Bool(p.cached)),
+    ])
+}
+
+fn point_from_json(v: &Json) -> Result<DsePoint, String> {
+    Ok(DsePoint {
+        spec: JobSpec::from_json(v.field("spec").map_err(|e| e.to_string())?)
+            .map_err(|e| format!("checkpoint point spec: {e}"))?,
+        lower_bound: v
+            .field("lower_bound")
+            .and_then(|x| x.as_u64())
+            .map_err(|e| format!("checkpoint point lower_bound: {e}"))?,
+        result: JobResult::from_json(v.field("result").map_err(|e| e.to_string())?)
+            .map_err(|e| format!("checkpoint point result: {e}"))?,
+        cached: v
+            .field("cached")
+            .and_then(|x| x.as_bool())
+            .map_err(|e| format!("checkpoint point cached: {e}"))?,
+    })
+}
+
+fn points_from_json(v: &Json, what: &str) -> Result<Vec<DsePoint>, String> {
+    v.as_arr()
+        .map_err(|e| format!("checkpoint {what}: {e}"))?
+        .iter()
+        .map(point_from_json)
+        .collect()
+}
+
+impl Checkpoint {
+    pub const VERSION: u64 = 1;
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("signature", Json::str(format!("{:#018x}", self.signature))),
+            ("cursor", Json::num(self.cursor as f64)),
+            ("stride", Json::num(self.stride as f64)),
+            (
+                "best_cycles",
+                if self.best_cycles == u64::MAX {
+                    Json::Null
+                } else {
+                    Json::num(self.best_cycles as f64)
+                },
+            ),
+            ("best_target", Json::str(self.best_target.clone())),
+            ("evaluated", Json::num(self.evaluated as f64)),
+            (
+                "pruned_infeasible",
+                Json::num(self.pruned_infeasible as f64),
+            ),
+            ("pruned_bound", Json::num(self.pruned_bound as f64)),
+            ("pruned_dominated", Json::num(self.pruned_dominated as f64)),
+            ("simulated", Json::num(self.simulated as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            (
+                "frontier",
+                Json::Arr(self.frontier.iter().map(point_to_json).collect()),
+            ),
+            (
+                "samples",
+                Json::Arr(self.samples.iter().map(point_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let version = v
+            .field("version")
+            .and_then(|x| x.as_u64())
+            .map_err(|e| format!("checkpoint version: {e}"))?;
+        if version != Self::VERSION {
+            return Err(format!(
+                "unsupported checkpoint version {version} (this build reads version {})",
+                Self::VERSION
+            ));
+        }
+        let sig_str = v
+            .field("signature")
+            .and_then(|x| x.as_str())
+            .map_err(|e| format!("checkpoint signature: {e}"))?;
+        let signature = u64::from_str_radix(sig_str.trim_start_matches("0x"), 16)
+            .map_err(|e| format!("checkpoint signature `{sig_str}`: {e}"))?;
+        let num = |key: &str| -> Result<u64, String> {
+            v.field(key)
+                .and_then(|x| x.as_u64())
+                .map_err(|e| format!("checkpoint {key}: {e}"))
+        };
+        Ok(Checkpoint {
+            version,
+            signature,
+            cursor: num("cursor")?,
+            stride: num("stride")?.max(1),
+            best_cycles: match v.get("best_cycles") {
+                None | Some(Json::Null) => u64::MAX,
+                Some(x) => x
+                    .as_u64()
+                    .map_err(|e| format!("checkpoint best_cycles: {e}"))?,
+            },
+            best_target: v
+                .field("best_target")
+                .and_then(|x| x.as_str())
+                .map_err(|e| format!("checkpoint best_target: {e}"))?
+                .to_string(),
+            evaluated: num("evaluated")?,
+            pruned_infeasible: num("pruned_infeasible")?,
+            pruned_bound: num("pruned_bound")?,
+            pruned_dominated: num("pruned_dominated")?,
+            simulated: num("simulated")?,
+            cache_hits: num("cache_hits")?,
+            failed: num("failed")?,
+            frontier: points_from_json(v.field("frontier").map_err(|e| e.to_string())?, "frontier")?,
+            samples: points_from_json(v.field("samples").map_err(|e| e.to_string())?, "samples")?,
+        })
+    }
+
+    /// Atomic write: serialize to a sibling `.tmp`, then rename over the
+    /// destination, so readers (and a killed writer) never see a torn
+    /// file.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| format!("cannot write checkpoint `{tmp}`: {e}"))?;
+        fs::rename(&tmp, path)
+            .map_err(|e| format!("cannot move checkpoint into place at `{path}`: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("cannot read checkpoint `{path}`: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| format!("checkpoint `{path}`: {e}"))?;
+        Self::from_json(&json).map_err(|e| format!("checkpoint `{path}`: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::SimModeSpec;
+    use crate::coordinator::job::TargetSpec;
+    use crate::coordinator::job::Workload;
+
+    fn point(id: u64, cycles: u64) -> DsePoint {
+        DsePoint {
+            spec: JobSpec {
+                id,
+                target: TargetSpec::Systolic { rows: 4, cols: 4 },
+                workload: Workload::Gemm {
+                    m: 8,
+                    k: 8,
+                    n: 8,
+                    tile: None,
+                    order: None,
+                },
+                mode: SimModeSpec::Timed,
+                backend: Default::default(),
+                max_cycles: 1_000_000,
+            },
+            lower_bound: cycles / 2,
+            result: JobResult {
+                id,
+                target: "systolic 4x4".into(),
+                workload: "gemm 8x8x8".into(),
+                mode: SimModeSpec::Timed,
+                cycles,
+                instructions: 3,
+                ipc: 1.5,
+                utilization: 0.5,
+                numerics_ok: Some(true),
+                wall_micros: 17,
+                error: None,
+                area_proxy: 16.0,
+            },
+            cached: id % 2 == 0,
+        }
+    }
+
+    fn checkpoint() -> Checkpoint {
+        Checkpoint {
+            version: Checkpoint::VERSION,
+            signature: 0xDEAD_BEEF_CAFE_F00D,
+            cursor: 10_240,
+            stride: 4,
+            best_cycles: 321,
+            best_target: "systolic 4x4".into(),
+            evaluated: 9_000,
+            pruned_infeasible: 100,
+            pruned_bound: 1_100,
+            pruned_dominated: 40,
+            simulated: 123,
+            cache_hits: 8_877,
+            failed: 2,
+            frontier: vec![point(3, 321), point(9, 400)],
+            samples: vec![point(12, 999)],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_json() {
+        let ck = checkpoint();
+        let back = Checkpoint::from_json(&Json::parse(&ck.to_json().to_string()).unwrap()).unwrap();
+        // The 64-bit signature survives (it travels as a hex string).
+        assert_eq!(back.signature, ck.signature);
+        assert_eq!(back.cursor, ck.cursor);
+        assert_eq!(back.stride, ck.stride);
+        assert_eq!(back.best_cycles, ck.best_cycles);
+        assert_eq!(back.best_target, ck.best_target);
+        assert_eq!(back.evaluated, ck.evaluated);
+        assert_eq!(back.pruned_bound, ck.pruned_bound);
+        assert_eq!(back.frontier.len(), 2);
+        assert_eq!(back.samples.len(), 1);
+        assert_eq!(back.frontier[0].spec, ck.frontier[0].spec);
+        assert_eq!(back.frontier[0].result, ck.frontier[0].result);
+        assert_eq!(back.frontier[0].cached, ck.frontier[0].cached);
+    }
+
+    #[test]
+    fn empty_incumbent_serializes_as_null() {
+        let mut ck = checkpoint();
+        ck.best_cycles = u64::MAX;
+        let text = ck.to_json().to_string();
+        assert!(text.contains("\"best_cycles\":null"), "{text}");
+        let back = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.best_cycles, u64::MAX);
+    }
+
+    #[test]
+    fn save_and_load_are_atomic_siblings() {
+        let path = std::env::temp_dir().join(format!(
+            "acadl_ck_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let ck = checkpoint();
+        ck.save(&path).unwrap();
+        // No tmp residue after a successful write.
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.cursor, ck.cursor);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_and_signature_are_validated() {
+        let mut ck = checkpoint();
+        ck.version = 99;
+        let err = Checkpoint::from_json(&Json::parse(&ck.to_json().to_string()).unwrap());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("version 99"), "wrong error");
+    }
+}

@@ -7,18 +7,43 @@
 //! is what collapses the axes a given target cannot observe, so e.g. the
 //! second backend of every pair and every tile/order variant on a
 //! systolic target are served from cache.
+//!
+//! The memo is **bounded**: at most `capacity` results are retained, with
+//! least-recently-used eviction (a `tick → key` index beside the map, so
+//! both lookup and eviction are `O(log n)`).  A streaming sweep over
+//! hundreds of thousands of candidates therefore holds a fixed-size
+//! result cache instead of growing with the space; evictions only cost
+//! re-simulation, never correctness.
+//!
+//! [`JobSpec::canonical_key`]: crate::coordinator::job::JobSpec::canonical_key
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::coordinator::job::JobResult;
 
+/// Default retention: comfortably above every built-in space and any
+/// plausible wave, small enough that a million-candidate sweep stays flat.
+pub const DEFAULT_MEMO_CAPACITY: usize = 4096;
+
 /// A single-exploration memo (the orchestration loop is single-threaded;
 /// parallelism lives inside the pool, so no locking here).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Memo {
-    map: HashMap<u64, JobResult>,
+    /// key → (last-use tick, result).
+    map: HashMap<u64, (u64, JobResult)>,
+    /// last-use tick → key (the LRU order; ticks are unique).
+    order: BTreeMap<u64, u64>,
+    tick: u64,
+    capacity: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
+}
+
+impl Default for Memo {
+    fn default() -> Self {
+        Memo::with_capacity(DEFAULT_MEMO_CAPACITY)
+    }
 }
 
 impl Memo {
@@ -26,17 +51,61 @@ impl Memo {
         Memo::default()
     }
 
-    /// Non-counting probe (wave scheduling).
+    /// An explicitly bounded memo (`capacity` 0 disables retention —
+    /// every probe misses, which is valid, just slow).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Memo {
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            tick: 0,
+            capacity,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Non-counting probe (wave scheduling).  Does not refresh recency.
     pub fn contains(&self, key: u64) -> bool {
         self.map.contains_key(&key)
     }
 
-    pub fn get(&self, key: u64) -> Option<&JobResult> {
-        self.map.get(&key)
+    /// Fetch a result, refreshing its LRU position.
+    pub fn get(&mut self, key: u64) -> Option<&JobResult> {
+        let tick = self.next_tick();
+        match self.map.get_mut(&key) {
+            Some((last, result)) => {
+                self.order.remove(last);
+                self.order.insert(tick, key);
+                *last = tick;
+                Some(result)
+            }
+            None => None,
+        }
     }
 
     pub fn insert(&mut self, key: u64, result: JobResult) {
-        self.map.insert(key, result);
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.next_tick();
+        if let Some((last, _)) = self.map.get(&key) {
+            self.order.remove(last);
+        } else if self.map.len() >= self.capacity {
+            // Evict the least-recently-used entry to make room.
+            if let Some((&oldest, &victim)) = self.order.iter().next() {
+                self.order.remove(&oldest);
+                self.map.remove(&victim);
+                self.evictions += 1;
+            }
+        }
+        self.order.insert(tick, key);
+        self.map.insert(key, (tick, result));
     }
 
     /// Record that a candidate was served from the memo.
@@ -54,6 +123,16 @@ impl Memo {
         (self.hits, self.misses)
     }
 
+    /// Entries evicted by the LRU bound so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The retention bound this memo was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Distinct results stored.
     pub fn len(&self) -> usize {
         self.map.len()
@@ -61,5 +140,73 @@ impl Memo {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::SimModeSpec;
+
+    fn result(id: u64) -> JobResult {
+        JobResult {
+            id,
+            target: "t".into(),
+            workload: "w".into(),
+            mode: SimModeSpec::Timed,
+            cycles: id,
+            instructions: 0,
+            ipc: 0.0,
+            utilization: 0.0,
+            numerics_ok: None,
+            wall_micros: 0,
+            error: None,
+            area_proxy: 1.0,
+        }
+    }
+
+    #[test]
+    fn capacity_bounds_entries_and_counts_evictions() {
+        let mut m = Memo::with_capacity(3);
+        for k in 0..5u64 {
+            m.insert(k, result(k));
+        }
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.evictions(), 2);
+        // Oldest two (0, 1) were evicted; newest three remain.
+        assert!(!m.contains(0) && !m.contains(1));
+        assert!(m.contains(2) && m.contains(3) && m.contains(4));
+    }
+
+    #[test]
+    fn get_refreshes_lru_order() {
+        let mut m = Memo::with_capacity(2);
+        m.insert(1, result(1));
+        m.insert(2, result(2));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert_eq!(m.get(1).unwrap().id, 1);
+        m.insert(3, result(3));
+        assert!(m.contains(1) && m.contains(3));
+        assert!(!m.contains(2));
+        assert_eq!(m.evictions(), 1);
+    }
+
+    #[test]
+    fn reinsert_updates_in_place_without_eviction() {
+        let mut m = Memo::with_capacity(2);
+        m.insert(1, result(1));
+        m.insert(2, result(2));
+        m.insert(1, result(10));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.evictions(), 0);
+        assert_eq!(m.get(1).unwrap().cycles, 10);
+    }
+
+    #[test]
+    fn zero_capacity_disables_retention() {
+        let mut m = Memo::with_capacity(0);
+        m.insert(1, result(1));
+        assert!(m.is_empty());
+        assert!(m.get(1).is_none());
     }
 }

@@ -1,81 +1,77 @@
 //! Design-space exploration (§7's "optimization loop of hardware-aware
 //! NAS and DNN/HW Co-Design"): enumerate → prune → simulate → frontier.
 //!
-//! The pipeline:
+//! The pipeline is **streaming** ([`stream::explore_source`]): candidates
+//! are pulled lazily from a [`stream::CandidateSource`] one lookahead
+//! window at a time, so a million-candidate sweep holds `O(window +
+//! frontier + reservoir)` state, never the whole space.
 //!
-//! 1. **Enumerate** ([`space::DseSpace`]) the (arch config × tile × loop
-//!    order × backend) candidate cross-product, via the arch layer's
-//!    enumeration hooks.
-//! 2. **Pre-filter** each candidate with its analytical cycle lower bound
-//!    ([`lower_bound_cycles`]: the per-target `analytical::Roofline`).
-//!    Candidates are evaluated in waves, cheapest bound first; once a
-//!    bound exceeds the best simulated cycle count so far, the entire
-//!    remaining (sorted) tail is pruned without simulating.  Because the
-//!    bound is sound (simulated cycles can never undercut it — a tested
-//!    property), pruning can never discard a cycle-optimal candidate.
-//!    Pruning serves the *cycle* objective: a cut candidate never gets an
-//!    area-frontier chance, so with pruning on, the reported frontier
-//!    spans the evaluated candidates (the report says so; `--no-prune
-//!    true` computes the exhaustive frontier).
+//! 1. **Enumerate lazily** ([`space::DseSpace::spec_at`],
+//!    [`space::FileSpace::spec_at`]): each candidate is decoded from its
+//!    enumeration index on demand.  File-driven spaces parse and
+//!    elaborate the `.acadl` description **once** and stamp out
+//!    candidates by `param` substitution.
+//! 2. **Pre-filter** each candidate analytically before any machine is
+//!    built: infeasible candidates (operands over data-memory capacity,
+//!    bound over budget — the same predicate `execute_on` rejects) are
+//!    cut in every [`stream::PruneMode`] except `Off`; `Cycles` also
+//!    cuts candidates whose sound cycle lower bound exceeds the best
+//!    simulated cycles (optimum-preserving); `Frontier` instead cuts
+//!    candidates weakly dominated by an evaluated point
+//!    (frontier-preserving).  Every cut is accounted per wave in
+//!    [`DseReport::waves`].
 //! 3. **Evaluate** each surviving wave in parallel on the coordinator
-//!    pool (which shares cached machines), **memoizing** results by the
-//!    canonical job-spec hash ([`memo::Memo`]) so aliased candidates
-//!    (second backend, tile/order on targets that ignore them) cost
-//!    nothing.
-//! 4. **Report** the cycles-vs-area Pareto frontier plus pruning and
-//!    cache statistics.
+//!    pool (which shares cached machines), **memoizing** results in a
+//!    bounded LRU ([`memo::Memo`]) keyed by the canonical job-spec hash,
+//!    so aliased candidates (second backend, tile/order on targets that
+//!    ignore them) cost nothing.
+//! 4. **Maintain** the running cycles-vs-area Pareto frontier plus a
+//!    deterministically thinned reservoir of non-frontier samples, and
+//!    optionally **checkpoint** the sweep state to JSON
+//!    ([`checkpoint::Checkpoint`]) so `dse --resume <file>` continues an
+//!    interrupted sweep.
 //!
 //! # CLI quickstart
 //!
 //! ```text
-//! acadl-cli dse                        # standard sweep: 136 candidates, 32³ GeMM
-//! acadl-cli dse --dim 64               # bigger workload
-//! acadl-cli dse --quick true --dim 8   # tiny smoke sweep (CI)
-//! acadl-cli dse --no-prune true        # exhaustive (validates the pre-filter)
-//! acadl-cli dse --workers 8            # pool width
+//! acadl-cli dse                          # standard sweep: 136 candidates, 32³ GeMM
+//! acadl-cli dse --dim 64                 # bigger workload
+//! acadl-cli dse --quick true --dim 8     # tiny smoke sweep (CI)
+//! acadl-cli dse --no-prune true          # exhaustive (validates the pre-filter)
+//! acadl-cli dse --arch-file sweep.acadl  # file-driven `param` space, streamed
+//! acadl-cli dse --arch-file sweep.acadl --checkpoint sweep.ck --checkpoint-every 5000
+//! acadl-cli dse --arch-file sweep.acadl --resume sweep.ck   # continue
 //! ```
 //!
-//! Programmatic: `dse::explore(&DseSpace::standard(32), workers, true)`.
+//! Programmatic: `dse::explore(&DseSpace::standard(32), workers, true)`,
+//! or [`stream::explore_source`] with a [`stream::DseConfig`] for
+//! windowing, checkpoints, and bounded point retention.
 
+pub mod checkpoint;
 pub mod memo;
 pub mod space;
+pub mod stream;
 
+pub use checkpoint::{Checkpoint, CheckpointCfg};
 pub use memo::Memo;
 pub use space::{DseSpace, FileSpace};
+pub use stream::{
+    explore_source, CandidateSource, DseConfig, FileSource, PruneMode, SpaceSource, VecSource,
+    WaveStats, DEFAULT_WINDOW,
+};
 
-use std::collections::{HashMap, HashSet};
-use std::time::{Duration, Instant};
+use std::collections::HashSet;
+use std::time::Duration;
 
-use crate::coordinator::job::{JobResult, JobSpec, Workload};
-use crate::coordinator::pool;
-use crate::dnn::graph::DnnGraph;
-use crate::dnn::lowering::roofline_ops;
-use crate::mapping::gemm::GemmParams;
+use crate::coordinator::job::{JobResult, JobSpec};
 use crate::metrics::Table;
 
-/// Sound lower bound on the timed cycles of `spec`: the target's roofline
-/// summed over the workload's operator sequence
-/// ([`crate::dnn::lowering::roofline_ops`] — GeMM bounds for the
-/// GeMM-backed operators, streaming-traffic bounds for the row-wise
-/// transformer operators).  Target-side padding (Γ̈ rounds dims up to 8)
-/// only raises true cycles, so bounding the unpadded problem stays sound.
+/// Sound lower bound on the timed cycles of `spec` — the single
+/// definition lives on [`JobSpec::lower_bound_cycles`] (shared with the
+/// coordinator's feasibility gate); this alias keeps the historical DSE
+/// entry point.
 pub fn lower_bound_cycles(spec: &JobSpec) -> u64 {
-    let rl = spec.target.roofline();
-    match &spec.workload {
-        Workload::Gemm { m, k, n, .. } => rl.gemm_cycles(&GemmParams::new(*m, *k, *n)),
-        Workload::Mlp { small, batch } => {
-            let g = if *small {
-                DnnGraph::mlp_small()
-            } else {
-                DnnGraph::mlp_784_256_128_10()
-            };
-            roofline_ops(&g, *batch).iter().map(|op| rl.op_cycles(op)).sum()
-        }
-        Workload::Transformer { seq } => roofline_ops(&DnnGraph::tiny_transformer(), *seq)
-            .iter()
-            .map(|op| rl.op_cycles(op))
-            .sum(),
-    }
+    spec.lower_bound_cycles()
 }
 
 /// One explored candidate: its spec, bound, and (possibly cache-served)
@@ -92,11 +88,24 @@ pub struct DsePoint {
 /// Exploration statistics (the headline numbers the CLI prints).
 #[derive(Debug, Clone, Default)]
 pub struct DseStats {
+    /// Candidates processed (the full space, unless the sweep was stopped
+    /// early — then the enumeration prefix up to the stop).
     pub candidates: usize,
     /// Candidates that received a result (simulated or cache-served).
     pub evaluated: usize,
-    /// Candidates cut by the analytical pre-filter.
+    /// Candidates cut by the analytical pre-filter (sum of the three
+    /// breakdowns below).
     pub pruned: usize,
+    /// … because the operand footprint exceeds the target's data-memory
+    /// capacity or the bound exceeds the cycle budget (`execute_on`
+    /// rejects these identically, so pruning them changes nothing).
+    pub pruned_infeasible: usize,
+    /// … because the sound cycle bound exceeds the incumbent
+    /// ([`PruneMode::Cycles`]).
+    pub pruned_bound: usize,
+    /// … because an evaluated point weakly dominates the candidate's
+    /// (bound, area) ([`PruneMode::Frontier`]).
+    pub pruned_dominated: usize,
     /// Unique simulations actually run.
     pub simulated: usize,
     pub cache_hits: usize,
@@ -104,161 +113,67 @@ pub struct DseStats {
     pub best_cycles: u64,
     pub best_target: String,
     pub wall: Duration,
+    /// Memo occupancy/bound/evictions at sweep end (the result cache is
+    /// LRU-bounded; evictions cost re-simulation, never correctness).
+    pub memo_entries: usize,
+    pub memo_capacity: usize,
+    pub memo_evictions: u64,
+    /// Peak candidates + retained points resident at once — the
+    /// bounded-memory guarantee, measured (compare against `candidates`).
+    pub peak_resident: usize,
+    /// Points restored from a `--resume` checkpoint rather than
+    /// evaluated this run.
+    pub restored: usize,
 }
 
 /// The exploration outcome: evaluated points (sorted by cycles, then
-/// area), Pareto-frontier indices into `points`, and statistics.
+/// area), Pareto-frontier indices into `points`, per-window prune/eval
+/// accounting, and statistics.
 ///
-/// With pruning on, `frontier` is the frontier **of the evaluated
-/// candidates**: pruning serves the cycle objective, so a candidate whose
-/// cycle bound exceeds the best (e.g. the minimum-area scalar OMA) is cut
-/// before its area-frontier merit is measured.  `explore(.., false)`
-/// yields the exhaustive frontier.
+/// With [`PruneMode::Cycles`], `frontier` is the frontier **of the
+/// evaluated candidates**: incumbent pruning serves the cycle objective,
+/// so a candidate whose cycle bound exceeds the best (e.g. the
+/// minimum-area scalar OMA) is cut before its area-frontier merit is
+/// measured.  [`PruneMode::Off`] and [`PruneMode::Frontier`] both yield
+/// the exhaustive frontier pair set.
 #[derive(Debug, Clone)]
 pub struct DseReport {
     pub points: Vec<DsePoint>,
     pub frontier: Vec<usize>,
+    /// One entry per lookahead window, in processing order.
+    pub waves: Vec<WaveStats>,
     pub stats: DseStats,
 }
 
-/// Run the exploration.  `prune = false` evaluates exhaustively (the
-/// validation mode the property tests compare against).
+/// Run the exploration over a built-in space.  `prune = false` evaluates
+/// exhaustively (the validation mode the property tests compare
+/// against).  Streams via [`stream::SpaceSource`]; every point is
+/// retained (in-process callers iterate the report), so use
+/// [`stream::explore_source`] directly for spaces too large to hold.
 pub fn explore(space: &DseSpace, workers: usize, prune: bool) -> DseReport {
-    explore_specs(space.enumerate(), workers, prune)
+    explore_source(
+        &mut SpaceSource::new(space),
+        &DseConfig::legacy(workers, prune),
+        None,
+    )
+    .expect("in-memory exploration without checkpoints cannot fail")
 }
 
-/// Explore an explicit candidate list — the entry point for spaces that
-/// don't come from [`DseSpace`], e.g. a `.acadl` file's `param` block
-/// ([`space::FileSpace`]).  Same pipeline: sort by analytical bound,
-/// prune the tail, evaluate waves in parallel with memoization.
+/// Explore an explicit candidate list — the entry point for hand-built
+/// spaces and small `.acadl` sweeps.  Same streaming pipeline over a
+/// [`stream::VecSource`].
 pub fn explore_specs(specs: Vec<JobSpec>, workers: usize, prune: bool) -> DseReport {
-    let t0 = Instant::now();
-    let mut cands: Vec<(JobSpec, u64)> = specs
-        .into_iter()
-        .map(|s| {
-            let lb = lower_bound_cycles(&s);
-            (s, lb)
-        })
-        .collect();
-    // Cheapest bound first: the most promising candidates simulate first,
-    // and the prunable tail becomes one contiguous cut.
-    cands.sort_by_key(|(s, lb)| (*lb, s.id));
-
-    let mut memo = Memo::new();
-    let mut points: Vec<DsePoint> = Vec::new();
-    let mut best = u64::MAX;
-    let mut best_target = String::new();
-    let mut pruned = 0usize;
-    let wave_len = (workers.max(1) * 2).max(8);
-
-    let mut i = 0;
-    while i < cands.len() {
-        if prune && cands[i].1 > best {
-            // Sorted ascending: every remaining bound also exceeds the
-            // best simulated cycles — cut the whole tail analytically.
-            pruned = cands.len() - i;
-            break;
-        }
-        let mut end = (i + wave_len).min(cands.len());
-        if prune {
-            // Keep the wave inside the still-plausible prefix.
-            while end > i + 1 && cands[end - 1].1 > best {
-                end -= 1;
-            }
-        }
-        let wave = &cands[i..end];
-
-        // Partition the wave: one representative simulation per canonical
-        // key; everything else is served from the memo.
-        let mut to_run: Vec<JobSpec> = Vec::new();
-        let mut scheduled: HashSet<u64> = HashSet::new();
-        let mut id_to_key: HashMap<u64, u64> = HashMap::new();
-        for (spec, _) in wave {
-            let key = spec.canonical_key();
-            if memo.contains(key) || !scheduled.insert(key) {
-                continue;
-            }
-            id_to_key.insert(spec.id, key);
-            to_run.push(spec.clone());
-        }
-        let ran_ids: HashSet<u64> = to_run.iter().map(|s| s.id).collect();
-        for r in pool::run_jobs(to_run, workers) {
-            let key = id_to_key[&r.id];
-            memo.insert(key, r);
-        }
-
-        // Serve every wave candidate and fold in the new best.
-        for (spec, lb) in wave {
-            let key = spec.canonical_key();
-            // run_jobs returns one result per spec, so the miss arm is
-            // unreachable in practice — but if the pool ever degrades, the
-            // candidate must still be *accounted for* (an error point, not
-            // a silent drop, or `evaluated + pruned == candidates` breaks).
-            let mut result = memo.get(key).cloned().unwrap_or_else(|| JobResult {
-                id: spec.id,
-                target: spec.target.describe(),
-                workload: spec.workload.describe(),
-                mode: spec.mode,
-                cycles: 0,
-                instructions: 0,
-                ipc: 0.0,
-                utilization: 0.0,
-                numerics_ok: None,
-                wall_micros: 0,
-                error: Some("worker pool returned no result for this job".into()),
-                area_proxy: spec.target.area_proxy(),
-            });
-            let cached = !ran_ids.contains(&spec.id);
-            if cached {
-                memo.note_hit();
-            } else {
-                memo.note_miss();
-            }
-            result.id = spec.id;
-            if result.error.is_none() && result.cycles > 0 && result.cycles < best {
-                best = result.cycles;
-                best_target = result.target.clone();
-            }
-            points.push(DsePoint {
-                spec: spec.clone(),
-                lower_bound: *lb,
-                result,
-                cached,
-            });
-        }
-        i = end;
-    }
-
-    points.sort_by(|a, b| {
-        (a.result.cycles, a.result.area_proxy as u64, a.spec.id).cmp(&(
-            b.result.cycles,
-            b.result.area_proxy as u64,
-            b.spec.id,
-        ))
-    });
-    let frontier = pareto_frontier(&points);
-    let (cache_hits, simulated) = memo.stats();
-    let failed = points.iter().filter(|p| p.result.error.is_some()).count();
-    DseReport {
-        stats: DseStats {
-            candidates: cands.len(),
-            evaluated: points.len(),
-            pruned,
-            simulated: simulated as usize,
-            cache_hits: cache_hits as usize,
-            failed,
-            best_cycles: best,
-            best_target,
-            wall: t0.elapsed(),
-        },
-        points,
-        frontier,
-    }
+    explore_source(
+        &mut VecSource::new(specs),
+        &DseConfig::legacy(workers, prune),
+        None,
+    )
+    .expect("in-memory exploration without checkpoints cannot fail")
 }
 
 /// Indices of the cycles-vs-area Pareto frontier among error-free points.
 /// Duplicate (cycles, area) pairs — memo aliases — are starred once.
-fn pareto_frontier(points: &[DsePoint]) -> Vec<usize> {
+pub(crate) fn pareto_frontier(points: &[DsePoint]) -> Vec<usize> {
     let mut out = Vec::new();
     for (i, p) in points.iter().enumerate() {
         if p.result.error.is_some() {
@@ -312,7 +227,8 @@ impl DseReport {
         t
     }
 
-    /// One-line statistics summary.
+    /// One-line statistics summary (plus a memo/memory line, and a
+    /// frontier caveat when incumbent pruning was active).
     pub fn summary(&self) -> String {
         let s = &self.stats;
         let mut line = format!(
@@ -339,10 +255,32 @@ impl DseReport {
             s.wall
         );
         if s.pruned > 0 {
-            // Pruning optimizes the *cycle* objective, so cut candidates
-            // (typically the high-bound, low-area scalar tail) never get
-            // an area-frontier chance — say so rather than implying the
-            // frontier is exhaustive.
+            line.push_str(&format!(
+                "\nprune breakdown: {} infeasible, {} over incumbent bound, {} dominated",
+                s.pruned_infeasible, s.pruned_bound, s.pruned_dominated
+            ));
+        }
+        line.push_str(&format!(
+            "\nmemo: {}/{} entries, {} hits / {} misses, {} evicted; peak resident {} of {} candidates",
+            s.memo_entries,
+            s.memo_capacity,
+            s.cache_hits,
+            s.simulated,
+            s.memo_evictions,
+            s.peak_resident,
+            s.candidates
+        ));
+        if s.restored > 0 {
+            line.push_str(&format!(
+                "\nresumed from checkpoint: {} points restored",
+                s.restored
+            ));
+        }
+        if s.pruned_bound > 0 {
+            // Incumbent pruning optimizes the *cycle* objective, so cut
+            // candidates (typically the high-bound, low-area scalar tail)
+            // never get an area-frontier chance — say so rather than
+            // implying the frontier is exhaustive.
             line.push_str(
                 "\nnote: frontier spans evaluated candidates only — pruning targets the \
                  cycle objective; rerun with pruning off for the exhaustive frontier",
@@ -355,7 +293,7 @@ impl DseReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{SimModeSpec, TargetSpec};
+    use crate::coordinator::job::{SimModeSpec, TargetSpec, Workload};
     use crate::sim::backend::BackendKind;
 
     fn gemm_spec(target: TargetSpec, dim: usize) -> JobSpec {
@@ -420,6 +358,17 @@ mod tests {
         assert_eq!(rep.stats.failed, 0, "{}", rep.summary());
         assert!(rep.stats.cache_hits > 0, "{}", rep.summary());
         assert!(!rep.frontier.is_empty());
+        // The streaming engine accounts every candidate and its waves.
+        assert_eq!(
+            rep.stats.evaluated + rep.stats.pruned,
+            rep.stats.candidates,
+            "{}",
+            rep.summary()
+        );
+        assert!(!rep.waves.is_empty());
+        let wave_eval: usize = rep.waves.iter().map(|w| w.evaluated).sum();
+        assert_eq!(wave_eval, rep.stats.evaluated);
+        assert!(rep.stats.peak_resident <= rep.stats.candidates);
         // Frontier points are mutually non-dominating.
         for &i in &rep.frontier {
             for &j in &rep.frontier {

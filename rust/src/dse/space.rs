@@ -87,6 +87,87 @@ impl DseSpace {
         }
     }
 
+    /// Total candidate count of [`Self::enumerate`], computed without
+    /// materializing anything.
+    pub fn total(&self) -> u64 {
+        let b = self.backends.len() as u64;
+        let oma = if self.include_oma {
+            (OmaConfig::enumerate_cache_variants().len() * self.tiles.len() * self.orders.len())
+                as u64
+        } else {
+            0
+        };
+        let sys = SystolicConfig::enumerate_grids(self.max_edge).len() as u64;
+        let gam = GammaConfig::enumerate_units(self.max_units).len() as u64;
+        (oma + sys + gam) * b
+    }
+
+    /// Decode enumeration index `idx` into its candidate — the lazy
+    /// counterpart of [`Self::enumerate`] (`spec_at(i)` equals
+    /// `enumerate()[i]`, a tested invariant).  `None` past the end.
+    ///
+    /// The blocks appear in enumeration order: OMA (cache × tile × order
+    /// × backend, backend fastest), then systolic grids × backend, then
+    /// Γ̈ units × backend.
+    pub fn spec_at(&self, idx: u64) -> Option<JobSpec> {
+        let nb = self.backends.len() as u64;
+        if nb == 0 {
+            return None;
+        }
+        let mut rest = idx;
+        let spec = |target: TargetSpec, workload: Workload, backend: BackendKind| JobSpec {
+            id: idx,
+            target,
+            workload,
+            mode: SimModeSpec::Timed,
+            backend,
+            max_cycles: self.max_cycles,
+        };
+        if self.include_oma {
+            let caches = OmaConfig::enumerate_cache_variants();
+            let (nt, no) = (self.tiles.len() as u64, self.orders.len() as u64);
+            let oma_block = caches.len() as u64 * nt * no * nb;
+            if rest < oma_block {
+                let backend = self.backends[(rest % nb) as usize];
+                let order = self.orders[((rest / nb) % no) as usize];
+                let tile = self.tiles[((rest / (nb * no)) % nt) as usize];
+                let cache = caches[(rest / (nb * no * nt)) as usize];
+                return Some(spec(
+                    TargetSpec::Oma {
+                        cache,
+                        mac_latency: None,
+                    },
+                    self.gemm(tile, Some(order)),
+                    backend,
+                ));
+            }
+            rest -= oma_block;
+        }
+        let grids = SystolicConfig::enumerate_grids(self.max_edge);
+        let sys_block = grids.len() as u64 * nb;
+        if rest < sys_block {
+            let backend = self.backends[(rest % nb) as usize];
+            let (rows, cols) = grids[(rest / nb) as usize];
+            return Some(spec(
+                TargetSpec::Systolic { rows, cols },
+                self.gemm(None, None),
+                backend,
+            ));
+        }
+        rest -= sys_block;
+        let units = GammaConfig::enumerate_units(self.max_units);
+        if rest < units.len() as u64 * nb {
+            let backend = self.backends[(rest % nb) as usize];
+            let u = units[(rest / nb) as usize];
+            return Some(spec(
+                TargetSpec::Gamma { units: u },
+                self.gemm(None, None),
+                backend,
+            ));
+        }
+        None
+    }
+
     /// Every candidate as a timed job spec (ids are enumeration order).
     pub fn enumerate(&self) -> Vec<JobSpec> {
         let mut specs = Vec::new();
@@ -234,43 +315,70 @@ impl FileSpace {
         })
     }
 
+    /// Total candidate count: the axes' cross-product times the backend
+    /// count, computed without materializing anything.  Errors only when
+    /// the product overflows `u64` (a nonsense space).
+    pub fn total(&self) -> Result<u64, String> {
+        let mut t = self.backends.len() as u64;
+        for axis in &self.axes {
+            t = t
+                .checked_mul(axis.values.len() as u64)
+                .ok_or_else(|| "param cross-product overflows u64".to_string())?;
+        }
+        Ok(t)
+    }
+
+    /// Decode enumeration index `idx` into its candidate by mixed-radix
+    /// substitution into the cached base — the lazy counterpart of
+    /// [`Self::enumerate`] (`spec_at(i)` equals `enumerate()[i]`, a
+    /// tested invariant).  Axis 0 is the most significant digit, the
+    /// last axis varies faster, the backend fastest of all — exactly the
+    /// order the materialized cross-product used.  `O(axes)` per call:
+    /// the `.acadl` file was parsed and elaborated **once**; stamping a
+    /// candidate re-applies `param` bindings, never the file.
+    pub fn spec_at(&self, idx: u64) -> Result<JobSpec, String> {
+        let nb = self.backends.len() as u64;
+        if nb == 0 || idx >= self.total()? {
+            return Err(format!("candidate index {idx} out of range"));
+        }
+        let backend = self.backends[(idx % nb) as usize];
+        let mut rest = idx / nb;
+        let mut c = self.base.clone();
+        // Decode least-significant (last axis) first, apply in axis order
+        // afterwards so interacting keys behave exactly as before.
+        let mut indices = vec![0usize; self.axes.len()];
+        for (i, axis) in self.axes.iter().enumerate().rev() {
+            let radix = axis.values.len() as u64;
+            indices[i] = (rest % radix) as usize;
+            rest /= radix;
+        }
+        for (axis, &ix) in self.axes.iter().zip(&indices) {
+            apply_param(&mut c, &axis.key, &axis.values[ix])
+                .map_err(|e| format!("param `{}`: {e}", axis.key))?;
+        }
+        Ok(JobSpec {
+            id: idx,
+            target: c.target,
+            workload: Workload::Gemm {
+                m: self.dim,
+                k: self.dim,
+                n: self.dim,
+                tile: c.tile,
+                order: c.order,
+            },
+            mode: SimModeSpec::Timed,
+            backend,
+            max_cycles: self.max_cycles,
+        })
+    }
+
     /// Every candidate of the axes' cross-product as a timed job spec
     /// (ids are enumeration order).  A file with no `param` axes yields
-    /// exactly the base candidate.
+    /// exactly the base candidate.  This is the materialized view of
+    /// [`Self::spec_at`] — callers that can stream should use the lazy
+    /// decode instead.
     pub fn enumerate(&self) -> Result<Vec<JobSpec>, String> {
-        let mut cands = vec![self.base.clone()];
-        for axis in &self.axes {
-            let mut next = Vec::with_capacity(cands.len() * axis.values.len());
-            for c in &cands {
-                for v in &axis.values {
-                    let mut applied = c.clone();
-                    apply_param(&mut applied, &axis.key, v)
-                        .map_err(|e| format!("param `{}`: {e}", axis.key))?;
-                    next.push(applied);
-                }
-            }
-            cands = next;
-        }
-        let mut specs = Vec::with_capacity(cands.len() * self.backends.len());
-        for c in cands {
-            for &backend in &self.backends {
-                specs.push(JobSpec {
-                    id: specs.len() as u64,
-                    target: c.target.clone(),
-                    workload: Workload::Gemm {
-                        m: self.dim,
-                        k: self.dim,
-                        n: self.dim,
-                        tile: c.tile,
-                        order: c.order,
-                    },
-                    mode: SimModeSpec::Timed,
-                    backend,
-                    max_cycles: self.max_cycles,
-                });
-            }
-        }
-        Ok(specs)
+        (0..self.total()?).map(|i| self.spec_at(i)).collect()
     }
 }
 
@@ -350,6 +458,39 @@ param cols in [2, 4, 8]
         // No binding: not sweepable.
         let unbound = crate::adl::load_str("arch \"free\"").unwrap();
         assert!(FileSpace::from_arch(&unbound, 8).is_err());
+    }
+
+    #[test]
+    fn lazy_decode_matches_materialized_enumeration() {
+        // Built-in spaces: every index decodes to exactly the spec the
+        // materialized enumeration put there.
+        for space in [DseSpace::standard(32), DseSpace::quick(8)] {
+            let specs = space.enumerate();
+            assert_eq!(space.total(), specs.len() as u64);
+            for (i, s) in specs.iter().enumerate() {
+                assert_eq!(space.spec_at(i as u64).as_ref(), Some(s), "index {i}");
+            }
+            assert!(space.spec_at(space.total()).is_none());
+        }
+
+        // File spaces: same invariant across a multi-axis param block.
+        let src = r#"
+arch "sweep" targets oma {
+  cache = true
+}
+param cache in [true, false]
+param tile in [2, 4, 8]
+param order in [ijk, kij]
+"#;
+        let arch = crate::adl::load_str(src).unwrap();
+        let space = FileSpace::from_arch(&arch, 8).unwrap();
+        let specs = space.enumerate().unwrap();
+        assert_eq!(space.total().unwrap(), specs.len() as u64);
+        assert_eq!(specs.len(), 12);
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(&space.spec_at(i as u64).unwrap(), s, "index {i}");
+        }
+        assert!(space.spec_at(space.total().unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,834 @@
+//! The streaming exploration engine: lazy enumeration → windowed
+//! analytical pre-filter → wave-parallel simulation → bounded-memory
+//! Pareto maintenance, with optional checkpoint/resume.
+//!
+//! Memory is `O(window + frontier + samples)`, never `O(space)`:
+//! candidates are *pulled* from a [`CandidateSource`] one lookahead
+//! window at a time, each window is sorted cheapest-bound-first and fed
+//! to the coordinator pool in waves, and evaluated points flow into a
+//! running Pareto frontier plus a deterministically thinned reservoir of
+//! non-frontier samples.  A million-candidate sweep therefore holds a
+//! few thousand candidates at its peak — `DseStats::peak_resident`
+//! measures exactly that.
+//!
+//! # Pre-filter soundness
+//!
+//! Three prune predicates, all applied **before** a machine is built:
+//!
+//! * **Infeasibility** (`JobSpec::infeasible`, any [`PruneMode`] except
+//!   `Off`): the operand set exceeds the target's data-memory capacity,
+//!   or the sound cycle lower bound exceeds the budget.  `execute_on`
+//!   rejects on *exactly the same predicate*, so an exhaustive run turns
+//!   these candidates into error rows — which never join the frontier —
+//!   and pruning them changes nothing.
+//! * **Incumbent bound** ([`PruneMode::Cycles`]): cut when the sound
+//!   lower bound exceeds the best simulated cycles so far.  Such a
+//!   candidate can never be cycle-optimal, so the reported optimum is
+//!   preserved (the frontier then spans evaluated candidates only — the
+//!   summary says so).
+//! * **Domination** ([`PruneMode::Frontier`]): cut when some evaluated
+//!   point already weakly dominates the candidate's `(bound, area)`.
+//!   Since true cycles ≥ bound, the candidate is weakly dominated by an
+//!   evaluated point, and by transitivity of `≤` the *exact* frontier
+//!   pair set is preserved (see DESIGN.md "Scaling DSE" for the
+//!   argument; the property tests enforce it).
+//!
+//! # Checkpoints
+//!
+//! With a [`CheckpointCfg`], sweep state (cursor, incumbent, frontier,
+//! reservoir, thinning stride, counters) is serialized after any window
+//! that crosses the `every` threshold, atomically (tmp + rename).  The
+//! engine only stops at window boundaries, so a resumed run pulls the
+//! same windows the uninterrupted run would have — evaluated sets and
+//! cycle results are identical; only memo-served `src` flags can differ
+//! (the memo is not checkpointed; losing it costs re-simulation, never
+//! correctness).
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use crate::adl::elab::{apply_param, ParamValue};
+use crate::coordinator::job::{JobResult, JobSpec};
+use crate::coordinator::pool;
+use crate::dse::checkpoint::{Checkpoint, CheckpointCfg};
+use crate::dse::memo::{Memo, DEFAULT_MEMO_CAPACITY};
+use crate::dse::space::{DseSpace, FileSpace};
+use crate::dse::{pareto_frontier, DsePoint, DseReport, DseStats};
+use crate::util::hash::fnv1a_str;
+
+/// Default lookahead window: enough that every built-in space fits in
+/// one window (reproducing the old global bound-sort exactly), small
+/// enough that a million-candidate sweep stays flat.
+pub const DEFAULT_WINDOW: usize = 2048;
+
+/// What the analytical pre-filter is allowed to cut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneMode {
+    /// Evaluate everything — the validation baseline the property tests
+    /// compare against.
+    Off,
+    /// Infeasibility + incumbent-cycle pruning.  Preserves the reported
+    /// **optimum**; the frontier spans evaluated candidates only.
+    Cycles,
+    /// Infeasibility + domination pruning against the running frontier.
+    /// Preserves the **exact Pareto frontier pair set** (and therefore
+    /// the optimum).
+    Frontier,
+}
+
+/// Streaming-engine knobs.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub workers: usize,
+    pub prune: PruneMode,
+    /// Candidates pulled and bound-sorted at a time.
+    pub window: usize,
+    /// LRU retention bound of the cross-wave result memo.
+    pub memo_capacity: usize,
+    /// Maximum non-frontier points retained for the report table
+    /// (`usize::MAX` keeps everything — the in-process API default).
+    pub keep_points: usize,
+    pub checkpoint: Option<CheckpointCfg>,
+    /// Stop at the first window boundary after this many candidates have
+    /// been processed *this run* (writing a checkpoint when configured) —
+    /// deterministic mid-sweep interruption for tests, CI, and sharded
+    /// sweeps.
+    pub stop_after: Option<u64>,
+}
+
+impl DseConfig {
+    pub fn new(workers: usize) -> Self {
+        DseConfig {
+            workers,
+            prune: PruneMode::Cycles,
+            window: DEFAULT_WINDOW,
+            memo_capacity: DEFAULT_MEMO_CAPACITY,
+            keep_points: usize::MAX,
+            checkpoint: None,
+            stop_after: None,
+        }
+    }
+
+    /// The configuration behind the legacy `explore(.., prune: bool)`
+    /// entry points.
+    pub fn legacy(workers: usize, prune: bool) -> Self {
+        DseConfig {
+            prune: if prune { PruneMode::Cycles } else { PruneMode::Off },
+            ..DseConfig::new(workers)
+        }
+    }
+}
+
+/// Per-window prune/evaluation accounting (the "wave" a report row
+/// groups by: one lookahead window = one scheduling wave of the sweep).
+#[derive(Debug, Clone, Default)]
+pub struct WaveStats {
+    pub index: usize,
+    /// Enumeration-id range pulled into this window (inclusive).
+    pub first_id: u64,
+    pub last_id: u64,
+    pub pulled: usize,
+    pub evaluated: usize,
+    pub pruned_infeasible: usize,
+    pub pruned_bound: usize,
+    pub pruned_dominated: usize,
+    pub simulated: usize,
+    pub cache_hits: usize,
+}
+
+/// A lazily enumerable candidate space.  Implementations yield specs in
+/// a **deterministic enumeration order** with `id` equal to the
+/// enumeration index — that is what makes cursors checkpointable.
+pub trait CandidateSource {
+    /// Total candidates, when cheaply known (reporting only).
+    fn len_hint(&self) -> Option<u64>;
+    /// The next candidate, or `None` when the space is exhausted.
+    fn next_spec(&mut self) -> Option<JobSpec>;
+    /// Position the source so the next yielded candidate has id
+    /// `cursor` (a no-op past the end).
+    fn seek(&mut self, cursor: u64);
+    /// Stable identity of the space: a checkpoint written against one
+    /// source refuses to resume against a different one.
+    fn signature(&self) -> u64;
+}
+
+/// An already-materialized candidate list (the legacy `explore_specs`
+/// path and hand-built sweeps).  Seeking treats the cursor as an index,
+/// which coincides with ids for every in-tree producer.
+pub struct VecSource {
+    specs: Vec<JobSpec>,
+    pos: usize,
+}
+
+impl VecSource {
+    pub fn new(specs: Vec<JobSpec>) -> Self {
+        VecSource { specs, pos: 0 }
+    }
+}
+
+impl CandidateSource for VecSource {
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.specs.len() as u64)
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        let s = self.specs.get(self.pos).cloned();
+        if s.is_some() {
+            self.pos += 1;
+        }
+        s
+    }
+
+    fn seek(&mut self, cursor: u64) {
+        self.pos = (cursor as usize).min(self.specs.len());
+    }
+
+    fn signature(&self) -> u64 {
+        let mut repr = String::from("dse-vec:");
+        for s in &self.specs {
+            repr.push_str(&s.to_json().to_string());
+            repr.push(';');
+        }
+        fnv1a_str(&repr)
+    }
+}
+
+/// Lazy enumeration of a built-in [`DseSpace`] via its index decode —
+/// `O(1)` memory and `O(1)` seek.
+pub struct SpaceSource {
+    space: DseSpace,
+    cursor: u64,
+    total: u64,
+}
+
+impl SpaceSource {
+    pub fn new(space: &DseSpace) -> Self {
+        SpaceSource {
+            space: space.clone(),
+            cursor: 0,
+            total: space.total(),
+        }
+    }
+}
+
+impl CandidateSource for SpaceSource {
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.total)
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        let s = self.space.spec_at(self.cursor);
+        if s.is_some() {
+            self.cursor += 1;
+        }
+        s
+    }
+
+    fn seek(&mut self, cursor: u64) {
+        self.cursor = cursor.min(self.total);
+    }
+
+    fn signature(&self) -> u64 {
+        let s = &self.space;
+        let orders: Vec<&str> = s.orders.iter().map(|o| o.name()).collect();
+        let backends: Vec<&str> = s.backends.iter().map(|b| b.name()).collect();
+        fnv1a_str(&format!(
+            "dse-space:dim={},max_edge={},max_units={},oma={},tiles={:?},orders={:?},\
+             backends={:?},max_cycles={}",
+            s.dim, s.max_edge, s.max_units, s.include_oma, s.tiles, orders, backends, s.max_cycles
+        ))
+    }
+}
+
+fn param_value_repr(v: &ParamValue) -> String {
+    match v {
+        ParamValue::Int(i) => i.to_string(),
+        ParamValue::Bool(b) => b.to_string(),
+        ParamValue::Name(n) => n.clone(),
+    }
+}
+
+/// Lazy enumeration of a `.acadl` `param` cross-product: the file is
+/// parsed and elaborated **once** (into the [`FileSpace`]'s base
+/// candidate + axes); each candidate is stamped out by mixed-radix
+/// substitution — `O(axes)` per pull, `O(1)` seek, no re-parse.
+pub struct FileSource {
+    space: FileSpace,
+    cursor: u64,
+    total: u64,
+}
+
+impl FileSource {
+    /// Validates every axis value against the base target family up
+    /// front, so streaming never trips over a bad `param` mid-sweep
+    /// (`apply_param` only inspects the key, the value, and the family —
+    /// and the family never changes — so per-value validation against
+    /// the base is exhaustive).
+    pub fn new(space: &FileSpace) -> Result<Self, String> {
+        let total = space.total()?;
+        for axis in &space.axes {
+            for v in &axis.values {
+                let mut probe = space.base.clone();
+                apply_param(&mut probe, &axis.key, v)
+                    .map_err(|e| format!("param `{}`: {e}", axis.key))?;
+            }
+        }
+        Ok(FileSource {
+            space: space.clone(),
+            cursor: 0,
+            total,
+        })
+    }
+}
+
+impl CandidateSource for FileSource {
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.total)
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        if self.cursor >= self.total {
+            return None;
+        }
+        let s = self
+            .space
+            .spec_at(self.cursor)
+            .expect("axes validated at FileSource construction");
+        self.cursor += 1;
+        Some(s)
+    }
+
+    fn seek(&mut self, cursor: u64) {
+        self.cursor = cursor.min(self.total);
+    }
+
+    fn signature(&self) -> u64 {
+        let s = &self.space;
+        let axes: Vec<String> = s
+            .axes
+            .iter()
+            .map(|a| {
+                let vals: Vec<String> = a.values.iter().map(param_value_repr).collect();
+                format!("{}={}", a.key, vals.join("|"))
+            })
+            .collect();
+        let backends: Vec<&str> = s.backends.iter().map(|b| b.name()).collect();
+        fnv1a_str(&format!(
+            "dse-file:base={},tile={:?},order={:?},axes={:?},dim={},backends={:?},max_cycles={}",
+            s.base.target.to_json(),
+            s.base.tile,
+            s.base.order.map(|o| o.name()),
+            axes,
+            s.dim,
+            backends,
+            s.max_cycles
+        ))
+    }
+}
+
+/// Does any frontier point weakly dominate a candidate whose cycles are
+/// at least `lb` and whose area is `area`?
+fn dominated_by_frontier(frontier: &[DsePoint], lb: u64, area: f64) -> bool {
+    frontier
+        .iter()
+        .any(|f| f.result.error.is_none() && f.result.cycles <= lb && f.result.area_proxy <= area)
+}
+
+/// Deterministic reservoir thinning: a point is retained iff its
+/// enumeration id is a multiple of the current stride; when the
+/// reservoir overflows `keep`, the stride doubles and the reservoir is
+/// re-filtered.  No RNG — the retained set depends only on ids, `keep`,
+/// and the processing order, so a resumed sweep (which restores the
+/// stride) reproduces it.
+fn thin_into(samples: &mut Vec<DsePoint>, p: DsePoint, stride: &mut u64, keep: usize) {
+    if keep == 0 || p.spec.id % *stride != 0 {
+        return;
+    }
+    samples.push(p);
+    while samples.len() > keep {
+        *stride = stride.saturating_mul(2);
+        samples.retain(|q| q.spec.id % *stride == 0);
+    }
+}
+
+/// Fold an evaluated point into the running frontier/reservoir.
+/// Error-free points join the frontier when no member weakly dominates
+/// them (displacing members they dominate into the reservoir); everything
+/// else is thinned into the reservoir.
+fn admit_point(
+    p: DsePoint,
+    frontier: &mut Vec<DsePoint>,
+    samples: &mut Vec<DsePoint>,
+    stride: &mut u64,
+    keep: usize,
+) {
+    if p.result.error.is_none() {
+        let (cy, ar) = (p.result.cycles, p.result.area_proxy);
+        let dominated = frontier
+            .iter()
+            .any(|f| f.result.cycles <= cy && f.result.area_proxy <= ar);
+        if !dominated {
+            let mut kept = Vec::with_capacity(frontier.len() + 1);
+            for f in frontier.drain(..) {
+                if cy <= f.result.cycles && ar <= f.result.area_proxy {
+                    thin_into(samples, f, stride, keep);
+                } else {
+                    kept.push(f);
+                }
+            }
+            *frontier = kept;
+            frontier.push(p);
+            return;
+        }
+    }
+    thin_into(samples, p, stride, keep);
+}
+
+/// Run the streaming exploration over `source`.  `resume` continues from
+/// a [`Checkpoint`] (validated against the source's signature).  Errors
+/// only on a signature mismatch or a failed checkpoint write.
+pub fn explore_source(
+    source: &mut dyn CandidateSource,
+    cfg: &DseConfig,
+    resume: Option<Checkpoint>,
+) -> Result<DseReport, String> {
+    let t0 = Instant::now();
+    let sig = source.signature();
+
+    let mut frontier: Vec<DsePoint> = Vec::new();
+    let mut samples: Vec<DsePoint> = Vec::new();
+    let mut stride: u64 = 1;
+    let mut best = u64::MAX;
+    let mut best_target = String::new();
+    let mut cursor: u64 = 0;
+    let mut restored = 0usize;
+    let mut evaluated = 0usize;
+    let mut pruned_infeasible = 0usize;
+    let mut pruned_bound = 0usize;
+    let mut pruned_dominated = 0usize;
+    let mut simulated = 0usize;
+    let mut cache_hits = 0usize;
+    let mut failed = 0usize;
+    let mut waves: Vec<WaveStats> = Vec::new();
+
+    if let Some(ck) = resume {
+        if ck.signature != sig {
+            return Err(format!(
+                "checkpoint signature {:#018x} does not match this space ({sig:#018x}) — \
+                 it was written by a different sweep",
+                ck.signature
+            ));
+        }
+        cursor = ck.cursor;
+        stride = ck.stride.max(1);
+        best = ck.best_cycles;
+        best_target = ck.best_target;
+        evaluated = ck.evaluated as usize;
+        pruned_infeasible = ck.pruned_infeasible as usize;
+        pruned_bound = ck.pruned_bound as usize;
+        pruned_dominated = ck.pruned_dominated as usize;
+        simulated = ck.simulated as usize;
+        cache_hits = ck.cache_hits as usize;
+        failed = ck.failed as usize;
+        restored = ck.frontier.len() + ck.samples.len();
+        frontier = ck.frontier;
+        samples = ck.samples;
+        source.seek(cursor);
+    }
+
+    let mut memo = Memo::with_capacity(cfg.memo_capacity);
+    let wave_len = (cfg.workers.max(1) * 2).max(8);
+    let window = cfg.window.max(1);
+    let mut processed_this_run: u64 = 0;
+    let mut since_checkpoint: u64 = 0;
+    let mut peak_resident = frontier.len() + samples.len();
+
+    let write_checkpoint = |path: &str,
+                            cursor: u64,
+                            stride: u64,
+                            best: u64,
+                            best_target: &str,
+                            frontier: &[DsePoint],
+                            samples: &[DsePoint],
+                            counters: &[usize; 7]|
+     -> Result<(), String> {
+        Checkpoint {
+            version: Checkpoint::VERSION,
+            signature: sig,
+            cursor,
+            stride,
+            best_cycles: best,
+            best_target: best_target.to_string(),
+            evaluated: counters[0] as u64,
+            pruned_infeasible: counters[1] as u64,
+            pruned_bound: counters[2] as u64,
+            pruned_dominated: counters[3] as u64,
+            simulated: counters[4] as u64,
+            cache_hits: counters[5] as u64,
+            failed: counters[6] as u64,
+            frontier: frontier.to_vec(),
+            samples: samples.to_vec(),
+        }
+        .save(path)
+    };
+
+    loop {
+        // Pull one lookahead window (bounded: this buffer and the
+        // frontier/reservoir are the only per-sweep state).
+        let mut buf: Vec<(JobSpec, u64)> = Vec::with_capacity(window.min(4096));
+        let first_id = cursor;
+        while buf.len() < window {
+            match source.next_spec() {
+                Some(s) => {
+                    let lb = s.lower_bound_cycles();
+                    buf.push((s, lb));
+                }
+                None => break,
+            }
+        }
+        if buf.is_empty() {
+            break;
+        }
+        cursor += buf.len() as u64;
+        peak_resident = peak_resident.max(buf.len() + frontier.len() + samples.len());
+
+        // Cheapest bound first: the most promising candidates simulate
+        // first and the prunable tail is cut without machine contact.
+        buf.sort_by_key(|(s, lb)| (*lb, s.id));
+
+        let mut ws = WaveStats {
+            index: waves.len(),
+            first_id,
+            last_id: cursor - 1,
+            pulled: buf.len(),
+            ..Default::default()
+        };
+
+        let mut i = 0;
+        while i < buf.len() {
+            // Assemble the next wave, pruning against the *current*
+            // incumbent/frontier as we go (both only improve, so a cut
+            // decided here would also be cut later).
+            let mut wave: Vec<(JobSpec, u64)> = Vec::with_capacity(wave_len);
+            while i < buf.len() && wave.len() < wave_len {
+                let (s, lb) = &buf[i];
+                i += 1;
+                let cut = match cfg.prune {
+                    PruneMode::Off => None,
+                    PruneMode::Cycles | PruneMode::Frontier => {
+                        if s.infeasible().is_some() {
+                            Some(&mut ws.pruned_infeasible)
+                        } else if cfg.prune == PruneMode::Cycles && *lb > best {
+                            Some(&mut ws.pruned_bound)
+                        } else if cfg.prune == PruneMode::Frontier
+                            && dominated_by_frontier(&frontier, *lb, s.target.area_proxy())
+                        {
+                            Some(&mut ws.pruned_dominated)
+                        } else {
+                            None
+                        }
+                    }
+                };
+                match cut {
+                    Some(counter) => *counter += 1,
+                    None => wave.push((s.clone(), *lb)),
+                }
+            }
+            if wave.is_empty() {
+                continue;
+            }
+
+            // One representative simulation per canonical key; everything
+            // else is served from the wave's own results or the memo.
+            let mut to_run: Vec<JobSpec> = Vec::new();
+            let mut scheduled: HashSet<u64> = HashSet::new();
+            let mut id_to_key: HashMap<u64, u64> = HashMap::new();
+            for (spec, _) in &wave {
+                let key = spec.canonical_key();
+                if memo.contains(key) || !scheduled.insert(key) {
+                    continue;
+                }
+                id_to_key.insert(spec.id, key);
+                to_run.push(spec.clone());
+            }
+            let ran_ids: HashSet<u64> = to_run.iter().map(|s| s.id).collect();
+            // The wave's results live in this map for the wave's own
+            // aliases: the memo is a *bounded* cross-wave cache and may
+            // evict under pressure, but a wave must always see its own
+            // simulations.
+            let mut fresh: HashMap<u64, JobResult> = HashMap::new();
+            for r in pool::run_jobs(to_run, cfg.workers) {
+                let key = id_to_key[&r.id];
+                memo.insert(key, r.clone());
+                fresh.insert(key, r);
+            }
+
+            for (spec, lb) in wave {
+                let key = spec.canonical_key();
+                // The miss arm is unreachable while the pool returns one
+                // result per spec — but a degraded pool must still yield
+                // an *accounted-for* error point, or
+                // `evaluated + pruned == candidates` breaks.
+                let mut result = fresh
+                    .get(&key)
+                    .cloned()
+                    .or_else(|| memo.get(key).cloned())
+                    .unwrap_or_else(|| JobResult {
+                        id: spec.id,
+                        target: spec.target.describe(),
+                        workload: spec.workload.describe(),
+                        mode: spec.mode,
+                        cycles: 0,
+                        instructions: 0,
+                        ipc: 0.0,
+                        utilization: 0.0,
+                        numerics_ok: None,
+                        wall_micros: 0,
+                        error: Some("worker pool returned no result for this job".into()),
+                        area_proxy: spec.target.area_proxy(),
+                    });
+                let cached = !ran_ids.contains(&spec.id);
+                if cached {
+                    memo.note_hit();
+                    ws.cache_hits += 1;
+                } else {
+                    memo.note_miss();
+                    ws.simulated += 1;
+                }
+                result.id = spec.id;
+                if result.error.is_none() && result.cycles > 0 && result.cycles < best {
+                    best = result.cycles;
+                    best_target = result.target.clone();
+                }
+                if result.error.is_some() {
+                    failed += 1;
+                }
+                ws.evaluated += 1;
+                admit_point(
+                    DsePoint {
+                        spec,
+                        lower_bound: lb,
+                        result,
+                        cached,
+                    },
+                    &mut frontier,
+                    &mut samples,
+                    &mut stride,
+                    cfg.keep_points,
+                );
+                peak_resident = peak_resident.max(frontier.len() + samples.len());
+            }
+        }
+
+        evaluated += ws.evaluated;
+        pruned_infeasible += ws.pruned_infeasible;
+        pruned_bound += ws.pruned_bound;
+        pruned_dominated += ws.pruned_dominated;
+        simulated += ws.simulated;
+        cache_hits += ws.cache_hits;
+        processed_this_run += ws.pulled as u64;
+        since_checkpoint += ws.pulled as u64;
+        waves.push(ws);
+
+        let stopping = cfg.stop_after.is_some_and(|limit| processed_this_run >= limit);
+        if let Some(ck) = &cfg.checkpoint {
+            if since_checkpoint >= ck.every || stopping {
+                write_checkpoint(
+                    &ck.path,
+                    cursor,
+                    stride,
+                    best,
+                    &best_target,
+                    &frontier,
+                    &samples,
+                    &[
+                        evaluated,
+                        pruned_infeasible,
+                        pruned_bound,
+                        pruned_dominated,
+                        simulated,
+                        cache_hits,
+                        failed,
+                    ],
+                )?;
+                since_checkpoint = 0;
+            }
+        }
+        if stopping {
+            break;
+        }
+    }
+
+    // Final checkpoint: lets downstream tooling read the finished
+    // frontier without parsing the report, and makes `--resume` of a
+    // completed sweep a cheap no-op.
+    if let Some(ck) = &cfg.checkpoint {
+        write_checkpoint(
+            &ck.path,
+            cursor,
+            stride,
+            best,
+            &best_target,
+            &frontier,
+            &samples,
+            &[
+                evaluated,
+                pruned_infeasible,
+                pruned_bound,
+                pruned_dominated,
+                simulated,
+                cache_hits,
+                failed,
+            ],
+        )?;
+    }
+
+    let mut points: Vec<DsePoint> = frontier.into_iter().chain(samples).collect();
+    points.sort_by(|a, b| {
+        (a.result.cycles, a.result.area_proxy as u64, a.spec.id).cmp(&(
+            b.result.cycles,
+            b.result.area_proxy as u64,
+            b.spec.id,
+        ))
+    });
+    let frontier_idx = pareto_frontier(&points);
+    Ok(DseReport {
+        stats: DseStats {
+            candidates: cursor as usize,
+            evaluated,
+            pruned: pruned_infeasible + pruned_bound + pruned_dominated,
+            pruned_infeasible,
+            pruned_bound,
+            pruned_dominated,
+            simulated,
+            cache_hits,
+            failed,
+            best_cycles: best,
+            best_target,
+            wall: t0.elapsed(),
+            memo_entries: memo.len(),
+            memo_capacity: memo.capacity(),
+            memo_evictions: memo.evictions(),
+            peak_resident,
+            restored,
+        },
+        points,
+        frontier: frontier_idx,
+        waves,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::backend::BackendKind;
+
+    #[test]
+    fn space_source_streams_the_materialized_enumeration() {
+        let space = DseSpace::quick(6);
+        let mut src = SpaceSource::new(&space);
+        let specs = space.enumerate();
+        assert_eq!(src.len_hint(), Some(specs.len() as u64));
+        let mut streamed = Vec::new();
+        while let Some(s) = src.next_spec() {
+            streamed.push(s);
+        }
+        assert_eq!(streamed, specs);
+        // Seek replays a suffix.
+        src.seek(3);
+        assert_eq!(src.next_spec().unwrap(), specs[3]);
+        // Distinct spaces have distinct signatures.
+        let other = SpaceSource::new(&DseSpace::quick(8));
+        assert_ne!(SpaceSource::new(&space).signature(), other.signature());
+    }
+
+    #[test]
+    fn file_source_streams_the_param_cross_product() {
+        let src_text = "arch \"sweep\" targets systolic {\n  rows = 2\n  cols = 2\n}\n\
+                        param rows in [2, 4]\nparam cols in [2, 4, 8]\n";
+        let arch = crate::adl::load_str(src_text).unwrap();
+        let space = FileSpace::from_arch(&arch, 16).unwrap();
+        let mut src = FileSource::new(&space).unwrap();
+        let specs = space.enumerate().unwrap();
+        let mut streamed = Vec::new();
+        while let Some(s) = src.next_spec() {
+            streamed.push(s);
+        }
+        assert_eq!(streamed, specs);
+        src.seek(4);
+        assert_eq!(src.next_spec().unwrap(), specs[4]);
+        assert!(src.next_spec().is_some());
+        assert!(src.next_spec().is_none());
+    }
+
+    #[test]
+    fn streaming_with_tiny_windows_matches_one_shot_exploration() {
+        // Same space, window 1 vs window ≫ space, pruning off: identical
+        // evaluated sets and identical frontier pairs.
+        let mut space = DseSpace::quick(6);
+        space.backends = vec![BackendKind::EventDriven];
+        let mut one_shot_cfg = DseConfig::legacy(2, false);
+        one_shot_cfg.window = 4096;
+        let one_shot =
+            explore_source(&mut SpaceSource::new(&space), &one_shot_cfg, None).unwrap();
+        let mut tiny_cfg = DseConfig::legacy(2, false);
+        tiny_cfg.window = 1;
+        let tiny = explore_source(&mut SpaceSource::new(&space), &tiny_cfg, None).unwrap();
+        assert_eq!(one_shot.stats.candidates, tiny.stats.candidates);
+        assert_eq!(one_shot.stats.evaluated, tiny.stats.evaluated);
+        assert_eq!(one_shot.stats.best_cycles, tiny.stats.best_cycles);
+        let pairs = |r: &DseReport| {
+            let mut v: Vec<(u64, u64)> = r
+                .frontier
+                .iter()
+                .map(|&i| {
+                    (
+                        r.points[i].result.cycles,
+                        r.points[i].result.area_proxy as u64,
+                    )
+                })
+                .collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        assert_eq!(pairs(&one_shot), pairs(&tiny));
+        // Multi-window runs record one WaveStats per window.
+        assert_eq!(tiny.waves.len(), tiny.stats.candidates);
+        assert_eq!(one_shot.waves.len(), 1);
+    }
+
+    #[test]
+    fn reservoir_thinning_is_deterministic_and_bounded() {
+        let mut samples = Vec::new();
+        let mut stride = 1u64;
+        let point = |id: u64| DsePoint {
+            spec: DseSpace::quick(6).spec_at(0).unwrap(),
+            lower_bound: 1,
+            result: JobResult {
+                id,
+                target: "t".into(),
+                workload: "w".into(),
+                mode: crate::coordinator::job::SimModeSpec::Timed,
+                cycles: id + 1,
+                instructions: 0,
+                ipc: 0.0,
+                utilization: 0.0,
+                numerics_ok: None,
+                wall_micros: 0,
+                error: None,
+                area_proxy: 1.0,
+            },
+            cached: false,
+        };
+        for id in 0..1000u64 {
+            let mut p = point(id);
+            p.spec.id = id;
+            thin_into(&mut samples, p, &mut stride, 16);
+        }
+        assert!(samples.len() <= 16);
+        assert!(stride > 1, "thinning must have engaged");
+        // Retained ids are exactly the stride multiples that survived.
+        assert!(samples.iter().all(|p| p.spec.id % stride == 0));
+    }
+}

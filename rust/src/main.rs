@@ -49,11 +49,20 @@ COMMANDS:
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   dse [--dim N] [--workers N] [--quick true] [--no-prune true]
       [--max-edge N] [--max-units N] [--arch-file <file.acadl>]
-      Full design-space exploration on an N³ GeMM: enumerate the
-      candidates, prune with the analytical roofline bound, evaluate
-      survivors in parallel with memoization, print the cycles-vs-area
-      Pareto frontier and the pruning/cache statistics.  With
-      --arch-file, the space is the file's `param` block cross-product.
+      [--window N] [--max-points N] [--stop-after N]
+      [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]
+      Full design-space exploration on an N³ GeMM: stream the candidates
+      lazily (one --window at a time, so memory stays bounded for
+      million-candidate spaces), prune with the analytical roofline
+      bound and feasibility checks, evaluate survivors in parallel with
+      bounded memoization, print the cycles-vs-area Pareto frontier and
+      the pruning/cache statistics.  With --arch-file, the space is the
+      file's `param` block cross-product, stamped incrementally from a
+      single elaboration.  --checkpoint writes sweep state every
+      --checkpoint-every processed candidates (atomic JSON); --resume
+      continues from such a file; --stop-after ends the run at the next
+      window boundary (interruptible / sharded sweeps); --max-points
+      bounds the non-frontier rows kept for the report table.
   serve [--addr HOST:PORT] [--workers N] [--arch-file <file.acadl>]
       Serve JobSpec JSON lines over TCP.  Jobs may inline ADL text as
       {\"kind\":\"adl\",\"source\":\"…\"} targets; --arch-file pre-builds
@@ -80,7 +89,19 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         ],
         "sweep" => &["dim", "workers", "backend"],
         "dse" => &[
-            "dim", "workers", "quick", "no-prune", "max-edge", "max-units", "arch-file",
+            "dim",
+            "workers",
+            "quick",
+            "no-prune",
+            "max-edge",
+            "max-units",
+            "arch-file",
+            "window",
+            "max-points",
+            "stop-after",
+            "checkpoint",
+            "checkpoint-every",
+            "resume",
         ],
         "serve" => &["addr", "workers", "arch-file"],
         "golden" => &["dir"],
@@ -439,6 +460,27 @@ fn run() -> Result<(), String> {
                     .unwrap_or(4),
             )?;
             let prune = !args.bool_flag("no-prune")?;
+            let mut cfg = acadl::dse::DseConfig::legacy(workers, prune);
+            cfg.window = args.usize("window", acadl::dse::DEFAULT_WINDOW)?.max(1);
+            // The CLI prints a table, so bound retained rows by default;
+            // the frontier is always kept in full.
+            cfg.keep_points = args.usize("max-points", 1024)?;
+            cfg.stop_after = args.opt_usize("stop-after")?.map(|n| n as u64);
+            if let Some(path) = args.flags.get("checkpoint") {
+                cfg.checkpoint = Some(acadl::dse::CheckpointCfg {
+                    path: path.clone(),
+                    every: args.usize("checkpoint-every", 5000)?.max(1) as u64,
+                });
+            } else if args.flags.contains_key("checkpoint-every") {
+                return Err("--checkpoint-every needs --checkpoint <file>".into());
+            }
+            let resume = match args.flags.get("resume") {
+                Some(p) => Some(acadl::dse::Checkpoint::load(p)?),
+                None => None,
+            };
+            let streaming_flags = resume.is_some()
+                || cfg.checkpoint.is_some()
+                || cfg.stop_after.is_some();
             if let Some(path) = args.flags.get("arch-file").cloned() {
                 for conflicting in ["quick", "max-edge", "max-units"] {
                     if args.flags.contains_key(conflicting) {
@@ -450,17 +492,19 @@ fn run() -> Result<(), String> {
                 }
                 // One load: verify the description against its binding up
                 // front (the sweep itself varies the bound config), then
-                // enumerate from the same elaboration.
+                // stamp candidates from the same elaboration — the file
+                // is never re-parsed and the space never materialized.
                 let arch = load_verified(&path)?;
                 let space = acadl::dse::FileSpace::from_arch(&arch, dim)?;
-                let specs = space.enumerate()?;
+                let mut src = acadl::dse::FileSource::new(&space)?;
                 println!(
                     "exploring gemm {dim}³ over {} candidates from {path} on {workers} \
-                     workers (prune: {})…\n",
-                    specs.len(),
+                     workers (prune: {}, window {})…\n",
+                    space.total()?,
                     if prune { "roofline" } else { "off" },
+                    cfg.window,
                 );
-                let report = acadl::dse::explore_specs(specs, workers, prune);
+                let report = acadl::dse::explore_source(&mut src, &cfg, resume)?;
                 print_dse_report(&report, &format!("design space from {path}, gemm {dim}³"));
             } else {
                 let quick = args.bool_flag("quick")?;
@@ -477,16 +521,22 @@ fn run() -> Result<(), String> {
                 }
                 println!(
                     "exploring gemm {dim}³ over {} candidates on {workers} workers (prune: {})…\n",
-                    space.enumerate().len(),
+                    space.total(),
                     if prune { "roofline" } else { "off" },
                 );
-                let report = acadl::dse::explore(&space, workers, prune);
+                let report = acadl::dse::explore_source(
+                    &mut acadl::dse::SpaceSource::new(&space),
+                    &cfg,
+                    resume,
+                )?;
                 print_dse_report(&report, &format!("design space, gemm {dim}³ (timed)"));
                 // Sibling sweep: the same architecture axes on the
                 // transformer workload (separate exploration — the
-                // pruning incumbent must not cross workloads).
+                // pruning incumbent must not cross workloads).  Skipped
+                // when checkpoint/resume/stop-after target the GeMM
+                // sweep: those runs want exactly one interruptible sweep.
                 let tf = space.enumerate_transformer();
-                if !tf.is_empty() {
+                if !tf.is_empty() && !streaming_flags {
                     let seq = space.transformer_seq.unwrap_or(8);
                     println!(
                         "\nexploring tiny_transformer (seq {seq}) over {} candidates…\n",
@@ -611,6 +661,16 @@ mod tests {
         assert!(allowed_flags("simulate").contains(&"workload"));
         assert!(allowed_flags("simulate").contains(&"seq"));
         assert!(allowed_flags("dse").contains(&"arch-file"));
+        for f in [
+            "window",
+            "max-points",
+            "stop-after",
+            "checkpoint",
+            "checkpoint-every",
+            "resume",
+        ] {
+            assert!(allowed_flags("dse").contains(&f), "dse misses --{f}");
+        }
         assert!(allowed_flags("serve").contains(&"arch-file"));
         assert!(allowed_flags("fmt").contains(&"check"));
         assert!(allowed_flags("parse").is_empty());

@@ -1,0 +1,269 @@
+//! Cross-checks of the streaming DSE engine against the exhaustive
+//! materialized sweep — the contract the perf work must not bend:
+//!
+//! * **Frontier-prune equivalence**: a streamed sweep with
+//!   [`PruneMode::Frontier`] reports exactly the exhaustive frontier
+//!   pair set and optimum, over randomized sub-spaces.
+//! * **Checkpoint/resume equivalence**: stopping a sweep mid-run and
+//!   resuming from its checkpoint reproduces the uninterrupted frontier
+//!   and optimum.
+//! * **Bounded memory at scale**: a ≥100k-candidate file-driven `param`
+//!   sweep completes with peak resident state a small fraction of the
+//!   space (no full-space `Vec<JobSpec>` anywhere on the path), with
+//!   the memo collapsing the aliased axes to a few hundred simulations.
+
+use acadl::dse::{
+    explore_source, Checkpoint, CheckpointCfg, DseConfig, DseReport, DseSpace, FileSource,
+    FileSpace, PruneMode, SpaceSource,
+};
+use acadl::mapping::gemm::LoopOrder;
+use acadl::sim::BackendKind;
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// The frontier as a sorted, deduplicated (cycles, area) pair set —
+/// the objective-space quantity the soundness guarantees speak about.
+fn frontier_pairs(rep: &DseReport) -> Vec<(u64, u64)> {
+    let mut v: Vec<(u64, u64)> = rep
+        .frontier
+        .iter()
+        .map(|&i| {
+            (
+                rep.points[i].result.cycles,
+                rep.points[i].result.area_proxy as u64,
+            )
+        })
+        .collect();
+    v.sort();
+    v.dedup();
+    v
+}
+
+fn random_space(seed: &mut u64) -> DseSpace {
+    let mut space = DseSpace::quick(2 + (xorshift(seed) % 6) as usize);
+    space.include_oma = xorshift(seed) % 2 == 0;
+    space.max_edge = if xorshift(seed) % 2 == 0 { 2 } else { 4 };
+    space.max_units = 1 + (xorshift(seed) % 2) as usize;
+    space.tiles = match xorshift(seed) % 3 {
+        0 => vec![None],
+        1 => vec![None, Some(2)],
+        _ => vec![None, Some(2), Some(4)],
+    };
+    space.orders = if xorshift(seed) % 2 == 0 {
+        vec![LoopOrder::Ijk]
+    } else {
+        vec![LoopOrder::Ijk, LoopOrder::Kij]
+    };
+    space.backends = vec![BackendKind::EventDriven];
+    space
+}
+
+fn ck_path(tag: &str, case: usize) -> String {
+    std::env::temp_dir()
+        .join(format!("acadl_dse_stream_{tag}_{}_{case}.json", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn streamed_pruned_and_resumed_sweeps_match_the_exhaustive_frontier() {
+    let mut seed = 0x5EED_CAB5_0DD5_EE1Fu64;
+    for case in 0..5 {
+        let space = random_space(&mut seed);
+        let total = space.total();
+        assert!(total > 0);
+
+        // Baseline: exhaustive, materializing everything.
+        let exhaustive = explore_source(
+            &mut SpaceSource::new(&space),
+            &DseConfig::legacy(2, false),
+            None,
+        )
+        .unwrap();
+        assert_eq!(exhaustive.stats.pruned, 0);
+        assert_eq!(exhaustive.stats.evaluated, exhaustive.stats.candidates);
+        let expected_pairs = frontier_pairs(&exhaustive);
+        let expected_best = exhaustive.stats.best_cycles;
+
+        // Frontier-domination pruning preserves the exact pair set.
+        let mut frontier_cfg = DseConfig::new(2);
+        frontier_cfg.prune = PruneMode::Frontier;
+        // Stress multi-window streaming; window 2 also guarantees the
+        // stop_after leg below interrupts even the smallest random space
+        // (≥ 3 candidates) before its last window.
+        frontier_cfg.window = 2;
+        let pruned = explore_source(&mut SpaceSource::new(&space), &frontier_cfg, None).unwrap();
+        assert_eq!(
+            frontier_pairs(&pruned),
+            expected_pairs,
+            "case {case}: frontier-pruned pair set diverged\n{}",
+            pruned.summary()
+        );
+        assert_eq!(pruned.stats.best_cycles, expected_best, "case {case}");
+        assert_eq!(
+            pruned.stats.evaluated + pruned.stats.pruned,
+            pruned.stats.candidates,
+            "case {case}: {}",
+            pruned.summary()
+        );
+        assert!(pruned.stats.simulated <= exhaustive.stats.simulated);
+
+        // Incumbent pruning preserves the optimum.
+        let cycles = explore_source(
+            &mut SpaceSource::new(&space),
+            &DseConfig::legacy(2, true),
+            None,
+        )
+        .unwrap();
+        assert_eq!(cycles.stats.best_cycles, expected_best, "case {case}");
+        assert_eq!(
+            cycles.stats.evaluated + cycles.stats.pruned,
+            cycles.stats.candidates
+        );
+
+        // Stop mid-sweep, resume from the checkpoint: same frontier and
+        // optimum as the uninterrupted exhaustive run.
+        let path = ck_path("rand", case);
+        let mut stopped_cfg = frontier_cfg.clone();
+        stopped_cfg.checkpoint = Some(CheckpointCfg {
+            path: path.clone(),
+            every: 8,
+        });
+        stopped_cfg.stop_after = Some((total / 2).max(1));
+        let partial =
+            explore_source(&mut SpaceSource::new(&space), &stopped_cfg, None).unwrap();
+        assert!(
+            (partial.stats.candidates as u64) < total,
+            "case {case}: stop_after did not stop ({} of {total})",
+            partial.stats.candidates
+        );
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.cursor, partial.stats.candidates as u64);
+        let mut resume_cfg = frontier_cfg.clone();
+        resume_cfg.checkpoint = Some(CheckpointCfg {
+            path: path.clone(),
+            every: 8,
+        });
+        let resumed =
+            explore_source(&mut SpaceSource::new(&space), &resume_cfg, Some(ck)).unwrap();
+        assert_eq!(resumed.stats.candidates as u64, total, "case {case}");
+        assert_eq!(
+            frontier_pairs(&resumed),
+            expected_pairs,
+            "case {case}: resumed pair set diverged\n{}",
+            resumed.summary()
+        );
+        assert_eq!(resumed.stats.best_cycles, expected_best, "case {case}");
+        assert_eq!(
+            resumed.stats.evaluated + resumed.stats.pruned,
+            resumed.stats.candidates,
+            "case {case}: resumed accounting broke"
+        );
+        assert!(resumed.stats.restored > 0, "case {case}");
+
+        // A checkpoint never resumes against a different space.
+        let other = DseSpace::quick(9);
+        let ck = Checkpoint::load(&path).unwrap();
+        let err = explore_source(&mut SpaceSource::new(&other), &resume_cfg, Some(ck));
+        assert!(err.is_err(), "case {case}: foreign checkpoint accepted");
+        assert!(err.unwrap_err().contains("signature"));
+
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Builds a ≥100k-candidate OMA `param` space textually: the `.acadl`
+/// source is elaborated once and candidates are stamped from it, so the
+/// sweep never re-parses the file or materializes the space.
+fn mega_space() -> FileSpace {
+    let mut src = String::from("arch \"mega\" targets oma {\n  cache = true\n}\n");
+    src.push_str("param cache in [true, false]\n");
+    src.push_str("param mac_latency in [1, 2, 4]\n");
+    let tiles: Vec<String> = (1..=2800).map(|t| t.to_string()).collect();
+    src.push_str(&format!("param tile in [{}]\n", tiles.join(", ")));
+    src.push_str("param order in [ijk, ikj, jik, jki, kij, kji]\n");
+    let arch = acadl::adl::load_str(&src).expect("mega space parses");
+    FileSpace::from_arch(&arch, 8).expect("mega space elaborates")
+}
+
+#[test]
+fn hundred_thousand_candidate_file_sweep_is_bounded_and_resumable() {
+    let space = mega_space();
+    let total = space.total().unwrap();
+    assert!(total >= 100_000, "only {total} candidates");
+
+    let mut cfg = DseConfig::new(8);
+    cfg.window = 4096;
+    cfg.keep_points = 256;
+    let rep = explore_source(&mut FileSource::new(&space).unwrap(), &cfg, None).unwrap();
+    assert_eq!(rep.stats.candidates as u64, total);
+    assert_eq!(
+        rep.stats.evaluated + rep.stats.pruned,
+        rep.stats.candidates,
+        "{}",
+        rep.summary()
+    );
+    assert_eq!(rep.stats.failed, 0, "{}", rep.summary());
+    // Bounded memory: peak resident state is window + frontier +
+    // reservoir — an order of magnitude under the space, not O(space).
+    assert!(
+        rep.stats.peak_resident < rep.stats.candidates / 10,
+        "peak resident {} of {} candidates",
+        rep.stats.peak_resident,
+        rep.stats.candidates
+    );
+    // The memo collapses the aliased axes (tile ≥ dim, order × config):
+    // ~10⁵ candidates cost a few hundred distinct simulations.
+    assert!(
+        rep.stats.simulated > 0 && rep.stats.simulated < 1_000,
+        "{} simulations",
+        rep.stats.simulated
+    );
+    assert!(rep.stats.cache_hits > rep.stats.simulated * 50);
+    assert!(!rep.frontier.is_empty());
+    let expected_pairs = frontier_pairs(&rep);
+    let expected_best = rep.stats.best_cycles;
+
+    // Kill at ~40% (window-aligned), resume from the checkpoint, and the
+    // finished frontier matches the uninterrupted run exactly.
+    let path = ck_path("mega", 0);
+    let mut stopped_cfg = cfg.clone();
+    stopped_cfg.checkpoint = Some(CheckpointCfg {
+        path: path.clone(),
+        every: 20_000,
+    });
+    stopped_cfg.stop_after = Some(total * 2 / 5);
+    let partial = explore_source(&mut FileSource::new(&space).unwrap(), &stopped_cfg, None)
+        .unwrap();
+    assert!((partial.stats.candidates as u64) < total);
+    let ck = Checkpoint::load(&path).unwrap();
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.checkpoint = Some(CheckpointCfg {
+        path: path.clone(),
+        every: 20_000,
+    });
+    let resumed =
+        explore_source(&mut FileSource::new(&space).unwrap(), &resume_cfg, Some(ck)).unwrap();
+    assert_eq!(resumed.stats.candidates as u64, total);
+    assert_eq!(frontier_pairs(&resumed), expected_pairs);
+    assert_eq!(resumed.stats.best_cycles, expected_best);
+    // The final checkpoint of the resumed run carries the same frontier
+    // (this is what the CI kill/resume job diffs).
+    let final_ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(final_ck.cursor, total);
+    let mut ck_pairs: Vec<(u64, u64)> = final_ck
+        .frontier
+        .iter()
+        .map(|p| (p.result.cycles, p.result.area_proxy as u64))
+        .collect();
+    ck_pairs.sort();
+    ck_pairs.dedup();
+    assert_eq!(ck_pairs, expected_pairs);
+    std::fs::remove_file(&path).ok();
+}

@@ -19,6 +19,11 @@ export ACADL_BENCH_RUNS="${ACADL_BENCH_RUNS:-7}"
 cargo bench --bench sim_micro
 cargo bench --bench backend_compare
 
+# DSE engine benches: pruned-vs-exhaustive on the quick space, plus
+# streamed-vs-materialized over a 10 200-candidate `param` space
+# (candidates/sec and peak-RSS rows behind the bounded-memory claim).
+cargo bench --bench dse
+
 # DSE smoke sweep wall-clock: the end-to-end number every hot-path win
 # multiplies into.
 start_ns=$(date +%s%N)

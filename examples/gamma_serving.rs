@@ -59,6 +59,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         BackendKind::CycleStepped
                     },
                     max_cycles: 1_000_000_000,
+                    platform: None,
                 };
                 let t = Instant::now();
                 writer

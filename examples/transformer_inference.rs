@@ -128,6 +128,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         mode: SimModeSpec::Timed,
         backend: BackendKind::EventDriven,
         max_cycles: 2_000_000_000,
+        platform: None,
     });
     assert_eq!(r.error, None);
     assert_eq!(r.numerics_ok, Some(true));

@@ -29,6 +29,7 @@ fn batch() -> Vec<JobSpec> {
                     mode,
                     backend: Default::default(),
                     max_cycles: 1_000_000_000,
+                    platform: None,
                 });
                 id += 1;
             }
@@ -48,6 +49,7 @@ fn batch() -> Vec<JobSpec> {
             mode: SimModeSpec::Timed,
             backend: Default::default(),
             max_cycles: 1_000_000_000,
+            platform: None,
         });
         id += 1;
     }

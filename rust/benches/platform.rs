@@ -1,0 +1,54 @@
+//! Platform perf — parallel speedup of the partitioned simulator: the
+//! tiny transformer (seq 8) sharded across a 4-chip 2×2-systolic
+//! platform with 8 pipelined microbatches, simulated at 1, 2, and 4
+//! worker threads.  Cycle counts are identical at every thread count
+//! (the backend-equivalence invariant); only wall-clock time moves, so
+//! `items = total simulated cycles` makes cycles/s the speedup axis the
+//! perf trajectory records.
+//!
+//! Run: `cargo bench --bench platform`
+
+use acadl::arch::platform::PlatformDesc;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::dnn::lowering::SimMode;
+use acadl::dnn::{partition_graph, DnnGraph};
+use acadl::mapping::uma::{Machine, TargetConfig};
+use acadl::sim::{run_platform, BackendKind};
+use acadl::util::bench::Bench;
+
+fn main() {
+    let graph = DnnGraph::tiny_transformer();
+    let batch = 8;
+    let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    let desc = PlatformDesc::new(4).with_microbatches(8);
+    let plan = partition_graph(&graph, batch, desc.chips).unwrap();
+    let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+    let mode = SimMode::Timed(BackendKind::ParallelEvent);
+
+    let mut b = Bench::new("platform");
+    let mut cycles = None;
+    for threads in [1usize, 2, 4] {
+        let rep = run_platform(
+            &machines, &graph, &plan, batch, &desc, mode, threads, 500_000_000,
+        )
+        .unwrap();
+        // The equivalence invariant, re-checked where the speedup is
+        // measured: every thread count reports the same makespan.
+        let c = *cycles.get_or_insert(rep.total_cycles);
+        assert_eq!(rep.total_cycles, c, "threads={threads} moved the cycle count");
+        b.time(
+            &format!("quad_tf_seq8_threads{threads} (cycles/s)"),
+            Some(c),
+            || {
+                run_platform(
+                    &machines, &graph, &plan, batch, &desc, mode, threads, 500_000_000,
+                )
+                .unwrap()
+                .total_cycles
+            },
+        );
+    }
+    b.write_json_if_requested();
+}

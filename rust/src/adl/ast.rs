@@ -15,6 +15,8 @@ pub struct Arch {
     pub name_span: Span,
     /// Optional mapping-family binding (`targets oma { cache = true }`).
     pub target: Option<TargetDecl>,
+    /// Optional multi-chip platform wrapper (`platform { chips = 4 … }`).
+    pub platform: Option<PlatformDecl>,
     pub items: Vec<Item>,
 }
 
@@ -23,6 +25,16 @@ pub struct Arch {
 #[derive(Debug, Clone, PartialEq)]
 pub struct TargetDecl {
     pub family: String,
+    pub span: Span,
+    pub attrs: Vec<Attr>,
+}
+
+/// The `platform { chips = 4 hop_latency = 4 … }` block: replicate the
+/// described chip behind a shared fabric + DRAM (see
+/// [`crate::arch::platform::PlatformDesc`]).  Purely additive — a file
+/// without the block describes a single chip, exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformDecl {
     pub span: Span,
     pub attrs: Vec<Attr>,
 }

@@ -24,6 +24,7 @@ use crate::acadl_core::object::{
 use crate::acadl_core::template::{connect_dangling, connect_dangling_to, DanglingEdge};
 use crate::adl::ast::{self, DangleDir, RegType, ValueExpr};
 use crate::adl::{printer, AdlError, Span};
+use crate::arch::platform::PlatformDesc;
 use crate::coordinator::job::TargetSpec;
 use crate::mapping::gemm::LoopOrder;
 use crate::mem::cache::ReplacementPolicy;
@@ -51,6 +52,8 @@ pub struct ElabArch {
     pub ag: Ag,
     /// The mapping-family binding, when the file declares one.
     pub target: Option<TargetSpec>,
+    /// The multi-chip `platform { … }` block, when the file declares one.
+    pub platform: Option<PlatformDesc>,
     /// The `param` sweep axes, in file order.
     pub params: Vec<ParamAxis>,
 }
@@ -505,6 +508,33 @@ fn target_spec(decl: &ast::TargetDecl) -> Result<TargetSpec, AdlError> {
     Ok(spec)
 }
 
+/// Elaborate the `platform { … }` block: `chips` is required; fabric,
+/// DRAM, and microbatch knobs default from [`PlatformDesc::default`].
+fn platform_desc(decl: &ast::PlatformDecl) -> Result<PlatformDesc, AdlError> {
+    let mut attrs = AttrSet::new(decl.span, &decl.attrs);
+    let mut d = PlatformDesc::default();
+    let chips = attrs.req_int("chips")?;
+    if chips < 1 {
+        return Err(AdlError::at(decl.span, "attribute `chips` must be >= 1"));
+    }
+    d.chips = chips as usize;
+    d.fabric.hop_latency = attrs.unsigned("hop_latency", d.fabric.hop_latency)?;
+    d.fabric.link_words_per_cycle =
+        attrs.unsigned("link_words_per_cycle", d.fabric.link_words_per_cycle)?;
+    d.dram.base_latency = attrs.unsigned("dram_latency", d.dram.base_latency)?;
+    d.dram.words_per_cycle = attrs.unsigned("dram_words_per_cycle", d.dram.words_per_cycle)?;
+    let m = attrs.unsigned("microbatches", d.microbatches as u64)?;
+    if m < 1 {
+        return Err(AdlError::at(
+            decl.span,
+            "attribute `microbatches` must be >= 1",
+        ));
+    }
+    d.microbatches = m as usize;
+    attrs.finish("platform")?;
+    Ok(d)
+}
+
 fn pos_usize(attrs: &mut AttrSet<'_>, key: &str) -> Result<usize, AdlError> {
     let v = attrs.req_int(key)?;
     if v < 1 {
@@ -589,6 +619,10 @@ pub fn elaborate(arch: &ast::Arch) -> Result<ElabArch, AdlError> {
     let mut ag = Ag::new();
     let target = match &arch.target {
         Some(t) => Some(target_spec(t)?),
+        None => None,
+    };
+    let platform = match &arch.platform {
+        Some(p) => Some(platform_desc(p)?),
         None => None,
     };
     let mut params: Vec<ParamAxis> = Vec::new();
@@ -733,6 +767,7 @@ pub fn elaborate(arch: &ast::Arch) -> Result<ElabArch, AdlError> {
         name: arch.name.clone(),
         ag,
         target,
+        platform,
         params,
     })
 }
@@ -934,6 +969,39 @@ param cols in [2, 4]
         let mut c = e.base_candidate().unwrap();
         apply_param(&mut c, "rows", &ParamValue::Int(8)).unwrap();
         assert_eq!(c.target, TargetSpec::Systolic { rows: 8, cols: 4 });
+    }
+
+    #[test]
+    fn platform_block_elaborates_with_defaults() {
+        let src = r#"
+arch "quad" targets systolic {
+  rows = 2
+  cols = 2
+}
+platform {
+  chips = 4
+  hop_latency = 8
+  microbatches = 6
+}
+"#;
+        let e = load_str(src).unwrap();
+        let p = e.platform.unwrap();
+        assert_eq!(p.chips, 4);
+        assert_eq!(p.fabric.hop_latency, 8);
+        assert_eq!(p.microbatches, 6);
+        // Unset knobs keep the library defaults.
+        let d = PlatformDesc::default();
+        assert_eq!(p.fabric.link_words_per_cycle, d.fabric.link_words_per_cycle);
+        assert_eq!(p.dram.base_latency, d.dram.base_latency);
+        assert_eq!(p.dram.words_per_cycle, d.dram.words_per_cycle);
+
+        // `chips` is required; zero chips and unknown attrs are rejected.
+        let e = load_str("arch \"p\" platform {\n  hop_latency = 2\n}").unwrap_err();
+        assert!(e.to_string().contains("chips"), "{e}");
+        let e = load_str("arch \"p\" platform {\n  chips = 0\n}").unwrap_err();
+        assert!(e.to_string().contains(">= 1"), "{e}");
+        let e = load_str("arch \"p\" platform {\n  chips = 2\n  wombat = 1\n}").unwrap_err();
+        assert!(e.to_string().contains("unknown attribute"), "{e}");
     }
 
     #[test]

@@ -351,6 +351,12 @@ impl Parser {
                 attrs,
             });
         }
+        let mut platform = None;
+        if matches!(self.peek(), Tok::Ident(k) if k == "platform") {
+            let span = self.bump().span;
+            let attrs = self.attr_block()?;
+            platform = Some(PlatformDecl { span, attrs });
+        }
         let mut items = Vec::new();
         loop {
             match self.peek().clone() {
@@ -433,6 +439,7 @@ impl Parser {
             name,
             name_span,
             target,
+            platform,
             items,
         })
     }
@@ -500,6 +507,38 @@ connect "ex0" -> "fu0" : CONTAINS
             }
             other => panic!("expected connect, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn platform_block_after_targets() {
+        let src = r#"
+arch "quad" targets systolic {
+  rows = 2
+  cols = 2
+}
+platform {
+  chips = 4
+  hop_latency = 4
+  microbatches = 8
+}
+object "ex0" : ExecuteStage {
+  latency = 1
+}
+"#;
+        let a = parse(src).unwrap();
+        let p = a.platform.as_ref().unwrap();
+        assert_eq!(p.attrs.len(), 3);
+        assert_eq!(p.attrs[0].key, "chips");
+        assert_eq!(p.attrs[0].value, ValueExpr::Int(4));
+        assert_eq!(a.items.len(), 1);
+
+        // The block also parses without a targets binding, and its
+        // absence stays absent.
+        assert!(parse("arch \"p\" platform {\n  chips = 2\n}")
+            .unwrap()
+            .platform
+            .is_some());
+        assert!(parse("arch \"p\"").unwrap().platform.is_none());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::acadl_core::graph::Ag;
 use crate::acadl_core::latency::Latency;
 use crate::acadl_core::object::{Object, ObjectKind};
 use crate::adl::elab::{ElabArch, ParamAxis, ParamValue};
+use crate::arch::platform::PlatformDesc;
 use crate::coordinator::job::TargetSpec;
 use crate::mem::cache::ReplacementPolicy;
 
@@ -214,10 +215,25 @@ fn target_block(t: &TargetSpec) -> String {
     s
 }
 
+/// Canonical `platform { … }` block: every knob printed explicitly, in
+/// declaration order, so the form is byte-idempotent under `fmt`.
+fn platform_block(p: &PlatformDesc) -> String {
+    let mut s = String::from("platform {\n");
+    let _ = writeln!(s, "  chips = {}", p.chips);
+    let _ = writeln!(s, "  hop_latency = {}", p.fabric.hop_latency);
+    let _ = writeln!(s, "  link_words_per_cycle = {}", p.fabric.link_words_per_cycle);
+    let _ = writeln!(s, "  dram_latency = {}", p.dram.base_latency);
+    let _ = writeln!(s, "  dram_words_per_cycle = {}", p.dram.words_per_cycle);
+    let _ = writeln!(s, "  microbatches = {}", p.microbatches);
+    s.push('}');
+    s
+}
+
 /// Print a full architecture description in canonical form.
 pub fn print_arch(
     name: &str,
     target: Option<&TargetSpec>,
+    platform: Option<&PlatformDesc>,
     params: &[ParamAxis],
     ag: &Ag,
 ) -> String {
@@ -229,6 +245,9 @@ pub fn print_arch(
         None => {
             let _ = writeln!(s, "arch {}", quote(name));
         }
+    }
+    if let Some(p) = platform {
+        let _ = writeln!(s, "{}", platform_block(p));
     }
     for axis in params {
         let vals: Vec<String> = axis.values.iter().map(param_value_str).collect();
@@ -251,7 +270,7 @@ pub fn print_arch(
 
 /// Print an elaborated architecture (the `fmt` entry point).
 pub fn print_elab(e: &ElabArch) -> String {
-    print_arch(&e.name, e.target.as_ref(), &e.params, &e.ag)
+    print_arch(&e.name, e.target.as_ref(), e.platform.as_ref(), &e.params, &e.ag)
 }
 
 #[cfg(test)]
@@ -305,13 +324,31 @@ mod tests {
     #[test]
     fn arch_header_forms() {
         let ag = Ag::new();
-        let s = print_arch("empty", None, &[], &ag);
+        let s = print_arch("empty", None, None, &[], &ag);
         assert_eq!(s, "arch \"empty\"\n");
         let t = TargetSpec::Systolic { rows: 2, cols: 3 };
-        let s = print_arch("sys", Some(&t), &[], &ag);
+        let s = print_arch("sys", Some(&t), None, &[], &ag);
         assert_eq!(
             s,
             "arch \"sys\" targets systolic {\n  rows = 2\n  cols = 3\n}\n"
         );
+    }
+
+    #[test]
+    fn platform_block_prints_every_knob() {
+        let ag = Ag::new();
+        let p = PlatformDesc::new(4).with_hop_latency(8).with_microbatches(6);
+        let t = TargetSpec::Systolic { rows: 2, cols: 2 };
+        let s = print_arch("quad", Some(&t), Some(&p), &[], &ag);
+        assert_eq!(
+            s,
+            "arch \"quad\" targets systolic {\n  rows = 2\n  cols = 2\n}\n\
+             platform {\n  chips = 4\n  hop_latency = 8\n  link_words_per_cycle = 4\n  \
+             dram_latency = 8\n  dram_words_per_cycle = 2\n  microbatches = 6\n}\n"
+        );
+        // The canonical form round-trips and is byte-idempotent.
+        let e = crate::adl::load_str(&s).unwrap();
+        assert_eq!(e.platform, Some(p));
+        assert_eq!(print_elab(&e), s);
     }
 }

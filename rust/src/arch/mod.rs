@@ -14,6 +14,9 @@
 //! * [`plasticine`] — a Plasticine-derived pattern compute/memory chain
 //!   (§6, [27]).
 //! * [`parts`] — shared constructors for storages and fetch front-ends.
+//! * [`platform`] — multi-accelerator platform descriptions: N chips
+//!   behind a shared fabric + DRAM, the configuration `sim::platform`
+//!   simulates in parallel.
 //!
 //! Every builder returns a machine struct bundling the [`Ag`] with the
 //! memory layout the mapping layer (code generators) needs.
@@ -23,8 +26,10 @@ pub mod gamma;
 pub mod oma;
 pub mod parts;
 pub mod plasticine;
+pub mod platform;
 pub mod systolic;
 
 pub use gamma::GammaConfig;
 pub use oma::OmaConfig;
+pub use platform::{FabricConfig, PlatformDesc, SharedDramConfig};
 pub use systolic::SystolicConfig;

@@ -1,0 +1,193 @@
+//! Multi-accelerator **platform** descriptions: N zoo machines behind a
+//! shared fabric (per-hop transfer latency, bounded link bandwidth) and a
+//! shared DRAM (weight/activation streaming).  A platform is pure
+//! configuration — `sim::platform` turns one plus a partitioned DNN
+//! workload into cycle counts, and `dse::DseSpace` sweeps the chip-count
+//! and fabric-latency axes for cycles-vs-chips Pareto points.
+//!
+//! The cost model is deliberately simple and **closed-form per transfer**
+//! (hops × hop latency + words / link width): every quantity the parallel
+//! simulator needs for its conservative timing recurrence is a pure
+//! function of the description, which is what makes the `--threads 1` ≡
+//! `--threads N` invariant provable rather than hoped-for.
+
+/// The inter-chip interconnect: a linear chain of links (chip `i` talks
+/// to chip `i+1`), each hop adding a fixed latency, all hops sharing one
+/// words-per-cycle link width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricConfig {
+    /// Fixed cycles added per hop traversed (0 = wires are free).
+    pub hop_latency: u64,
+    /// Payload words moved per cycle once the route is open.
+    pub link_words_per_cycle: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            hop_latency: 4,
+            link_words_per_cycle: 4,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Cycles to move `words` across `hops` links: route-opening latency
+    /// plus serialization at the link width.  Zero words cost zero cycles
+    /// (no transfer is issued), matching the deadlock-freedom tests'
+    /// zero-latency-fabric case.
+    pub fn transfer_cycles(&self, words: usize, hops: u64) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        let width = self.link_words_per_cycle.max(1);
+        hops * self.hop_latency + (words as u64).div_ceil(width)
+    }
+}
+
+/// The platform-shared DRAM all chips load weights/inputs from and store
+/// outputs to — one channel, so concurrent streams serialize (the timing
+/// recurrence orders them deterministically by stage then microbatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedDramConfig {
+    /// Fixed access latency per burst.
+    pub base_latency: u64,
+    /// Streaming words per cycle once the burst is open.
+    pub words_per_cycle: u64,
+}
+
+impl Default for SharedDramConfig {
+    fn default() -> Self {
+        SharedDramConfig {
+            base_latency: 8,
+            words_per_cycle: 2,
+        }
+    }
+}
+
+impl SharedDramConfig {
+    /// Cycles to stream `words` out of the shared DRAM.
+    pub fn load_cycles(&self, words: usize) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        self.base_latency + (words as u64).div_ceil(self.words_per_cycle.max(1))
+    }
+
+    /// Cycles to stream `words` into the shared DRAM (same channel model).
+    pub fn store_cycles(&self, words: usize) -> u64 {
+        self.load_cycles(words)
+    }
+}
+
+/// A platform: `chips` accelerators in a chain behind one fabric and one
+/// shared DRAM, pipelining `microbatches` independent inferences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlatformDesc {
+    /// Number of accelerator chips (pipeline stages available).
+    pub chips: usize,
+    pub fabric: FabricConfig,
+    pub dram: SharedDramConfig,
+    /// Independent inferences pipelined through the chip stages.  More
+    /// microbatches amortize the pipeline fill/drain and expose more
+    /// thread-level parallelism to the simulator.
+    pub microbatches: usize,
+}
+
+impl Default for PlatformDesc {
+    fn default() -> Self {
+        PlatformDesc {
+            chips: 1,
+            fabric: FabricConfig::default(),
+            dram: SharedDramConfig::default(),
+            microbatches: 4,
+        }
+    }
+}
+
+impl PlatformDesc {
+    pub fn new(chips: usize) -> Self {
+        PlatformDesc {
+            chips: chips.max(1),
+            ..PlatformDesc::default()
+        }
+    }
+
+    pub fn with_hop_latency(mut self, hop_latency: u64) -> Self {
+        self.fabric.hop_latency = hop_latency;
+        self
+    }
+
+    pub fn with_microbatches(mut self, microbatches: usize) -> Self {
+        self.microbatches = microbatches.max(1);
+        self
+    }
+
+    /// Chip counts a DSE space sweeps: powers of two up to `max`.
+    pub fn enumerate_chip_counts(max: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut c = 1;
+        while c <= max.max(1) {
+            out.push(c);
+            c *= 2;
+        }
+        out
+    }
+
+    /// Fabric hop latencies a DSE space sweeps.
+    pub fn enumerate_hop_latencies() -> Vec<u64> {
+        vec![0, 4, 16]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_is_hops_plus_serialization() {
+        let f = FabricConfig {
+            hop_latency: 4,
+            link_words_per_cycle: 4,
+        };
+        assert_eq!(f.transfer_cycles(0, 3), 0, "no words, no transfer");
+        assert_eq!(f.transfer_cycles(1, 1), 4 + 1);
+        assert_eq!(f.transfer_cycles(16, 1), 4 + 4);
+        assert_eq!(f.transfer_cycles(17, 2), 8 + 5);
+        // A zero-latency fabric still serializes payload.
+        let free = FabricConfig {
+            hop_latency: 0,
+            link_words_per_cycle: 4,
+        };
+        assert_eq!(free.transfer_cycles(8, 5), 2);
+    }
+
+    #[test]
+    fn dram_streaming_cost() {
+        let d = SharedDramConfig {
+            base_latency: 8,
+            words_per_cycle: 2,
+        };
+        assert_eq!(d.load_cycles(0), 0);
+        assert_eq!(d.load_cycles(1), 9);
+        assert_eq!(d.load_cycles(64), 8 + 32);
+        assert_eq!(d.store_cycles(64), d.load_cycles(64));
+    }
+
+    #[test]
+    fn enumeration_hooks_cover_powers_of_two() {
+        assert_eq!(PlatformDesc::enumerate_chip_counts(4), vec![1, 2, 4]);
+        assert_eq!(PlatformDesc::enumerate_chip_counts(1), vec![1]);
+        assert_eq!(PlatformDesc::enumerate_chip_counts(7), vec![1, 2, 4]);
+        assert!(!PlatformDesc::enumerate_hop_latencies().is_empty());
+    }
+
+    #[test]
+    fn builders_clamp_degenerate_values() {
+        let p = PlatformDesc::new(0).with_microbatches(0);
+        assert_eq!(p.chips, 1);
+        assert_eq!(p.microbatches, 1);
+        let p = PlatformDesc::new(4).with_hop_latency(0).with_microbatches(8);
+        assert_eq!((p.chips, p.fabric.hop_latency, p.microbatches), (4, 0, 8));
+    }
+}

@@ -4,9 +4,10 @@
 use crate::aidg;
 use crate::arch::gamma::GammaConfig;
 use crate::arch::oma::OmaConfig;
+use crate::arch::platform::PlatformDesc;
 use crate::arch::systolic::SystolicConfig;
 use crate::dnn::graph::DnnGraph;
-use crate::dnn::lowering::{self, SimMode};
+use crate::dnn::lowering::{self, partition_graph, SimMode};
 use crate::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
 use crate::mapping::uma::{self, Machine, Operator, TargetConfig};
 use crate::sim::backend::BackendKind;
@@ -161,6 +162,67 @@ impl Workload {
     }
 }
 
+/// A multi-accelerator platform wrapper around the job's target: `chips`
+/// copies of the target behind a shared fabric + DRAM, pipelining
+/// `microbatches` inferences of the (layered) workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlatformSpec {
+    pub chips: usize,
+    /// Per-hop fabric latency in cycles (link width stays the default).
+    pub hop_latency: u64,
+    pub microbatches: usize,
+    /// Worker threads for the parallel simulation; `0` = lease from the
+    /// process-wide `--jobs` budget.  Never part of the result identity —
+    /// any thread count reports identical cycles.
+    pub threads: usize,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> Self {
+        let d = PlatformDesc::default();
+        PlatformSpec {
+            chips: 4,
+            hop_latency: d.fabric.hop_latency,
+            microbatches: d.microbatches,
+            threads: 0,
+        }
+    }
+}
+
+impl PlatformSpec {
+    pub fn desc(&self) -> PlatformDesc {
+        PlatformDesc::new(self.chips)
+            .with_hop_latency(self.hop_latency)
+            .with_microbatches(self.microbatches)
+    }
+
+    pub fn describe(&self, target: &str) -> String {
+        format!(
+            "platform{}[{target}]_h{}_m{}",
+            self.chips, self.hop_latency, self.microbatches
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("chips", Json::num(self.chips as f64)),
+            ("hop_latency", Json::num(self.hop_latency as f64)),
+            ("microbatches", Json::num(self.microbatches as f64)),
+            ("threads", Json::num(self.threads as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let d = PlatformSpec::default();
+        Ok(PlatformSpec {
+            chips: v.field("chips")?.as_usize()?.max(1),
+            hop_latency: v.opt_u64("hop_latency", d.hop_latency),
+            microbatches: v.opt_u64("microbatches", d.microbatches as u64) as usize,
+            threads: v.opt_u64("threads", 0) as usize,
+        })
+    }
+}
+
 /// Simulation mode for the job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimModeSpec {
@@ -192,6 +254,9 @@ pub struct JobSpec {
     /// memory-bound jobs.
     pub backend: BackendKind,
     pub max_cycles: u64,
+    /// `Some` shards the (layered) workload across a multi-chip platform
+    /// and pipelines microbatches through it.
+    pub platform: Option<PlatformSpec>,
 }
 
 pub fn default_max_cycles() -> u64 {
@@ -220,7 +285,7 @@ impl JobResult {
     fn err(spec: &JobSpec, msg: String, wall_micros: u64) -> Self {
         JobResult {
             id: spec.id,
-            target: spec.target.describe(),
+            target: spec.target_label(),
             workload: spec.workload.describe(),
             mode: spec.mode,
             cycles: 0,
@@ -230,7 +295,7 @@ impl JobResult {
             numerics_ok: None,
             wall_micros,
             error: Some(msg),
-            area_proxy: spec.target.area_proxy(),
+            area_proxy: spec.area_proxy(),
         }
     }
 }
@@ -259,7 +324,7 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
     };
     let base = JobResult {
         id: spec.id,
-        target: spec.target.describe(),
+        target: spec.target_label(),
         workload: spec.workload.describe(),
         mode: spec.mode,
         cycles: 0,
@@ -269,7 +334,7 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
         numerics_ok: None,
         wall_micros: 0,
         error: None,
-        area_proxy: spec.target.area_proxy(),
+        area_proxy: spec.area_proxy(),
     };
 
     // Feasibility gate (same predicate the DSE pre-filter prunes on): an
@@ -278,6 +343,26 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
     // abort — fail fast, identically on every path.
     if let Some(reason) = spec.infeasible() {
         return done(JobResult::err(spec, reason, 0));
+    }
+
+    // Platform jobs shard a layered schedule across chips; a single GeMM
+    // has no layer boundaries to cut, and the AIDG estimator models one
+    // machine, not a fabric.
+    if spec.platform.is_some() {
+        if matches!(spec.workload, Workload::Gemm { .. }) {
+            return done(JobResult::err(
+                spec,
+                "platform jobs need a layered workload (mlp|transformer)".into(),
+                0,
+            ));
+        }
+        if spec.mode == SimModeSpec::Estimate {
+            return done(JobResult::err(
+                spec,
+                "platform jobs support functional|timed modes only".into(),
+                0,
+            ));
+        }
     }
 
     match &spec.workload {
@@ -384,6 +469,61 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                 SimModeSpec::Functional => SimMode::Functional,
                 _ => SimMode::Timed(spec.backend),
             };
+            if let Some(ps) = &spec.platform {
+                // Multi-chip platform: partition the schedule, pipeline
+                // microbatches, lease simulation threads from the shared
+                // `--jobs` budget when the spec leaves them at auto.
+                let plan = match partition_graph(&graph, batch, ps.chips) {
+                    Ok(p) => p,
+                    Err(e) => return done(JobResult::err(spec, e.to_string(), 0)),
+                };
+                let machines: Vec<&Machine> = vec![machine; plan.stages.len()];
+                let desc = ps.desc();
+                let lease =
+                    (ps.threads == 0).then(|| crate::util::jobs::lease(desc.microbatches));
+                let threads = lease.as_ref().map_or(ps.threads, |l| l.granted);
+                return match crate::sim::platform::run_platform(
+                    &machines,
+                    &graph,
+                    &plan,
+                    batch,
+                    &desc,
+                    mode,
+                    threads,
+                    spec.max_cycles,
+                ) {
+                    Ok(rep) => {
+                        if rep.total_cycles > spec.max_cycles {
+                            return done(JobResult::err(
+                                spec,
+                                format!(
+                                    "platform makespan {} exceeds the {}-cycle budget",
+                                    rep.total_cycles, spec.max_cycles
+                                ),
+                                0,
+                            ));
+                        }
+                        let ok = rep.outputs.iter().enumerate().all(|(b, out)| {
+                            let x = crate::sim::platform::microbatch_input(&graph, batch, b);
+                            let want = graph.forward_ref(&x, batch);
+                            out.iter().zip(&want).all(|(g, w)| (g - w).abs() < 1e-2)
+                        });
+                        done(JobResult {
+                            cycles: rep.total_cycles,
+                            instructions: rep.total_instructions,
+                            ipc: if rep.total_cycles > 0 {
+                                rep.total_instructions as f64 / rep.total_cycles as f64
+                            } else {
+                                0.0
+                            },
+                            utilization: rep.utilization,
+                            numerics_ok: Some(ok),
+                            ..base
+                        })
+                    }
+                    Err(e) => done(JobResult::err(spec, e.to_string(), 0)),
+                };
+            }
             let lg = match lowering::lower_graph(machine, &graph, batch) {
                 Ok(l) => l,
                 Err(e) => return done(JobResult::err(spec, e.to_string(), 0)),
@@ -592,6 +732,22 @@ impl JobSpec {
     /// sound.  This is the *single* definition the DSE pre-filter
     /// (`dse::lower_bound_cycles`) and the feasibility check below share.
     pub fn lower_bound_cycles(&self) -> u64 {
+        let single = self.single_chip_bound_cycles();
+        match &self.platform {
+            // Busy-time argument: the platform performs `microbatches`
+            // full inferences, each lower-bounded by the single-chip
+            // bound, spread across at most `chips` chips running
+            // concurrently — makespan ≥ ⌈m·base/chips⌉.  Fabric and DRAM
+            // costs only add, so this stays sound.
+            Some(p) => {
+                let m = p.microbatches.max(1) as u64;
+                (m * single).div_ceil(p.chips.max(1) as u64)
+            }
+            None => single,
+        }
+    }
+
+    fn single_chip_bound_cycles(&self) -> u64 {
         let rl = self.target.roofline();
         match &self.workload {
             Workload::Gemm { m, k, n, .. } => rl.gemm_cycles(&GemmParams::new(*m, *k, *n)),
@@ -673,31 +829,64 @@ impl JobSpec {
         None
     }
 
+    /// Result-row label for the job's target: the plain target, or the
+    /// platform wrapper around it (`platform4[systolic_2x2]_h4_m8`).
+    pub fn target_label(&self) -> String {
+        let t = self.target.describe();
+        match &self.platform {
+            Some(p) => p.describe(&t),
+            None => t,
+        }
+    }
+
+    /// Area proxy for Pareto plots: a platform replicates the chip.
+    pub fn area_proxy(&self) -> f64 {
+        let chips = self.platform.map_or(1, |p| p.chips.max(1));
+        self.target.area_proxy() * chips as f64
+    }
+
     /// Canonical memo key: FNV-1a over the canonical JSON of the spec's
     /// *semantic identity*.  The id is dropped (it names the request, not
     /// the result), the workload is normalized per target
     /// ([`Workload::canonical_for`]), and the timing backend is dropped —
-    /// both backends report identical cycle counts by construction (a
-    /// tested invariant), so a result computed on either answers both.
+    /// all backends report identical cycle counts by construction (a
+    /// tested invariant), so a result computed on any answers all.  The
+    /// platform's thread count is dropped for the same reason; its
+    /// chips/fabric/microbatches stay — they change the reported cycles.
     pub fn canonical_key(&self) -> u64 {
-        let v = Json::obj(vec![
+        let mut fields = vec![
             ("target", self.target.to_json()),
             ("workload", self.workload.canonical_for(&self.target).to_json()),
             ("mode", Json::str(self.mode.name())),
             ("max_cycles", Json::num(self.max_cycles as f64)),
-        ]);
+        ];
+        if let Some(p) = &self.platform {
+            fields.push((
+                "platform",
+                Json::obj(vec![
+                    ("chips", Json::num(p.chips as f64)),
+                    ("hop_latency", Json::num(p.hop_latency as f64)),
+                    ("microbatches", Json::num(p.microbatches as f64)),
+                ]),
+            ));
+        }
+        let v = Json::obj(fields);
         crate::util::hash::fnv1a_str(&v.to_string())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::num(self.id as f64)),
             ("target", self.target.to_json()),
             ("workload", self.workload.to_json()),
             ("mode", Json::str(self.mode.name())),
             ("backend", Json::str(self.backend.name())),
             ("max_cycles", Json::num(self.max_cycles as f64)),
-        ])
+        ];
+        if let Some(p) = &self.platform {
+            fields.push(("platform", p.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
@@ -715,6 +904,11 @@ impl JobSpec {
                 .and_then(BackendKind::from_name)
                 .unwrap_or_default(),
             max_cycles: v.opt_u64("max_cycles", default_max_cycles()),
+            // Absent = legacy single-chip job.
+            platform: match v.get("platform") {
+                Some(Json::Null) | None => None,
+                Some(p) => Some(PlatformSpec::from_json(p)?),
+            },
         })
     }
 
@@ -794,6 +988,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::EventDriven,
             max_cycles: 1_000_000,
+            platform: None,
         };
         let line = spec.to_json().to_string();
         let back = JobSpec::parse(&line).unwrap();
@@ -839,6 +1034,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::CycleStepped,
             max_cycles: 1_000_000,
+            platform: None,
         };
         // Different id / backend / (target-irrelevant) tile+order: same key.
         let same = JobSpec {
@@ -916,6 +1112,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::CycleStepped,
             max_cycles: 10_000_000,
+            platform: None,
         };
         let r = execute(&spec);
         assert_eq!(r.error, None);
@@ -946,6 +1143,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::EventDriven,
             max_cycles: 500_000_000,
+            platform: None,
         };
         let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(back, spec);
@@ -972,6 +1170,84 @@ mod tests {
     }
 
     #[test]
+    fn platform_job_roundtrips_and_executes() {
+        let spec = JobSpec {
+            id: 21,
+            target: TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            workload: Workload::Mlp {
+                small: true,
+                batch: 4,
+            },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::ParallelEvent,
+            max_cycles: 500_000_000,
+            platform: Some(PlatformSpec {
+                chips: 2,
+                hop_latency: 4,
+                microbatches: 3,
+                threads: 2,
+            }),
+        };
+        let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(spec.target_label(), "platform2[oma+cache]_h4_m3");
+        assert_eq!(spec.area_proxy(), 2.0 * spec.target.area_proxy());
+
+        let r = execute(&spec);
+        assert_eq!(r.error, None, "{r:?}");
+        assert!(r.cycles > 0);
+        assert_eq!(r.numerics_ok, Some(true));
+        assert!(r.cycles >= spec.lower_bound_cycles());
+
+        // Thread count never changes the reported cycles — or the memo key.
+        let serial = execute(&JobSpec {
+            platform: Some(PlatformSpec {
+                threads: 1,
+                ..spec.platform.unwrap()
+            }),
+            ..spec.clone()
+        });
+        assert_eq!(serial.cycles, r.cycles);
+        assert_eq!(serial.instructions, r.instructions);
+        assert_eq!(
+            spec.canonical_key(),
+            JobSpec {
+                platform: Some(PlatformSpec {
+                    threads: 8,
+                    ..spec.platform.unwrap()
+                }),
+                ..spec.clone()
+            }
+            .canonical_key()
+        );
+        // …but the platform shape is part of the identity.
+        assert_ne!(
+            spec.canonical_key(),
+            JobSpec {
+                platform: None,
+                ..spec.clone()
+            }
+            .canonical_key()
+        );
+
+        // A GeMM has no layer boundaries to shard across chips.
+        let bad = execute(&JobSpec {
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            ..spec
+        });
+        assert!(bad.error.unwrap().contains("layered workload"));
+    }
+
+    #[test]
     fn estimate_mode_is_faster_than_timed() {
         let mk = |mode| JobSpec {
             id: 0,
@@ -989,6 +1265,7 @@ mod tests {
             mode,
             backend: BackendKind::default(),
             max_cycles: 50_000_000,
+            platform: None,
         };
         let timed = execute(&mk(SimModeSpec::Timed));
         let est = execute(&mk(SimModeSpec::Estimate));
@@ -1070,6 +1347,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::default(),
             max_cycles: 10, // guaranteed cycle-limit error
+            platform: None,
         };
         let r = execute(&spec);
         assert!(r.error.is_some());

@@ -34,6 +34,6 @@ pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGua
     }
 }
 
-pub use job::{JobResult, JobSpec, SimModeSpec, TargetSpec, Workload};
+pub use job::{JobResult, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
 pub use machines::build_cached;
 pub use pool::{run_jobs, run_jobs_blocking};

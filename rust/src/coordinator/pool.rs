@@ -33,6 +33,11 @@ pub fn run_jobs(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
     if n == 0 {
         return Vec::new();
     }
+    // Lease worker threads from the process-wide `--jobs` budget so a DSE
+    // sweep running platform jobs (which lease their own simulation
+    // threads) cannot oversubscribe the host.
+    let lease = crate::util::jobs::lease(workers);
+    let workers = lease.granted;
     // Fetch each target's machine from the process-wide cache (built at
     // most once per distinct config, shared across batches and workers).
     type Work = (Option<Arc<Machine>>, JobSpec);
@@ -104,6 +109,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: Default::default(),
             max_cycles: 10_000_000,
+            platform: None,
         }
     }
 

@@ -63,7 +63,9 @@ impl Slots {
 /// (ECONNABORTED and friends) are transient on a loaded listener and must
 /// not kill the serving loop; only the fatal "listener gone" path returns.
 pub fn serve(listener: TcpListener, workers: usize) -> std::io::Result<()> {
-    let slots = Slots::new(workers);
+    // Clamp the slot count to the process-wide `--jobs` budget so a
+    // server colocated with sweeps cannot oversubscribe the host.
+    let slots = Slots::new(workers.min(crate::util::jobs::configured()).max(1));
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -148,6 +150,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: Default::default(),
             max_cycles: 10_000_000,
+            platform: None,
         };
         let mut stream = TcpStream::connect(addr).expect("connect");
         let line = spec.to_json().to_string() + "\n";
@@ -193,6 +196,7 @@ mod tests {
                 mode: SimModeSpec::Estimate,
                 backend: Default::default(),
                 max_cycles: 10_000_000,
+                platform: None,
             };
             let line = spec.to_json().to_string() + "\n";
             stream.write_all(line.as_bytes()).unwrap();

@@ -448,40 +448,64 @@ pub fn roofline_ops(graph: &DnnGraph, batch: usize) -> Vec<Operator> {
     ops
 }
 
-/// Run the lowered schedule: per-layer simulation with host-managed
-/// activation transfer, returning cycles and the final output.
-pub fn run_schedule(
+/// Host-side execution state threaded between schedule steps: the
+/// running activation matrix plus the numbered stash slots.  One `StepCtx`
+/// is one in-flight inference — the platform simulator keeps an
+/// independent context per microbatch chain, which is exactly why chains
+/// can run on separate threads without sharing anything.
+#[derive(Debug, Clone)]
+pub struct StepCtx {
+    /// Running activations (rows × features, unpadded).
+    pub act: Vec<f32>,
+    /// Stash slots (host-managed activation saves).
+    pub stash: HashMap<usize, Vec<f32>>,
+}
+
+impl StepCtx {
+    pub fn new(input: &[f32]) -> Self {
+        StepCtx {
+            act: input.to_vec(),
+            stash: HashMap::new(),
+        }
+    }
+}
+
+/// Execute one schedule step against `ctx`: host glue steps transform the
+/// activation in place and return `None`; mapped steps run their program
+/// on `machine` and return the layer's report.  Extracted from
+/// [`run_schedule`] so the platform simulator can drive arbitrary step
+/// slices per chip with identical semantics.
+pub fn run_step(
     machine: &Machine,
-    lg: &LoweredGraph,
-    input: &[f32],
+    step: &Step,
+    batch: usize,
+    ctx: &mut StepCtx,
     mode: SimMode,
     max_cycles: u64,
-) -> Result<ScheduleReport, LowerError> {
-    let mut report = ScheduleReport::default();
-    let batch = lg.batch;
-    let mut act = input.to_vec(); // rows × features, unpadded
-    let mut stash: HashMap<usize, Vec<f32>> = HashMap::new();
-
-    for step in &lg.steps {
-        let ll = match step {
-            Step::Mapped(ll) => ll,
-            Step::MaxPool2x2 { c, h, w } => {
-                act = super::graph::maxpool2x2(&act, batch, *c, *h, *w);
-                continue;
-            }
-            Step::Flatten => continue,
-            Step::Stash { slot } => {
-                stash.insert(*slot, act.clone());
-                continue;
-            }
-            Step::Recall { slot } => {
-                act = stash
-                    .get(slot)
-                    .expect("lower_graph validated stash slots")
-                    .clone();
-                continue;
-            }
-        };
+) -> Result<Option<LayerReport>, LowerError> {
+    let ll = match step {
+        Step::Mapped(ll) => ll,
+        Step::MaxPool2x2 { c, h, w } => {
+            ctx.act = super::graph::maxpool2x2(&ctx.act, batch, *c, *h, *w);
+            return Ok(None);
+        }
+        Step::Flatten => return Ok(None),
+        Step::Stash { slot } => {
+            ctx.stash.insert(*slot, ctx.act.clone());
+            return Ok(None);
+        }
+        Step::Recall { slot } => {
+            ctx.act = ctx
+                .stash
+                .get(slot)
+                .expect("lower_graph validated stash slots")
+                .clone();
+            return Ok(None);
+        }
+    };
+    {
+        let act = &mut ctx.act;
+        let stash = &mut ctx.stash;
         let (m, k, n) = ll.logical;
         let gemm = ll.op.gemm_params().copied();
 
@@ -558,7 +582,7 @@ pub fn run_schedule(
         };
 
         // Unpad, then post-process on the host.
-        act = match (&gemm, &ll.conv) {
+        *act = match (&gemm, &ll.conv) {
             (None, _) => c_out, // row-wise: logical output, no padding
             (Some(p), None) => {
                 // GeMM/Dense: unpad; apply bias + activation where not
@@ -602,7 +626,7 @@ pub fn run_schedule(
             }
         };
 
-        report.per_layer.push(LayerReport {
+        Ok(Some(LayerReport {
             name: ll.name.clone(),
             cycles,
             instructions: instrs,
@@ -612,12 +636,275 @@ pub fn run_schedule(
             } else {
                 0.0
             },
-        });
-        report.total_cycles += cycles;
-        report.total_instructions += instrs;
+        }))
     }
-    report.output = act;
+}
+
+/// Run the lowered schedule: per-layer simulation with host-managed
+/// activation transfer, returning cycles and the final output.
+pub fn run_schedule(
+    machine: &Machine,
+    lg: &LoweredGraph,
+    input: &[f32],
+    mode: SimMode,
+    max_cycles: u64,
+) -> Result<ScheduleReport, LowerError> {
+    let mut report = ScheduleReport::default();
+    let mut ctx = StepCtx::new(input);
+    for step in &lg.steps {
+        if let Some(lr) = run_step(machine, step, lg.batch, &mut ctx, mode, max_cycles)? {
+            report.total_cycles += lr.cycles;
+            report.total_instructions += lr.instructions;
+            report.per_layer.push(lr);
+        }
+    }
+    report.output = ctx.act;
     Ok(report)
+}
+
+// ---------------------------------------------------------------------
+// Layer-wise platform partitioning
+// ---------------------------------------------------------------------
+
+/// One platform pipeline stage: a contiguous slice of the schedule (layer
+/// indices — `lower_graph` emits exactly one [`Step`] per graph layer, so
+/// the range indexes both `graph.layers` and `LoweredGraph::steps`), its
+/// analytical compute cost, its boundary activation shapes, and the
+/// weight words its chip streams from the shared DRAM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSchedule {
+    pub steps: std::ops::Range<usize>,
+    /// Analytical cost (MACs for GeMM-backed layers, streamed words for
+    /// row-wise layers) — the min-max partitioning objective.
+    pub cost: u64,
+    /// Activation shape entering the stage (rows × features).
+    pub in_rows: usize,
+    pub in_feat: usize,
+    /// Activation shape leaving the stage.
+    pub out_rows: usize,
+    pub out_feat: usize,
+    /// Dense/conv parameter words resident on this stage's chip.
+    pub weight_words: usize,
+}
+
+impl StageSchedule {
+    /// Words entering the stage (the inter-chip transfer payload).
+    pub fn in_words(&self) -> usize {
+        self.in_rows * self.in_feat
+    }
+
+    /// Words leaving the stage.
+    pub fn out_words(&self) -> usize {
+        self.out_rows * self.out_feat
+    }
+}
+
+/// A DNN graph sharded across platform chips: one [`StageSchedule`] per
+/// chip actually used (never more stages than splittable atoms exist).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlatformPlan {
+    pub stages: Vec<StageSchedule>,
+}
+
+impl PlatformPlan {
+    /// Largest stage cost — the pipeline's steady-state bottleneck.
+    pub fn bottleneck_cost(&self) -> u64 {
+        self.stages.iter().map(|s| s.cost).max().unwrap_or(0)
+    }
+}
+
+/// Per-layer analytical trace: (cost, weight_words, rows/feat *before*
+/// the layer), mirroring `lower_graph`'s shape tracking.  `boundaries`
+/// additionally gets the shape after the final layer.
+struct LayerTrace {
+    cost: Vec<u64>,
+    weight_words: Vec<usize>,
+    /// (rows, feat) before layer i, plus one trailing entry after the
+    /// last layer — length `layers + 1`.
+    boundaries: Vec<(usize, usize)>,
+}
+
+fn trace_layers(graph: &DnnGraph, batch: usize) -> LayerTrace {
+    let mut cost = Vec::with_capacity(graph.layers.len());
+    let mut weight_words = Vec::with_capacity(graph.layers.len());
+    let mut boundaries = Vec::with_capacity(graph.layers.len() + 1);
+    let mut feat = graph.input_features;
+    let mut rows = batch;
+    let mut slots: HashMap<usize, (usize, usize)> = HashMap::new();
+    for layer in &graph.layers {
+        boundaries.push((rows, feat));
+        let (c, w) = match layer {
+            Layer::Dense {
+                in_features,
+                out_features,
+                ..
+            } => {
+                let c = (rows * in_features * out_features) as u64;
+                let w = in_features * out_features + out_features;
+                feat = *out_features;
+                (c, w)
+            }
+            Layer::Conv2d { conv, .. } => {
+                let g = conv.as_gemm();
+                let c = (batch * g.m * g.k * g.n) as u64;
+                let w = conv.out_c * conv.in_c * conv.k_h * conv.k_w;
+                feat = conv.out_c * conv.out_h() * conv.out_w();
+                (c, w)
+            }
+            Layer::MaxPool2x2 => {
+                let c = (rows * feat) as u64;
+                feat /= 4;
+                (c, 0)
+            }
+            Layer::Flatten => (0, 0),
+            Layer::MatMul { slot, .. } => {
+                let (_, bcols) = slots.get(slot).copied().unwrap_or((feat, feat));
+                let c = (rows * feat * bcols) as u64;
+                feat = bcols;
+                (c, 0)
+            }
+            Layer::Softmax | Layer::LayerNorm { .. } | Layer::Gelu => ((rows * feat) as u64, 0),
+            Layer::AddResidual { .. } => ((rows * feat) as u64, 0),
+            Layer::Transpose => {
+                let c = (rows * feat) as u64;
+                std::mem::swap(&mut rows, &mut feat);
+                (c, 0)
+            }
+            Layer::Stash { slot } => {
+                slots.insert(*slot, (rows, feat));
+                (0, 0)
+            }
+            Layer::Recall { slot } => {
+                if let Some(&(r, c)) = slots.get(slot) {
+                    rows = r;
+                    feat = c;
+                }
+                (0, 0)
+            }
+        };
+        cost.push(c);
+        weight_words.push(w);
+    }
+    boundaries.push((rows, feat));
+    LayerTrace {
+        cost,
+        weight_words,
+        boundaries,
+    }
+}
+
+/// Boundary positions (between layer `i-1` and `i`) that no stash-slot
+/// live range crosses — a split is legal only where every slot a later
+/// layer reads is also written later, so each chip's stash starts empty.
+fn legal_boundaries(graph: &DnnGraph) -> Vec<bool> {
+    let n = graph.layers.len();
+    // For each read, the position of the most recent preceding write.
+    let mut last_write: HashMap<usize, usize> = HashMap::new();
+    // crossing[i] = some live range spans the boundary before layer i.
+    let mut crossing = vec![false; n + 1];
+    for (idx, layer) in graph.layers.iter().enumerate() {
+        let read = match layer {
+            Layer::MatMul { slot, .. }
+            | Layer::AddResidual { slot }
+            | Layer::Recall { slot } => Some(*slot),
+            _ => None,
+        };
+        if let Some(slot) = read {
+            if let Some(&w) = last_write.get(&slot) {
+                // The value written at w is read at idx: boundaries
+                // strictly inside (w, idx] are illegal.
+                for b in crossing.iter_mut().take(idx + 1).skip(w + 1) {
+                    *b = true;
+                }
+            }
+        }
+        if let Layer::Stash { slot } = layer {
+            last_write.insert(*slot, idx);
+        }
+    }
+    crossing.iter().map(|&c| !c).collect()
+}
+
+/// Shard `graph` across up to `chips` pipeline stages: contiguous layer
+/// ranges cut only at stash-legal boundaries, balanced by exact min-max
+/// dynamic programming over the analytical per-layer costs.  Uses fewer
+/// stages than `chips` when the graph has fewer splittable atoms.
+pub fn partition_graph(
+    graph: &DnnGraph,
+    batch: usize,
+    chips: usize,
+) -> Result<PlatformPlan, LowerError> {
+    if graph.layers.is_empty() {
+        return Err(LowerError::BadGraph(0, "cannot partition an empty graph".into()));
+    }
+    let trace = trace_layers(graph, batch);
+    let legal = legal_boundaries(graph);
+
+    // Atoms: maximal unsplittable layer runs between legal boundaries.
+    let mut atom_start = vec![0usize];
+    for (i, &ok) in legal.iter().enumerate().take(graph.layers.len()).skip(1) {
+        if ok {
+            atom_start.push(i);
+        }
+    }
+    atom_start.push(graph.layers.len());
+    let atoms = atom_start.len() - 1;
+    let atom_cost: Vec<u64> = (0..atoms)
+        .map(|a| trace.cost[atom_start[a]..atom_start[a + 1]].iter().sum())
+        .collect();
+
+    let stages = chips.max(1).min(atoms);
+    // dp[s][i] = minimal max-stage-cost partitioning atoms[..i] into s
+    // stages; cut[s][i] = the split position achieving it.
+    let prefix: Vec<u64> = std::iter::once(0)
+        .chain(atom_cost.iter().scan(0u64, |acc, &c| {
+            *acc += c;
+            Some(*acc)
+        }))
+        .collect();
+    let range_cost = |a: usize, b: usize| prefix[b] - prefix[a];
+    let mut dp = vec![vec![u64::MAX; atoms + 1]; stages + 1];
+    let mut cut = vec![vec![0usize; atoms + 1]; stages + 1];
+    dp[0][0] = 0;
+    for s in 1..=stages {
+        for i in s..=atoms {
+            for j in (s - 1)..i {
+                if dp[s - 1][j] == u64::MAX {
+                    continue;
+                }
+                let cand = dp[s - 1][j].max(range_cost(j, i));
+                if cand < dp[s][i] {
+                    dp[s][i] = cand;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+
+    // Walk the cuts back into atom ranges, then into layer ranges.
+    let mut splits = vec![atoms];
+    let mut i = atoms;
+    for s in (1..=stages).rev() {
+        i = cut[s][i];
+        splits.push(i);
+    }
+    splits.reverse(); // [0, …, atoms]
+
+    let mut plan = Vec::with_capacity(stages);
+    for w in splits.windows(2) {
+        let (a0, a1) = (w[0], w[1]);
+        let (l0, l1) = (atom_start[a0], atom_start[a1]);
+        plan.push(StageSchedule {
+            steps: l0..l1,
+            cost: range_cost(a0, a1),
+            in_rows: trace.boundaries[l0].0,
+            in_feat: trace.boundaries[l0].1,
+            out_rows: trace.boundaries[l1].0,
+            out_feat: trace.boundaries[l1].1,
+            weight_words: trace.weight_words[l0..l1].iter().sum(),
+        });
+    }
+    Ok(PlatformPlan { stages: plan })
 }
 
 #[cfg(test)]
@@ -897,5 +1184,99 @@ mod tests {
         let mlp = roofline_ops(&DnnGraph::mlp_small(), 4);
         assert_eq!(mlp.len(), 2);
         assert!(mlp.iter().all(|o| o.gemm_params().is_some()));
+    }
+
+    // ----------------------------------------------------- partitioning
+
+    #[test]
+    fn run_step_slices_reproduce_run_schedule() {
+        // Driving the schedule step-by-step through StepCtx is the same
+        // computation run_schedule performs — the platform simulator
+        // depends on this equivalence.
+        let g = DnnGraph::tiny_transformer();
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let lg = lower_graph(&machine, &g, 8).unwrap();
+        let x = g.input_batch(8);
+        let whole = run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+        let mut ctx = StepCtx::new(&x);
+        for step in &lg.steps {
+            run_step(&machine, step, 8, &mut ctx, SimMode::Functional, 500_000_000).unwrap();
+        }
+        assert_eq!(ctx.act, whole.output);
+    }
+
+    #[test]
+    fn transformer_partitions_at_stash_safe_boundaries() {
+        let g = DnnGraph::tiny_transformer();
+        // Live slot ranges pin layers 2–15 and 17–21 together: the legal
+        // split points are exactly {1, 2, 16, 17, 22, 23}.
+        let legal = legal_boundaries(&g);
+        let cuts: Vec<usize> = (1..g.layers.len()).filter(|&i| legal[i]).collect();
+        assert_eq!(cuts, vec![1, 2, 16, 17, 22, 23]);
+
+        let plan = partition_graph(&g, 8, 4).unwrap();
+        assert_eq!(plan.stages.len(), 4);
+        // Stages tile the schedule contiguously.
+        assert_eq!(plan.stages[0].steps.start, 0);
+        assert_eq!(plan.stages.last().unwrap().steps.end, g.layers.len());
+        for w in plan.stages.windows(2) {
+            assert_eq!(w[0].steps.end, w[1].steps.start);
+            // Boundary shapes chain: producer out == consumer in.
+            assert_eq!((w[0].out_rows, w[0].out_feat), (w[1].in_rows, w[1].in_feat));
+        }
+        // The attention block (layers 2..=15) is unsplittable, so it
+        // dominates whichever stage holds it.
+        let attn = plan
+            .stages
+            .iter()
+            .find(|s| s.steps.contains(&11))
+            .expect("some stage holds the attention matmul");
+        assert!(attn.steps.start <= 2 && attn.steps.end >= 16);
+        assert_eq!(plan.bottleneck_cost(), attn.cost);
+        // Weight words are conserved across the shard.
+        let total: usize = plan.stages.iter().map(|s| s.weight_words).sum();
+        assert_eq!(total, g.parameter_count());
+    }
+
+    #[test]
+    fn partitioning_clamps_to_available_atoms() {
+        let g = DnnGraph::mlp_small();
+        // 2 dense layers, no stash slots: at most 2 stages.
+        let plan = partition_graph(&g, 4, 8).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].in_words(), 4 * 16);
+        assert_eq!(plan.stages[0].out_words(), 4 * 24);
+        assert_eq!(plan.stages[1].out_words(), 4 * 8);
+        // chips = 1 keeps the whole model on one stage.
+        let one = partition_graph(&g, 4, 1).unwrap();
+        assert_eq!(one.stages.len(), 1);
+        assert_eq!(one.stages[0].cost, plan.stages[0].cost + plan.stages[1].cost);
+        // An empty graph cannot be partitioned.
+        let empty = DnnGraph {
+            input_features: 4,
+            layers: vec![],
+            name: "empty".into(),
+        };
+        assert!(partition_graph(&empty, 4, 2).is_err());
+    }
+
+    #[test]
+    fn partition_balances_costs_min_max() {
+        // Four dense layers with one heavy outlier: the DP must isolate
+        // the outlier rather than greedily halving the layer count.
+        let dense = |i: usize, o: usize| Layer::Dense {
+            in_features: i,
+            out_features: o,
+            relu: false,
+        };
+        let g = DnnGraph {
+            input_features: 8,
+            layers: vec![dense(8, 8), dense(8, 64), dense(64, 8), dense(8, 8)],
+            name: "lop".into(),
+        };
+        let plan = partition_graph(&g, 2, 2).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        // costs: 128, 1024, 1024, 128 → best max is 1152, never 2048.
+        assert_eq!(plan.bottleneck_cost(), 1152);
     }
 }

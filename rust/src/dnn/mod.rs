@@ -5,4 +5,7 @@ pub mod graph;
 pub mod lowering;
 
 pub use graph::{DnnGraph, Layer};
-pub use lowering::{lower_graph, run_schedule, LoweredGraph, ScheduleReport};
+pub use lowering::{
+    lower_graph, partition_graph, run_schedule, run_step, LoweredGraph, PlatformPlan,
+    ScheduleReport, StageSchedule, StepCtx,
+};

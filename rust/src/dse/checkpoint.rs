@@ -228,6 +228,7 @@ mod tests {
                 mode: SimModeSpec::Timed,
                 backend: Default::default(),
                 max_cycles: 1_000_000,
+                platform: None,
             },
             lower_bound: cycles / 2,
             result: JobResult {

@@ -310,6 +310,7 @@ mod tests {
             mode: SimModeSpec::Timed,
             backend: BackendKind::EventDriven,
             max_cycles: 100_000_000,
+            platform: None,
         }
     }
 

@@ -12,7 +12,7 @@ use crate::adl::elab::{apply_param, Candidate, ElabArch, ParamAxis};
 use crate::arch::gamma::GammaConfig;
 use crate::arch::oma::OmaConfig;
 use crate::arch::systolic::SystolicConfig;
-use crate::coordinator::job::{JobSpec, SimModeSpec, TargetSpec, Workload};
+use crate::coordinator::job::{JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
 use crate::mapping::gemm::LoopOrder;
 use crate::sim::backend::BackendKind;
 
@@ -42,6 +42,13 @@ pub struct DseSpace {
     /// schedule fixes its own mapping), so the exploration ranks
     /// candidates on a full attention block, not just a square GeMM.
     pub transformer_seq: Option<usize>,
+    /// Platform sizes (chip counts) for the platform sibling sweep —
+    /// empty disables it.  Each chip count is crossed with every fabric
+    /// hop latency in [`Self::platform_hops`] over the systolic grids,
+    /// producing the cycles-vs-chips Pareto axis.
+    pub platform_chips: Vec<usize>,
+    /// Fabric per-hop latencies for the platform sibling sweep.
+    pub platform_hops: Vec<u64>,
 }
 
 impl DseSpace {
@@ -59,6 +66,8 @@ impl DseSpace {
             backends: vec![BackendKind::CycleStepped, BackendKind::EventDriven],
             max_cycles: 500_000_000,
             transformer_seq: Some(8),
+            platform_chips: vec![1, 2, 4],
+            platform_hops: vec![4],
         }
     }
 
@@ -74,6 +83,8 @@ impl DseSpace {
             backends: vec![BackendKind::EventDriven],
             max_cycles: 500_000_000,
             transformer_seq: None,
+            platform_chips: Vec::new(),
+            platform_hops: Vec::new(),
         }
     }
 
@@ -122,6 +133,7 @@ impl DseSpace {
             mode: SimModeSpec::Timed,
             backend,
             max_cycles: self.max_cycles,
+            platform: None,
         };
         if self.include_oma {
             let caches = OmaConfig::enumerate_cache_variants();
@@ -182,6 +194,7 @@ impl DseSpace {
                 mode: SimModeSpec::Timed,
                 backend,
                 max_cycles: self.max_cycles,
+                platform: None,
             });
         };
         if self.include_oma {
@@ -250,6 +263,7 @@ impl DseSpace {
                 mode: SimModeSpec::Timed,
                 backend,
                 max_cycles: self.max_cycles,
+                platform: None,
             });
         };
         if self.include_oma {
@@ -274,6 +288,42 @@ impl DseSpace {
         for units in GammaConfig::enumerate_units(self.max_units) {
             for &backend in &self.backends {
                 push(&mut specs, TargetSpec::Gamma { units }, backend);
+            }
+        }
+        specs
+    }
+
+    /// The platform candidates: systolic grids × chip count × fabric hop
+    /// latency over the sharded transformer workload, always on the
+    /// `ParallelEvent` backend (the partitioned path).  Like
+    /// [`Self::enumerate_transformer`], this is a **sibling exploration**
+    /// — platform makespans and single-chip cycle counts must never share
+    /// a pruning incumbent.  Empty unless `transformer_seq`,
+    /// `platform_chips` and `platform_hops` are all populated; these are
+    /// the cycles-vs-chips Pareto points `dse` reports.
+    pub fn enumerate_platform(&self) -> Vec<JobSpec> {
+        let Some(seq) = self.transformer_seq else {
+            return Vec::new();
+        };
+        let mut specs = Vec::new();
+        for (rows, cols) in SystolicConfig::enumerate_grids(self.max_edge) {
+            for &chips in &self.platform_chips {
+                for &hop in &self.platform_hops {
+                    specs.push(JobSpec {
+                        id: specs.len() as u64,
+                        target: TargetSpec::Systolic { rows, cols },
+                        workload: Workload::Transformer { seq },
+                        mode: SimModeSpec::Timed,
+                        backend: BackendKind::ParallelEvent,
+                        max_cycles: self.max_cycles,
+                        platform: Some(PlatformSpec {
+                            chips,
+                            hop_latency: hop,
+                            microbatches: 4,
+                            threads: 0,
+                        }),
+                    });
+                }
             }
         }
         specs
@@ -369,6 +419,7 @@ impl FileSpace {
             mode: SimModeSpec::Timed,
             backend,
             max_cycles: self.max_cycles,
+            platform: None,
         })
     }
 
@@ -410,8 +461,21 @@ mod tests {
         for (i, s) in tf.iter().enumerate() {
             assert_eq!(s.id, i as u64);
         }
+        // The platform sibling sweep: 16 grids × 3 chip counts × 1 hop
+        // latency, all on the partitioned parallel backend.
+        let pf = space.enumerate_platform();
+        assert_eq!(pf.len(), 48);
+        for (i, s) in pf.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert_eq!(s.backend, BackendKind::ParallelEvent);
+            let p = s.platform.expect("platform candidates carry a spec");
+            assert!([1, 2, 4].contains(&p.chips));
+            assert_eq!(p.hop_latency, 4);
+            assert_eq!(p.threads, 0, "threads come from the --jobs budget");
+        }
         // The quick space opts out.
         assert!(DseSpace::quick(8).enumerate_transformer().is_empty());
+        assert!(DseSpace::quick(8).enumerate_platform().is_empty());
     }
 
     #[test]

@@ -30,15 +30,21 @@
 //!   `sim::backend` schedules them through the [`sim::SimBackend`] trait —
 //!   cycle-stepped (reference) or event-driven (idle-cycle-skipping, same
 //!   reported cycles); `sim::engine` is the front-end; plus a pure
-//!   functional ISS for mapping validation.
+//!   functional ISS for mapping validation.  `sim::platform` layers a
+//!   partitioned parallel simulation on top: a DNN graph sharded across
+//!   a multi-chip platform, worker threads per stage chain, and a
+//!   conservative-sync timing recurrence that reports bit-identical
+//!   cycles at any thread count.
 //! * [`arch`] — the model zoo: OMA (§4.1), the parameterizable systolic
-//!   array (§4.2), Γ̈ (§4.3), and Eyeriss- / Plasticine-derived models (§6).
+//!   array (§4.2), Γ̈ (§4.3), Eyeriss- / Plasticine-derived models (§6),
+//!   and `arch::platform` — N chips + fabric + shared DRAM descriptors.
 //! * [`mapping`] — DNN operator mapping (§5): the `Mapper` trait and the
 //!   UMA-style registry it plugs into — tiled-GeMM code generation per
 //!   accelerator, loop orders, im2col convolution — the single seam every
 //!   consumer lowers through.
 //! * [`dnn`] — a DNN graph IR and its lowering to operator schedules
-//!   (Dense and Conv2d on the accelerator, pool/flatten as host glue).
+//!   (Dense and Conv2d on the accelerator, pool/flatten as host glue),
+//!   plus the layer-wise platform partitioner (`dnn::partition_graph`).
 //! * [`aidg`] — the Architectural Instruction Dependency Graph fast
 //!   performance estimator (fixed-point loop analysis).
 //! * [`analytical`] — ScaleSim-like and roofline baselines (§2 comparisons).

@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use acadl::adl;
-use acadl::coordinator::{self, JobSpec, SimModeSpec, TargetSpec, Workload};
+use acadl::coordinator::{self, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
 use acadl::mapping::gemm::GemmParams;
 use acadl::mapping::uma::{self, Operator};
 use acadl::metrics::Table;
@@ -39,15 +39,23 @@ COMMANDS:
       Lower a GeMM and print the disassembly head.
   simulate --target <oma|systolic|gamma> [--workload gemm|mlp|transformer]
            [--m/--k/--n N] [--tile N] [--seq N]
-           [--mode functional|timed|estimate] [--backend cycle|event]
+           [--mode functional|timed|estimate] [--backend cycle|event|parallel]
            [--rows/--cols/--units N] [--arch-file <file.acadl>]
+           [--platform CHIPS] [--hop-latency N] [--microbatches N]
+           [--threads N] [--jobs N]
       Simulate a workload, print the result row as JSON.  `gemm` takes
       --m/--k/--n/--tile; `mlp` and `transformer` take --seq (batch rows /
       sequence length).  The timing backends report identical cycles;
       `event` skips idle cycles (faster on memory-bound workloads).
-  sweep [--dim N] [--workers N] [--backend cycle|event]
+      --platform CHIPS shards a layered workload across CHIPS copies of
+      the target connected by a fabric (--hop-latency cycles per hop)
+      and pipelines --microbatches inferences through the stages on
+      --threads worker threads (0 = lease from the --jobs budget); any
+      thread count reports identical cycles.  An --arch-file with a
+      `platform { … }` block sets the same knobs from the description.
+  sweep [--dim N] [--workers N] [--backend cycle|event|parallel] [--jobs N]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
-  dse [--dim N] [--workers N] [--quick true] [--no-prune true]
+  dse [--dim N] [--workers N] [--jobs N] [--quick true] [--no-prune true]
       [--max-edge N] [--max-units N] [--arch-file <file.acadl>]
       [--window N] [--max-points N] [--stop-after N]
       [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]
@@ -62,8 +70,10 @@ COMMANDS:
       --checkpoint-every processed candidates (atomic JSON); --resume
       continues from such a file; --stop-after ends the run at the next
       window boundary (interruptible / sharded sweeps); --max-points
-      bounds the non-frontier rows kept for the report table.
-  serve [--addr HOST:PORT] [--workers N] [--arch-file <file.acadl>]
+      bounds the non-frontier rows kept for the report table.  The
+      built-in space also sweeps 1/2/4-chip platforms over the sharded
+      transformer (the cycles-vs-chips Pareto axis).
+  serve [--addr HOST:PORT] [--workers N] [--jobs N] [--arch-file <file.acadl>]
       Serve JobSpec JSON lines over TCP.  Jobs may inline ADL text as
       {\"kind\":\"adl\",\"source\":\"…\"} targets; --arch-file pre-builds
       (and verifies) one description into the machine cache.
@@ -85,12 +95,14 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         ],
         "simulate" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
-            "arch-file", "workload", "seq",
+            "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
+            "threads", "jobs",
         ],
-        "sweep" => &["dim", "workers", "backend"],
+        "sweep" => &["dim", "workers", "backend", "jobs"],
         "dse" => &[
             "dim",
             "workers",
+            "jobs",
             "quick",
             "no-prune",
             "max-edge",
@@ -103,7 +115,7 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
             "checkpoint-every",
             "resume",
         ],
-        "serve" => &["addr", "workers", "arch-file"],
+        "serve" => &["addr", "workers", "jobs", "arch-file"],
         "golden" => &["dir"],
         "fmt" => &["check"],
         _ => &[],
@@ -182,7 +194,18 @@ impl Args {
 fn backend_kind(args: &Args) -> Result<BackendKind, String> {
     let name = args.str("backend", "cycle");
     BackendKind::from_name(&name)
-        .ok_or_else(|| format!("unknown backend `{name}` (use cycle|event)"))
+        .ok_or_else(|| format!("unknown backend `{name}` (use cycle|event|parallel)"))
+}
+
+/// Apply `--jobs N` (or leave `ACADL_JOBS` / core count in charge): the
+/// single process-wide parallelism budget every pool — DSE workers, serve
+/// slots, platform simulation threads — draws from, so nested parallelism
+/// cannot oversubscribe the machine.
+fn apply_jobs_flag(args: &Args) -> Result<(), String> {
+    if let Some(j) = args.opt_usize("jobs")? {
+        acadl::util::jobs::set_override(j);
+    }
+    Ok(())
 }
 
 /// Read + parse + elaborate an `.acadl` file, prefixing diagnostics with
@@ -399,6 +422,34 @@ fn run() -> Result<(), String> {
                     ))
                 }
             };
+            apply_jobs_flag(&args)?;
+            // --platform flags win; otherwise an --arch-file `platform`
+            // block shards the file's own target.
+            let platform = if let Some(chips) = args.opt_usize("platform")? {
+                Some(PlatformSpec {
+                    chips: chips.max(1),
+                    hop_latency: args.usize("hop-latency", 4)? as u64,
+                    microbatches: args.usize("microbatches", 4)?.max(1),
+                    threads: args.usize("threads", 0)?,
+                })
+            } else if let Some(path) = args.flags.get("arch-file") {
+                match load_arch_file(path)?.platform {
+                    Some(d) => Some(PlatformSpec {
+                        chips: d.chips,
+                        hop_latency: args
+                            .opt_usize("hop-latency")?
+                            .map_or(d.fabric.hop_latency, |h| h as u64),
+                        microbatches: args
+                            .opt_usize("microbatches")?
+                            .unwrap_or(d.microbatches)
+                            .max(1),
+                        threads: args.usize("threads", 0)?,
+                    }),
+                    None => None,
+                }
+            } else {
+                None
+            };
             let spec = JobSpec {
                 id: 0,
                 target: target_spec(&args)?,
@@ -406,13 +457,15 @@ fn run() -> Result<(), String> {
                 mode,
                 backend: backend_kind(&args)?,
                 max_cycles: 500_000_000,
+                platform,
             };
             let r = coordinator::job::execute(&spec);
             println!("{}", r.to_json());
         }
         "sweep" => {
+            apply_jobs_flag(&args)?;
             let dim = args.usize("dim", 64)?;
-            let workers = args.usize("workers", 4)?;
+            let workers = args.usize("workers", acadl::util::jobs::configured().min(4))?;
             let backend = backend_kind(&args)?;
             let specs: Vec<JobSpec> = [2usize, 4, 8, 16]
                 .into_iter()
@@ -433,6 +486,7 @@ fn run() -> Result<(), String> {
                     mode: SimModeSpec::Timed,
                     backend,
                     max_cycles: 500_000_000,
+                    platform: None,
                 })
                 .collect();
             let results = coordinator::run_jobs(specs, workers);
@@ -452,13 +506,9 @@ fn run() -> Result<(), String> {
             print!("{}", table.render());
         }
         "dse" => {
+            apply_jobs_flag(&args)?;
             let dim = args.usize("dim", 32)?;
-            let workers = args.usize(
-                "workers",
-                std::thread::available_parallelism()
-                    .map(|p| p.get())
-                    .unwrap_or(4),
-            )?;
+            let workers = args.usize("workers", acadl::util::jobs::configured())?;
             let prune = !args.bool_flag("no-prune")?;
             let mut cfg = acadl::dse::DseConfig::legacy(workers, prune);
             cfg.window = args.usize("window", acadl::dse::DEFAULT_WINDOW)?.max(1);
@@ -548,11 +598,32 @@ fn run() -> Result<(), String> {
                         &format!("design space, tiny_transformer seq {seq} (timed)"),
                     );
                 }
+                // Third sibling: chip count and fabric hop latency join
+                // the axes — the sharded transformer over 1/2/4-chip
+                // platforms, whose frontier is the cycles-vs-chips
+                // trade-off (area scales with chips).
+                let pf = space.enumerate_platform();
+                if !pf.is_empty() && !streaming_flags {
+                    let seq = space.transformer_seq.unwrap_or(8);
+                    println!(
+                        "\nexploring platform-sharded transformer (seq {seq}) over {} \
+                         candidates…\n",
+                        pf.len()
+                    );
+                    let report = acadl::dse::explore_specs(pf, workers, prune);
+                    print_dse_report(
+                        &report,
+                        &format!(
+                            "design space, platform transformer seq {seq} (cycles vs chips)"
+                        ),
+                    );
+                }
             }
         }
         "serve" => {
+            apply_jobs_flag(&args)?;
             let addr = args.str("addr", "127.0.0.1:7474");
-            let workers = args.usize("workers", 4)?;
+            let workers = args.usize("workers", acadl::util::jobs::configured().min(4))?;
             if let Some(path) = args.flags.get("arch-file") {
                 let spec = arch_file_target(path)?;
                 println!("pre-built machine from {path}: {}", spec.describe());
@@ -660,6 +731,12 @@ mod tests {
         assert!(allowed_flags("simulate").contains(&"arch-file"));
         assert!(allowed_flags("simulate").contains(&"workload"));
         assert!(allowed_flags("simulate").contains(&"seq"));
+        for f in ["platform", "hop-latency", "microbatches", "threads", "jobs"] {
+            assert!(allowed_flags("simulate").contains(&f), "simulate misses --{f}");
+        }
+        for c in ["sweep", "dse", "serve"] {
+            assert!(allowed_flags(c).contains(&"jobs"), "{c} misses --jobs");
+        }
         assert!(allowed_flags("dse").contains(&"arch-file"));
         for f in [
             "window",

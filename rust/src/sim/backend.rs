@@ -129,6 +129,26 @@ impl SimBackend for EventDriven {
     }
 }
 
+/// The backend behind platform-parallel runs.  A *single* core's
+/// simulation is inherently sequential, so for one machine this is
+/// exactly [`EventDriven`]; the parallelism lives one level up, in
+/// [`crate::sim::platform::run_platform`], which fans independent
+/// microbatch chains (each a sequence of these single-core runs) across
+/// worker threads.  Keeping it a [`SimBackend`] lets job specs, CLI
+/// flags, and the DSE axes name it like any other scheduler — and the
+/// backend-equivalence oracle pins it to the reference semantics.
+pub struct ParallelEvent;
+
+impl SimBackend for ParallelEvent {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError> {
+        EventDriven.run(core, max_cycles)
+    }
+}
+
 /// Value-level backend selector (job specs, CLI flags, JSON wire format).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum BackendKind {
@@ -138,21 +158,29 @@ pub enum BackendKind {
     /// Idle-cycle-skipping event queue (identical results, faster on
     /// memory-bound workloads).
     EventDriven,
+    /// Event-driven per core, with platform microbatch chains fanned
+    /// across threads (identical cycle counts at any thread count).
+    ParallelEvent,
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 2] = [BackendKind::CycleStepped, BackendKind::EventDriven];
+    pub const ALL: [BackendKind; 3] = [
+        BackendKind::CycleStepped,
+        BackendKind::EventDriven,
+        BackendKind::ParallelEvent,
+    ];
 
     pub fn name(self) -> &'static str {
         self.instance().name()
     }
 
     /// Parse a CLI/JSON spelling (`cycle`, `cycle-stepped`, `event`,
-    /// `event-driven`).
+    /// `event-driven`, `parallel`, `parallel-event`).
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
             "cycle" | "cycle-stepped" | "cycle_stepped" => Some(BackendKind::CycleStepped),
             "event" | "event-driven" | "event_driven" => Some(BackendKind::EventDriven),
+            "parallel" | "parallel-event" | "parallel_event" => Some(BackendKind::ParallelEvent),
             _ => None,
         }
     }
@@ -162,6 +190,7 @@ impl BackendKind {
         match self {
             BackendKind::CycleStepped => &CycleStepped,
             BackendKind::EventDriven => &EventDriven,
+            BackendKind::ParallelEvent => &ParallelEvent,
         }
     }
 }

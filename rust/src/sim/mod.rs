@@ -15,20 +15,27 @@
 //!   execute stages (Fig 10), functional units (Fig 11) as reusable
 //!   per-object state machines with activity tracking and an event queue.
 //! * [`backend`] — the [`SimBackend`] schedulers: [`CycleStepped`] (one
-//!   step per cycle) and [`EventDriven`] (idle-cycle-skipping event
-//!   queue).  Identical results, different wall-clock profiles.
+//!   step per cycle), [`EventDriven`] (idle-cycle-skipping event queue),
+//!   and [`ParallelEvent`] (event-driven per core, thread-parallel at
+//!   the platform level).  Identical results, different wall-clock
+//!   profiles.
 //! * [`engine`] — the front-end binding one (AG, program) pair to a
 //!   selected backend.
+//! * [`platform`] — partitioned parallel simulation of multi-accelerator
+//!   platforms: microbatch chains pipelined through chip stages, with a
+//!   deterministic fabric/DRAM timing recurrence.
 
 pub mod backend;
 pub mod engine;
 pub mod exec;
 pub mod functional;
 pub mod kernel;
+pub mod platform;
 pub mod scoreboard;
 pub mod storage;
 
-pub use backend::{BackendKind, CycleStepped, EventDriven, SimBackend};
+pub use backend::{BackendKind, CycleStepped, EventDriven, ParallelEvent, SimBackend};
 pub use engine::{Engine, SimStats};
 pub use functional::FunctionalSim;
 pub use kernel::{SimCore, SimError};
+pub use platform::{microbatch_input, run_platform, PlatformReport, StageReport};

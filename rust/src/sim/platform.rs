@@ -1,0 +1,359 @@
+//! Partitioned **parallel** simulation of a multi-accelerator platform:
+//! a DNN graph sharded across N chips ([`crate::dnn::lowering::partition_graph`])
+//! pipelines M microbatches through the chip stages, each stage an
+//! independent per-machine island whose programs run through the ordinary
+//! [`SimMode`] engines, connected by the platform's fabric + shared-DRAM
+//! cost model ([`crate::arch::platform`]).
+//!
+//! # Determinism argument (`--threads 1` ≡ `--threads N`)
+//!
+//! The computation decomposes into *cells* `(s, b)` — stage `s` of
+//! microbatch `b`.  A cell's **functional** result and its **duration**
+//! (the stage's simulated cycles for that microbatch's activations)
+//! depend only on cell `(s-1, b)`: each microbatch chain carries its own
+//! [`StepCtx`], chips share no architectural state, and every per-cell
+//! simulation is the same single-threaded `SimCore` run the equivalence
+//! oracle already guards.  Chains are therefore embarrassingly parallel —
+//! the worker threads only decide *which* chain simulates *when*, never
+//! what any cell computes.
+//!
+//! The platform-level **timing** (when each cell would start on real
+//! hardware, given fabric hops, the shared DRAM channel, and chip
+//! occupancy) is then resolved by a conservative recurrence evaluated
+//! serially over the completed duration matrix:
+//!
+//! ```text
+//! start[s][b]  = max(dram_ready[s],            // weights streamed in
+//!                    arrive[s][b],             // input crossed the fabric
+//!                    finish[s][b-1])           // chip busy with prior µbatch
+//! finish[s][b] = start[s][b] + dur[s][b]
+//! arrive[s][b] = finish[s-1][b] + fabric.transfer_cycles(words, 1)
+//! ```
+//!
+//! Every input to the recurrence is a pure function of the description
+//! and the duration matrix, so the reported cycle count is bit-identical
+//! at any thread count — and because the recurrence is a forward
+//! substitution with no cyclic waits, it cannot deadlock even with
+//! zero-latency fabric edges (the conservative lookahead never needs to
+//! block: durations are already known when it runs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::arch::platform::PlatformDesc;
+use crate::dnn::graph::DnnGraph;
+use crate::dnn::lowering::{
+    lower_graph, run_step, LowerError, LoweredGraph, PlatformPlan, SimMode, StepCtx,
+};
+use crate::mapping::uma::Machine;
+
+/// Per-stage aggregate of a platform run.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    /// Machine name plus the layer range the stage executes.
+    pub name: String,
+    /// Schedule steps (graph layers) on this stage.
+    pub steps: usize,
+    /// Simulated compute cycles summed over all microbatches.
+    pub busy_cycles: u64,
+    pub instructions: u64,
+}
+
+/// The platform run's results: per-stage aggregates, the pipelined
+/// makespan, and every microbatch's functional output.
+#[derive(Debug, Clone)]
+pub struct PlatformReport {
+    pub stages: Vec<StageReport>,
+    /// Pipelined makespan: weights + inputs streamed from the shared
+    /// DRAM, compute, fabric transfers, and output writeback.
+    pub total_cycles: u64,
+    pub total_instructions: u64,
+    /// Final activations per microbatch (unpadded).
+    pub outputs: Vec<Vec<f32>>,
+    /// Mean chip occupancy: Σ busy / (stages × makespan).
+    pub utilization: f64,
+}
+
+/// Deterministic input for microbatch `b`: microbatch 0 is the graph's
+/// seeded [`DnnGraph::input_batch`]; later microbatches rotate it so
+/// every chain computes on distinct data.  Shared with the conformance
+/// tests and the coordinator's numerics check so references can't drift.
+pub fn microbatch_input(graph: &DnnGraph, batch: usize, b: usize) -> Vec<f32> {
+    let mut x = graph.input_batch(batch);
+    if !x.is_empty() {
+        x.rotate_left((b * graph.input_features) % x.len());
+    }
+    x
+}
+
+/// One completed microbatch chain: per-stage durations + the output.
+struct ChainOut {
+    durs: Vec<u64>,
+    instrs: Vec<u64>,
+    output: Vec<f32>,
+}
+
+fn run_chain(
+    machines: &[&Machine],
+    lowered: &[LoweredGraph],
+    plan: &PlatformPlan,
+    batch: usize,
+    input: Vec<f32>,
+    mode: SimMode,
+    max_cycles: u64,
+) -> Result<ChainOut, LowerError> {
+    let mut ctx = StepCtx::new(&input);
+    let mut durs = Vec::with_capacity(plan.stages.len());
+    let mut instrs = Vec::with_capacity(plan.stages.len());
+    for (s, stage) in plan.stages.iter().enumerate() {
+        let mut cycles = 0u64;
+        let mut instructions = 0u64;
+        for step in &lowered[s].steps[stage.steps.clone()] {
+            if let Some(lr) = run_step(machines[s], step, batch, &mut ctx, mode, max_cycles)? {
+                cycles += lr.cycles;
+                instructions += lr.instructions;
+            }
+        }
+        durs.push(cycles);
+        instrs.push(instructions);
+        // Stashes are chip-local; the partitioner only cuts where no
+        // slot's live range crosses, so nothing useful is discarded.
+        ctx.stash.clear();
+    }
+    Ok(ChainOut {
+        durs,
+        instrs,
+        output: ctx.act,
+    })
+}
+
+/// Simulate `graph` sharded per `plan` over `machines` (one per stage —
+/// repeat the same reference for a homogeneous platform), pipelining
+/// `desc.microbatches` inferences, with up to `threads` worker threads
+/// advancing independent microbatch chains.  The reported cycle count is
+/// identical at every thread count (see the module docs).
+pub fn run_platform(
+    machines: &[&Machine],
+    graph: &DnnGraph,
+    plan: &PlatformPlan,
+    batch: usize,
+    desc: &PlatformDesc,
+    mode: SimMode,
+    threads: usize,
+    max_cycles: u64,
+) -> Result<PlatformReport, LowerError> {
+    let s_count = plan.stages.len();
+    if machines.len() != s_count {
+        return Err(LowerError::BadGraph(
+            0,
+            format!("platform has {} machines but the plan has {s_count} stages", machines.len()),
+        ));
+    }
+    let m_count = desc.microbatches.max(1);
+
+    // Lower once per stage machine (stages slice the shared schedule).
+    let mut lowered: Vec<LoweredGraph> = Vec::with_capacity(s_count);
+    for (s, machine) in machines.iter().enumerate() {
+        // Homogeneous platforms repeat one &Machine — reuse its lowering.
+        if let Some(prev) = (0..s).find(|&p| std::ptr::eq(machines[p], *machine)) {
+            lowered.push(lowered[prev].clone());
+        } else {
+            lowered.push(lower_graph(machine, graph, batch)?);
+        }
+    }
+
+    // --- simulate every (stage, microbatch) cell: independent chains ---
+    let workers = threads.max(1).min(m_count);
+    let mut chains: Vec<Option<ChainOut>> = (0..m_count).map(|_| None).collect();
+    if workers == 1 {
+        // `--threads 1` is literally single-threaded — the reference run.
+        for (b, slot) in chains.iter_mut().enumerate() {
+            let input = microbatch_input(graph, batch, b);
+            *slot = Some(run_chain(machines, &lowered, plan, batch, input, mode, max_cycles)?);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<ChainOut, LowerError>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let lowered = &lowered;
+                scope.spawn(move || loop {
+                    let b = next.fetch_add(1, Ordering::SeqCst);
+                    if b >= m_count {
+                        break;
+                    }
+                    let input = microbatch_input(graph, batch, b);
+                    let out = run_chain(machines, lowered, plan, batch, input, mode, max_cycles);
+                    if tx.send((b, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut results: Vec<(usize, Result<ChainOut, LowerError>)> = rx.iter().collect();
+        results.sort_by_key(|(b, _)| *b);
+        // Propagate the lowest-index error so failures are deterministic
+        // regardless of which worker hit one first.
+        for (b, res) in results {
+            chains[b] = Some(res?);
+        }
+    }
+    let chains: Vec<ChainOut> = chains
+        .into_iter()
+        .map(|c| c.expect("every microbatch chain completed"))
+        .collect();
+
+    // --- conservative timing recurrence (serial, deterministic) --------
+    // Weight streaming: the shared DRAM channel serves chips in order.
+    let mut dram_ready = vec![0u64; s_count];
+    let mut t = 0u64;
+    for (s, stage) in plan.stages.iter().enumerate() {
+        t += desc.dram.load_cycles(stage.weight_words);
+        dram_ready[s] = t;
+    }
+    let in_words = plan.stages[0].in_words();
+    let out_words = plan.stages[s_count - 1].out_words();
+    let mut finish = vec![vec![0u64; m_count]; s_count];
+    for b in 0..m_count {
+        for s in 0..s_count {
+            let arrive = if s == 0 {
+                // Inputs stream from the shared DRAM, one microbatch at
+                // a time on the single channel.
+                (b as u64 + 1) * desc.dram.load_cycles(in_words)
+            } else {
+                finish[s - 1][b]
+                    + desc
+                        .fabric
+                        .transfer_cycles(plan.stages[s - 1].out_words(), 1)
+            };
+            let chip_free = if b == 0 { 0 } else { finish[s][b - 1] };
+            let start = dram_ready[s].max(arrive).max(chip_free);
+            finish[s][b] = start + chains[b].durs[s];
+        }
+    }
+    // Writeback: outputs drain over the single shared-DRAM channel.
+    let mut wb = 0u64;
+    for fin in &finish[s_count - 1] {
+        wb = wb.max(*fin) + desc.dram.store_cycles(out_words);
+    }
+    let total_cycles = wb;
+
+    // --- aggregate ------------------------------------------------------
+    let mut stages = Vec::with_capacity(s_count);
+    let mut total_instructions = 0u64;
+    let mut busy_sum = 0u64;
+    for (s, stage) in plan.stages.iter().enumerate() {
+        let busy: u64 = chains.iter().map(|c| c.durs[s]).sum();
+        let instructions: u64 = chains.iter().map(|c| c.instrs[s]).sum();
+        busy_sum += busy;
+        total_instructions += instructions;
+        stages.push(StageReport {
+            name: format!(
+                "{}[{}..{}]",
+                machines[s].name(),
+                stage.steps.start,
+                stage.steps.end
+            ),
+            steps: stage.steps.len(),
+            busy_cycles: busy,
+            instructions,
+        });
+    }
+    let utilization = if total_cycles > 0 {
+        busy_sum as f64 / (s_count as f64 * total_cycles as f64)
+    } else {
+        0.0
+    };
+    Ok(PlatformReport {
+        stages,
+        total_cycles,
+        total_instructions,
+        outputs: chains.into_iter().map(|c| c.output).collect(),
+        utilization,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::oma::OmaConfig;
+    use crate::dnn::lowering::partition_graph;
+    use crate::mapping::uma::TargetConfig;
+    use crate::sim::backend::BackendKind;
+
+    #[test]
+    fn functional_platform_matches_forward_ref_per_microbatch() {
+        let g = DnnGraph::mlp_small();
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let plan = partition_graph(&g, 4, 2).unwrap();
+        let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+        let desc = PlatformDesc::new(2).with_microbatches(3);
+        let rep = run_platform(
+            &machines,
+            &g,
+            &plan,
+            4,
+            &desc,
+            SimMode::Functional,
+            2,
+            500_000_000,
+        )
+        .unwrap();
+        assert_eq!(rep.outputs.len(), 3);
+        for (b, out) in rep.outputs.iter().enumerate() {
+            let x = microbatch_input(&g, 4, b);
+            assert_eq!(out, &g.forward_ref(&x, 4), "microbatch {b}");
+        }
+        // Microbatches see distinct data.
+        assert_ne!(rep.outputs[0], rep.outputs[1]);
+    }
+
+    #[test]
+    fn thread_counts_report_identical_cycles() {
+        let g = DnnGraph::mlp_small();
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let plan = partition_graph(&g, 4, 2).unwrap();
+        let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+        let desc = PlatformDesc::new(2).with_microbatches(4);
+        let mode = SimMode::Timed(BackendKind::EventDriven);
+        let runs: Vec<PlatformReport> = [1usize, 2, 8]
+            .iter()
+            .map(|&t| {
+                run_platform(&machines, &g, &plan, 4, &desc, mode, t, 500_000_000).unwrap()
+            })
+            .collect();
+        for r in &runs[1..] {
+            assert_eq!(r.total_cycles, runs[0].total_cycles);
+            assert_eq!(r.total_instructions, runs[0].total_instructions);
+            assert_eq!(r.outputs, runs[0].outputs);
+            for (a, b) in r.stages.iter().zip(&runs[0].stages) {
+                assert_eq!(a.busy_cycles, b.busy_cycles);
+            }
+        }
+        assert!(runs[0].total_cycles > 0);
+        assert!(runs[0].utilization > 0.0 && runs[0].utilization <= 1.0);
+    }
+
+    #[test]
+    fn mismatched_machine_count_is_rejected() {
+        let g = DnnGraph::mlp_small();
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let plan = partition_graph(&g, 4, 2).unwrap();
+        let machines = [&machine]; // plan has 2 stages
+        let desc = PlatformDesc::new(2);
+        assert!(run_platform(
+            &machines,
+            &g,
+            &plan,
+            4,
+            &desc,
+            SimMode::Functional,
+            1,
+            1_000_000
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! One process-wide parallelism budget shared by every layer that spawns
+//! worker threads — the coordinator pool, the TCP server's slot count,
+//! and the parallel platform simulator.  Nested parallelism (a parallel
+//! DSE sweep whose jobs each run a parallel platform simulation) leases
+//! from the same budget, so the process never oversubscribes the host:
+//! once the pool's workers hold the budget, inner sims are granted 1.
+//!
+//! The budget resolves, in priority order: the CLI override
+//! (`--jobs`/`--threads` via [`set_override`]), the `ACADL_JOBS`
+//! environment variable, then `std::thread::available_parallelism()`.
+//! Grant sizes only ever affect wall-clock — reported cycle counts are
+//! thread-count-independent by construction (see `sim::platform`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+static OVERRIDE: OnceLock<usize> = OnceLock::new();
+static OUTSTANDING: AtomicUsize = AtomicUsize::new(0);
+
+/// The configured process-wide budget: CLI override, else `ACADL_JOBS`,
+/// else the host's available parallelism (min 1).
+pub fn configured() -> usize {
+    if let Some(&n) = OVERRIDE.get() {
+        return n.max(1);
+    }
+    if let Some(n) = std::env::var("ACADL_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Install the CLI's `--jobs` value as the process budget.  First caller
+/// wins (the CLI parses flags once, before any worker spawns); later
+/// calls with the same value are no-ops.
+pub fn set_override(n: usize) {
+    let _ = OVERRIDE.set(n.max(1));
+}
+
+/// Pure grant arithmetic (unit-testable without touching the globals):
+/// clamp `want` to what's left of the budget, never below 1 — a caller
+/// that wants parallelism always gets at least its own thread.
+pub fn grant(want: usize, configured: usize, outstanding: usize) -> usize {
+    want.max(1).min(configured.saturating_sub(outstanding).max(1))
+}
+
+/// An RAII lease on part of the parallelism budget.  `granted` is the
+/// worker count the holder may spawn; dropping the lease returns it.
+#[derive(Debug)]
+pub struct Lease {
+    pub granted: usize,
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        OUTSTANDING.fetch_sub(self.granted, Ordering::SeqCst);
+    }
+}
+
+/// Lease up to `want` workers from the process budget, accounting for
+/// leases already outstanding (nested parallelism collapses toward 1).
+pub fn lease(want: usize) -> Lease {
+    let budget = configured();
+    // One CAS loop so concurrent leases never jointly exceed the budget.
+    let mut cur = OUTSTANDING.load(Ordering::SeqCst);
+    loop {
+        let g = grant(want, budget, cur);
+        match OUTSTANDING.compare_exchange(cur, cur + g, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return Lease { granted: g },
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_clamps_to_remaining_budget() {
+        assert_eq!(grant(8, 4, 0), 4);
+        assert_eq!(grant(2, 4, 0), 2);
+        assert_eq!(grant(8, 4, 3), 1);
+        assert_eq!(grant(8, 4, 4), 1, "exhausted budget still grants 1");
+        assert_eq!(grant(8, 4, 9), 1, "oversubscribed budget still grants 1");
+        assert_eq!(grant(0, 4, 0), 1, "want=0 normalizes to 1");
+    }
+
+    #[test]
+    fn leases_stack_and_release() {
+        // Serialize against other tests through the shared counter: take
+        // a snapshot delta rather than asserting absolute values.
+        let before = OUTSTANDING.load(Ordering::SeqCst);
+        {
+            let a = lease(1);
+            assert_eq!(a.granted, 1);
+            let b = lease(1);
+            assert_eq!(b.granted, 1);
+            assert!(OUTSTANDING.load(Ordering::SeqCst) >= before + 2);
+        }
+        assert_eq!(OUTSTANDING.load(Ordering::SeqCst), before);
+    }
+
+    #[test]
+    fn configured_is_at_least_one() {
+        assert!(configured() >= 1);
+    }
+}

@@ -8,9 +8,13 @@
 //! * [`prop`]  — proptest's role: seeded generators + a `forall` driver
 //!   with failure-case reporting for property tests.
 //! * [`hash`]  — stable FNV-1a for canonical cache/memo keys.
+//! * [`jobs`]  — the process-wide parallelism budget (`--jobs` /
+//!   `ACADL_JOBS`) leased by the pool, the server, and the parallel
+//!   platform simulator so nested parallelism can't oversubscribe.
 
 pub mod bench;
 pub mod hash;
+pub mod jobs;
 pub mod json;
 pub mod numerics;
 pub mod prop;

@@ -9,6 +9,7 @@ use acadl::acadl_core::graph::Ag;
 use acadl::acadl_core::latency::Latency;
 use acadl::acadl_core::object::build;
 use acadl::adl::{ag_equiv, load_str, print_arch, print_elab, ParamAxis, ParamValue};
+use acadl::arch::platform::PlatformDesc;
 use acadl::coordinator::job::TargetSpec;
 use acadl::util::prop::{forall, Gen};
 
@@ -123,7 +124,7 @@ fn printer_roundtrips_random_graphs() {
             let ag = random_ag(g);
             // Return the printed form: it is both the test input and the
             // debug artifact shown on failure.
-            print_arch("rand", None, &[], &ag)
+            print_arch("rand", None, None, &[], &ag)
         },
         |printed| {
             let e = load_str(printed).map_err(|err| format!("reparse failed: {err}"))?;
@@ -143,7 +144,7 @@ fn roundtrip_preserves_graph_equivalence() {
         32,
         random_ag,
         |ag| {
-            let printed = print_arch("rand", None, &[], ag);
+            let printed = print_arch("rand", None, None, &[], ag);
             let e = load_str(&printed).map_err(|err| format!("reparse failed: {err}"))?;
             ag_equiv(ag, &e.ag)
         },
@@ -201,16 +202,32 @@ fn headers_roundtrip() {
                     }],
                 ),
             };
+            // Optionally shard the chip across a randomized platform.
+            let platform = if g.bool() {
+                Some(
+                    PlatformDesc::new(1 << g.usize(0, 3))
+                        .with_hop_latency(g.int(0, 16) as u64)
+                        .with_microbatches(g.usize(1, 8)),
+                )
+            } else {
+                None
+            };
             let ag = random_ag(g);
-            (target, params, print_arch("hdr", None, &[], &ag))
+            (target, platform, params, print_arch("hdr", None, None, &[], &ag))
         },
-        |(target, params, body)| {
+        |(target, platform, params, body)| {
             // Reuse the printed body; prepend a fresh header.
             let ag = load_str(body).map_err(|e| e.to_string())?.ag;
-            let printed = print_arch("hdr", Some(target), params, &ag);
+            let printed = print_arch("hdr", Some(target), platform.as_ref(), params, &ag);
             let e = load_str(&printed).map_err(|err| format!("reparse failed: {err}"))?;
             if e.target.as_ref() != Some(target) {
                 return Err(format!("target changed: {:?} vs {:?}", e.target, target));
+            }
+            if e.platform != *platform {
+                return Err(format!(
+                    "platform changed: {:?} vs {:?}",
+                    e.platform, platform
+                ));
             }
             if e.params != *params {
                 return Err(format!("params changed: {:?} vs {:?}", e.params, params));

@@ -29,6 +29,7 @@ fn check_roundtrip(src: &str) -> ElabArch {
     let e2 = load_str(&printed).expect("canonical form elaborates");
     ag_equiv(&e.ag, &e2.ag).expect("round-trip graph is equivalent");
     assert_eq!(e2.target, e.target, "target binding survives round-trip");
+    assert_eq!(e2.platform, e.platform, "platform block survives round-trip");
     assert_eq!(e2.params, e.params, "param axes survive round-trip");
     assert_eq!(print_elab(&e2), printed, "printing is byte-idempotent");
     e
@@ -94,6 +95,21 @@ fn plasticine_example_matches_builder() {
 }
 
 #[test]
+fn platform_example_binds_target_and_platform() {
+    use acadl::arch::platform::PlatformDesc;
+    let e = check_roundtrip(&example("platform_quad.acadl"));
+    assert_eq!(e.target, Some(TargetSpec::Systolic { rows: 2, cols: 2 }));
+    assert_eq!(
+        e.platform,
+        Some(PlatformDesc::new(4).with_hop_latency(4).with_microbatches(8))
+    );
+    // Same chip as the systolic_2x2 example — only the platform wrapper
+    // (and the name) differ.
+    let built = SystolicConfig::new(2, 2).build().unwrap();
+    ag_equiv(&e.ag, &built.ag).expect("platform_quad.acadl ≡ SystolicConfig::new(2, 2)");
+}
+
+#[test]
 fn printer_roundtrips_every_builder_graph() {
     // parse(print(ag)) ≡ ag over the whole zoo, independent of the
     // committed files — including an expression-latency OMA variant.
@@ -129,7 +145,7 @@ fn printer_roundtrips_every_builder_graph() {
         ),
     ];
     for (name, ag) in graphs {
-        let printed = print_arch(name, None, &[], &ag);
+        let printed = print_arch(name, None, None, &[], &ag);
         let e = load_str(&printed)
             .unwrap_or_else(|err| panic!("printed {name} reparses: {err}"));
         ag_equiv(&ag, &e.ag).unwrap_or_else(|err| panic!("{name} round-trip: {err}"));
@@ -151,6 +167,7 @@ fn gemm_job(target: TargetSpec, backend: BackendKind) -> JobSpec {
         mode: SimModeSpec::Timed,
         backend,
         max_cycles: 50_000_000,
+        platform: None,
     }
 }
 
@@ -195,6 +212,7 @@ fn committed_zoo_examples_are_byte_canonical() {
         "gamma_1u.acadl",
         "eyeriss_2x2.acadl",
         "plasticine_2s.acadl",
+        "platform_quad.acadl",
     ] {
         let src = example(file);
         let e = load_str(&src).unwrap_or_else(|err| panic!("{file}: {err}"));
@@ -230,6 +248,7 @@ fn file_targets_drive_transformer_with_builder_cycles() {
             mode: SimModeSpec::Timed,
             backend: BackendKind::EventDriven,
             max_cycles: 500_000_000,
+            platform: None,
         };
         let from_file = job::execute(&job(spec));
         let from_rust = job::execute(&job(explicit));

@@ -55,6 +55,7 @@ fn prop_sim_cycles_never_undercut_roofline_bound() {
                 mode: SimModeSpec::Timed,
                 backend: BackendKind::CycleStepped,
                 max_cycles: 200_000_000,
+                platform: None,
             }
         },
         |spec| {

@@ -1,0 +1,303 @@
+//! Platform / parallel-backend equivalence: the `ParallelEvent` backend
+//! must report cycle counts **identical** to `EventDriven` on every zoo
+//! machine, and a partitioned platform run must report identical cycles,
+//! per-stage busy counts, and functional outputs at every thread count —
+//! the same backend-equivalence discipline `tests/backend_equiv.rs`
+//! established for the single-chip schedulers, extended to the
+//! multi-chip parallel simulator.
+//!
+//! Also covers: functional outputs against the graph's `forward_ref` per
+//! microbatch, randomized platform shapes (chips × hop latency ×
+//! microbatches × workload), deadlock freedom with zero-latency fabric
+//! edges, and the pipelining win of 4 chips over 1.
+
+use acadl::arch::oma::OmaConfig;
+use acadl::arch::platform::PlatformDesc;
+use acadl::arch::systolic::SystolicConfig;
+use acadl::dnn::lowering::SimMode;
+use acadl::dnn::{partition_graph, DnnGraph};
+use acadl::mapping::gemm::{GemmLayout, GemmParams};
+use acadl::mapping::systolic_gemm::systolic_gemm;
+use acadl::mapping::uma::{Machine, TargetConfig};
+use acadl::sim::{microbatch_input, run_platform, BackendKind, Engine, PlatformReport};
+use acadl::util::prop::{forall, Gen};
+
+// ------------------------------------------------ backend equivalence
+
+/// `ParallelEvent` is the event-driven scheduler behind a partitioned
+/// front — on a single core it must be *the same simulation*: every
+/// statistic and the final architectural state agree with `EventDriven`.
+#[test]
+fn parallel_backend_matches_event_on_systolic_gemm() {
+    let m = SystolicConfig::new(2, 2).build().unwrap();
+    let p = GemmParams::new(6, 6, 6);
+    let prog = systolic_gemm(&m, &p);
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let mut g = Gen::new(0x9A7);
+    let a = g.vec_f32(36, -2.0, 2.0);
+    let b = g.vec_f32(36, -2.0, 2.0);
+    let run = |backend: BackendKind| {
+        let mut e = Engine::with_backend(&m.ag, &prog, backend).unwrap();
+        layout.load_inputs(&p, &mut e.mem, &a, &b);
+        let stats = e.run(200_000_000).unwrap();
+        (stats, layout.read_c(&p, &e.mem))
+    };
+    let (es, ec) = run(BackendKind::EventDriven);
+    let (ps, pc) = run(BackendKind::ParallelEvent);
+    assert_eq!(ps.cycles, es.cycles, "total cycles");
+    assert_eq!(ps.retired, es.retired, "retired instructions");
+    assert_eq!(ps.fu_busy, es.fu_busy, "per-FU busy cycles");
+    assert_eq!(pc, ec, "C matrices");
+}
+
+/// Randomized scalar programs on the OMA: `ParallelEvent` and
+/// `EventDriven` agree on cycles, retirement, and final register state.
+#[test]
+fn prop_parallel_backend_matches_event_on_random_programs() {
+    use acadl::isa::assembler::assemble;
+    let m = OmaConfig::default().build().unwrap();
+    forall(
+        "parallel ≡ event on random OMA programs",
+        24,
+        |g| {
+            let mut src = String::new();
+            for _ in 0..g.usize(1, 16) {
+                match g.usize(0, 3) {
+                    0 => src.push_str(&format!(
+                        "movi #{} => r{}\n",
+                        g.int(-99, 99),
+                        g.usize(0, 7)
+                    )),
+                    1 => src.push_str(&format!(
+                        "add r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(0, 7)
+                    )),
+                    2 => src.push_str(&format!(
+                        "mac r{}, r{} => r{}\n",
+                        g.usize(0, 7),
+                        g.usize(0, 7),
+                        g.usize(8, 12)
+                    )),
+                    _ => src.push_str("nop\n"),
+                }
+            }
+            src.push_str("halt\n");
+            src
+        },
+        |src| {
+            let p = assemble(&m.ag, src, 0).map_err(|e| e.to_string())?;
+            let mut event = Engine::with_backend(&m.ag, &p, BackendKind::EventDriven)
+                .map_err(|e| e.to_string())?;
+            let es = event.run(10_000_000).map_err(|e| e.to_string())?;
+            let mut par = Engine::with_backend(&m.ag, &p, BackendKind::ParallelEvent)
+                .map_err(|e| e.to_string())?;
+            let ps = par.run(10_000_000).map_err(|e| e.to_string())?;
+            if ps.cycles != es.cycles || ps.retired != es.retired {
+                return Err(format!(
+                    "cycles {} vs {}, retired {} vs {}",
+                    ps.cycles, es.cycles, ps.retired, es.retired
+                ));
+            }
+            if par.regs != event.regs {
+                return Err("register state differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------ platform determinism
+
+fn platform_run(
+    machine: &Machine,
+    graph: &DnnGraph,
+    batch: usize,
+    desc: &PlatformDesc,
+    mode: SimMode,
+    threads: usize,
+) -> PlatformReport {
+    let plan = partition_graph(graph, batch, desc.chips).unwrap();
+    let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| machine).collect();
+    run_platform(&machines, graph, &plan, batch, desc, mode, threads, 500_000_000).unwrap()
+}
+
+fn assert_reports_equal(a: &PlatformReport, b: &PlatformReport, what: &str) {
+    assert_eq!(a.total_cycles, b.total_cycles, "{what}: total cycles");
+    assert_eq!(
+        a.total_instructions, b.total_instructions,
+        "{what}: instructions"
+    );
+    assert_eq!(a.outputs, b.outputs, "{what}: functional outputs");
+    assert_eq!(a.stages.len(), b.stages.len(), "{what}: stage count");
+    for (x, y) in a.stages.iter().zip(&b.stages) {
+        assert_eq!(x.busy_cycles, y.busy_cycles, "{what}: {} busy", x.name);
+        assert_eq!(x.instructions, y.instructions, "{what}: {} instrs", x.name);
+    }
+}
+
+/// The tentpole invariant: the sharded transformer on a 4-chip systolic
+/// platform reports **identical** cycles, per-stage busy counts, and
+/// outputs at threads ∈ {1, 2, 8} — and the `ParallelEvent` stage
+/// backend matches `EventDriven` cycle-for-cycle.
+#[test]
+fn sharded_transformer_thread_counts_agree() {
+    let g = DnnGraph::tiny_transformer();
+    let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    let desc = PlatformDesc::new(4).with_microbatches(4);
+    let reference = platform_run(
+        &machine,
+        &g,
+        8,
+        &desc,
+        SimMode::Timed(BackendKind::EventDriven),
+        1,
+    );
+    assert!(reference.total_cycles > 0);
+    for threads in [1usize, 2, 8] {
+        let r = platform_run(
+            &machine,
+            &g,
+            8,
+            &desc,
+            SimMode::Timed(BackendKind::ParallelEvent),
+            threads,
+        );
+        assert_reports_equal(&r, &reference, &format!("threads {threads}"));
+    }
+    // Every microbatch's output is the reference forward pass on its
+    // own rotated input.
+    for (b, out) in reference.outputs.iter().enumerate() {
+        let x = microbatch_input(&g, 8, b);
+        let want = g.forward_ref(&x, 8);
+        assert_eq!(out.len(), want.len(), "microbatch {b}");
+        for (o, w) in out.iter().zip(&want) {
+            assert!((o - w).abs() < 1e-2, "microbatch {b}: {o} vs {w}");
+        }
+    }
+}
+
+/// Randomized platforms (chips, hop latency, microbatches, workload,
+/// mode): one worker thread and three report identical results.
+#[test]
+fn prop_random_platforms_are_thread_count_independent() {
+    let oma = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+    let sys = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    forall(
+        "threads 1 ≡ threads 3 over random platforms",
+        10,
+        |g| {
+            (
+                g.usize(1, 4),          // chips (clamped by legal cuts)
+                g.int(0, 16) as u64,    // hop latency
+                g.usize(1, 6),          // microbatches
+                g.bool(),               // mlp_small vs tiny_transformer
+                g.bool(),               // functional vs timed
+            )
+        },
+        |&(chips, hop, micro, mlp, functional)| {
+            let (graph, batch, machine) = if mlp {
+                (DnnGraph::mlp_small(), 4, &oma)
+            } else {
+                (DnnGraph::tiny_transformer(), 8, &sys)
+            };
+            // Ask only for as many chips as the graph has legal cuts.
+            let chips = if mlp { chips.min(2) } else { chips };
+            let desc = PlatformDesc::new(chips)
+                .with_hop_latency(hop)
+                .with_microbatches(micro);
+            let mode = if functional {
+                SimMode::Functional
+            } else {
+                SimMode::Timed(BackendKind::EventDriven)
+            };
+            let a = platform_run(machine, &graph, batch, &desc, mode, 1);
+            let b = platform_run(machine, &graph, batch, &desc, mode, 3);
+            if a.total_cycles != b.total_cycles {
+                return Err(format!(
+                    "cycles {} vs {}",
+                    a.total_cycles, b.total_cycles
+                ));
+            }
+            if a.outputs != b.outputs {
+                return Err("outputs differ across thread counts".into());
+            }
+            if a.total_instructions != b.total_instructions {
+                return Err("instruction counts differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Zero-latency fabric edges: the conservative recurrence is a forward
+/// substitution, so a hop latency of 0 (the classic conservative-PDES
+/// zero-lookahead trap) must terminate with a sane makespan rather than
+/// deadlock.
+#[test]
+fn zero_latency_fabric_terminates() {
+    let g = DnnGraph::tiny_transformer();
+    let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    let desc = PlatformDesc::new(4)
+        .with_hop_latency(0)
+        .with_microbatches(4);
+    let r = platform_run(
+        &machine,
+        &g,
+        8,
+        &desc,
+        SimMode::Timed(BackendKind::ParallelEvent),
+        4,
+    );
+    assert!(r.total_cycles > 0);
+    // And it still matches the single-threaded run exactly.
+    let serial = platform_run(
+        &machine,
+        &g,
+        8,
+        &desc,
+        SimMode::Timed(BackendKind::EventDriven),
+        1,
+    );
+    assert_reports_equal(&r, &serial, "zero-latency fabric");
+}
+
+/// The point of the platform: pipelining 8 microbatches across 4 chips
+/// finishes sooner than queueing them through 1 chip.
+#[test]
+fn four_chips_beat_one_on_pipelined_transformer() {
+    let g = DnnGraph::tiny_transformer();
+    let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    let mode = SimMode::Timed(BackendKind::EventDriven);
+    let single = platform_run(
+        &machine,
+        &g,
+        8,
+        &PlatformDesc::new(1).with_microbatches(8),
+        mode,
+        1,
+    );
+    let quad = platform_run(
+        &machine,
+        &g,
+        8,
+        &PlatformDesc::new(4).with_microbatches(8),
+        mode,
+        2,
+    );
+    assert!(
+        quad.total_cycles < single.total_cycles,
+        "4 chips ({}) should beat 1 chip ({})",
+        quad.total_cycles,
+        single.total_cycles
+    );
+}

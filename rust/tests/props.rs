@@ -323,6 +323,16 @@ fn prop_jobspec_json_roundtrip() {
             ]),
             backend: *g.choose(&BackendKind::ALL),
             max_cycles: g.next_u64() % 1_000_000 + 1,
+            platform: if g.bool() {
+                Some(acadl::coordinator::PlatformSpec {
+                    chips: g.usize(1, 4),
+                    hop_latency: g.int(0, 16) as u64,
+                    microbatches: g.usize(1, 8),
+                    threads: g.usize(0, 4),
+                })
+            } else {
+                None
+            },
         },
         |spec| {
             let line = spec.to_json().to_string();

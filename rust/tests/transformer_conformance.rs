@@ -344,6 +344,7 @@ fn dse_on_transformer_prunes_only_above_the_incumbent() {
         mode: SimModeSpec::Timed,
         backend: BackendKind::EventDriven,
         max_cycles: 500_000_000,
+        platform: None,
     };
     let specs = vec![
         mk(

@@ -24,6 +24,10 @@ cargo bench --bench backend_compare
 # (candidates/sec and peak-RSS rows behind the bounded-memory claim).
 cargo bench --bench dse
 
+# Platform parallel speedup: the 4-chip sharded transformer at 1/2/4
+# simulation threads — identical cycle counts, wall-clock scaling.
+cargo bench --bench platform
+
 # DSE smoke sweep wall-clock: the end-to-end number every hot-path win
 # multiplies into.
 start_ns=$(date +%s%N)
@@ -37,13 +41,30 @@ cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
   --workload transformer --seq 8 --backend event > /dev/null
 tf_end_ns=$(date +%s%N)
 
-python3 - "$OUT" $((end_ns - start_ns)) $((tf_end_ns - tf_start_ns)) <<'EOF'
+# Platform wall-clock at 1 vs 4 threads (same job, same cycle count —
+# the parallel-speedup row the PR-7 acceptance gate reads).
+p1_start_ns=$(date +%s%N)
+cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
+  --workload transformer --seq 8 --backend parallel \
+  --platform 4 --microbatches 8 --threads 1 > /dev/null
+p1_end_ns=$(date +%s%N)
+p4_start_ns=$(date +%s%N)
+cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
+  --workload transformer --seq 8 --backend parallel \
+  --platform 4 --microbatches 8 --threads 4 > /dev/null
+p4_end_ns=$(date +%s%N)
+
+python3 - "$OUT" $((end_ns - start_ns)) $((tf_end_ns - tf_start_ns)) \
+  $((p1_end_ns - p1_start_ns)) $((p4_end_ns - p4_start_ns)) <<'EOF'
 import json, os, sys
 
-path, ns, tf_ns = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+path, ns, tf_ns, p1_ns, p4_ns = sys.argv[1], *map(int, sys.argv[2:6])
 data = json.load(open(path)) if os.path.exists(path) else {}
 data["dse/smoke_sweep_wall"] = {"median_ns": ns, "runs": 1}
 data["transformer/systolic_2x2_seq8_wall"] = {"median_ns": tf_ns, "runs": 1}
+data["platform/quad_tf_seq8_wall_threads1"] = {"median_ns": p1_ns, "runs": 1}
+data["platform/quad_tf_seq8_wall_threads4"] = {"median_ns": p4_ns, "runs": 1}
+data["platform/speedup_4t"] = {"ratio": round(p1_ns / max(p4_ns, 1), 3), "runs": 1}
 with open(path, "w") as f:
     json.dump(data, f, indent=2, sort_keys=True)
     f.write("\n")

@@ -60,6 +60,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     },
                     max_cycles: 1_000_000_000,
                     platform: None,
+                    deadline_ms: None,
                 };
                 let t = Instant::now();
                 writer

@@ -129,6 +129,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         backend: BackendKind::EventDriven,
         max_cycles: 2_000_000_000,
         platform: None,
+        deadline_ms: None,
     });
     assert_eq!(r.error, None);
     assert_eq!(r.numerics_ok, Some(true));

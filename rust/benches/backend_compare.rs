@@ -81,4 +81,48 @@ fn main() {
     }
 
     bench.write_json_if_requested();
+
+    // Supervision overhead on the same DRAM-bound loop: `no_token` is
+    // the production hot path (the probe must cost a single branch —
+    // compare against backend_compare/oma_dram_gemm8 across PRs);
+    // `armed_token` carries a live deadline that never trips (the
+    // countdown amortizes `Instant::now` to every check interval); and
+    // `cancel_latency` measures expired-deadline → structured abort.
+    let mut sup = Bench::new("supervisor");
+    {
+        use acadl::util::cancel::{install, CancelToken};
+        let m = OmaConfig {
+            dmem: DataMem::Dram,
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .expect("oma+dram");
+        let p = GemmParams::new(8, 8, 8);
+        let prog = oma_tiled_gemm(&m, &p).expect("codegen");
+        let cycles = {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(2_000_000_000).expect("run").cycles
+        };
+        sup.time("no_token (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(2_000_000_000).expect("run").cycles
+        });
+        sup.time("armed_token (cycles/s)", Some(cycles), || {
+            let _g = install(CancelToken::with_deadline(std::time::Duration::from_secs(
+                3600,
+            )));
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            let got = e.run(2_000_000_000).expect("run").cycles;
+            assert_eq!(got, cycles, "an untripped token must not change cycles");
+            got
+        });
+        sup.time("cancel_latency", None, || {
+            let _g = install(CancelToken::with_deadline(std::time::Duration::ZERO));
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(2_000_000_000)
+                .expect_err("expired deadline must abort the run")
+        });
+    }
+    sup.write_json_if_requested();
 }

@@ -30,6 +30,7 @@ fn batch() -> Vec<JobSpec> {
                     backend: Default::default(),
                     max_cycles: 1_000_000_000,
                     platform: None,
+                    deadline_ms: None,
                 });
                 id += 1;
             }
@@ -50,6 +51,7 @@ fn batch() -> Vec<JobSpec> {
             backend: Default::default(),
             max_cycles: 1_000_000_000,
             platform: None,
+            deadline_ms: None,
         });
         id += 1;
     }

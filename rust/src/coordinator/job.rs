@@ -257,6 +257,13 @@ pub struct JobSpec {
     /// `Some` shards the (layered) workload across a multi-chip platform
     /// and pipelines microbatches through it.
     pub platform: Option<PlatformSpec>,
+    /// Wall-clock budget for this job in milliseconds.  `Some` installs a
+    /// deadline token around execution: a simulation that outlives the
+    /// budget stops cooperatively at the next check interval and reports
+    /// `deadline exceeded …` instead of spinning to `max_cycles`.
+    /// Excluded from [`Self::canonical_key`] — it bounds the *computation*,
+    /// not the result (a completed result is valid under any budget).
+    pub deadline_ms: Option<u64>,
 }
 
 pub fn default_max_cycles() -> u64 {
@@ -281,7 +288,55 @@ pub struct JobResult {
     pub area_proxy: f64,
 }
 
+/// Coarse classification of a [`JobResult`] error string, for callers
+/// that must *react* to failures (the server's reply policy, the chaos
+/// harness, retry logic) without growing the wire format: the `error`
+/// field stays a plain string, and classification keys off stable
+/// message prefixes that the error constructors own (`SimError::Deadline`
+/// / `SimError::Cancelled` in `sim::kernel`, the panic shim in
+/// `coordinator::supervisor`, the server's shed reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's wall-clock budget (`deadline_ms`) expired mid-run.
+    Deadline,
+    /// The job was cancelled (client disconnect, shutdown drain).
+    Cancelled,
+    /// The server shed the request before execution (admission queue full).
+    Overloaded,
+    /// The job body panicked; the worker caught and contained it.
+    Panic,
+    /// Any other failure (lowering errors, infeasibility, cycle limits…).
+    Other,
+}
+
+impl JobError {
+    pub fn classify(msg: &str) -> JobError {
+        if msg.starts_with("deadline exceeded") {
+            JobError::Deadline
+        } else if msg.starts_with("cancelled") {
+            JobError::Cancelled
+        } else if msg.starts_with("overloaded") {
+            JobError::Overloaded
+        } else if msg.starts_with("panic") {
+            JobError::Panic
+        } else {
+            JobError::Other
+        }
+    }
+}
+
 impl JobResult {
+    /// The structured class of this result's error, if it has one.
+    pub fn error_class(&self) -> Option<JobError> {
+        self.error.as_deref().map(JobError::classify)
+    }
+
+    /// An error row for a job whose body panicked; the `panic: ` prefix
+    /// is the classification contract ([`JobError::Panic`]).
+    pub(crate) fn panicked(spec: &JobSpec, msg: String, wall_micros: u64) -> Self {
+        Self::err(spec, format!("panic: {msg}"), wall_micros)
+    }
+
     fn err(spec: &JobSpec, msg: String, wall_micros: u64) -> Self {
         JobResult {
             id: spec.id,
@@ -296,6 +351,44 @@ impl JobResult {
             wall_micros,
             error: Some(msg),
             area_proxy: spec.area_proxy(),
+        }
+    }
+}
+
+/// Deterministic fault injection for the chaos harness: a job whose id
+/// carries one of the chaos marks misbehaves mid-execution — but only
+/// when the process opted in via `ACADL_CHAOS=1`, so no production job
+/// id can ever trip it.  The faults are raised deliberately *inside*
+/// the job body (after the deadline guard is installed) to exercise the
+/// `catch_unwind` isolation in `pool.rs`/`server.rs`, the cancellation
+/// plumbing, and the RAII unwind of slots, leases, and token guards.
+/// Tests only ever *set* `ACADL_CHAOS` (never unset it), so parallel
+/// tests in one binary cannot race each other's fault modes — the mark
+/// bits select the behavior per job id.
+pub const CHAOS_MARK_BASE: u64 = 0xC4A0_5000_0000_0000;
+/// The job body panics (tests `catch_unwind` containment).
+pub const CHAOS_PANIC_MARK: u64 = CHAOS_MARK_BASE | (1 << 32);
+/// The job body holds its simulation slot, sleeping until its cancel
+/// token trips (or a 5 s cap), then proceeds — a controllable
+/// long-running job for backpressure/disconnect/deadline tests.
+pub const CHAOS_STALL_MARK: u64 = CHAOS_MARK_BASE | (1 << 33);
+
+fn chaos_armed(spec: &JobSpec, mark: u64) -> bool {
+    spec.id & mark == mark && std::env::var("ACADL_CHAOS").as_deref() == Ok("1")
+}
+
+fn chaos_maybe_panic(spec: &JobSpec) {
+    if chaos_armed(spec, CHAOS_PANIC_MARK) {
+        panic!("chaos: injected job panic (id {:#x})", spec.id);
+    }
+    if chaos_armed(spec, CHAOS_STALL_MARK) {
+        let token = crate::util::cancel::current();
+        let start = std::time::Instant::now();
+        while start.elapsed() < std::time::Duration::from_secs(5) {
+            if token.as_ref().and_then(|t| t.cause()).is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
 }
@@ -318,6 +411,19 @@ fn gemm_inputs(p: &GemmParams) -> (Vec<f32>, Vec<f32>) {
 /// once per target batch).
 pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
     let start = std::time::Instant::now();
+    // A per-job deadline chains onto whatever token is already installed
+    // (e.g. the server's client-disconnect watch), so either source stops
+    // the simulation; the guard restores the outer token on every return
+    // path, including unwinds.
+    let _deadline_guard = spec.deadline_ms.map(|ms| {
+        let budget = std::time::Duration::from_millis(ms);
+        let token = match crate::util::cancel::current() {
+            Some(outer) => outer.child_with_deadline(budget),
+            None => crate::util::cancel::CancelToken::with_deadline(budget),
+        };
+        crate::util::cancel::install(token)
+    });
+    chaos_maybe_panic(spec);
     let done = |mut r: JobResult| {
         r.wall_micros = start.elapsed().as_micros() as u64;
         r
@@ -853,6 +959,9 @@ impl JobSpec {
     /// tested invariant), so a result computed on any answers all.  The
     /// platform's thread count is dropped for the same reason; its
     /// chips/fabric/microbatches stay — they change the reported cycles.
+    /// `deadline_ms` is dropped too: a wall-clock budget bounds how long
+    /// we are willing to *compute* a result, not what the result is, so a
+    /// memoized completion answers a request under any budget.
     pub fn canonical_key(&self) -> u64 {
         let mut fields = vec![
             ("target", self.target.to_json()),
@@ -886,6 +995,9 @@ impl JobSpec {
         if let Some(p) = &self.platform {
             fields.push(("platform", p.to_json()));
         }
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
         Json::obj(fields)
     }
 
@@ -908,6 +1020,11 @@ impl JobSpec {
             platform: match v.get("platform") {
                 Some(Json::Null) | None => None,
                 Some(p) => Some(PlatformSpec::from_json(p)?),
+            },
+            // Absent/null = unbounded (legacy behavior).
+            deadline_ms: match v.get("deadline_ms") {
+                Some(Json::Null) | None => None,
+                Some(x) => Some(x.as_u64()?),
             },
         })
     }
@@ -989,6 +1106,7 @@ mod tests {
             backend: BackendKind::EventDriven,
             max_cycles: 1_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let line = spec.to_json().to_string();
         let back = JobSpec::parse(&line).unwrap();
@@ -1035,6 +1153,7 @@ mod tests {
             backend: BackendKind::CycleStepped,
             max_cycles: 1_000_000,
             platform: None,
+            deadline_ms: None,
         };
         // Different id / backend / (target-irrelevant) tile+order: same key.
         let same = JobSpec {
@@ -1113,6 +1232,7 @@ mod tests {
             backend: BackendKind::CycleStepped,
             max_cycles: 10_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let r = execute(&spec);
         assert_eq!(r.error, None);
@@ -1144,6 +1264,7 @@ mod tests {
             backend: BackendKind::EventDriven,
             max_cycles: 500_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(back, spec);
@@ -1190,6 +1311,7 @@ mod tests {
                 microbatches: 3,
                 threads: 2,
             }),
+            deadline_ms: None,
         };
         let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(back, spec);
@@ -1228,6 +1350,7 @@ mod tests {
             spec.canonical_key(),
             JobSpec {
                 platform: None,
+                deadline_ms: None,
                 ..spec.clone()
             }
             .canonical_key()
@@ -1266,6 +1389,7 @@ mod tests {
             backend: BackendKind::default(),
             max_cycles: 50_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let timed = execute(&mk(SimModeSpec::Timed));
         let est = execute(&mk(SimModeSpec::Estimate));
@@ -1348,6 +1472,7 @@ mod tests {
             backend: BackendKind::default(),
             max_cycles: 10, // guaranteed cycle-limit error
             platform: None,
+            deadline_ms: None,
         };
         let r = execute(&spec);
         assert!(r.error.is_some());

@@ -16,11 +16,15 @@
 //!   shared across the jobs that sweep workloads on it.
 //! * [`server`] — a line-delimited-JSON TCP front-end: external tools
 //!   (NAS searchers, DSE scripts) submit jobs and stream results.
+//! * [`supervisor`] — the fault-containment wrapper every job body runs
+//!   under: panic isolation (`catch_unwind` → error result) and
+//!   cancellation scoping (deadline / disconnect tokens).
 
 pub mod job;
 pub mod machines;
 pub mod pool;
 pub mod server;
+pub mod supervisor;
 
 /// Lock with poison recovery, shared by the pool and the machine cache: a
 /// worker that panicked mid-job poisons the mutex, but the state each of
@@ -34,6 +38,6 @@ pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGua
     }
 }
 
-pub use job::{JobResult, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
+pub use job::{JobError, JobResult, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
 pub use machines::build_cached;
 pub use pool::{run_jobs, run_jobs_blocking};

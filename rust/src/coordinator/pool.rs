@@ -10,8 +10,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::mapping::uma::Machine;
 
-use super::job::{execute_on, JobResult, JobSpec};
+use super::job::{JobResult, JobSpec};
 use super::lock_unpoisoned;
+use super::supervisor;
 
 /// Group specs by serialized target (machines are reused within a group).
 fn group_by_target(specs: &[JobSpec]) -> Vec<Vec<JobSpec>> {
@@ -57,23 +58,36 @@ pub fn run_jobs(specs: Vec<JobSpec>, workers: usize) -> Vec<JobResult> {
 
     let work_rx = Arc::new(Mutex::new(work_rx));
     let (res_tx, res_rx) = mpsc::channel::<JobResult>();
+    // Worker threads do not inherit the caller's thread-local cancel
+    // token; capture it here so a deadline or disconnect observed by the
+    // caller (e.g. the DSE wave loop under a server job) also stops the
+    // jobs this pool fans out.
+    let caller_token = crate::util::cancel::current();
     std::thread::scope(|scope| {
         for _ in 0..workers.max(1) {
             let work_rx = Arc::clone(&work_rx);
             let res_tx = res_tx.clone();
-            scope.spawn(move || loop {
-                let item = { lock_unpoisoned(&work_rx).recv() };
-                match item {
-                    Ok((machine, spec)) => {
-                        let result = match &machine {
-                            Some(m) => execute_on(m, &spec),
-                            None => super::job::execute(&spec), // re-report build error
-                        };
-                        if res_tx.send(result).is_err() {
-                            return;
+            let token = caller_token.clone();
+            scope.spawn(move || {
+                let _token_guard = token.map(crate::util::cancel::install);
+                loop {
+                    let item = { lock_unpoisoned(&work_rx).recv() };
+                    match item {
+                        Ok((machine, spec)) => {
+                            // Supervised: a panicking job becomes an error
+                            // row instead of killing the worker (and with
+                            // it the whole scope).
+                            let result = match &machine {
+                                Some(m) => supervisor::execute_on(m, &spec),
+                                // Re-report the machine build error.
+                                None => supervisor::execute(&spec),
+                            };
+                            if res_tx.send(result).is_err() {
+                                return;
+                            }
                         }
+                        Err(_) => return, // queue drained
                     }
-                    Err(_) => return, // queue drained
                 }
             });
         }
@@ -110,6 +124,7 @@ mod tests {
             backend: Default::default(),
             max_cycles: 10_000_000,
             platform: None,
+            deadline_ms: None,
         }
     }
 
@@ -141,6 +156,28 @@ mod tests {
         let results = run_jobs(specs, 2);
         assert_eq!(results[0].error, None);
         assert!(results[1].error.is_some());
+    }
+
+    #[test]
+    fn pool_contains_panicking_jobs() {
+        // Opt this process into fault injection (and leave it on — only
+        // ids carrying a chaos mark trip it, so concurrently running
+        // tests with plain small ids are unaffected).
+        std::env::set_var("ACADL_CHAOS", "1");
+        let poisoned = crate::coordinator::job::CHAOS_PANIC_MARK | 7;
+        let specs = vec![gemm_spec(0, 2), gemm_spec(poisoned, 2), gemm_spec(1, 2)];
+        let results = run_jobs(specs, 2);
+        assert_eq!(results.len(), 3, "panic must not swallow the batch");
+        assert_eq!(results[0].error, None);
+        assert_eq!(results[1].error, None);
+        assert_eq!(
+            results[2].error_class(),
+            Some(crate::coordinator::job::JobError::Panic),
+            "{:?}",
+            results[2].error
+        );
+        // The healthy jobs around the panic report real cycles.
+        assert_eq!(results[0].cycles, results[1].cycles);
     }
 
     #[test]

@@ -6,84 +6,156 @@
 //! object instead of killing the connection.  Thread-per-connection with a
 //! global simulation-slot semaphore (the offline build has no async
 //! runtime — DESIGN.md §Substitutions).
+//!
+//! Hardening (DESIGN.md §Supervision & fault containment):
+//!
+//! * **Bounded everything.**  Concurrent connections are capped
+//!   ([`ServeCfg::max_connections`]); requests beyond the simulation
+//!   slots wait in a bounded admission queue
+//!   ([`ServeCfg::queue_depth`]) and are *shed* with an explicit
+//!   `overloaded` error line once it fills — the server answers
+//!   overload, it never silently hangs clients.
+//! * **Bounded time.**  Each job runs under [`supervisor`] with a
+//!   per-connection disconnect watch: a client that goes away cancels
+//!   its in-flight simulation cooperatively.  `deadline_ms` on the spec
+//!   (or [`ServeCfg::default_deadline_ms`]) bounds wall-clock per job.
+//!   Idle connections and mid-line stalls (slow-loris writers) are
+//!   closed after [`ServeCfg::idle_timeout`].
+//! * **Fault containment.**  Job panics become error result lines
+//!   (`panic: …`); write errors to a dead client release the slot via
+//!   RAII and end the handler quietly.  Graceful shutdown
+//!   ([`ServerHandle::shutdown`]) stops accepting, lets in-flight
+//!   connections finish, then returns.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
 
-use super::job::{execute, JobSpec};
+use super::job::JobSpec;
+use super::lock_unpoisoned;
+use super::supervisor;
 
-/// Counting semaphore bounding concurrent simulations across connections.
+/// Per-read poll interval: short enough that handlers observe shutdown
+/// and enforce idle budgets promptly, long enough to stay negligible.
+const READ_POLL: Duration = Duration::from_millis(50);
+/// Disconnect-watch poll interval (bounds cancel latency on disconnect).
+const WATCH_POLL: Duration = Duration::from_millis(20);
+/// Hard cap on one request line (inline ADL sources included).  A line
+/// this long is a protocol error or an attack, not a job.
+const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// Server tuning knobs.  [`ServeCfg::new`] gives production defaults;
+/// tests shrink the timeouts and bounds to exercise the shed paths.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Concurrent simulation slots (clamped to the `--jobs` budget).
+    pub workers: usize,
+    /// Accept cap: connections beyond this are shed with `overloaded`.
+    pub max_connections: usize,
+    /// Requests allowed to *wait* for a slot (per server, not per
+    /// connection); beyond this the request is shed with `overloaded`.
+    pub queue_depth: usize,
+    /// Close a connection after this long with no complete request line
+    /// (covers both idle keep-alives and slow-loris partial lines).
+    /// `None` = never (legacy behavior; shutdown can still drain idle
+    /// connections because reads poll).
+    pub idle_timeout: Option<Duration>,
+    /// Deadline applied to jobs that don't carry their own
+    /// `deadline_ms`.  `None` = unbounded.
+    pub default_deadline_ms: Option<u64>,
+}
+
+impl ServeCfg {
+    pub fn new(workers: usize) -> Self {
+        ServeCfg {
+            workers,
+            max_connections: 256,
+            queue_depth: workers.max(1) * 2,
+            idle_timeout: Some(Duration::from_secs(60)),
+            default_deadline_ms: None,
+        }
+    }
+}
+
+/// Counting semaphore bounding concurrent simulations across connections,
+/// with a bounded waiter queue (the admission queue).
 ///
 /// Lock poisoning (a handler thread panicking while holding the count)
-/// must not take the whole server down: the counter itself is a plain
-/// integer that is never left mid-update, so both paths recover the guard
-/// from a poisoned mutex instead of panicking every later connection.
+/// must not take the whole server down: the state is never left
+/// mid-update, so every path recovers the guard from a poisoned mutex
+/// instead of panicking every later connection.
 pub struct Slots {
-    count: Mutex<usize>,
+    state: Mutex<SlotState>,
     cv: Condvar,
+    capacity: usize,
+}
+
+struct SlotState {
+    free: usize,
+    waiters: usize,
 }
 
 impl Slots {
     pub fn new(n: usize) -> Arc<Self> {
+        let n = n.max(1);
         Arc::new(Slots {
-            count: Mutex::new(n.max(1)),
+            state: Mutex::new(SlotState {
+                free: n,
+                waiters: 0,
+            }),
             cv: Condvar::new(),
+            capacity: n,
         })
     }
 
-    fn acquire(&self) {
-        let mut c = match self.count.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        while *c == 0 {
-            c = match self.cv.wait(c) {
+    /// Total simulation slots.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Slots currently free (observability; the chaos harness asserts
+    /// this returns to capacity after every fault plan).
+    pub fn available(&self) -> usize {
+        lock_unpoisoned(&self.state).free
+    }
+
+    /// Acquire a slot, waiting in the admission queue if none is free —
+    /// unless the queue already holds `max_waiters`, in which case the
+    /// request is shed (`false`) so overload produces an explicit error
+    /// reply instead of an unbounded pile of blocked handlers.
+    fn acquire_queued(&self, max_waiters: usize) -> bool {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.free == 0 && st.waiters >= max_waiters {
+            return false;
+        }
+        st.waiters += 1;
+        while st.free == 0 {
+            st = match self.cv.wait(st) {
                 Ok(g) => g,
                 Err(poisoned) => poisoned.into_inner(),
             };
         }
-        *c -= 1;
+        st.waiters -= 1;
+        st.free -= 1;
+        true
     }
 
     fn release(&self) {
-        let mut c = match self.count.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        *c += 1;
-        drop(c);
+        let mut st = lock_unpoisoned(&self.state);
+        st.free += 1;
+        drop(st);
         self.cv.notify_one();
     }
 }
 
-/// Serve until the listener is closed.  Per-connection accept errors
-/// (ECONNABORTED and friends) are transient on a loaded listener and must
-/// not kill the serving loop; only the fatal "listener gone" path returns.
-pub fn serve(listener: TcpListener, workers: usize) -> std::io::Result<()> {
-    // Clamp the slot count to the process-wide `--jobs` budget so a
-    // server colocated with sweeps cannot oversubscribe the host.
-    let slots = Slots::new(workers.min(crate::util::jobs::configured()).max(1));
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) if e.kind() == std::io::ErrorKind::ConnectionAborted => continue,
-            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => continue,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
-        };
-        let slots = Arc::clone(&slots);
-        std::thread::spawn(move || {
-            let _ = handle(stream, slots);
-        });
-    }
-    Ok(())
-}
-
-/// Releases its slot on drop, so a panicking job cannot leak a
-/// simulation slot and slowly starve the server.
+/// Releases its slot on drop, so neither a panicking job nor a dead
+/// client on the write path can leak a simulation slot and slowly starve
+/// the server.
 struct SlotGuard<'a>(&'a Slots);
 
 impl Drop for SlotGuard<'_> {
@@ -92,38 +164,339 @@ impl Drop for SlotGuard<'_> {
     }
 }
 
-fn handle(stream: TcpStream, slots: Arc<Slots>) -> std::io::Result<()> {
+/// Shared server state: config, slots, shutdown flag, live-connection
+/// accounting for the connection cap and drain-on-shutdown.
+struct Ctl {
+    cfg: ServeCfg,
+    slots: Arc<Slots>,
+    shutdown: AtomicBool,
+    live: Mutex<usize>,
+    drained: Condvar,
+}
+
+impl Ctl {
+    fn new(cfg: ServeCfg) -> Arc<Self> {
+        // Clamp the slot count to the process-wide `--jobs` budget so a
+        // server colocated with sweeps cannot oversubscribe the host.
+        let slots = Slots::new(cfg.workers.min(crate::util::jobs::configured()).max(1));
+        Arc::new(Ctl {
+            cfg,
+            slots,
+            shutdown: AtomicBool::new(false),
+            live: Mutex::new(0),
+            drained: Condvar::new(),
+        })
+    }
+
+    fn try_admit(&self) -> bool {
+        let mut live = lock_unpoisoned(&self.live);
+        if *live >= self.cfg.max_connections {
+            return false;
+        }
+        *live += 1;
+        true
+    }
+
+    fn conn_done(&self) {
+        let mut live = lock_unpoisoned(&self.live);
+        *live = live.saturating_sub(1);
+        if *live == 0 {
+            self.drained.notify_all();
+        }
+    }
+
+    fn wait_drained(&self) {
+        let mut live = lock_unpoisoned(&self.live);
+        while *live > 0 {
+            live = match self.drained.wait(live) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+/// Decrements the live-connection count even if the handler panics.
+struct ConnGuard(Arc<Ctl>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conn_done();
+    }
+}
+
+/// Serve until the listener is closed (legacy entry point: production
+/// defaults for the hardening knobs).  Per-connection accept errors
+/// (ECONNABORTED and friends) are transient on a loaded listener and must
+/// not kill the serving loop; only the fatal "listener gone" path returns.
+pub fn serve(listener: TcpListener, workers: usize) -> std::io::Result<()> {
+    serve_with(listener, ServeCfg::new(workers))
+}
+
+/// Serve with explicit hardening knobs.  Blocks until the listener dies
+/// or a [`ServerHandle`] (from [`spawn`]) requests shutdown, then drains
+/// in-flight connections before returning.
+pub fn serve_with(listener: TcpListener, cfg: ServeCfg) -> std::io::Result<()> {
+    run(listener, Ctl::new(cfg))
+}
+
+fn run(listener: TcpListener, ctl: Arc<Ctl>) -> std::io::Result<()> {
+    let result = accept_loop(&listener, &ctl);
+    // Graceful drain: accepting has stopped (shutdown or listener
+    // error); let in-flight connections finish before returning.
+    ctl.wait_drained();
+    result
+}
+
+fn accept_loop(listener: &TcpListener, ctl: &Arc<Ctl>) -> std::io::Result<()> {
+    for stream in listener.incoming() {
+        if ctl.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) if e.kind() == ErrorKind::ConnectionAborted => continue,
+            Err(e) if e.kind() == ErrorKind::ConnectionReset => continue,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if !ctl.try_admit() {
+            // Connection cap reached: shed explicitly (one error line,
+            // then close) instead of queueing unboundedly.
+            let _ = shed(&stream, "overloaded: connection limit reached");
+            continue;
+        }
+        let ctl = Arc::clone(ctl);
+        std::thread::spawn(move || {
+            let guard = ConnGuard(Arc::clone(&ctl));
+            let _ = handle(stream, &ctl);
+            drop(guard);
+        });
+    }
+    Ok(())
+}
+
+fn shed(mut stream: &TcpStream, why: &str) -> std::io::Result<()> {
+    let line = Json::obj(vec![("error", Json::str(why))]).to_string() + "\n";
+    stream.write_all(line.as_bytes())?;
+    stream.flush()
+}
+
+/// What [`next_line`] observed on the wire.
+enum LineOutcome {
+    Line(String),
+    /// EOF, idle timeout, slow-loris budget, oversized line, fatal read
+    /// error, or shutdown drain — in every case: close quietly.
+    Closed,
+}
+
+/// Read one `\n`-terminated line under the connection's time budgets.
+/// Reads poll at [`READ_POLL`] so the handler observes shutdown and the
+/// idle/line budgets even when the client sends nothing; a line that
+/// does not complete within `idle_timeout` of its *first byte* is a
+/// slow-loris and closes the connection (per-read timeouts alone would
+/// reset on every trickled byte).
+fn next_line(reader: &mut BufReader<TcpStream>, ctl: &Ctl) -> LineOutcome {
+    let mut line: Vec<u8> = Vec::new();
+    let opened = Instant::now();
+    let mut first_byte: Option<Instant> = None;
+    loop {
+        if ctl.shutdown.load(Ordering::SeqCst) && line.is_empty() {
+            // Drain: a connection with no request in flight closes now;
+            // a partially-received request may still complete (bounded
+            // by the line budget below).
+            return LineOutcome::Closed;
+        }
+        let (consumed, newline_at) = match reader.fill_buf() {
+            Ok([]) => return LineOutcome::Closed, // EOF (possibly mid-line)
+            Ok(buf) => {
+                let pos = buf.iter().position(|&b| b == b'\n');
+                line.extend_from_slice(match pos {
+                    Some(p) => &buf[..p],
+                    None => buf,
+                });
+                (buf.len(), pos)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if let Some(budget) = ctl.cfg.idle_timeout {
+                    // One clock covers both: idle (no line started, since
+                    // the last completed request) and slow-loris (line
+                    // started, stuck) — each gets `budget` from its anchor.
+                    let anchor = first_byte.unwrap_or(opened);
+                    if anchor.elapsed() >= budget {
+                        return LineOutcome::Closed;
+                    }
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return LineOutcome::Closed,
+        };
+        match newline_at {
+            Some(p) => {
+                reader.consume(p + 1);
+                return LineOutcome::Line(String::from_utf8_lossy(&line).into_owned());
+            }
+            None => {
+                reader.consume(consumed);
+                if first_byte.is_none() && !line.is_empty() {
+                    first_byte = Some(Instant::now());
+                }
+                if line.len() > MAX_LINE_BYTES {
+                    return LineOutcome::Closed;
+                }
+                if let (Some(budget), Some(fb)) = (ctl.cfg.idle_timeout, first_byte) {
+                    if fb.elapsed() >= budget {
+                        return LineOutcome::Closed; // slow-loris
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn handle(stream: TcpStream, ctl: &Ctl) -> std::io::Result<()> {
+    // Short poll timeout; `next_line` implements the actual budgets.
+    stream.set_read_timeout(Some(READ_POLL))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match next_line(&mut reader, ctl) {
+            LineOutcome::Line(l) => l,
+            LineOutcome::Closed => return Ok(()),
+        };
         if line.trim().is_empty() {
             continue;
         }
         let reply = match JobSpec::parse(&line) {
             Ok(spec) => {
-                slots.acquire();
-                let _guard = SlotGuard(&slots);
-                let result = execute(&spec);
-                result.to_json().to_string()
+                if ctl.slots.acquire_queued(ctl.cfg.queue_depth) {
+                    let _slot = SlotGuard(&ctl.slots);
+                    run_one(spec, ctl, reader.get_ref())
+                } else {
+                    // The stable `overloaded` prefix is the wire contract
+                    // for `JobError::Overloaded`.
+                    Json::obj(vec![(
+                        "error",
+                        Json::str(format!(
+                            "overloaded: {} slots busy, {} queued — shed (retry with backoff)",
+                            ctl.slots.capacity(),
+                            ctl.cfg.queue_depth
+                        )),
+                    )])
+                    .to_string()
+                }
             }
-            Err(e) => Json::obj(vec![(
-                "error",
-                Json::str(format!("bad request: {e}")),
-            )])
-            .to_string(),
+            Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e}")))])
+                .to_string(),
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        // A write error means the client is gone: the slot guard above
+        // already released via RAII — exit the handler quietly (no
+        // logging noise; the disconnect is the client's business).
+        if writer
+            .write_all(reply.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            return Ok(());
+        }
     }
-    Ok(())
+}
+
+/// Execute one admitted job under supervision: a per-job cancel token is
+/// watched by a disconnect probe on the connection (a client that hangs
+/// up cancels its own simulation instead of burning the slot), and the
+/// server's default deadline applies when the spec carries none.
+fn run_one(mut spec: JobSpec, ctl: &Ctl, stream: &TcpStream) -> String {
+    spec.deadline_ms = spec.deadline_ms.or(ctl.cfg.default_deadline_ms);
+    let token = CancelToken::new();
+    let done = Arc::new(AtomicBool::new(false));
+    if let Ok(probe) = stream.try_clone() {
+        let token = token.clone();
+        let done = Arc::clone(&done);
+        // Detached: exits within one WATCH_POLL of `done` (or of the
+        // disconnect it was watching for).
+        std::thread::spawn(move || disconnect_watch(probe, token, done));
+    }
+    let result = supervisor::execute_with_token(&spec, token);
+    done.store(true, Ordering::SeqCst);
+    result.to_json().to_string()
+}
+
+/// Poll the connection for EOF/reset while a job runs.  `peek` never
+/// consumes, so pipelined follow-up requests are left for the handler.
+fn disconnect_watch(stream: TcpStream, token: CancelToken, done: Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(WATCH_POLL));
+    let mut probe = [0u8; 1];
+    while !done.load(Ordering::SeqCst) {
+        match stream.peek(&mut probe) {
+            Ok(0) => {
+                token.cancel(); // orderly shutdown from the client
+                return;
+            }
+            // Data waiting (a pipelined request): nothing to learn from
+            // peeking it again immediately — sleep through the poll.
+            Ok(_) => std::thread::sleep(WATCH_POLL),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(_) => {
+                token.cancel(); // reset/abort: the client is gone
+                return;
+            }
+        }
+    }
+}
+
+/// A server running on its own thread, with its listening address, its
+/// slot semaphore (for leak assertions), and graceful shutdown.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    ctl: Arc<Ctl>,
+    thread: Option<std::thread::JoinHandle<std::io::Result<()>>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The server's slot semaphore (observability for tests).
+    pub fn slots(&self) -> Arc<Slots> {
+        Arc::clone(&self.ctl.slots)
+    }
+
+    /// Stop accepting, drain in-flight connections, and return the
+    /// serve loop's result.
+    pub fn shutdown(mut self) -> std::io::Result<()> {
+        self.ctl.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept; the loop re-checks the flag first.
+        let _ = TcpStream::connect(self.addr);
+        match self.thread.take() {
+            Some(t) => t.join().unwrap_or(Ok(())),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:0`) and serve on a background thread.
+pub fn spawn(addr: &str, cfg: ServeCfg) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let ctl = Ctl::new(cfg);
+    let run_ctl = Arc::clone(&ctl);
+    let thread = std::thread::spawn(move || run(listener, run_ctl));
+    Ok(ServerHandle {
+        addr: local,
+        ctl,
+        thread: Some(thread),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{JobResult, SimModeSpec, TargetSpec, Workload};
+    use crate::coordinator::job::{JobError, JobResult, SimModeSpec, TargetSpec, Workload};
+    use std::io::Read;
 
     fn start_server(workers: usize) -> std::net::SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
@@ -132,6 +505,49 @@ mod tests {
             let _ = serve(listener, workers);
         });
         addr
+    }
+
+    fn gemm_spec(id: u64) -> JobSpec {
+        JobSpec {
+            id,
+            target: TargetSpec::Systolic { rows: 2, cols: 2 },
+            workload: Workload::Gemm {
+                m: 4,
+                k: 4,
+                n: 4,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: Default::default(),
+            max_cycles: 10_000_000,
+            platform: None,
+            deadline_ms: None,
+        }
+    }
+
+    /// A job that (with `ACADL_CHAOS=1`) holds its slot until its cancel
+    /// token trips — the controllable long-running request for the
+    /// backpressure and disconnect tests.
+    fn stall_spec(id_low: u64, deadline_ms: Option<u64>) -> JobSpec {
+        std::env::set_var("ACADL_CHAOS", "1");
+        JobSpec {
+            id: crate::coordinator::job::CHAOS_STALL_MARK | id_low,
+            deadline_ms,
+            ..gemm_spec(0)
+        }
+    }
+
+    fn submit(stream: &mut TcpStream, spec: &JobSpec) {
+        let line = spec.to_json().to_string() + "\n";
+        stream.write_all(line.as_bytes()).unwrap();
+    }
+
+    fn read_reply(stream: TcpStream) -> String {
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
     }
 
     #[test]
@@ -151,14 +567,11 @@ mod tests {
             backend: Default::default(),
             max_cycles: 10_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let mut stream = TcpStream::connect(addr).expect("connect");
-        let line = spec.to_json().to_string() + "\n";
-        stream.write_all(line.as_bytes()).unwrap();
-
-        let mut reader = BufReader::new(stream);
-        let mut reply = String::new();
-        reader.read_line(&mut reply).unwrap();
+        submit(&mut stream, &spec);
+        let reply = read_reply(stream);
         let result =
             JobResult::from_json(&Json::parse(reply.trim()).unwrap()).expect("result json");
         assert_eq!(result.id, 42);
@@ -172,9 +585,7 @@ mod tests {
         let addr = start_server(1);
         let mut stream = TcpStream::connect(addr).expect("connect");
         stream.write_all(b"this is not json\n").unwrap();
-        let mut reader = BufReader::new(stream);
-        let mut reply = String::new();
-        reader.read_line(&mut reply).unwrap();
+        let reply = read_reply(stream);
         assert!(reply.contains("bad request"), "{reply}");
     }
 
@@ -184,22 +595,10 @@ mod tests {
         let mut stream = TcpStream::connect(addr).expect("connect");
         for id in 0..3u64 {
             let spec = JobSpec {
-                id,
-                target: TargetSpec::Systolic { rows: 2, cols: 2 },
-                workload: Workload::Gemm {
-                    m: 4,
-                    k: 4,
-                    n: 4,
-                    tile: None,
-                    order: None,
-                },
                 mode: SimModeSpec::Estimate,
-                backend: Default::default(),
-                max_cycles: 10_000_000,
-                platform: None,
+                ..gemm_spec(id)
             };
-            let line = spec.to_json().to_string() + "\n";
-            stream.write_all(line.as_bytes()).unwrap();
+            submit(&mut stream, &spec);
         }
         let mut reader = BufReader::new(stream);
         for id in 0..3u64 {
@@ -207,6 +606,152 @@ mod tests {
             reader.read_line(&mut reply).unwrap();
             let result = JobResult::from_json(&Json::parse(reply.trim()).unwrap()).unwrap();
             assert_eq!(result.id, id);
+        }
+    }
+
+    /// Satellite: a client that dies mid-execution must not wedge the
+    /// server — the disconnect watch cancels the simulation, the write
+    /// error releases the slot quietly, and the next connection is
+    /// served.
+    #[test]
+    fn dead_client_mid_execution_releases_the_slot() {
+        let handle = spawn(
+            "127.0.0.1:0",
+            ServeCfg {
+                idle_timeout: Some(Duration::from_secs(5)),
+                ..ServeCfg::new(1)
+            },
+        )
+        .expect("spawn");
+        let slots = handle.slots();
+        assert_eq!(slots.available(), slots.capacity());
+
+        let mut victim = TcpStream::connect(handle.addr()).expect("connect");
+        // 10 s deadline: only the disconnect can end this stall quickly.
+        submit(&mut victim, &stall_spec(1, Some(10_000)));
+        std::thread::sleep(Duration::from_millis(100)); // job is now holding the slot
+        drop(victim); // kill the socket mid-execution
+
+        // The watch cancels the job and the slot comes back.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while slots.available() < slots.capacity() {
+            assert!(Instant::now() < deadline, "slot leaked after client death");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // And a following connection still gets served.
+        let mut next = TcpStream::connect(handle.addr()).expect("connect after death");
+        submit(&mut next, &gemm_spec(7));
+        let reply = read_reply(next);
+        let result = JobResult::from_json(&Json::parse(reply.trim()).unwrap()).unwrap();
+        assert_eq!(result.id, 7);
+        assert_eq!(result.error, None, "{reply}");
+        handle.shutdown().expect("shutdown");
+    }
+
+    /// A full admission queue sheds with an explicit `overloaded` error
+    /// instead of hanging the client.
+    #[test]
+    fn full_admission_queue_sheds_with_overloaded() {
+        let handle = spawn(
+            "127.0.0.1:0",
+            ServeCfg {
+                queue_depth: 0, // no waiting: busy slot ⇒ shed
+                ..ServeCfg::new(1)
+            },
+        )
+        .expect("spawn");
+
+        let mut holder = TcpStream::connect(handle.addr()).expect("connect");
+        submit(&mut holder, &stall_spec(2, Some(2_000)));
+        std::thread::sleep(Duration::from_millis(200)); // stall job owns the slot
+
+        let mut shed_client = TcpStream::connect(handle.addr()).expect("connect");
+        submit(&mut shed_client, &gemm_spec(8));
+        let reply = read_reply(shed_client);
+        assert!(reply.contains("overloaded"), "{reply}");
+        assert_eq!(
+            JobError::classify(
+                Json::parse(reply.trim())
+                    .unwrap()
+                    .field("error")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+            ),
+            JobError::Overloaded
+        );
+
+        // The holder's job ends via its deadline and reports it.
+        let reply = read_reply(holder);
+        let result = JobResult::from_json(&Json::parse(reply.trim()).unwrap()).unwrap();
+        assert_eq!(result.error_class(), Some(JobError::Deadline), "{reply}");
+        handle.shutdown().expect("shutdown");
+    }
+
+    /// `deadline_ms` on the wire bounds a job that would otherwise hold
+    /// its slot for seconds.
+    #[test]
+    fn wire_deadline_bounds_a_job() {
+        let handle = spawn("127.0.0.1:0", ServeCfg::new(1)).expect("spawn");
+        let mut stream = TcpStream::connect(handle.addr()).expect("connect");
+        let t = Instant::now();
+        submit(&mut stream, &stall_spec(3, Some(150)));
+        let reply = read_reply(stream);
+        let result = JobResult::from_json(&Json::parse(reply.trim()).unwrap()).unwrap();
+        assert_eq!(result.error_class(), Some(JobError::Deadline), "{reply}");
+        assert!(
+            t.elapsed() < Duration::from_secs(4),
+            "deadline did not bound the stall: {:?}",
+            t.elapsed()
+        );
+        handle.shutdown().expect("shutdown");
+    }
+
+    /// Idle connections (and slow-loris writers) are closed after the
+    /// idle budget; the server keeps serving others.
+    #[test]
+    fn idle_connection_times_out() {
+        let handle = spawn(
+            "127.0.0.1:0",
+            ServeCfg {
+                idle_timeout: Some(Duration::from_millis(150)),
+                ..ServeCfg::new(1)
+            },
+        )
+        .expect("spawn");
+        let mut idle = TcpStream::connect(handle.addr()).expect("connect");
+        let mut buf = [0u8; 8];
+        // The server closes us: read returns 0 within a few poll ticks.
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let n = idle.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "expected the server to close the idle connection");
+
+        let mut live = TcpStream::connect(handle.addr()).expect("connect");
+        submit(&mut live, &gemm_spec(9));
+        let reply = read_reply(live);
+        assert!(reply.contains("\"cycles\""), "{reply}");
+        handle.shutdown().expect("shutdown");
+    }
+
+    /// Shutdown stops accepting, finishes in-flight work, and returns.
+    #[test]
+    fn graceful_shutdown_drains_in_flight_connections() {
+        let handle = spawn("127.0.0.1:0", ServeCfg::new(2)).expect("spawn");
+        let addr = handle.addr();
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        submit(&mut stream, &gemm_spec(5));
+        let reply = read_reply(stream); // in-flight job completed
+        assert!(reply.contains("\"cycles\""), "{reply}");
+        handle.shutdown().expect("clean shutdown");
+        // The listener is gone: new connections are refused (or reset).
+        let refused = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+        if let Ok(mut s) = refused {
+            // Accepted by the OS backlog before close — but nobody serves
+            // it: reads see EOF.
+            let mut buf = [0u8; 1];
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            assert_eq!(s.read(&mut buf).unwrap_or(0), 0);
         }
     }
 }

@@ -1,0 +1,155 @@
+//! The supervision layer: the one place where a job body meets the
+//! outside world's failure modes.  Every execution path that runs
+//! *other people's requests* — the pool's worker threads, the TCP
+//! server's connection handlers — routes through [`run_supervised`], so
+//! the containment policy lives in exactly one spot:
+//!
+//! * **Panic isolation.**  The body runs under `catch_unwind`; a panic
+//!   becomes an error [`JobResult`] carrying the panic message with a
+//!   stable `panic: ` prefix ([`JobError::Panic`]).  RAII guards inside
+//!   the body (slots, jobs-budget leases, cancel-token installs, pooled
+//!   effects) unwind normally, so one poisoned job never leaks
+//!   resources, takes down a sweep, or kills a connection.
+//! * **Cancellation scoping.**  [`execute_with_token`] installs a
+//!   caller-provided [`CancelToken`] (e.g. the server's
+//!   client-disconnect watch) around the body; `execute_on` chains the
+//!   job's own `deadline_ms` onto it.  The install guard is restored
+//!   even on unwind — the `catch_unwind` boundary is *outside* the
+//!   install, so a panicking job cannot leave its token behind on a
+//!   pool thread that will run other jobs.
+//!
+//! What this layer deliberately does **not** do: kill threads, time out
+//! preemptively, or retry.  Cancellation is cooperative (the sim loops
+//! poll the token), and retry policy belongs to callers who know
+//! whether a job is idempotent (all of ours are — results are memoized
+//! by canonical key).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::mapping::uma::Machine;
+use crate::util::cancel::{self, CancelToken};
+
+use super::job::{self, JobResult, JobSpec};
+
+/// Best-effort text of a panic payload (`&str` and `String` payloads
+/// cover `panic!`/`assert!`/`unwrap` in practice).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run a job body with panic containment: a panic becomes an error
+/// result (`panic: <message>`) instead of propagating into the calling
+/// worker or connection handler.
+pub fn run_supervised(spec: &JobSpec, body: impl FnOnce() -> JobResult) -> JobResult {
+    let start = std::time::Instant::now();
+    // AssertUnwindSafe: the body only touches `Arc`-shared state guarded
+    // by poison-recovering locks (`lock_unpoisoned`) or atomics, and the
+    // per-job state it mutates dies with the unwind.
+    match catch_unwind(AssertUnwindSafe(body)) {
+        Ok(result) => result,
+        Err(payload) => JobResult::panicked(
+            spec,
+            panic_message(payload.as_ref()),
+            start.elapsed().as_micros() as u64,
+        ),
+    }
+}
+
+/// [`job::execute`] under supervision (standalone / server path).
+pub fn execute(spec: &JobSpec) -> JobResult {
+    run_supervised(spec, || job::execute(spec))
+}
+
+/// [`job::execute_on`] under supervision (pool path, shared machine).
+pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
+    run_supervised(spec, || job::execute_on(machine, spec))
+}
+
+/// Supervised execution with `token` installed for the duration of the
+/// job: the server's per-connection disconnect watch threads through
+/// here, and `execute_on` chains the job's own `deadline_ms` onto it.
+/// The install lives *inside* the catch so an unwind restores the
+/// thread's previous token before the panic is converted.
+pub fn execute_with_token(spec: &JobSpec, token: CancelToken) -> JobResult {
+    run_supervised(spec, || {
+        let _guard = cancel::install(token);
+        job::execute(spec)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{JobError, SimModeSpec, TargetSpec, Workload};
+
+    fn spec(id: u64) -> JobSpec {
+        JobSpec {
+            id,
+            target: TargetSpec::Systolic { rows: 2, cols: 2 },
+            workload: Workload::Gemm {
+                m: 4,
+                k: 4,
+                n: 4,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: Default::default(),
+            max_cycles: 10_000_000,
+            platform: None,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn panicking_body_becomes_error_result() {
+        let s = spec(1);
+        let r = run_supervised(&s, || panic!("boom {}", 42));
+        assert_eq!(r.id, 1);
+        assert_eq!(r.error.as_deref(), Some("panic: boom 42"));
+        assert_eq!(r.error_class(), Some(JobError::Panic));
+        assert_eq!(r.cycles, 0);
+    }
+
+    #[test]
+    fn healthy_body_passes_through() {
+        let s = spec(2);
+        let r = execute(&s);
+        assert_eq!(r.error, None, "{r:?}");
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn panic_does_not_leave_an_installed_token_behind() {
+        let s = spec(3);
+        let token = CancelToken::new();
+        let r = run_supervised(&s, || {
+            let _g = cancel::install(token);
+            panic!("mid-job panic with a token installed");
+        });
+        assert_eq!(r.error_class(), Some(JobError::Panic));
+        // The unwind dropped the install guard: this thread is clean.
+        assert!(cancel::current().is_none());
+    }
+
+    #[test]
+    fn token_install_scopes_to_the_job() {
+        let s = spec(4);
+        let token = CancelToken::new();
+        token.cancel();
+        let r = execute_with_token(&s, token);
+        // The gemm is small enough to finish between polls — either a
+        // clean result or a structured cancellation, never a hang; and
+        // the token never outlives the call.
+        if let Some(class) = r.error_class() {
+            assert_eq!(class, JobError::Cancelled, "{:?}", r.error);
+        }
+        assert!(cancel::current().is_none());
+    }
+}

@@ -159,7 +159,7 @@ impl Checkpoint {
                 .and_then(|x| x.as_u64())
                 .map_err(|e| format!("checkpoint {key}: {e}"))
         };
-        Ok(Checkpoint {
+        let ck = Checkpoint {
             version,
             signature,
             cursor: num("cursor")?,
@@ -184,7 +184,65 @@ impl Checkpoint {
             failed: num("failed")?,
             frontier: points_from_json(v.field("frontier").map_err(|e| e.to_string())?, "frontier")?,
             samples: points_from_json(v.field("samples").map_err(|e| e.to_string())?, "samples")?,
-        })
+        };
+        ck.validate()?;
+        Ok(ck)
+    }
+
+    /// Cross-field consistency: every checkpoint the engine writes sits
+    /// at a window boundary, where these invariants hold by
+    /// construction.  A file that parses but violates one was truncated
+    /// mid-edit, bit-flipped, or hand-altered — resuming from it would
+    /// silently skip or double-count candidates, so reject it with a
+    /// diagnostic instead.
+    pub fn validate(&self) -> Result<(), String> {
+        let pruned = self
+            .pruned_infeasible
+            .saturating_add(self.pruned_bound)
+            .saturating_add(self.pruned_dominated);
+        if self.evaluated.checked_add(pruned) != Some(self.cursor) {
+            return Err(format!(
+                "inconsistent counters: {} evaluated + {pruned} pruned != cursor {} — \
+                 the file is corrupt (every pulled candidate is exactly one of the two)",
+                self.evaluated, self.cursor
+            ));
+        }
+        if self.simulated.checked_add(self.cache_hits) != Some(self.evaluated) {
+            return Err(format!(
+                "inconsistent counters: {} simulated + {} cache hits != {} evaluated — \
+                 the file is corrupt",
+                self.simulated, self.cache_hits, self.evaluated
+            ));
+        }
+        if self.failed > self.evaluated {
+            return Err(format!(
+                "inconsistent counters: {} failed > {} evaluated — the file is corrupt",
+                self.failed, self.evaluated
+            ));
+        }
+        if !self.stride.is_power_of_two() {
+            return Err(format!(
+                "invalid thinning stride {} (strides start at 1 and only double) — \
+                 the file is corrupt",
+                self.stride
+            ));
+        }
+        let retained = (self.frontier.len() + self.samples.len()) as u64;
+        if retained > self.evaluated {
+            return Err(format!(
+                "{retained} retained points exceed {} evaluated candidates — \
+                 the file is corrupt",
+                self.evaluated
+            ));
+        }
+        if let Some(p) = self.frontier.iter().find(|p| p.result.error.is_some()) {
+            return Err(format!(
+                "frontier contains an error row (id {}) — error points never join \
+                 the frontier; the file is corrupt",
+                p.result.id
+            ));
+        }
+        Ok(())
     }
 
     /// Atomic write: serialize to a sibling `.tmp`, then rename over the
@@ -229,6 +287,7 @@ mod tests {
                 backend: Default::default(),
                 max_cycles: 1_000_000,
                 platform: None,
+                deadline_ms: None,
             },
             lower_bound: cycles / 2,
             result: JobResult {
@@ -312,6 +371,70 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.cursor, ck.cursor);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_rejected_with_a_clean_diagnostic() {
+        let path = std::env::temp_dir().join(format!(
+            "acadl_ck_trunc_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        checkpoint().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Cut at several depths: mid-object, mid-points-array, mid-key.
+        for cut in [text.len() / 2, text.len() - 2, 10, 0] {
+            std::fs::write(&path, &text[..cut]).unwrap();
+            let err = Checkpoint::load(&path).expect_err("truncated file must not load");
+            assert!(err.contains(&path), "diagnostic names the file: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flipped_bytes_are_rejected_not_resumed() {
+        let path = std::env::temp_dir().join(format!(
+            "acadl_ck_flip_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        checkpoint().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // A non-UTF8 byte in the middle: the read/parse layer rejects it.
+        let mut garbled = bytes.clone();
+        garbled[bytes.len() / 2] = 0xFF;
+        std::fs::write(&path, &garbled).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "garbled byte must not load");
+        // A *parseable* corruption — a counter digit flipped — is caught
+        // by the cross-field consistency check instead of silently
+        // resuming with broken accounting.
+        let text = String::from_utf8(bytes).unwrap();
+        let tampered = text.replace("\"evaluated\":9000", "\"evaluated\":9001");
+        assert_ne!(tampered, text, "fixture drifted: evaluated counter not found");
+        std::fs::write(&path, &tampered).unwrap();
+        let err = Checkpoint::load(&path).expect_err("inconsistent counters must not load");
+        assert!(err.contains("corrupt"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn consistency_validation_catches_broken_invariants() {
+        assert!(checkpoint().validate().is_ok());
+        let mut ck = checkpoint();
+        ck.cursor += 1; // evaluated + pruned no longer covers the cursor
+        assert!(ck.validate().unwrap_err().contains("cursor"));
+        let mut ck = checkpoint();
+        ck.cache_hits += 3;
+        assert!(ck.validate().unwrap_err().contains("cache hits"));
+        let mut ck = checkpoint();
+        ck.failed = ck.evaluated + 1;
+        assert!(ck.validate().unwrap_err().contains("failed"));
+        let mut ck = checkpoint();
+        ck.stride = 6;
+        assert!(ck.validate().unwrap_err().contains("stride"));
+        let mut ck = checkpoint();
+        ck.frontier[0].result.error = Some("boom".into());
+        assert!(ck.validate().unwrap_err().contains("error row"));
     }
 
     #[test]

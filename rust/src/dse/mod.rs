@@ -124,6 +124,12 @@ pub struct DseStats {
     /// Points restored from a `--resume` checkpoint rather than
     /// evaluated this run.
     pub restored: usize,
+    /// The sweep stopped early because a cancellation token (deadline,
+    /// client disconnect, shutdown) tripped.  The report then covers the
+    /// complete windows processed before the trip — identical to what a
+    /// `stop_after` run at the same boundary would have produced — and
+    /// the checkpoint (when configured) resumes from that boundary.
+    pub cancelled: bool,
 }
 
 /// The exploration outcome: evaluated points (sorted by cycles, then
@@ -276,6 +282,12 @@ impl DseReport {
                 s.restored
             ));
         }
+        if s.cancelled {
+            line.push_str(
+                "\nsweep cancelled before the space was exhausted (deadline or \
+                 cancellation observed); resume from the checkpoint to continue",
+            );
+        }
         if s.pruned_bound > 0 {
             // Incumbent pruning optimizes the *cycle* objective, so cut
             // candidates (typically the high-bound, low-area scalar tail)
@@ -311,6 +323,7 @@ mod tests {
             backend: BackendKind::EventDriven,
             max_cycles: 100_000_000,
             platform: None,
+            deadline_ms: None,
         }
     }
 

@@ -134,6 +134,7 @@ impl DseSpace {
             backend,
             max_cycles: self.max_cycles,
             platform: None,
+            deadline_ms: None,
         };
         if self.include_oma {
             let caches = OmaConfig::enumerate_cache_variants();
@@ -195,6 +196,7 @@ impl DseSpace {
                 backend,
                 max_cycles: self.max_cycles,
                 platform: None,
+                deadline_ms: None,
             });
         };
         if self.include_oma {
@@ -264,6 +266,7 @@ impl DseSpace {
                 backend,
                 max_cycles: self.max_cycles,
                 platform: None,
+                deadline_ms: None,
             });
         };
         if self.include_oma {
@@ -322,6 +325,7 @@ impl DseSpace {
                             microbatches: 4,
                             threads: 0,
                         }),
+                        deadline_ms: None,
                     });
                 }
             }
@@ -420,6 +424,7 @@ impl FileSpace {
             backend,
             max_cycles: self.max_cycles,
             platform: None,
+            deadline_ms: None,
         })
     }
 

@@ -442,6 +442,15 @@ pub fn explore_source(
     let mut processed_this_run: u64 = 0;
     let mut since_checkpoint: u64 = 0;
     let mut peak_resident = frontier.len() + samples.len();
+    // Cooperative cancellation (deadline / disconnect / shutdown): fetched
+    // once; `None` costs one branch per window.  The engine only ever
+    // stops at window boundaries (that is what makes cursors resumable),
+    // so a trip observed *mid*-window rolls the sweep state back to the
+    // boundary snapshot below — the cancelled window's partial results
+    // (error rows from cancelled jobs) never reach the report or the
+    // checkpoint.
+    let cancel_token = crate::util::cancel::current();
+    let mut cancelled = false;
 
     let write_checkpoint = |path: &str,
                             cursor: u64,
@@ -473,6 +482,35 @@ pub fn explore_source(
     };
 
     loop {
+        if cancel_token.as_ref().is_some_and(|t| t.cause().is_some()) {
+            cancelled = true;
+            break; // at a window boundary: state is checkpoint-consistent
+        }
+        // Boundary snapshot for mid-window cancellation rollback (taken
+        // only when a token exists — the uncancellable path stays
+        // allocation-free).
+        let boundary = cancel_token.as_ref().map(|_| {
+            (
+                cursor,
+                stride,
+                best,
+                best_target.clone(),
+                frontier.clone(),
+                samples.clone(),
+                [
+                    evaluated,
+                    pruned_infeasible,
+                    pruned_bound,
+                    pruned_dominated,
+                    simulated,
+                    cache_hits,
+                    failed,
+                ],
+                waves.len(),
+                processed_this_run,
+                since_checkpoint,
+            )
+        });
         // Pull one lookahead window (bounded: this buffer and the
         // frontier/reservoir are the only per-sweep state).
         let mut buf: Vec<(JobSpec, u64)> = Vec::with_capacity(window.min(4096));
@@ -630,6 +668,36 @@ pub fn explore_source(
         since_checkpoint += ws.pulled as u64;
         waves.push(ws);
 
+        if cancel_token.as_ref().is_some_and(|t| t.cause().is_some()) {
+            // Tripped mid-window: the window just processed contains
+            // cancelled-job error rows that a resumed run would wrongly
+            // treat as evaluated.  Roll back to the boundary snapshot so
+            // the report and the final checkpoint cover complete windows
+            // only.
+            if let Some((c, st, b, bt, fr, sa, ctr, nw, run, since)) = boundary {
+                cursor = c;
+                stride = st;
+                best = b;
+                best_target = bt;
+                frontier = fr;
+                samples = sa;
+                [
+                    evaluated,
+                    pruned_infeasible,
+                    pruned_bound,
+                    pruned_dominated,
+                    simulated,
+                    cache_hits,
+                    failed,
+                ] = ctr;
+                waves.truncate(nw);
+                processed_this_run = run;
+                since_checkpoint = since;
+            }
+            cancelled = true;
+            break;
+        }
+
         let stopping = cfg.stop_after.is_some_and(|limit| processed_this_run >= limit);
         if let Some(ck) = &cfg.checkpoint {
             if since_checkpoint >= ck.every || stopping {
@@ -711,6 +779,7 @@ pub fn explore_source(
             memo_evictions: memo.evictions(),
             peak_resident,
             restored,
+            cancelled,
         },
         points,
         frontier: frontier_idx,
@@ -796,6 +865,72 @@ mod tests {
         // Multi-window runs record one WaveStats per window.
         assert_eq!(tiny.waves.len(), tiny.stats.candidates);
         assert_eq!(one_shot.waves.len(), 1);
+    }
+
+    #[test]
+    fn cancelled_token_stops_the_sweep_and_reruns_are_unaffected() {
+        let mut space = DseSpace::quick(6);
+        space.backends = vec![BackendKind::EventDriven];
+        let cfg = DseConfig::legacy(2, false);
+        let clean = explore_source(&mut SpaceSource::new(&space), &cfg, None).unwrap();
+        assert!(!clean.stats.cancelled);
+
+        // An already-cancelled token stops the sweep before it pulls
+        // anything.
+        let token = crate::util::cancel::CancelToken::new();
+        token.cancel();
+        let guard = crate::util::cancel::install(token);
+        let stopped = explore_source(&mut SpaceSource::new(&space), &cfg, None).unwrap();
+        drop(guard);
+        assert!(stopped.stats.cancelled, "{}", stopped.summary());
+        assert_eq!(stopped.stats.candidates, 0);
+        assert_eq!(stopped.stats.evaluated, 0);
+        assert!(stopped.waves.is_empty());
+
+        // Once the guard is gone the engine is back to normal: a rerun
+        // reproduces the clean reference exactly.
+        let rerun = explore_source(&mut SpaceSource::new(&space), &cfg, None).unwrap();
+        assert!(!rerun.stats.cancelled);
+        assert_eq!(rerun.stats.evaluated, clean.stats.evaluated);
+        assert_eq!(rerun.stats.best_cycles, clean.stats.best_cycles);
+    }
+
+    #[test]
+    fn deadline_mid_window_rolls_back_to_the_boundary() {
+        // Chaos stall jobs hold their slot until the deadline token
+        // trips, guaranteeing the trip lands *mid*-window — the rollback
+        // path must leave the report as if the window never started.
+        std::env::set_var("ACADL_CHAOS", "1");
+        use crate::coordinator::job::{SimModeSpec, TargetSpec, Workload, CHAOS_STALL_MARK};
+        let spec = |i: u64| JobSpec {
+            id: CHAOS_STALL_MARK | i,
+            target: TargetSpec::Systolic { rows: 2, cols: 2 },
+            workload: Workload::Gemm {
+                m: 4,
+                k: 4,
+                n: 4,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
+            max_cycles: 10_000_000,
+            platform: None,
+            deadline_ms: None,
+        };
+        let specs: Vec<JobSpec> = (0..4).map(spec).collect();
+        let token = crate::util::cancel::CancelToken::with_deadline(
+            std::time::Duration::from_millis(50),
+        );
+        let _guard = crate::util::cancel::install(token);
+        let rep =
+            explore_source(&mut VecSource::new(specs), &DseConfig::legacy(2, false), None)
+                .unwrap();
+        assert!(rep.stats.cancelled, "{}", rep.summary());
+        assert_eq!(rep.stats.candidates, 0, "rollback to the window boundary");
+        assert_eq!(rep.stats.evaluated, 0);
+        assert!(rep.waves.is_empty());
+        assert!(rep.points.is_empty());
     }
 
     #[test]

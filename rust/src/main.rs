@@ -42,7 +42,7 @@ COMMANDS:
            [--mode functional|timed|estimate] [--backend cycle|event|parallel]
            [--rows/--cols/--units N] [--arch-file <file.acadl>]
            [--platform CHIPS] [--hop-latency N] [--microbatches N]
-           [--threads N] [--jobs N]
+           [--threads N] [--jobs N] [--deadline-ms N]
       Simulate a workload, print the result row as JSON.  `gemm` takes
       --m/--k/--n/--tile; `mlp` and `transformer` take --seq (batch rows /
       sequence length).  The timing backends report identical cycles;
@@ -53,6 +53,9 @@ COMMANDS:
       --threads worker threads (0 = lease from the --jobs budget); any
       thread count reports identical cycles.  An --arch-file with a
       `platform { … }` block sets the same knobs from the description.
+      --deadline-ms bounds the simulation's wall clock: an over-budget
+      run stops within one check interval and reports a structured
+      `deadline exceeded` error instead of running away.
   sweep [--dim N] [--workers N] [--backend cycle|event|parallel] [--jobs N]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   dse [--dim N] [--workers N] [--jobs N] [--quick true] [--no-prune true]
@@ -74,9 +77,18 @@ COMMANDS:
       built-in space also sweeps 1/2/4-chip platforms over the sharded
       transformer (the cycles-vs-chips Pareto axis).
   serve [--addr HOST:PORT] [--workers N] [--jobs N] [--arch-file <file.acadl>]
+        [--max-connections N] [--queue-depth N] [--idle-timeout-ms N]
+        [--deadline-ms N]
       Serve JobSpec JSON lines over TCP.  Jobs may inline ADL text as
       {\"kind\":\"adl\",\"source\":\"…\"} targets; --arch-file pre-builds
-      (and verifies) one description into the machine cache.
+      (and verifies) one description into the machine cache.  The server
+      is supervised: job panics become error rows, a client disconnect
+      cancels its in-flight simulation, and a spec's `deadline_ms`
+      (defaulted by --deadline-ms) bounds its wall clock.  Load beyond
+      --max-connections concurrent clients or --queue-depth waiting
+      requests is shed with an explicit `overloaded` error line;
+      connections idle (or trickling one line) longer than
+      --idle-timeout-ms are closed (0 = never).
   golden <name> [--dir artifacts]
       Run a golden-model artifact with synthetic inputs.
 ";
@@ -96,7 +108,7 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         "simulate" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
             "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
-            "threads", "jobs",
+            "threads", "jobs", "deadline-ms",
         ],
         "sweep" => &["dim", "workers", "backend", "jobs"],
         "dse" => &[
@@ -115,7 +127,16 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
             "checkpoint-every",
             "resume",
         ],
-        "serve" => &["addr", "workers", "jobs", "arch-file"],
+        "serve" => &[
+            "addr",
+            "workers",
+            "jobs",
+            "arch-file",
+            "max-connections",
+            "queue-depth",
+            "idle-timeout-ms",
+            "deadline-ms",
+        ],
         "golden" => &["dir"],
         "fmt" => &["check"],
         _ => &[],
@@ -458,6 +479,7 @@ fn run() -> Result<(), String> {
                 backend: backend_kind(&args)?,
                 max_cycles: 500_000_000,
                 platform,
+                deadline_ms: args.opt_usize("deadline-ms")?.map(|n| n as u64),
             };
             let r = coordinator::job::execute(&spec);
             println!("{}", r.to_json());
@@ -487,6 +509,7 @@ fn run() -> Result<(), String> {
                     backend,
                     max_cycles: 500_000_000,
                     platform: None,
+                    deadline_ms: None,
                 })
                 .collect();
             let results = coordinator::run_jobs(specs, workers);
@@ -628,10 +651,19 @@ fn run() -> Result<(), String> {
                 let spec = arch_file_target(path)?;
                 println!("pre-built machine from {path}: {}", spec.describe());
             }
+            let mut cfg = coordinator::server::ServeCfg::new(workers);
+            cfg.max_connections = args.usize("max-connections", cfg.max_connections)?.max(1);
+            cfg.queue_depth = args.usize("queue-depth", cfg.queue_depth)?;
+            // 0 = never time out idle connections (legacy behavior).
+            cfg.idle_timeout = match args.usize("idle-timeout-ms", 60_000)? {
+                0 => None,
+                ms => Some(std::time::Duration::from_millis(ms as u64)),
+            };
+            cfg.default_deadline_ms = args.opt_usize("deadline-ms")?.map(|n| n as u64);
             let listener =
                 std::net::TcpListener::bind(&addr).map_err(|e| format!("bind {addr}: {e}"))?;
             println!("acadl-cli serving on {addr} ({workers} workers)");
-            coordinator::server::serve(listener, workers).map_err(|e| e.to_string())?;
+            coordinator::server::serve_with(listener, cfg).map_err(|e| e.to_string())?;
         }
         "golden" => {
             let name = args
@@ -731,7 +763,14 @@ mod tests {
         assert!(allowed_flags("simulate").contains(&"arch-file"));
         assert!(allowed_flags("simulate").contains(&"workload"));
         assert!(allowed_flags("simulate").contains(&"seq"));
-        for f in ["platform", "hop-latency", "microbatches", "threads", "jobs"] {
+        for f in [
+            "platform",
+            "hop-latency",
+            "microbatches",
+            "threads",
+            "jobs",
+            "deadline-ms",
+        ] {
             assert!(allowed_flags("simulate").contains(&f), "simulate misses --{f}");
         }
         for c in ["sweep", "dse", "serve"] {
@@ -749,6 +788,14 @@ mod tests {
             assert!(allowed_flags("dse").contains(&f), "dse misses --{f}");
         }
         assert!(allowed_flags("serve").contains(&"arch-file"));
+        for f in [
+            "max-connections",
+            "queue-depth",
+            "idle-timeout-ms",
+            "deadline-ms",
+        ] {
+            assert!(allowed_flags("serve").contains(&f), "serve misses --{f}");
+        }
         assert!(allowed_flags("fmt").contains(&"check"));
         assert!(allowed_flags("parse").is_empty());
         // Every command with an allowlist is a known command, so the

@@ -24,6 +24,55 @@
 use std::cmp::Reverse;
 
 use super::kernel::{SimCore, SimError, SimStats, DEADLOCK_WINDOW};
+use crate::util::cancel::{self, CancelCause, CancelToken};
+
+/// The per-loop cancellation probe.  Obtained once before the step loop
+/// (`CancelProbe::new` reads the thread-local a single time), then
+/// polled per iteration: with no token installed the poll is one branch
+/// on a `None` held in a register — the hot path stays allocation- and
+/// syscall-free.  With a token, the countdown defers the (compara-
+/// tively costly) `Instant::now` to every
+/// [`cancel::CHECK_INTERVAL_STEPS`] steps, bounding deadline overshoot
+/// to one check interval.
+struct CancelProbe {
+    token: Option<CancelToken>,
+    until_check: u64,
+}
+
+impl CancelProbe {
+    fn new() -> Self {
+        CancelProbe {
+            token: cancel::current(),
+            // First check on the first step: a run whose budget already
+            // expired (deadline_ms = 0, pre-cancelled token) must stop
+            // even when the whole program is shorter than one interval.
+            until_check: 1,
+        }
+    }
+
+    #[inline]
+    fn poll(&mut self, core: &SimCore) -> Result<(), SimError> {
+        let Some(token) = &self.token else {
+            return Ok(());
+        };
+        self.until_check -= 1;
+        if self.until_check > 0 {
+            return Ok(());
+        }
+        self.until_check = cancel::CHECK_INTERVAL_STEPS;
+        match token.cause() {
+            None => Ok(()),
+            Some(CancelCause::Deadline) => Err(SimError::Deadline {
+                cycle: core.t,
+                retired: core.stats.retired,
+            }),
+            Some(CancelCause::Cancelled) => Err(SimError::Cancelled {
+                cycle: core.t,
+                retired: core.stats.retired,
+            }),
+        }
+    }
+}
 
 /// A scheduler for the shared simulation kernel.
 pub trait SimBackend {
@@ -44,11 +93,13 @@ impl SimBackend for CycleStepped {
     }
 
     fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError> {
+        let mut probe = CancelProbe::new();
         let mut last_progress = (core.t, core.stats.retired, core.stats.fetched);
         while !core.idle() {
             if core.t >= max_cycles {
                 return Err(SimError::CycleLimit(max_cycles, core.stats.retired));
             }
+            probe.poll(core)?;
             core.step()?;
             if (core.stats.retired, core.stats.fetched) != (last_progress.1, last_progress.2) {
                 last_progress = (core.t, core.stats.retired, core.stats.fetched);
@@ -75,10 +126,12 @@ impl SimBackend for EventDriven {
 
     fn run(&self, core: &mut SimCore, max_cycles: u64) -> Result<SimStats, SimError> {
         core.collect_events = true;
+        let mut probe = CancelProbe::new();
         while !core.idle() {
             if core.t >= max_cycles {
                 return Err(SimError::CycleLimit(max_cycles, core.stats.retired));
             }
+            probe.poll(core)?;
             core.activity = false;
             core.step()?;
             if core.activity {
@@ -284,6 +337,72 @@ mod tests {
             event_core.steps_executed,
             cs.cycles
         );
+    }
+
+    /// A program long enough that every backend crosses several
+    /// cancellation check intervals before draining.
+    fn long_program() -> (crate::arch::oma::OmaMachine, crate::isa::program::Program) {
+        let m = OmaConfig::default().build().unwrap();
+        let base = m.dmem_base();
+        let src = format!(
+            "movi #{base} => r10\n\
+             movi #20000 => r0\n\
+             movi #0 => r1\n\
+             loop: add r1, r0 => r1\n\
+             addi r0, #-1 => r0\n\
+             bnei r0, z0, @loop => pc\n\
+             store r1 => [r10]\n\
+             halt"
+        );
+        let p = assemble(&m.ag, &src, 0).unwrap();
+        (m, p)
+    }
+
+    #[test]
+    fn expired_deadline_stops_both_backends() {
+        use crate::util::cancel;
+        let (m, p) = long_program();
+        for kind in [BackendKind::CycleStepped, BackendKind::EventDriven] {
+            let _g = cancel::install(cancel::CancelToken::with_deadline(
+                std::time::Duration::from_millis(0),
+            ));
+            let mut core = SimCore::new(&m.ag, &p).unwrap();
+            let err = kind.instance().run(&mut core, 10_000_000).unwrap_err();
+            assert!(
+                matches!(err, SimError::Deadline { .. }),
+                "{kind}: expected Deadline, got {err}"
+            );
+            // The loop stopped within one check interval of the first
+            // poll opportunity, not at the cycle limit.
+            assert!(
+                core.t < 10_000_000,
+                "{kind}: ran to the cycle limit despite an expired deadline"
+            );
+        }
+    }
+
+    #[test]
+    fn cancelled_token_stops_the_run_and_reruns_are_unaffected() {
+        use crate::util::cancel;
+        let (m, p) = long_program();
+        // Clean reference run, no token anywhere.
+        let mut clean = SimCore::new(&m.ag, &p).unwrap();
+        let reference = CycleStepped.run(&mut clean, 10_000_000).unwrap();
+
+        let tok = cancel::CancelToken::new();
+        tok.cancel();
+        {
+            let _g = cancel::install(tok);
+            let mut core = SimCore::new(&m.ag, &p).unwrap();
+            let err = CycleStepped.run(&mut core, 10_000_000).unwrap_err();
+            assert!(matches!(err, SimError::Cancelled { .. }), "got {err}");
+        }
+        // Guard dropped: the next run on this thread sees no token and
+        // reproduces the clean cycle count exactly.
+        let mut rerun = SimCore::new(&m.ag, &p).unwrap();
+        let stats = CycleStepped.run(&mut rerun, 10_000_000).unwrap();
+        assert_eq!(stats.cycles, reference.cycles);
+        assert_eq!(stats.retired, reference.retired);
     }
 
     #[test]

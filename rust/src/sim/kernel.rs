@@ -104,6 +104,12 @@ pub enum SimError {
     Exec(#[from] exec::ExecError),
     #[error("no stage accepts instruction `{0}` (routing dead-end)")]
     Unroutable(String),
+    // The message prefixes below are the wire contract for
+    // `JobError::classify` — keep them in sync with coordinator::job.
+    #[error("deadline exceeded at T={cycle} ({retired} retired)")]
+    Deadline { cycle: u64, retired: u64 },
+    #[error("cancelled at T={cycle} ({retired} retired)")]
+    Cancelled { cycle: u64, retired: u64 },
 }
 
 // ------------------------------------------------------------------ topology

@@ -174,20 +174,30 @@ pub fn run_platform(
     } else {
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, Result<ChainOut, LowerError>)>();
+        // Stage workers don't inherit the caller's thread-local cancel
+        // token; install a clone in each so a job deadline or client
+        // disconnect stops every in-flight chain simulation, not just
+        // whatever ran on the calling thread.
+        let caller_token = crate::util::cancel::current();
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 let tx = tx.clone();
                 let next = &next;
                 let lowered = &lowered;
-                scope.spawn(move || loop {
-                    let b = next.fetch_add(1, Ordering::SeqCst);
-                    if b >= m_count {
-                        break;
-                    }
-                    let input = microbatch_input(graph, batch, b);
-                    let out = run_chain(machines, lowered, plan, batch, input, mode, max_cycles);
-                    if tx.send((b, out)).is_err() {
-                        break;
+                let token = caller_token.clone();
+                scope.spawn(move || {
+                    let _token_guard = token.map(crate::util::cancel::install);
+                    loop {
+                        let b = next.fetch_add(1, Ordering::SeqCst);
+                        if b >= m_count {
+                            break;
+                        }
+                        let input = microbatch_input(graph, batch, b);
+                        let out =
+                            run_chain(machines, lowered, plan, batch, input, mode, max_cycles);
+                        if tx.send((b, out)).is_err() {
+                            break;
+                        }
                     }
                 });
             }

@@ -1,0 +1,272 @@
+//! Cooperative cancellation: a shared [`CancelToken`] carrying an
+//! explicit cancel flag and an optional wall-clock deadline, threaded
+//! through every long-running loop in the stack (simulation backends,
+//! platform stage workers, the DSE wave loop).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero-cost when unset.**  The hot loops obtain the token once via
+//!    [`current`] before iterating and poll it only every
+//!    [`CHECK_INTERVAL_STEPS`] steps; with no token installed the
+//!    per-check cost is a branch on a register-resident `Option`, so
+//!    PR 3's allocation-free steady state is untouched (pinned by
+//!    `benches/backend_compare.rs`).
+//! 2. **Cooperative, never preemptive.**  Nothing is killed: a loop that
+//!    observes the token returns a structured error
+//!    (`SimError::Deadline` / `SimError::Cancelled`) through the normal
+//!    `Result` path, so RAII guards (slots, jobs-budget leases, pooled
+//!    effects) unwind exactly as on any other error.
+//! 3. **Composable.**  Tokens chain: a per-job deadline token created by
+//!    `execute_on` keeps a handle on whatever token was already
+//!    installed (e.g. the server's client-disconnect watch), so either
+//!    source stops the simulation and the *cause* is reported
+//!    faithfully — an explicit [`cancel`](CancelToken::cancel) wins over
+//!    a deadline when both have fired.
+//!
+//! Propagation across threads is explicit: worker threads do not inherit
+//! the parent's thread-local, so fan-out sites (`pool::run_jobs`,
+//! `sim::platform::run_platform`) capture [`current`] before spawning
+//! and [`install`] the clone inside each worker.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How many scheduler steps a simulation loop runs between token polls.
+/// Small enough that a deadline overshoots by at most a few microseconds
+/// of simulated work, large enough that the amortized cost (one branch +
+/// rare `Instant::now`) vanishes next to `SimCore::step`.
+pub const CHECK_INTERVAL_STEPS: u64 = 4096;
+
+/// Why a token reports itself as tripped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelCause {
+    /// Someone called [`CancelToken::cancel`] (client disconnect,
+    /// shutdown drain, ctrl-c plumbing).
+    Cancelled,
+    /// The wall-clock deadline passed.
+    Deadline,
+}
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    /// An outer token this one was chained onto (see [`CancelToken::child`]).
+    parent: Option<Arc<Inner>>,
+}
+
+impl Inner {
+    fn cause(&self) -> Option<CancelCause> {
+        // Explicit cancellation anywhere in the chain wins over a
+        // deadline: "the client hung up" is more actionable than "and
+        // the budget also expired while we noticed".
+        if self.cancelled_flag() {
+            return Some(CancelCause::Cancelled);
+        }
+        let mut node = Some(self);
+        while let Some(n) = node {
+            if let Some(d) = n.deadline {
+                if Instant::now() >= d {
+                    return Some(CancelCause::Deadline);
+                }
+            }
+            node = n.parent.as_deref();
+        }
+        None
+    }
+
+    fn cancelled_flag(&self) -> bool {
+        let mut node = Some(self);
+        while let Some(n) = node {
+            if n.cancelled.load(Ordering::Relaxed) {
+                return true;
+            }
+            node = n.parent.as_deref();
+        }
+        false
+    }
+}
+
+/// A cheaply clonable cancellation handle (one `Arc` clone).  All clones
+/// observe the same flag; chained children observe their ancestors too.
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; trips only via [`cancel`](Self::cancel).
+    pub fn new() -> Self {
+        Self::build(None, None)
+    }
+
+    /// A token that trips once `budget` of wall-clock time has elapsed.
+    pub fn with_deadline(budget: Duration) -> Self {
+        Self::build(Some(Instant::now() + budget), None)
+    }
+
+    /// A child token that trips when *either* this token trips or the
+    /// child's own `budget` expires.  Used by `execute_on` to merge a
+    /// per-job `deadline_ms` with an already-installed outer token.
+    pub fn child_with_deadline(&self, budget: Duration) -> Self {
+        Self::build(Some(Instant::now() + budget), Some(self.inner.clone()))
+    }
+
+    fn build(deadline: Option<Instant>, parent: Option<Arc<Inner>>) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline,
+                parent,
+            }),
+        }
+    }
+
+    /// Trip the token.  Idempotent; visible to all clones and children.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Why the token is tripped, or `None` if it is still live.  Checks
+    /// the cancel flag (and ancestors') first, then deadlines, so the
+    /// reported cause is stable once observed.
+    pub fn cause(&self) -> Option<CancelCause> {
+        self.inner.cause()
+    }
+
+    /// `cause().is_some()` without constructing the cause.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cause().is_some()
+    }
+
+    /// The nearest wall-clock deadline in the chain, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        let mut node = Some(self.inner.as_ref());
+        let mut min: Option<Instant> = None;
+        while let Some(n) = node {
+            if let Some(d) = n.deadline {
+                min = Some(min.map_or(d, |m: Instant| m.min(d)));
+            }
+            node = n.parent.as_deref();
+        }
+        min
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<CancelToken>> = const { RefCell::new(None) };
+}
+
+/// The token installed on this thread, if any.  Hot loops call this once
+/// before iterating, never per step.
+pub fn current() -> Option<CancelToken> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Install `token` as this thread's current token for the lifetime of
+/// the returned guard; the previous token (if any) is restored on drop,
+/// so nested installs (server token → job deadline) unwind correctly
+/// even across panics.
+#[must_use = "dropping the guard immediately uninstalls the token"]
+pub fn install(token: CancelToken) -> InstallGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(token));
+    InstallGuard { prev }
+}
+
+/// RAII guard from [`install`]; restores the previously-installed token.
+pub struct InstallGuard {
+    prev: Option<CancelToken>,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_live() {
+        let t = CancelToken::new();
+        assert_eq!(t.cause(), None);
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_is_visible_to_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.cancel();
+        assert_eq!(c.cause(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn deadline_trips_after_budget() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        // A zero budget is already expired.
+        assert_eq!(t.cause(), Some(CancelCause::Deadline));
+        let far = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert_eq!(far.cause(), None);
+    }
+
+    #[test]
+    fn child_observes_parent_cancel_and_own_deadline() {
+        let parent = CancelToken::new();
+        let child = parent.child_with_deadline(Duration::from_secs(3600));
+        assert_eq!(child.cause(), None);
+        parent.cancel();
+        assert_eq!(child.cause(), Some(CancelCause::Cancelled));
+
+        let parent2 = CancelToken::new();
+        let child2 = parent2.child_with_deadline(Duration::from_millis(0));
+        assert_eq!(child2.cause(), Some(CancelCause::Deadline));
+        // The parent stays live: child deadlines never propagate upward.
+        assert_eq!(parent2.cause(), None);
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_expired_deadline() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        t.cancel();
+        assert_eq!(t.cause(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn install_guard_nests_and_restores() {
+        assert!(current().is_none());
+        let outer = CancelToken::new();
+        {
+            let _g1 = install(outer.clone());
+            assert!(current().is_some());
+            let inner = current().unwrap().child_with_deadline(Duration::from_secs(1));
+            {
+                let _g2 = install(inner);
+                // The innermost token is the visible one.
+                assert!(current().unwrap().deadline().is_some());
+            }
+            // Back to the outer token (no deadline).
+            assert!(current().unwrap().deadline().is_none());
+        }
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn nearest_deadline_reported_through_chain() {
+        let parent = CancelToken::with_deadline(Duration::from_secs(10));
+        let child = parent.child_with_deadline(Duration::from_secs(3600));
+        // The chain minimum is the parent's (sooner) deadline.
+        assert!(child.deadline().unwrap() <= Instant::now() + Duration::from_secs(11));
+    }
+}

@@ -61,6 +61,13 @@ impl Drop for Lease {
     }
 }
 
+/// Leases currently outstanding.  Observability only (the chaos harness
+/// asserts leases balance back to their pre-fault value); racy by
+/// nature, so callers must quiesce their own workers before reading.
+pub fn outstanding() -> usize {
+    OUTSTANDING.load(Ordering::SeqCst)
+}
+
 /// Lease up to `want` workers from the process budget, accounting for
 /// leases already outstanding (nested parallelism collapses toward 1).
 pub fn lease(want: usize) -> Lease {

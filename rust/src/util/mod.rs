@@ -11,8 +11,11 @@
 //! * [`jobs`]  — the process-wide parallelism budget (`--jobs` /
 //!   `ACADL_JOBS`) leased by the pool, the server, and the parallel
 //!   platform simulator so nested parallelism can't oversubscribe.
+//! * [`cancel`] — cooperative cancellation tokens (deadline + explicit
+//!   cancel) polled by every long-running simulation loop.
 
 pub mod bench;
+pub mod cancel;
 pub mod hash;
 pub mod jobs;
 pub mod json;

@@ -168,6 +168,7 @@ fn gemm_job(target: TargetSpec, backend: BackendKind) -> JobSpec {
         backend,
         max_cycles: 50_000_000,
         platform: None,
+        deadline_ms: None,
     }
 }
 
@@ -249,6 +250,7 @@ fn file_targets_drive_transformer_with_builder_cycles() {
             backend: BackendKind::EventDriven,
             max_cycles: 500_000_000,
             platform: None,
+            deadline_ms: None,
         };
         let from_file = job::execute(&job(spec));
         let from_rust = job::execute(&job(explicit));

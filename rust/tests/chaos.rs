@@ -1,0 +1,271 @@
+//! Deterministic chaos harness for the simulation service.
+//!
+//! A seeded fault plan drives the TCP server through the failure modes a
+//! long-running coordinator actually meets — mid-line disconnects,
+//! slow-loris writers, panicking jobs, clients killed mid-execution,
+//! deadline-expiring simulations — interleaved with healthy requests, and
+//! asserts the supervision layer's contract afterwards:
+//!
+//! * the server stays live (healthy requests keep being served),
+//! * no simulation slot leaks (`Slots::available` returns to capacity),
+//! * no `--jobs` budget lease leaks (`util::jobs::outstanding` drains),
+//! * post-chaos results are bit-identical to the pre-chaos reference.
+//!
+//! Fault injection is opt-in (`ACADL_CHAOS=1`) and selected per job by
+//! mark bits in the job id (`CHAOS_PANIC_MARK`, `CHAOS_STALL_MARK`), so
+//! the plan is reproducible from its seed alone — no timing races decide
+//! *what* happens, only how long it takes.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use acadl::coordinator::job::{
+    JobError, JobResult, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload,
+    CHAOS_PANIC_MARK, CHAOS_STALL_MARK,
+};
+use acadl::coordinator::server::{spawn, ServeCfg, ServerHandle};
+use acadl::coordinator::supervisor;
+use acadl::util::json::Json;
+use acadl::util::prop::Gen;
+
+fn gemm(id: u64, deadline_ms: Option<u64>) -> JobSpec {
+    JobSpec {
+        id,
+        target: TargetSpec::Systolic { rows: 4, cols: 4 },
+        workload: Workload::Gemm {
+            m: 8,
+            k: 8,
+            n: 8,
+            tile: None,
+            order: None,
+        },
+        mode: SimModeSpec::Timed,
+        backend: Default::default(),
+        max_cycles: 10_000_000,
+        platform: None,
+        deadline_ms,
+    }
+}
+
+fn platform_gemm(id: u64, deadline_ms: Option<u64>) -> JobSpec {
+    JobSpec {
+        platform: Some(PlatformSpec {
+            chips: 2,
+            hop_latency: 8,
+            microbatches: 4,
+            threads: 2,
+        }),
+        ..gemm(id, deadline_ms)
+    }
+}
+
+fn submit(stream: &mut TcpStream, spec: &JobSpec) -> std::io::Result<()> {
+    let line = spec.to_json().to_string() + "\n";
+    stream.write_all(line.as_bytes())
+}
+
+fn read_result(stream: &mut TcpStream) -> JobResult {
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read reply");
+    JobResult::from_json(&Json::parse(reply.trim()).expect("reply json")).expect("result row")
+}
+
+fn run_clean(addr: std::net::SocketAddr, spec: &JobSpec) -> JobResult {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    submit(&mut stream, spec).expect("submit");
+    read_result(&mut stream)
+}
+
+/// Poll `cond` until it holds or `budget` expires (the quiesce barrier
+/// between a fault plan and its leak assertions).
+fn wait_for(what: &str, budget: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + budget;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// One step of the fault plan.  The discriminant is drawn from the
+/// seeded generator, so the event *sequence* is a pure function of the
+/// seed.
+#[derive(Debug, Clone, Copy)]
+enum Fault {
+    MidLineDisconnect,
+    SlowLoris,
+    PanickingJob,
+    KillDuringExecution,
+    DeadlineExpires,
+    HealthyJob,
+    HealthyPlatformJob,
+}
+
+const FAULTS: [Fault; 7] = [
+    Fault::MidLineDisconnect,
+    Fault::SlowLoris,
+    Fault::PanickingJob,
+    Fault::KillDuringExecution,
+    Fault::DeadlineExpires,
+    Fault::HealthyJob,
+    Fault::HealthyPlatformJob,
+];
+
+fn run_plan(
+    seed: u64,
+    events: usize,
+    handle: &ServerHandle,
+    reference: &JobResult,
+    platform_reference: &JobResult,
+) {
+    let mut g = Gen::new(seed);
+    for step in 0..events {
+        let fault = *g.choose(&FAULTS);
+        let id = (step as u64) << 8 | 0x40;
+        match fault {
+            Fault::MidLineDisconnect => {
+                // A request line that stops mid-JSON, then the client dies.
+                let mut s = TcpStream::connect(handle.addr()).expect("connect");
+                let full = gemm(id, None).to_json().to_string();
+                let cut = g.usize(1, full.len() - 1);
+                s.write_all(full[..cut].as_bytes()).expect("partial write");
+                drop(s);
+            }
+            Fault::SlowLoris => {
+                // Bytes trickle in, never completing a line, then EOF.
+                let mut s = TcpStream::connect(handle.addr()).expect("connect");
+                let full = gemm(id, None).to_json().to_string();
+                for chunk in full.as_bytes().chunks(8).take(3) {
+                    s.write_all(chunk).expect("trickle");
+                    std::thread::sleep(Duration::from_millis(g.usize(1, 15) as u64));
+                }
+                drop(s);
+            }
+            Fault::PanickingJob => {
+                let spec = gemm(CHAOS_PANIC_MARK | id, None);
+                let result = run_clean(handle.addr(), &spec);
+                assert_eq!(
+                    result.error_class(),
+                    Some(JobError::Panic),
+                    "step {step}: {:?}",
+                    result.error
+                );
+            }
+            Fault::KillDuringExecution => {
+                // A stall job owns a slot; the client dies mid-execution.
+                // Only the disconnect watch can end this one quickly (the
+                // deadline is seconds away) — slot recovery is asserted
+                // globally after the plan.
+                let mut s = TcpStream::connect(handle.addr()).expect("connect");
+                submit(&mut s, &gemm(CHAOS_STALL_MARK | id, Some(4_000))).expect("submit");
+                std::thread::sleep(Duration::from_millis(g.usize(5, 40) as u64));
+                drop(s);
+            }
+            Fault::DeadlineExpires => {
+                let spec = gemm(CHAOS_STALL_MARK | id, Some(g.usize(20, 60) as u64));
+                let result = run_clean(handle.addr(), &spec);
+                assert_eq!(
+                    result.error_class(),
+                    Some(JobError::Deadline),
+                    "step {step}: {:?}",
+                    result.error
+                );
+            }
+            Fault::HealthyJob => {
+                let result = run_clean(handle.addr(), &gemm(id, None));
+                assert_eq!(result.error, None, "step {step}");
+                assert_eq!(result.cycles, reference.cycles, "step {step}");
+            }
+            Fault::HealthyPlatformJob => {
+                let result = run_clean(handle.addr(), &platform_gemm(id, None));
+                assert_eq!(result.error, None, "step {step}");
+                assert_eq!(result.cycles, platform_reference.cycles, "step {step}");
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_plan_leaves_the_server_live_and_leak_free() {
+    // Opt this process into fault injection (set-only: mark bits select
+    // behavior per job id, so concurrent tests are unaffected).
+    std::env::set_var("ACADL_CHAOS", "1");
+    let handle = spawn("127.0.0.1:0", ServeCfg::new(2)).expect("spawn server");
+    let slots = handle.slots();
+
+    // Pre-chaos references, served by the same server.
+    let reference = run_clean(handle.addr(), &gemm(1, None));
+    assert_eq!(reference.error, None, "{:?}", reference.error);
+    let platform_reference = run_clean(handle.addr(), &platform_gemm(2, None));
+    assert_eq!(platform_reference.error, None, "{:?}", platform_reference.error);
+
+    run_plan(0xC4A0_5EED, 21, &handle, &reference, &platform_reference);
+
+    // Quiesce, then the leak assertions: every simulation slot and every
+    // `--jobs` budget lease taken during the plan must have been
+    // returned — RAII guards survived panics, disconnects, and deadlines.
+    wait_for("slots to return to capacity", Duration::from_secs(10), || {
+        slots.available() == slots.capacity()
+    });
+    wait_for("job leases to drain", Duration::from_secs(10), || {
+        acadl::util::jobs::outstanding() == 0
+    });
+
+    // Post-chaos determinism: bit-identical to the pre-chaos reference.
+    let after = run_clean(handle.addr(), &gemm(3, None));
+    assert_eq!(after.error, None);
+    assert_eq!(after.cycles, reference.cycles, "post-chaos cycles drifted");
+    assert_eq!(after.instructions, reference.instructions);
+    assert_eq!(after.numerics_ok, reference.numerics_ok);
+    let after = run_clean(handle.addr(), &platform_gemm(4, None));
+    assert_eq!(after.cycles, platform_reference.cycles);
+
+    handle.shutdown().expect("clean shutdown after chaos");
+}
+
+/// Satellite: cancellation must not perturb later runs.  A job aborted by
+/// an expired deadline reports `JobError::Deadline`, and an unconstrained
+/// rerun afterwards is bit-identical to a run that was never cancelled.
+#[test]
+fn deadline_aborted_jobs_leave_no_trace_on_reruns() {
+    let clean = supervisor::execute(&gemm(10, None));
+    assert_eq!(clean.error, None, "{:?}", clean.error);
+
+    // Already-expired budget: the probe trips within one check interval.
+    let t = Instant::now();
+    let aborted = supervisor::execute(&gemm(11, Some(0)));
+    assert_eq!(
+        aborted.error_class(),
+        Some(JobError::Deadline),
+        "{:?}",
+        aborted.error
+    );
+    assert!(
+        t.elapsed() < Duration::from_secs(5),
+        "deadline abort took {:?}",
+        t.elapsed()
+    );
+
+    let rerun = supervisor::execute(&gemm(12, None));
+    assert_eq!(rerun.cycles, clean.cycles, "cancellation left a trace");
+    assert_eq!(rerun.instructions, clean.instructions);
+    assert_eq!(rerun.ipc, clean.ipc);
+    assert_eq!(rerun.numerics_ok, clean.numerics_ok);
+
+    // Same contract across the partitioned platform simulation (stage
+    // workers carry the token; `LowerError::Sim` is transparent, so the
+    // deadline classification survives the platform path).
+    let clean = supervisor::execute(&platform_gemm(13, None));
+    assert_eq!(clean.error, None, "{:?}", clean.error);
+    let aborted = supervisor::execute(&platform_gemm(14, Some(0)));
+    assert_eq!(
+        aborted.error_class(),
+        Some(JobError::Deadline),
+        "{:?}",
+        aborted.error
+    );
+    let rerun = supervisor::execute(&platform_gemm(15, None));
+    assert_eq!(rerun.cycles, clean.cycles);
+    assert_eq!(rerun.utilization, clean.utilization);
+}

@@ -56,6 +56,7 @@ fn prop_sim_cycles_never_undercut_roofline_bound() {
                 backend: BackendKind::CycleStepped,
                 max_cycles: 200_000_000,
                 platform: None,
+                deadline_ms: None,
             }
         },
         |spec| {

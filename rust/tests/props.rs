@@ -333,6 +333,11 @@ fn prop_jobspec_json_roundtrip() {
             } else {
                 None
             },
+            deadline_ms: if g.bool() {
+                Some(g.next_u64() % 60_000)
+            } else {
+                None
+            },
         },
         |spec| {
             let line = spec.to_json().to_string();

@@ -345,6 +345,7 @@ fn dse_on_transformer_prunes_only_above_the_incumbent() {
         backend: BackendKind::EventDriven,
         max_cycles: 500_000_000,
         platform: None,
+        deadline_ms: None,
     };
     let specs = vec![
         mk(

@@ -125,4 +125,41 @@ fn main() {
         });
     }
     sup.write_json_if_requested();
+
+    // Tracing overhead on the same DRAM-bound loop: `off` is the
+    // production hot path (the sink seam must cost one predictable
+    // branch — compare against backend_compare/oma_dram_gemm8 across
+    // PRs); `on` records every FU span, port transaction, and counter
+    // sample.  Cycle counts are asserted identical — tracing observes,
+    // never perturbs.
+    let mut trace = Bench::new("trace");
+    {
+        let m = OmaConfig {
+            dmem: DataMem::Dram,
+            cache: None,
+            ..OmaConfig::default()
+        }
+        .build()
+        .expect("oma+dram");
+        let p = GemmParams::new(8, 8, 8);
+        let prog = oma_tiled_gemm(&m, &p).expect("codegen");
+        let cycles = {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(2_000_000_000).expect("run").cycles
+        };
+        trace.time("off (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.run(2_000_000_000).expect("run").cycles
+        });
+        trace.time("on (cycles/s)", Some(cycles), || {
+            let mut e = Engine::new(&m.ag, &prog).expect("engine");
+            e.attach_trace();
+            let got = e.run(2_000_000_000).expect("run").cycles;
+            assert_eq!(got, cycles, "tracing must not change cycles");
+            let tr = e.take_trace().expect("trace");
+            assert!(!tr.fu_spans.is_empty(), "trace recorded spans");
+            got
+        });
+    }
+    trace.write_json_if_requested();
 }

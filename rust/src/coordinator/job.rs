@@ -7,12 +7,13 @@ use crate::arch::oma::OmaConfig;
 use crate::arch::platform::PlatformDesc;
 use crate::arch::systolic::SystolicConfig;
 use crate::dnn::graph::DnnGraph;
-use crate::dnn::lowering::{self, partition_graph, SimMode};
+use crate::dnn::lowering::{self, partition_graph, ScheduleCapture, SimMode};
 use crate::mapping::gemm::{gemm_ref, GemmParams, LoopOrder};
 use crate::mapping::uma::{self, Machine, Operator, TargetConfig};
 use crate::sim::backend::BackendKind;
-use crate::sim::engine::Engine;
+use crate::sim::engine::{Engine, SimStats};
 use crate::sim::functional::FunctionalSim;
+use crate::sim::trace::{PlatformTrace, TraceData};
 use crate::util::json::{Json, JsonError};
 
 /// Serializable target description (the job wire format).
@@ -407,9 +408,42 @@ fn gemm_inputs(p: &GemmParams) -> (Vec<f32>, Vec<f32>) {
     )
 }
 
+/// Out-of-band capture request + result for one timed job execution: the
+/// CLI's `trace` / `simulate --trace|--stats-json` paths ask for the full
+/// simulation statistics and (when `want_trace`) the structured span
+/// trace.  Deliberately NOT part of [`JobSpec`]: capture changes what is
+/// written *next to* the result, never the result itself, so it stays out
+/// of the job wire format and [`JobSpec::canonical_key`] — a memoized or
+/// served result remains valid whether or not anyone was watching.
+#[derive(Debug, Default)]
+pub struct RunCapture {
+    /// Attach the span/counter recorder.  Cycle counts are unchanged —
+    /// tracing is observation-only (a tested invariant).
+    pub want_trace: bool,
+    /// Full statistics of the run; for layered schedules this is the
+    /// per-step stats merged across all mapped layers.
+    pub stats: Option<SimStats>,
+    /// Single-chip trace: the one engine run for a GeMM job, or the
+    /// concatenated per-layer runs for a schedule job.
+    pub trace: Option<TraceData>,
+    /// Platform-level trace (per-chip track groups) for multi-chip jobs.
+    pub platform_trace: Option<PlatformTrace>,
+}
+
 /// Execute one job on an already-built machine (the pool builds machines
 /// once per target batch).
 pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
+    execute_on_captured(machine, spec, None)
+}
+
+/// [`execute_on`] with an optional [`RunCapture`] filled from the timed
+/// simulation.  Functional/estimate runs leave the capture untouched (no
+/// timing state exists to observe); callers gate on mode up front.
+pub fn execute_on_captured(
+    machine: &Machine,
+    spec: &JobSpec,
+    mut cap: Option<&mut RunCapture>,
+) -> JobResult {
     let start = std::time::Instant::now();
     // A per-job deadline chains onto whatever token is already installed
     // (e.g. the server's client-disconnect watch), so either source stops
@@ -519,9 +553,16 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                         Ok(e) => e,
                         Err(err) => return done(JobResult::err(spec, err.to_string(), 0)),
                     };
+                    if cap.as_deref().is_some_and(|c| c.want_trace) {
+                        e.attach_trace();
+                    }
                     lowered.layout.load_inputs(&p, &mut e.mem, &a, &b);
                     match e.run(spec.max_cycles) {
                         Ok(st) => {
+                            if let Some(c) = cap.as_deref_mut() {
+                                c.trace = e.take_trace();
+                                c.stats = Some(st.clone());
+                            }
                             let got = lowered.layout.read_c(&p, &e.mem);
                             let want = gemm_ref(&p, &a, &b);
                             let ok = got
@@ -588,7 +629,12 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                 let lease =
                     (ps.threads == 0).then(|| crate::util::jobs::lease(desc.microbatches));
                 let threads = lease.as_ref().map_or(ps.threads, |l| l.granted);
-                return match crate::sim::platform::run_platform(
+                // Platform traces come from the deterministic timing
+                // recurrence, so they only exist for timed runs.
+                let mut ptrace = (cap.as_deref().is_some_and(|c| c.want_trace)
+                    && matches!(mode, SimMode::Timed(_)))
+                .then(PlatformTrace::default);
+                return match crate::sim::platform::run_platform_traced(
                     &machines,
                     &graph,
                     &plan,
@@ -597,8 +643,12 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                     mode,
                     threads,
                     spec.max_cycles,
+                    ptrace.as_mut(),
                 ) {
                     Ok(rep) => {
+                        if let Some(c) = cap.as_deref_mut() {
+                            c.platform_trace = ptrace;
+                        }
                         if rep.total_cycles > spec.max_cycles {
                             return done(JobResult::err(
                                 spec,
@@ -635,8 +685,17 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
                 Err(e) => return done(JobResult::err(spec, e.to_string(), 0)),
             };
             let x = graph.input_batch(batch);
-            match lowering::run_schedule(machine, &lg, &x, mode, spec.max_cycles) {
+            let mut sc = (cap.is_some() && matches!(mode, SimMode::Timed(_)))
+                .then(ScheduleCapture::default);
+            match lowering::run_schedule_captured(machine, &lg, &x, mode, spec.max_cycles, sc.as_mut())
+            {
                 Ok(rep) => {
+                    if let (Some(c), Some(s)) = (cap.as_deref_mut(), sc) {
+                        c.stats = Some(s.stats);
+                        if c.want_trace {
+                            c.trace = Some(s.trace);
+                        }
+                    }
                     let want = graph.forward_ref(&x, batch);
                     let ok = rep
                         .output
@@ -664,9 +723,14 @@ pub fn execute_on(machine: &Machine, spec: &JobSpec) -> JobResult {
 /// Fetch the machine from the process-wide cache and execute (standalone
 /// path; the pool calls [`execute_on`] with the shared machine directly).
 pub fn execute(spec: &JobSpec) -> JobResult {
+    execute_captured(spec, None)
+}
+
+/// [`execute`] with an optional [`RunCapture`] (see [`execute_on_captured`]).
+pub fn execute_captured(spec: &JobSpec, cap: Option<&mut RunCapture>) -> JobResult {
     let start = std::time::Instant::now();
     match super::machines::build_cached(&spec.target) {
-        Ok(machine) => execute_on(&machine, spec),
+        Ok(machine) => execute_on_captured(&machine, spec, cap),
         Err(e) => JobResult::err(spec, e.to_string(), start.elapsed().as_micros() as u64),
     }
 }
@@ -1249,6 +1313,95 @@ mod tests {
         assert_eq!(ev.cycles, r.cycles, "backends agree on cycles");
         assert_eq!(ev.instructions, r.instructions);
         assert_eq!(ev.numerics_ok, Some(true));
+    }
+
+    #[test]
+    fn captured_run_matches_plain_run_and_reconciles() {
+        let spec = JobSpec {
+            id: 2,
+            target: TargetSpec::Oma {
+                cache: true,
+                mac_latency: None,
+            },
+            workload: Workload::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                tile: None,
+                order: None,
+            },
+            mode: SimModeSpec::Timed,
+            backend: BackendKind::EventDriven,
+            max_cycles: 10_000_000,
+            platform: None,
+            deadline_ms: None,
+        };
+        let plain = execute(&spec);
+        assert_eq!(plain.error, None);
+        let mut cap = RunCapture {
+            want_trace: true,
+            ..RunCapture::default()
+        };
+        let r = execute_captured(&spec, Some(&mut cap));
+        assert_eq!(r.error, None);
+        assert_eq!(r.cycles, plain.cycles, "tracing must not change timing");
+        let st = cap.stats.expect("stats captured");
+        assert_eq!(st.cycles, r.cycles);
+        let tr = cap.trace.expect("trace captured");
+        assert_eq!(tr.cycles, r.cycles);
+        // Span sums reconcile with the engine's busy counters, and the
+        // stats JSON carries the same totals the trace decomposes.
+        let busy = tr.fu_busy_totals();
+        assert_eq!(busy.len(), st.fu_busy.len());
+        for (i, (name, total)) in st.fu_busy.iter().enumerate() {
+            assert_eq!(busy[i], *total, "FU span sum == busy_cycles ({name})");
+        }
+        let js = st.to_json().to_string();
+        assert!(js.contains("\"schema\":\"acadl.simstats/1\""), "{js}");
+
+        // A layered schedule captures merged stats + a concatenated trace.
+        let mlp = JobSpec {
+            workload: Workload::Mlp {
+                small: true,
+                batch: 2,
+            },
+            ..spec.clone()
+        };
+        let mut mcap = RunCapture {
+            want_trace: true,
+            ..RunCapture::default()
+        };
+        let mr = execute_captured(&mlp, Some(&mut mcap));
+        assert_eq!(mr.error, None);
+        let mst = mcap.stats.expect("schedule stats");
+        assert_eq!(mst.cycles, mr.cycles, "merged stats cover the schedule");
+        let mtr = mcap.trace.expect("schedule trace");
+        assert_eq!(mtr.cycles, mr.cycles);
+        let mbusy = mtr.fu_busy_totals();
+        for (i, (name, total)) in mst.fu_busy.iter().enumerate() {
+            assert_eq!(mbusy[i], *total, "schedule span sum == busy ({name})");
+        }
+
+        // A platform job yields the platform-level trace instead.
+        let plat = JobSpec {
+            platform: Some(PlatformSpec {
+                chips: 2,
+                hop_latency: 4,
+                microbatches: 3,
+                threads: 1,
+            }),
+            ..mlp
+        };
+        let mut pcap = RunCapture {
+            want_trace: true,
+            ..RunCapture::default()
+        };
+        let pr = execute_captured(&plat, Some(&mut pcap));
+        assert_eq!(pr.error, None, "{pr:?}");
+        let pt = pcap.platform_trace.expect("platform trace");
+        assert_eq!(pt.total_cycles, pr.cycles);
+        assert_eq!(pt.chips.len(), 2);
+        assert!(pcap.trace.is_none(), "platform jobs trace at platform level");
     }
 
     #[test]

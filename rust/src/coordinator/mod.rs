@@ -38,6 +38,8 @@ pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGua
     }
 }
 
-pub use job::{JobError, JobResult, JobSpec, PlatformSpec, SimModeSpec, TargetSpec, Workload};
+pub use job::{
+    JobError, JobResult, JobSpec, PlatformSpec, RunCapture, SimModeSpec, TargetSpec, Workload,
+};
 pub use machines::build_cached;
 pub use pool::{run_jobs, run_jobs_blocking};

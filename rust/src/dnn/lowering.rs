@@ -27,9 +27,10 @@ use crate::mapping::conv::Conv2d;
 use crate::mapping::gemm::{GemmLayout, GemmParams};
 use crate::mapping::uma::{self, Machine, Operator, UmaError};
 use crate::sim::backend::BackendKind;
-use crate::sim::engine::{Engine, SimError};
+use crate::sim::engine::{Engine, SimError, SimStats};
 use crate::sim::exec::MemImage;
 use crate::sim::functional::{FuncError, FunctionalSim};
+use crate::sim::trace::TraceData;
 
 use super::graph::{DnnGraph, Layer};
 
@@ -148,6 +149,17 @@ pub struct LayerReport {
     pub instructions: u64,
     pub macs: u64,
     pub ipc: f64,
+}
+
+/// Aggregated per-run capture across a schedule's mapped (timed) steps:
+/// the merged [`SimStats`] and one [`TraceData`] timeline with each
+/// layer's engine run appended at its cumulative cycle offset — the
+/// schedule is sequential on one chip, so the concatenation reads as the
+/// true timeline.  Functional steps contribute nothing.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleCapture {
+    pub stats: SimStats,
+    pub trace: TraceData,
 }
 
 fn pad_to(x: usize, mult: usize) -> usize {
@@ -483,6 +495,21 @@ pub fn run_step(
     mode: SimMode,
     max_cycles: u64,
 ) -> Result<Option<LayerReport>, LowerError> {
+    run_step_captured(machine, step, batch, ctx, mode, max_cycles, None)
+}
+
+/// [`run_step`] with an optional [`ScheduleCapture`]: timed mapped steps
+/// run with a trace attached and merge their stats/trace into `cap`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_step_captured(
+    machine: &Machine,
+    step: &Step,
+    batch: usize,
+    ctx: &mut StepCtx,
+    mode: SimMode,
+    max_cycles: u64,
+    cap: Option<&mut ScheduleCapture>,
+) -> Result<Option<LayerReport>, LowerError> {
     let ll = match step {
         Step::Mapped(ll) => ll,
         Step::MaxPool2x2 { c, h, w } => {
@@ -575,8 +602,20 @@ pub fn run_step(
             }
             SimMode::Timed(backend) => {
                 let mut e = Engine::with_backend(machine.ag(), &ll.lowered.program, backend)?;
+                if cap.is_some() {
+                    e.attach_trace();
+                }
                 load(&mut e.mem);
                 let st = e.run(max_cycles)?;
+                if let Some(cap) = cap {
+                    // Offset by the cycles accumulated so far: the layers
+                    // run back-to-back on this one chip.
+                    let offset = cap.stats.cycles;
+                    if let Some(tr) = e.take_trace() {
+                        cap.trace.append_offset(tr, offset);
+                    }
+                    cap.stats.merge(&st);
+                }
                 (st.cycles, st.retired, e.mem.dump_f32(lay.c_base, ll.op.c_words()))
             }
         };
@@ -649,10 +688,31 @@ pub fn run_schedule(
     mode: SimMode,
     max_cycles: u64,
 ) -> Result<ScheduleReport, LowerError> {
+    run_schedule_captured(machine, lg, input, mode, max_cycles, None)
+}
+
+/// [`run_schedule`] with an optional [`ScheduleCapture`] accumulating
+/// merged stats and a concatenated trace over the mapped steps.
+pub fn run_schedule_captured(
+    machine: &Machine,
+    lg: &LoweredGraph,
+    input: &[f32],
+    mode: SimMode,
+    max_cycles: u64,
+    mut cap: Option<&mut ScheduleCapture>,
+) -> Result<ScheduleReport, LowerError> {
     let mut report = ScheduleReport::default();
     let mut ctx = StepCtx::new(input);
     for step in &lg.steps {
-        if let Some(lr) = run_step(machine, step, lg.batch, &mut ctx, mode, max_cycles)? {
+        if let Some(lr) = run_step_captured(
+            machine,
+            step,
+            lg.batch,
+            &mut ctx,
+            mode,
+            max_cycles,
+            cap.as_deref_mut(),
+        )? {
             report.total_cycles += lr.cycles;
             report.total_instructions += lr.instructions;
             report.per_layer.push(lr);

@@ -34,7 +34,12 @@
 //!   partitioned parallel simulation on top: a DNN graph sharded across
 //!   a multi-chip platform, worker threads per stage chain, and a
 //!   conservative-sync timing recurrence that reports bit-identical
-//!   cycles at any thread count.
+//!   cycles at any thread count.  `sim::trace` is the structured
+//!   observability layer: a zero-cost-when-off recording sink capturing
+//!   per-FU/port spans and stall/occupancy counter tracks that
+//!   reconcile exactly with [`sim::SimStats`], exported as Chrome-trace
+//!   JSON (`acadl-cli trace`, `simulate --trace`) for
+//!   [ui.perfetto.dev](https://ui.perfetto.dev).
 //! * [`arch`] — the model zoo: OMA (§4.1), the parameterizable systolic
 //!   array (§4.2), Γ̈ (§4.3), Eyeriss- / Plasticine-derived models (§6),
 //!   and `arch::platform` — N chips + fabric + shared DRAM descriptors.

@@ -43,10 +43,15 @@ COMMANDS:
            [--rows/--cols/--units N] [--arch-file <file.acadl>]
            [--platform CHIPS] [--hop-latency N] [--microbatches N]
            [--threads N] [--jobs N] [--deadline-ms N]
+           [--trace <file.json>] [--stats-json <file.json>]
       Simulate a workload, print the result row as JSON.  `gemm` takes
       --m/--k/--n/--tile; `mlp` and `transformer` take --seq (batch rows /
       sequence length).  The timing backends report identical cycles;
       `event` skips idle cycles (faster on memory-bound workloads).
+      --trace writes a Chrome-trace JSON span timeline of the (timed) run
+      (open it at https://ui.perfetto.dev); --stats-json writes the full
+      simulation statistics as stable-schema JSON.  Both observe without
+      perturbing: cycle counts are identical with or without them.
       --platform CHIPS shards a layered workload across CHIPS copies of
       the target connected by a fabric (--hop-latency cycles per hop)
       and pipelines --microbatches inferences through the stages on
@@ -56,6 +61,18 @@ COMMANDS:
       --deadline-ms bounds the simulation's wall clock: an over-budget
       run stops within one check interval and reports a structured
       `deadline exceeded` error instead of running away.
+  trace --out <file.json> [--stats-json <file.json>]
+        [--target … | --arch-file <file.acadl>] [--workload gemm|mlp|transformer]
+        [--m/--k/--n/--tile/--seq N] [--backend cycle|event|parallel]
+        [--platform CHIPS] [--hop-latency N] [--microbatches N] [--threads N]
+        [--jobs N] [--deadline-ms N]
+      Run a timed simulation and write its structured trace as Chrome-trace
+      JSON to --out: per-FU instruction spans, per-storage-port transaction
+      and DRAM-burst spans, and stall/occupancy counter tracks — load the
+      file at https://ui.perfetto.dev (or chrome://tracing).  Platform jobs
+      emit one track group per chip plus the fabric/DRAM timeline.  Takes
+      the same workload/target/platform flags as `simulate` (always timed);
+      --stats-json additionally dumps the run's statistics.
   sweep [--dim N] [--workers N] [--backend cycle|event|parallel] [--jobs N]
       Systolic design-space sweep (2x2..16x16) on an N³ GeMM.
   dse [--dim N] [--workers N] [--jobs N] [--quick true] [--no-prune true]
@@ -108,7 +125,14 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         "simulate" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
             "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
-            "threads", "jobs", "deadline-ms",
+            "threads", "jobs", "deadline-ms", "trace", "stats-json",
+        ],
+        // `trace` is `simulate` locked to timed mode, with a mandatory
+        // --out destination (so no --mode flag here).
+        "trace" => &[
+            "target", "rows", "cols", "units", "m", "k", "n", "tile", "backend",
+            "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
+            "threads", "jobs", "deadline-ms", "out", "stats-json",
         ],
         "sweep" => &["dim", "workers", "backend", "jobs"],
         "dse" => &[
@@ -304,9 +328,132 @@ fn print_dse_report(report: &acadl::dse::DseReport, title: &str) {
 
 /// Every subcommand `run()` dispatches on.
 const COMMANDS: &[&str] = &[
-    "parse", "fmt", "validate", "map", "simulate", "sweep", "dse", "serve", "golden",
-    "help", "--help", "-h",
+    "parse", "fmt", "validate", "map", "simulate", "trace", "sweep", "dse", "serve",
+    "golden", "help", "--help", "-h",
 ];
+
+/// Build the [`JobSpec`] that `simulate` and `trace` share from their
+/// common workload/target/platform flags (`simulate` picks the mode from
+/// --mode; `trace` is always timed).
+fn job_spec_from_args(args: &Args, mode: SimModeSpec) -> Result<JobSpec, String> {
+    let workload = match args.str("workload", "gemm").as_str() {
+        "gemm" => Workload::Gemm {
+            m: args.usize("m", 8)?,
+            k: args.usize("k", 8)?,
+            n: args.usize("n", 8)?,
+            tile: args.opt_usize("tile")?,
+            order: None,
+        },
+        "mlp" => Workload::Mlp {
+            small: true,
+            batch: args.usize("seq", 8)?,
+        },
+        "transformer" => Workload::Transformer {
+            seq: args.usize("seq", 8)?,
+        },
+        other => {
+            return Err(format!(
+                "unknown workload `{other}` (use gemm|mlp|transformer)"
+            ))
+        }
+    };
+    apply_jobs_flag(args)?;
+    // --platform flags win; otherwise an --arch-file `platform` block
+    // shards the file's own target.
+    let platform = if let Some(chips) = args.opt_usize("platform")? {
+        Some(PlatformSpec {
+            chips: chips.max(1),
+            hop_latency: args.usize("hop-latency", 4)? as u64,
+            microbatches: args.usize("microbatches", 4)?.max(1),
+            threads: args.usize("threads", 0)?,
+        })
+    } else if let Some(path) = args.flags.get("arch-file") {
+        match load_arch_file(path)?.platform {
+            Some(d) => Some(PlatformSpec {
+                chips: d.chips,
+                hop_latency: args
+                    .opt_usize("hop-latency")?
+                    .map_or(d.fabric.hop_latency, |h| h as u64),
+                microbatches: args
+                    .opt_usize("microbatches")?
+                    .unwrap_or(d.microbatches)
+                    .max(1),
+                threads: args.usize("threads", 0)?,
+            }),
+            None => None,
+        }
+    } else {
+        None
+    };
+    Ok(JobSpec {
+        id: 0,
+        target: target_spec(args)?,
+        workload,
+        mode,
+        backend: backend_kind(args)?,
+        max_cycles: 500_000_000,
+        platform,
+        deadline_ms: args.opt_usize("deadline-ms")?.map(|n| n as u64),
+    })
+}
+
+/// Execute a job, optionally writing its Chrome-trace timeline and/or
+/// stats JSON next to the printed result row.  Without capture paths this
+/// is plain [`coordinator::job::execute`] (error rows still print as
+/// JSON); with capture, a failed simulation becomes a CLI error because
+/// there is nothing trustworthy to write.
+fn run_with_capture(
+    spec: &JobSpec,
+    trace_path: Option<&str>,
+    stats_path: Option<&str>,
+) -> Result<coordinator::JobResult, String> {
+    if trace_path.is_none() && stats_path.is_none() {
+        return Ok(coordinator::job::execute(spec));
+    }
+    if spec.mode != SimModeSpec::Timed {
+        return Err(
+            "--trace/--stats-json need timed mode (the functional and estimate \
+             paths have no timing state to observe)"
+            .into(),
+        );
+    }
+    if stats_path.is_some() && spec.platform.is_some() {
+        return Err(
+            "--stats-json covers single-chip jobs; platform runs aggregate at the \
+             stage level — use --trace for the per-chip timeline"
+            .into(),
+        );
+    }
+    let mut cap = coordinator::job::RunCapture {
+        want_trace: trace_path.is_some(),
+        ..Default::default()
+    };
+    let r = coordinator::job::execute_captured(spec, Some(&mut cap));
+    if let Some(err) = &r.error {
+        return Err(format!("simulation failed, nothing captured: {err}"));
+    }
+    if let Some(path) = trace_path {
+        let json = if let Some(pt) = &cap.platform_trace {
+            acadl::sim::chrome_trace_platform_json(pt)
+        } else if let Some(tr) = &cap.trace {
+            acadl::sim::chrome_trace_json(tr)
+        } else {
+            return Err("simulation completed but produced no trace (internal error)".into());
+        };
+        std::fs::write(path, format!("{json}\n")).map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("trace written to {path} (open at https://ui.perfetto.dev)");
+    }
+    if let Some(path) = stats_path {
+        let st = cap
+            .stats
+            .as_ref()
+            .ok_or("simulation completed but produced no stats (internal error)")?;
+        std::fs::write(path, format!("{}\n", st.to_json()))
+            .map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("stats written to {path}");
+    }
+    Ok(r)
+}
 
 fn run() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -422,66 +569,25 @@ fn run() -> Result<(), String> {
                 "estimate" => SimModeSpec::Estimate,
                 other => return Err(format!("unknown mode `{other}`")),
             };
-            let workload = match args.str("workload", "gemm").as_str() {
-                "gemm" => Workload::Gemm {
-                    m: args.usize("m", 8)?,
-                    k: args.usize("k", 8)?,
-                    n: args.usize("n", 8)?,
-                    tile: args.opt_usize("tile")?,
-                    order: None,
-                },
-                "mlp" => Workload::Mlp {
-                    small: true,
-                    batch: args.usize("seq", 8)?,
-                },
-                "transformer" => Workload::Transformer {
-                    seq: args.usize("seq", 8)?,
-                },
-                other => {
-                    return Err(format!(
-                        "unknown workload `{other}` (use gemm|mlp|transformer)"
-                    ))
-                }
-            };
-            apply_jobs_flag(&args)?;
-            // --platform flags win; otherwise an --arch-file `platform`
-            // block shards the file's own target.
-            let platform = if let Some(chips) = args.opt_usize("platform")? {
-                Some(PlatformSpec {
-                    chips: chips.max(1),
-                    hop_latency: args.usize("hop-latency", 4)? as u64,
-                    microbatches: args.usize("microbatches", 4)?.max(1),
-                    threads: args.usize("threads", 0)?,
-                })
-            } else if let Some(path) = args.flags.get("arch-file") {
-                match load_arch_file(path)?.platform {
-                    Some(d) => Some(PlatformSpec {
-                        chips: d.chips,
-                        hop_latency: args
-                            .opt_usize("hop-latency")?
-                            .map_or(d.fabric.hop_latency, |h| h as u64),
-                        microbatches: args
-                            .opt_usize("microbatches")?
-                            .unwrap_or(d.microbatches)
-                            .max(1),
-                        threads: args.usize("threads", 0)?,
-                    }),
-                    None => None,
-                }
-            } else {
-                None
-            };
-            let spec = JobSpec {
-                id: 0,
-                target: target_spec(&args)?,
-                workload,
-                mode,
-                backend: backend_kind(&args)?,
-                max_cycles: 500_000_000,
-                platform,
-                deadline_ms: args.opt_usize("deadline-ms")?.map(|n| n as u64),
-            };
-            let r = coordinator::job::execute(&spec);
+            let spec = job_spec_from_args(&args, mode)?;
+            let r = run_with_capture(
+                &spec,
+                args.flags.get("trace").map(String::as_str),
+                args.flags.get("stats-json").map(String::as_str),
+            )?;
+            println!("{}", r.to_json());
+        }
+        "trace" => {
+            let out = args.flags.get("out").cloned().ok_or(
+                "trace needs --out <file.json> (the Chrome-trace destination; load it \
+                 at https://ui.perfetto.dev)",
+            )?;
+            let spec = job_spec_from_args(&args, SimModeSpec::Timed)?;
+            let r = run_with_capture(
+                &spec,
+                Some(&out),
+                args.flags.get("stats-json").map(String::as_str),
+            )?;
             println!("{}", r.to_json());
         }
         "sweep" => {
@@ -770,9 +876,18 @@ mod tests {
             "threads",
             "jobs",
             "deadline-ms",
+            "trace",
+            "stats-json",
         ] {
             assert!(allowed_flags("simulate").contains(&f), "simulate misses --{f}");
         }
+        // `trace` takes the simulate workload flags plus --out, but never
+        // --mode (it is timed by definition) or --trace (that's --out).
+        for f in ["out", "stats-json", "workload", "platform", "backend", "arch-file"] {
+            assert!(allowed_flags("trace").contains(&f), "trace misses --{f}");
+        }
+        assert!(!allowed_flags("trace").contains(&"mode"));
+        assert!(!allowed_flags("trace").contains(&"trace"));
         for c in ["sweep", "dse", "serve"] {
             assert!(allowed_flags(c).contains(&"jobs"), "{c} misses --jobs");
         }
@@ -801,7 +916,8 @@ mod tests {
         // Every command with an allowlist is a known command, so the
         // unknown-command check fires before flag validation.
         for c in [
-            "parse", "fmt", "validate", "map", "simulate", "sweep", "dse", "serve", "golden",
+            "parse", "fmt", "validate", "map", "simulate", "trace", "sweep", "dse", "serve",
+            "golden",
         ] {
             assert!(COMMANDS.contains(&c), "{c} missing from COMMANDS");
         }

@@ -64,6 +64,11 @@
 //! final architectural state equals the functional ISS's — asserted by the
 //! conformance tests, the backend-equivalence tests, and the E9
 //! golden-model comparison.
+//!
+//! An optional structured trace ([`super::trace`]) records FU spans,
+//! storage-port spans, and stall/occupancy counter tracks; see
+//! [`SimCore::attach_trace`].  Disabled tracing costs one branch per step
+//! and nothing in [`SimCore::advance_bulk`].
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -81,6 +86,8 @@ use crate::isa::INSTR_BYTES;
 use crate::sim::exec::{self, Effects, MemImage, RegState};
 use crate::sim::scoreboard::{Scoreboard, Seq};
 use crate::sim::storage::{StorageSim, StorageStats};
+use crate::sim::trace::{Recorder, TraceData, TraceSink};
+use crate::util::json::Json;
 
 /// Cycles without a retirement or fetch before the cycle-stepped backend
 /// reports a deadlock (far cheaper than spinning to the cycle limit).
@@ -234,6 +241,103 @@ impl SimStats {
         };
         total as f64 / (n as f64 * self.cycles as f64)
     }
+
+    /// Accumulate another run's statistics (sequential schedule
+    /// concatenation: one engine run per mapped layer).  Scalar counters
+    /// sum; the per-FU and per-storage vectors must describe the same
+    /// machine (the first merge adopts them, later merges add
+    /// element-wise).
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles += other.cycles;
+        self.retired += other.retired;
+        self.fetched += other.fetched;
+        self.fetch_stalls += other.fetch_stalls;
+        self.dep_stall_cycles += other.dep_stall_cycles;
+        self.structural_stall_cycles += other.structural_stall_cycles;
+        if self.fu_busy.is_empty() {
+            self.fu_busy = other.fu_busy.clone();
+            self.fu_mac_capable = other.fu_mac_capable.clone();
+            self.storages = other.storages.clone();
+            return;
+        }
+        debug_assert_eq!(self.fu_busy.len(), other.fu_busy.len(), "merge across machines");
+        for (a, b) in self.fu_busy.iter_mut().zip(&other.fu_busy) {
+            debug_assert_eq!(a.0, b.0);
+            a.1 += b.1;
+        }
+        for (a, b) in self.storages.iter_mut().zip(&other.storages) {
+            a.requests += b.requests;
+            a.busy_cycles += b.busy_cycles;
+            add_opt(&mut a.cache_hits, b.cache_hits);
+            add_opt(&mut a.cache_misses, b.cache_misses);
+            add_opt(&mut a.dram_row_hits, b.dram_row_hits);
+            add_opt(&mut a.dram_row_conflicts, b.dram_row_conflicts);
+        }
+    }
+
+    /// Stable-schema JSON dump (the `simulate --stats-json` contract):
+    /// every field of the report, so scripts stop scraping stdout.
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        let opt = |v: Option<u64>| v.map_or(Json::Null, |x| Json::Num(x as f64));
+        Json::obj(vec![
+            ("schema", Json::str("acadl.simstats/1")),
+            ("cycles", n(self.cycles)),
+            ("retired", n(self.retired)),
+            ("fetched", n(self.fetched)),
+            ("fetch_stalls", n(self.fetch_stalls)),
+            ("dep_stall_cycles", n(self.dep_stall_cycles)),
+            ("structural_stall_cycles", n(self.structural_stall_cycles)),
+            ("ipc", Json::Num(self.ipc())),
+            ("mean_fu_utilization", Json::Num(self.mean_fu_utilization())),
+            (
+                "fu",
+                Json::Arr(
+                    self.fu_busy
+                        .iter()
+                        .enumerate()
+                        .map(|(i, (name, busy))| {
+                            Json::obj(vec![
+                                ("name", Json::str(name.clone())),
+                                ("busy_cycles", n(*busy)),
+                                (
+                                    "mac_capable",
+                                    Json::Bool(self.fu_mac_capable.get(i).copied().unwrap_or(false)),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "storages",
+                Json::Arr(
+                    self.storages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(s.name.clone())),
+                                ("requests", n(s.requests)),
+                                ("busy_cycles", n(s.busy_cycles)),
+                                ("cache_hits", opt(s.cache_hits)),
+                                ("cache_misses", opt(s.cache_misses)),
+                                ("dram_row_hits", opt(s.dram_row_hits)),
+                                ("dram_row_conflicts", opt(s.dram_row_conflicts)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn add_opt(a: &mut Option<u64>, b: Option<u64>) {
+    *a = match (*a, b) {
+        (Some(x), Some(y)) => Some(x + y),
+        (x, None) => x,
+        (None, y) => y,
+    };
 }
 
 /// The compiled machine + full simulation state for one (AG, program)
@@ -319,6 +423,14 @@ pub struct SimCore<'a> {
     pub(crate) steps_executed: u64,
 
     pub(crate) stats: SimStats,
+
+    /// Recording trace sink, when attached ([`Self::attach_trace`]).
+    /// `None` in the hot path: one predictable branch per step — the same
+    /// guard budget as the cancellation probe — and no code at all in
+    /// [`Self::advance_bulk`] (spans carry absolute durations and counter
+    /// charges are constant across quiescent windows, so skipped cycles
+    /// need nothing recorded).
+    trace: Option<Box<Recorder>>,
 }
 
 impl<'a> SimCore<'a> {
@@ -583,7 +695,38 @@ impl<'a> SimCore<'a> {
             events: BinaryHeap::new(),
             steps_executed: 0,
             stats: SimStats::default(),
+            trace: None,
         })
+    }
+
+    // ----------------------------------------------------------- tracing
+
+    /// Install a recording trace sink: FU spans, storage-port spans, and
+    /// change-only counter tracks from here on.  Recording never alters
+    /// timing — cycle counts are bit-identical with tracing on or off.
+    pub fn attach_trace(&mut self) {
+        self.storage.set_tracing(true);
+        self.trace = Some(Box::default());
+    }
+
+    /// Detach the sink and finalize the recording: stamps the timeline
+    /// end, resolves FU/storage names, and drains the storage-port log.
+    /// Returns `None` when no trace was attached.
+    pub fn take_trace(&mut self) -> Option<TraceData> {
+        let mut rec = self.trace.take()?;
+        self.storage.set_tracing(false);
+        for span in self.storage.take_trace() {
+            rec.port_span(span);
+        }
+        let mut data = rec.into_data();
+        data.cycles = self.t;
+        data.fu_names = self
+            .fus
+            .iter()
+            .map(|f| self.ag.name(f.obj).to_string())
+            .collect();
+        data.storage_names = self.storage.trace_names(self.ag);
+        Some(data)
     }
 
     // ------------------------------------------------------------ arenas
@@ -1042,6 +1185,13 @@ impl<'a> SimCore<'a> {
             if self.collect_events {
                 self.events.push(Reverse(self.t + t_left));
             }
+            // The span is complete at dispatch: `busy_cycles` will accrue
+            // exactly `t_left` over this occupancy on either backend, so
+            // recording (start, dur) here reconciles with `fu_busy` and
+            // needs no synthesis across event-driven skip windows.
+            if let Some(tr) = self.trace.as_deref_mut() {
+                tr.fu_span(f as u32, ins.op.mnemonic(), self.t, t_left);
+            }
             self.fu_state[f] = FuState::Processing {
                 seq,
                 t_left,
@@ -1138,11 +1288,30 @@ impl<'a> SimCore<'a> {
     /// One clock cycle (T := T + 1 at the end).
     pub fn step(&mut self) -> Result<(), SimError> {
         self.steps_executed += 1;
+        // Pre-phase stall snapshot for the trace counter tracks (three
+        // plain loads; the tracing guard itself is the single branch at
+        // the end of the step).
+        let dep0 = self.stats.dep_stall_cycles;
+        let structural0 = self.stats.structural_stall_cycles;
+        let fetch0 = self.stats.fetch_stalls;
         self.phase_completions();
         self.phase_forward();
         self.phase_issue()?;
         self.phase_fu_start()?;
         self.phase_fetch();
+        // This cycle's stall charge (the per-phase deltas) and the issue
+        // buffer's resulting depth.  The recorder samples on change only,
+        // which is what keeps traces identical across backends: between
+        // events every charge is constant (the quiescence invariant), so
+        // skipped cycles would re-emit nothing.
+        let dep = self.stats.dep_stall_cycles - dep0;
+        let structural = self.stats.structural_stall_cycles - structural0;
+        let fetch = self.stats.fetch_stalls - fetch0;
+        let buffer = self.buffer.len() as u64;
+        let t = self.t;
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.counters(t, dep, structural, fetch, buffer);
+        }
         self.t += 1;
         Ok(())
     }

@@ -24,6 +24,9 @@
 //! * [`platform`] — partitioned parallel simulation of multi-accelerator
 //!   platforms: microbatch chains pipelined through chip stages, with a
 //!   deterministic fabric/DRAM timing recurrence.
+//! * [`trace`] — structured tracing: per-FU / per-storage-port spans and
+//!   stall/occupancy counter tracks with a Chrome-trace (Perfetto) JSON
+//!   exporter; zero-cost when disabled, backend-identical when enabled.
 
 pub mod backend;
 pub mod engine;
@@ -33,9 +36,15 @@ pub mod kernel;
 pub mod platform;
 pub mod scoreboard;
 pub mod storage;
+pub mod trace;
 
 pub use backend::{BackendKind, CycleStepped, EventDriven, ParallelEvent, SimBackend};
 pub use engine::{Engine, SimStats};
 pub use functional::FunctionalSim;
 pub use kernel::{SimCore, SimError};
-pub use platform::{microbatch_input, run_platform, PlatformReport, StageReport};
+pub use platform::{
+    microbatch_input, run_platform, run_platform_traced, PlatformReport, StageReport,
+};
+pub use trace::{
+    chrome_trace_json, chrome_trace_platform_json, NullSink, PlatformTrace, TraceData, TraceSink,
+};

@@ -46,6 +46,7 @@ use crate::dnn::lowering::{
     lower_graph, run_step, LowerError, LoweredGraph, PlatformPlan, SimMode, StepCtx,
 };
 use crate::mapping::uma::Machine;
+use crate::sim::trace::{CellSpan, PlatformTrace, XferSpan};
 
 /// Per-stage aggregate of a platform run.
 #[derive(Debug, Clone)]
@@ -132,6 +133,7 @@ fn run_chain(
 /// `desc.microbatches` inferences, with up to `threads` worker threads
 /// advancing independent microbatch chains.  The reported cycle count is
 /// identical at every thread count (see the module docs).
+#[allow(clippy::too_many_arguments)]
 pub fn run_platform(
     machines: &[&Machine],
     graph: &DnnGraph,
@@ -141,6 +143,25 @@ pub fn run_platform(
     mode: SimMode,
     threads: usize,
     max_cycles: u64,
+) -> Result<PlatformReport, LowerError> {
+    run_platform_traced(machines, graph, plan, batch, desc, mode, threads, max_cycles, None)
+}
+
+/// [`run_platform`] with an optional platform trace: per-chip compute
+/// cells, shared-DRAM streams, and fabric transfers, all derived from the
+/// serial timing recurrence — so the trace, like the cycle count, is
+/// bit-identical at every worker thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn run_platform_traced(
+    machines: &[&Machine],
+    graph: &DnnGraph,
+    plan: &PlatformPlan,
+    batch: usize,
+    desc: &PlatformDesc,
+    mode: SimMode,
+    threads: usize,
+    max_cycles: u64,
+    mut trace: Option<&mut PlatformTrace>,
 ) -> Result<PlatformReport, LowerError> {
     let s_count = plan.stages.len();
     if machines.len() != s_count {
@@ -217,12 +238,29 @@ pub fn run_platform(
         .collect();
 
     // --- conservative timing recurrence (serial, deterministic) --------
+    // The optional trace is filled here, from the same recurrence values
+    // that produce the cycle count — never from the worker threads.
+    if let Some(tr) = trace.as_deref_mut() {
+        *tr = PlatformTrace::default();
+        tr.chips = plan
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, stage)| {
+                format!("{}[{}..{}]", machines[s].name(), stage.steps.start, stage.steps.end)
+            })
+            .collect();
+    }
     // Weight streaming: the shared DRAM channel serves chips in order.
     let mut dram_ready = vec![0u64; s_count];
     let mut t = 0u64;
     for (s, stage) in plan.stages.iter().enumerate() {
+        let t0 = t;
         t += desc.dram.load_cycles(stage.weight_words);
         dram_ready[s] = t;
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.weights.push(XferSpan { name: format!("weights s{s}"), start: t0, end: t });
+        }
     }
     let in_words = plan.stages[0].in_words();
     let out_words = plan.stages[s_count - 1].out_words();
@@ -242,14 +280,43 @@ pub fn run_platform(
             let chip_free = if b == 0 { 0 } else { finish[s][b - 1] };
             let start = dram_ready[s].max(arrive).max(chip_free);
             finish[s][b] = start + chains[b].durs[s];
+            if let Some(tr) = trace.as_deref_mut() {
+                if s == 0 {
+                    let load = desc.dram.load_cycles(in_words);
+                    tr.inputs.push(XferSpan {
+                        name: format!("input mb{b}"),
+                        start: b as u64 * load,
+                        end: (b as u64 + 1) * load,
+                    });
+                } else {
+                    tr.fabric.push(XferSpan {
+                        name: format!("s{}->s{s} mb{b}", s - 1),
+                        start: finish[s - 1][b],
+                        end: arrive,
+                    });
+                }
+                tr.cells.push(CellSpan {
+                    stage: s as u32,
+                    microbatch: b as u32,
+                    start,
+                    end: finish[s][b],
+                });
+            }
         }
     }
     // Writeback: outputs drain over the single shared-DRAM channel.
     let mut wb = 0u64;
-    for fin in &finish[s_count - 1] {
-        wb = wb.max(*fin) + desc.dram.store_cycles(out_words);
+    for (b, fin) in finish[s_count - 1].iter().enumerate() {
+        let wb0 = wb.max(*fin);
+        wb = wb0 + desc.dram.store_cycles(out_words);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.writeback.push(XferSpan { name: format!("writeback mb{b}"), start: wb0, end: wb });
+        }
     }
     let total_cycles = wb;
+    if let Some(tr) = trace.as_deref_mut() {
+        tr.total_cycles = total_cycles;
+    }
 
     // --- aggregate ------------------------------------------------------
     let mut stages = Vec::with_capacity(s_count);
@@ -345,6 +412,45 @@ mod tests {
         }
         assert!(runs[0].total_cycles > 0);
         assert!(runs[0].utilization > 0.0 && runs[0].utilization <= 1.0);
+    }
+
+    #[test]
+    fn platform_trace_reconciles_with_stage_reports() {
+        let g = DnnGraph::mlp_small();
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let plan = partition_graph(&g, 4, 2).unwrap();
+        let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+        let desc = PlatformDesc::new(2).with_microbatches(3);
+        let mode = SimMode::Timed(BackendKind::EventDriven);
+        let mut tr = PlatformTrace::default();
+        let rep = run_platform_traced(
+            &machines,
+            &g,
+            &plan,
+            4,
+            &desc,
+            mode,
+            2,
+            500_000_000,
+            Some(&mut tr),
+        )
+        .unwrap();
+        assert_eq!(tr.total_cycles, rep.total_cycles);
+        assert_eq!(tr.chips.len(), rep.stages.len());
+        assert_eq!(tr.cells.len(), rep.stages.len() * 3);
+        let busy = tr.stage_busy_totals();
+        for (s, st) in rep.stages.iter().enumerate() {
+            assert_eq!(busy[s], st.busy_cycles, "stage {s} cell sum");
+            assert_eq!(tr.chips[s], st.name);
+        }
+        assert_eq!(tr.weights.len(), rep.stages.len());
+        assert_eq!(tr.inputs.len(), 3);
+        assert_eq!(tr.writeback.len(), 3);
+        assert_eq!(tr.fabric.len(), (rep.stages.len() - 1) * 3);
+        // Every span is well-formed and inside the makespan.
+        for c in &tr.cells {
+            assert!(c.start <= c.end && c.end <= tr.total_cycles);
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::acadl_core::object::ObjectKind;
 use crate::mem::cache::CacheState;
 use crate::mem::dram::DramState;
 use crate::mem::sram;
+use crate::sim::trace::PortSpan;
 
 #[derive(Debug, Clone)]
 enum Model {
@@ -60,6 +61,15 @@ pub struct StorageSim {
     /// Reused backing-job buffer for cache accesses (fills, write-backs):
     /// the hot path allocates nothing in steady state.
     scratch_jobs: Vec<(u64, bool)>,
+    /// Record per-transaction / per-burst spans into `log` when set.
+    tracing: bool,
+    /// Port-span log, drained by `SimCore::take_trace`.  Spans append
+    /// *after* the model borrow ends — the cache arm recurses into its
+    /// backing store mid-access, and a take/restore log (the
+    /// `scratch_jobs` pattern) would lose the inner entries.
+    log: Vec<PortSpan>,
+    /// Reused DRAM burst-boundary buffer (only touched while tracing).
+    scratch_bursts: Vec<(u64, u64)>,
 }
 
 /// Per-storage statistics snapshot.
@@ -132,7 +142,26 @@ impl StorageSim {
             nodes,
             index,
             scratch_jobs: Vec::new(),
+            tracing: false,
+            log: Vec::new(),
+            scratch_bursts: Vec::new(),
         }
+    }
+
+    /// Enable or disable port-span recording.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.tracing = on;
+    }
+
+    /// Drain the recorded port spans.
+    pub fn take_trace(&mut self) -> Vec<PortSpan> {
+        std::mem::take(&mut self.log)
+    }
+
+    /// Storage names in node order — the index space of
+    /// [`PortSpan::storage`].
+    pub fn trace_names(&self, ag: &Ag) -> Vec<String> {
+        self.nodes.iter().map(|n| ag.name(n.obj).to_string()).collect()
     }
 
     /// Issue a `bytes`-wide request at `storage` starting no earlier than
@@ -152,9 +181,13 @@ impl StorageSim {
 
         // Take the pooled backing-job buffer before borrowing the model so
         // the recursive backing access below cannot alias it (a nested
-        // cache level simply starts from an empty buffer).
+        // cache level simply starts from an empty buffer).  The burst
+        // buffer follows the same take/restore discipline.
         let mut jobs = std::mem::take(&mut self.scratch_jobs);
         jobs.clear();
+        let mut bursts = std::mem::take(&mut self.scratch_bursts);
+        bursts.clear();
+        let tracing = self.tracing;
         let completion = match &mut self.nodes[idx].model {
             Model::Sram { cfg } => {
                 let words = (bytes as usize).div_ceil(4).max(1);
@@ -167,7 +200,11 @@ impl StorageSim {
                 let mut t = start;
                 for c in 0..chunks {
                     let a = addr + (c * *port_width * 4) as u64;
+                    let t0 = t;
                     t += state.access(a, t);
+                    if tracing {
+                        bursts.push((t0, t));
+                    }
                 }
                 t
             }
@@ -211,6 +248,37 @@ impl StorageSim {
             }
         };
         self.scratch_jobs = jobs;
+        if self.tracing {
+            // DRAM transactions log one span per burst (contiguous, so the
+            // per-port sum still equals `busy_cycles`); everything else
+            // logs the whole transaction.  Cache backing accesses logged
+            // their own spans on the backing node during the recursion.
+            if bursts.is_empty() {
+                self.log.push(PortSpan {
+                    storage: idx as u32,
+                    slot: slot as u32,
+                    write: is_write,
+                    burst: false,
+                    addr,
+                    start,
+                    end: completion,
+                });
+            } else {
+                for &(b0, b1) in &bursts {
+                    self.log.push(PortSpan {
+                        storage: idx as u32,
+                        slot: slot as u32,
+                        write: is_write,
+                        burst: true,
+                        addr,
+                        start: b0,
+                        end: b1,
+                    });
+                }
+            }
+        }
+        bursts.clear();
+        self.scratch_bursts = bursts;
 
         let node = &mut self.nodes[idx];
         node.slots[slot] = completion;
@@ -373,6 +441,53 @@ mod tests {
         assert_eq!(c1, 24, "activate + cas");
         let c2 = sim.access(d, 0x8, 4, false, c1);
         assert_eq!(c2 - c1, 10, "row hit = cas");
+    }
+
+    #[test]
+    fn tracing_logs_spans_that_reconcile_with_busy_cycles() {
+        let (ag, cache, _) = ag_with_cache();
+        let mut sim = StorageSim::new(&ag);
+        sim.set_tracing(true);
+        // Miss (recursive backing fill) then hit.
+        let c1 = sim.access(cache, 0x100, 4, false, 0);
+        sim.access(cache, 0x104, 4, false, c1);
+        let spans = sim.take_trace();
+        let names = sim.trace_names(&ag);
+        let stats = sim.stats(&ag);
+        // The cache-arm recursion must not lose the backing store's span.
+        for (i, name) in names.iter().enumerate() {
+            let logged: u64 = spans
+                .iter()
+                .filter(|s| s.storage == i as u32)
+                .map(|s| s.end - s.start)
+                .sum();
+            let busy = stats.iter().find(|s| &s.name == name).unwrap().busy_cycles;
+            assert_eq!(logged, busy, "span sum != busy_cycles for {name}");
+        }
+        assert!(spans.iter().any(|s| names[s.storage as usize] == "dmem"));
+        // Timing is identical with tracing off.
+        let mut plain = StorageSim::new(&ag);
+        let p1 = plain.access(cache, 0x100, 4, false, 0);
+        assert_eq!(p1, c1);
+        assert!(plain.take_trace().is_empty());
+    }
+
+    #[test]
+    fn tracing_logs_dram_bursts_contiguously() {
+        let mut ag = Ag::new();
+        let d = ag.add(parts::dram_default("d", 0, 0x100000)).unwrap();
+        let mut sim = StorageSim::new(&ag);
+        sim.set_tracing(true);
+        // A wide access splits into per-chunk bursts.
+        let done = sim.access(d, 0x0, 64, false, 5);
+        let spans = sim.take_trace();
+        assert!(spans.len() > 1, "wide DRAM access logs multiple bursts");
+        assert!(spans.iter().all(|s| s.burst));
+        assert_eq!(spans.first().unwrap().start, 5);
+        assert_eq!(spans.last().unwrap().end, done);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "bursts are contiguous");
+        }
     }
 
     #[test]

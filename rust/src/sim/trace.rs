@@ -1,0 +1,633 @@
+//! Structured simulation tracing: spans and counter tracks recorded by
+//! the kernel, exported as Chrome-trace JSON (loads in Perfetto /
+//! chrome://tracing).
+//!
+//! # The sink seam
+//!
+//! [`TraceSink`] is the event interface the kernel and storage model emit
+//! into.  Every method has a no-op default body, so a sink pays only for
+//! what it overrides; [`NullSink`] overrides nothing and monomorphizes to
+//! zero code.  The kernel holds `Option<Box<Recorder>>` — the disabled
+//! path is a single `None` branch per step (the same budget as the
+//! cancellation probe), no allocation, no virtual dispatch, and
+//! [`crate::sim::kernel::SimCore::advance_bulk`] needs *no* trace code at
+//! all (see below), so the event-driven backend's skip path is untouched.
+//!
+//! # What gets recorded
+//!
+//! * **FU spans** — one [`FuSpan`] per instruction occupancy of a
+//!   functional unit, recorded at dispatch with its full duration
+//!   (`t_left`).  Because the span carries absolute `(start, dur)` and
+//!   `busy_cycles` accrues exactly `dur` over the occupancy, span sums
+//!   reconcile bit-exactly with `SimStats::fu_busy`.
+//! * **Port spans** — one [`PortSpan`] per storage-port transaction
+//!   (SRAM/cache) or per DRAM burst (contiguous, so per-port sums still
+//!   equal the storage's `busy_cycles`), tagged with the granted request
+//!   slot so concurrent requests land on distinct tracks.
+//! * **Counter tracks** — per-cycle dep/structural/fetch stall charge and
+//!   issue-buffer depth, sampled *on change only*.  Change-only sampling
+//!   is what makes traces backend-identical: between events every charge
+//!   is provably constant (that is the quiescence invariant), so the
+//!   cycle-stepped backend (which evaluates every cycle) and the
+//!   event-driven backend (which evaluates only executed steps) emit the
+//!   same sample list — the skipped windows need no synthesis beyond
+//!   "nothing changed".  Integrating a track as a step function over
+//!   `[0, cycles)` reproduces the corresponding `SimStats` total exactly.
+//!
+//! Platform runs get their own [`PlatformTrace`]: per-chip compute cells,
+//! shared-DRAM streams (weights, inputs, writeback), and fabric
+//! transfers, derived from the conservative timing recurrence — identical
+//! at every thread count for the same reason the cycle counts are.
+
+use crate::util::json::Json;
+
+/// Event interface the simulation emits into.  Default bodies are no-ops;
+/// a disabled sink costs nothing.
+pub trait TraceSink {
+    /// An instruction occupied functional unit `fu` for `dur` cycles
+    /// starting at `start`, executing opcode `op`.
+    fn fu_span(&mut self, fu: u32, op: &'static str, start: u64, dur: u64) {
+        let _ = (fu, op, start, dur);
+    }
+
+    /// Per-cycle counter values for cycle `t`: the dep/structural/fetch
+    /// stall charge of this cycle and the issue-buffer depth after it.
+    fn counters(&mut self, t: u64, dep: u64, structural: u64, fetch: u64, buffer: u64) {
+        let _ = (t, dep, structural, fetch, buffer);
+    }
+
+    /// A storage-port transaction (or DRAM burst) completed.
+    fn port_span(&mut self, span: PortSpan) {
+        let _ = span;
+    }
+}
+
+/// The zero-cost disabled sink: overrides nothing, records nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// One instruction occupancy of a functional unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuSpan {
+    /// Functional-unit index (into [`TraceData::fu_names`]).
+    pub fu: u32,
+    pub op: &'static str,
+    pub start: u64,
+    pub dur: u64,
+}
+
+/// One storage-port transaction (or one DRAM burst of a transaction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PortSpan {
+    /// Storage index (into [`TraceData::storage_names`]).
+    pub storage: u32,
+    /// Request slot the transaction was granted.
+    pub slot: u32,
+    pub write: bool,
+    /// True for DRAM bursts (several contiguous spans per transaction).
+    pub burst: bool,
+    pub addr: u64,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// A change-only sampled counter track: `(cycle, value)` with an implicit
+/// initial value of 0 at cycle 0; each value holds until the next sample.
+pub type CounterTrack = Vec<(u64, u64)>;
+
+/// A finalized recording: everything needed to reconcile against
+/// [`crate::sim::kernel::SimStats`] or export Chrome-trace JSON.
+/// Derives `PartialEq` — trace equality is a backend-equivalence oracle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceData {
+    /// Total simulated cycles (the timeline end).
+    pub cycles: u64,
+    /// Functional-unit names, indexed by [`FuSpan::fu`].
+    pub fu_names: Vec<String>,
+    /// Storage names, indexed by [`PortSpan::storage`].
+    pub storage_names: Vec<String>,
+    pub fu_spans: Vec<FuSpan>,
+    pub port_spans: Vec<PortSpan>,
+    /// Per-cycle dependency-stall charge (integrates to
+    /// `dep_stall_cycles`).
+    pub dep_stall: CounterTrack,
+    /// Per-cycle structural-stall charge (integrates to
+    /// `structural_stall_cycles`).
+    pub structural_stall: CounterTrack,
+    /// Per-cycle fetch-stall charge (integrates to `fetch_stalls`).
+    pub fetch_stall: CounterTrack,
+    /// Issue-buffer depth after each cycle.
+    pub issue_buffer: CounterTrack,
+}
+
+/// Integrate a change-only counter track as a step function over
+/// `[0, end)`.
+pub fn integrate(track: &[(u64, u64)], end: u64) -> u64 {
+    let mut total = 0u64;
+    let mut last_t = 0u64;
+    let mut last_v = 0u64;
+    for &(t, v) in track {
+        total += last_v * t.saturating_sub(last_t);
+        last_t = t;
+        last_v = v;
+    }
+    total + last_v * end.saturating_sub(last_t)
+}
+
+fn push_changed(track: &mut CounterTrack, t: u64, v: u64, last: &mut u64) {
+    if v != *last {
+        track.push((t, v));
+        *last = v;
+    }
+}
+
+/// Close a track back to 0 at `t` (schedule-concatenation boundary).
+fn close_track(track: &mut CounterTrack, t: u64) {
+    if track.last().is_some_and(|&(_, v)| v != 0) {
+        track.push((t, 0));
+    }
+}
+
+impl TraceData {
+    /// Span-duration sum per functional unit — must equal
+    /// `SimStats::fu_busy` exactly.
+    pub fn fu_busy_totals(&self) -> Vec<u64> {
+        let mut totals = vec![0u64; self.fu_names.len()];
+        for s in &self.fu_spans {
+            totals[s.fu as usize] += s.dur;
+        }
+        totals
+    }
+
+    /// Span-duration sum per storage — must equal each storage's
+    /// `busy_cycles` exactly (DRAM bursts are contiguous sub-spans).
+    pub fn storage_busy_totals(&self) -> Vec<u64> {
+        let mut totals = vec![0u64; self.storage_names.len()];
+        for s in &self.port_spans {
+            totals[s.storage as usize] += s.end - s.start;
+        }
+        totals
+    }
+
+    /// Derived outstanding-requests counter for one storage: a sweep over
+    /// its port spans (+1 at start, −1 at end; ends process first so
+    /// FIFO-queued back-to-back spans don't inflate the level).
+    pub fn outstanding(&self, storage: u32) -> CounterTrack {
+        let mut deltas: Vec<(u64, i64)> = Vec::new();
+        for s in self.port_spans.iter().filter(|s| s.storage == storage) {
+            deltas.push((s.start, 1));
+            deltas.push((s.end, -1));
+        }
+        deltas.sort_unstable();
+        let mut out: CounterTrack = Vec::new();
+        let mut level = 0i64;
+        let mut i = 0;
+        while i < deltas.len() {
+            let t = deltas[i].0;
+            while i < deltas.len() && deltas[i].0 == t {
+                level += deltas[i].1;
+                i += 1;
+            }
+            let v = level.max(0) as u64;
+            if out.last().map(|&(_, x)| x) != Some(v) {
+                out.push((t, v));
+            }
+        }
+        out
+    }
+
+    /// Append another run's trace shifted by `offset` cycles — sequential
+    /// schedule concatenation (one engine run per mapped layer).  Counter
+    /// tracks are closed to 0 at the boundary; both runs must describe
+    /// the same machine (same FU/storage name tables).
+    pub fn append_offset(&mut self, mut other: TraceData, offset: u64) {
+        if self.fu_names.is_empty() && self.storage_names.is_empty() {
+            self.fu_names = std::mem::take(&mut other.fu_names);
+            self.storage_names = std::mem::take(&mut other.storage_names);
+        } else {
+            debug_assert_eq!(self.fu_names, other.fu_names, "trace across machines");
+            debug_assert_eq!(self.storage_names, other.storage_names);
+        }
+        for s in &mut other.fu_spans {
+            s.start += offset;
+        }
+        self.fu_spans.append(&mut other.fu_spans);
+        for s in &mut other.port_spans {
+            s.start += offset;
+            s.end += offset;
+        }
+        self.port_spans.append(&mut other.port_spans);
+        for (dst, src) in [
+            (&mut self.dep_stall, other.dep_stall),
+            (&mut self.structural_stall, other.structural_stall),
+            (&mut self.fetch_stall, other.fetch_stall),
+            (&mut self.issue_buffer, other.issue_buffer),
+        ] {
+            close_track(dst, offset);
+            dst.extend(src.into_iter().map(|(t, v)| (t + offset, v)));
+        }
+        self.cycles = offset + other.cycles;
+    }
+}
+
+/// The concrete recording sink the kernel installs.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    data: TraceData,
+    /// Last emitted value per counter track (change detection); tracks
+    /// start at an implicit 0.
+    last: [u64; 4],
+}
+
+impl Recorder {
+    pub fn into_data(self) -> TraceData {
+        self.data
+    }
+}
+
+impl TraceSink for Recorder {
+    fn fu_span(&mut self, fu: u32, op: &'static str, start: u64, dur: u64) {
+        self.data.fu_spans.push(FuSpan { fu, op, start, dur });
+    }
+
+    fn counters(&mut self, t: u64, dep: u64, structural: u64, fetch: u64, buffer: u64) {
+        push_changed(&mut self.data.dep_stall, t, dep, &mut self.last[0]);
+        push_changed(&mut self.data.structural_stall, t, structural, &mut self.last[1]);
+        push_changed(&mut self.data.fetch_stall, t, fetch, &mut self.last[2]);
+        push_changed(&mut self.data.issue_buffer, t, buffer, &mut self.last[3]);
+    }
+
+    fn port_span(&mut self, span: PortSpan) {
+        self.data.port_spans.push(span);
+    }
+}
+
+// ------------------------------------------------------------ platform
+
+/// One `(stage, microbatch)` compute occupancy on a platform chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellSpan {
+    pub stage: u32,
+    pub microbatch: u32,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// A named transfer span (DRAM stream or fabric hop).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XferSpan {
+    pub name: String,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Trace of a platform run, derived from the conservative timing
+/// recurrence — bit-identical at every worker thread count.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlatformTrace {
+    /// Per-stage chip labels (`machine[start..end]`), indexed by
+    /// [`CellSpan::stage`].
+    pub chips: Vec<String>,
+    pub cells: Vec<CellSpan>,
+    /// Weight streaming over the shared DRAM channel (one span per
+    /// stage, serial).
+    pub weights: Vec<XferSpan>,
+    /// Input microbatch loads over the shared DRAM channel.
+    pub inputs: Vec<XferSpan>,
+    /// Output writeback over the shared DRAM channel.
+    pub writeback: Vec<XferSpan>,
+    /// Inter-chip fabric transfers.
+    pub fabric: Vec<XferSpan>,
+    pub total_cycles: u64,
+}
+
+impl PlatformTrace {
+    /// Cell-duration sum per stage — must equal each
+    /// `StageReport::busy_cycles` exactly.
+    pub fn stage_busy_totals(&self) -> Vec<u64> {
+        let mut totals = vec![0u64; self.chips.len()];
+        for c in &self.cells {
+            totals[c.stage as usize] += c.end - c.start;
+        }
+        totals
+    }
+}
+
+// ------------------------------------------------- Chrome-trace export
+
+fn n(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn meta_process(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", n(pid)),
+        ("name", Json::str("process_name")),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn meta_thread(pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", n(pid)),
+        ("tid", n(tid)),
+        ("name", Json::str("thread_name")),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn complete_event(pid: u64, tid: u64, name: &str, start: u64, dur: u64, args: Option<Json>) -> Json {
+    let mut fields = vec![
+        ("ph", Json::str("X")),
+        ("pid", n(pid)),
+        ("tid", n(tid)),
+        ("ts", n(start)),
+        ("dur", n(dur)),
+        ("name", Json::str(name)),
+    ];
+    if let Some(a) = args {
+        fields.push(("args", a));
+    }
+    Json::obj(fields)
+}
+
+fn counter_events(events: &mut Vec<Json>, pid: u64, name: &str, track: &[(u64, u64)]) {
+    for &(t, v) in track {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("C")),
+            ("pid", n(pid)),
+            ("tid", n(0)),
+            ("ts", n(t)),
+            ("name", Json::str(name)),
+            ("args", Json::obj(vec![("value", n(v))])),
+        ]));
+    }
+}
+
+/// Chrome-trace JSON for a single-machine recording: pid 1 is the core
+/// (one track per FU, plus stall/occupancy counters), pid 2 is the
+/// storage subsystem (one track per request slot, plus
+/// outstanding-request counters).  One cycle = one microsecond tick.
+pub fn chrome_trace_json(d: &TraceData) -> Json {
+    let mut events = vec![meta_process(1, "core"), meta_process(2, "storage")];
+    for (i, name) in d.fu_names.iter().enumerate() {
+        events.push(meta_thread(1, i as u64 + 1, name));
+    }
+    for s in &d.fu_spans {
+        events.push(complete_event(1, s.fu as u64 + 1, s.op, s.start, s.dur, None));
+    }
+    counter_events(&mut events, 1, "dep_stall", &d.dep_stall);
+    counter_events(&mut events, 1, "structural_stall", &d.structural_stall);
+    counter_events(&mut events, 1, "fetch_stall", &d.fetch_stall);
+    counter_events(&mut events, 1, "issue_buffer", &d.issue_buffer);
+
+    // One storage track per (storage, request slot) pair with activity.
+    let mut tracks: Vec<(u32, u32)> = d.port_spans.iter().map(|s| (s.storage, s.slot)).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    for (i, &(st, slot)) in tracks.iter().enumerate() {
+        let label = format!("{}.p{}", d.storage_names[st as usize], slot);
+        events.push(meta_thread(2, i as u64 + 1, &label));
+    }
+    for s in &d.port_spans {
+        let tid = tracks.binary_search(&(s.storage, s.slot)).unwrap() as u64 + 1;
+        let name = if s.write { "wr" } else { "rd" };
+        let args = Json::obj(vec![
+            ("addr", Json::str(format!("{:#x}", s.addr))),
+            ("burst", Json::Bool(s.burst)),
+        ]);
+        events.push(complete_event(2, tid, name, s.start, s.end - s.start, Some(args)));
+    }
+    let mut storages: Vec<u32> = tracks.iter().map(|&(st, _)| st).collect();
+    storages.dedup();
+    for st in storages {
+        let name = format!("outstanding {}", d.storage_names[st as usize]);
+        counter_events(&mut events, 2, &name, &d.outstanding(st));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ns")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Chrome-trace JSON for a platform run: pid 1 is the platform fabric
+/// (shared-DRAM streams and inter-chip transfers on separate tracks —
+/// the recurrence lets them overlap, so each stream gets its own), and
+/// one pid (track group) per chip from pid 2 up.
+pub fn chrome_trace_platform_json(p: &PlatformTrace) -> Json {
+    let mut events = vec![
+        meta_process(1, "platform"),
+        meta_thread(1, 1, "dram weights"),
+        meta_thread(1, 2, "dram inputs"),
+        meta_thread(1, 3, "dram writeback"),
+        meta_thread(1, 4, "fabric"),
+    ];
+    for (tid, spans) in [
+        (1u64, &p.weights),
+        (2, &p.inputs),
+        (3, &p.writeback),
+        (4, &p.fabric),
+    ] {
+        for s in spans {
+            events.push(complete_event(1, tid, &s.name, s.start, s.end - s.start, None));
+        }
+    }
+    for (s, chip) in p.chips.iter().enumerate() {
+        let pid = s as u64 + 2;
+        events.push(meta_process(pid, chip));
+        events.push(meta_thread(pid, 1, "compute"));
+    }
+    for c in &p.cells {
+        let name = format!("mb{}", c.microbatch);
+        events.push(complete_event(c.stage as u64 + 2, 1, &name, c.start, c.end - c.start, None));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ns")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> TraceData {
+        TraceData {
+            cycles: 20,
+            fu_names: vec!["fu0".into(), "mau0".into()],
+            storage_names: vec!["dmem".into()],
+            fu_spans: vec![
+                FuSpan { fu: 0, op: "mac", start: 2, dur: 3 },
+                FuSpan { fu: 0, op: "mac", start: 7, dur: 2 },
+                FuSpan { fu: 1, op: "load", start: 1, dur: 6 },
+            ],
+            port_spans: vec![
+                PortSpan { storage: 0, slot: 0, write: false, burst: false, addr: 0x10, start: 1, end: 5 },
+                PortSpan { storage: 0, slot: 1, write: true, burst: true, addr: 0x20, start: 3, end: 6 },
+            ],
+            dep_stall: vec![(2, 1), (5, 0)],
+            structural_stall: vec![(4, 2), (6, 0)],
+            fetch_stall: vec![(10, 1), (12, 0)],
+            issue_buffer: vec![(0, 2), (8, 0)],
+        }
+    }
+
+    #[test]
+    fn busy_totals_sum_span_durations() {
+        let d = sample_trace();
+        assert_eq!(d.fu_busy_totals(), vec![5, 6]);
+        assert_eq!(d.storage_busy_totals(), vec![7]);
+    }
+
+    #[test]
+    fn integrate_is_a_step_function_with_tail() {
+        // 0 until 2, 1 over [2,5), 0 after: integral 3.
+        assert_eq!(integrate(&[(2, 1), (5, 0)], 20), 3);
+        // Tail segment extends to the end.
+        assert_eq!(integrate(&[(2, 1)], 10), 8);
+        assert_eq!(integrate(&[], 10), 0);
+        // Implicit initial 0 before the first sample.
+        assert_eq!(integrate(&[(0, 2), (8, 0)], 20), 16);
+    }
+
+    #[test]
+    fn recorder_samples_on_change_only() {
+        let mut r = Recorder::default();
+        r.counters(0, 0, 0, 0, 2);
+        r.counters(1, 0, 0, 0, 2); // no change: no samples
+        r.counters(2, 1, 0, 0, 2);
+        r.counters(3, 1, 0, 0, 1);
+        r.counters(4, 0, 0, 0, 1);
+        let d = r.into_data();
+        assert_eq!(d.dep_stall, vec![(2, 1), (4, 0)]);
+        assert_eq!(d.issue_buffer, vec![(0, 2), (3, 1)]);
+        assert!(d.structural_stall.is_empty());
+        // Integrals reproduce the per-cycle sums: dep charged at 2 and 3.
+        assert_eq!(integrate(&d.dep_stall, 5), 2);
+    }
+
+    #[test]
+    fn outstanding_sweeps_ends_before_starts() {
+        let d = sample_trace();
+        // [1,5) and [3,6): 1 at 1, 2 at 3, 1 at 5, 0 at 6.
+        assert_eq!(d.outstanding(0), vec![(1, 1), (3, 2), (5, 1), (6, 0)]);
+        // Back-to-back FIFO spans never read as concurrent.
+        let d2 = TraceData {
+            storage_names: vec!["s".into()],
+            port_spans: vec![
+                PortSpan { storage: 0, slot: 0, write: false, burst: false, addr: 0, start: 0, end: 4 },
+                PortSpan { storage: 0, slot: 0, write: false, burst: false, addr: 4, start: 4, end: 8 },
+            ],
+            ..TraceData::default()
+        };
+        assert_eq!(d2.outstanding(0), vec![(0, 1), (8, 0)]);
+    }
+
+    #[test]
+    fn append_offset_shifts_and_closes_tracks() {
+        let mut a = sample_trace();
+        let b = sample_trace();
+        // Leave `a`'s fetch track open (nonzero at the boundary).
+        a.fetch_stall = vec![(10, 1)];
+        let dep_before = integrate(&a.dep_stall, a.cycles) + integrate(&b.dep_stall, b.cycles);
+        a.append_offset(b, 20);
+        assert_eq!(a.cycles, 40);
+        assert_eq!(a.fu_spans.len(), 6);
+        assert_eq!(a.fu_spans[3].start, 22, "second run's spans shifted");
+        assert_eq!(a.port_spans[3].end, 26);
+        // The open track closed to 0 at the boundary, so integrals of the
+        // merged trace equal the per-run sums.
+        assert_eq!(a.fetch_stall, vec![(10, 1), (20, 0), (30, 1), (32, 0)]);
+        assert_eq!(integrate(&a.dep_stall, a.cycles), dep_before);
+        assert_eq!(a.fu_busy_totals(), vec![10, 12]);
+    }
+
+    #[test]
+    fn append_offset_adopts_names_into_empty_trace() {
+        let mut a = TraceData::default();
+        a.append_offset(sample_trace(), 0);
+        assert_eq!(a.fu_names, vec!["fu0".to_string(), "mau0".to_string()]);
+        assert_eq!(a.cycles, 20);
+    }
+
+    #[test]
+    fn null_sink_compiles_to_nothing() {
+        let mut s = NullSink;
+        s.fu_span(0, "mac", 0, 1);
+        s.counters(0, 1, 2, 3, 4);
+        s.port_span(PortSpan {
+            storage: 0,
+            slot: 0,
+            write: false,
+            burst: false,
+            addr: 0,
+            start: 0,
+            end: 1,
+        });
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_and_has_required_fields() {
+        let d = sample_trace();
+        let j = chrome_trace_json(&d);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.field("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let mut saw_x = 0;
+        let mut saw_c = 0;
+        let mut saw_m = 0;
+        for e in events {
+            match e.field("ph").unwrap().as_str().unwrap() {
+                "X" => {
+                    saw_x += 1;
+                    assert!(e.get("ts").is_some() && e.get("dur").is_some());
+                    e.field("name").unwrap().as_str().unwrap();
+                }
+                "C" => {
+                    saw_c += 1;
+                    e.field("args").unwrap().field("value").unwrap().as_u64().unwrap();
+                }
+                "M" => saw_m += 1,
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        // 3 FU spans + 2 port spans; counters from 4 core tracks + 1
+        // outstanding track; metadata for 2 processes + 2 FU + 2 ports.
+        assert_eq!(saw_x, 5);
+        assert!(saw_c >= 8);
+        assert_eq!(saw_m, 8);
+    }
+
+    #[test]
+    fn platform_chrome_json_groups_tracks_per_chip() {
+        let p = PlatformTrace {
+            chips: vec!["oma[0..2]".into(), "oma[2..4]".into()],
+            cells: vec![
+                CellSpan { stage: 0, microbatch: 0, start: 5, end: 9 },
+                CellSpan { stage: 1, microbatch: 0, start: 12, end: 20 },
+            ],
+            weights: vec![XferSpan { name: "weights s0".into(), start: 0, end: 3 }],
+            inputs: vec![XferSpan { name: "input mb0".into(), start: 0, end: 5 }],
+            writeback: vec![XferSpan { name: "writeback mb0".into(), start: 20, end: 22 }],
+            fabric: vec![XferSpan { name: "s0->s1 mb0".into(), start: 9, end: 12 }],
+            total_cycles: 22,
+        };
+        assert_eq!(p.stage_busy_totals(), vec![4, 8]);
+        let j = chrome_trace_platform_json(&p);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let events = parsed.field("traceEvents").unwrap().as_arr().unwrap();
+        let processes: Vec<&str> = events
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(|v| v.as_str().ok()) == Some("process_name")
+            })
+            .map(|e| e.field("args").unwrap().field("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(processes, vec!["platform", "oma[0..2]", "oma[2..4]"]);
+    }
+}

@@ -19,12 +19,20 @@ use acadl::isa::program::Program;
 use acadl::mapping::gamma_gemm::{gamma_gemm, GammaGemmOpts};
 use acadl::mapping::gemm::{oma_gemm_listing5, oma_tiled_gemm, GemmLayout, GemmParams};
 use acadl::mapping::systolic_gemm::systolic_gemm;
-use acadl::sim::{BackendKind, Engine, SimStats};
+use acadl::sim::trace::integrate;
+use acadl::sim::{BackendKind, Engine, SimStats, TraceData};
 use acadl::util::prop::{forall, Gen};
 
 /// Run `prog` on both backends (identical input setup) and assert every
 /// reported number and the final architectural state agree.  Returns the
 /// stats and a memory dump for further workload-specific checks.
+///
+/// Both runs record a structured trace, which becomes two additional
+/// oracles: the full span/counter timelines must be **equal** across
+/// backends (not just their totals — every dispatch time, transaction
+/// window, and counter sample), and each backend's trace must reconcile
+/// exactly with its own statistics (span sums == busy counters, counter
+/// integrals == stall totals).
 fn assert_equiv(
     ag: &Ag,
     prog: &Program,
@@ -33,12 +41,16 @@ fn assert_equiv(
     max_cycles: u64,
 ) -> (SimStats, Vec<f32>) {
     let mut cycle = Engine::with_backend(ag, prog, BackendKind::CycleStepped).unwrap();
+    cycle.attach_trace();
     setup(&mut cycle);
     let cs = cycle.run(max_cycles).unwrap();
+    let ct = cycle.take_trace().expect("cycle-stepped trace");
 
     let mut event = Engine::with_backend(ag, prog, BackendKind::EventDriven).unwrap();
+    event.attach_trace();
     setup(&mut event);
     let es = event.run(max_cycles).unwrap();
+    let et = event.take_trace().expect("event-driven trace");
 
     assert_eq!(cs.cycles, es.cycles, "total cycles");
     assert_eq!(cs.retired, es.retired, "retired instructions");
@@ -52,11 +64,52 @@ fn assert_equiv(
     assert_eq!(cs.fu_busy, es.fu_busy, "per-FU busy cycles");
     assert_eq!(cycle.regs, event.regs, "final register state");
 
+    assert_eq!(ct, et, "trace timelines (spans + counter samples)");
+    assert_trace_reconciles(&ct, &cs, "cycle-stepped");
+    assert_trace_reconciles(&et, &es, "event-driven");
+
     let (base, words) = dump;
     let c_dump = cycle.mem.dump_f32(base, words);
     let e_dump = event.mem.dump_f32(base, words);
     assert_eq!(c_dump, e_dump, "final memory state at {base:#x}");
     (cs, c_dump)
+}
+
+/// The trace must decompose its run's statistics exactly: per-FU span
+/// durations sum to the busy counters, step-function integrals of the
+/// stall counter tracks reproduce the stall totals, and per-storage
+/// transaction/burst spans sum to the storage busy counters.
+fn assert_trace_reconciles(tr: &TraceData, st: &SimStats, what: &str) {
+    assert_eq!(tr.cycles, st.cycles, "{what}: trace end");
+    let fu_totals = tr.fu_busy_totals();
+    assert_eq!(fu_totals.len(), st.fu_busy.len(), "{what}: FU count");
+    for (i, (name, busy)) in st.fu_busy.iter().enumerate() {
+        assert_eq!(fu_totals[i], *busy, "{what}: Σ spans == busy ({name})");
+    }
+    assert_eq!(
+        integrate(&tr.dep_stall, tr.cycles),
+        st.dep_stall_cycles,
+        "{what}: ∫ dep_stall == dep stall cycles"
+    );
+    assert_eq!(
+        integrate(&tr.structural_stall, tr.cycles),
+        st.structural_stall_cycles,
+        "{what}: ∫ structural_stall == structural stall cycles"
+    );
+    assert_eq!(
+        integrate(&tr.fetch_stall, tr.cycles),
+        st.fetch_stalls,
+        "{what}: ∫ fetch_stall == fetch stalls"
+    );
+    let port_totals = tr.storage_busy_totals();
+    assert_eq!(port_totals.len(), st.storages.len(), "{what}: storage count");
+    for (i, s) in st.storages.iter().enumerate() {
+        assert_eq!(
+            port_totals[i], s.busy_cycles,
+            "{what}: Σ port spans == busy ({})",
+            s.name
+        );
+    }
 }
 
 // ------------------------------------------------------- acceptance zoo
@@ -218,6 +271,45 @@ fn plasticine_pipeline_backends_agree() {
     );
     let want: Vec<f32> = a.iter().map(|x| (x * 2.0 + x).max(0.0)).collect();
     assert_eq!(dump, want);
+}
+
+// ------------------------------------------------------- trace neutrality
+
+/// Tracing is observation-only: every reported statistic is bit-identical
+/// with the recorder attached or absent, on both backends — the guard
+/// that keeps `--trace` runs representative of untraced ones.
+#[test]
+fn tracing_on_or_off_reports_identical_cycles() {
+    let m = OmaConfig::default().build().unwrap();
+    let p = GemmParams::new(8, 8, 8);
+    let prog = oma_tiled_gemm(&m, &p).expect("codegen");
+    let layout = GemmLayout::at(m.dmem_base(), &p);
+    let a: Vec<f32> = (0..64).map(|i| (i % 9) as f32 * 0.5 - 2.0).collect();
+    let b: Vec<f32> = (0..64).map(|i| (i % 4) as f32 - 1.5).collect();
+    for backend in [BackendKind::CycleStepped, BackendKind::EventDriven] {
+        let run = |traced: bool| {
+            let mut e = Engine::with_backend(&m.ag, &prog, backend).unwrap();
+            if traced {
+                e.attach_trace();
+            }
+            layout.load_inputs(&p, &mut e.mem, &a, &b);
+            let st = e.run(200_000_000).unwrap();
+            let c = layout.read_c(&p, &e.mem);
+            (st, c)
+        };
+        let (off, c_off) = run(false);
+        let (on, c_on) = run(true);
+        assert_eq!(on.cycles, off.cycles, "{backend:?}: tracing moved cycles");
+        assert_eq!(on.retired, off.retired, "{backend:?}: retired");
+        assert_eq!(on.fu_busy, off.fu_busy, "{backend:?}: FU busy");
+        assert_eq!(on.dep_stall_cycles, off.dep_stall_cycles, "{backend:?}");
+        assert_eq!(
+            on.structural_stall_cycles, off.structural_stall_cycles,
+            "{backend:?}"
+        );
+        assert_eq!(on.fetch_stalls, off.fetch_stalls, "{backend:?}");
+        assert_eq!(c_on, c_off, "{backend:?}: results");
+    }
 }
 
 // ------------------------------------------------------- property tests

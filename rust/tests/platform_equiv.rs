@@ -19,7 +19,10 @@ use acadl::dnn::{partition_graph, DnnGraph};
 use acadl::mapping::gemm::{GemmLayout, GemmParams};
 use acadl::mapping::systolic_gemm::systolic_gemm;
 use acadl::mapping::uma::{Machine, TargetConfig};
-use acadl::sim::{microbatch_input, run_platform, BackendKind, Engine, PlatformReport};
+use acadl::sim::{
+    microbatch_input, run_platform, run_platform_traced, BackendKind, Engine, PlatformReport,
+    PlatformTrace,
+};
 use acadl::util::prop::{forall, Gen};
 
 // ------------------------------------------------ backend equivalence
@@ -233,6 +236,61 @@ fn prop_random_platforms_are_thread_count_independent() {
             Ok(())
         },
     );
+}
+
+/// The platform trace comes from the deterministic serial recurrence, so
+/// it must be **bit-identical** at every worker thread count (the same
+/// discipline as the cycle counts) — and its cell spans must reconcile
+/// exactly with the per-stage busy counts the report carries.
+#[test]
+fn platform_trace_is_thread_count_invariant_and_reconciles() {
+    let g = DnnGraph::tiny_transformer();
+    let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2))
+        .build()
+        .unwrap();
+    let desc = PlatformDesc::new(4).with_microbatches(4);
+    let plan = partition_graph(&g, 8, desc.chips).unwrap();
+    let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+    let mode = SimMode::Timed(BackendKind::EventDriven);
+    let run = |threads: usize| {
+        let mut tr = PlatformTrace::default();
+        let rep = run_platform_traced(
+            &machines,
+            &g,
+            &plan,
+            8,
+            &desc,
+            mode,
+            threads,
+            500_000_000,
+            Some(&mut tr),
+        )
+        .unwrap();
+        (rep, tr)
+    };
+    let (rep1, tr1) = run(1);
+    let (rep4, tr4) = run(4);
+    assert_reports_equal(&rep1, &rep4, "traced threads 1 vs 4");
+    assert_eq!(tr1, tr4, "platform traces differ across thread counts");
+
+    assert_eq!(tr1.total_cycles, rep1.total_cycles, "trace makespan");
+    assert_eq!(tr1.chips.len(), rep1.stages.len(), "one track group per chip");
+    for (c, s) in tr1.chips.iter().zip(&rep1.stages) {
+        assert_eq!(c, &s.name, "chip track names match stage reports");
+    }
+    let busy = tr1.stage_busy_totals();
+    for (i, s) in rep1.stages.iter().enumerate() {
+        assert_eq!(busy[i], s.busy_cycles, "Σ cell spans == {} busy", s.name);
+    }
+    // Every microbatch crosses every inter-stage fabric edge exactly once.
+    assert_eq!(
+        tr1.fabric.len(),
+        (rep1.stages.len() - 1) * desc.microbatches,
+        "fabric transfer count"
+    );
+    // And the untraced entry point reports the same run.
+    let plain = platform_run(&machine, &g, 8, &desc, mode, 4);
+    assert_reports_equal(&rep1, &plain, "traced vs untraced");
 }
 
 /// Zero-latency fabric edges: the conservative recurrence is a forward

@@ -65,8 +65,25 @@ data["transformer/systolic_2x2_seq8_wall"] = {"median_ns": tf_ns, "runs": 1}
 data["platform/quad_tf_seq8_wall_threads1"] = {"median_ns": p1_ns, "runs": 1}
 data["platform/quad_tf_seq8_wall_threads4"] = {"median_ns": p4_ns, "runs": 1}
 data["platform/speedup_4t"] = {"ratio": round(p1_ns / max(p4_ns, 1), 3), "runs": 1}
+
+# The committed BENCH_sim.json is a null-valued schema; a run of this
+# script must replace every null with a measurement.  Fail loudly when a
+# row stayed null or a load-bearing row is missing entirely (a renamed
+# bench would otherwise silently drop out of the trajectory).
+nulls = sorted(k for k, v in data.items() if v is None)
+assert not nulls, f"benches left rows unpopulated: {nulls}"
+required = [
+    "backend_compare/oma_dram_gemm8/cycle (cycles/s)",
+    "supervisor/no_token (cycles/s)",
+    "trace/off (cycles/s)",
+    "trace/on (cycles/s)",
+    "platform/speedup_4t",
+]
+missing = [k for k in required if k not in data]
+assert not missing, f"expected trajectory rows missing: {missing}"
+
 with open(path, "w") as f:
     json.dump(data, f, indent=2, sort_keys=True)
     f.write("\n")
-print(f"wrote {path} ({len(data)} entries)")
+print(f"wrote {path} ({len(data)} entries, all populated)")
 EOF

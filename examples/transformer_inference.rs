@@ -4,11 +4,14 @@
 //! cross-validated against the host reference — bit-exactly on the
 //! sequentially-accumulating targets.
 //!
-//! The run ends with a **`.acadl`-driven pass**: the systolic array is
-//! rebuilt from its textual description (`examples/systolic_2x2.acadl`),
-//! verified equivalent to the builder graph, and the same schedule
-//! produces the same cycle count — file-described and Rust-built
-//! architectures are interchangeable all the way up to attention.
+//! The run continues with a **`.acadl`-driven pass**: the systolic array
+//! is rebuilt from its textual description
+//! (`examples/systolic_2x2.acadl`), verified equivalent to the builder
+//! graph, and the same schedule produces the same cycle count —
+//! file-described and Rust-built architectures are interchangeable all
+//! the way up to attention.  It closes with a **KV-cached serving job**
+//! (multi-layer, multi-head, prefill + decode) that reports the
+//! prefill/decode phase split and cycles-per-decoded-token.
 //!
 //! Run with: `cargo run --release --example transformer_inference`
 
@@ -124,7 +127,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let r = job::execute(&JobSpec {
         id: 0,
         target: spec,
-        workload: Workload::Transformer { seq },
+        workload: Workload::Transformer {
+            seq,
+            layers: 1,
+            heads: 1,
+            decode_steps: 0,
+        },
         mode: SimModeSpec::Timed,
         backend: BackendKind::EventDriven,
         max_cycles: 2_000_000_000,
@@ -140,6 +148,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!(
         "\n.acadl-driven run ({}): {} cycles — identical to the builder path ✓",
         "systolic_2x2.acadl", r.cycles
+    );
+
+    // ---- KV-cached serving: prefill + decode ------------------------
+    // A nonzero `decode_steps` turns the job into a serving scenario:
+    // the prompt is prefetched through the model once (populating the
+    // per-layer KV caches), then each step decodes one token against the
+    // growing cache.  The result row splits the phases, and
+    // cycles-per-token is the serving latency headline.
+    let serving = job::execute(&JobSpec {
+        id: 1,
+        target: TargetSpec::Systolic { rows: 2, cols: 2 },
+        workload: Workload::Transformer {
+            seq,
+            layers: 2,
+            heads: 2,
+            decode_steps: 4,
+        },
+        mode: SimModeSpec::Timed,
+        backend: BackendKind::EventDriven,
+        max_cycles: 2_000_000_000,
+        platform: None,
+        deadline_ms: None,
+    });
+    assert_eq!(serving.error, None);
+    assert_eq!(serving.numerics_ok, Some(true));
+    let prefill = serving
+        .prefill_cycles
+        .expect("serving runs report the phase split");
+    let per_token = serving.cycles_per_token.expect("decode steps > 0");
+    println!(
+        "KV-cached serving (2 layers, 2 heads, prompt {seq} + 4 decode steps) on \
+         systolic_2x2: {} cycles = {prefill} prefill + {} decode → {per_token:.1} \
+         cycles/token",
+        serving.cycles,
+        serving.cycles - prefill
     );
     Ok(())
 }

@@ -16,6 +16,14 @@ use crate::mapping::conv::Conv2d;
 use crate::mapping::gemm::{gemm_ref, GemmParams};
 use crate::mapping::rowwise::{addmat_ref, gelu_ref, layernorm_ref, softmax_ref, transpose_ref};
 
+/// The causal-mask fill value.  `(NEG_MASK - max).exp()` underflows to
+/// exactly +0.0 for any finite row maximum, so masked positions
+/// contribute bitwise nothing to the softmax row sum or the subsequent
+/// `P·V` accumulation — the KV-cache decode oracle's bit-exactness
+/// (incremental decode ≡ from-scratch prefill of the extended sequence)
+/// rests on this.
+pub const NEG_MASK: f32 = -1e30;
+
 /// Host-side 2×2 max-pool on batch × (c·h·w) channel-major activations —
 /// the single implementation shared by the reference forward pass and the
 /// lowered-schedule runner (`dnn::lowering`), so the two can't drift.
@@ -81,6 +89,23 @@ pub enum Layer {
     Stash { slot: usize },
     /// Restore the activation saved in slot `slot`.
     Recall { slot: usize },
+    /// Append the current activation's rows to numbered slot `slot`,
+    /// creating it when absent — the KV-cache write.  Pass-through: the
+    /// running activation is unchanged.  Lowering can seed the slot to a
+    /// pre-existing cache shape, which is how one graph serves both the
+    /// prefill and decode phases.
+    AppendStash { slot: usize },
+    /// Activation × stashed-activation**T** matrix multiply:
+    /// `act · stash[slot]^T`, scaled by `scale` — attention's `Q·K^T/√d`
+    /// against a **row-major** K cache (`n × features` at run time), so
+    /// the cache appends one row per decoded token without a transpose.
+    MatMulT { slot: usize, scale: f32 },
+    /// Causal attention mask (host step): with `off = cols − rows`, set
+    /// entries `j > i + off` of row `i` to [`NEG_MASK`], so softmax sends
+    /// them to exactly +0.0.  At prefill (`rows == cols`) this is the
+    /// strict upper triangle; at decode (`rows == 1`) it masks nothing —
+    /// the newest token attends over the whole cache.
+    CausalMask,
 }
 
 /// A sequential DNN: input shape + layers + deterministic parameters.
@@ -207,6 +232,95 @@ impl DnnGraph {
                 dense(D, OUT),                 // 23: head
             ],
             name: "tiny_transformer".into(),
+        }
+    }
+
+    /// A parameterized **causal** transformer: `layers` pre-norm blocks
+    /// of `heads`-head self-attention over `d = 16` token features with a
+    /// KV cache (per-head K/V slots written via [`Layer::AppendStash`]),
+    /// each block closed by the same GELU FFN as
+    /// [`Self::tiny_transformer`], then a final norm and 8-class head.
+    ///
+    /// One graph serves both serving phases: lowered at `batch = seq`
+    /// with empty slots it is the **prefill** schedule; lowered at
+    /// `batch = 1` with the K/V slots seeded to the cache shape it is one
+    /// **decode** step (`dnn::lowering::lower_serving`).
+    /// [`Layer::CausalMask`] keeps every prefix row independent of later
+    /// tokens, which is what makes incremental KV-cached decode
+    /// bit-identical to a from-scratch prefill of the extended sequence.
+    ///
+    /// `heads` must divide 16.  Each head projects to `16/heads`
+    /// features, attends causally, projects back to 16, and the per-head
+    /// projections are summed — mathematically the concat-then-project
+    /// formulation with the projection matrix sliced per head.
+    pub fn transformer(layers: usize, heads: usize) -> Self {
+        const D: usize = 16;
+        const FFN: usize = 32;
+        const OUT: usize = 8;
+        const EPS: f32 = 1e-5;
+        assert!(layers >= 1, "transformer needs at least one layer");
+        assert!(heads >= 1 && D % heads == 0, "heads must divide {D}");
+        let dh = D / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let dense = |i: usize, o: usize| Layer::Dense {
+            in_features: i,
+            out_features: o,
+            relu: false,
+        };
+        let mut ls = vec![dense(D, D)]; // embed
+        for l in 0..layers {
+            // Per-layer slot bank: 2 K/V slots per head, then the block's
+            // x / head-accumulator / FFN-residual slots.
+            let base = l * (2 * heads + 4);
+            let k_slot = |h: usize| base + 2 * h;
+            let v_slot = |h: usize| base + 2 * h + 1;
+            let x_slot = base + 2 * heads;
+            let acc_slot = base + 2 * heads + 1;
+            let ffn_slot = base + 2 * heads + 2;
+            ls.push(Layer::LayerNorm { eps: EPS });
+            ls.push(Layer::Stash { slot: x_slot });
+            for h in 0..heads {
+                ls.push(Layer::Recall { slot: x_slot });
+                ls.push(dense(D, dh)); // K head
+                ls.push(Layer::AppendStash { slot: k_slot(h) });
+                ls.push(Layer::Recall { slot: x_slot });
+                ls.push(dense(D, dh)); // V head
+                ls.push(Layer::AppendStash { slot: v_slot(h) });
+                ls.push(Layer::Recall { slot: x_slot });
+                ls.push(dense(D, dh)); // Q head
+                ls.push(Layer::MatMulT { slot: k_slot(h), scale });
+                ls.push(Layer::CausalMask);
+                ls.push(Layer::Softmax);
+                ls.push(Layer::MatMul {
+                    slot: v_slot(h),
+                    scale: 1.0,
+                });
+                ls.push(dense(dh, D)); // per-head output projection
+                if heads > 1 {
+                    if h == 0 {
+                        ls.push(Layer::Stash { slot: acc_slot });
+                    } else {
+                        ls.push(Layer::AddResidual { slot: acc_slot });
+                        if h < heads - 1 {
+                            ls.push(Layer::Stash { slot: acc_slot });
+                        }
+                    }
+                }
+            }
+            ls.push(Layer::AddResidual { slot: x_slot });
+            ls.push(Layer::LayerNorm { eps: EPS });
+            ls.push(Layer::Stash { slot: ffn_slot });
+            ls.push(dense(D, FFN));
+            ls.push(Layer::Gelu);
+            ls.push(dense(FFN, D));
+            ls.push(Layer::AddResidual { slot: ffn_slot });
+        }
+        ls.push(Layer::LayerNorm { eps: EPS });
+        ls.push(dense(D, OUT));
+        DnnGraph {
+            input_features: D,
+            layers: ls,
+            name: format!("transformer_l{layers}_h{heads}"),
         }
     }
 
@@ -398,6 +512,39 @@ impl DnnGraph {
                 Layer::Stash { slot } => {
                     stash.insert(*slot, (h.clone(), rows, feat));
                 }
+                Layer::AppendStash { slot } => match stash.get_mut(slot) {
+                    Some((v, r, c)) => {
+                        assert_eq!(*c, feat, "append width at layer {idx}");
+                        v.extend_from_slice(&h);
+                        *r += rows;
+                    }
+                    None => {
+                        stash.insert(*slot, (h.clone(), rows, feat));
+                    }
+                },
+                Layer::MatMulT { slot, scale } => {
+                    let (b, brows, bcols) = stash
+                        .get(slot)
+                        .unwrap_or_else(|| panic!("matmult at layer {idx}: empty slot {slot}"));
+                    assert_eq!(feat, *bcols, "matmult operand shapes at layer {idx}");
+                    let bt = transpose_ref(*brows, *bcols, b);
+                    let p = GemmParams::new(rows, feat, *brows);
+                    h = gemm_ref(&p, &h, &bt);
+                    for v in &mut h {
+                        *v *= scale;
+                    }
+                    feat = *brows;
+                    shape = None;
+                }
+                Layer::CausalMask => {
+                    assert!(rows <= feat, "causal mask needs rows ≤ cols at layer {idx}");
+                    let off = feat - rows;
+                    for i in 0..rows {
+                        for v in &mut h[i * feat + i + off + 1..(i + 1) * feat] {
+                            *v = NEG_MASK;
+                        }
+                    }
+                }
                 Layer::Recall { slot } => {
                     let (v, r, c) = stash
                         .get(slot)
@@ -486,5 +633,61 @@ mod tests {
         let y = g.forward_ref(&x, 4);
         assert_eq!(y.len(), 4 * 8);
         assert!(y.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn parameterized_transformer_forward_ref_runs() {
+        for (layers, heads) in [(1, 1), (1, 2), (2, 2), (2, 4), (1, 16)] {
+            let g = DnnGraph::transformer(layers, heads);
+            let t = 5;
+            let x = g.input_batch(t);
+            let y = g.forward_ref(&x, t);
+            assert_eq!(y.len(), t * 8, "l{layers} h{heads}: 8-class head per token");
+            assert!(y.iter().all(|v| v.is_finite()));
+            assert!(y.iter().any(|&v| v != 0.0));
+            assert_eq!(g.name, format!("transformer_l{layers}_h{heads}"));
+        }
+        // Distinct shapes are genuinely different models.
+        let a = DnnGraph::transformer(1, 1);
+        let b = DnnGraph::transformer(2, 2);
+        let x = a.input_batch(4);
+        assert_ne!(a.forward_ref(&x, 4), b.forward_ref(&x, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "heads must divide")]
+    fn transformer_rejects_indivisible_heads() {
+        DnnGraph::transformer(1, 3);
+    }
+
+    #[test]
+    fn causal_mask_makes_prefix_outputs_stable() {
+        // The bit-exactness argument behind the KV-cache oracle: masked
+        // tail scores underflow to exactly +0.0 through softmax, so a
+        // prefix's outputs never change when more tokens are appended —
+        // bitwise, not approximately.
+        let g = DnnGraph::transformer(2, 2);
+        let full = g.input_batch(6);
+        let y6 = g.forward_ref(&full, 6);
+        let y4 = g.forward_ref(&full[..4 * g.input_features], 4);
+        assert_eq!(y4, y6[..4 * 8], "prefix rows are bitwise stable");
+    }
+
+    #[test]
+    fn append_stash_accumulates_rows_in_forward_ref() {
+        // A graph that appends the running activation twice: the second
+        // matmult sees a 2·rows-deep cache.
+        let g = DnnGraph {
+            input_features: 4,
+            layers: vec![
+                Layer::AppendStash { slot: 0 },
+                Layer::AppendStash { slot: 0 },
+                Layer::MatMulT { slot: 0, scale: 1.0 },
+            ],
+            name: "append".into(),
+        };
+        let x = g.input_batch(3);
+        let y = g.forward_ref(&x, 3);
+        assert_eq!(y.len(), 3 * 6, "3 rows × (2·3 cached rows)");
     }
 }

@@ -68,6 +68,11 @@ pub enum BSource {
     /// residual `AddResidual`) — padded at run time where the target
     /// requires it.
     Stash(usize),
+    /// A stash slot's activation **transposed** at run time (`MatMulT`
+    /// over a row-major KV cache): the slot holds the logical `n × k`
+    /// matrix and the host transposes it into the GeMM's `k × n` B
+    /// operand before padding.
+    StashT(usize),
     /// A single constant word (layer norm's epsilon), bit patterns fixed
     /// at lowering time.
     Eps,
@@ -113,6 +118,13 @@ pub enum Step {
     Stash { slot: usize },
     /// Restore the activation saved in a numbered host slot.
     Recall { slot: usize },
+    /// Append the running activation's rows to a numbered host slot
+    /// (creating it when absent) — the KV-cache write.
+    AppendStash { slot: usize },
+    /// Causal attention mask over the `rows × cols` running activation
+    /// (host step): entries `j > i + (cols − rows)` of row `i` become
+    /// [`crate::dnn::graph::NEG_MASK`].
+    CausalMask { rows: usize, cols: usize },
 }
 
 /// The whole lowered model.
@@ -120,6 +132,10 @@ pub enum Step {
 pub struct LoweredGraph {
     pub steps: Vec<Step>,
     pub batch: usize,
+    /// KV-cache slots the schedule appends to, `(slot, features)` in
+    /// first-append order — the slots [`lower_serving`] seeds for each
+    /// decode step.
+    pub append_slots: Vec<(usize, usize)>,
 }
 
 impl LoweredGraph {
@@ -189,6 +205,22 @@ pub fn lower_graph(
     graph: &DnnGraph,
     batch: usize,
 ) -> Result<LoweredGraph, LowerError> {
+    lower_graph_seeded(machine, graph, batch, &HashMap::new())
+}
+
+/// [`lower_graph`] with pre-seeded stash-slot shapes: `seed` maps slot →
+/// `(rows, features)` the slot already holds when the schedule starts.
+/// This is how a decode step lowers against a **persistent KV cache**:
+/// the same graph, at `batch = 1`, with each append slot seeded to the
+/// rows accumulated by the prefill and earlier decode steps — every
+/// attention GeMM then comes out rectangular (`1 × d` against the cached
+/// `n × d`).
+pub fn lower_graph_seeded(
+    machine: &Machine,
+    graph: &DnnGraph,
+    batch: usize,
+    seed: &HashMap<usize, (usize, usize)>,
+) -> Result<LoweredGraph, LowerError> {
     let is_gamma = matches!(machine, Machine::Gamma(_));
     let mult = if is_gamma { GAMMA_TILE } else { 1 };
     let mut steps = Vec::new();
@@ -196,7 +228,8 @@ pub fn lower_graph(
     let mut rows = batch;
     let mut shape: Option<(usize, usize, usize)> = None;
     // Stash slots: (rows, features) at lowering time.
-    let mut slots: HashMap<usize, (usize, usize)> = HashMap::new();
+    let mut slots: HashMap<usize, (usize, usize)> = seed.clone();
+    let mut append_slots: Vec<(usize, usize)> = Vec::new();
     for (idx, layer) in graph.layers.iter().enumerate() {
         match layer {
             Layer::Dense {
@@ -317,6 +350,62 @@ pub fn lower_graph(
                 feat = n;
                 shape = None;
             }
+            Layer::MatMulT { slot, scale } => {
+                let Some(&(brows, bcols)) = slots.get(slot) else {
+                    return Err(LowerError::BadGraph(idx, format!("matmult reads empty slot {slot}")));
+                };
+                if feat != bcols {
+                    return Err(LowerError::BadGraph(
+                        idx,
+                        format!("matmult shapes: {rows}x{feat} · ({brows}x{bcols})^T"),
+                    ));
+                }
+                let (m, k, n) = (rows, feat, brows);
+                let (pm, pk, pn) = (pad_to(m, mult), pad_to(k, mult), pad_to(n, mult));
+                let op = Operator::Gemm(GemmParams::new(pm, pk, pn));
+                let lowered = uma::lower(machine, &op)?;
+                steps.push(Step::Mapped(LoweredLayer {
+                    name: format!("matmult{idx}_{m}x{k}x{n}"),
+                    op,
+                    lowered,
+                    logical: (m, k, n),
+                    weights: Vec::new(),
+                    bias: Vec::new(),
+                    relu: false,
+                    bias_base: None,
+                    conv: None,
+                    b_source: BSource::StashT(*slot),
+                    scale: *scale,
+                }));
+                feat = n;
+                shape = None;
+            }
+            Layer::CausalMask => {
+                if rows > feat {
+                    return Err(LowerError::BadGraph(
+                        idx,
+                        format!("causal mask needs rows ≤ cols, got {rows}x{feat}"),
+                    ));
+                }
+                steps.push(Step::CausalMask { rows, cols: feat });
+            }
+            Layer::AppendStash { slot } => {
+                if let Some(&(srows, scols)) = slots.get(slot) {
+                    if scols != feat {
+                        return Err(LowerError::BadGraph(
+                            idx,
+                            format!("append width {feat} into slot {slot} of width {scols}"),
+                        ));
+                    }
+                    slots.insert(*slot, (srows + rows, feat));
+                } else {
+                    slots.insert(*slot, (rows, feat));
+                }
+                if !append_slots.iter().any(|&(s, _)| s == *slot) {
+                    append_slots.push((*slot, feat));
+                }
+                steps.push(Step::AppendStash { slot: *slot });
+            }
             Layer::Softmax
             | Layer::LayerNorm { .. }
             | Layer::Gelu
@@ -399,7 +488,11 @@ pub fn lower_graph(
             }
         }
     }
-    Ok(LoweredGraph { steps, batch })
+    Ok(LoweredGraph {
+        steps,
+        batch,
+        append_slots,
+    })
 }
 
 /// The machine-independent operator sequence of `graph` at `batch` rows —
@@ -407,10 +500,37 @@ pub fn lower_graph(
 /// unpadded problem stays sound).  This is the single source the DSE
 /// pre-filter sums its per-operator `Roofline::op_cycles` bound over.
 pub fn roofline_ops(graph: &DnnGraph, batch: usize) -> Vec<Operator> {
+    roofline_walk(graph, batch, &HashMap::new()).0
+}
+
+/// The machine-independent operator sequence of a full **serving** run:
+/// one prefill pass at `seq` rows plus `decode_steps` single-row decode
+/// passes, each seeded with the KV-cache rows accumulated so far —
+/// mirroring [`lower_serving`]'s schedules exactly, so the analytical
+/// pre-filter bounds the same work the simulator performs.
+pub fn serving_roofline_ops(graph: &DnnGraph, seq: usize, decode_steps: usize) -> Vec<Operator> {
+    let (mut ops, appends) = roofline_walk(graph, seq, &HashMap::new());
+    for t in 0..decode_steps {
+        let seed: HashMap<usize, (usize, usize)> =
+            appends.iter().map(|&(slot, feat)| (slot, (seq + t, feat))).collect();
+        ops.extend(roofline_walk(graph, 1, &seed).0);
+    }
+    ops
+}
+
+/// Shared shape walk behind [`roofline_ops`] / [`serving_roofline_ops`]:
+/// returns the operator list plus the append slots `(slot, features)`
+/// encountered, in first-append order.
+fn roofline_walk(
+    graph: &DnnGraph,
+    batch: usize,
+    seed: &HashMap<usize, (usize, usize)>,
+) -> (Vec<Operator>, Vec<(usize, usize)>) {
     let mut ops = Vec::new();
     let mut feat = graph.input_features;
     let mut rows = batch;
-    let mut slots: HashMap<usize, (usize, usize)> = HashMap::new();
+    let mut slots: HashMap<usize, (usize, usize)> = seed.clone();
+    let mut appends: Vec<(usize, usize)> = Vec::new();
     for layer in &graph.layers {
         match layer {
             Layer::Dense {
@@ -433,6 +553,20 @@ pub fn roofline_ops(graph: &DnnGraph, batch: usize) -> Vec<Operator> {
                 debug_assert_eq!(feat, brows);
                 ops.push(Operator::Gemm(GemmParams::new(rows, feat, bcols)));
                 feat = bcols;
+            }
+            Layer::MatMulT { slot, .. } => {
+                let (brows, bcols) = slots.get(slot).copied().unwrap_or((feat, feat));
+                debug_assert_eq!(feat, bcols);
+                ops.push(Operator::Gemm(GemmParams::new(rows, feat, brows)));
+                feat = brows;
+            }
+            Layer::CausalMask => {}
+            Layer::AppendStash { slot } => {
+                let srows = slots.get(slot).map_or(0, |&(r, _)| r);
+                slots.insert(*slot, (srows + rows, feat));
+                if !appends.iter().any(|&(s, _)| s == *slot) {
+                    appends.push((*slot, feat));
+                }
             }
             Layer::Softmax => ops.push(Operator::Softmax { rows, cols: feat }),
             Layer::LayerNorm { eps } => ops.push(Operator::LayerNorm {
@@ -457,7 +591,7 @@ pub fn roofline_ops(graph: &DnnGraph, batch: usize) -> Vec<Operator> {
             }
         }
     }
-    ops
+    (ops, appends)
 }
 
 /// Host-side execution state threaded between schedule steps: the
@@ -529,6 +663,26 @@ pub fn run_step_captured(
                 .clone();
             return Ok(None);
         }
+        Step::AppendStash { slot } => {
+            let StepCtx { act, stash } = ctx;
+            match stash.get_mut(slot) {
+                Some(v) => v.extend_from_slice(act),
+                None => {
+                    stash.insert(*slot, act.clone());
+                }
+            }
+            return Ok(None);
+        }
+        Step::CausalMask { rows, cols } => {
+            debug_assert_eq!(ctx.act.len(), rows * cols, "causal mask shape");
+            let off = cols - rows;
+            for i in 0..*rows {
+                for v in &mut ctx.act[i * cols + i + off + 1..(i + 1) * cols] {
+                    *v = crate::dnn::graph::NEG_MASK;
+                }
+            }
+            return Ok(None);
+        }
     };
     {
         let act = &mut ctx.act;
@@ -579,6 +733,16 @@ pub fn run_step_captured(
                         s.clone()
                     }
                 }
+            }
+            BSource::StashT(slot) => {
+                // MatMulT: the slot holds the logical n×k cache (one row
+                // per cached token); transpose on the host into the
+                // GeMM's k×n B operand, then pad.
+                let s = stash.get(&slot).expect("lower_graph validated stash slots");
+                assert_eq!(s.len(), n * k, "cached operand shape at {}", ll.name);
+                let p = gemm.as_ref().expect("StashT backs a GeMM");
+                let t = crate::mapping::rowwise::transpose_ref(n, k, s);
+                pad_matrix(&t, k, n, p.k, p.n)
             }
             BSource::None => Vec::new(),
         };
@@ -699,16 +863,30 @@ pub fn run_schedule_captured(
     input: &[f32],
     mode: SimMode,
     max_cycles: u64,
+    cap: Option<&mut ScheduleCapture>,
+) -> Result<ScheduleReport, LowerError> {
+    let mut ctx = StepCtx::new(input);
+    run_steps_captured(machine, lg, &mut ctx, mode, max_cycles, cap)
+}
+
+/// Run a schedule against a **caller-owned** [`StepCtx`]: the context's
+/// stash slots persist across invocations, which is exactly how the KV
+/// cache survives from the prefill schedule into each decode step.
+fn run_steps_captured(
+    machine: &Machine,
+    lg: &LoweredGraph,
+    ctx: &mut StepCtx,
+    mode: SimMode,
+    max_cycles: u64,
     mut cap: Option<&mut ScheduleCapture>,
 ) -> Result<ScheduleReport, LowerError> {
     let mut report = ScheduleReport::default();
-    let mut ctx = StepCtx::new(input);
     for step in &lg.steps {
         if let Some(lr) = run_step_captured(
             machine,
             step,
             lg.batch,
-            &mut ctx,
+            ctx,
             mode,
             max_cycles,
             cap.as_deref_mut(),
@@ -718,8 +896,153 @@ pub fn run_schedule_captured(
             report.per_layer.push(lr);
         }
     }
-    report.output = ctx.act;
+    report.output = ctx.act.clone();
     Ok(report)
+}
+
+// ---------------------------------------------------------------------
+// Serving: prefill + KV-cached decode
+// ---------------------------------------------------------------------
+
+/// A phase-structured serving schedule: one **prefill** lowering at
+/// `seq` rows plus one **decode** lowering per generated token, each
+/// decode step lowered at a single row with the KV-cache slots seeded to
+/// the rows accumulated so far (`seq + t`).  All schedules share the
+/// graph, so they have identical step counts — one [`Step`] per graph
+/// layer — and any platform partition of the prefill applies verbatim to
+/// every decode step.
+#[derive(Debug, Clone)]
+pub struct ServingSchedule {
+    pub prefill: LoweredGraph,
+    /// One single-row schedule per decode step, in generation order.
+    pub decode: Vec<LoweredGraph>,
+    /// Prompt length the prefill was lowered at.
+    pub seq: usize,
+}
+
+/// Lower `graph` for the full serving loop on `machine`: prefill at
+/// `seq` rows, then `decode_steps` single-row schedules whose KV-cache
+/// slots are seeded to `(seq + t, features)`.
+pub fn lower_serving(
+    machine: &Machine,
+    graph: &DnnGraph,
+    seq: usize,
+    decode_steps: usize,
+) -> Result<ServingSchedule, LowerError> {
+    let prefill = lower_graph(machine, graph, seq)?;
+    let mut decode = Vec::with_capacity(decode_steps);
+    for t in 0..decode_steps {
+        let seed: HashMap<usize, (usize, usize)> = prefill
+            .append_slots
+            .iter()
+            .map(|&(slot, feat)| (slot, (seq + t, feat)))
+            .collect();
+        decode.push(lower_graph_seeded(machine, graph, 1, &seed)?);
+    }
+    Ok(ServingSchedule {
+        prefill,
+        decode,
+        seq,
+    })
+}
+
+/// Split a teacher-forced `(seq + steps) × feat` input into the prompt
+/// (`seq` rows) and one single-row input per decode step — decode step
+/// `t` is fed row `seq + t`, so the assembled serving output is directly
+/// comparable to a from-scratch forward pass over the full input.
+pub fn split_serving_input(full: &[f32], feat: usize, seq: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    assert!(feat > 0 && full.len() % feat == 0 && full.len() / feat >= seq);
+    let steps = full.len() / feat - seq;
+    let prompt = full[..seq * feat].to_vec();
+    let decode = (0..steps)
+        .map(|t| full[(seq + t) * feat..(seq + t + 1) * feat].to_vec())
+        .collect();
+    (prompt, decode)
+}
+
+/// Results of a full serving run: the prefill report plus one report per
+/// decoded token.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub prefill: ScheduleReport,
+    pub decode: Vec<ScheduleReport>,
+    pub total_cycles: u64,
+    pub total_instructions: u64,
+}
+
+impl ServingReport {
+    /// Cycles spent in the decode phase (all tokens).
+    pub fn decode_cycles(&self) -> u64 {
+        self.decode.iter().map(|d| d.total_cycles).sum()
+    }
+
+    /// The serving deployment's objective: decode cycles per generated
+    /// token.  `None` when no tokens were decoded.
+    pub fn cycles_per_token(&self) -> Option<f64> {
+        (!self.decode.is_empty())
+            .then(|| self.decode_cycles() as f64 / self.decode.len() as f64)
+    }
+
+    /// Prefill output rows followed by one row per decoded token —
+    /// row-compatible with `forward_ref` over the extended sequence.
+    pub fn assembled_output(&self) -> Vec<f32> {
+        let mut out = self.prefill.output.clone();
+        for d in &self.decode {
+            out.extend_from_slice(&d.output);
+        }
+        out
+    }
+}
+
+/// Run a serving schedule: the prefill populates the KV cache, then each
+/// decode step runs its single-row schedule against the **same**
+/// persistent [`StepCtx`] — appending one row per step to every cache
+/// slot — with `decode_inputs[t]` as the teacher-forced token input.
+pub fn run_serving(
+    machine: &Machine,
+    sched: &ServingSchedule,
+    prompt: &[f32],
+    decode_inputs: &[Vec<f32>],
+    mode: SimMode,
+    max_cycles: u64,
+) -> Result<ServingReport, LowerError> {
+    run_serving_captured(machine, sched, prompt, decode_inputs, mode, max_cycles, None)
+}
+
+/// [`run_serving`] with an optional [`ScheduleCapture`]: one concatenated
+/// trace/stats timeline across the prefill and every decode step.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serving_captured(
+    machine: &Machine,
+    sched: &ServingSchedule,
+    prompt: &[f32],
+    decode_inputs: &[Vec<f32>],
+    mode: SimMode,
+    max_cycles: u64,
+    mut cap: Option<&mut ScheduleCapture>,
+) -> Result<ServingReport, LowerError> {
+    assert_eq!(
+        decode_inputs.len(),
+        sched.decode.len(),
+        "one teacher-forced input per decode step"
+    );
+    let mut ctx = StepCtx::new(prompt);
+    let prefill =
+        run_steps_captured(machine, &sched.prefill, &mut ctx, mode, max_cycles, cap.as_deref_mut())?;
+    let mut decode = Vec::with_capacity(sched.decode.len());
+    for (lg, input) in sched.decode.iter().zip(decode_inputs) {
+        ctx.act = input.clone();
+        decode.push(run_steps_captured(machine, lg, &mut ctx, mode, max_cycles, cap.as_deref_mut())?);
+    }
+    let total_cycles = prefill.total_cycles + decode.iter().map(|d| d.total_cycles).sum::<u64>();
+    let total_instructions =
+        prefill.total_instructions + decode.iter().map(|d| d.total_instructions).sum::<u64>();
+    Ok(ServingReport {
+        prefill,
+        decode,
+        total_cycles,
+        total_instructions,
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -823,6 +1146,18 @@ fn trace_layers(graph: &DnnGraph, batch: usize) -> LayerTrace {
                 feat = bcols;
                 (c, 0)
             }
+            Layer::MatMulT { slot, .. } => {
+                let (brows, _) = slots.get(slot).copied().unwrap_or((feat, feat));
+                let c = (rows * feat * brows) as u64;
+                feat = brows;
+                (c, 0)
+            }
+            Layer::CausalMask => (0, 0),
+            Layer::AppendStash { slot } => {
+                let srows = slots.get(slot).map_or(0, |&(r, _)| r);
+                slots.insert(*slot, (srows + rows, feat));
+                (0, 0)
+            }
             Layer::Softmax | Layer::LayerNorm { .. } | Layer::Gelu => ((rows * feat) as u64, 0),
             Layer::AddResidual { .. } => ((rows * feat) as u64, 0),
             Layer::Transpose => {
@@ -865,8 +1200,13 @@ fn legal_boundaries(graph: &DnnGraph) -> Vec<bool> {
     for (idx, layer) in graph.layers.iter().enumerate() {
         let read = match layer {
             Layer::MatMul { slot, .. }
+            | Layer::MatMulT { slot, .. }
             | Layer::AddResidual { slot }
-            | Layer::Recall { slot } => Some(*slot),
+            | Layer::Recall { slot }
+            // An append extends what an earlier write left in the slot,
+            // so it reads the slot too — KV-cache live ranges pin each
+            // attention block onto one chip.
+            | Layer::AppendStash { slot } => Some(*slot),
             _ => None,
         };
         if let Some(slot) = read {
@@ -878,7 +1218,7 @@ fn legal_boundaries(graph: &DnnGraph) -> Vec<bool> {
                 }
             }
         }
-        if let Layer::Stash { slot } = layer {
+        if let Layer::Stash { slot } | Layer::AppendStash { slot } = layer {
             last_write.insert(*slot, idx);
         }
     }
@@ -1318,6 +1658,128 @@ mod tests {
             name: "empty".into(),
         };
         assert!(partition_graph(&empty, 4, 2).is_err());
+    }
+
+    // ----------------------------------------------------- serving
+
+    #[test]
+    fn parameterized_transformer_prefill_matches_reference() {
+        let g = DnnGraph::transformer(2, 2);
+        let seq = 4;
+        let x = g.input_batch(seq);
+        let want = g.forward_ref(&x, seq);
+        for t in [
+            TargetConfig::Oma(OmaConfig::default()),
+            TargetConfig::Systolic(SystolicConfig::new(2, 2)),
+        ] {
+            let machine = t.build().unwrap();
+            let lg = lower_graph(&machine, &g, seq).unwrap();
+            assert_eq!(lg.steps.len(), g.layers.len(), "one step per graph layer");
+            let rep =
+                run_schedule(&machine, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+            assert_eq!(rep.output, want, "bit-exact on {}", machine.name());
+        }
+        let gamma = TargetConfig::Gamma(GammaConfig::new(1)).build().unwrap();
+        let lg = lower_graph(&gamma, &g, seq).unwrap();
+        let rep = run_schedule(&gamma, &lg, &x, SimMode::Functional, 500_000_000).unwrap();
+        assert!(max_abs_diff(&rep.output, &want) < 1e-3);
+    }
+
+    #[test]
+    fn kv_cached_decode_equals_extended_prefill() {
+        // The serving oracle at the lowering layer: prefill(seq) plus t
+        // incremental single-row decode steps produce, bit-for-bit, the
+        // rows a from-scratch prefill of the extended sequence produces.
+        let g = DnnGraph::transformer(1, 2);
+        let (seq, steps) = (3, 2);
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let sched = lower_serving(&machine, &g, seq, steps).unwrap();
+        assert_eq!(sched.decode.len(), steps);
+        for lg in &sched.decode {
+            assert_eq!(lg.batch, 1);
+            assert_eq!(lg.steps.len(), sched.prefill.steps.len());
+        }
+        // 2 heads × (K, V) slots for the single layer.
+        assert_eq!(sched.prefill.append_slots.len(), 4);
+        let full = g.input_batch(seq + steps);
+        let (prompt, dec) = split_serving_input(&full, g.input_features, seq);
+        let rep = run_serving(&machine, &sched, &prompt, &dec, SimMode::Functional, 500_000_000)
+            .unwrap();
+        let lg_full = lower_graph(&machine, &g, seq + steps).unwrap();
+        let scratch =
+            run_schedule(&machine, &lg_full, &full, SimMode::Functional, 500_000_000).unwrap();
+        assert_eq!(rep.assembled_output(), scratch.output, "decode ≡ extended prefill");
+        assert_eq!(rep.assembled_output(), g.forward_ref(&full, seq + steps));
+    }
+
+    #[test]
+    fn serving_timed_backends_agree_and_split_phase_cycles() {
+        let g = DnnGraph::transformer(2, 2);
+        let machine = TargetConfig::Systolic(SystolicConfig::new(2, 2)).build().unwrap();
+        let sched = lower_serving(&machine, &g, 4, 2).unwrap();
+        let full = g.input_batch(6);
+        let (prompt, dec) = split_serving_input(&full, g.input_features, 4);
+        let run = |backend| {
+            run_serving(
+                &machine,
+                &sched,
+                &prompt,
+                &dec,
+                SimMode::Timed(backend),
+                500_000_000,
+            )
+            .unwrap()
+        };
+        let cs = run(BackendKind::CycleStepped);
+        let ev = run(BackendKind::EventDriven);
+        assert!(cs.prefill.total_cycles > 0 && cs.decode_cycles() > 0);
+        assert_eq!(cs.total_cycles, ev.total_cycles);
+        assert_eq!(cs.assembled_output(), ev.assembled_output());
+        assert_eq!(cs.total_cycles, cs.prefill.total_cycles + cs.decode_cycles());
+        assert!(cs.cycles_per_token().unwrap() > 0.0);
+        // Decoding one token is cheaper than prefilling four.
+        assert!(cs.decode[0].total_cycles < cs.prefill.total_cycles);
+    }
+
+    #[test]
+    fn serving_roofline_mirrors_the_schedules() {
+        let g = DnnGraph::transformer(2, 2);
+        let prefill_ops = roofline_ops(&g, 4);
+        let serving = serving_roofline_ops(&g, 4, 3);
+        // Each of the 3 decode walks emits the same operator count as the
+        // prefill walk (ops don't appear or vanish with the row count).
+        assert_eq!(serving.len(), prefill_ops.len() * 4);
+        // Decode attention GeMMs are rectangular: step 0 scores one query
+        // row against the 5-deep cache.
+        assert!(serving
+            .iter()
+            .any(|o| matches!(o, Operator::Gemm(p) if p.m == 1 && p.n == 5)));
+        assert!(serving
+            .iter()
+            .any(|o| matches!(o, Operator::Gemm(p) if p.m == 1 && p.k == 5)));
+    }
+
+    #[test]
+    fn causal_mask_and_matmult_report_graph_errors() {
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let g = DnnGraph {
+            input_features: 2,
+            layers: vec![Layer::CausalMask],
+            name: "cm".into(),
+        };
+        assert!(matches!(
+            lower_graph(&machine, &g, 3),
+            Err(LowerError::BadGraph(0, _))
+        ));
+        let g2 = DnnGraph {
+            input_features: 2,
+            layers: vec![Layer::MatMulT { slot: 0, scale: 1.0 }],
+            name: "mt".into(),
+        };
+        assert!(matches!(
+            lower_graph(&machine, &g2, 2),
+            Err(LowerError::BadGraph(0, _))
+        ));
     }
 
     #[test]

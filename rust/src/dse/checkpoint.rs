@@ -303,6 +303,8 @@ mod tests {
                 wall_micros: 17,
                 error: None,
                 area_proxy: 16.0,
+                prefill_cycles: None,
+                cycles_per_token: None,
             },
             cached: id % 2 == 0,
         }

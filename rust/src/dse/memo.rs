@@ -162,6 +162,8 @@ mod tests {
             wall_micros: 0,
             error: None,
             area_proxy: 1.0,
+            prefill_cycles: None,
+            cycles_per_token: None,
         }
     }
 

@@ -209,8 +209,8 @@ impl DseReport {
         let mut t = Table::new(
             title,
             &[
-                "target", "workload", "backend", "area", "bound", "cycles", "util", "src",
-                "pareto",
+                "target", "workload", "backend", "area", "bound", "cycles", "util", "prefill",
+                "cyc/tok", "src", "pareto",
             ],
         );
         for (i, p) in self.points.iter().enumerate() {
@@ -226,6 +226,14 @@ impl DseReport {
                     p.result.cycles.to_string()
                 },
                 format!("{:.1}%", p.result.utilization * 100.0),
+                // Serving-phase metrics exist only for decode jobs; a dash
+                // keeps the non-serving rows visually quiet.
+                p.result
+                    .prefill_cycles
+                    .map_or_else(|| "-".to_string(), |c| c.to_string()),
+                p.result
+                    .cycles_per_token
+                    .map_or_else(|| "-".to_string(), |c| format!("{c:.1}")),
                 if p.cached { "cache" } else { "sim" }.to_string(),
                 if frontier.contains(&i) { "★" } else { "" }.to_string(),
             ]);

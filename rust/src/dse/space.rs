@@ -36,12 +36,19 @@ pub struct DseSpace {
     /// the memo serves the second of each pair from cache).
     pub backends: Vec<BackendKind>,
     pub max_cycles: u64,
-    /// When set, the sweep additionally evaluates the `tiny_transformer`
-    /// workload at this sequence length on every architecture config
-    /// (without the OMA's GeMM tile/order knobs — the transformer
-    /// schedule fixes its own mapping), so the exploration ranks
-    /// candidates on a full attention block, not just a square GeMM.
+    /// When set, the sweep additionally evaluates transformer workloads
+    /// at this sequence length on every architecture config (without the
+    /// OMA's GeMM tile/order knobs — the transformer schedule fixes its
+    /// own mapping), so the exploration ranks candidates on a full
+    /// attention block, not just a square GeMM.
     pub transformer_seq: Option<usize>,
+    /// Transformer model shapes `(layers, heads, decode_steps)` the
+    /// sibling sweep crosses with the architecture axes.  `(1, 1, 0)` is
+    /// the legacy single-block prefill; shapes with `decode_steps > 0`
+    /// price the KV-cached serving loop and fill the report's
+    /// prefill/cycles-per-token columns.  Empty falls back to the legacy
+    /// shape alone (when `transformer_seq` is set).
+    pub transformer_shapes: Vec<(usize, usize, usize)>,
     /// Platform sizes (chip counts) for the platform sibling sweep —
     /// empty disables it.  Each chip count is crossed with every fabric
     /// hop latency in [`Self::platform_hops`] over the systolic grids,
@@ -66,6 +73,7 @@ impl DseSpace {
             backends: vec![BackendKind::CycleStepped, BackendKind::EventDriven],
             max_cycles: 500_000_000,
             transformer_seq: Some(8),
+            transformer_shapes: vec![(1, 1, 0), (2, 2, 4)],
             platform_chips: vec![1, 2, 4],
             platform_hops: vec![4],
         }
@@ -83,6 +91,7 @@ impl DseSpace {
             backends: vec![BackendKind::EventDriven],
             max_cycles: 500_000_000,
             transformer_seq: None,
+            transformer_shapes: Vec::new(),
             platform_chips: Vec::new(),
             platform_hops: Vec::new(),
         }
@@ -245,52 +254,63 @@ impl DseSpace {
     }
 
     /// The transformer candidates: the same architecture axes (minus the
-    /// OMA's GeMM-only mapping knobs) over the `tiny_transformer`
-    /// workload at [`Self::transformer_seq`].  Kept as a **sibling
-    /// exploration** rather than folded into [`Self::enumerate`]: the
-    /// pruning incumbent is a *cycle* count, so mixing workloads in one
-    /// sweep would let the cheaper workload's best cut the other's
-    /// candidates.  Empty when `transformer_seq` is `None`.
+    /// OMA's GeMM-only mapping knobs) over every serving shape in
+    /// [`Self::transformer_shapes`] at [`Self::transformer_seq`].  Kept
+    /// as a **sibling exploration** rather than folded into
+    /// [`Self::enumerate`]: the pruning incumbent is a *cycle* count, so
+    /// mixing workloads in one sweep would let the cheaper workload's
+    /// best cut the other's candidates.  The same caveat applies *across
+    /// shapes* — candidates are emitted shape-contiguous so callers (the
+    /// CLI does) can split them into one pruned exploration per shape.
+    /// Empty when `transformer_seq` is `None`.
     pub fn enumerate_transformer(&self) -> Vec<JobSpec> {
         let Some(seq) = self.transformer_seq else {
             return Vec::new();
         };
-        let wl = Workload::Transformer { seq };
-        let mut specs = Vec::new();
-        let push = |specs: &mut Vec<JobSpec>, target: TargetSpec, backend: BackendKind| {
-            specs.push(JobSpec {
-                id: specs.len() as u64,
-                target,
-                workload: wl.clone(),
-                mode: SimModeSpec::Timed,
-                backend,
-                max_cycles: self.max_cycles,
-                platform: None,
-                deadline_ms: None,
-            });
+        let legacy = [(1, 1, 0)];
+        let shapes: &[(usize, usize, usize)] = if self.transformer_shapes.is_empty() {
+            &legacy
+        } else {
+            &self.transformer_shapes
         };
-        if self.include_oma {
-            for cache in OmaConfig::enumerate_cache_variants() {
-                for &backend in &self.backends {
-                    push(
-                        &mut specs,
-                        TargetSpec::Oma {
-                            cache,
-                            mac_latency: None,
-                        },
-                        backend,
-                    );
+        let mut specs = Vec::new();
+        for &(layers, heads, decode_steps) in shapes {
+            let wl = Workload::Transformer { seq, layers, heads, decode_steps };
+            let push = |specs: &mut Vec<JobSpec>, target: TargetSpec, backend: BackendKind| {
+                specs.push(JobSpec {
+                    id: specs.len() as u64,
+                    target,
+                    workload: wl.clone(),
+                    mode: SimModeSpec::Timed,
+                    backend,
+                    max_cycles: self.max_cycles,
+                    platform: None,
+                    deadline_ms: None,
+                });
+            };
+            if self.include_oma {
+                for cache in OmaConfig::enumerate_cache_variants() {
+                    for &backend in &self.backends {
+                        push(
+                            &mut specs,
+                            TargetSpec::Oma {
+                                cache,
+                                mac_latency: None,
+                            },
+                            backend,
+                        );
+                    }
                 }
             }
-        }
-        for (rows, cols) in SystolicConfig::enumerate_grids(self.max_edge) {
-            for &backend in &self.backends {
-                push(&mut specs, TargetSpec::Systolic { rows, cols }, backend);
+            for (rows, cols) in SystolicConfig::enumerate_grids(self.max_edge) {
+                for &backend in &self.backends {
+                    push(&mut specs, TargetSpec::Systolic { rows, cols }, backend);
+                }
             }
-        }
-        for units in GammaConfig::enumerate_units(self.max_units) {
-            for &backend in &self.backends {
-                push(&mut specs, TargetSpec::Gamma { units }, backend);
+            for units in GammaConfig::enumerate_units(self.max_units) {
+                for &backend in &self.backends {
+                    push(&mut specs, TargetSpec::Gamma { units }, backend);
+                }
             }
         }
         specs
@@ -315,7 +335,12 @@ impl DseSpace {
                     specs.push(JobSpec {
                         id: specs.len() as u64,
                         target: TargetSpec::Systolic { rows, cols },
-                        workload: Workload::Transformer { seq },
+                        workload: Workload::Transformer {
+                            seq,
+                            layers: 1,
+                            heads: 1,
+                            decode_steps: 0,
+                        },
                         mode: SimModeSpec::Timed,
                         backend: BackendKind::ParallelEvent,
                         max_cycles: self.max_cycles,
@@ -457,12 +482,13 @@ mod tests {
             assert_eq!(s.id, i as u64);
         }
         // The sibling transformer sweep covers every arch config once per
-        // backend: (2 + 16 + 4) · 2 = 44.
+        // backend and serving shape: (2 + 16 + 4) · 2 backends · 2 shapes
+        // = 88.
         let tf = space.enumerate_transformer();
-        assert_eq!(tf.len(), 44);
+        assert_eq!(tf.len(), 88);
         assert!(tf
             .iter()
-            .all(|s| matches!(s.workload, Workload::Transformer { seq: 8 })));
+            .all(|s| matches!(s.workload, Workload::Transformer { seq: 8, .. })));
         for (i, s) in tf.iter().enumerate() {
             assert_eq!(s.id, i as u64);
         }

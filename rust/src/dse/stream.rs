@@ -624,6 +624,8 @@ pub fn explore_source(
                         wall_micros: 0,
                         error: Some("worker pool returned no result for this job".into()),
                         area_proxy: spec.target.area_proxy(),
+                        prefill_cycles: None,
+                        cycles_per_token: None,
                     });
                 let cached = !ran_ids.contains(&spec.id);
                 if cached {
@@ -953,6 +955,8 @@ mod tests {
                 wall_micros: 0,
                 error: None,
                 area_proxy: 1.0,
+                prefill_cycles: None,
+                cycles_per_token: None,
             },
             cached: false,
         };

@@ -39,6 +39,7 @@ COMMANDS:
       Lower a GeMM and print the disassembly head.
   simulate --target <oma|systolic|gamma> [--workload gemm|mlp|transformer]
            [--m/--k/--n N] [--tile N] [--seq N]
+           [--layers N] [--heads N] [--decode-steps N]
            [--mode functional|timed|estimate] [--backend cycle|event|parallel]
            [--rows/--cols/--units N] [--arch-file <file.acadl>]
            [--platform CHIPS] [--hop-latency N] [--microbatches N]
@@ -46,7 +47,15 @@ COMMANDS:
            [--trace <file.json>] [--stats-json <file.json>]
       Simulate a workload, print the result row as JSON.  `gemm` takes
       --m/--k/--n/--tile; `mlp` and `transformer` take --seq (batch rows /
-      sequence length).  The timing backends report identical cycles;
+      sequence length).  `transformer` additionally takes --layers and
+      --heads (model shape; heads must divide the model width 16) and
+      --decode-steps: a nonzero --decode-steps makes the run a *serving*
+      scenario — a prefill over the --seq prompt populates per-layer KV
+      caches, then each decode step runs one token against the growing
+      cache — and the result row gains `prefill_cycles` plus
+      `cycles_per_token` (decode cycles ÷ decoded tokens, the serving
+      latency headline; see examples/README.md for a walkthrough).
+      The timing backends report identical cycles;
       `event` skips idle cycles (faster on memory-bound workloads).
       --trace writes a Chrome-trace JSON span timeline of the (timed) run
       (open it at https://ui.perfetto.dev); --stats-json writes the full
@@ -63,7 +72,8 @@ COMMANDS:
       `deadline exceeded` error instead of running away.
   trace --out <file.json> [--stats-json <file.json>]
         [--target … | --arch-file <file.acadl>] [--workload gemm|mlp|transformer]
-        [--m/--k/--n/--tile/--seq N] [--backend cycle|event|parallel]
+        [--m/--k/--n/--tile/--seq N] [--layers/--heads/--decode-steps N]
+        [--backend cycle|event|parallel]
         [--platform CHIPS] [--hop-latency N] [--microbatches N] [--threads N]
         [--jobs N] [--deadline-ms N]
       Run a timed simulation and write its structured trace as Chrome-trace
@@ -91,8 +101,11 @@ COMMANDS:
       continues from such a file; --stop-after ends the run at the next
       window boundary (interruptible / sharded sweeps); --max-points
       bounds the non-frontier rows kept for the report table.  The
-      built-in space also sweeps 1/2/4-chip platforms over the sharded
-      transformer (the cycles-vs-chips Pareto axis).
+      built-in space also runs sibling transformer sweeps — one pruned
+      exploration per serving shape, with prefill-cycles and
+      cycles-per-token columns for decode shapes — and sweeps 1/2/4-chip
+      platforms over the sharded transformer (the cycles-vs-chips Pareto
+      axis).
   serve [--addr HOST:PORT] [--workers N] [--jobs N] [--arch-file <file.acadl>]
         [--max-connections N] [--queue-depth N] [--idle-timeout-ms N]
         [--deadline-ms N]
@@ -124,15 +137,17 @@ fn allowed_flags(cmd: &str) -> &'static [&'static str] {
         ],
         "simulate" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "mode", "backend",
-            "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
-            "threads", "jobs", "deadline-ms", "trace", "stats-json",
+            "arch-file", "workload", "seq", "layers", "heads", "decode-steps", "platform",
+            "hop-latency", "microbatches", "threads", "jobs", "deadline-ms", "trace",
+            "stats-json",
         ],
         // `trace` is `simulate` locked to timed mode, with a mandatory
         // --out destination (so no --mode flag here).
         "trace" => &[
             "target", "rows", "cols", "units", "m", "k", "n", "tile", "backend",
-            "arch-file", "workload", "seq", "platform", "hop-latency", "microbatches",
-            "threads", "jobs", "deadline-ms", "out", "stats-json",
+            "arch-file", "workload", "seq", "layers", "heads", "decode-steps", "platform",
+            "hop-latency", "microbatches", "threads", "jobs", "deadline-ms", "out",
+            "stats-json",
         ],
         "sweep" => &["dim", "workers", "backend", "jobs"],
         "dse" => &[
@@ -332,6 +347,16 @@ const COMMANDS: &[&str] = &[
     "golden", "help", "--help", "-h",
 ];
 
+/// `--microbatches` shares the wire decoder's bounds (1..=4096): a zero
+/// pipeline depth or an absurd one is a spec error, not something to
+/// clamp silently.
+fn check_microbatches(mb: usize) -> Result<usize, String> {
+    if !(1..=4096).contains(&mb) {
+        return Err(format!("--microbatches must be within 1..=4096, got {mb}"));
+    }
+    Ok(mb)
+}
+
 /// Build the [`JobSpec`] that `simulate` and `trace` share from their
 /// common workload/target/platform flags (`simulate` picks the mode from
 /// --mode; `trace` is always timed).
@@ -350,6 +375,9 @@ fn job_spec_from_args(args: &Args, mode: SimModeSpec) -> Result<JobSpec, String>
         },
         "transformer" => Workload::Transformer {
             seq: args.usize("seq", 8)?,
+            layers: args.usize("layers", 1)?,
+            heads: args.usize("heads", 1)?,
+            decode_steps: args.usize("decode-steps", 0)?,
         },
         other => {
             return Err(format!(
@@ -357,6 +385,10 @@ fn job_spec_from_args(args: &Args, mode: SimModeSpec) -> Result<JobSpec, String>
             ))
         }
     };
+    // The same dimension bounds the JSON wire decoder enforces — a
+    // degenerate --seq/--layers/--heads/--decode-steps fails here instead
+    // of deep inside lowering.
+    workload.validate()?;
     apply_jobs_flag(args)?;
     // --platform flags win; otherwise an --arch-file `platform` block
     // shards the file's own target.
@@ -364,7 +396,7 @@ fn job_spec_from_args(args: &Args, mode: SimModeSpec) -> Result<JobSpec, String>
         Some(PlatformSpec {
             chips: chips.max(1),
             hop_latency: args.usize("hop-latency", 4)? as u64,
-            microbatches: args.usize("microbatches", 4)?.max(1),
+            microbatches: check_microbatches(args.usize("microbatches", 4)?)?,
             threads: args.usize("threads", 0)?,
         })
     } else if let Some(path) = args.flags.get("arch-file") {
@@ -374,10 +406,9 @@ fn job_spec_from_args(args: &Args, mode: SimModeSpec) -> Result<JobSpec, String>
                 hop_latency: args
                     .opt_usize("hop-latency")?
                     .map_or(d.fabric.hop_latency, |h| h as u64),
-                microbatches: args
-                    .opt_usize("microbatches")?
-                    .unwrap_or(d.microbatches)
-                    .max(1),
+                microbatches: check_microbatches(
+                    args.opt_usize("microbatches")?.unwrap_or(d.microbatches),
+                )?,
                 threads: args.usize("threads", 0)?,
             }),
             None => None,
@@ -710,22 +741,29 @@ fn run() -> Result<(), String> {
                 )?;
                 print_dse_report(&report, &format!("design space, gemm {dim}³ (timed)"));
                 // Sibling sweep: the same architecture axes on the
-                // transformer workload (separate exploration — the
-                // pruning incumbent must not cross workloads).  Skipped
-                // when checkpoint/resume/stop-after target the GeMM
-                // sweep: those runs want exactly one interruptible sweep.
+                // transformer workload, one exploration per serving shape
+                // (separate explorations — the pruning incumbent must not
+                // cross workloads, and the cheap prefill-only shape would
+                // otherwise cut every decode candidate).  Serving shapes
+                // report prefill cycles and cycles-per-decoded-token as
+                // their own table columns.  Skipped when
+                // checkpoint/resume/stop-after target the GeMM sweep:
+                // those runs want exactly one interruptible sweep.
                 let tf = space.enumerate_transformer();
                 if !tf.is_empty() && !streaming_flags {
-                    let seq = space.transformer_seq.unwrap_or(8);
-                    println!(
-                        "\nexploring tiny_transformer (seq {seq}) over {} candidates…\n",
-                        tf.len()
-                    );
-                    let report = acadl::dse::explore_specs(tf, workers, prune);
-                    print_dse_report(
-                        &report,
-                        &format!("design space, tiny_transformer seq {seq} (timed)"),
-                    );
+                    let mut groups: Vec<Vec<JobSpec>> = Vec::new();
+                    for s in tf {
+                        match groups.last_mut() {
+                            Some(g) if g[0].workload == s.workload => g.push(s),
+                            _ => groups.push(vec![s]),
+                        }
+                    }
+                    for group in groups {
+                        let desc = group[0].workload.describe();
+                        println!("\nexploring {desc} over {} candidates…\n", group.len());
+                        let report = acadl::dse::explore_specs(group, workers, prune);
+                        print_dse_report(&report, &format!("design space, {desc} (timed)"));
+                    }
                 }
                 // Third sibling: chip count and fabric hop latency join
                 // the axes — the sharded transformer over 1/2/4-chip
@@ -878,12 +916,25 @@ mod tests {
             "deadline-ms",
             "trace",
             "stats-json",
+            "layers",
+            "heads",
+            "decode-steps",
         ] {
             assert!(allowed_flags("simulate").contains(&f), "simulate misses --{f}");
         }
         // `trace` takes the simulate workload flags plus --out, but never
         // --mode (it is timed by definition) or --trace (that's --out).
-        for f in ["out", "stats-json", "workload", "platform", "backend", "arch-file"] {
+        for f in [
+            "out",
+            "stats-json",
+            "workload",
+            "platform",
+            "backend",
+            "arch-file",
+            "layers",
+            "heads",
+            "decode-steps",
+        ] {
             assert!(allowed_flags("trace").contains(&f), "trace misses --{f}");
         }
         assert!(!allowed_flags("trace").contains(&"mode"));

@@ -43,7 +43,8 @@ use std::sync::mpsc;
 use crate::arch::platform::PlatformDesc;
 use crate::dnn::graph::DnnGraph;
 use crate::dnn::lowering::{
-    lower_graph, run_step, LowerError, LoweredGraph, PlatformPlan, SimMode, StepCtx,
+    lower_graph, lower_serving, run_step, split_serving_input, LowerError, LoweredGraph,
+    PlatformPlan, ServingSchedule, SimMode, StepCtx,
 };
 use crate::mapping::uma::Machine;
 use crate::sim::trace::{CellSpan, PlatformTrace, XferSpan};
@@ -353,6 +354,332 @@ pub fn run_platform_traced(
     })
 }
 
+// ------------------------------------------------------------- serving
+
+/// A platform serving run: the pipelined report plus the phase split a
+/// serving deployment actually prices — prompt-processing makespan and
+/// the steady-state cost of each generated token.
+#[derive(Debug, Clone)]
+pub struct PlatformServingReport {
+    pub report: PlatformReport,
+    /// Cycle at which every session's prompt has fully drained through
+    /// the pipeline (end of the prefill phase).
+    pub prefill_cycles: u64,
+    /// Tokens generated across all sessions (sessions × decode_steps).
+    pub decoded_tokens: u64,
+}
+
+impl PlatformServingReport {
+    /// Mean decode cost per generated token, the serving-optimization
+    /// objective; `None` when no tokens were decoded.
+    pub fn cycles_per_token(&self) -> Option<f64> {
+        (self.decoded_tokens > 0).then(|| {
+            (self.report.total_cycles - self.prefill_cycles) as f64 / self.decoded_tokens as f64
+        })
+    }
+}
+
+/// One completed serving session: per-`(phase, stage)` durations plus
+/// the assembled `(seq + decode_steps) × out` output.
+struct ServingChainOut {
+    /// `durs[phase][stage]` — phase 0 is prefill, phase `t + 1` decode
+    /// step `t`.
+    durs: Vec<Vec<u64>>,
+    instrs: Vec<Vec<u64>>,
+    output: Vec<f32>,
+}
+
+/// Run one serving session through the staged pipeline: the prefill
+/// phase at `seq` rows, then one single-row decode phase per generated
+/// token.  Each stage keeps its [`StepCtx`] alive across phases, so the
+/// per-head K/V stashes seeded by prefill keep growing — the platform
+/// analogue of [`crate::dnn::lowering::run_serving`].
+fn run_serving_chain(
+    machines: &[&Machine],
+    scheds: &[ServingSchedule],
+    plan: &PlatformPlan,
+    seq: usize,
+    full_input: &[f32],
+    feat: usize,
+    mode: SimMode,
+    max_cycles: u64,
+) -> Result<ServingChainOut, LowerError> {
+    let s_count = plan.stages.len();
+    let (prompt, dec_rows) = split_serving_input(full_input, feat, seq);
+    let phases = 1 + dec_rows.len();
+    let mut ctxs: Vec<StepCtx> = (0..s_count).map(|_| StepCtx::new(&[])).collect();
+    let mut durs = vec![vec![0u64; s_count]; phases];
+    let mut instrs = vec![vec![0u64; s_count]; phases];
+    let mut output = Vec::new();
+    for p in 0..phases {
+        let (rows, mut act) = if p == 0 {
+            (seq, prompt.clone())
+        } else {
+            (1, dec_rows[p - 1].clone())
+        };
+        for s in 0..s_count {
+            let lg = if p == 0 {
+                &scheds[s].prefill
+            } else {
+                &scheds[s].decode[p - 1]
+            };
+            let ctx = &mut ctxs[s];
+            ctx.act = act;
+            let mut cycles = 0u64;
+            let mut instructions = 0u64;
+            for step in &lg.steps[plan.stages[s].steps.clone()] {
+                if let Some(lr) = run_step(machines[s], step, rows, ctx, mode, max_cycles)? {
+                    cycles += lr.cycles;
+                    instructions += lr.instructions;
+                }
+            }
+            durs[p][s] = cycles;
+            instrs[p][s] = instructions;
+            act = ctx.act.clone();
+        }
+        output.extend_from_slice(&act);
+    }
+    Ok(ServingChainOut { durs, instrs, output })
+}
+
+/// Simulate a KV-cached serving loop — prefill then `decode_steps`
+/// single-token phases — for `desc.microbatches` independent sessions
+/// sharded per `plan` over `machines`.  Sessions run lockstep per phase
+/// (continuous-batching style): every session's prompt pipelines through
+/// the stages first, then the sessions' decode steps pipeline one token
+/// at a time, each token's input fed back over the fabric from the last
+/// stage.  Functional results and per-cell durations are computed on up
+/// to `threads` worker threads (one session chain per task); platform
+/// timing is then resolved by the same serial conservative recurrence as
+/// [`run_platform`], so cycles are bit-identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn run_platform_serving(
+    machines: &[&Machine],
+    graph: &DnnGraph,
+    plan: &PlatformPlan,
+    seq: usize,
+    decode_steps: usize,
+    desc: &PlatformDesc,
+    mode: SimMode,
+    threads: usize,
+    max_cycles: u64,
+    mut trace: Option<&mut PlatformTrace>,
+) -> Result<PlatformServingReport, LowerError> {
+    let s_count = plan.stages.len();
+    if machines.len() != s_count {
+        return Err(LowerError::BadGraph(
+            0,
+            format!("platform has {} machines but the plan has {s_count} stages", machines.len()),
+        ));
+    }
+    let m_count = desc.microbatches.max(1);
+    let feat = graph.input_features;
+    let total_rows = seq + decode_steps;
+
+    // Lower the full serving schedule once per distinct stage machine.
+    let mut scheds: Vec<ServingSchedule> = Vec::with_capacity(s_count);
+    for (s, machine) in machines.iter().enumerate() {
+        if let Some(prev) = (0..s).find(|&p| std::ptr::eq(machines[p], *machine)) {
+            scheds.push(scheds[prev].clone());
+        } else {
+            scheds.push(lower_serving(machine, graph, seq, decode_steps)?);
+        }
+    }
+
+    // --- simulate every session: independent chains ---------------------
+    let workers = threads.max(1).min(m_count);
+    let mut chains: Vec<Option<ServingChainOut>> = (0..m_count).map(|_| None).collect();
+    if workers == 1 {
+        for (b, slot) in chains.iter_mut().enumerate() {
+            let input = microbatch_input(graph, total_rows, b);
+            *slot = Some(run_serving_chain(
+                machines, &scheds, plan, seq, &input, feat, mode, max_cycles,
+            )?);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<ServingChainOut, LowerError>)>();
+        let caller_token = crate::util::cancel::current();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let scheds = &scheds;
+                let token = caller_token.clone();
+                scope.spawn(move || {
+                    let _token_guard = token.map(crate::util::cancel::install);
+                    loop {
+                        let b = next.fetch_add(1, Ordering::SeqCst);
+                        if b >= m_count {
+                            break;
+                        }
+                        let input = microbatch_input(graph, total_rows, b);
+                        let out = run_serving_chain(
+                            machines, scheds, plan, seq, &input, feat, mode, max_cycles,
+                        );
+                        if tx.send((b, out)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut results: Vec<(usize, Result<ServingChainOut, LowerError>)> = rx.iter().collect();
+        results.sort_by_key(|(b, _)| *b);
+        for (b, res) in results {
+            chains[b] = Some(res?);
+        }
+    }
+    let chains: Vec<ServingChainOut> = chains
+        .into_iter()
+        .map(|c| c.expect("every serving session completed"))
+        .collect();
+
+    // --- conservative timing recurrence (serial, deterministic) --------
+    if let Some(tr) = trace.as_deref_mut() {
+        *tr = PlatformTrace::default();
+        tr.chips = plan
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, stage)| {
+                format!("{}[{}..{}]", machines[s].name(), stage.steps.start, stage.steps.end)
+            })
+            .collect();
+    }
+    // Weights stream once over the shared channel; decode phases reuse
+    // the resident copies.
+    let mut dram_ready = vec![0u64; s_count];
+    let mut t = 0u64;
+    for (s, stage) in plan.stages.iter().enumerate() {
+        let t0 = t;
+        t += desc.dram.load_cycles(stage.weight_words);
+        dram_ready[s] = t;
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.weights.push(XferSpan { name: format!("weights s{s}"), start: t0, end: t });
+        }
+    }
+    let phases = 1 + decode_steps;
+    let in_words = plan.stages[0].in_words();
+    let mut finish = vec![vec![vec![0u64; m_count]; s_count]; phases];
+    let mut chip_free = vec![0u64; s_count];
+    let mut prefill_cycles = 0u64;
+    for p in 0..phases {
+        let rows = if p == 0 { seq } else { 1 };
+        for b in 0..m_count {
+            for s in 0..s_count {
+                let arrive = if s == 0 {
+                    if p == 0 {
+                        // Prompts stream from the shared DRAM, one
+                        // session at a time on the single channel.
+                        (b as u64 + 1) * desc.dram.load_cycles(in_words)
+                    } else {
+                        // Feedback: the token generated by the previous
+                        // phase returns over the fabric to stage 0.
+                        finish[p - 1][s_count - 1][b] + desc.fabric.transfer_cycles(feat, 1)
+                    }
+                } else {
+                    finish[p][s - 1][b]
+                        + desc
+                            .fabric
+                            .transfer_cycles(rows * plan.stages[s - 1].out_feat, 1)
+                };
+                let start = dram_ready[s].max(arrive).max(chip_free[s]);
+                finish[p][s][b] = start + chains[b].durs[p][s];
+                chip_free[s] = finish[p][s][b];
+                if let Some(tr) = trace.as_deref_mut() {
+                    if s == 0 {
+                        if p == 0 {
+                            let load = desc.dram.load_cycles(in_words);
+                            tr.inputs.push(XferSpan {
+                                name: format!("prompt mb{b}"),
+                                start: b as u64 * load,
+                                end: (b as u64 + 1) * load,
+                            });
+                        } else {
+                            tr.fabric.push(XferSpan {
+                                name: format!("feedback t{} mb{b}", p - 1),
+                                start: finish[p - 1][s_count - 1][b],
+                                end: arrive,
+                            });
+                        }
+                    } else {
+                        tr.fabric.push(XferSpan {
+                            name: format!("s{}->s{s} mb{b}", s - 1),
+                            start: finish[p][s - 1][b],
+                            end: arrive,
+                        });
+                    }
+                    tr.cells.push(CellSpan {
+                        stage: s as u32,
+                        microbatch: b as u32,
+                        start,
+                        end: finish[p][s][b],
+                    });
+                }
+            }
+            if p == 0 {
+                prefill_cycles = prefill_cycles.max(finish[0][s_count - 1][b]);
+            }
+        }
+    }
+    // Writeback: each session's full output (prompt + generated rows)
+    // drains once over the shared channel after its last phase.
+    let out_feat = plan.stages[s_count - 1].out_feat;
+    let mut wb = 0u64;
+    for b in 0..m_count {
+        let wb0 = wb.max(finish[phases - 1][s_count - 1][b]);
+        wb = wb0 + desc.dram.store_cycles(total_rows * out_feat);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.writeback.push(XferSpan { name: format!("writeback mb{b}"), start: wb0, end: wb });
+        }
+    }
+    let total_cycles = wb;
+    if let Some(tr) = trace.as_deref_mut() {
+        tr.total_cycles = total_cycles;
+    }
+
+    // --- aggregate ------------------------------------------------------
+    let mut stages = Vec::with_capacity(s_count);
+    let mut total_instructions = 0u64;
+    let mut busy_sum = 0u64;
+    for (s, stage) in plan.stages.iter().enumerate() {
+        let busy: u64 = chains.iter().map(|c| c.durs.iter().map(|d| d[s]).sum::<u64>()).sum();
+        let instructions: u64 =
+            chains.iter().map(|c| c.instrs.iter().map(|d| d[s]).sum::<u64>()).sum();
+        busy_sum += busy;
+        total_instructions += instructions;
+        stages.push(StageReport {
+            name: format!(
+                "{}[{}..{}]",
+                machines[s].name(),
+                stage.steps.start,
+                stage.steps.end
+            ),
+            steps: stage.steps.len(),
+            busy_cycles: busy,
+            instructions,
+        });
+    }
+    let utilization = if total_cycles > 0 {
+        busy_sum as f64 / (s_count as f64 * total_cycles as f64)
+    } else {
+        0.0
+    };
+    Ok(PlatformServingReport {
+        report: PlatformReport {
+            stages,
+            total_cycles,
+            total_instructions,
+            outputs: chains.into_iter().map(|c| c.output).collect(),
+            utilization,
+        },
+        prefill_cycles,
+        decoded_tokens: (m_count * decode_steps) as u64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +775,85 @@ mod tests {
         assert_eq!(tr.writeback.len(), 3);
         assert_eq!(tr.fabric.len(), (rep.stages.len() - 1) * 3);
         // Every span is well-formed and inside the makespan.
+        for c in &tr.cells {
+            assert!(c.start <= c.end && c.end <= tr.total_cycles);
+        }
+    }
+
+    #[test]
+    fn platform_serving_is_thread_invariant_and_matches_reference() {
+        let g = DnnGraph::transformer(2, 2);
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let (seq, steps) = (4usize, 2usize);
+        let plan = partition_graph(&g, seq, 2).unwrap();
+        let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+        let desc = PlatformDesc::new(plan.stages.len()).with_microbatches(2);
+        let mode = SimMode::Timed(BackendKind::EventDriven);
+        let runs: Vec<PlatformServingReport> = [1usize, 4]
+            .iter()
+            .map(|&t| {
+                run_platform_serving(
+                    &machines,
+                    &g,
+                    &plan,
+                    seq,
+                    steps,
+                    &desc,
+                    mode,
+                    t,
+                    500_000_000,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(runs[0].report.total_cycles, runs[1].report.total_cycles);
+        assert_eq!(runs[0].prefill_cycles, runs[1].prefill_cycles);
+        assert_eq!(runs[0].report.outputs, runs[1].report.outputs);
+        assert!(runs[0].prefill_cycles > 0);
+        assert!(runs[0].report.total_cycles > runs[0].prefill_cycles);
+        assert_eq!(runs[0].decoded_tokens, 4);
+        assert!(runs[0].cycles_per_token().unwrap() > 0.0);
+        // Each session's assembled output is the KV-cache oracle:
+        // bit-identical to the host reference over the extended sequence
+        // (OMA lowers every op exactly).
+        for (b, out) in runs[0].report.outputs.iter().enumerate() {
+            let x = microbatch_input(&g, seq + steps, b);
+            assert_eq!(out, &g.forward_ref(&x, seq + steps), "session {b}");
+        }
+    }
+
+    #[test]
+    fn platform_serving_trace_reconciles_with_stage_reports() {
+        let g = DnnGraph::transformer(1, 2);
+        let machine = TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+        let (seq, steps) = (3usize, 2usize);
+        let plan = partition_graph(&g, seq, 2).unwrap();
+        let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+        let desc = PlatformDesc::new(plan.stages.len()).with_microbatches(2);
+        let mut tr = PlatformTrace::default();
+        let rep = run_platform_serving(
+            &machines,
+            &g,
+            &plan,
+            seq,
+            steps,
+            &desc,
+            SimMode::Timed(BackendKind::CycleStepped),
+            2,
+            500_000_000,
+            Some(&mut tr),
+        )
+        .unwrap();
+        assert_eq!(tr.total_cycles, rep.report.total_cycles);
+        // One cell per (phase, stage, session).
+        assert_eq!(tr.cells.len(), (1 + steps) * rep.report.stages.len() * 2);
+        let busy = tr.stage_busy_totals();
+        for (s, st) in rep.report.stages.iter().enumerate() {
+            assert_eq!(busy[s], st.busy_cycles, "stage {s} cell sum");
+        }
+        assert_eq!(tr.inputs.len(), 2, "one prompt stream per session");
+        assert_eq!(tr.writeback.len(), 2);
         for c in &tr.cells {
             assert!(c.start <= c.end && c.end <= tr.total_cycles);
         }

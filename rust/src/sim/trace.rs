@@ -143,6 +143,17 @@ fn push_changed(track: &mut CounterTrack, t: u64, v: u64, last: &mut u64) {
     }
 }
 
+/// Index of `name` in the table, interning it at the end if absent.
+fn intern(names: &mut Vec<String>, name: &str) -> u32 {
+    match names.iter().position(|n| n == name) {
+        Some(i) => i as u32,
+        None => {
+            names.push(name.to_string());
+            (names.len() - 1) as u32
+        }
+    }
+}
+
 /// Close a track back to 0 at `t` (schedule-concatenation boundary).
 fn close_track(track: &mut CounterTrack, t: u64) {
     if track.last().is_some_and(|&(_, v)| v != 0) {
@@ -200,15 +211,32 @@ impl TraceData {
 
     /// Append another run's trace shifted by `offset` cycles — sequential
     /// schedule concatenation (one engine run per mapped layer).  Counter
-    /// tracks are closed to 0 at the boundary; both runs must describe
-    /// the same machine (same FU/storage name tables).
+    /// tracks are closed to 0 at the boundary.  When the two runs
+    /// describe different machines (heterogeneous platform stages), the
+    /// other trace's FU/storage names are interned into this trace's
+    /// tables and its span indices remapped — a span is never silently
+    /// attributed to the wrong unit.
     pub fn append_offset(&mut self, mut other: TraceData, offset: u64) {
         if self.fu_names.is_empty() && self.storage_names.is_empty() {
             self.fu_names = std::mem::take(&mut other.fu_names);
             self.storage_names = std::mem::take(&mut other.storage_names);
-        } else {
-            debug_assert_eq!(self.fu_names, other.fu_names, "trace across machines");
-            debug_assert_eq!(self.storage_names, other.storage_names);
+        } else if self.fu_names != other.fu_names || self.storage_names != other.storage_names {
+            let fu_map: Vec<u32> = other
+                .fu_names
+                .iter()
+                .map(|n| intern(&mut self.fu_names, n))
+                .collect();
+            let st_map: Vec<u32> = other
+                .storage_names
+                .iter()
+                .map(|n| intern(&mut self.storage_names, n))
+                .collect();
+            for s in &mut other.fu_spans {
+                s.fu = fu_map[s.fu as usize];
+            }
+            for s in &mut other.port_spans {
+                s.storage = st_map[s.storage as usize];
+            }
         }
         for s in &mut other.fu_spans {
             s.start += offset;
@@ -552,6 +580,30 @@ mod tests {
         a.append_offset(sample_trace(), 0);
         assert_eq!(a.fu_names, vec!["fu0".to_string(), "mau0".to_string()]);
         assert_eq!(a.cycles, 20);
+    }
+
+    #[test]
+    fn append_offset_remaps_heterogeneous_name_tables() {
+        // Regression: merging traces from stages on *different* machines
+        // used to be guarded by debug_assert only — release builds would
+        // attribute the other stage's spans to whatever units happened to
+        // share an index.  This test runs in release mode too: the names
+        // must be interned into a unioned table and indices remapped.
+        let mut a = sample_trace();
+        let mut b = sample_trace();
+        b.fu_names = vec!["vec0".into(), "fu0".into()];
+        b.storage_names = vec!["l1".into()];
+        a.append_offset(b, 20);
+        assert_eq!(
+            a.fu_names,
+            vec!["fu0".to_string(), "mau0".to_string(), "vec0".to_string()]
+        );
+        assert_eq!(a.storage_names, vec!["dmem".to_string(), "l1".to_string()]);
+        // b's fu 0 ("vec0") remapped to the interned index 2, its fu 1
+        // ("fu0") to the shared index 0 — busy totals land on the right
+        // units: fu0 carries its own 5 plus b's 6-cycle load.
+        assert_eq!(a.fu_busy_totals(), vec![11, 6, 5]);
+        assert_eq!(a.storage_busy_totals(), vec![7, 7]);
     }
 
     #[test]

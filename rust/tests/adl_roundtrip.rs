@@ -245,7 +245,12 @@ fn file_targets_drive_transformer_with_builder_cycles() {
         let job = |target: TargetSpec| JobSpec {
             id: 0,
             target,
-            workload: Workload::Transformer { seq: 8 },
+            workload: Workload::Transformer {
+                seq: 8,
+                layers: 1,
+                heads: 1,
+                decode_steps: 0,
+            },
             mode: SimModeSpec::Timed,
             backend: BackendKind::EventDriven,
             max_cycles: 500_000_000,

@@ -11,6 +11,10 @@
 //!   `tiny_transformer` schedule.
 //! * **Numerics properties** — softmax rows sum to 1 and are
 //!   permutation-equivariant; layer norm is invariant to input shift.
+//! * **Serving conformance** — KV-cached decode is a pure optimization:
+//!   its assembled output is bit-identical to re-running the extended
+//!   sequence from scratch, across machines, execution modes, and
+//!   platform worker-thread counts.
 //! * **DSE soundness on the new workload** — exploring the transformer
 //!   workload prunes only candidates whose roofline bound exceeds the
 //!   incumbent, and pruning preserves the optimum.
@@ -18,10 +22,14 @@
 use acadl::analytical::Roofline;
 use acadl::arch::gamma::GammaConfig;
 use acadl::arch::oma::OmaConfig;
+use acadl::arch::platform::PlatformDesc;
 use acadl::arch::systolic::SystolicConfig;
 use acadl::coordinator::job::{JobSpec, SimModeSpec, TargetSpec, Workload};
 use acadl::dnn::graph::DnnGraph;
-use acadl::dnn::lowering::{lower_graph, roofline_ops, run_schedule, SimMode};
+use acadl::dnn::lowering::{
+    lower_graph, lower_serving, partition_graph, roofline_ops, run_schedule, run_serving,
+    split_serving_input, SimMode,
+};
 use acadl::dse::{explore_specs, lower_bound_cycles};
 use acadl::mapping::gemm::gemm_ref;
 use acadl::mapping::rowwise::{
@@ -30,6 +38,7 @@ use acadl::mapping::rowwise::{
 use acadl::mapping::uma::{self, Machine, Operator};
 use acadl::sim::exec::MemImage;
 use acadl::sim::functional::FunctionalSim;
+use acadl::sim::platform::{microbatch_input, run_platform_serving};
 use acadl::sim::{BackendKind, Engine};
 use acadl::util::prop::{forall, Gen};
 
@@ -335,12 +344,137 @@ fn tiny_transformer_cycles_respect_roofline_on_all_zoo_machines() {
     }
 }
 
+// --------------------------------------------- serving (prefill + decode)
+
+/// KV-cached decode is a pure optimization: for randomized serving
+/// shapes, the assembled prefill+decode output is **bit-identical** to
+/// lowering and running the extended sequence from scratch — per zoo
+/// machine and per execution mode (functional, cycle-stepped,
+/// event-driven).  On the sequentially-accumulating targets the output
+/// also equals the host reference bit-for-bit; Γ̈ tiles its accumulation,
+/// so it gets a tight tolerance against the host instead (while staying
+/// bitwise self-consistent between cached and from-scratch runs).
+#[test]
+fn prop_kv_cached_decode_matches_full_prefill_reference() {
+    let zoo = zoo();
+    forall(
+        "KV-cached decode ≡ from-scratch prefill of the extended sequence",
+        3,
+        |g: &mut Gen| {
+            let layers = g.usize(1, 2);
+            let heads = [1usize, 2, 4][g.usize(0, 2)];
+            let seq = g.usize(2, 6);
+            let steps = g.usize(1, 3);
+            (layers, heads, seq, steps)
+        },
+        |&(layers, heads, seq, steps)| {
+            let graph = DnnGraph::transformer(layers, heads);
+            let total = seq + steps;
+            let full = graph.input_batch(total);
+            let want = graph.forward_ref(&full, total);
+            let (prompt, dec) = split_serving_input(&full, graph.input_features, seq);
+            for (machine, _) in &zoo {
+                let name = machine.name();
+                let sched = lower_serving(machine, &graph, seq, steps)
+                    .map_err(|e| format!("{name}: {e:?}"))?;
+                let scratch = lower_graph(machine, &graph, total)
+                    .map_err(|e| format!("{name}: {e:?}"))?;
+                for mode in [
+                    SimMode::Functional,
+                    SimMode::Timed(BackendKind::CycleStepped),
+                    SimMode::Timed(BackendKind::EventDriven),
+                ] {
+                    let served = run_serving(machine, &sched, &prompt, &dec, mode, 500_000_000)
+                        .map_err(|e| format!("{name}: {e:?}"))?;
+                    let scratch_rep = run_schedule(machine, &scratch, &full, mode, 500_000_000)
+                        .map_err(|e| format!("{name}: {e:?}"))?;
+                    let out = served.assembled_output();
+                    if out != scratch_rep.output {
+                        return Err(format!(
+                            "{name}/{mode:?}: cached decode ≠ from-scratch prefill \
+                             ({layers}L {heads}H seq {seq} +{steps})"
+                        ));
+                    }
+                    match machine {
+                        Machine::Gamma(_) => {
+                            let diff = out
+                                .iter()
+                                .zip(&want)
+                                .map(|(a, b)| (a - b).abs())
+                                .fold(0.0f32, f32::max);
+                            if diff > 1e-2 {
+                                return Err(format!("gamma: serving off reference by {diff}"));
+                            }
+                        }
+                        _ => {
+                            if out != want {
+                                return Err(format!("{name}/{mode:?}: serving ≠ host reference"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Platform serving (continuous batching through the pipeline stages)
+/// reports identical cycles, phase split, and outputs on 1 and 4 worker
+/// threads, on both timing backends — and every session's assembled
+/// output is the host reference of its extended sequence, bit-for-bit.
+#[test]
+fn platform_serving_conformance_is_thread_invariant() {
+    let g = DnnGraph::transformer(2, 2);
+    let machine = uma::TargetConfig::Oma(OmaConfig::default()).build().unwrap();
+    let (seq, steps) = (4usize, 2usize);
+    let plan = partition_graph(&g, seq, 2).unwrap();
+    let machines: Vec<&Machine> = (0..plan.stages.len()).map(|_| &machine).collect();
+    let desc = PlatformDesc::new(plan.stages.len()).with_microbatches(2);
+    for backend in [BackendKind::CycleStepped, BackendKind::EventDriven] {
+        let runs: Vec<_> = [1usize, 4]
+            .iter()
+            .map(|&t| {
+                run_platform_serving(
+                    &machines,
+                    &g,
+                    &plan,
+                    seq,
+                    steps,
+                    &desc,
+                    SimMode::Timed(backend),
+                    t,
+                    500_000_000,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(
+            runs[0].report.total_cycles, runs[1].report.total_cycles,
+            "{backend:?}: thread count changed the makespan"
+        );
+        assert_eq!(runs[0].prefill_cycles, runs[1].prefill_cycles, "{backend:?}");
+        assert_eq!(runs[0].report.outputs, runs[1].report.outputs, "{backend:?}");
+        assert!(runs[0].cycles_per_token().unwrap() > 0.0);
+        for (b, out) in runs[0].report.outputs.iter().enumerate() {
+            let x = microbatch_input(&g, seq + steps, b);
+            assert_eq!(out, &g.forward_ref(&x, seq + steps), "session {b}");
+        }
+    }
+}
+
 #[test]
 fn dse_on_transformer_prunes_only_above_the_incumbent() {
     let mk = |id: u64, target: TargetSpec| JobSpec {
         id,
         target,
-        workload: Workload::Transformer { seq: 8 },
+        workload: Workload::Transformer {
+            seq: 8,
+            layers: 1,
+            heads: 1,
+            decode_steps: 0,
+        },
         mode: SimModeSpec::Timed,
         backend: BackendKind::EventDriven,
         max_cycles: 500_000_000,

@@ -41,6 +41,18 @@ cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
   --workload transformer --seq 8 --backend event > /dev/null
 tf_end_ns=$(date +%s%N)
 
+# KV-cached serving: wall-clock of a prefill-only pass over the 2-layer
+# 2-head model, then a 4-token decode run whose result row reports the
+# prefill/decode phase split and cycles-per-decoded-token (the serving
+# latency headline).
+pf_start_ns=$(date +%s%N)
+cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
+  --workload transformer --seq 8 --layers 2 --heads 2 --backend event > /dev/null
+pf_end_ns=$(date +%s%N)
+serve_row=$(cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
+  --workload transformer --seq 8 --layers 2 --heads 2 --decode-steps 4 \
+  --backend event)
+
 # Platform wall-clock at 1 vs 4 threads (same job, same cycle count —
 # the parallel-speedup row the PR-7 acceptance gate reads).
 p1_start_ns=$(date +%s%N)
@@ -54,17 +66,31 @@ cargo run --release --quiet -- simulate --target systolic --rows 2 --cols 2 \
   --platform 4 --microbatches 8 --threads 4 > /dev/null
 p4_end_ns=$(date +%s%N)
 
-python3 - "$OUT" $((end_ns - start_ns)) $((tf_end_ns - tf_start_ns)) \
-  $((p1_end_ns - p1_start_ns)) $((p4_end_ns - p4_start_ns)) <<'EOF'
+SERVE_ROW="$serve_row" python3 - "$OUT" $((end_ns - start_ns)) \
+  $((tf_end_ns - tf_start_ns)) $((p1_end_ns - p1_start_ns)) \
+  $((p4_end_ns - p4_start_ns)) $((pf_end_ns - pf_start_ns)) <<'EOF'
 import json, os, sys
 
-path, ns, tf_ns, p1_ns, p4_ns = sys.argv[1], *map(int, sys.argv[2:6])
+path = sys.argv[1]
+ns, tf_ns, p1_ns, p4_ns, pf_ns = map(int, sys.argv[2:7])
 data = json.load(open(path)) if os.path.exists(path) else {}
 data["dse/smoke_sweep_wall"] = {"median_ns": ns, "runs": 1}
 data["transformer/systolic_2x2_seq8_wall"] = {"median_ns": tf_ns, "runs": 1}
 data["platform/quad_tf_seq8_wall_threads1"] = {"median_ns": p1_ns, "runs": 1}
 data["platform/quad_tf_seq8_wall_threads4"] = {"median_ns": p4_ns, "runs": 1}
 data["platform/speedup_4t"] = {"ratio": round(p1_ns / max(p4_ns, 1), 3), "runs": 1}
+
+# Serving rows: the prefill-only wall clock, and the decode run's own
+# simulated phase metrics (from its result row, not re-derived here).
+serve = json.loads(os.environ["SERVE_ROW"])
+assert serve.get("numerics_ok") is True, serve
+assert serve.get("prefill_cycles") and serve.get("cycles_per_token"), serve
+data["transformer/prefill_wall"] = {"median_ns": pf_ns, "runs": 1}
+data["transformer/decode_per_token"] = {
+    "cycles_per_token": serve["cycles_per_token"],
+    "prefill_cycles": serve["prefill_cycles"],
+    "runs": 1,
+}
 
 # The committed BENCH_sim.json is a null-valued schema; a run of this
 # script must replace every null with a measurement.  Fail loudly when a
@@ -78,6 +104,8 @@ required = [
     "trace/off (cycles/s)",
     "trace/on (cycles/s)",
     "platform/speedup_4t",
+    "transformer/prefill_wall",
+    "transformer/decode_per_token",
 ]
 missing = [k for k in required if k not in data]
 assert not missing, f"expected trajectory rows missing: {missing}"
